@@ -1,0 +1,58 @@
+//! Format explorer: sweep the whole Table-1 corpus, print each matrix's
+//! measured β fillings against the paper's, and show the filling ↔ modeled
+//! GFlop/s correlation (§4.3: "the performance can be easily predicted from
+//! the block filling").
+//!
+//! Run: `cargo run --release --example format_explorer [-- <nnz_budget>]`
+
+use spc5::bench::{table::fmt1, SimBench, TextTable};
+use spc5::kernels::{KernelCfg, KernelKind, Reduction, SimIsa, XLoad};
+use spc5::matrix::corpus_entries;
+use spc5::perfmodel;
+use spc5::spc5::FormatStats;
+
+fn main() {
+    let budget: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60_000);
+    let a64 = perfmodel::a64fx();
+    let cfg = KernelCfg {
+        isa: SimIsa::Sve,
+        kind: KernelKind::Spc5 { r: 4, x_load: XLoad::Single, reduction: Reduction::Manual },
+    };
+
+    let mut t = TextTable::new(&[
+        "matrix", "fill b1 (paper)", "fill b4 (paper)", "SVE b4 GF/s",
+    ]);
+    let mut points: Vec<(f64, f64)> = Vec::new();
+    for e in corpus_entries() {
+        let csr = e.build::<f64>(budget);
+        let f1 = FormatStats::measure(&csr, 1, 8).filling_percent();
+        let f4 = FormatStats::measure(&csr, 4, 8).filling_percent();
+        let mut bench = SimBench::new(e.name, csr);
+        let g = bench.run(&a64, cfg).gflops;
+        points.push((f4, g));
+        t.row(vec![
+            e.name.to_string(),
+            format!("{:>4.0}% ({:>3.0}%)", f1, e.fill_f64[0]),
+            format!("{:>4.0}% ({:>3.0}%)", f4, e.fill_f64[2]),
+            fmt1(g),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Rank correlation between filling and modeled performance.
+    let corr = pearson(&points);
+    println!("filling-vs-GFlop/s Pearson correlation: {corr:.2}");
+    assert!(corr > 0.5, "the paper's filling->performance relation must hold");
+    println!("format_explorer OK");
+}
+
+fn pearson(points: &[(f64, f64)]) -> f64 {
+    let n = points.len() as f64;
+    let mx = points.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = points.iter().map(|p| p.1).sum::<f64>() / n;
+    let cov: f64 = points.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let sx: f64 = points.iter().map(|p| (p.0 - mx).powi(2)).sum::<f64>().sqrt();
+    let sy: f64 = points.iter().map(|p| (p.1 - my).powi(2)).sum::<f64>().sqrt();
+    cov / (sx * sy)
+}

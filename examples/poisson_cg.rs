@@ -1,0 +1,93 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): solve a real 2D Poisson problem
+//! through every layer of the stack and report the residual curve and
+//! sustained SpMV GFlop/s.
+//!
+//! Layers exercised:
+//!   1. native Rust CG over the SPC5 format (the production hot path),
+//!   2. thread-parallel SPC5 CG,
+//!   3. the AOT JAX/Pallas CG artifact executed via PJRT (when
+//!      `artifacts/` exists), cross-validated against (1).
+//!
+//! Run: `cargo run --release --example poisson_cg [-- <grid>]`
+
+use spc5::matrix::{gen, Csr};
+use spc5::parallel::ParallelSpc5;
+use spc5::runtime::{artifacts, PjrtRunner, Spc5Arrays};
+use spc5::solver::cg;
+use spc5::spc5::csr_to_spc5;
+use spc5::util::timing::{gflops, Timer};
+
+fn main() {
+    let grid: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let m: Csr<f64> = gen::poisson2d(grid);
+    let n = m.nrows;
+    let b = vec![1.0; n];
+    println!("== Poisson {grid}x{grid}: {n} unknowns, {} nnz ==", m.nnz());
+
+    // --- layer 1: native SPC5 CG ---
+    let spc5m = csr_to_spc5(&m, 4, 8);
+    println!(
+        "SPC5 beta(4,8): {} blocks, filling {:.1}%",
+        spc5m.nblocks(),
+        spc5m.filling() * 100.0
+    );
+    let t = Timer::start();
+    let result = cg(&spc5m, &b, 1e-8, 20 * n);
+    let secs = t.elapsed_secs();
+    assert!(result.converged, "CG must converge on SPD Poisson");
+    let iters = result.iterations();
+    let spmv_flops = 2 * m.nnz() as u64 * iters as u64;
+    println!(
+        "native CG: {iters} iters in {secs:.3}s — sustained {:.2} GFlop/s (SpMV part)",
+        gflops(spmv_flops, secs)
+    );
+    println!("residual curve (every 10th iter):");
+    for (i, r) in result.residuals.iter().enumerate().step_by(10) {
+        println!("  iter {i:4}: {r:.3e}");
+    }
+    println!("  iter {:4}: {:.3e}", iters, result.residuals.last().unwrap());
+
+    // --- layer 2: parallel SPC5 CG ---
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let pm = ParallelSpc5::new(&m, 4, threads);
+    let t = Timer::start();
+    let par = cg(&pm, &b, 1e-8, 20 * n);
+    println!(
+        "parallel CG ({threads} threads): {} iters in {:.3}s",
+        par.iterations(),
+        t.elapsed_secs()
+    );
+    assert!(par.converged);
+
+    // --- layer 3: the JAX/Pallas artifact through PJRT ---
+    match PjrtRunner::load(&artifacts::artifacts_dir()) {
+        Err(e) => println!("PJRT layer skipped ({e})"),
+        Ok(runner) => {
+            let meta = runner.meta.clone();
+            let am: Csr<f64> = gen::poisson2d(meta.grid);
+            let arrays = Spc5Arrays::from_csr(&am, meta.vs, meta.tile);
+            let b32 = vec![1.0f32; meta.n];
+            let t = Timer::start();
+            let (x32, rnorm) = runner.cg_solve(&arrays, &b32).expect("pjrt cg");
+            println!(
+                "PJRT CG artifact (grid {}, {} iters): ||r|| = {rnorm:.3e} in {:.3}s",
+                meta.grid,
+                meta.cg_iters,
+                t.elapsed_secs()
+            );
+            // Cross-validate against native CG at the same iteration count.
+            let native = cg(&gen::poisson2d::<f64>(meta.grid), &vec![1.0; meta.n], 0.0, meta.cg_iters);
+            let native_r = native.residuals.last().unwrap() * (meta.n as f64).sqrt();
+            println!("native CG at the same iteration cap: ||r|| = {native_r:.3e}");
+            let x_native = &native.x;
+            let max_diff = x32
+                .iter()
+                .zip(x_native)
+                .map(|(a, b)| (*a as f64 - b).abs())
+                .fold(0.0f64, f64::max);
+            println!("max |x_pjrt - x_native| = {max_diff:.3e}");
+            assert!(max_diff < 2e-2, "three-layer solutions must agree");
+        }
+    }
+    println!("poisson_cg OK");
+}

@@ -1,0 +1,78 @@
+//! Quickstart: build a sparse matrix, convert it to SPC5, run SpMV three
+//! ways (native CSR, native SPC5, simulated AVX-512 with the perf model)
+//! and print what the framework knows about it.
+//!
+//! Run: `cargo run --example quickstart`
+
+use spc5::bench::SimBench;
+use spc5::coordinator::select_format;
+use spc5::kernels::{native, KernelCfg, KernelKind, Reduction, SimIsa, XLoad};
+use spc5::matrix::gen::Structured;
+use spc5::matrix::Csr;
+use spc5::perfmodel;
+use spc5::spc5::{csr_to_spc5, FormatStats};
+
+fn main() {
+    // 1. A structured sparse matrix (FEM-like: contiguous runs, correlated
+    //    rows — the kind SPC5 is built for).
+    let csr: Csr<f64> = Structured {
+        nrows: 4000,
+        ncols: 4000,
+        nnz_per_row: 40.0,
+        run_len: 6.0,
+        row_corr: 0.85,
+        ..Default::default()
+    }
+    .generate(42);
+    println!("matrix: {}x{}, {} nnz", csr.nrows, csr.ncols, csr.nnz());
+
+    // 2. Format statistics — the paper's Table 1 view of this matrix.
+    for r in [1usize, 2, 4, 8] {
+        let s = FormatStats::measure(&csr, r, 8);
+        println!(
+            "  beta({r},VS): filling {:5.1}%, {:6} blocks, {:.2} nnz/block",
+            s.filling_percent(),
+            s.nblocks,
+            s.nnz_per_block
+        );
+    }
+
+    // 3. Let the selector pick, then convert.
+    let sel = select_format(&csr, &Default::default());
+    println!("selector chose: {:?}", sel.choice);
+    let m = csr_to_spc5(&csr, 4, 8);
+
+    // 4. Native SpMV, both formats — verify they agree.
+    let x: Vec<f64> = (0..csr.ncols).map(|i| (i as f64 * 0.01).sin()).collect();
+    let mut y_csr = vec![0.0; csr.nrows];
+    let mut y_spc5 = vec![0.0; csr.nrows];
+    native::spmv_csr(&csr, &x, &mut y_csr);
+    native::spmv_spc5(&m, &x, &mut y_spc5);
+    let max_diff = y_csr
+        .iter()
+        .zip(&y_spc5)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("native csr vs spc5 max diff: {max_diff:.2e}");
+    assert!(max_diff < 1e-9);
+
+    // 5. What would this matrix do on the paper's machines? (simulated)
+    let mut bench = SimBench::new("quickstart", csr);
+    let clx = perfmodel::cascade_lake();
+    let a64 = perfmodel::a64fx();
+    let scalar = KernelCfg { isa: SimIsa::Avx512, kind: KernelKind::ScalarCsr };
+    let spc5_avx = KernelCfg {
+        isa: SimIsa::Avx512,
+        kind: KernelKind::Spc5 { r: 4, x_load: XLoad::Single, reduction: Reduction::Manual },
+    };
+    let spc5_sve = KernelCfg {
+        isa: SimIsa::Sve,
+        kind: KernelKind::Spc5 { r: 4, x_load: XLoad::Single, reduction: Reduction::Manual },
+    };
+    let s = bench.run(&clx, scalar).gflops;
+    let a = bench.run(&clx, spc5_avx).gflops;
+    let v = bench.run(&a64, spc5_sve).gflops;
+    println!("modeled Intel-AVX512: scalar {s:.2} GFlop/s, beta(4,VS) {a:.2} GFlop/s [x{:.1}]", a / s);
+    println!("modeled Fujitsu-SVE:  beta(4,VS) {v:.2} GFlop/s");
+    println!("quickstart OK");
+}

@@ -1,0 +1,9 @@
+"""Build-time compile package (L1 Pallas kernels + L2 JAX model + AOT).
+
+Never imported at runtime — the Rust binary only consumes artifacts/.
+f64 support requires x64 mode, which must be set before jax initializes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,103 @@
+"""AOT lowering: JAX/Pallas -> HLO text -> artifacts/.
+
+Run once at build time (`make artifacts`); the Rust runtime
+(`rust/src/runtime/`) loads the HLO text, compiles it with the PJRT CPU
+client and executes it with the arrays the Rust side builds itself (both
+sides construct the *same* Poisson system deterministically, and
+`spmv_meta.json` pins the shapes).
+
+HLO *text* is the interchange format, not `.serialize()`: jax >= 0.5 emits
+protos with 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .format import csr_to_spc5, poisson2d
+from .kernels.spc5_spmv import DEFAULT_TILE
+from .model import make_cg_fn, make_spmv_fn
+
+# The fixed example problem baked into the artifacts: 2D Poisson on a
+# GRID x GRID grid (matches examples/poisson_cg.rs and runtime tests).
+GRID = 32
+CG_ITERS = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_problem(dtype=np.float32, tile: int = DEFAULT_TILE):
+    indptr, indices, data, n = poisson2d(GRID, dtype=dtype)
+    vs = 16 if dtype == np.float32 else 8  # 512-bit lanes, as in the paper
+    arrays = csr_to_spc5(indptr, indices, data, ncols=n, vs=vs, tile=tile)
+    return arrays, n
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    parser.add_argument("--tile", type=int, default=DEFAULT_TILE)
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arrays, n = build_problem(np.float32, tile=args.tile)
+    b = arrays.nblocks_padded
+    vs = arrays.vs
+
+    spec_i32 = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    spec_f32 = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+
+    # --- artifact 1: one SpMV ---
+    spmv = make_spmv_fn(nrows=n, ncols=n, tile=args.tile)
+    lowered = jax.jit(spmv).lower(
+        spec_i32((b,)), spec_i32((b,)), spec_f32((b, vs)), spec_i32((b, vs)), spec_f32((n,))
+    )
+    spmv_path = os.path.join(args.out_dir, "spmv_f32.hlo.txt")
+    with open(spmv_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {spmv_path}")
+
+    # --- artifact 2: fixed-iteration CG ---
+    cg = make_cg_fn(nrows=n, ncols=n, tile=args.tile, iters=CG_ITERS)
+    lowered = jax.jit(cg).lower(
+        spec_i32((b,)), spec_i32((b,)), spec_f32((b, vs)), spec_i32((b, vs)), spec_f32((n,))
+    )
+    cg_path = os.path.join(args.out_dir, "cg_f32.hlo.txt")
+    with open(cg_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {cg_path}")
+
+    # --- metadata pinning the shapes for the Rust loader ---
+    meta = {
+        "grid": GRID,
+        "n": n,
+        "vs": vs,
+        "tile": args.tile,
+        "nblocks": arrays.nblocks,
+        "nblocks_padded": b,
+        "cg_iters": CG_ITERS,
+        "dtype": "f32",
+        "inputs": ["cols:i32[b]", "block_row:i32[b]", "vals:f32[b,vs]", "perm:i32[b,vs]", "x:f32[n]"],
+    }
+    meta_path = os.path.join(args.out_dir, "spmv_meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

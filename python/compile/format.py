@@ -1,0 +1,139 @@
+"""SPC5 beta(1,VS) block format, TPU-friendly array layout.
+
+Mirrors the Rust converter (`rust/src/spc5/convert.rs`, r = 1) exactly, then
+re-expresses the per-block bit-masks as the arrays a TPU kernel wants (see
+DESIGN.md §Hardware-Adaptation):
+
+- ``cols[b]``        first column of block ``b`` (int32)
+- ``block_row[b]``   row of block ``b`` (int32; r = 1 so one row per block)
+- ``vals[b, :]``     the block's packed non-zero values, *front-aligned*
+                     (lane i < count holds the i-th packed value; the tail is
+                     zero) — the contiguous load of Algorithm 1 line 27
+- ``perm[b, i]``     the column offset (bit position) of packed value i —
+                     the compaction permutation that replaces SVE's
+                     ``svcompact`` / AVX-512's ``vexpand``
+- ``count[b]``       number of non-zeros in the block
+
+Blocks are padded to a multiple of the Pallas tile size with empty blocks
+that point at row ``nrows`` (dropped by the final segment-sum).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Spc5Arrays:
+    nrows: int
+    ncols: int
+    vs: int
+    nblocks: int  # real blocks, before tile padding
+    cols: np.ndarray  # (nblocks_padded,) int32
+    block_row: np.ndarray  # (nblocks_padded,) int32
+    vals: np.ndarray  # (nblocks_padded, vs) dtype
+    perm: np.ndarray  # (nblocks_padded, vs) int32
+    count: np.ndarray  # (nblocks_padded,) int32
+
+    @property
+    def nblocks_padded(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.count.sum())
+
+    def filling(self) -> float:
+        """Mean block filling (Table 1 metric), over real blocks only."""
+        if self.nblocks == 0:
+            return 0.0
+        return self.nnz / (self.nblocks * self.vs)
+
+
+def csr_to_spc5(indptr, indices, data, ncols: int, vs: int, tile: int = 1) -> Spc5Arrays:
+    """Convert CSR (scipy-style arrays) to beta(1,vs) SPC5 arrays.
+
+    ``tile``: pad the block count to a multiple of this (Pallas grid tiling).
+    """
+    indptr = np.asarray(indptr, dtype=np.int64)
+    indices = np.asarray(indices, dtype=np.int64)
+    data = np.asarray(data)
+    nrows = len(indptr) - 1
+    assert vs >= 1
+
+    cols, rows, vals, perm, count = [], [], [], [], []
+    for r in range(nrows):
+        lo, hi = int(indptr[r]), int(indptr[r + 1])
+        i = lo
+        while i < hi:
+            c0 = int(indices[i])  # block opens at the first unconsumed nnz
+            block_vals = np.zeros(vs, dtype=data.dtype)
+            block_perm = np.full(vs, vs - 1, dtype=np.int32)  # harmless dummy
+            k = 0
+            while i < hi and int(indices[i]) < c0 + vs:
+                block_vals[k] = data[i]
+                block_perm[k] = int(indices[i]) - c0
+                k += 1
+                i += 1
+            cols.append(c0)
+            rows.append(r)
+            vals.append(block_vals)
+            perm.append(block_perm)
+            count.append(k)
+
+    nblocks = len(cols)
+    padded = max(tile, ((nblocks + tile - 1) // tile) * tile) if tile > 1 else max(nblocks, 1)
+    pad = padded - nblocks
+    cols += [0] * pad
+    rows += [nrows] * pad  # out-of-range row: dropped by segment-sum
+    vals += [np.zeros(vs, dtype=data.dtype)] * pad
+    perm += [np.full(vs, vs - 1, dtype=np.int32)] * pad
+    count += [0] * pad
+
+    return Spc5Arrays(
+        nrows=nrows,
+        ncols=ncols,
+        vs=vs,
+        nblocks=nblocks,
+        cols=np.asarray(cols, dtype=np.int32),
+        block_row=np.asarray(rows, dtype=np.int32),
+        vals=np.stack(vals).astype(data.dtype),
+        perm=np.stack(perm).astype(np.int32),
+        count=np.asarray(count, dtype=np.int32),
+    )
+
+
+def poisson2d(g: int, dtype=np.float64):
+    """5-point 2D Poisson stencil on a g x g grid, as CSR arrays.
+
+    Must produce bit-identical structure to `rust/src/matrix/gen.rs::poisson2d`
+    (same row-major grid order, same per-row column sort) — the AOT artifact
+    and the Rust runtime build the same matrix independently.
+    """
+    n = g * g
+    indptr = [0]
+    indices = []
+    data = []
+    for i in range(g):
+        for j in range(g):
+            row_entries = [(i * g + j, 4.0)]
+            if i > 0:
+                row_entries.append(((i - 1) * g + j, -1.0))
+            if i + 1 < g:
+                row_entries.append(((i + 1) * g + j, -1.0))
+            if j > 0:
+                row_entries.append((i * g + j - 1, -1.0))
+            if j + 1 < g:
+                row_entries.append((i * g + j + 1, -1.0))
+            row_entries.sort()
+            indices.extend(c for c, _ in row_entries)
+            data.extend(v for _, v in row_entries)
+            indptr.append(len(indices))
+    return (
+        np.asarray(indptr, dtype=np.int64),
+        np.asarray(indices, dtype=np.int64),
+        np.asarray(data, dtype=dtype),
+        n,
+    )

@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the SPC5 kernels.
+
+These never use Pallas — they are the ground truth pytest pins the kernel
+against, plus a dense-matmul cross-check.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spc5_block_partials_ref(vals, perm, xwin):
+    """Per-block dot products, the reference for the Pallas kernel.
+
+    vals: (B, VS) front-aligned packed values
+    perm: (B, VS) int32 compaction permutation
+    xwin: (B, VS) the x window of each block (x[cols[b] : cols[b]+VS])
+    returns (B,) partial sums.
+    """
+    x_compacted = jnp.take_along_axis(xwin, perm, axis=1)
+    return jnp.sum(vals * x_compacted, axis=1)
+
+
+def spc5_spmv_ref(arrays, x):
+    """Full SpMV (y = A·x) from SPC5 arrays, pure jnp (no Pallas).
+
+    `arrays` is a `compile.format.Spc5Arrays`.
+    """
+    x = jnp.asarray(x)
+    # Gather each block's x window; clamp so padding never reads OOB.
+    offs = jnp.arange(arrays.vs)[None, :]
+    idx = jnp.clip(jnp.asarray(arrays.cols)[:, None] + offs, 0, arrays.ncols - 1)
+    xwin = x[idx]
+    partials = spc5_block_partials_ref(jnp.asarray(arrays.vals), jnp.asarray(arrays.perm), xwin)
+    # Segment-sum the block partials into rows; padding rows land in the
+    # extra slot and are dropped.
+    y = jnp.zeros(arrays.nrows + 1, dtype=partials.dtype)
+    y = y.at[jnp.asarray(arrays.block_row)].add(partials)
+    return y[: arrays.nrows]
+
+
+def dense_spmv_ref(indptr, indices, data, ncols, x):
+    """CSR -> dense matmul oracle (numpy), the independent cross-check."""
+    nrows = len(indptr) - 1
+    dense = np.zeros((nrows, ncols), dtype=np.asarray(data).dtype)
+    for r in range(nrows):
+        for i in range(int(indptr[r]), int(indptr[r + 1])):
+            dense[r, int(indices[i])] += data[i]
+    return dense @ np.asarray(x)

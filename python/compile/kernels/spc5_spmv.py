@@ -1,0 +1,107 @@
+"""Layer-1 Pallas kernel: SPC5 blocked SpMV, TPU-adapted.
+
+The paper's hot spot is the per-block reconciliation of packed values with
+the x vector (AVX-512 `vexpand` / SVE `svcompact`). A TPU has neither
+instruction; the adaptation (DESIGN.md §Hardware-Adaptation) keeps the
+format's insight — packed values, per-block masks — and maps the mechanism
+onto what the TPU VPU does well:
+
+- blocks are processed in (TILE, VS) tiles staged through VMEM by BlockSpec;
+- the compaction is a `take_along_axis` by the precomputed per-block
+  permutation (`perm`), i.e. a register-level shuffle, not memory traffic;
+- the per-block dot products reduce on the lane axis inside VMEM; the
+  scatter-add into y happens in the surrounding JAX graph (XLA segment-sum),
+  keeping the kernel free of cross-block dependencies.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness comes from this path, TPU performance is estimated
+structurally (EXPERIMENTS.md §Perf-L1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default blocks-per-tile. 128 blocks x VS lanes of f32 = one well-shaped
+# VMEM tile (8 KiB at VS=16); sweeping this is part of the L1 perf story.
+DEFAULT_TILE = 128
+
+
+def _block_dot_kernel(vals_ref, perm_ref, xwin_ref, out_ref):
+    """One grid step: (TILE, VS) tiles -> (TILE,) partial sums."""
+    vals = vals_ref[...]
+    perm = perm_ref[...]
+    xwin = xwin_ref[...]
+    # The SVE-compact / AVX-expand analogue: permute x lanes so packed value
+    # i meets x[col + perm[i]]. take_along_axis lowers to a VPU shuffle.
+    x_compacted = jnp.take_along_axis(xwin, perm, axis=1)
+    out_ref[...] = jnp.sum(vals * x_compacted, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def spc5_block_partials(vals, perm, xwin, *, tile: int = DEFAULT_TILE):
+    """Per-block dot products via the Pallas kernel.
+
+    vals: (B, VS) front-aligned packed values (B divisible by `tile`)
+    perm: (B, VS) int32 compaction permutation
+    xwin: (B, VS) per-block x windows
+    returns (B,) float partials.
+    """
+    b, vs = vals.shape
+    assert b % tile == 0, f"block count {b} not divisible by tile {tile}"
+    grid = (b // tile,)
+    return pl.pallas_call(
+        _block_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, vs), lambda i: (i, 0)),
+            pl.BlockSpec((tile, vs), lambda i: (i, 0)),
+            pl.BlockSpec((tile, vs), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), vals.dtype),
+        interpret=True,
+    )(vals, perm, xwin)
+
+
+def gather_xwin(x, cols, vs: int, ncols: int):
+    """Per-block x windows: x[cols[b] : cols[b]+VS] with clamped tails.
+
+    This is the §3.1 "single x load per block": the only x traffic per block
+    is one contiguous VS-window (BlockSpec-scheduled HBM->VMEM copy on TPU).
+    """
+    offs = jnp.arange(vs)[None, :]
+    idx = jnp.clip(cols[:, None] + offs, 0, ncols - 1)
+    return x[idx]
+
+
+def spc5_spmv(arrays_dict, x, *, tile: int = DEFAULT_TILE):
+    """Full SpMV `y = A·x` (kernel + XLA segment-sum), jit-able.
+
+    `arrays_dict`: dict of jnp arrays (cols, block_row, vals, perm) plus
+    static ints (nrows, ncols, vs) — the jax-traceable mirror of
+    `compile.format.Spc5Arrays`.
+    """
+    cols = arrays_dict["cols"]
+    block_row = arrays_dict["block_row"]
+    vals = arrays_dict["vals"]
+    perm = arrays_dict["perm"]
+    nrows = arrays_dict["nrows"]
+    ncols = arrays_dict["ncols"]
+    vs = vals.shape[1]
+
+    xwin = gather_xwin(x, cols, vs, ncols)
+    partials = spc5_block_partials(vals, perm, xwin, tile=tile)
+    y = jnp.zeros(nrows + 1, dtype=partials.dtype)
+    y = y.at[block_row].add(partials)  # padding blocks land in slot nrows
+    return y[:nrows]
+
+
+def vmem_footprint_bytes(tile: int, vs: int, dtype_bytes: int) -> int:
+    """Structural L1 perf metric: VMEM bytes resident per grid step
+    (vals + perm(i32) + xwin in, partials out)."""
+    return tile * vs * (2 * dtype_bytes + 4) + tile * dtype_bytes

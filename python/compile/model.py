@@ -1,0 +1,70 @@
+"""Layer-2 JAX model: the SpMV compute graph and a fixed-iteration CG solve,
+both calling the Layer-1 Pallas kernel. Lowered once by `aot.py`; never
+imported at runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spc5_spmv import spc5_spmv
+
+
+def make_spmv_fn(nrows: int, ncols: int, tile: int):
+    """An SpMV closure with static sizes, ready for jax.jit/lower.
+
+    Signature: (cols, block_row, vals, perm, x) -> y
+    """
+
+    def spmv(cols, block_row, vals, perm, x):
+        arrays = {
+            "cols": cols,
+            "block_row": block_row,
+            "vals": vals,
+            "perm": perm,
+            "nrows": nrows,
+            "ncols": ncols,
+        }
+        return spc5_spmv(arrays, x, tile=tile)
+
+    return spmv
+
+
+def make_cg_fn(nrows: int, ncols: int, tile: int, iters: int):
+    """Fixed-iteration Conjugate Gradient on the SPC5 operator.
+
+    Signature: (cols, block_row, vals, perm, b) -> (x, residual_norm).
+    One fused HLO: the SpMV (with the Pallas kernel inlined) inside a
+    lax.fori_loop — no re-tracing per iteration, no Python at runtime.
+    """
+    assert nrows == ncols, "CG needs a square operator"
+    spmv = make_spmv_fn(nrows, ncols, tile)
+
+    def cg(cols, block_row, vals, perm, b):
+        def a_apply(v):
+            return spmv(cols, block_row, vals, perm, v)
+
+        x0 = jnp.zeros_like(b)
+        r0 = b  # r = b - A*0
+        p0 = r0
+        rr0 = jnp.dot(r0, r0)
+
+        def body(_, state):
+            x, r, p, rr = state
+            ap = a_apply(p)
+            pap = jnp.dot(p, ap)
+            # Guard against breakdown: freeze the iteration when pap ~ 0.
+            safe = pap > jnp.asarray(0.0, dtype=pap.dtype)
+            alpha = jnp.where(safe, rr / jnp.where(safe, pap, 1.0), 0.0)
+            x = x + alpha * p
+            r = r - alpha * ap
+            rr_new = jnp.dot(r, r)
+            beta = jnp.where(rr > 0, rr_new / jnp.where(rr > 0, rr, 1.0), 0.0)
+            p = r + beta * p
+            return (x, r, p, rr_new)
+
+        x, r, _, _ = jax.lax.fori_loop(0, iters, body, (x0, r0, p0, rr0))
+        return x, jnp.sqrt(jnp.dot(r, r))
+
+    return cg

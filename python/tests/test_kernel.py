@@ -1,0 +1,160 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle and a dense
+numpy cross-check, plus hypothesis sweeps over shapes/dtypes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.format import csr_to_spc5, poisson2d
+from compile.kernels.ref import dense_spmv_ref, spc5_block_partials_ref, spc5_spmv_ref
+from compile.kernels.spc5_spmv import (
+    gather_xwin,
+    spc5_block_partials,
+    spc5_spmv,
+    vmem_footprint_bytes,
+)
+
+
+def random_csr(rng, nrows, ncols, density, dtype, run_len=1):
+    """Random CSR with optional contiguous runs (to vary block filling)."""
+    indptr = [0]
+    indices = []
+    data = []
+    for _ in range(nrows):
+        k = rng.binomial(max(ncols, 1), min(density, 1.0))
+        cols = set()
+        while len(cols) < k:
+            start = int(rng.integers(0, ncols))
+            for j in range(int(rng.integers(1, run_len + 1))):
+                if start + j < ncols and len(cols) < k:
+                    cols.add(start + j)
+        row = sorted(cols)
+        indices.extend(row)
+        data.extend(rng.standard_normal(len(row)).astype(dtype))
+        indptr.append(len(indices))
+    return (
+        np.asarray(indptr, np.int64),
+        np.asarray(indices, np.int64),
+        np.asarray(data, dtype),
+    )
+
+
+def arrays_dict(a):
+    return {
+        "cols": jnp.asarray(a.cols),
+        "block_row": jnp.asarray(a.block_row),
+        "vals": jnp.asarray(a.vals),
+        "perm": jnp.asarray(a.perm),
+        "nrows": a.nrows,
+        "ncols": a.ncols,
+    }
+
+
+@pytest.mark.parametrize("dtype,vs", [(np.float32, 16), (np.float64, 8)])
+def test_poisson_spmv_matches_dense(dtype, vs):
+    indptr, indices, data, n = poisson2d(16, dtype=dtype)
+    a = csr_to_spc5(indptr, indices, data, ncols=n, vs=vs, tile=64)
+    x = np.linspace(-1.0, 1.0, n).astype(dtype)
+    want = dense_spmv_ref(indptr, indices, data, n, x)
+    got = np.asarray(spc5_spmv(arrays_dict(a), jnp.asarray(x), tile=64))
+    rtol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("tile", [8, 32, 128])
+def test_kernel_tile_sizes_agree(tile):
+    indptr, indices, data, n = poisson2d(12, dtype=np.float32)
+    a = csr_to_spc5(indptr, indices, data, ncols=n, vs=16, tile=tile)
+    x = np.arange(n, dtype=np.float32) * 0.01
+    got = np.asarray(spc5_spmv(arrays_dict(a), jnp.asarray(x), tile=tile))
+    want = np.asarray(spc5_spmv_ref(a, jnp.asarray(x)))
+    # f32: the pallas interpret path may sum lanes in a different order.
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_block_partials_kernel_equals_ref():
+    rng = np.random.default_rng(7)
+    b, vs = 64, 8
+    vals = rng.standard_normal((b, vs)).astype(np.float32)
+    # Front-align: zero the tails like the converter does.
+    count = rng.integers(0, vs + 1, size=b)
+    for i in range(b):
+        vals[i, count[i]:] = 0.0
+    perm = np.stack([rng.permutation(vs) for _ in range(b)]).astype(np.int32)
+    xwin = rng.standard_normal((b, vs)).astype(np.float32)
+    got = np.asarray(spc5_block_partials(jnp.asarray(vals), jnp.asarray(perm), jnp.asarray(xwin), tile=16))
+    want = np.asarray(spc5_block_partials_ref(jnp.asarray(vals), jnp.asarray(perm), jnp.asarray(xwin)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nrows=st.integers(1, 40),
+    ncols=st.integers(1, 60),
+    density=st.floats(0.01, 0.5),
+    run_len=st.integers(1, 6),
+    vs=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_random_matrices_f32(nrows, ncols, density, run_len, vs, seed):
+    rng = np.random.default_rng(seed)
+    indptr, indices, data = random_csr(rng, nrows, ncols, density, np.float32, run_len)
+    a = csr_to_spc5(indptr, indices, data, ncols=ncols, vs=vs, tile=8)
+    x = rng.standard_normal(ncols).astype(np.float32)
+    want = dense_spmv_ref(indptr, indices, data, ncols, x)
+    got = np.asarray(spc5_spmv(arrays_dict(a), jnp.asarray(x), tile=8))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nrows=st.integers(1, 24),
+    density=st.floats(0.05, 0.4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_f64_tight_tolerance(nrows, density, seed):
+    rng = np.random.default_rng(seed)
+    ncols = nrows + 3
+    indptr, indices, data = random_csr(rng, nrows, ncols, density, np.float64)
+    a = csr_to_spc5(indptr, indices, data, ncols=ncols, vs=8, tile=8)
+    x = rng.standard_normal(ncols)
+    want = dense_spmv_ref(indptr, indices, data, ncols, x)
+    got = np.asarray(spc5_spmv(arrays_dict(a), jnp.asarray(x), tile=8))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_empty_matrix():
+    indptr = np.zeros(6, np.int64)  # 5 empty rows
+    a = csr_to_spc5(indptr, np.zeros(0, np.int64), np.zeros(0, np.float32), ncols=7, vs=8, tile=4)
+    x = np.ones(7, np.float32)
+    got = np.asarray(spc5_spmv(arrays_dict(a), jnp.asarray(x), tile=4))
+    np.testing.assert_array_equal(got, np.zeros(5, np.float32))
+
+
+def test_filling_statistic_matches_rust_semantics():
+    # Dense rows -> 100% filling; singletons spaced by >= vs -> 1/vs.
+    indptr = np.asarray([0, 16], np.int64)
+    indices = np.arange(16, dtype=np.int64)
+    data = np.ones(16, np.float32)
+    a = csr_to_spc5(indptr, indices, data, ncols=16, vs=8, tile=1)
+    assert a.nblocks == 2 and abs(a.filling() - 1.0) < 1e-12
+    indices = np.asarray([0, 9, 18], np.int64)
+    indptr = np.asarray([0, 3], np.int64)
+    a = csr_to_spc5(indptr, indices, np.ones(3, np.float32), ncols=32, vs=8, tile=1)
+    assert a.nblocks == 3 and abs(a.filling() - 1.0 / 8.0) < 1e-12
+
+
+def test_gather_xwin_clamps_at_boundary():
+    x = jnp.arange(10, dtype=jnp.float32)
+    cols = jnp.asarray([7], dtype=jnp.int32)
+    w = gather_xwin(x, cols, vs=8, ncols=10)
+    # Clamped tail repeats the last element; the converter guarantees the
+    # mask never addresses those lanes with a non-zero value.
+    assert w.shape == (1, 8)
+    np.testing.assert_array_equal(np.asarray(w[0, :3]), [7.0, 8.0, 9.0])
+
+
+def test_vmem_footprint_structural_budget():
+    # The default tile must fit comfortably in a 16 MiB VMEM budget.
+    assert vmem_footprint_bytes(128, 16, 4) < 64 * 1024

@@ -1,0 +1,142 @@
+//! Regenerates **Figures 4 and 5**: sequential Fujitsu-SVE GFlop/s for the
+//! whole corpus (Fig 4) and the per-matrix bars with speedup-vs-scalar
+//! labels plus the corpus average (Fig 5), in both precisions, using the
+//! paper's best SVE configuration (single x load + manual multi-reduction).
+//!
+//! Run: `cargo bench --bench fig4_5_sve_sequential`
+
+use spc5::bench::{table::fmt1, SimBench, TextTable};
+use spc5::kernels::{KernelCfg, KernelKind, Reduction, SimIsa, XLoad};
+use spc5::matrix::corpus_entries;
+use spc5::perfmodel;
+use spc5::scalar::Scalar;
+use spc5::spc5::FormatStats;
+use spc5::util::json::Json;
+use spc5::util::stats::mean;
+
+const BUDGET: usize = 50_000;
+
+fn cfg(r: usize) -> KernelCfg {
+    KernelCfg {
+        isa: SimIsa::Sve,
+        kind: KernelKind::Spc5 { r, x_load: XLoad::Single, reduction: Reduction::Manual },
+    }
+}
+
+struct Line {
+    name: String,
+    fill1: f64,
+    scalar: f64,
+    betas: [f64; 4],
+}
+
+fn measure<T: Scalar>() -> Vec<Line> {
+    let machine = perfmodel::a64fx();
+    corpus_entries()
+        .iter()
+        .map(|e| {
+            let m = e.build::<T>(BUDGET);
+            let fill1 = FormatStats::measure(&m, 1, T::VS).filling;
+            let mut bench = SimBench::new(e.name, m);
+            let scalar = bench
+                .run(&machine, KernelCfg { isa: SimIsa::Sve, kind: KernelKind::ScalarCsr })
+                .gflops;
+            let mut betas = [0.0; 4];
+            for (i, r) in [1usize, 2, 4, 8].into_iter().enumerate() {
+                betas[i] = bench.run(&machine, cfg(r)).gflops;
+            }
+            Line { name: e.name.to_string(), fill1, scalar, betas }
+        })
+        .collect()
+}
+
+fn print_figure(prec: &str, lines: &[Line], json: &mut Json) {
+    println!("--- Fig 4/5, precision {prec} (Fujitsu-SVE, modeled GFlop/s) ---");
+    let mut table = TextTable::new(&[
+        "matrix", "fill b1", "scalar", "beta(1,VS)", "beta(2,VS)", "beta(4,VS)", "beta(8,VS)",
+    ]);
+    for l in lines {
+        table.row(vec![
+            l.name.clone(),
+            format!("{:.0}%", l.fill1 * 100.0),
+            fmt1(l.scalar),
+            format!("{} [x{:.1}]", fmt1(l.betas[0]), l.betas[0] / l.scalar),
+            format!("{} [x{:.1}]", fmt1(l.betas[1]), l.betas[1] / l.scalar),
+            format!("{} [x{:.1}]", fmt1(l.betas[2]), l.betas[2] / l.scalar),
+            format!("{} [x{:.1}]", fmt1(l.betas[3]), l.betas[3] / l.scalar),
+        ]);
+    }
+    // Fig 5's trailing average bars.
+    let avg_scalar = mean(&lines.iter().map(|l| l.scalar).collect::<Vec<_>>());
+    let avg: Vec<f64> =
+        (0..4).map(|i| mean(&lines.iter().map(|l| l.betas[i]).collect::<Vec<_>>())).collect();
+    table.row(vec![
+        "average".into(),
+        String::new(),
+        fmt1(avg_scalar),
+        format!("{} [x{:.1}]", fmt1(avg[0]), avg[0] / avg_scalar),
+        format!("{} [x{:.1}]", fmt1(avg[1]), avg[1] / avg_scalar),
+        format!("{} [x{:.1}]", fmt1(avg[2]), avg[2] / avg_scalar),
+        format!("{} [x{:.1}]", fmt1(avg[3]), avg[3] / avg_scalar),
+    ]);
+    println!("{}", table.render());
+
+    // §4.3 findings on this figure:
+    let corr = {
+        // Pearson between fill and best-beta gflops.
+        let xs: Vec<f64> = lines.iter().map(|l| l.fill1).collect();
+        let ys: Vec<f64> =
+            lines.iter().map(|l| l.betas.iter().cloned().fold(0.0f64, f64::max)).collect();
+        pearson(&xs, &ys)
+    };
+    println!("check: filling predicts performance (Pearson) = {corr:.2} -> {}",
+        if corr > 0.8 { "OK" } else { "WEAK" });
+    let ns3da = lines.iter().find(|l| l.name == "ns3Da").unwrap();
+    println!(
+        "check: ns3Da SPC5 does not beat scalar meaningfully -> {} (best x{:.2})",
+        if ns3da.betas.iter().cloned().fold(0.0f64, f64::max) < 1.5 * ns3da.scalar { "OK" } else { "MISMATCH" },
+        ns3da.betas.iter().cloned().fold(0.0f64, f64::max) / ns3da.scalar
+    );
+    let tsopf = lines.iter().find(|l| l.name == "TSOPF").unwrap();
+    let dense = lines.iter().find(|l| l.name == "dense").unwrap();
+    println!(
+        "check: TSOPF approaches the dense upper bound -> {} ({} vs {})",
+        if tsopf.betas[2] > 0.6 * dense.betas[2] { "OK" } else { "MISMATCH" },
+        fmt1(tsopf.betas[2]),
+        fmt1(dense.betas[2])
+    );
+    println!();
+
+    let mut arr = Json::Arr(vec![]);
+    for l in lines {
+        let mut o = Json::obj();
+        o.set("name", l.name.clone())
+            .set("fill1", l.fill1)
+            .set("scalar", l.scalar)
+            .set("betas", l.betas.to_vec());
+        arr.push(o);
+    }
+    json.set(prec, arr);
+}
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sx = xs.iter().map(|x| (x - mx) * (x - mx)).sum::<f64>().sqrt();
+    let sy = ys.iter().map(|y| (y - my) * (y - my)).sum::<f64>().sqrt();
+    cov / (sx * sy)
+}
+
+fn main() {
+    println!("== Figures 4 + 5: SPC5 sequential performance on Fujitsu-SVE ==\n");
+    let mut json = Json::obj();
+    let f64_lines = measure::<f64>();
+    print_figure("f64", &f64_lines, &mut json);
+    let f32_lines = measure::<f32>();
+    print_figure("f32", &f32_lines, &mut json);
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/fig4_5.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/fig4_5.json");
+}

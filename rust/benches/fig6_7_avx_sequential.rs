@@ -1,0 +1,145 @@
+//! Regenerates **Figures 6 and 7**: sequential Intel-AVX512 GFlop/s for the
+//! whole corpus (Fig 6) and the per-matrix bars + speedups + average
+//! (Fig 7), both precisions, best AVX configuration (manual multi-reduction)
+//! plus the MKL-like vectorized-CSR comparison.
+//!
+//! Run: `cargo bench --bench fig6_7_avx_sequential`
+
+use spc5::bench::{table::fmt1, SimBench, TextTable};
+use spc5::kernels::{KernelCfg, KernelKind, Reduction, SimIsa, XLoad};
+use spc5::matrix::corpus_entries;
+use spc5::perfmodel;
+use spc5::scalar::Scalar;
+use spc5::spc5::FormatStats;
+use spc5::util::json::Json;
+use spc5::util::stats::mean;
+
+const BUDGET: usize = 50_000;
+
+fn cfg(r: usize) -> KernelCfg {
+    KernelCfg {
+        isa: SimIsa::Avx512,
+        kind: KernelKind::Spc5 { r, x_load: XLoad::Single, reduction: Reduction::Manual },
+    }
+}
+
+struct Line {
+    name: String,
+    fill1: f64,
+    scalar: f64,
+    mkl: f64,
+    betas: [f64; 4],
+}
+
+fn measure<T: Scalar>() -> Vec<Line> {
+    let machine = perfmodel::cascade_lake();
+    corpus_entries()
+        .iter()
+        .map(|e| {
+            let m = e.build::<T>(BUDGET);
+            let fill1 = FormatStats::measure(&m, 1, T::VS).filling;
+            let mut bench = SimBench::new(e.name, m);
+            let scalar = bench
+                .run(&machine, KernelCfg { isa: SimIsa::Avx512, kind: KernelKind::ScalarCsr })
+                .gflops;
+            let mkl = bench
+                .run(&machine, KernelCfg { isa: SimIsa::Avx512, kind: KernelKind::CsrVec })
+                .gflops;
+            let mut betas = [0.0; 4];
+            for (i, r) in [1usize, 2, 4, 8].into_iter().enumerate() {
+                betas[i] = bench.run(&machine, cfg(r)).gflops;
+            }
+            Line { name: e.name.to_string(), fill1, scalar, mkl, betas }
+        })
+        .collect()
+}
+
+fn print_figure(prec: &str, lines: &[Line], json: &mut Json) {
+    println!("--- Fig 6/7, precision {prec} (Intel-AVX512, modeled GFlop/s) ---");
+    let mut table = TextTable::new(&[
+        "matrix", "fill b1", "scalar", "MKL-like", "beta(1,VS)", "beta(2,VS)", "beta(4,VS)",
+        "beta(8,VS)",
+    ]);
+    let speedup = |g: f64, s: f64| format!("{} [x{:.1}]", fmt1(g), g / s);
+    for l in lines {
+        table.row(vec![
+            l.name.clone(),
+            format!("{:.0}%", l.fill1 * 100.0),
+            fmt1(l.scalar),
+            speedup(l.mkl, l.scalar),
+            speedup(l.betas[0], l.scalar),
+            speedup(l.betas[1], l.scalar),
+            speedup(l.betas[2], l.scalar),
+            speedup(l.betas[3], l.scalar),
+        ]);
+    }
+    let avg_scalar = mean(&lines.iter().map(|l| l.scalar).collect::<Vec<_>>());
+    let avg_mkl = mean(&lines.iter().map(|l| l.mkl).collect::<Vec<_>>());
+    let avg: Vec<f64> =
+        (0..4).map(|i| mean(&lines.iter().map(|l| l.betas[i]).collect::<Vec<_>>())).collect();
+    table.row(vec![
+        "average".into(),
+        String::new(),
+        fmt1(avg_scalar),
+        speedup(avg_mkl, avg_scalar),
+        speedup(avg[0], avg_scalar),
+        speedup(avg[1], avg_scalar),
+        speedup(avg[2], avg_scalar),
+        speedup(avg[3], avg_scalar),
+    ]);
+    println!("{}", table.render());
+
+    // The paper's findings for Figs 6/7:
+    let beat_mkl = lines.iter().filter(|l| {
+        l.betas.iter().cloned().fold(0.0f64, f64::max) > l.mkl
+    }).count();
+    println!(
+        "check: SPC5 faster than MKL-like for most matrices -> {} ({beat_mkl}/{} matrices)",
+        if beat_mkl * 2 > lines.len() { "OK" } else { "MISMATCH" },
+        lines.len()
+    );
+    // Fig 7: TSOPF stays *below* the dense case on AVX (x jumping hurts).
+    let tsopf = lines.iter().find(|l| l.name == "TSOPF").unwrap();
+    let dense = lines.iter().find(|l| l.name == "dense").unwrap();
+    let t = tsopf.betas.iter().cloned().fold(0.0f64, f64::max);
+    let d = dense.betas.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "check: TSOPF does not reach dense on AVX -> {} ({} vs {})",
+        if t < 0.95 * d { "OK" } else { "MISMATCH" },
+        fmt1(t),
+        fmt1(d)
+    );
+    // Fig 7: scattered matrices (< 2 nnz/block) lose to plain CSR kernels.
+    let wiki = lines.iter().find(|l| l.name == "wikipedia-20060925").unwrap();
+    println!(
+        "check: wikipedia SPC5 <= MKL-like -> {} ({} vs {})",
+        if wiki.betas.iter().cloned().fold(0.0f64, f64::max) <= wiki.mkl * 1.1 { "OK" } else { "MISMATCH" },
+        fmt1(wiki.betas.iter().cloned().fold(0.0f64, f64::max)),
+        fmt1(wiki.mkl)
+    );
+    println!();
+
+    let mut arr = Json::Arr(vec![]);
+    for l in lines {
+        let mut o = Json::obj();
+        o.set("name", l.name.clone())
+            .set("fill1", l.fill1)
+            .set("scalar", l.scalar)
+            .set("mkl", l.mkl)
+            .set("betas", l.betas.to_vec());
+        arr.push(o);
+    }
+    json.set(prec, arr);
+}
+
+fn main() {
+    println!("== Figures 6 + 7: SPC5 sequential performance on Intel-AVX512 ==\n");
+    let mut json = Json::obj();
+    let f64_lines = measure::<f64>();
+    print_figure("f64", &f64_lines, &mut json);
+    let f32_lines = measure::<f32>();
+    print_figure("f32", &f32_lines, &mut json);
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/fig6_7.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/fig6_7.json");
+}

@@ -1,0 +1,118 @@
+//! §Perf: wall-clock benchmark of the *native* host kernels — the part of
+//! the framework whose performance is real, not modeled. Reports GFlop/s and
+//! effective bandwidth, against a measured copy-bandwidth roofline.
+//!
+//! Run: `cargo bench --bench native_hotpath`
+
+use spc5::bench::{table::fmt1, time_samples, TextTable};
+use spc5::kernels::{native, native_avx512};
+use spc5::matrix::{corpus_by_name, Csr};
+use spc5::spc5::csr_to_spc5;
+use spc5::util::json::Json;
+use spc5::util::timing::{gflops, spmv_flops};
+
+const BUDGET: usize = 400_000;
+const SAMPLES: usize = 15;
+const WARMUP: usize = 3;
+
+/// Measured host copy bandwidth (GB/s) — the roofline reference.
+fn copy_bandwidth_gbs() -> f64 {
+    let n = 16 * 1024 * 1024 / 8; // 16 MiB of f64
+    let src = vec![1.0f64; n];
+    let mut dst = vec![0.0f64; n];
+    let mut s = time_samples(2, 7, || {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&dst);
+    });
+    (n * 8 * 2) as f64 / s.median() / 1e9 // read + write
+}
+
+fn main() {
+    println!("== native host hot path (wall-clock) ==\n");
+    let bw = copy_bandwidth_gbs();
+    println!("host copy bandwidth (roofline reference): {bw:.1} GB/s\n");
+
+    let avx = native_avx512::available();
+    println!("AVX-512F available: {avx} (spc5-avx columns use the real paper kernel)\n");
+
+    let names = ["nd6k", "pwtk", "CO", "wikipedia-20060925", "dense", "TSOPF"];
+    let mut table = TextTable::new(&[
+        "matrix", "nnz", "fill b1", "csr GF/s",
+        "avx b1", "avx b2", "avx b4", "avx b8", "portable b4",
+        "best/csr", "%roofline",
+    ]);
+    let mut json = Json::obj();
+
+    for name in names {
+        let m: Csr<f64> = corpus_by_name(name).unwrap().build(BUDGET);
+        let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+        let padded = native_avx512::PaddedX::new(&x, 8);
+        let mut y = vec![0.0; m.nrows];
+        let flops = spmv_flops(m.nnz() as u64);
+
+        let mut csr_t = time_samples(WARMUP, SAMPLES, || {
+            native::spmv_csr(&m, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        let csr_g = gflops(flops, csr_t.median());
+
+        // The real AVX-512 SPC5 kernel (Algorithm 1 with intrinsics).
+        let mut beta_g = [0.0f64; 4];
+        for (i, r) in [1usize, 2, 4, 8].into_iter().enumerate() {
+            let s = csr_to_spc5(&m, r, 8);
+            let mut t = time_samples(WARMUP, SAMPLES, || {
+                if !native_avx512::spmv_spc5_f64(&s, &padded, &mut y) {
+                    native::spmv_spc5(&s, &x, &mut y);
+                }
+                std::hint::black_box(&y);
+            });
+            beta_g[i] = gflops(flops, t.median());
+        }
+        // Portable (mask-walk) kernel at beta(4) for comparison.
+        let portable_g = {
+            let s = csr_to_spc5(&m, 4, 8);
+            let mut t = time_samples(WARMUP, SAMPLES, || {
+                native::spmv_spc5(&s, &x, &mut y);
+                std::hint::black_box(&y);
+            });
+            gflops(flops, t.median())
+        };
+        let best = beta_g.iter().cloned().fold(csr_g, f64::max);
+        // Traffic lower bound: values (8B) + block colidx/masks ~ nnz*9.x B;
+        // achieved bandwidth = traffic / time.
+        let fill1 = {
+            let s = csr_to_spc5(&m, 1, 8);
+            s.filling()
+        };
+        let min_bytes = m.nnz() as f64 * 8.0; // values alone
+        let best_time = flops as f64 / best / 1e9;
+        let achieved_bw = min_bytes / best_time / 1e9;
+        let roofline_pct = achieved_bw / bw * 100.0;
+
+        table.row(vec![
+            name.into(),
+            m.nnz().to_string(),
+            format!("{:.0}%", fill1 * 100.0),
+            fmt1(csr_g),
+            fmt1(beta_g[0]),
+            fmt1(beta_g[1]),
+            fmt1(beta_g[2]),
+            fmt1(beta_g[3]),
+            fmt1(portable_g),
+            format!("x{:.2}", best / csr_g),
+            format!("{roofline_pct:.0}%"),
+        ]);
+        let mut o = Json::obj();
+        o.set("nnz", m.nnz())
+            .set("csr_gflops", csr_g)
+            .set("spc5_avx512_gflops", beta_g.to_vec())
+            .set("spc5_portable_b4_gflops", portable_g)
+            .set("roofline_pct", roofline_pct);
+        json.set(name, o);
+    }
+    println!("{}", table.render());
+    json.set("copy_bw_gbs", bw);
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/native_hotpath.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/native_hotpath.json");
+}

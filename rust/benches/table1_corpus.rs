@@ -1,0 +1,69 @@
+//! Regenerates **Table 1**: the corpus properties and the β(r,VS) block
+//! fillings in both precisions, measured on our synthetic corpus and printed
+//! side-by-side with the paper's published values.
+//!
+//! Run: `cargo bench --bench table1_corpus`
+
+use spc5::bench::TextTable;
+use spc5::matrix::{corpus_entries, Csr};
+use spc5::spc5::stats::table1_fillings;
+use spc5::util::json::Json;
+
+const BUDGET: usize = 60_000;
+
+fn main() {
+    println!("== Table 1: matrix set and beta(r,VS) fillings ==");
+    println!("(measured on the synthetic corpus at ~{BUDGET} nnz; paper values in parentheses)\n");
+
+    let mut table = TextTable::new(&[
+        "name", "rows", "nnz", "nnz/row",
+        "b1 f64", "b2 f64", "b4 f64", "b8 f64",
+        "b1 f32", "b2 f32", "b4 f32", "b8 f32",
+    ]);
+    let mut json = Json::Arr(vec![]);
+    let mut abs_err = Vec::new();
+
+    for e in corpus_entries() {
+        let m64: Csr<f64> = e.build(BUDGET);
+        let m32: Csr<f32> = e.build(BUDGET);
+        let (f64s, f32s) = table1_fillings(&m64, &m32);
+        let cell = |got: f64, paper: f64| format!("{got:3.0} ({paper:3.0})");
+        table.row(vec![
+            e.name.into(),
+            m64.nrows.to_string(),
+            m64.nnz().to_string(),
+            format!("{:.1}", m64.nnz_per_row()),
+            cell(f64s[0], e.fill_f64[0]),
+            cell(f64s[1], e.fill_f64[1]),
+            cell(f64s[2], e.fill_f64[2]),
+            cell(f64s[3], e.fill_f64[3]),
+            cell(f32s[0], e.fill_f32[0]),
+            cell(f32s[1], e.fill_f32[1]),
+            cell(f32s[2], e.fill_f32[2]),
+            cell(f32s[3], e.fill_f32[3]),
+        ]);
+        for i in 0..4 {
+            abs_err.push((f64s[i] - e.fill_f64[i]).abs());
+            abs_err.push((f32s[i] - e.fill_f32[i]).abs());
+        }
+        let mut o = Json::obj();
+        o.set("name", e.name)
+            .set("rows", m64.nrows)
+            .set("nnz", m64.nnz())
+            .set("fill_f64_measured", f64s.to_vec())
+            .set("fill_f64_paper", e.fill_f64.to_vec())
+            .set("fill_f32_measured", f32s.to_vec())
+            .set("fill_f32_paper", e.fill_f32.to_vec());
+        json.push(o);
+    }
+    println!("{}", table.render());
+    let mae = abs_err.iter().sum::<f64>() / abs_err.len() as f64;
+    println!(
+        "mean |measured - paper| filling error: {mae:.1} percentage points over {} cells",
+        abs_err.len()
+    );
+
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/table1.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/table1.json");
+}

@@ -1,0 +1,129 @@
+//! Regenerates **Table 2(a)**: Fujitsu-SVE GFlop/s for the four
+//! optimization combinations — single-x-load (Yes/No) × manual
+//! multi-reduction (Yes/No) — across β(1..8,VS) in both precisions, for CO,
+//! dense, nd6k and the corpus average, with speedups vs the scalar kernel.
+//!
+//! Run: `cargo bench --bench table2a_sve_opts`
+
+use spc5::bench::{table::fmt1, SimBench, TextTable};
+use spc5::kernels::{KernelCfg, KernelKind, Reduction, SimIsa, XLoad};
+use spc5::matrix::{corpus_entries, CorpusEntry};
+use spc5::perfmodel;
+use spc5::scalar::Scalar;
+use spc5::util::json::Json;
+use spc5::util::stats::mean;
+
+const HIGHLIGHT_BUDGET: usize = 120_000;
+const AVERAGE_BUDGET: usize = 40_000;
+
+fn combos() -> [(XLoad, Reduction, &'static str); 4] {
+    [
+        (XLoad::Single, Reduction::Manual, "Yes/Yes"),
+        (XLoad::Single, Reduction::Native, "Yes/No"),
+        (XLoad::Partial, Reduction::Manual, "No/Yes"),
+        (XLoad::Partial, Reduction::Native, "No/No"),
+    ]
+}
+
+/// One matrix row-group: scalar GFlop/s + per-(combo, r) GFlop/s.
+fn measure<T: Scalar>(e: &CorpusEntry, budget: usize) -> (f64, Vec<Vec<f64>>) {
+    let machine = perfmodel::a64fx();
+    let mut bench = SimBench::new(e.name, e.build::<T>(budget));
+    let scalar = bench
+        .run(&machine, KernelCfg { isa: SimIsa::Sve, kind: KernelKind::ScalarCsr })
+        .gflops;
+    let mut rows = Vec::new();
+    for (x_load, reduction, _) in combos() {
+        let mut cells = Vec::new();
+        for r in [1usize, 2, 4, 8] {
+            let g = bench
+                .run(
+                    &machine,
+                    KernelCfg {
+                        isa: SimIsa::Sve,
+                        kind: KernelKind::Spc5 { r, x_load, reduction },
+                    },
+                )
+                .gflops;
+            cells.push(g);
+        }
+        rows.push(cells);
+    }
+    (scalar, rows)
+}
+
+fn main() {
+    println!("== Table 2(a): Fujitsu-SVE, x-load/multi-reduction combinations ==");
+    println!("(modeled GFlop/s, speedup vs scalar in brackets — paper Table 2a shape)\n");
+
+    let entries = corpus_entries();
+    let highlights: Vec<&CorpusEntry> =
+        ["CO", "dense", "nd6k"].iter().map(|n| entries.iter().find(|e| e.name == *n).unwrap()).collect();
+
+    let mut json = Json::obj();
+    for prec in ["f64", "f32"] {
+        println!("--- precision {prec} ---");
+        let mut table = TextTable::new(&[
+            "matrix", "xload/red", "scalar", "beta(1,VS)", "beta(2,VS)", "beta(4,VS)", "beta(8,VS)",
+        ]);
+        let mut avg_scalar: Vec<f64> = Vec::new();
+        let mut avg_cells: Vec<Vec<Vec<f64>>> = Vec::new(); // [matrix][combo][r]
+
+        for e in &entries {
+            let (scalar, rows) = if prec == "f64" {
+                measure::<f64>(e, if highlights.iter().any(|h| h.name == e.name) { HIGHLIGHT_BUDGET } else { AVERAGE_BUDGET })
+            } else {
+                measure::<f32>(e, if highlights.iter().any(|h| h.name == e.name) { HIGHLIGHT_BUDGET } else { AVERAGE_BUDGET })
+            };
+            if highlights.iter().any(|h| h.name == e.name) {
+                for (ci, (_, _, label)) in combos().iter().enumerate() {
+                    table.row(vec![
+                        if ci == 0 { e.name.to_string() } else { String::new() },
+                        label.to_string(),
+                        if ci == 0 { fmt1(scalar) } else { String::new() },
+                        format!("{} [x{:.1}]", fmt1(rows[ci][0]), rows[ci][0] / scalar),
+                        format!("{} [x{:.1}]", fmt1(rows[ci][1]), rows[ci][1] / scalar),
+                        format!("{} [x{:.1}]", fmt1(rows[ci][2]), rows[ci][2] / scalar),
+                        format!("{} [x{:.1}]", fmt1(rows[ci][3]), rows[ci][3] / scalar),
+                    ]);
+                }
+            }
+            avg_scalar.push(scalar);
+            avg_cells.push(rows);
+        }
+
+        // Corpus average rows (the paper's "average" block).
+        let scalar_avg = mean(&avg_scalar);
+        for (ci, (_, _, label)) in combos().iter().enumerate() {
+            let cells: Vec<f64> = (0..4)
+                .map(|ri| mean(&avg_cells.iter().map(|m| m[ci][ri]).collect::<Vec<_>>()))
+                .collect();
+            table.row(vec![
+                if ci == 0 { "average".into() } else { String::new() },
+                label.to_string(),
+                if ci == 0 { fmt1(scalar_avg) } else { String::new() },
+                format!("{} [x{:.1}]", fmt1(cells[0]), cells[0] / scalar_avg),
+                format!("{} [x{:.1}]", fmt1(cells[1]), cells[1] / scalar_avg),
+                format!("{} [x{:.1}]", fmt1(cells[2]), cells[2] / scalar_avg),
+                format!("{} [x{:.1}]", fmt1(cells[3]), cells[3] / scalar_avg),
+            ]);
+            let mut o = Json::obj();
+            o.set("combo", *label).set("gflops", cells.clone());
+            json.set(&format!("{prec}_avg_{label}"), o);
+        }
+        println!("{}", table.render());
+
+        // The paper's headline findings for this table, checked:
+        let best_cfg_avg: Vec<f64> =
+            (0..4).map(|ri| mean(&avg_cells.iter().map(|m| m[0][ri]).collect::<Vec<_>>())).collect();
+        let b4 = best_cfg_avg[2];
+        let b8 = best_cfg_avg[3];
+        println!("check: beta(4,VS) avg {} >= beta(8,VS) avg {} -> {}", fmt1(b4), fmt1(b8),
+            if b4 >= b8 { "OK (paper: beta(8) degrades on SVE)" } else { "MISMATCH" });
+        println!();
+    }
+
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/table2a.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/table2a.json");
+}

@@ -1,0 +1,91 @@
+//! Measurement plumbing for the `rust/benches/*` targets.
+
+use crate::kernels::{dispatch, KernelCfg, MatrixSet};
+use crate::perfmodel::estimate::{model_warm, PerfReport};
+use crate::perfmodel::Machine;
+use crate::scalar::Scalar;
+use crate::util::stats::Summary;
+use crate::util::timing::Timer;
+
+/// Wall-clock timing of a closure: `warmup` unmeasured runs, then `samples`
+/// measured runs. Returns per-run seconds.
+pub fn time_samples(warmup: usize, samples: usize, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Summary::new();
+    for _ in 0..samples {
+        let t = Timer::start();
+        f();
+        out.push(t.elapsed_secs());
+    }
+    out
+}
+
+/// One measured cell of a paper table: modeled GFlop/s for a kernel config
+/// on a machine.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub gflops: f64,
+    pub report: PerfReport,
+}
+
+/// Runs simulated kernels against the machine models, caching the format
+/// conversions per matrix.
+pub struct SimBench<T: Scalar> {
+    pub set: MatrixSet<T>,
+    pub name: String,
+}
+
+impl<T: Scalar> SimBench<T> {
+    pub fn new(name: impl Into<String>, csr: crate::matrix::Csr<T>) -> Self {
+        Self { set: MatrixSet::new(csr), name: name.into() }
+    }
+
+    /// Modeled GFlop/s of `cfg` on `machine` (warm-cache pass, like the
+    /// paper's repeated-run benchmarks).
+    pub fn run(&mut self, machine: &Machine, cfg: KernelCfg) -> BenchResult {
+        let n = self.set.csr.ncols;
+        let x: Vec<T> = (0..n).map(|i| T::from_f64(1.0 + (i % 9) as f64 * 0.125)).collect();
+        let flops = dispatch::flops_of(&self.set);
+        let set = &mut self.set;
+        let (report, _y) =
+            model_warm(machine, flops, |sink| dispatch::run_simulated(cfg, set, &x, sink));
+        BenchResult { gflops: report.gflops(), report }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelKind, Reduction, SimIsa, XLoad};
+    use crate::matrix::gen;
+    use crate::perfmodel;
+
+    #[test]
+    fn time_samples_counts() {
+        let mut calls = 0usize;
+        let s = time_samples(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn sim_bench_produces_positive_gflops() {
+        let csr = gen::random_uniform::<f64>(300, 8.0, 1);
+        let mut b = SimBench::new("t", csr);
+        let m = perfmodel::cascade_lake();
+        let r = b.run(
+            &m,
+            KernelCfg {
+                isa: SimIsa::Avx512,
+                kind: KernelKind::Spc5 {
+                    r: 2,
+                    x_load: XLoad::Single,
+                    reduction: Reduction::Manual,
+                },
+            },
+        );
+        assert!(r.gflops > 0.0 && r.gflops < 100.0, "{}", r.gflops);
+    }
+}

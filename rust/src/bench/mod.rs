@@ -1,0 +1,9 @@
+//! Bench harness: statistical wall-clock timing (criterion stand-in), the
+//! simulated-GFlop/s runner used by every table/figure bench, and plain-text
+//! table rendering.
+
+pub mod harness;
+pub mod table;
+
+pub use harness::{time_samples, BenchResult, SimBench};
+pub use table::TextTable;

@@ -1,0 +1,100 @@
+//! Plain-text table rendering for the bench reports (the shape of the
+//! paper's tables/figure data, printed to stdout and saved next to the
+//! JSON).
+
+/// A simple left-padded text table.
+#[derive(Clone, Debug, Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:<w$}", c, w = width[i]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+/// `3.46` -> "3.5", matching the paper's one-decimal GFlop/s cells.
+pub fn fmt1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+/// Speedup annotation like the paper: `[x3.0]`.
+pub fn fmt_speedup(v: f64, baseline: f64) -> String {
+    if baseline <= 0.0 {
+        return "[-]".into();
+    }
+    format!("[x{:.1}]", v / baseline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TextTable::new(&["name", "gflops"]);
+        t.row(vec!["dense".into(), "3.5".into()]);
+        t.row(vec!["nd6k-longer".into(), "12.25".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("dense"));
+        // Columns align: "gflops" column starts at the same offset.
+        let col = lines[0].find("gflops").unwrap();
+        assert_eq!(&lines[3][col - 2..col], "  ");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = TextTable::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt1(3.46), "3.5");
+        assert_eq!(fmt_speedup(6.0, 2.0), "[x3.0]");
+        assert_eq!(fmt_speedup(6.0, 0.0), "[-]");
+    }
+}

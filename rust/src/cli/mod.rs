@@ -1,0 +1,151 @@
+//! Zero-dependency CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `spc5 <command> [positional...] [--key value | --key=value |
+//! --switch]`. Unknown flags are rejected by the command handlers via
+//! [`Args::finish`].
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+    consumed: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(true, |n| n.starts_with("--")) {
+                    out.switches.insert(stripped.to_string());
+                } else {
+                    out.options.insert(stripped.to_string(), it.next().unwrap());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String option with default.
+    pub fn opt(&mut self, key: &str, default: &str) -> String {
+        self.consumed.insert(key.to_string());
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_maybe(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.options.get(key).cloned()
+    }
+
+    /// Numeric option with default; errors on unparsable input.
+    pub fn opt_num<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.insert(key.to_string());
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} {v}: {e}")),
+        }
+    }
+
+    /// Boolean switch.
+    pub fn switch(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.switches.contains(key)
+    }
+
+    /// Fail on unrecognized options/switches (call after reading all).
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !self.consumed.contains(*k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown option(s): {}", unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse(&["solve", "input.mtx", "out.mtx"]);
+        assert_eq!(a.command.as_deref(), Some("solve"));
+        assert_eq!(a.positional, vec!["input.mtx", "out.mtx"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let mut a = parse(&["spmv", "--r", "4", "--iters=100"]);
+        assert_eq!(a.opt_num::<usize>("r", 1).unwrap(), 4);
+        assert_eq!(a.opt_num::<usize>("iters", 1).unwrap(), 100);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn switches_vs_options() {
+        let mut a = parse(&["bench", "--verbose", "--name", "CO", "--json"]);
+        assert!(a.switch("verbose"));
+        assert!(a.switch("json"));
+        assert!(!a.switch("quiet"));
+        assert_eq!(a.opt("name", ""), "CO");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let mut a = parse(&["info", "--bogus", "1"]);
+        let _ = a.opt("known", "");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn numeric_parse_errors_reported() {
+        let mut a = parse(&["spmv", "--r", "notanumber"]);
+        assert!(a.opt_num::<usize>("r", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse(&["spmv"]);
+        assert_eq!(a.opt("corpus", "CO"), "CO");
+        assert_eq!(a.opt_num::<f64>("scale", 1.5).unwrap(), 1.5);
+        assert_eq!(a.opt_maybe("missing"), None);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let mut a = parse(&["serve", "--demo"]);
+        assert!(a.switch("demo"));
+        a.finish().unwrap();
+    }
+}

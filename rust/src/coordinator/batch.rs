@@ -1,0 +1,137 @@
+//! Same-key request batching.
+//!
+//! SpMV is memory bound: streaming the matrix dominates the cost, so running
+//! k right-hand sides of the *same* matrix back-to-back (or fused — see
+//! `kernels::native::spmv_spc5_multi`) amortizes the matrix traffic. The
+//! batcher groups queued requests by matrix id, preserving per-matrix FIFO
+//! order.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// A batch of payloads sharing one key.
+#[derive(Debug)]
+pub struct Batch<K, P> {
+    pub key: K,
+    pub items: Vec<P>,
+}
+
+/// Accumulates payloads and drains them grouped by key.
+#[derive(Debug)]
+pub struct Batcher<K: Eq + Hash + Copy, P> {
+    queues: HashMap<K, Vec<P>>,
+    /// FIFO of keys by first-arrival, so draining is fair.
+    order: Vec<K>,
+    /// Maximum items per drained batch (larger queues split).
+    pub max_batch: usize,
+    len: usize,
+}
+
+impl<K: Eq + Hash + Copy, P> Batcher<K, P> {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        Self { queues: HashMap::new(), order: Vec::new(), max_batch, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(&mut self, key: K, payload: P) {
+        let q = self.queues.entry(key).or_default();
+        if q.is_empty() && !self.order.contains(&key) {
+            self.order.push(key);
+        }
+        q.push(payload);
+        self.len += 1;
+    }
+
+    /// Remove and return the next batch (the oldest key), up to `max_batch`
+    /// items. Returns None when empty.
+    pub fn pop_batch(&mut self) -> Option<Batch<K, P>> {
+        while let Some(&key) = self.order.first() {
+            let q = self.queues.get_mut(&key)?;
+            if q.is_empty() {
+                self.order.remove(0);
+                continue;
+            }
+            let take = q.len().min(self.max_batch);
+            let items: Vec<P> = q.drain(..take).collect();
+            self.len -= items.len();
+            if q.is_empty() {
+                self.queues.remove(&key);
+                self.order.remove(0);
+            } else {
+                // Rotate the key to the back for fairness.
+                self.order.remove(0);
+                self.order.push(key);
+            }
+            return Some(Batch { key, items });
+        }
+        None
+    }
+
+    /// Drain everything as batches.
+    pub fn drain_all(&mut self) -> Vec<Batch<K, P>> {
+        let mut out = Vec::new();
+        while let Some(b) = self.pop_batch() {
+            out.push(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_by_key_in_fifo_order() {
+        let mut b: Batcher<u32, i32> = Batcher::new(16);
+        b.push(1, 10);
+        b.push(2, 20);
+        b.push(1, 11);
+        assert_eq!(b.len(), 3);
+        let first = b.pop_batch().unwrap();
+        assert_eq!(first.key, 1);
+        assert_eq!(first.items, vec![10, 11]);
+        let second = b.pop_batch().unwrap();
+        assert_eq!(second.key, 2);
+        assert!(b.pop_batch().is_none());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn max_batch_splits_and_rotates() {
+        let mut b: Batcher<u32, i32> = Batcher::new(2);
+        for i in 0..5 {
+            b.push(7, i);
+        }
+        b.push(8, 100);
+        let b1 = b.pop_batch().unwrap();
+        assert_eq!((b1.key, b1.items), (7, vec![0, 1]));
+        // Key 7 rotated behind key 8.
+        let b2 = b.pop_batch().unwrap();
+        assert_eq!(b2.key, 8);
+        let b3 = b.pop_batch().unwrap();
+        assert_eq!((b3.key, b3.items), (7, vec![2, 3]));
+        let b4 = b.pop_batch().unwrap();
+        assert_eq!((b4.key, b4.items), (7, vec![4]));
+    }
+
+    #[test]
+    fn drain_all_returns_everything() {
+        let mut b: Batcher<&str, i32> = Batcher::new(10);
+        b.push("a", 1);
+        b.push("b", 2);
+        b.push("a", 3);
+        let batches = b.drain_all();
+        let total: usize = batches.iter().map(|x| x.items.len()).sum();
+        assert_eq!(total, 3);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,114 @@
+//! Operational metrics of the SpMV service.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Thread-safe service counters. Latencies are recorded in microseconds.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub flops: AtomicU64,
+    pub errors: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, latency_us: f64, flops: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.flops.fetch_add(flops, Ordering::Relaxed);
+        self.latencies_us.lock().expect("metrics lock").push(latency_us);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let _ = size;
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latency summary snapshot (p50/p95/p99 in µs).
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from_samples(self.latencies_us.lock().expect("metrics lock").clone())
+    }
+
+    /// JSON snapshot for the CLI / logs.
+    pub fn snapshot(&self) -> Json {
+        let mut lat = self.latency_summary();
+        let mut o = Json::obj();
+        o.set("requests", self.requests.load(Ordering::Relaxed))
+            .set("completed", self.completed.load(Ordering::Relaxed))
+            .set("batches", self.batches.load(Ordering::Relaxed))
+            .set("errors", self.errors.load(Ordering::Relaxed))
+            .set("flops", self.flops.load(Ordering::Relaxed));
+        if !lat.is_empty() {
+            o.set("latency_us_p50", lat.quantile(0.5))
+                .set("latency_us_p95", lat.quantile(0.95))
+                .set("latency_us_p99", lat.quantile(0.99));
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_completion(100.0, 2000);
+        m.record_batch(5);
+        m.record_error();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.flops.load(Ordering::Relaxed), 2000);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn snapshot_includes_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_completion(i as f64, 1);
+        }
+        let s = m.snapshot().to_string();
+        assert!(s.contains("latency_us_p50"));
+        assert!(s.contains("\"completed\":100"));
+    }
+
+    #[test]
+    fn concurrent_updates_are_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let m = std::sync::Arc::clone(&m);
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        m.record_request();
+                        m.record_completion(1.0, 10);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.requests.load(Ordering::Relaxed), 4000);
+        assert_eq!(m.flops.load(Ordering::Relaxed), 40_000);
+        assert_eq!(m.latency_summary().len(), 4000);
+    }
+}

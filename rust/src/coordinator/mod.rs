@@ -1,0 +1,16 @@
+//! The L3 coordinator: an SpMV service around the format machinery.
+//!
+//! The paper ships SPC5 as a library; a production deployment needs the
+//! layer this module provides: register a matrix once, let the framework
+//! pick the best format for it ([`selector`] — the paper's "faster than CSR
+//! above ~2 nnz/block" rule generalized), then serve SpMV requests through a
+//! thread pool with same-matrix batching for x/format locality ([`batch`],
+//! [`service`]) and operational metrics ([`metrics`]).
+
+pub mod batch;
+pub mod metrics;
+pub mod selector;
+pub mod service;
+
+pub use selector::{select_format, FormatChoice, Selection};
+pub use service::{MatrixId, SpmvService};

@@ -1,0 +1,162 @@
+//! Automatic format selection.
+//!
+//! The paper's guidance (§4.3/§5): SPC5 beats CSR when blocks hold more than
+//! ~2 non-zeros; β(4,VS) is the best default on SVE, β(8,VS) on AVX-512, but
+//! the right choice is matrix-dependent. The selector measures the β(r,VS)
+//! fillings of the actual matrix and scores each candidate with a per-block
+//! cost model whose constants mirror the kernels' structure: a fixed cost
+//! per block (column index + x window) plus a per-block-row cost (mask
+//! pipeline) plus a per-value cost.
+
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::spc5::FormatStats;
+
+/// Cost-model constants (in abstract "per-event units"; only ratios matter).
+/// Defaults approximate the native host kernel; the ISA simulators have
+/// their own exact models in `perfmodel`.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorModel {
+    /// Fixed cost per block (col index load, x window setup).
+    pub per_block: f64,
+    /// Cost per block-row (mask load + pipeline) — multiplied by r.
+    pub per_block_row: f64,
+    /// Cost per non-zero value (FMA + packed value load).
+    pub per_value: f64,
+    /// Cost per row for CSR (loop + reduction overhead).
+    pub csr_per_row: f64,
+    /// Cost per non-zero for CSR (includes the per-value column index).
+    pub csr_per_value: f64,
+}
+
+impl Default for SelectorModel {
+    fn default() -> Self {
+        Self {
+            per_block: 3.0,
+            per_block_row: 1.6,
+            per_value: 1.0,
+            csr_per_row: 4.0,
+            csr_per_value: 2.2,
+        }
+    }
+}
+
+/// The selected storage format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FormatChoice {
+    Csr,
+    Spc5 { r: usize },
+}
+
+/// Selection result: the choice plus the evidence it was based on.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub choice: FormatChoice,
+    /// (r, stats, predicted cost) per candidate, in evaluation order.
+    pub candidates: Vec<(usize, FormatStats, f64)>,
+    pub csr_cost: f64,
+}
+
+impl SelectorModel {
+    pub fn spc5_cost(&self, s: &FormatStats) -> f64 {
+        s.nblocks as f64 * (self.per_block + self.per_block_row * s.r as f64)
+            + s.nnz as f64 * self.per_value
+    }
+
+    pub fn csr_cost<T: Scalar>(&self, m: &Csr<T>) -> f64 {
+        m.nrows as f64 * self.csr_per_row + m.nnz() as f64 * self.csr_per_value
+    }
+}
+
+/// Pick the best format for `m` under `model`.
+pub fn select_format<T: Scalar>(m: &Csr<T>, model: &SelectorModel) -> Selection {
+    let csr_cost = model.csr_cost(m);
+    let mut best: Option<(usize, f64)> = None;
+    let mut candidates = Vec::with_capacity(4);
+    for r in [1usize, 2, 4, 8] {
+        let stats = FormatStats::measure(m, r, T::VS);
+        let cost = model.spc5_cost(&stats);
+        if best.map_or(true, |(_, c)| cost < c) {
+            best = Some((r, cost));
+        }
+        candidates.push((r, stats, cost));
+    }
+    let (best_r, best_cost) = best.unwrap();
+    let choice = if best_cost < csr_cost {
+        FormatChoice::Spc5 { r: best_r }
+    } else {
+        FormatChoice::Csr
+    };
+    Selection { choice, candidates, csr_cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn dense_matrix_selects_large_blocks() {
+        let m: Csr<f64> = gen::dense(128, 1);
+        let sel = select_format(&m, &SelectorModel::default());
+        match sel.choice {
+            FormatChoice::Spc5 { r } => assert!(r >= 4, "picked r={r}"),
+            FormatChoice::Csr => panic!("dense must use SPC5"),
+        }
+    }
+
+    #[test]
+    fn scattered_matrix_falls_back_to_csr() {
+        // ~1 nnz per block: the paper says SPC5 loses below ~2 per block.
+        let m: Csr<f64> = gen::random_uniform(800, 3.0, 7);
+        let sel = select_format(&m, &SelectorModel::default());
+        assert_eq!(sel.choice, FormatChoice::Csr, "candidates: {:?}",
+            sel.candidates.iter().map(|(r, s, c)| (*r, s.nnz_per_block, *c)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn banded_fem_matrix_selects_spc5() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 600,
+            ncols: 600,
+            nnz_per_row: 30.0,
+            run_len: 7.0,
+            row_corr: 0.9,
+            ..Default::default()
+        }
+        .generate(3);
+        let sel = select_format(&m, &SelectorModel::default());
+        assert!(matches!(sel.choice, FormatChoice::Spc5 { .. }));
+    }
+
+    #[test]
+    fn candidates_carry_evidence() {
+        let m: Csr<f64> = gen::random_uniform(100, 5.0, 1);
+        let sel = select_format(&m, &SelectorModel::default());
+        assert_eq!(sel.candidates.len(), 4);
+        assert_eq!(sel.candidates.iter().map(|(r, _, _)| *r).collect::<Vec<_>>(), vec![1, 2, 4, 8]);
+        for (_, stats, cost) in &sel.candidates {
+            assert!(*cost > 0.0);
+            assert!(stats.filling > 0.0 && stats.filling <= 1.0);
+        }
+        assert!(sel.csr_cost > 0.0);
+    }
+
+    #[test]
+    fn model_prefers_fuller_blocks() {
+        let model = SelectorModel::default();
+        let loose: Csr<f64> = gen::random_uniform(300, 8.0, 2);
+        let tight: Csr<f64> = gen::Structured {
+            nrows: 300,
+            ncols: 300,
+            nnz_per_row: 8.0,
+            run_len: 8.0,
+            row_corr: 0.95,
+            ..Default::default()
+        }
+        .generate(2);
+        let c_loose = model.spc5_cost(&FormatStats::measure(&loose, 1, 8));
+        let c_tight = model.spc5_cost(&FormatStats::measure(&tight, 1, 8));
+        assert!(c_tight < c_loose);
+    }
+}

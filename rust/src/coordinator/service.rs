@@ -1,0 +1,339 @@
+//! The SpMV service: register matrices, submit requests, get results.
+//!
+//! Request path (all Rust, never Python): `submit` enqueues into the
+//! [`super::batch::Batcher`]; a dispatcher thread drains batches to the
+//! worker pool; each batch runs all its right-hand sides against the
+//! matrix's *selected* format back-to-back (matrix-traffic locality).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+
+use crate::coordinator::batch::Batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::selector::{select_format, FormatChoice, Selection, SelectorModel};
+use crate::kernels::native;
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::spc5::{csr_to_spc5, Spc5Matrix};
+use crate::util::timing::Timer;
+
+/// Handle to a registered matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MatrixId(pub u64);
+
+/// A registered matrix with its selected execution format.
+pub struct Stored<T: Scalar> {
+    pub csr: Csr<T>,
+    pub spc5: Option<Spc5Matrix<T>>,
+    pub selection: Selection,
+}
+
+impl<T: Scalar> Stored<T> {
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        match (&self.spc5, self.selection.choice) {
+            (Some(m), FormatChoice::Spc5 { .. }) => {
+                crate::kernels::native_avx512::spmv_spc5_auto(m, x, y)
+            }
+            _ => native::spmv_csr(&self.csr, x, y),
+        }
+    }
+}
+
+struct Shared<T: Scalar> {
+    matrices: RwLock<HashMap<MatrixId, Arc<Stored<T>>>>,
+    queue: Mutex<Batcher<MatrixId, Request<T>>>,
+    queue_cv: Condvar,
+    metrics: Metrics,
+    shutdown: Mutex<bool>,
+}
+
+struct Request<T: Scalar> {
+    x: Vec<T>,
+    enqueued: Timer,
+    reply: mpsc::Sender<Result<Vec<T>, ServiceError>>,
+}
+
+/// Service errors surfaced to callers.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ServiceError {
+    #[error("unknown matrix id {0:?}")]
+    UnknownMatrix(MatrixId),
+    #[error("dimension mismatch: x has {got}, matrix needs {want}")]
+    DimMismatch { got: usize, want: usize },
+    #[error("service is shut down")]
+    ShutDown,
+}
+
+/// The coordinator service. Dropping it joins the dispatcher and workers.
+pub struct SpmvService<T: Scalar> {
+    shared: Arc<Shared<T>>,
+    next_id: AtomicU64,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Scalar> SpmvService<T> {
+    /// `workers`: number of executor threads; `max_batch`: batch coalescing
+    /// limit (requests of one matrix executed back-to-back).
+    pub fn new(workers: usize, max_batch: usize) -> Self {
+        let shared = Arc::new(Shared {
+            matrices: RwLock::new(HashMap::new()),
+            queue: Mutex::new(Batcher::new(max_batch)),
+            queue_cv: Condvar::new(),
+            metrics: Metrics::new(),
+            shutdown: Mutex::new(false),
+        });
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("spc5-dispatcher".into())
+                .spawn(move || dispatcher_loop(shared, workers))
+                .expect("spawn dispatcher")
+        };
+        Self { shared, next_id: AtomicU64::new(1), dispatcher: Some(dispatcher) }
+    }
+
+    /// Register a matrix; the selector picks and pre-builds its format.
+    pub fn register(&self, csr: Csr<T>) -> MatrixId {
+        let selection = select_format(&csr, &SelectorModel::default());
+        let spc5 = match selection.choice {
+            FormatChoice::Spc5 { r } => Some(csr_to_spc5(&csr, r, T::VS)),
+            FormatChoice::Csr => None,
+        };
+        let id = MatrixId(self.next_id.fetch_add(1, Ordering::SeqCst));
+        self.shared
+            .matrices
+            .write()
+            .expect("matrices lock")
+            .insert(id, Arc::new(Stored { csr, spc5, selection }));
+        id
+    }
+
+    /// The selection evidence for a registered matrix.
+    pub fn selection(&self, id: MatrixId) -> Option<Selection> {
+        self.shared
+            .matrices
+            .read()
+            .expect("matrices lock")
+            .get(&id)
+            .map(|s| s.selection.clone())
+    }
+
+    /// Submit an SpMV asynchronously; the receiver yields `y = A·x`.
+    pub fn submit(
+        &self,
+        id: MatrixId,
+        x: Vec<T>,
+    ) -> mpsc::Receiver<Result<Vec<T>, ServiceError>> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.metrics.record_request();
+        // Validate eagerly so the error is immediate.
+        let want = {
+            let map = self.shared.matrices.read().expect("matrices lock");
+            match map.get(&id) {
+                None => {
+                    self.shared.metrics.record_error();
+                    let _ = tx.send(Err(ServiceError::UnknownMatrix(id)));
+                    return rx;
+                }
+                Some(s) => s.csr.ncols,
+            }
+        };
+        if x.len() != want {
+            self.shared.metrics.record_error();
+            let _ = tx.send(Err(ServiceError::DimMismatch { got: x.len(), want }));
+            return rx;
+        }
+        {
+            let mut q = self.shared.queue.lock().expect("queue lock");
+            q.push(id, Request { x, enqueued: Timer::start(), reply: tx });
+        }
+        self.shared.queue_cv.notify_one();
+        rx
+    }
+
+    /// Synchronous SpMV (submit + wait).
+    pub fn spmv(&self, id: MatrixId, x: Vec<T>) -> Result<Vec<T>, ServiceError> {
+        self.submit(id, x).recv().map_err(|_| ServiceError::ShutDown)?
+    }
+
+    /// Metrics snapshot as JSON.
+    pub fn metrics_json(&self) -> crate::util::json::Json {
+        self.shared.metrics.snapshot()
+    }
+}
+
+impl<T: Scalar> Drop for SpmvService<T> {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().expect("shutdown lock") = true;
+        self.shared.queue_cv.notify_all();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
+    let pool = crate::parallel::ThreadPool::new(workers.max(1));
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().expect("queue lock");
+            loop {
+                if let Some(b) = q.pop_batch() {
+                    break Some(b);
+                }
+                if *shared.shutdown.lock().expect("shutdown lock") {
+                    break None;
+                }
+                q = shared.queue_cv.wait(q).expect("queue wait");
+            }
+        };
+        let Some(batch) = batch else { break };
+        let stored = {
+            let map = shared.matrices.read().expect("matrices lock");
+            map.get(&batch.key).cloned()
+        };
+        shared.metrics.record_batch(batch.items.len());
+        match stored {
+            None => {
+                for req in batch.items {
+                    shared.metrics.record_error();
+                    let _ = req.reply.send(Err(ServiceError::UnknownMatrix(batch.key)));
+                }
+            }
+            Some(stored) => {
+                let shared = Arc::clone(&shared);
+                pool.submit(move || {
+                    let flops = 2 * stored.csr.nnz() as u64;
+                    match (&stored.spc5, batch.items.len()) {
+                        // Fused multi-vector pass: the matrix stream is read
+                        // once for the whole batch (kernels::native::
+                        // spmv_spc5_multi) — the batching win of §Perf.
+                        (Some(m), n) if n > 1 => {
+                            let xs: Vec<&[T]> =
+                                batch.items.iter().map(|r| r.x.as_slice()).collect();
+                            let mut ys: Vec<Vec<T>> =
+                                (0..n).map(|_| vec![T::zero(); stored.csr.nrows]).collect();
+                            native::spmv_spc5_multi(m, &xs, &mut ys);
+                            for (req, y) in batch.items.into_iter().zip(ys) {
+                                shared
+                                    .metrics
+                                    .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
+                                let _ = req.reply.send(Ok(y));
+                            }
+                        }
+                        // Single request (or CSR-selected matrix): plain path.
+                        _ => {
+                            for req in batch.items {
+                                let mut y = vec![T::zero(); stored.csr.nrows];
+                                stored.spmv(&req.x, &mut y);
+                                shared
+                                    .metrics
+                                    .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
+                                let _ = req.reply.send(Ok(y));
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    }
+    pool.wait_idle();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    fn service() -> (SpmvService<f64>, MatrixId, Csr<f64>) {
+        let svc = SpmvService::new(2, 8);
+        let m: Csr<f64> = gen::Structured {
+            nrows: 120,
+            ncols: 120,
+            nnz_per_row: 9.0,
+            run_len: 4.0,
+            row_corr: 0.7,
+            ..Default::default()
+        }
+        .generate(5);
+        let id = svc.register(m.clone());
+        (svc, id, m)
+    }
+
+    #[test]
+    fn sync_spmv_matches_reference() {
+        let (svc, id, m) = service();
+        let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.2).sin()).collect();
+        let mut want = vec![0.0; 120];
+        m.spmv(&x, &mut want);
+        let got = svc.spmv(id, x).unwrap();
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-13);
+    }
+
+    #[test]
+    fn async_requests_all_complete() {
+        let (svc, id, m) = service();
+        let xs: Vec<Vec<f64>> = (0..20)
+            .map(|k| (0..120).map(|i| ((i + k) % 7) as f64).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit(id, x.clone())).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let y = rx.recv().unwrap().unwrap();
+            let mut want = vec![0.0; 120];
+            m.spmv(x, &mut want);
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-13);
+        }
+        let snap = svc.metrics_json().to_string();
+        assert!(snap.contains("\"completed\":20"), "{snap}");
+    }
+
+    #[test]
+    fn error_paths() {
+        let (svc, id, _) = service();
+        assert_eq!(
+            svc.spmv(MatrixId(999), vec![0.0; 120]),
+            Err(ServiceError::UnknownMatrix(MatrixId(999)))
+        );
+        assert_eq!(
+            svc.spmv(id, vec![0.0; 5]),
+            Err(ServiceError::DimMismatch { got: 5, want: 120 })
+        );
+    }
+
+    #[test]
+    fn selection_exposed() {
+        let (svc, id, _) = service();
+        let sel = svc.selection(id).unwrap();
+        assert_eq!(sel.candidates.len(), 4);
+    }
+
+    #[test]
+    fn multiple_matrices_batched_independently() {
+        let svc = SpmvService::new(2, 4);
+        let a: Csr<f64> = gen::random_uniform(50, 4.0, 1);
+        let b: Csr<f64> = gen::random_uniform(70, 4.0, 2);
+        let ida = svc.register(a.clone());
+        let idb = svc.register(b.clone());
+        let xa = vec![1.0; 50];
+        let xb = vec![1.0; 70];
+        let rx1 = svc.submit(ida, xa.clone());
+        let rx2 = svc.submit(idb, xb.clone());
+        let rx3 = svc.submit(ida, xa.clone());
+        let y1 = rx1.recv().unwrap().unwrap();
+        let y2 = rx2.recv().unwrap().unwrap();
+        let y3 = rx3.recv().unwrap().unwrap();
+        assert_eq!(y1.len(), 50);
+        assert_eq!(y2.len(), 70);
+        crate::scalar::assert_allclose(&y3, &y1, 0.0, 0.0);
+    }
+
+    #[test]
+    fn clean_shutdown_under_load() {
+        let (svc, id, _) = service();
+        for _ in 0..50 {
+            let _ = svc.submit(id, vec![1.0; 120]);
+        }
+        drop(svc); // must join without deadlock
+    }
+}

@@ -1,0 +1,179 @@
+//! Vectorized CSR SpMV — the stand-in for Intel MKL's inspector-executor
+//! CSR kernel that Table 2(b) and Figs 6/7 compare against.
+//!
+//! Structure: each row is processed in `VS`-wide chunks; values and column
+//! indices load contiguously, the x elements come through a gather, the row
+//! ends with a horizontal reduction. This is the canonical vectorization of
+//! CSR (and what makes SPC5's *contiguous* x-window loads interesting by
+//! contrast: a gather pays per-lane).
+
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::simd::avx512;
+use crate::simd::trace::{Op, SimCtx};
+use crate::simd::vreg::{vslice, vslice_u32, AddressSpace, VReg};
+
+/// AVX-512 gather-based CSR SpMV (`y = A·x`).
+pub fn spmv_csr_avx512<T: Scalar>(ctx: &mut SimCtx, m: &Csr<T>, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let vs = ctx.vs;
+    let mut space = AddressSpace::new();
+    let vals = vslice(&mut space, &m.vals);
+    let cols = vslice_u32(&mut space, &m.col_idx);
+    let xs = vslice(&mut space, x);
+    let ybase = space.alloc(y.len() * T::BYTES);
+
+    for r in 0..m.nrows {
+        let (lo, hi) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+        ctx.op(Op::SLoad); // row_ptr
+        let mut acc = VReg::<T>::zero(vs);
+        let mut i = lo;
+        while i < hi {
+            let chunk = (hi - i).min(vs);
+            // Load up to VS values and column indices contiguously.
+            let v = avx512::loadu(ctx, &vals, i);
+            ctx.op(Op::VLoad);
+            ctx.mem(cols.addr(i), (chunk * 4) as u32, false);
+            // Gather x by the column indices (per-lane transactions). The
+            // hardware gathers 8 lanes per uop-group; wider chunks (f32)
+            // cost proportionally more.
+            let idxs: Vec<u32> = m.col_idx[i..i + chunk].to_vec();
+            ctx.ops(crate::simd::trace::Op::VGather, (chunk as u64).div_ceil(8) - 1);
+            let xv = avx512::gather(ctx, &xs, &idxs);
+            // Mask the tail lanes of the value vector.
+            let v = if chunk == vs {
+                v
+            } else {
+                ctx.op(Op::KMov);
+                let mut t = v;
+                for lane in chunk..vs {
+                    t.lanes[lane] = T::zero();
+                }
+                t
+            };
+            acc = avx512::fmadd(ctx, &v, &xv, &acc);
+            ctx.op(Op::SInt);
+            i += chunk;
+        }
+        let sum = avx512::reduce_add(ctx, &acc);
+        ctx.op(Op::SStore);
+        ctx.mem(ybase + (r * T::BYTES) as u64, T::BYTES as u32, true);
+        y[r] = sum;
+    }
+}
+
+/// SVE gather-based CSR SpMV (`y = A·x`) — same structure with predicated
+/// tails instead of mask registers.
+pub fn spmv_csr_sve<T: Scalar>(ctx: &mut SimCtx, m: &Csr<T>, x: &[T], y: &mut [T]) {
+    use crate::simd::sve;
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let vs = ctx.vs;
+    let mut space = AddressSpace::new();
+    let vals = vslice(&mut space, &m.vals);
+    let cols = vslice_u32(&mut space, &m.col_idx);
+    let xs = vslice(&mut space, x);
+    let ybase = space.alloc(y.len() * T::BYTES);
+
+    for r in 0..m.nrows {
+        let (lo, hi) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+        ctx.op(Op::SLoad);
+        let mut acc = VReg::<T>::zero(vs);
+        let mut i = lo;
+        while i < hi {
+            let chunk = (hi - i).min(vs);
+            let pred = sve::svwhilelt(ctx, chunk);
+            let v = sve::svld1(ctx, &pred, &vals, i);
+            ctx.op(Op::SvLoad);
+            ctx.mem(cols.addr(i), (chunk * 4) as u32, false);
+            // SVE gather: per-lane transactions, modeled like AVX's
+            // (8-lane hardware groups).
+            ctx.ops(Op::VGather, (chunk as u64).div_ceil(8));
+            let mut xv = VReg::<T>::zero(vs);
+            for (lane, &c) in m.col_idx[i..i + chunk].iter().enumerate() {
+                ctx.mem(xs.addr(c as usize), T::BYTES as u32, false);
+                xv.lanes[lane] = x[c as usize];
+            }
+            acc = sve::svmla(ctx, &acc, &v, &xv);
+            ctx.op(Op::SInt);
+            i += chunk;
+        }
+        let sum = sve::svaddv(ctx, &acc);
+        ctx.op(Op::SStore);
+        ctx.mem(ybase + (r * T::BYTES) as u64, T::BYTES as u32, true);
+        y[r] = sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::simd::trace::CountingSink;
+
+    fn check_kernel(f: impl Fn(&mut SimCtx, &Csr<f64>, &[f64], &mut [f64]), vs: usize) {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 64,
+            ncols: 80,
+            nnz_per_row: 11.0,
+            run_len: 2.0,
+            row_corr: 0.3,
+            ..Default::default()
+        }
+        .generate(5);
+        let x: Vec<f64> = (0..80).map(|i| (i as f64 * 0.3).cos()).collect();
+        let mut want = vec![0.0; 64];
+        m.spmv(&x, &mut want);
+        let mut sink = CountingSink::new();
+        let mut got = vec![0.0; 64];
+        {
+            let mut ctx = SimCtx::new(vs, &mut sink);
+            f(&mut ctx, &m, &x, &mut got);
+        }
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+        // One gather per VS-chunk; at least nnz/VS of them.
+        assert!(sink.count(Op::VGather) as usize >= m.nnz() / vs);
+    }
+
+    #[test]
+    fn avx512_csr_correct() {
+        check_kernel(spmv_csr_avx512, 8);
+    }
+
+    #[test]
+    fn sve_csr_correct() {
+        check_kernel(spmv_csr_sve, 8);
+    }
+
+    #[test]
+    fn gather_traffic_is_per_lane() {
+        // A row of 8 nnz with VS=8 must cost 8 single-element transactions
+        // for x (the gather penalty SPC5 avoids).
+        let m: Csr<f64> = gen::random_uniform(1, 8.0, 3);
+        let x = vec![1.0; m.ncols];
+        let mut y = vec![0.0; 1];
+        let mut sink = CountingSink::new();
+        {
+            let mut ctx = SimCtx::new(8, &mut sink);
+            spmv_csr_avx512(&mut ctx, &m, &x, &mut y);
+        }
+        // loads: vals-vector + cols-vector + per-lane x.
+        assert!(sink.loads >= 2 + m.nnz() as u64);
+    }
+
+    #[test]
+    fn empty_rows_produce_zero() {
+        let mut coo = crate::matrix::Coo::<f64>::new(3, 3);
+        coo.push(0, 0, 2.0);
+        let m = Csr::from_coo(coo);
+        let x = vec![1.0, 1.0, 1.0];
+        let mut y = vec![9.0; 3];
+        let mut sink = CountingSink::new();
+        {
+            let mut ctx = SimCtx::new(8, &mut sink);
+            spmv_csr_avx512(&mut ctx, &m, &x, &mut y);
+        }
+        assert_eq!(y, vec![2.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,216 @@
+//! Kernel configuration surface shared by the bench harness, the CLI and the
+//! coordinator's format selector.
+
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::simd::trace::{CostSink, SimCtx};
+use crate::spc5::{csr_to_spc5, Spc5Matrix};
+
+/// Which simulated ISA a kernel runs on (the paper's two testbeds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimIsa {
+    /// Intel Cascade Lake, AVX-512.
+    Avx512,
+    /// Fujitsu A64FX, SVE (512-bit).
+    Sve,
+}
+
+impl SimIsa {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimIsa::Avx512 => "Intel-AVX512",
+            SimIsa::Sve => "Fujitsu-SVE",
+        }
+    }
+}
+
+/// §3.2 y-update strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Reduction {
+    /// One native horizontal-sum per accumulator (`svaddv` /
+    /// `_mm512_reduce_add`), then scalar updates of y.
+    Native,
+    /// Manual multi-reduction of all r accumulators into one vector, then a
+    /// single vector update of y.
+    Manual,
+}
+
+/// §3.1 x-load strategy (SVE only; AVX-512 always loads the full window).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum XLoad {
+    /// One full-width x load per block, compacted per row.
+    Single,
+    /// One predicated x load per block-row.
+    Partial,
+}
+
+/// A fully-specified kernel for the comparison tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Scalar CSR — the baseline of every speedup in the paper.
+    ScalarCsr,
+    /// Scalar SPC5 (Algorithm 1, blue lines).
+    ScalarSpc5 { r: usize },
+    /// Vectorized CSR with gathers (Table 2(b)'s MKL stand-in on AVX-512).
+    CsrVec,
+    /// SPC5 β(r,VS) vector kernel.
+    Spc5 { r: usize, x_load: XLoad, reduction: Reduction },
+    /// Hybrid scalar/vector SPC5 (paper §5 future work; ablation).
+    Hybrid { r: usize, threshold: u32 },
+}
+
+impl KernelKind {
+    /// Display label matching the paper's terminology.
+    pub fn label(self) -> String {
+        match self {
+            KernelKind::ScalarCsr => "scalar".into(),
+            KernelKind::ScalarSpc5 { r } => format!("scalar-spc5 beta({r},VS)"),
+            KernelKind::CsrVec => "csr-vec (MKL-like)".into(),
+            KernelKind::Spc5 { r, .. } => format!("beta({r},VS)"),
+            KernelKind::Hybrid { r, threshold } => format!("hybrid beta({r},VS) t={threshold}"),
+        }
+    }
+}
+
+/// A kernel bound to an ISA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct KernelCfg {
+    pub isa: SimIsa,
+    pub kind: KernelKind,
+}
+
+/// Owns the per-(r) SPC5 conversions of one matrix so repeated kernel runs
+/// do not re-convert. The benches and the coordinator build one per matrix.
+pub struct MatrixSet<T: Scalar> {
+    pub csr: Csr<T>,
+    spc5: std::collections::HashMap<usize, Spc5Matrix<T>>,
+}
+
+impl<T: Scalar> MatrixSet<T> {
+    pub fn new(csr: Csr<T>) -> Self {
+        Self { csr, spc5: std::collections::HashMap::new() }
+    }
+
+    /// Get (convert once) the β(r,VS) form.
+    pub fn spc5(&mut self, r: usize) -> &Spc5Matrix<T> {
+        let csr = &self.csr;
+        self.spc5.entry(r).or_insert_with(|| csr_to_spc5(csr, r, T::VS))
+    }
+
+    /// Pre-convert all four β sizes.
+    pub fn prepare_all(&mut self) {
+        for r in [1, 2, 4, 8] {
+            self.spc5(r);
+        }
+    }
+}
+
+/// Run one simulated kernel over `sink`, returning `y`. Central entry point
+/// used by the bench harness (one call per table cell).
+pub fn run_simulated<T: Scalar>(
+    cfg: KernelCfg,
+    set: &mut MatrixSet<T>,
+    x: &[T],
+    sink: &mut dyn CostSink,
+) -> Vec<T> {
+    let mut y = vec![T::zero(); set.csr.nrows];
+    let mut ctx = SimCtx::new(T::VS, sink);
+    match cfg.kind {
+        KernelKind::ScalarCsr => {
+            super::scalar::spmv_scalar_csr(&mut ctx, &set.csr, x, &mut y);
+        }
+        KernelKind::ScalarSpc5 { r } => {
+            let m = set.spc5(r).clone();
+            super::scalar::spmv_scalar_spc5(&mut ctx, &m, x, &mut y);
+        }
+        KernelKind::CsrVec => match cfg.isa {
+            SimIsa::Avx512 => super::csr_vec::spmv_csr_avx512(&mut ctx, &set.csr, x, &mut y),
+            SimIsa::Sve => super::csr_vec::spmv_csr_sve(&mut ctx, &set.csr, x, &mut y),
+        },
+        KernelKind::Spc5 { r, x_load, reduction } => {
+            let m = set.spc5(r).clone();
+            match cfg.isa {
+                SimIsa::Avx512 => {
+                    super::spc5_avx512::spmv_spc5_avx512(&mut ctx, &m, x, &mut y, reduction)
+                }
+                SimIsa::Sve => {
+                    super::spc5_sve::spmv_spc5_sve(&mut ctx, &m, x, &mut y, x_load, reduction)
+                }
+            }
+        }
+        KernelKind::Hybrid { r, threshold } => {
+            let m = set.spc5(r).clone();
+            super::hybrid::spmv_hybrid_avx512(&mut ctx, &m, x, &mut y, threshold);
+        }
+    }
+    y
+}
+
+/// Floating point operations of one SpMV (the paper counts 2 per nnz).
+pub fn flops_of<T: Scalar>(set: &MatrixSet<T>) -> u64 {
+    2 * set.csr.nnz() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::simd::trace::CountingSink;
+
+    #[test]
+    fn all_kernel_kinds_agree() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 48,
+            ncols: 64,
+            nnz_per_row: 6.0,
+            run_len: 2.5,
+            row_corr: 0.4,
+            ..Default::default()
+        }
+        .generate(21);
+        let x: Vec<f64> = (0..64).map(|i| 0.5 + (i % 5) as f64).collect();
+        let mut want = vec![0.0; 48];
+        csr.spmv(&x, &mut want);
+
+        let mut set = MatrixSet::new(csr);
+        let kinds = [
+            KernelKind::ScalarCsr,
+            KernelKind::ScalarSpc5 { r: 2 },
+            KernelKind::CsrVec,
+            KernelKind::Spc5 { r: 4, x_load: XLoad::Single, reduction: Reduction::Manual },
+            KernelKind::Spc5 { r: 1, x_load: XLoad::Partial, reduction: Reduction::Native },
+            KernelKind::Hybrid { r: 2, threshold: 3 },
+        ];
+        for isa in [SimIsa::Avx512, SimIsa::Sve] {
+            for kind in kinds {
+                let mut sink = CountingSink::new();
+                let y = run_simulated(KernelCfg { isa, kind }, &mut set, &x, &mut sink);
+                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_set_caches_conversions() {
+        let csr: Csr<f64> = gen::random_uniform(30, 4.0, 2);
+        let mut set = MatrixSet::new(csr);
+        let p1 = set.spc5(4) as *const _;
+        let p2 = set.spc5(4) as *const _;
+        assert_eq!(p1, p2);
+        set.prepare_all();
+        assert_eq!(set.spc5.len(), 4);
+    }
+
+    #[test]
+    fn labels_and_flops() {
+        assert_eq!(KernelKind::ScalarCsr.label(), "scalar");
+        assert_eq!(
+            KernelKind::Spc5 { r: 4, x_load: XLoad::Single, reduction: Reduction::Manual }
+                .label(),
+            "beta(4,VS)"
+        );
+        assert_eq!(SimIsa::Sve.name(), "Fujitsu-SVE");
+        let set = MatrixSet::new(gen::random_uniform::<f64>(10, 3.0, 1));
+        assert_eq!(flops_of(&set), 2 * set.csr.nnz() as u64);
+    }
+}

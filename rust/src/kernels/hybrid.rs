@@ -1,0 +1,184 @@
+//! Hybrid scalar/vector SPC5 kernel — the paper's §5 future-work idea:
+//! "a format where we could have blocks of different sizes including blocks
+//! of scalar, to avoid using vectorial instructions when there is no
+//! benefit."
+//!
+//! Implemented as a per-block dynamic dispatch on the block's non-zero
+//! count: blocks with fewer than `threshold` values take the scalar bit-loop
+//! (no vector setup cost), denser blocks take the AVX-512 expand path. The
+//! `ablation_blocksize` bench sweeps the threshold to find where the
+//! crossover sits — testing the hypothesis directly in the cost model.
+
+use crate::scalar::Scalar;
+use crate::simd::avx512 as v;
+use crate::simd::trace::{Op, SimCtx};
+use crate::simd::vreg::{vslice, vslice_u32, AddressSpace, VReg};
+use crate::spc5::Spc5Matrix;
+
+/// Hybrid SPC5 SpMV (AVX-512 flavour): blocks with `< threshold` non-zeros
+/// run scalar, the rest vectorized. `threshold = 0` is pure-vector,
+/// `threshold > r*VS` is pure-scalar.
+pub fn spmv_hybrid_avx512<T: Scalar>(
+    ctx: &mut SimCtx,
+    m: &Spc5Matrix<T>,
+    x: &[T],
+    y: &mut [T],
+    threshold: u32,
+) {
+    assert_eq!(m.width, ctx.vs, "SIMD kernel requires width == VS");
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let vs = ctx.vs;
+    let mut space = AddressSpace::new();
+    let vals = vslice(&mut space, &m.vals);
+    let cols = vslice_u32(&mut space, &m.block_colidx);
+    let masks_base = space.alloc(m.masks.len() * m.mask_bytes());
+    let xs = vslice(&mut space, x);
+    let ybase = space.alloc(y.len() * T::BYTES);
+
+    let mut idx_val = 0usize;
+    for p in 0..m.npanels() {
+        let row0 = p * m.r;
+        let rows_here = m.r.min(m.nrows - row0);
+        let mut sums = vec![T::zero(); m.r];
+        let mut vsums: Vec<VReg<T>> = (0..m.r).map(|_| VReg::zero(vs)).collect();
+
+        for b in m.panel_blocks(p) {
+            ctx.op(Op::SLoad);
+            ctx.mem(cols.addr(b), 4, false);
+            let col = m.block_colidx[b] as usize;
+
+            // Block nnz from the masks (one popcount per row; in the real
+            // format this would be a precomputed per-block byte).
+            let mut block_nnz = 0u32;
+            for j in 0..m.r {
+                block_nnz += m.masks[b * m.r + j].count_ones();
+            }
+            ctx.ops(Op::Popcnt, m.r as u64);
+            ctx.op(Op::SInt); // threshold branch
+
+            if block_nnz < threshold {
+                // Scalar path: bit loop, no vector setup.
+                for (j, sum) in sums.iter_mut().enumerate().take(m.r) {
+                    ctx.op(Op::SLoad);
+                    ctx.mem(
+                        masks_base + ((b * m.r + j) * m.mask_bytes()) as u64,
+                        m.mask_bytes() as u32,
+                        false,
+                    );
+                    let mut mask = m.masks[b * m.r + j];
+                    while mask != 0 {
+                        let k = mask.trailing_zeros() as usize;
+                        ctx.op(Op::SInt);
+                        ctx.op(Op::SLoad);
+                        ctx.mem(vals.addr(idx_val), T::BYTES as u32, false);
+                        ctx.op(Op::SLoad);
+                        ctx.mem(xs.addr(col + k), T::BYTES as u32, false);
+                        ctx.op(Op::SFma);
+                        *sum += m.vals[idx_val] * x[col + k];
+                        idx_val += 1;
+                        mask &= mask - 1;
+                    }
+                }
+            } else {
+                // Vector path (same as the plain AVX-512 kernel).
+                let x_vec = v::loadu(ctx, &xs, col);
+                for (j, vsum) in vsums.iter_mut().enumerate().take(m.r) {
+                    ctx.op(Op::SLoad);
+                    ctx.mem(
+                        masks_base + ((b * m.r + j) * m.mask_bytes()) as u64,
+                        m.mask_bytes() as u32,
+                        false,
+                    );
+                    let mask = m.masks[b * m.r + j] as u64;
+                    let vblock = v::maskz_expandloadu(ctx, mask, &vals, idx_val);
+                    *vsum = v::fmadd(ctx, &vblock, &x_vec, vsum);
+                    ctx.op(Op::Popcnt);
+                    ctx.op(Op::SInt);
+                    idx_val += mask.count_ones() as usize;
+                }
+            }
+        }
+
+        // Combine both accumulators into y.
+        let red = v::multi_reduce(ctx, &vsums);
+        for j in 0..rows_here {
+            ctx.op(Op::SLoad);
+            ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, false);
+            ctx.op(Op::SFma);
+            ctx.op(Op::SStore);
+            ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, true);
+            y[row0 + j] += sums[j] + red.lanes[j];
+        }
+    }
+    debug_assert_eq!(idx_val, m.nnz());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Csr};
+    use crate::simd::trace::CountingSink;
+    use crate::spc5::csr_to_spc5;
+
+    fn fixture() -> (Csr<f64>, Vec<f64>, Vec<f64>) {
+        // Mix of dense runs and scattered singletons so both paths trigger.
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 60,
+            ncols: 100,
+            nnz_per_row: 8.0,
+            run_len: 4.0,
+            row_corr: 0.3,
+            skew: 0.5,
+            bandwidth: None,
+        }
+        .generate(17);
+        let x: Vec<f64> = (0..100).map(|i| 1.0 + (i % 7) as f64 * 0.25).collect();
+        let mut want = vec![0.0; 60];
+        csr.spmv(&x, &mut want);
+        (csr, x, want)
+    }
+
+    #[test]
+    fn hybrid_correct_across_thresholds() {
+        let (csr, x, want) = fixture();
+        for r in [1usize, 2, 4] {
+            let m = csr_to_spc5(&csr, r, 8);
+            for threshold in [0u32, 2, 4, 8, 64] {
+                let mut sink = CountingSink::new();
+                let mut y = vec![0.0; 60];
+                {
+                    let mut ctx = SimCtx::new(8, &mut sink);
+                    spmv_hybrid_avx512(&mut ctx, &m, &x, &mut y, threshold);
+                }
+                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_extremes_select_single_path() {
+        let (csr, x, _) = fixture();
+        let m = csr_to_spc5(&csr, 2, 8);
+        let run = |t: u32| {
+            let mut sink = CountingSink::new();
+            let mut y = vec![0.0; 60];
+            {
+                let mut ctx = SimCtx::new(8, &mut sink);
+                spmv_hybrid_avx512(&mut ctx, &m, &x, &mut y, t);
+            }
+            sink
+        };
+        // The y update itself charges one scalar FMA per row in all modes.
+        let y_fmas = m.nrows as u64;
+        let pure_vec = run(0);
+        assert_eq!(pure_vec.count(Op::VExpandLoad), (m.nblocks() * m.r) as u64);
+        assert_eq!(pure_vec.count(Op::SFma), y_fmas);
+        let pure_scalar = run(1000);
+        assert_eq!(pure_scalar.count(Op::VExpandLoad), 0);
+        assert_eq!(pure_scalar.count(Op::SFma), m.nnz() as u64 + y_fmas);
+        let mixed = run(4);
+        assert!(mixed.count(Op::VExpandLoad) > 0);
+        assert!(mixed.count(Op::SFma) > 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! SpMV kernels.
+//!
+//! Two families:
+//!
+//! - **Simulated ISA kernels** (`scalar`, `csr_vec`, `spc5_avx512`,
+//!   `spc5_sve`): the paper's kernels written against the
+//!   [`crate::simd`] simulator. They compute exact numerics *and* emit the
+//!   instruction/memory trace the performance model consumes. These
+//!   regenerate the paper's tables and figures.
+//! - **Native kernels** (`native`, `hybrid`): optimized plain-Rust hot paths
+//!   measured by wall-clock on this host (`benches/native_hotpath.rs`) — the
+//!   performance-optimized deliverable.
+//!
+//! [`dispatch`] provides the unified configuration surface used by the bench
+//! harness and the coordinator.
+
+pub mod csr_vec;
+pub mod dispatch;
+pub mod hybrid;
+pub mod native;
+pub mod native_avx512;
+pub mod scalar;
+pub mod spc5_avx512;
+pub mod spc5_sve;
+
+pub use dispatch::{KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad};

@@ -1,0 +1,315 @@
+//! Native host kernels — the wall-clock hot path of this framework.
+//!
+//! These run real SpMV on the build host (no simulator) and are what the
+//! coordinator service and the solvers execute. `benches/native_hotpath.rs`
+//! measures them; EXPERIMENTS.md §Perf records the optimization iterations.
+//!
+//! The SPC5 layout helps a *scalar* host too: one column index per block
+//! instead of per non-zero, values walked strictly sequentially, and the
+//! mask iterated with `trailing_zeros` (one branch per non-zero instead of
+//! one per block column).
+
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::spc5::Spc5Matrix;
+
+/// Native CSR SpMV (`y = A·x`), inner loop unrolled by 4 to break the
+/// accumulator dependency chain.
+pub fn spmv_csr<T: Scalar>(m: &Csr<T>, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    for r in 0..m.nrows {
+        let lo = m.row_ptr[r] as usize;
+        let hi = m.row_ptr[r + 1] as usize;
+        let cols = &m.col_idx[lo..hi];
+        let vals = &m.vals[lo..hi];
+        let n = cols.len();
+        let mut s0 = T::zero();
+        let mut s1 = T::zero();
+        let mut s2 = T::zero();
+        let mut s3 = T::zero();
+        let chunks = n / 4 * 4;
+        let mut i = 0;
+        while i < chunks {
+            s0 = vals[i].mul_add(x[cols[i] as usize], s0);
+            s1 = vals[i + 1].mul_add(x[cols[i + 1] as usize], s1);
+            s2 = vals[i + 2].mul_add(x[cols[i + 2] as usize], s2);
+            s3 = vals[i + 3].mul_add(x[cols[i + 3] as usize], s3);
+            i += 4;
+        }
+        while i < n {
+            s0 = vals[i].mul_add(x[cols[i] as usize], s0);
+            i += 1;
+        }
+        y[r] = (s0 + s1) + (s2 + s3);
+    }
+}
+
+/// Native SPC5 SpMV (`y = A·x`), any `r`/`width`. Walks mask bits with
+/// `trailing_zeros`, so the per-block cost is proportional to the block's
+/// non-zero count plus a small constant — the format's design goal.
+///
+/// §Perf: the inner loop uses unchecked indexing. Safety rests on the format
+/// invariant (`Spc5Matrix::check`): every mask bit `k` addresses column
+/// `block_colidx[b] + k < ncols`, and the total mask popcount equals
+/// `vals.len()`; both are enforced by the converter and validated by the
+/// property suite. The checked path is kept under `debug_assertions`.
+pub fn spmv_spc5<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    debug_assert!(m.check().is_ok());
+    let r = m.r;
+    let vals = m.vals.as_ptr();
+    let nnz = m.vals.len();
+    let mut idx_val = 0usize;
+    // Stack accumulators for up to r = 8.
+    let mut sums = [T::zero(); 8];
+    for p in 0..m.npanels() {
+        let row0 = p * r;
+        let rows_here = r.min(m.nrows - row0);
+        sums[..r].fill(T::zero());
+        for b in m.panel_blocks(p) {
+            // SAFETY: b < nblocks (panel_blocks is bounded by block_rowptr),
+            // and the format invariant bounds col + bit < ncols.
+            let col = unsafe { *m.block_colidx.get_unchecked(b) } as usize;
+            let xwin = unsafe { x.as_ptr().add(col) };
+            let mrow = b * r;
+            for (j, sum) in sums.iter_mut().enumerate().take(r) {
+                let mut mask = unsafe { *m.masks.get_unchecked(mrow + j) };
+                while mask != 0 {
+                    let k = mask.trailing_zeros() as usize;
+                    debug_assert!(idx_val < nnz && col + k < m.ncols);
+                    // SAFETY: idx_val < nnz (mask popcounts sum to nnz) and
+                    // col + k < ncols (format invariant).
+                    unsafe {
+                        *sum = (*vals.add(idx_val)).mul_add(*xwin.add(k), *sum);
+                    }
+                    idx_val += 1;
+                    mask &= mask - 1;
+                }
+            }
+        }
+        for j in 0..rows_here {
+            y[row0 + j] = sums[j];
+        }
+    }
+    debug_assert_eq!(idx_val, nnz);
+}
+
+/// Multi-vector SPC5 SpMV: `Y[v] = A·X[v]` for `K` right-hand sides in one
+/// matrix pass. The matrix stream (values, column indices, masks) is read
+/// once and reused across all K vectors — the coordinator's batching win,
+/// since SpMV is matrix-traffic bound (§Perf iteration 3).
+pub fn spmv_spc5_multi<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mut [Vec<T>]) {
+    assert_eq!(xs.len(), ys.len());
+    let k = xs.len();
+    if k == 0 {
+        return;
+    }
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        assert_eq!(x.len(), m.ncols);
+        assert_eq!(y.len(), m.nrows);
+    }
+    let r = m.r;
+    // Accumulators: [vector][row-of-panel]; K is unbounded so heap-allocate
+    // once per call (outside the hot loop).
+    let mut sums = vec![T::zero(); k * r];
+    let vals = m.vals.as_ptr();
+    let mut idx_val = 0usize;
+    for p in 0..m.npanels() {
+        let row0 = p * r;
+        let rows_here = r.min(m.nrows - row0);
+        sums.fill(T::zero());
+        for b in m.panel_blocks(p) {
+            let col = unsafe { *m.block_colidx.get_unchecked(b) } as usize;
+            let mrow = b * r;
+            for j in 0..r {
+                let mut mask = unsafe { *m.masks.get_unchecked(mrow + j) };
+                while mask != 0 {
+                    let kbit = mask.trailing_zeros() as usize;
+                    // One value load serves all K vectors.
+                    let v = unsafe { *vals.add(idx_val) };
+                    for (vi, x) in xs.iter().enumerate() {
+                        // SAFETY: same invariants as spmv_spc5.
+                        unsafe {
+                            let s = sums.get_unchecked_mut(vi * r + j);
+                            *s = v.mul_add(*x.as_ptr().add(col + kbit), *s);
+                        }
+                    }
+                    idx_val += 1;
+                    mask &= mask - 1;
+                }
+            }
+        }
+        for (vi, y) in ys.iter_mut().enumerate() {
+            for j in 0..rows_here {
+                y[row0 + j] = sums[vi * r + j];
+            }
+        }
+    }
+    debug_assert_eq!(idx_val, m.nnz());
+}
+
+/// `y = A·x` accumulating into y (`y += A·x`) — used by the solvers to fuse
+/// the residual update.
+pub fn spmv_spc5_acc<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let r = m.r;
+    let mut idx_val = 0usize;
+    let mut sums = [T::zero(); 8];
+    for p in 0..m.npanels() {
+        let row0 = p * r;
+        let rows_here = r.min(m.nrows - row0);
+        sums[..r].fill(T::zero());
+        for b in m.panel_blocks(p) {
+            let col = m.block_colidx[b] as usize;
+            let xwin = &x[col..];
+            let mrow = b * r;
+            for (j, sum) in sums.iter_mut().enumerate().take(r) {
+                let mut mask = m.masks[mrow + j];
+                while mask != 0 {
+                    let k = mask.trailing_zeros() as usize;
+                    *sum = m.vals[idx_val].mul_add(xwin[k], *sum);
+                    idx_val += 1;
+                    mask &= mask - 1;
+                }
+            }
+        }
+        for j in 0..rows_here {
+            y[row0 + j] += sums[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::spc5::csr_to_spc5;
+    use crate::util::minitest::property;
+
+    #[test]
+    fn native_csr_matches_reference() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 100,
+            ncols: 100,
+            nnz_per_row: 9.0,
+            run_len: 2.0,
+            row_corr: 0.2,
+            ..Default::default()
+        }
+        .generate(3);
+        let x: Vec<f64> = (0..100).map(|i| (i as f64).sqrt()).collect();
+        let mut want = vec![0.0; 100];
+        m.spmv(&x, &mut want);
+        let mut got = vec![0.0; 100];
+        spmv_csr(&m, &x, &mut got);
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn native_spc5_matches_reference_all_r() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 90,
+            ncols: 110,
+            nnz_per_row: 7.0,
+            run_len: 3.0,
+            row_corr: 0.5,
+            ..Default::default()
+        }
+        .generate(7);
+        let x: Vec<f64> = (0..110).map(|i| 0.1 * i as f64 - 3.0).collect();
+        let mut want = vec![0.0; 90];
+        csr.spmv(&x, &mut want);
+        for r in [1usize, 2, 4, 8] {
+            for width in [8usize, 16] {
+                let m = csr_to_spc5(&csr, r, width);
+                let mut got = vec![0.0; 90];
+                spmv_spc5(&m, &x, &mut got);
+                crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulating_variant_adds() {
+        let csr: Csr<f64> = gen::random_uniform(20, 3.0, 5);
+        let m = csr_to_spc5(&csr, 2, 8);
+        let x = vec![1.0; csr.ncols];
+        let mut base = vec![0.0; 20];
+        csr.spmv(&x, &mut base);
+        let mut y: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        spmv_spc5_acc(&m, &x, &mut y);
+        for i in 0..20 {
+            assert!((y[i] - (i as f64 + base[i])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn property_native_kernels_agree() {
+        property("native csr == native spc5 (f32 and f64)", |g| {
+            let nrows = g.usize_in(1..60);
+            let ncols = g.usize_in(4..90);
+            let csr: Csr<f64> = gen::Structured {
+                nrows,
+                ncols,
+                nnz_per_row: (1.0 + g.f64_unit() * 5.0).min(ncols as f64),
+                run_len: 1.0 + g.f64_unit() * 4.0,
+                row_corr: g.f64_unit(),
+                skew: g.f64_unit() * 0.5,
+                bandwidth: None,
+            }
+            .generate(g.u64());
+            let x: Vec<f64> = (0..ncols).map(|_| g.f64_in(1.0)).collect();
+            let mut a = vec![0.0; nrows];
+            spmv_csr(&csr, &x, &mut a);
+            let r = *g.pick(&[1usize, 2, 4, 8]);
+            let m = csr_to_spc5(&csr, r, 8);
+            let mut b = vec![0.0; nrows];
+            spmv_spc5(&m, &x, &mut b);
+            crate::scalar::assert_allclose(&b, &a, 1e-10, 1e-12);
+        });
+    }
+
+    #[test]
+    fn multi_vector_matches_single() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 70,
+            ncols: 80,
+            nnz_per_row: 6.0,
+            run_len: 3.0,
+            row_corr: 0.4,
+            ..Default::default()
+        }
+        .generate(9);
+        let m = csr_to_spc5(&csr, 4, 8);
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|v| (0..80).map(|i| ((i + v) % 7) as f64 * 0.3).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = (0..5).map(|_| vec![0.0; 70]).collect();
+        spmv_spc5_multi(&m, &x_refs, &mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 70];
+            spmv_spc5(&m, x, &mut want);
+            crate::scalar::assert_allclose(y, &want, 0.0, 0.0);
+        }
+        // Zero vectors: no-op without panics.
+        let mut none: Vec<Vec<f64>> = vec![];
+        spmv_spc5_multi(&m, &[], &mut none);
+    }
+
+    #[test]
+    fn empty_matrix_and_empty_rows() {
+        let csr = Csr::<f64>::from_parts(3, 3, vec![0, 0, 0, 0], vec![], vec![]).unwrap();
+        let m = csr_to_spc5(&csr, 4, 8);
+        let x = vec![1.0; 3];
+        let mut y = vec![5.0; 3];
+        spmv_spc5(&m, &x, &mut y);
+        assert_eq!(y, vec![0.0, 0.0, 0.0]);
+        let mut y = vec![5.0; 3];
+        spmv_csr(&csr, &x, &mut y);
+        assert_eq!(y, vec![0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Simulated *scalar* kernels — the baseline every speedup in the paper is
+//! measured against ("Speedup of SPC5 is computed against the scalar
+//! sequential version", Figs 5/7).
+
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::simd::trace::{Op, SimCtx};
+use crate::simd::vreg::{vslice, vslice_u32, AddressSpace};
+use crate::spc5::Spc5Matrix;
+
+/// Scalar CSR SpMV (`y = A·x`) through the simulator: one mul-add per
+/// non-zero, with the loads a scalar compiler would emit (column index,
+/// value, x element), plus loop bookkeeping.
+pub fn spmv_scalar_csr<T: Scalar>(ctx: &mut SimCtx, m: &Csr<T>, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let mut space = AddressSpace::new();
+    let vals = vslice(&mut space, &m.vals);
+    let cols = vslice_u32(&mut space, &m.col_idx);
+    let xs = vslice(&mut space, x);
+    let ybase = space.alloc(y.len() * T::BYTES);
+
+    for r in 0..m.nrows {
+        let (lo, hi) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+        // row_ptr loads (the compiler keeps one in a register across rows).
+        ctx.op(Op::SLoad);
+        let mut sum = T::zero();
+        for i in lo..hi {
+            ctx.op(Op::SLoad);
+            ctx.mem(cols.addr(i), 4, false);
+            let c = m.col_idx[i] as usize;
+            ctx.op(Op::SLoad);
+            ctx.mem(vals.addr(i), T::BYTES as u32, false);
+            ctx.op(Op::SLoad);
+            ctx.mem(xs.addr(c), T::BYTES as u32, false);
+            ctx.op(Op::SFma);
+            ctx.op(Op::SInt); // loop counter + bound check
+            sum += m.vals[i] * x[c];
+        }
+        ctx.op(Op::SStore);
+        ctx.mem(ybase + (r * T::BYTES) as u64, T::BYTES as u32, true);
+        y[r] = sum;
+    }
+}
+
+/// Scalar SPC5 SpMV — Algorithm 1 with the blue (scalar) lines: iterate the
+/// mask bit-by-bit. Included because the paper's scalar/vector crossover
+/// (ns3Da, wikipedia) is about *this* overhead trade-off.
+pub fn spmv_scalar_spc5<T: Scalar>(ctx: &mut SimCtx, m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let mut space = AddressSpace::new();
+    let vals = vslice(&mut space, &m.vals);
+    let cols = vslice_u32(&mut space, &m.block_colidx);
+    let masks_base = space.alloc(m.masks.len() * m.mask_bytes());
+    let xs = vslice(&mut space, x);
+    let ybase = space.alloc(y.len() * T::BYTES);
+
+    let mut idx_val = 0usize;
+    for p in 0..m.npanels() {
+        let row0 = p * m.r;
+        let mut sums = vec![T::zero(); m.r];
+        for b in m.panel_blocks(p) {
+            ctx.op(Op::SLoad);
+            ctx.mem(cols.addr(b), 4, false);
+            let col = m.block_colidx[b] as usize;
+            for j in 0..m.r {
+                ctx.op(Op::SLoad);
+                ctx.mem(
+                    masks_base + ((b * m.r + j) * m.mask_bytes()) as u64,
+                    m.mask_bytes() as u32,
+                    false,
+                );
+                let mask = m.masks[b * m.r + j];
+                for k in 0..m.width {
+                    ctx.op(Op::SInt); // bit test + branch
+                    if (mask >> k) & 1 == 1 {
+                        ctx.op(Op::SLoad);
+                        ctx.mem(vals.addr(idx_val), T::BYTES as u32, false);
+                        ctx.op(Op::SLoad);
+                        ctx.mem(xs.addr(col + k), T::BYTES as u32, false);
+                        ctx.op(Op::SFma);
+                        sums[j] += m.vals[idx_val] * x[col + k];
+                        idx_val += 1;
+                    }
+                }
+            }
+            ctx.op(Op::SInt); // block loop
+        }
+        for j in 0..m.r {
+            if row0 + j < m.nrows {
+                ctx.op(Op::SStore);
+                ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, true);
+                y[row0 + j] = sums[j];
+            }
+        }
+    }
+    debug_assert_eq!(idx_val, m.nnz());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::simd::trace::CountingSink;
+    use crate::spc5::csr_to_spc5;
+
+    #[test]
+    fn scalar_csr_correct_and_counts_fma_per_nnz() {
+        let m: Csr<f64> = gen::random_uniform(50, 5.0, 1);
+        let x: Vec<f64> = (0..50).map(|i| i as f64 * 0.1).collect();
+        let mut want = vec![0.0; 50];
+        m.spmv(&x, &mut want);
+        let mut sink = CountingSink::new();
+        let mut got = vec![0.0; 50];
+        {
+            let mut ctx = SimCtx::new(8, &mut sink);
+            spmv_scalar_csr(&mut ctx, &m, &x, &mut got);
+        }
+        crate::scalar::assert_allclose(&got, &want, 1e-13, 0.0);
+        assert_eq!(sink.count(Op::SFma), m.nnz() as u64);
+        // 3 loads per nnz + 1 per row.
+        assert_eq!(sink.count(Op::SLoad), 3 * m.nnz() as u64 + m.nrows as u64);
+        assert_eq!(sink.count(Op::SStore), m.nrows as u64);
+    }
+
+    #[test]
+    fn scalar_spc5_matches_csr() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 40,
+            ncols: 60,
+            nnz_per_row: 6.0,
+            run_len: 3.0,
+            row_corr: 0.5,
+            ..Default::default()
+        }
+        .generate(2);
+        let x: Vec<f64> = (0..60).map(|i| (i as f64).sin()).collect();
+        let mut want = vec![0.0; 40];
+        m.spmv(&x, &mut want);
+        for r in [1usize, 2, 4, 8] {
+            let spc5 = csr_to_spc5(&m, r, 8);
+            let mut sink = CountingSink::new();
+            let mut got = vec![0.0; 40];
+            {
+                let mut ctx = SimCtx::new(8, &mut sink);
+                spmv_scalar_spc5(&mut ctx, &spc5, &x, &mut got);
+            }
+            crate::scalar::assert_allclose(&got, &want, 1e-13, 1e-13);
+            assert_eq!(sink.count(Op::SFma), m.nnz() as u64);
+            // The scalar SPC5 kernel tests every bit of every mask.
+            assert_eq!(
+                sink.count(Op::SInt) >= (spc5.nblocks() * spc5.r * spc5.width) as u64,
+                true
+            );
+        }
+    }
+
+    #[test]
+    fn mask_byte_traffic_scales_with_precision() {
+        // f64 masks are 1 byte, f32 masks 2 bytes (VS=16): the memory
+        // overhead of SPC5 per block-row differs accordingly.
+        let m64: Csr<f64> = gen::random_uniform(30, 4.0, 7);
+        let spc5 = csr_to_spc5(&m64, 1, 8);
+        assert_eq!(spc5.mask_bytes(), 1);
+        let m32: Csr<f32> = gen::random_uniform(30, 4.0, 7);
+        let spc5 = csr_to_spc5(&m32, 1, 16);
+        assert_eq!(spc5.mask_bytes(), 2);
+    }
+}

@@ -1,0 +1,245 @@
+//! SPC5 SpMV, AVX-512 path (Algorithm 1, red lines).
+//!
+//! Per block: load the x window once (`_mm512_loadu`, reused for all `r`
+//! rows — the §3.1 optimization, inherent on AVX-512), then for each row of
+//! the block expand-load the packed values against the row's bit-mask and
+//! FMA into the row's accumulator. The panel ends with either `r` native
+//! reductions or one manual multi-reduction + vector update of `y` (§3.2).
+
+use crate::scalar::Scalar;
+use crate::simd::avx512 as v;
+use crate::simd::trace::{Op, SimCtx};
+use crate::simd::vreg::{vslice, vslice_u32, AddressSpace, VReg, VSliceMut};
+use crate::spc5::Spc5Matrix;
+
+use super::dispatch::Reduction;
+
+/// SPC5 β(r,VS) SpMV on simulated AVX-512: `y = A·x`.
+///
+/// Panics if `m.width != ctx.vs` (the SIMD kernels only exist for blocks of
+/// exactly one vector length; other widths are ablation-only).
+pub fn spmv_spc5_avx512<T: Scalar>(
+    ctx: &mut SimCtx,
+    m: &Spc5Matrix<T>,
+    x: &[T],
+    y: &mut [T],
+    reduction: Reduction,
+) {
+    assert_eq!(m.width, ctx.vs, "SIMD kernel requires width == VS");
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let vs = ctx.vs;
+    let mut space = AddressSpace::new();
+    let vals = vslice(&mut space, &m.vals);
+    let cols = vslice_u32(&mut space, &m.block_colidx);
+    let masks_base = space.alloc(m.masks.len() * m.mask_bytes());
+    let xs = vslice(&mut space, x);
+    let ybase = space.alloc(y.len() * T::BYTES);
+
+    let mut idx_val = 0usize;
+    for p in 0..m.npanels() {
+        let row0 = p * m.r;
+        let rows_here = m.r.min(m.nrows - row0);
+        let mut sums: Vec<VReg<T>> = (0..m.r).map(|_| VReg::zero(vs)).collect();
+
+        for b in m.panel_blocks(p) {
+            // Block column index (scalar load, kept hot in L1).
+            ctx.op(Op::SLoad);
+            ctx.mem(cols.addr(b), 4, false);
+            let col = m.block_colidx[b] as usize;
+
+            // One full x-window load per block, reused across the r rows.
+            let x_vec = v::loadu(ctx, &xs, col);
+
+            for (j, sum) in sums.iter_mut().enumerate().take(m.r) {
+                ctx.op(Op::SLoad);
+                ctx.mem(
+                    masks_base + ((b * m.r + j) * m.mask_bytes()) as u64,
+                    m.mask_bytes() as u32,
+                    false,
+                );
+                let mask = m.masks[b * m.r + j] as u64;
+                // vexpand: scatter the packed values to the mask lanes.
+                let vblock = v::maskz_expandloadu(ctx, mask, &vals, idx_val);
+                *sum = v::fmadd(ctx, &vblock, &x_vec, sum);
+                // idxVal += popcount(mask)  (Algorithm 1 line 21)
+                ctx.op(Op::Popcnt);
+                ctx.op(Op::SInt);
+                idx_val += mask.count_ones() as usize;
+            }
+            ctx.op(Op::SInt); // block-loop bookkeeping
+        }
+
+        // y update (§3.2).
+        match reduction {
+            Reduction::Native => {
+                for (j, sum) in sums.iter().enumerate().take(rows_here) {
+                    let s = v::reduce_add(ctx, sum);
+                    ctx.op(Op::SLoad);
+                    ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, false);
+                    ctx.op(Op::SFma);
+                    ctx.op(Op::SStore);
+                    ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, true);
+                    y[row0 + j] += s;
+                }
+            }
+            Reduction::Manual => {
+                let red = v::multi_reduce(ctx, &sums);
+                // y[row0..row0+rows_here] += red (vector load/add/store).
+                ctx.op(Op::VLoad);
+                ctx.mem(ybase + (row0 * T::BYTES) as u64, (rows_here * T::BYTES) as u32, false);
+                let mut yv = VReg::<T>::zero(vs);
+                for j in 0..rows_here {
+                    yv.lanes[j] = y[row0 + j];
+                }
+                let yv = v::add(ctx, &red, &yv);
+                let mut ydst = VSliceMut::new(y, ybase, T::BYTES as u32);
+                v::mask_store_prefix(ctx, &mut ydst, row0, &yv, rows_here);
+            }
+        }
+    }
+    debug_assert_eq!(idx_val, m.nnz());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Csr};
+    use crate::simd::trace::CountingSink;
+    use crate::spc5::csr_to_spc5;
+    use crate::util::minitest::property;
+
+    fn run(m: &Spc5Matrix<f64>, x: &[f64], red: Reduction) -> (Vec<f64>, CountingSink) {
+        let mut sink = CountingSink::new();
+        let mut y = vec![0.0; m.nrows];
+        {
+            let mut ctx = SimCtx::new(8, &mut sink);
+            spmv_spc5_avx512(&mut ctx, m, x, &mut y, red);
+        }
+        (y, sink)
+    }
+
+    #[test]
+    fn correct_both_reductions_all_r() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 70,
+            ncols: 90,
+            nnz_per_row: 7.0,
+            run_len: 3.0,
+            row_corr: 0.6,
+            ..Default::default()
+        }
+        .generate(11);
+        let x: Vec<f64> = (0..90).map(|i| (i as f64 * 0.11).sin() + 1.5).collect();
+        let mut want = vec![0.0; 70];
+        csr.spmv(&x, &mut want);
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&csr, r, 8);
+            for red in [Reduction::Native, Reduction::Manual] {
+                let (got, _) = run(&m, &x, red);
+                crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn one_x_load_and_one_expand_per_block_row() {
+        let csr: Csr<f64> = gen::random_uniform(64, 6.0, 3);
+        let m = csr_to_spc5(&csr, 4, 8);
+        let x = vec![1.0; csr.ncols];
+        let (_, sink) = run(&m, &x, Reduction::Native);
+        // Exactly one full x load per block (the §3.1 optimization)...
+        assert_eq!(sink.count(Op::VLoad), m.nblocks() as u64);
+        // ...and one expand-load + FMA per block-row (r per block).
+        assert_eq!(sink.count(Op::VExpandLoad), (m.nblocks() * m.r) as u64);
+        assert_eq!(sink.count(Op::VFma), (m.nblocks() * m.r) as u64);
+    }
+
+    #[test]
+    fn value_traffic_has_no_zero_padding() {
+        // The format's core claim: value bytes loaded == nnz * 8, however
+        // poorly filled the blocks are.
+        let csr: Csr<f64> = gen::random_uniform(100, 3.0, 9);
+        let m = csr_to_spc5(&csr, 2, 8);
+        let x = vec![1.0; csr.ncols];
+        let mut sink = CountingSink::new();
+        let mut y = vec![0.0; csr.nrows];
+        {
+            let mut ctx = SimCtx::new(8, &mut sink);
+            spmv_spc5_avx512(&mut ctx, &m, &x, &mut y, Reduction::Native);
+        }
+        // Total expand-load traffic = nnz values exactly.
+        let expand_bytes: u64 = m.nnz() as u64 * 8;
+        // x loads: nblocks * 64 bytes; cols: nblocks * 4; masks: nblocks*r;
+        // y: rows * (8+8); row_ptr-ish scalar loads excluded from mem.
+        let expected = expand_bytes
+            + m.nblocks() as u64 * 64
+            + m.nblocks() as u64 * 4
+            + (m.nblocks() * m.r) as u64 * m.mask_bytes() as u64
+            + m.nrows as u64 * 8;
+        assert_eq!(sink.load_bytes, expected);
+    }
+
+    #[test]
+    fn manual_reduction_reduces_y_traffic() {
+        let csr: Csr<f64> = gen::random_uniform(64, 8.0, 5);
+        let m = csr_to_spc5(&csr, 8, 8);
+        let x = vec![1.0; csr.ncols];
+        let (_, native) = run(&m, &x, Reduction::Native);
+        let (_, manual) = run(&m, &x, Reduction::Manual);
+        // Native: r scalar read-modify-writes per panel. Manual: one vector
+        // load + one vector store per panel.
+        assert!(manual.stores < native.stores);
+        assert_eq!(native.count(Op::VReduceNative), (m.npanels() * m.r) as u64);
+        assert_eq!(manual.count(Op::VReduceNative), 0);
+        assert!(manual.count(Op::VShuffle) > 0);
+    }
+
+    #[test]
+    fn property_avx_kernel_equals_scalar() {
+        property("spc5-avx512 == csr scalar (f64)", |g| {
+            let nrows = g.usize_in(1..40);
+            let ncols = g.usize_in(8..80);
+            let csr: Csr<f64> = gen::Structured {
+                nrows,
+                ncols,
+                nnz_per_row: (1.0 + g.f64_unit() * 6.0).min(ncols as f64),
+                run_len: 1.0 + g.f64_unit() * 5.0,
+                row_corr: g.f64_unit(),
+                skew: 0.0,
+                bandwidth: None,
+            }
+            .generate(g.u64());
+            let x: Vec<f64> = (0..ncols).map(|_| g.f64_in(2.0)).collect();
+            let mut want = vec![0.0; nrows];
+            csr.spmv(&x, &mut want);
+            let r = *g.pick(&[1usize, 2, 4, 8]);
+            let m = csr_to_spc5(&csr, r, 8);
+            let red = if g.bool() { Reduction::Manual } else { Reduction::Native };
+            let mut sink = CountingSink::new();
+            let mut got = vec![0.0; nrows];
+            {
+                let mut ctx = SimCtx::new(8, &mut sink);
+                spmv_spc5_avx512(&mut ctx, &m, &x, &mut got, red);
+            }
+            crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+            assert_eq!(sink.count(Op::VExpandLoad), (m.nblocks() * m.r) as u64);
+        });
+    }
+
+    #[test]
+    fn f32_precision_vs16() {
+        let csr: Csr<f32> = gen::random_uniform(30, 5.0, 13);
+        let x: Vec<f32> = (0..csr.ncols).map(|i| i as f32 * 0.01).collect();
+        let mut want = vec![0.0f32; 30];
+        csr.spmv(&x, &mut want);
+        let m = csr_to_spc5(&csr, 2, 16);
+        let mut sink = CountingSink::new();
+        let mut got = vec![0.0f32; 30];
+        {
+            let mut ctx = SimCtx::new(16, &mut sink);
+            spmv_spc5_avx512(&mut ctx, &m, &x, &mut got, Reduction::Manual);
+        }
+        crate::scalar::assert_allclose(&got, &want, 1e-5, 1e-5);
+    }
+}

@@ -1,0 +1,290 @@
+//! SPC5 SpMV, ARM SVE path (Algorithm 1, green lines).
+//!
+//! SVE has no expand-load, so the kernel inverts the data movement: the x
+//! window is *compacted* down to the packed non-zero positions, and the
+//! packed values load contiguously (§3, Fig 3 right):
+//!
+//! ```text
+//! mask_vec  = svand(svdup(valMask), filter)
+//! active    = svcmpne(mask_vec, 0)
+//! increment = svcntp(active)
+//! xvals     = svcompact(active, svld1(active/full, &x[idxCol]))
+//! block     = svld1(svwhilelt(0, increment), &values[idxVal])
+//! sum      += block * xvals
+//! ```
+//!
+//! Two §3.1 x-load strategies are implemented:
+//! - **single x load**: one full-width load per block, compacted per row;
+//! - **partial x load**: one predicated load per block-row.
+//!
+//! Two §3.2 y-update strategies: native `svaddv` per accumulator, or the
+//! manual `svuzp1/svuzp2` multi-reduction followed by a vector update of y.
+
+use crate::scalar::Scalar;
+use crate::simd::sve as v;
+use crate::simd::trace::{Op, SimCtx};
+use crate::simd::vreg::{vslice, vslice_u32, AddressSpace, Pred, VReg, VSliceMut};
+use crate::spc5::Spc5Matrix;
+
+use super::dispatch::{Reduction, XLoad};
+
+/// SPC5 β(r,VS) SpMV on simulated SVE: `y = A·x`.
+pub fn spmv_spc5_sve<T: Scalar>(
+    ctx: &mut SimCtx,
+    m: &Spc5Matrix<T>,
+    x: &[T],
+    y: &mut [T],
+    x_load: XLoad,
+    reduction: Reduction,
+) {
+    assert_eq!(m.width, ctx.vs, "SIMD kernel requires width == VS");
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let vs = ctx.vs;
+    let mut space = AddressSpace::new();
+    let vals = vslice(&mut space, &m.vals);
+    let cols = vslice_u32(&mut space, &m.block_colidx);
+    let masks_base = space.alloc(m.masks.len() * m.mask_bytes());
+    let xs = vslice(&mut space, x);
+    let ybase = space.alloc(y.len() * T::BYTES);
+
+    // filter <- [1<<0, ..., 1<<VS-1]  (Algorithm 1 line 4, hoisted).
+    let filter = v::filter_vector(ctx);
+    let all = Pred::all(vs);
+
+    let mut idx_val = 0usize;
+    for p in 0..m.npanels() {
+        let row0 = p * m.r;
+        let rows_here = m.r.min(m.nrows - row0);
+        let mut sums: Vec<VReg<T>> = (0..m.r).map(|_| VReg::zero(vs)).collect();
+
+        for b in m.panel_blocks(p) {
+            ctx.op(Op::SLoad);
+            ctx.mem(cols.addr(b), 4, false);
+            let col = m.block_colidx[b] as usize;
+
+            // Single-x-load strategy: one full load per block (§3.1).
+            let x_full = match x_load {
+                XLoad::Single => Some(v::svld1(ctx, &all, &xs, col)),
+                XLoad::Partial => None,
+            };
+
+            for (j, sum) in sums.iter_mut().enumerate().take(m.r) {
+                ctx.op(Op::SLoad);
+                ctx.mem(
+                    masks_base + ((b * m.r + j) * m.mask_bytes()) as u64,
+                    m.mask_bytes() as u32,
+                    false,
+                );
+                let mask = m.masks[b * m.r + j] as u64;
+
+                // mask_vec = svand(svdup(mask), filter); active = cmpne 0.
+                let dup = v::svdup_u64(ctx, mask);
+                let masked = v::svand(ctx, &dup, &filter);
+                let active = v::svcmpne0(ctx, &masked);
+                let increment = v::svcntp(ctx, &active);
+
+                // xvals: compact the active x lanes to the front.
+                let xvals = match &x_full {
+                    Some(full) => v::svcompact(ctx, &active, full),
+                    None => {
+                        let part = v::svld1(ctx, &active, &xs, col);
+                        v::svcompact(ctx, &active, &part)
+                    }
+                };
+
+                // block = contiguous load of `increment` packed values.
+                let wl = v::svwhilelt(ctx, increment);
+                let block = v::svld1(ctx, &wl, &vals, idx_val);
+
+                *sum = v::svmla(ctx, sum, &block, &xvals);
+                ctx.op(Op::SInt); // idxVal += increment
+                idx_val += increment;
+            }
+            ctx.op(Op::SInt); // block loop
+        }
+
+        // y update (§3.2).
+        match reduction {
+            Reduction::Native => {
+                for (j, sum) in sums.iter().enumerate().take(rows_here) {
+                    let s = v::svaddv(ctx, sum);
+                    ctx.op(Op::SLoad);
+                    ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, false);
+                    ctx.op(Op::SFma);
+                    ctx.op(Op::SStore);
+                    ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, true);
+                    y[row0 + j] += s;
+                }
+            }
+            Reduction::Manual => {
+                let red = v::sve_multi_reduce(ctx, &sums);
+                let wl = v::svwhilelt(ctx, rows_here);
+                let mut yv = VReg::<T>::zero(vs);
+                ctx.op(Op::SvLoad);
+                ctx.mem(ybase + (row0 * T::BYTES) as u64, (rows_here * T::BYTES) as u32, false);
+                for j in 0..rows_here {
+                    yv.lanes[j] = y[row0 + j];
+                }
+                let yv = v::svadd(ctx, &red, &yv);
+                let _ = wl;
+                let mut ydst = VSliceMut::new(y, ybase, T::BYTES as u32);
+                v::svst1_prefix(ctx, &mut ydst, row0, &yv, rows_here);
+            }
+        }
+    }
+    debug_assert_eq!(idx_val, m.nnz());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Csr};
+    use crate::simd::trace::CountingSink;
+    use crate::spc5::csr_to_spc5;
+    use crate::util::minitest::property;
+
+    fn run(
+        m: &Spc5Matrix<f64>,
+        x: &[f64],
+        xl: XLoad,
+        red: Reduction,
+    ) -> (Vec<f64>, CountingSink) {
+        let mut sink = CountingSink::new();
+        let mut y = vec![0.0; m.nrows];
+        {
+            let mut ctx = SimCtx::new(8, &mut sink);
+            spmv_spc5_sve(&mut ctx, m, x, &mut y, xl, red);
+        }
+        (y, sink)
+    }
+
+    fn fixture() -> (Csr<f64>, Vec<f64>, Vec<f64>) {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 70,
+            ncols: 90,
+            nnz_per_row: 7.0,
+            run_len: 3.0,
+            row_corr: 0.6,
+            ..Default::default()
+        }
+        .generate(11);
+        let x: Vec<f64> = (0..90).map(|i| (i as f64 * 0.13).cos() + 1.2).collect();
+        let mut want = vec![0.0; 70];
+        csr.spmv(&x, &mut want);
+        (csr, x, want)
+    }
+
+    #[test]
+    fn correct_all_strategy_combinations() {
+        let (csr, x, want) = fixture();
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&csr, r, 8);
+            for xl in [XLoad::Single, XLoad::Partial] {
+                for red in [Reduction::Native, Reduction::Manual] {
+                    let (got, _) = run(&m, &x, xl, red);
+                    crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compact_pipeline_counts() {
+        let (csr, x, _) = fixture();
+        let m = csr_to_spc5(&csr, 4, 8);
+        let (_, sink) = run(&m, &x, XLoad::Single, Reduction::Native);
+        let block_rows = (m.nblocks() * m.r) as u64;
+        // One and/cmpne/cntp/compact per block-row (the SVE pipeline).
+        assert_eq!(sink.count(Op::SvAnd), block_rows + 1); // +1: filter setup
+        assert_eq!(sink.count(Op::SvCmp), block_rows);
+        assert_eq!(sink.count(Op::SvCntp), block_rows);
+        assert_eq!(sink.count(Op::SvCompact), block_rows);
+        assert_eq!(sink.count(Op::SvFma), block_rows);
+        // Single strategy: one x load per block + one value load per row.
+        assert_eq!(sink.count(Op::SvLoad), m.nblocks() as u64 + block_rows);
+    }
+
+    #[test]
+    fn partial_xload_loads_per_row() {
+        let (csr, x, _) = fixture();
+        let m = csr_to_spc5(&csr, 4, 8);
+        let (_, single) = run(&m, &x, XLoad::Single, Reduction::Native);
+        let (_, partial) = run(&m, &x, XLoad::Partial, Reduction::Native);
+        // Partial: r x-loads per block instead of 1 — more instructions.
+        // (Byte traffic can go either way: per-row spans overlap, and §3.1
+        // notes the hardware touches the same cache lines regardless.)
+        assert!(partial.count(Op::SvLoad) > single.count(Op::SvLoad));
+    }
+
+    #[test]
+    fn manual_multi_reduction_uses_uzp() {
+        let (csr, x, _) = fixture();
+        let m = csr_to_spc5(&csr, 8, 8);
+        let (_, native) = run(&m, &x, XLoad::Single, Reduction::Native);
+        let (_, manual) = run(&m, &x, XLoad::Single, Reduction::Manual);
+        // One svaddv per *real* row (the last partial panel reduces fewer).
+        assert_eq!(native.count(Op::SvAddv), m.nrows as u64);
+        assert_eq!(manual.count(Op::SvAddv), 0);
+        assert!(manual.count(Op::SvUzp) > 0);
+        assert!(manual.stores < native.stores);
+    }
+
+    #[test]
+    fn property_sve_kernel_equals_scalar() {
+        property("spc5-sve == csr scalar (f64)", |g| {
+            let nrows = g.usize_in(1..40);
+            let ncols = g.usize_in(8..80);
+            let csr: Csr<f64> = gen::Structured {
+                nrows,
+                ncols,
+                nnz_per_row: (1.0 + g.f64_unit() * 6.0).min(ncols as f64),
+                run_len: 1.0 + g.f64_unit() * 5.0,
+                row_corr: g.f64_unit(),
+                skew: 0.0,
+                bandwidth: None,
+            }
+            .generate(g.u64());
+            let x: Vec<f64> = (0..ncols).map(|_| g.f64_in(2.0)).collect();
+            let mut want = vec![0.0; nrows];
+            csr.spmv(&x, &mut want);
+            let r = *g.pick(&[1usize, 2, 4, 8]);
+            let m = csr_to_spc5(&csr, r, 8);
+            let xl = if g.bool() { XLoad::Single } else { XLoad::Partial };
+            let red = if g.bool() { Reduction::Manual } else { Reduction::Native };
+            let (got, _) = {
+                let mut sink = CountingSink::new();
+                let mut y = vec![0.0; nrows];
+                {
+                    let mut ctx = SimCtx::new(8, &mut sink);
+                    spmv_spc5_sve(&mut ctx, &m, &x, &mut y, xl, red);
+                }
+                (y, sink)
+            };
+            crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+        });
+    }
+
+    #[test]
+    fn sve_matches_avx_numerically() {
+        // The two ISAs place products in different lanes (expand vs compact)
+        // so the reduction trees group differently — results agree to a few
+        // ulps, not bit-for-bit.
+        let (csr, x, _) = fixture();
+        let m = csr_to_spc5(&csr, 4, 8);
+        let (sve, _) = run(&m, &x, XLoad::Single, Reduction::Manual);
+        let mut sink = CountingSink::new();
+        let mut avx = vec![0.0; m.nrows];
+        {
+            let mut ctx = SimCtx::new(8, &mut sink);
+            super::super::spc5_avx512::spmv_spc5_avx512(
+                &mut ctx,
+                &m,
+                &x,
+                &mut avx,
+                Reduction::Manual,
+            );
+        }
+        crate::scalar::assert_allclose(&sve, &avx, 1e-13, 1e-13);
+    }
+}

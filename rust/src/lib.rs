@@ -1,0 +1,35 @@
+//! # SPC5 — block-based SpMV framework (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *"SPC5: an efficient SpMV framework
+//! vectorized using ARM SVE and x86 AVX-512"* (Regnault & Bramas, 2023).
+//!
+//! The crate implements:
+//! - the SPC5 β(r,VS) sparse-matrix storage format and its conversion
+//!   machinery ([`spc5`]),
+//! - the paper's SpMV kernels for both ISAs, executed semantics-exactly on a
+//!   vector-ISA simulator ([`simd`], [`kernels`]),
+//! - performance models of the paper's two testbeds — Fujitsu A64FX (SVE) and
+//!   Intel Cascade Lake (AVX-512) — with caches and bandwidth ([`perfmodel`]),
+//! - a native optimized host hot path ([`kernels::native`]),
+//! - a parallel runtime ([`parallel`]), iterative solvers ([`solver`]),
+//! - a PJRT runtime that executes the JAX/Pallas AOT artifacts ([`runtime`]),
+//! - and an SpMV coordinator service ([`coordinator`]).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod scalar;
+pub mod util;
+pub mod matrix;
+pub mod simd;
+pub mod spc5;
+pub mod kernels;
+pub mod perfmodel;
+pub mod parallel;
+pub mod solver;
+pub mod coordinator;
+pub mod runtime;
+pub mod cli;
+pub mod bench;
+
+pub use scalar::Scalar;

@@ -1,0 +1,297 @@
+//! `spc5` — the framework launcher.
+//!
+//! Commands:
+//!   info     matrix statistics, β fillings and the selector's verdict
+//!   convert  Matrix Market -> SPC5 -> Matrix Market round trip
+//!   spmv     native SpMV timing on a corpus or .mtx matrix
+//!   solve    Poisson CG / BiCGSTAB demo solve (native kernels)
+//!   serve    coordinator service demo workload
+//!   pjrt     execute the AOT JAX/Pallas artifacts through PJRT
+//!   corpus   list the Table-1 corpus and its recipes
+//!   bench    how to regenerate every paper table/figure
+
+use std::path::PathBuf;
+
+use spc5::cli::Args;
+use spc5::coordinator::{FormatChoice, SpmvService};
+use spc5::kernels::native;
+use spc5::matrix::{corpus_by_name_or_fail, corpus_entries, gen, mm_io, Csr};
+use spc5::parallel::ParallelSpc5;
+use spc5::spc5::{csr_to_spc5, FormatStats};
+use spc5::util::timing::{gflops, spmv_flops, Timer};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let mut args = Args::parse(argv)?;
+    match args.command.clone().as_deref() {
+        Some("info") => cmd_info(&mut args),
+        Some("convert") => cmd_convert(&mut args),
+        Some("spmv") => cmd_spmv(&mut args),
+        Some("solve") => cmd_solve(&mut args),
+        Some("serve") => cmd_serve(&mut args),
+        Some("pjrt") => cmd_pjrt(&mut args),
+        Some("corpus") => cmd_corpus(&mut args),
+        Some("bench") => cmd_bench(&mut args),
+        Some(other) => Err(format!(
+            "unknown command '{other}' (try: info, convert, spmv, solve, serve, pjrt, corpus, bench)"
+        )),
+        None => {
+            println!("spc5 — SPC5 SpMV framework (paper reproduction)");
+            println!("usage: spc5 <info|convert|spmv|solve|serve|pjrt|corpus|bench> [options]");
+            Ok(())
+        }
+    }
+}
+
+/// Load a matrix from --mtx <file> or --corpus <name> (--budget nnz).
+fn load_matrix(args: &mut Args) -> Result<(String, Csr<f64>), String> {
+    if let Some(path) = args.opt_maybe("mtx") {
+        let m = mm_io::read_csr::<f64>(&PathBuf::from(&path)).map_err(|e| e.to_string())?;
+        return Ok((path, m));
+    }
+    let name = args.opt("corpus", "CO");
+    let budget = args.opt_num::<usize>("budget", 200_000)?;
+    let entry = corpus_by_name_or_fail(&name)?;
+    Ok((name, entry.build(budget)))
+}
+
+fn cmd_info(args: &mut Args) -> Result<(), String> {
+    let (name, m) = load_matrix(args)?;
+    args.finish()?;
+    println!(
+        "matrix {name}: {}x{}, nnz {}, nnz/row {:.2}",
+        m.nrows,
+        m.ncols,
+        m.nnz(),
+        m.nnz_per_row()
+    );
+    println!("\nbeta(r,VS) fillings (f64, VS=8):");
+    for r in [1usize, 2, 4, 8] {
+        let s = FormatStats::measure(&m, r, 8);
+        println!(
+            "  beta({r},VS): filling {:5.1}%  blocks {:8}  nnz/block {:5.2}  bytes/CSR {:.2}",
+            s.filling_percent(),
+            s.nblocks,
+            s.nnz_per_block,
+            s.bytes_ratio()
+        );
+    }
+    let sel = spc5::coordinator::select_format(&m, &Default::default());
+    match sel.choice {
+        FormatChoice::Csr => println!("\nselector: keep CSR (blocks too empty)"),
+        FormatChoice::Spc5 { r } => println!("\nselector: SPC5 beta({r},VS)"),
+    }
+    Ok(())
+}
+
+fn cmd_convert(args: &mut Args) -> Result<(), String> {
+    let input = args.opt_maybe("in").ok_or("--in <file.mtx> required")?;
+    let output = args.opt_maybe("out").ok_or("--out <file.mtx> required")?;
+    let r = args.opt_num::<usize>("r", 4)?;
+    args.finish()?;
+    let m = mm_io::read_csr::<f64>(&PathBuf::from(&input)).map_err(|e| e.to_string())?;
+    let spc5m = csr_to_spc5(&m, r, 8);
+    spc5m.check()?;
+    println!(
+        "{input}: {} nnz -> beta({r},8): {} blocks, filling {:.1}%",
+        spc5m.nnz(),
+        spc5m.nblocks(),
+        spc5m.filling() * 100.0
+    );
+    let back = spc5::spc5::spc5_to_csr(&spc5m);
+    mm_io::write_csr_file(&back, &PathBuf::from(&output)).map_err(|e| e.to_string())?;
+    println!("wrote {output} (round-tripped through SPC5)");
+    Ok(())
+}
+
+fn cmd_spmv(args: &mut Args) -> Result<(), String> {
+    let (name, m) = load_matrix(args)?;
+    let r = args.opt_num::<usize>("r", 0)?; // 0 = auto
+    let iters = args.opt_num::<usize>("iters", 50)?;
+    let threads = args.opt_num::<usize>("threads", 1)?;
+    args.finish()?;
+
+    let r = if r == 0 {
+        match spc5::coordinator::select_format(&m, &Default::default()).choice {
+            FormatChoice::Spc5 { r } => r,
+            FormatChoice::Csr => 1,
+        }
+    } else {
+        r
+    };
+    let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 + (i % 5) as f64 * 0.1).collect();
+    let mut y = vec![0.0; m.nrows];
+    let flops = spmv_flops(m.nnz() as u64);
+
+    // CSR baseline.
+    let t = Timer::start();
+    for _ in 0..iters {
+        native::spmv_csr(&m, &x, &mut y);
+    }
+    let csr_g = gflops(flops * iters as u64, t.elapsed_secs());
+
+    if threads <= 1 {
+        let spc5m = csr_to_spc5(&m, r, 8);
+        let t = Timer::start();
+        for _ in 0..iters {
+            // AVX-512 kernel when the host has it, portable otherwise.
+            spc5::kernels::native_avx512::spmv_spc5_auto(&spc5m, &x, &mut y);
+        }
+        let g = gflops(flops * iters as u64, t.elapsed_secs());
+        println!(
+            "{name}: csr {csr_g:.2} GFlop/s | spc5 beta({r},8) {g:.2} GFlop/s [x{:.2}]",
+            g / csr_g
+        );
+    } else {
+        let pm = ParallelSpc5::new(&m, r, threads);
+        let t = Timer::start();
+        for _ in 0..iters {
+            pm.spmv(&x, &mut y);
+        }
+        let g = gflops(flops * iters as u64, t.elapsed_secs());
+        println!(
+            "{name}: csr(1t) {csr_g:.2} GFlop/s | spc5 beta({r},8) x{threads} threads {g:.2} GFlop/s"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &mut Args) -> Result<(), String> {
+    let grid = args.opt_num::<usize>("grid", 64)?;
+    let solver = args.opt("solver", "cg");
+    let rtol = args.opt_num::<f64>("rtol", 1e-8)?;
+    let threads = args.opt_num::<usize>("threads", 1)?;
+    args.finish()?;
+
+    let m: Csr<f64> = gen::poisson2d(grid);
+    let n = m.nrows;
+    let b = vec![1.0; n];
+    println!(
+        "Poisson {grid}x{grid} ({n} unknowns, {} nnz), solver={solver}, threads={threads}",
+        m.nnz()
+    );
+    let t = Timer::start();
+    let result = match (solver.as_str(), threads) {
+        ("cg", 1) => {
+            let a = csr_to_spc5(&m, 4, 8);
+            spc5::solver::cg(&a, &b, rtol, 10 * n)
+        }
+        ("cg", _) => {
+            let a = ParallelSpc5::new(&m, 4, threads);
+            spc5::solver::cg(&a, &b, rtol, 10 * n)
+        }
+        ("bicgstab", _) => spc5::solver::bicgstab(&m, &b, rtol, 10 * n),
+        (other, _) => return Err(format!("unknown solver '{other}'")),
+    };
+    let secs = t.elapsed_secs();
+    println!(
+        "{} in {} iterations, {:.3}s, final relative residual {:.3e}",
+        if result.converged { "converged" } else { "NOT converged" },
+        result.iterations(),
+        secs,
+        result.residuals.last().unwrap()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> Result<(), String> {
+    let workers = args.opt_num::<usize>("workers", 2)?;
+    let requests = args.opt_num::<usize>("requests", 200)?;
+    args.finish()?;
+    let svc: SpmvService<f64> = SpmvService::new(workers, 16);
+    let m = corpus_by_name_or_fail("nd6k")?.build(100_000);
+    let ncols = m.ncols;
+    let id = svc.register(m);
+    println!("registered nd6k-like matrix as {id:?}; submitting {requests} requests...");
+    let t = Timer::start();
+    let rxs: Vec<_> = (0..requests)
+        .map(|k| svc.submit(id, (0..ncols).map(|i| ((i + k) % 13) as f64).collect()))
+        .collect();
+    for rx in rxs {
+        rx.recv().map_err(|e| e.to_string())?.map_err(|e| e.to_string())?;
+    }
+    println!("done in {:.3}s", t.elapsed_secs());
+    println!("{}", svc.metrics_json().to_pretty());
+    Ok(())
+}
+
+fn cmd_pjrt(args: &mut Args) -> Result<(), String> {
+    let dir = args.opt("artifacts", "artifacts");
+    args.finish()?;
+    let runner =
+        spc5::runtime::PjrtRunner::load(&PathBuf::from(&dir)).map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", runner.platform());
+    let meta = runner.meta.clone();
+    println!(
+        "artifact problem: Poisson {0}x{0} (n={1}), vs={2}, tile={3}",
+        meta.grid, meta.n, meta.vs, meta.tile
+    );
+    let m: Csr<f64> = gen::poisson2d(meta.grid);
+    let arrays = spc5::runtime::Spc5Arrays::from_csr(&m, meta.vs, meta.tile);
+    let x = vec![1.0f32; meta.n];
+    let t = Timer::start();
+    let y = runner.spmv(&arrays, &x).map_err(|e| e.to_string())?;
+    println!(
+        "spmv: |y|_1 = {:.3} in {:.3} ms",
+        y.iter().map(|v| v.abs()).sum::<f32>(),
+        t.elapsed_secs() * 1e3
+    );
+    let t = Timer::start();
+    let (_, rnorm) = runner.cg_solve(&arrays, &x).map_err(|e| e.to_string())?;
+    println!(
+        "cg({} iters): ||r|| = {rnorm:.4e} in {:.3} ms",
+        meta.cg_iters,
+        t.elapsed_secs() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_corpus(args: &mut Args) -> Result<(), String> {
+    args.finish()?;
+    println!(
+        "{:<20} {:>9} {:>10} {:>8}  fillings f64 (paper)",
+        "name", "dim", "nnz", "nnz/row"
+    );
+    for e in corpus_entries() {
+        println!(
+            "{:<20} {:>9} {:>10} {:>8.1}  beta1 {:>3.0}% beta2 {:>3.0}% beta4 {:>3.0}% beta8 {:>3.0}%",
+            e.name,
+            e.paper_dim,
+            e.paper_nnz,
+            e.nnz_per_row(),
+            e.fill_f64[0],
+            e.fill_f64[1],
+            e.fill_f64[2],
+            e.fill_f64[3]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &mut Args) -> Result<(), String> {
+    args.finish()?;
+    println!("paper experiment -> bench target:");
+    for (exp, target) in [
+        ("Table 1 (corpus + fillings)", "table1_corpus"),
+        ("Table 2a (SVE optimizations)", "table2a_sve_opts"),
+        ("Table 2b (AVX-512 optimizations)", "table2b_avx_opts"),
+        ("Figs 4+5 (SVE sequential)", "fig4_5_sve_sequential"),
+        ("Figs 6+7 (AVX-512 sequential)", "fig6_7_avx_sequential"),
+        ("Fig 8 (parallel)", "fig8_parallel"),
+        ("native host hot path (§Perf)", "native_hotpath"),
+        ("block-size / hybrid ablation", "ablation_blocksize"),
+    ] {
+        println!("  {exp:<38} cargo bench --bench {target}");
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Coordinate (COO / IJV) sparse matrix storage.
+//!
+//! The paper's §2.3 baseline description: each non-zero is a (row, col, value)
+//! triple. COO is the assembly format — Matrix Market files and the synthetic
+//! generators produce COO, which is then compacted to [`super::Csr`].
+
+use crate::scalar::Scalar;
+
+/// A sparse matrix in coordinate format. Entries may be unsorted and may
+/// contain duplicates until [`Coo::compact`] is called.
+#[derive(Clone, Debug)]
+pub struct Coo<T: Scalar> {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<T>,
+}
+
+impl<T: Scalar> Coo<T> {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        assert!(nrows <= u32::MAX as usize && ncols <= u32::MAX as usize);
+        Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        let mut m = Self::new(nrows, ncols);
+        m.rows.reserve(cap);
+        m.cols.reserve(cap);
+        m.vals.reserve(cap);
+        m
+    }
+
+    /// Number of stored entries (including duplicates before `compact`).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one entry. Panics on out-of-bounds indices.
+    pub fn push(&mut self, row: usize, col: usize, val: T) {
+        assert!(row < self.nrows, "row {row} >= {}", self.nrows);
+        assert!(col < self.ncols, "col {col} >= {}", self.ncols);
+        self.rows.push(row as u32);
+        self.cols.push(col as u32);
+        self.vals.push(val);
+    }
+
+    /// Sort entries by (row, col) and sum duplicates. Idempotent.
+    pub fn compact(&mut self) {
+        let n = self.nnz();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by_key(|&i| {
+            ((self.rows[i as usize] as u64) << 32) | self.cols[i as usize] as u64
+        });
+        let mut rows = Vec::with_capacity(n);
+        let mut cols = Vec::with_capacity(n);
+        let mut vals: Vec<T> = Vec::with_capacity(n);
+        for &i in &order {
+            let i = i as usize;
+            let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i]);
+            if let (Some(&lr), Some(&lc)) = (rows.last(), cols.last()) {
+                if lr == r && lc == c {
+                    let last = vals.len() - 1;
+                    vals[last] += v;
+                    continue;
+                }
+            }
+            rows.push(r);
+            cols.push(c);
+            vals.push(v);
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.vals = vals;
+    }
+
+    /// Mirror the strictly-lower/upper triangle to make the pattern symmetric
+    /// (Matrix Market `symmetric` storage stores one triangle only).
+    pub fn symmetrize(&mut self) {
+        let n = self.nnz();
+        for i in 0..n {
+            if self.rows[i] != self.cols[i] {
+                let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i]);
+                self.rows.push(c);
+                self.cols.push(r);
+                self.vals.push(v);
+            }
+        }
+    }
+
+    /// Dense row-major expansion — O(nrows*ncols); test/debug helper only.
+    pub fn to_dense(&self) -> Vec<T> {
+        let mut d = vec![T::zero(); self.nrows * self.ncols];
+        for i in 0..self.nnz() {
+            d[self.rows[i] as usize * self.ncols + self.cols[i] as usize] += self.vals[i];
+        }
+        d
+    }
+
+    /// Reference SpMV: `y += A * x`. Debug/oracle use.
+    pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nnz() {
+            y[self.rows[i] as usize] += self.vals[i] * x[self.cols[i] as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo<f64> {
+        let mut m = Coo::new(3, 4);
+        m.push(2, 1, 5.0);
+        m.push(0, 0, 1.0);
+        m.push(0, 3, 2.0);
+        m.push(2, 1, 0.5); // duplicate
+        m
+    }
+
+    #[test]
+    fn push_and_nnz() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.nrows, 3);
+        assert_eq!(m.ncols, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row 5")]
+    fn push_out_of_bounds_panics() {
+        let mut m = Coo::<f64>::new(3, 3);
+        m.push(5, 0, 1.0);
+    }
+
+    #[test]
+    fn compact_sorts_and_sums_duplicates() {
+        let mut m = sample();
+        m.compact();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.rows, vec![0, 0, 2]);
+        assert_eq!(m.cols, vec![0, 3, 1]);
+        assert_eq!(m.vals, vec![1.0, 2.0, 5.5]);
+        // Idempotent.
+        let before = m.vals.clone();
+        m.compact();
+        assert_eq!(m.vals, before);
+    }
+
+    #[test]
+    fn dense_expansion() {
+        let mut m = sample();
+        m.compact();
+        let d = m.to_dense();
+        assert_eq!(d[0 * 4 + 0], 1.0);
+        assert_eq!(d[0 * 4 + 3], 2.0);
+        assert_eq!(d[2 * 4 + 1], 5.5);
+        assert_eq!(d.iter().filter(|&&v| v != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn symmetrize_mirrors_offdiagonal() {
+        let mut m = Coo::<f64>::new(3, 3);
+        m.push(1, 0, 7.0);
+        m.push(1, 1, 2.0);
+        m.symmetrize();
+        m.compact();
+        let d = m.to_dense();
+        assert_eq!(d[1 * 3 + 0], 7.0);
+        assert_eq!(d[0 * 3 + 1], 7.0);
+        assert_eq!(d[1 * 3 + 1], 2.0);
+    }
+
+    #[test]
+    fn spmv_ref_matches_dense() {
+        let mut m = sample();
+        m.compact();
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut y = vec![0.0; 3];
+        m.spmv_ref(&x, &mut y);
+        assert_eq!(y, vec![1.0 + 8.0, 0.0, 11.0]);
+    }
+}

@@ -1,0 +1,250 @@
+//! Compressed Sparse Row storage — the baseline format of the paper (§2.3).
+
+use crate::scalar::Scalar;
+
+use super::coo::Coo;
+
+/// A sparse matrix in CSR format: `row_ptr` has `nrows+1` entries;
+/// the column indices and values of row `r` live in
+/// `col_idx[row_ptr[r]..row_ptr[r+1]]` / `vals[...]`, sorted by column.
+#[derive(Clone, Debug)]
+pub struct Csr<T: Scalar> {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<T>,
+}
+
+impl<T: Scalar> Csr<T> {
+    /// Build from COO; compacts (sorts + sums duplicates) first.
+    pub fn from_coo(mut coo: Coo<T>) -> Self {
+        coo.compact();
+        let mut row_ptr = vec![0u32; coo.nrows + 1];
+        for &r in &coo.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Self {
+            nrows: coo.nrows,
+            ncols: coo.ncols,
+            row_ptr,
+            col_idx: coo.cols,
+            vals: coo.vals,
+        }
+    }
+
+    /// Build directly from raw parts, validating the invariants.
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        vals: Vec<T>,
+    ) -> Result<Self, String> {
+        if row_ptr.len() != nrows + 1 {
+            return Err(format!("row_ptr len {} != nrows+1 {}", row_ptr.len(), nrows + 1));
+        }
+        if row_ptr[0] != 0 {
+            return Err("row_ptr[0] != 0".into());
+        }
+        if *row_ptr.last().unwrap() as usize != vals.len() || col_idx.len() != vals.len() {
+            return Err("row_ptr end / col_idx / vals length mismatch".into());
+        }
+        for w in row_ptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("row_ptr not monotone".into());
+            }
+        }
+        for r in 0..nrows {
+            let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                if col_idx[i] as usize >= ncols {
+                    return Err(format!("col {} out of bounds in row {r}", col_idx[i]));
+                }
+                if i > lo && col_idx[i - 1] >= col_idx[i] {
+                    return Err(format!("row {r} columns not strictly increasing"));
+                }
+            }
+        }
+        Ok(Self { nrows, ncols, row_ptr, col_idx, vals })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Average non-zeros per row — the NNZ/N_rows column of Table 1.
+    pub fn nnz_per_row(&self) -> f64 {
+        self.nnz() as f64 / self.nrows.max(1) as f64
+    }
+
+    /// Column indices of row `r`.
+    pub fn row_cols(&self, r: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize]
+    }
+
+    /// Values of row `r`.
+    pub fn row_vals(&self, r: usize) -> &[T] {
+        &self.vals[self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize]
+    }
+
+    /// Memory footprint in bytes (§2.3: CSR ≈ one u32 index per NNZ + values
+    /// + the row pointer array).
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * T::BYTES
+    }
+
+    /// Reference scalar SpMV `y = A*x` (overwrites y) — the paper's scalar
+    /// baseline against which all speedups are computed.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let mut sum = T::zero();
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                sum += self.vals[i] * x[self.col_idx[i] as usize];
+            }
+            y[r] = sum;
+        }
+    }
+
+    /// Dense expansion; test helper.
+    pub fn to_dense(&self) -> Vec<T> {
+        let mut d = vec![T::zero(); self.nrows * self.ncols];
+        for r in 0..self.nrows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                d[r * self.ncols + self.col_idx[i] as usize] = self.vals[i];
+            }
+        }
+        d
+    }
+
+    /// Back to COO (sorted, no duplicates).
+    pub fn to_coo(&self) -> Coo<T> {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for r in 0..self.nrows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                coo.push(r, self.col_idx[i] as usize, self.vals[i]);
+            }
+        }
+        coo
+    }
+
+    /// Extract the sub-matrix of rows `[r0, r1)` (column space unchanged).
+    /// Used by the parallel runtime's row partitioning.
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Csr<T> {
+        assert!(r0 <= r1 && r1 <= self.nrows);
+        let base = self.row_ptr[r0];
+        let row_ptr: Vec<u32> = self.row_ptr[r0..=r1].iter().map(|&p| p - base).collect();
+        let (lo, hi) = (self.row_ptr[r0] as usize, self.row_ptr[r1] as usize);
+        Csr {
+            nrows: r1 - r0,
+            ncols: self.ncols,
+            row_ptr,
+            col_idx: self.col_idx[lo..hi].to_vec(),
+            vals: self.vals[lo..hi].to_vec(),
+        }
+    }
+
+    /// Validate internal invariants (used by property tests).
+    pub fn check(&self) -> Result<(), String> {
+        Self::from_parts(
+            self.nrows,
+            self.ncols,
+            self.row_ptr.clone(),
+            self.col_idx.clone(),
+            self.vals.clone(),
+        )
+        .map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr<f64> {
+        // [1 0 0 2]
+        // [0 0 0 0]
+        // [0 3 4 0]
+        let mut coo = Coo::new(3, 4);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(2, 1, 3.0);
+        coo.push(2, 2, 4.0);
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn from_coo_layout() {
+        let m = sample();
+        assert_eq!(m.row_ptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.col_idx, vec![0, 3, 1, 2]);
+        assert_eq!(m.vals, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.nnz(), 4);
+        m.check().unwrap();
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = sample();
+        let x = vec![1.0, 10.0, 100.0, 1000.0];
+        let mut y = vec![f64::NAN; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, vec![2001.0, 0.0, 430.0]);
+    }
+
+    #[test]
+    fn row_accessors() {
+        let m = sample();
+        assert_eq!(m.row_cols(0), &[0, 3]);
+        assert_eq!(m.row_vals(2), &[3.0, 4.0]);
+        assert_eq!(m.row_cols(1), &[] as &[u32]);
+    }
+
+    #[test]
+    fn roundtrip_coo() {
+        let m = sample();
+        let m2 = Csr::from_coo(m.to_coo());
+        assert_eq!(m.row_ptr, m2.row_ptr);
+        assert_eq!(m.col_idx, m2.col_idx);
+        assert_eq!(m.vals, m2.vals);
+    }
+
+    #[test]
+    fn row_slice_preserves_rows() {
+        let m = sample();
+        let s = m.row_slice(1, 3);
+        assert_eq!(s.nrows, 2);
+        assert_eq!(s.row_ptr, vec![0, 0, 2]);
+        assert_eq!(s.row_cols(1), &[1, 2]);
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn from_parts_rejects_bad_inputs() {
+        assert!(Csr::<f64>::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // row_ptr too short
+        assert!(Csr::<f64>::from_parts(1, 2, vec![0, 2], vec![1, 0], vec![1.0, 2.0]).is_err()); // unsorted cols
+        assert!(Csr::<f64>::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err()); // col oob
+        assert!(Csr::<f64>::from_parts(1, 1, vec![1, 1], vec![], vec![]).is_err()); // row_ptr[0] != 0
+    }
+
+    #[test]
+    fn nnz_per_row_stat() {
+        let m = sample();
+        assert!((m.nnz_per_row() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_footprint() {
+        let m = sample();
+        // 4 row_ptr u32 + 4 col u32 + 4 f64
+        assert_eq!(m.bytes(), 4 * 4 + 4 * 4 + 4 * 8);
+    }
+}

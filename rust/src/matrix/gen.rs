@@ -1,0 +1,378 @@
+//! Synthetic sparse-matrix generators.
+//!
+//! The corpus of the paper (Table 1) comes from the UF collection; offline we
+//! synthesize matrices with matching *statistics*. The driver variable for
+//! every SPC5 result is the β(r,VS) block filling (§4.3: "the performance can
+//! be easily predicted from the block filling"), which is governed by two
+//! structural properties that [`Structured`] exposes directly:
+//!
+//! - **run length**: how many consecutive columns a typical group of
+//!   non-zeros spans inside a row (long runs → full β(1,VS) blocks);
+//! - **row correlation**: how similar the column pattern of row `i+1` is to
+//!   row `i` (high correlation → multi-row β(r,VS) blocks stay full).
+
+use crate::scalar::Scalar;
+use crate::util::prng::{Rng, Xoshiro256};
+
+use super::coo::Coo;
+use super::csr::Csr;
+
+/// Parameters of the structured generator.
+#[derive(Clone, Debug)]
+pub struct Structured {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Mean non-zeros per row.
+    pub nnz_per_row: f64,
+    /// Mean length of contiguous column runs (1.0 = fully scattered).
+    pub run_len: f64,
+    /// Probability that a row re-uses the previous row's column pattern.
+    pub row_corr: f64,
+    /// Row-degree skew: 0 = uniform, 1 = strongly power-law (graph-like).
+    pub skew: f64,
+    /// Restrict columns to a diagonal band of this half-width (None = full).
+    pub bandwidth: Option<usize>,
+}
+
+impl Default for Structured {
+    fn default() -> Self {
+        Self {
+            nrows: 1000,
+            ncols: 1000,
+            nnz_per_row: 10.0,
+            run_len: 2.0,
+            row_corr: 0.0,
+            skew: 0.0,
+            bandwidth: None,
+        }
+    }
+}
+
+impl Structured {
+    /// Generate the matrix. Deterministic in (`self`, `seed`).
+    pub fn generate<T: Scalar>(&self, seed: u64) -> Csr<T> {
+        assert!(self.nrows > 0 && self.ncols > 0);
+        assert!(self.nnz_per_row >= 1.0, "nnz_per_row must be >= 1");
+        assert!((0.0..=1.0).contains(&self.row_corr));
+        assert!((0.0..=1.0).contains(&self.skew));
+        assert!(self.run_len >= 1.0);
+
+        let mut rng = Xoshiro256::new(seed);
+        let mut coo = Coo::with_capacity(
+            self.nrows,
+            self.ncols,
+            (self.nrows as f64 * self.nnz_per_row) as usize,
+        );
+
+        // Per-row degree: mix a uniform component with a Zipf-like tail.
+        let degrees: Vec<usize> = (0..self.nrows)
+            .map(|_| {
+                let base = self.nnz_per_row;
+                let d = if self.skew > 0.0 && rng.chance(self.skew * 0.5) {
+                    // heavy tail: pareto-ish multiplier
+                    let u = rng.next_f64().max(1e-9);
+                    base * (1.0 / u).powf(0.5).min(50.0)
+                } else {
+                    // light jitter around the mean
+                    base * (0.5 + rng.next_f64())
+                };
+                (d.round() as usize).clamp(1, self.ncols)
+            })
+            .collect();
+
+        // Runs of the previous row, for correlation.
+        let mut prev_runs: Vec<(usize, usize)> = Vec::new();
+
+        for r in 0..self.nrows {
+            let k = degrees[r];
+            let reuse = r > 0 && !prev_runs.is_empty() && rng.chance(self.row_corr);
+            let runs = if reuse {
+                prev_runs.clone()
+            } else {
+                self.sample_runs(r, k, &mut rng)
+            };
+            let mut placed = 0usize;
+            for &(start, len) in &runs {
+                for j in 0..len {
+                    if placed >= k && !reuse {
+                        break;
+                    }
+                    let c = start + j;
+                    if c < self.ncols {
+                        coo.push(r, c, random_value(&mut rng));
+                        placed += 1;
+                    }
+                }
+            }
+            // Guarantee at least one entry per row (keeps nnz/row meaningful
+            // and the matrix usable in solvers).
+            if placed == 0 {
+                let c = self.col_window(r, &mut rng);
+                coo.push(r, c, random_value(&mut rng));
+            }
+            prev_runs = runs;
+        }
+        Csr::from_coo(coo)
+    }
+
+    /// Sample the set of column runs for a row with `k` target non-zeros.
+    fn sample_runs(&self, row: usize, k: usize, rng: &mut Xoshiro256) -> Vec<(usize, usize)> {
+        let mut runs = Vec::new();
+        let mut placed = 0usize;
+        // Geometric run lengths with mean `run_len`.
+        let p = 1.0 / self.run_len;
+        while placed < k {
+            let remaining = k - placed;
+            let mut len = 1usize;
+            while len < remaining && !rng.chance(p) && len < 4096 {
+                len += 1;
+            }
+            let start = self.col_window(row, rng);
+            runs.push((start, len));
+            placed += len;
+        }
+        runs
+    }
+
+    /// Pick a run start column, honoring the bandwidth restriction.
+    fn col_window(&self, row: usize, rng: &mut Xoshiro256) -> usize {
+        match self.bandwidth {
+            Some(bw) => {
+                // Center the band on the (scaled) diagonal.
+                let center = row * self.ncols / self.nrows;
+                let lo = center.saturating_sub(bw);
+                let hi = (center + bw + 1).min(self.ncols);
+                rng.range(lo, hi.max(lo + 1))
+            }
+            None => rng.range(0, self.ncols),
+        }
+    }
+}
+
+fn random_value<T: Scalar>(rng: &mut Xoshiro256) -> T {
+    T::from_f64(rng.next_f64() * 2.0 - 1.0)
+}
+
+/// Fully dense matrix of dimension `n` (the paper's upper-bound case).
+pub fn dense<T: Scalar>(n: usize, seed: u64) -> Csr<T> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * n);
+    for r in 0..n {
+        for c in 0..n {
+            coo.push(r, c, random_value(&mut rng));
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// Uniform random matrix: `nnz_per_row` scattered columns per row.
+pub fn random_uniform<T: Scalar>(n: usize, nnz_per_row: f64, seed: u64) -> Csr<T> {
+    Structured {
+        nrows: n,
+        ncols: n,
+        nnz_per_row,
+        run_len: 1.0,
+        row_corr: 0.0,
+        skew: 0.0,
+        bandwidth: None,
+    }
+    .generate(seed)
+}
+
+/// Symmetric positive-definite 2D Poisson (5-point stencil) on a g×g grid —
+/// the canonical iterative-solver workload (n = g²). Used by the CG example.
+pub fn poisson2d<T: Scalar>(g: usize) -> Csr<T> {
+    let n = g * g;
+    let mut coo = Coo::with_capacity(n, n, 5 * n);
+    let idx = |i: usize, j: usize| i * g + j;
+    for i in 0..g {
+        for j in 0..g {
+            let row = idx(i, j);
+            coo.push(row, row, T::from_f64(4.0));
+            if i > 0 {
+                coo.push(row, idx(i - 1, j), T::from_f64(-1.0));
+            }
+            if i + 1 < g {
+                coo.push(row, idx(i + 1, j), T::from_f64(-1.0));
+            }
+            if j > 0 {
+                coo.push(row, idx(i, j - 1), T::from_f64(-1.0));
+            }
+            if j + 1 < g {
+                coo.push(row, idx(i, j + 1), T::from_f64(-1.0));
+            }
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// Tridiagonal SPD matrix (1D Laplacian); small solver/test workload.
+pub fn tridiag<T: Scalar>(n: usize) -> Csr<T> {
+    let mut coo = Coo::with_capacity(n, n, 3 * n);
+    for i in 0..n {
+        coo.push(i, i, T::from_f64(2.0));
+        if i > 0 {
+            coo.push(i, i - 1, T::from_f64(-1.0));
+        }
+        if i + 1 < n {
+            coo.push(i, i + 1, T::from_f64(-1.0));
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structured_respects_dims_and_determinism() {
+        let p = Structured { nrows: 100, ncols: 120, nnz_per_row: 8.0, ..Default::default() };
+        let a: Csr<f64> = p.generate(42);
+        let b: Csr<f64> = p.generate(42);
+        assert_eq!(a.nrows, 100);
+        assert_eq!(a.ncols, 120);
+        assert_eq!(a.vals, b.vals);
+        assert_eq!(a.col_idx, b.col_idx);
+        a.check().unwrap();
+        // Every row non-empty.
+        for r in 0..a.nrows {
+            assert!(!a.row_cols(r).is_empty(), "row {r} empty");
+        }
+    }
+
+    #[test]
+    fn nnz_per_row_tracks_target() {
+        let p = Structured { nrows: 2000, ncols: 2000, nnz_per_row: 20.0, ..Default::default() };
+        let m: Csr<f64> = p.generate(7);
+        let got = m.nnz_per_row();
+        assert!((got - 20.0).abs() < 4.0, "nnz/row {got}");
+    }
+
+    #[test]
+    fn run_len_creates_contiguity() {
+        let scattered: Csr<f64> = Structured {
+            nrows: 500,
+            ncols: 5000,
+            nnz_per_row: 16.0,
+            run_len: 1.0,
+            ..Default::default()
+        }
+        .generate(1);
+        let runny: Csr<f64> = Structured {
+            nrows: 500,
+            ncols: 5000,
+            nnz_per_row: 16.0,
+            run_len: 8.0,
+            ..Default::default()
+        }
+        .generate(1);
+        let mean_run = |m: &Csr<f64>| {
+            let mut runs = 0usize;
+            for r in 0..m.nrows {
+                let cols = m.row_cols(r);
+                for (i, &c) in cols.iter().enumerate() {
+                    if i == 0 || cols[i - 1] + 1 != c {
+                        runs += 1;
+                    }
+                }
+            }
+            m.nnz() as f64 / runs as f64
+        };
+        assert!(mean_run(&runny) > 2.0 * mean_run(&scattered));
+    }
+
+    #[test]
+    fn row_corr_duplicates_patterns() {
+        let p = Structured {
+            nrows: 400,
+            ncols: 1000,
+            nnz_per_row: 10.0,
+            run_len: 3.0,
+            row_corr: 0.95,
+            ..Default::default()
+        };
+        let m: Csr<f64> = p.generate(3);
+        let mut same = 0usize;
+        for r in 1..m.nrows {
+            if m.row_cols(r) == m.row_cols(r - 1) {
+                same += 1;
+            }
+        }
+        assert!(same > m.nrows / 2, "only {same} duplicated rows");
+    }
+
+    #[test]
+    fn skew_makes_heavy_rows() {
+        let uni: Csr<f64> =
+            Structured { nrows: 2000, ncols: 2000, nnz_per_row: 10.0, ..Default::default() }
+                .generate(5);
+        let skewed: Csr<f64> = Structured {
+            nrows: 2000,
+            ncols: 2000,
+            nnz_per_row: 10.0,
+            skew: 1.0,
+            ..Default::default()
+        }
+        .generate(5);
+        let max_deg = |m: &Csr<f64>| (0..m.nrows).map(|r| m.row_cols(r).len()).max().unwrap();
+        assert!(max_deg(&skewed) > 2 * max_deg(&uni));
+    }
+
+    #[test]
+    fn bandwidth_restricts_columns() {
+        let p = Structured {
+            nrows: 300,
+            ncols: 300,
+            nnz_per_row: 6.0,
+            bandwidth: Some(10),
+            ..Default::default()
+        };
+        let m: Csr<f64> = p.generate(9);
+        for r in 0..m.nrows {
+            for &c in m.row_cols(r) {
+                let c = c as i64;
+                assert!((c - r as i64).abs() <= 12 + 4096, "far off-band");
+                // run may extend past the band start by its length; the start
+                // is in-band:
+                assert!((c - r as i64) >= -11, "col {c} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_is_full() {
+        let m: Csr<f64> = dense(16, 0);
+        assert_eq!(m.nnz(), 256);
+        assert!(m.to_dense().iter().all(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn poisson2d_is_spd_stencil() {
+        let m: Csr<f64> = poisson2d(4);
+        assert_eq!(m.nrows, 16);
+        // interior point has 5 entries
+        assert_eq!(m.row_cols(5).len(), 5);
+        // corner has 3
+        assert_eq!(m.row_cols(0).len(), 3);
+        // symmetric
+        let d = m.to_dense();
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(d[i * 16 + j], d[j * 16 + i]);
+            }
+        }
+        // row sums >= 0 (diagonally dominant)
+        for i in 0..16 {
+            let s: f64 = (0..16).map(|j| d[i * 16 + j]).sum();
+            assert!(s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn tridiag_shape() {
+        let m: Csr<f64> = tridiag(5);
+        assert_eq!(m.nnz(), 13);
+        assert_eq!(m.row_cols(2), &[1, 2, 3]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Matrix Market (.mtx) reader/writer.
+//!
+//! The paper's corpus comes from the UF Sparse Matrix Collection, distributed
+//! as Matrix Market files. This module implements the `matrix coordinate
+//! {real|integer|pattern} {general|symmetric}` subset — enough to load any of
+//! the paper's matrices when available, and to round-trip our synthetic
+//! corpus to disk for inspection.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use crate::scalar::Scalar;
+
+use super::coo::Coo;
+use super::csr::Csr;
+
+#[derive(Debug, thiserror::Error)]
+pub enum MmError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("unsupported matrix market declaration: {0}")]
+    Unsupported(String),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric,
+}
+
+fn parse_err(line: usize, msg: impl Into<String>) -> MmError {
+    MmError::Parse { line, msg: msg.into() }
+}
+
+/// Read a Matrix Market file into COO (symmetric storage is expanded).
+pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>, MmError> {
+    let mut lines = BufReader::new(reader).lines().enumerate();
+
+    // Header line: %%MatrixMarket matrix coordinate <field> <symmetry>
+    let (lno, header) = lines
+        .next()
+        .ok_or_else(|| parse_err(0, "empty file"))
+        .and_then(|(n, l)| Ok((n + 1, l?)))?;
+    let toks: Vec<String> = header.split_whitespace().map(|t| t.to_ascii_lowercase()).collect();
+    if toks.len() < 5 || toks[0] != "%%matrixmarket" || toks[1] != "matrix" {
+        return Err(parse_err(lno, "missing %%MatrixMarket matrix header"));
+    }
+    if toks[2] != "coordinate" {
+        return Err(MmError::Unsupported(format!("format '{}' (only coordinate)", toks[2])));
+    }
+    let field = match toks[3].as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => return Err(MmError::Unsupported(format!("field '{other}'"))),
+    };
+    let symmetry = match toks[4].as_str() {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        other => return Err(MmError::Unsupported(format!("symmetry '{other}'"))),
+    };
+
+    // Skip comments, read size line.
+    let mut size_line: Option<(usize, String)> = None;
+    for item in lines.by_ref() {
+        let (n, l) = item;
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some((n + 1, l));
+        break;
+    }
+    let (lno, size_line) = size_line.ok_or_else(|| parse_err(0, "missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| parse_err(lno, format!("bad size line: {e}")))?;
+    if dims.len() != 3 {
+        return Err(parse_err(lno, "size line must be 'nrows ncols nnz'"));
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::with_capacity(nrows, ncols, nnz);
+    let mut read = 0usize;
+    for (n, l) in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it
+            .next()
+            .ok_or_else(|| parse_err(n + 1, "missing row"))?
+            .parse()
+            .map_err(|e| parse_err(n + 1, format!("bad row: {e}")))?;
+        let c: usize = it
+            .next()
+            .ok_or_else(|| parse_err(n + 1, "missing col"))?
+            .parse()
+            .map_err(|e| parse_err(n + 1, format!("bad col: {e}")))?;
+        let v: f64 = match field {
+            Field::Pattern => 1.0,
+            _ => it
+                .next()
+                .ok_or_else(|| parse_err(n + 1, "missing value"))?
+                .parse()
+                .map_err(|e| parse_err(n + 1, format!("bad value: {e}")))?,
+        };
+        if r == 0 || c == 0 || r > nrows || c > ncols {
+            return Err(parse_err(n + 1, format!("index ({r},{c}) out of 1-based bounds")));
+        }
+        coo.push(r - 1, c - 1, T::from_f64(v)); // MM is 1-based
+        read += 1;
+    }
+    if read != nnz {
+        return Err(parse_err(0, format!("declared nnz {nnz} but read {read} entries")));
+    }
+    if symmetry == Symmetry::Symmetric {
+        coo.symmetrize();
+    }
+    Ok(coo)
+}
+
+/// Read a Matrix Market file straight into CSR.
+pub fn read_csr<T: Scalar>(path: &Path) -> Result<Csr<T>, MmError> {
+    let f = std::fs::File::open(path)?;
+    Ok(Csr::from_coo(read_coo(f)?))
+}
+
+/// Write a CSR matrix as `matrix coordinate real general`.
+pub fn write_csr<T: Scalar, W: Write>(m: &Csr<T>, mut w: W) -> Result<(), MmError> {
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% generated by the SPC5 reproduction framework")?;
+    writeln!(w, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
+    for r in 0..m.nrows {
+        let (lo, hi) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+        for i in lo..hi {
+            writeln!(w, "{} {} {:e}", r + 1, m.col_idx[i] + 1, m.vals[i].to_f64())?;
+        }
+    }
+    Ok(())
+}
+
+/// Write to a path.
+pub fn write_csr_file<T: Scalar>(m: &Csr<T>, path: &Path) -> Result<(), MmError> {
+    let f = std::fs::File::create(path)?;
+    write_csr(m, std::io::BufWriter::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "%%MatrixMarket matrix coordinate real general\n\
+        % a comment\n\
+        3 4 4\n\
+        1 1 1.0\n\
+        1 4 2.0\n\
+        3 2 3.0\n\
+        3 3 4.5\n";
+
+    #[test]
+    fn read_general_real() {
+        let coo: Coo<f64> = read_coo(SAMPLE.as_bytes()).unwrap();
+        assert_eq!(coo.nrows, 3);
+        assert_eq!(coo.ncols, 4);
+        assert_eq!(coo.nnz(), 4);
+        let m = Csr::from_coo(coo);
+        assert_eq!(m.row_cols(0), &[0, 3]);
+        assert_eq!(m.row_vals(2), &[3.0, 4.5]);
+    }
+
+    #[test]
+    fn read_symmetric_expands() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+            2 2 2\n\
+            1 1 1.0\n\
+            2 1 5.0\n";
+        let m: Csr<f64> = Csr::from_coo(read_coo(text.as_bytes()).unwrap());
+        assert_eq!(m.nnz(), 3);
+        let d = m.to_dense();
+        assert_eq!(d, vec![1.0, 5.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn read_pattern_ones() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+            2 2 2\n\
+            1 2\n\
+            2 1\n";
+        let m: Csr<f64> = Csr::from_coo(read_coo(text.as_bytes()).unwrap());
+        assert_eq!(m.to_dense(), vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_counts() {
+        assert!(read_coo::<f64, _>("not a header\n1 1 0\n".as_bytes()).is_err());
+        assert!(read_coo::<f64, _>(
+            "%%MatrixMarket matrix array real general\n1 1 1\n1.0\n".as_bytes()
+        )
+        .is_err());
+        // Declared 2 entries, provided 1.
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_coo::<f64, _>(text.as_bytes()).is_err());
+        // Out-of-bounds 1-based index.
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_coo::<f64, _>(text.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let coo: Coo<f64> = read_coo(SAMPLE.as_bytes()).unwrap();
+        let m = Csr::from_coo(coo);
+        let mut buf = Vec::new();
+        write_csr(&m, &mut buf).unwrap();
+        let m2: Csr<f64> = Csr::from_coo(read_coo(&buf[..]).unwrap());
+        assert_eq!(m.row_ptr, m2.row_ptr);
+        assert_eq!(m.col_idx, m2.col_idx);
+        assert_eq!(m.vals, m2.vals);
+    }
+}

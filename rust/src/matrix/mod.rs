@@ -1,0 +1,20 @@
+//! Sparse-matrix substrate: COO and CSR storage, Matrix Market I/O, synthetic
+//! generators and the evaluation corpus.
+//!
+//! The paper treats CSR as the universal input/baseline format (§2.3); the
+//! SPC5 format in [`crate::spc5`] is built from CSR. The evaluation corpus
+//! (Table 1) comes from the UF Sparse Matrix Collection, which is not
+//! reachable from this offline environment — [`corpus`] provides seeded
+//! synthetic generators tuned to match each matrix's published statistics
+//! (dimension, nnz/row, and crucially the β(r,VS) block fillings).
+
+pub mod coo;
+pub mod corpus;
+pub mod csr;
+pub mod gen;
+pub mod mm_io;
+pub mod reorder;
+
+pub use coo::Coo;
+pub use corpus::{corpus_by_name, corpus_by_name_or_fail, corpus_entries, CorpusEntry};
+pub use csr::Csr;

@@ -1,0 +1,19 @@
+//! Parallel runtime: row partitioning, a thread pool, and parallel SpMV.
+//!
+//! The paper's parallelization (§4.3, Fig 8) is a static row split with
+//! thread-local data: "the matrices are split and allocated by the threads
+//! such that each thread has its data on the memory nodes that correspond to
+//! its CPU core". [`ParallelSpc5`] mirrors that exactly: each thread owns an
+//! independent SPC5 conversion of its row slice.
+//!
+//! The environment has no `rayon`/`tokio`; [`pool`] is a small std::thread
+//! pool used by the coordinator service, and the data-parallel helpers use
+//! scoped threads.
+
+pub mod partition;
+pub mod pool;
+pub mod spmv;
+
+pub use partition::{balance_rows, Partition};
+pub use pool::ThreadPool;
+pub use spmv::{ParallelCsr, ParallelSpc5};

@@ -1,0 +1,115 @@
+//! Static row partitioning balanced by non-zero count.
+
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+
+/// A partition of `[0, nrows)` into contiguous thread slices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub ranges: Vec<std::ops::Range<usize>>,
+}
+
+impl Partition {
+    pub fn nparts(&self) -> usize {
+        self.ranges.len()
+    }
+}
+
+/// Split the rows of `m` into `parts` contiguous slices with roughly equal
+/// non-zero counts ("naively divided among the threads" — but nnz-balanced,
+/// as any OpenMP static-by-nnz split would be). Boundaries are aligned down
+/// to multiples of `align` (the SPC5 panel height r), so each slice converts
+/// to whole panels.
+pub fn balance_rows<T: Scalar>(m: &Csr<T>, parts: usize, align: usize) -> Partition {
+    assert!(parts >= 1);
+    assert!(align >= 1);
+    let total = m.nnz() as u64;
+    let mut ranges = Vec::with_capacity(parts);
+    let mut row = 0usize;
+    for p in 0..parts {
+        if row >= m.nrows {
+            ranges.push(row..row);
+            continue;
+        }
+        // Target cumulative nnz for the end of part p.
+        let target = total * (p as u64 + 1) / parts as u64;
+        let mut end = row;
+        while end < m.nrows && (m.row_ptr[end + 1] as u64) < target {
+            end += 1;
+        }
+        let mut end = (end + 1).min(m.nrows);
+        // Align to panel height (last part takes the remainder).
+        if p + 1 < parts {
+            end -= end % align;
+        } else {
+            end = m.nrows;
+        }
+        let end = end.max(row);
+        ranges.push(row..end);
+        row = end;
+    }
+    Partition { ranges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn covers_all_rows_disjointly() {
+        let m: Csr<f64> = gen::random_uniform(101, 5.0, 3);
+        for parts in [1, 2, 3, 7, 16] {
+            for align in [1, 4, 8] {
+                let p = balance_rows(&m, parts, align);
+                assert_eq!(p.nparts(), parts);
+                let mut row = 0;
+                for r in &p.ranges {
+                    assert_eq!(r.start, row);
+                    row = r.end;
+                }
+                assert_eq!(row, 101, "parts={parts} align={align}");
+            }
+        }
+    }
+
+    #[test]
+    fn alignment_respected() {
+        let m: Csr<f64> = gen::random_uniform(100, 4.0, 1);
+        let p = balance_rows(&m, 3, 8);
+        for r in &p.ranges[..2] {
+            assert_eq!(r.end % 8, 0, "{:?}", p.ranges);
+        }
+    }
+
+    #[test]
+    fn nnz_roughly_balanced() {
+        // Skewed matrix: balance by nnz, not by rows.
+        let m: Csr<f64> = gen::Structured {
+            nrows: 400,
+            ncols: 400,
+            nnz_per_row: 10.0,
+            skew: 1.0,
+            ..Default::default()
+        }
+        .generate(5);
+        let p = balance_rows(&m, 4, 1);
+        let nnzs: Vec<u64> = p
+            .ranges
+            .iter()
+            .map(|r| (m.row_ptr[r.end] - m.row_ptr[r.start]) as u64)
+            .collect();
+        let max = *nnzs.iter().max().unwrap() as f64;
+        let min = *nnzs.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 2.5, "{nnzs:?}");
+    }
+
+    #[test]
+    fn more_parts_than_rows() {
+        let m: Csr<f64> = gen::random_uniform(3, 2.0, 2);
+        let p = balance_rows(&m, 8, 1);
+        assert_eq!(p.nparts(), 8);
+        let covered: usize = p.ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 3);
+    }
+}

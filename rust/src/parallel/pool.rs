@@ -1,0 +1,147 @@
+//! A small fixed-size thread pool (no tokio/rayon offline).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed worker pool with a shared FIFO queue. Used by the coordinator
+/// service for request execution; data-parallel kernels use scoped threads
+/// instead (see [`super::spmv`]).
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads >= 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("spc5-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                in_flight.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, in_flight }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("workers gone");
+    }
+
+    /// Number of submitted-but-unfinished jobs.
+    pub fn pending(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs finished.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn results_via_channel() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10u64 {
+            let tx = tx.clone();
+            pool.submit(move || tx.send(i * i).unwrap());
+        }
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not deadlock, must finish queued jobs
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn pending_tracks_in_flight() {
+        let pool = ThreadPool::new(1);
+        let (block_tx, block_rx) = mpsc::channel::<()>();
+        pool.submit(move || {
+            let _ = block_rx.recv();
+        });
+        pool.submit(|| {});
+        assert!(pool.pending() >= 1);
+        block_tx.send(()).unwrap();
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Thread-parallel native SpMV over partitioned matrices.
+
+use crate::kernels::native;
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::spc5::{csr_to_spc5, Spc5Matrix};
+
+use super::partition::{balance_rows, Partition};
+
+/// A CSR matrix pre-partitioned for `threads` workers. Each part is an
+/// independent row slice (thread-local allocation, as the paper describes).
+pub struct ParallelCsr<T: Scalar> {
+    pub parts: Vec<Csr<T>>,
+    pub partition: Partition,
+    pub nrows: usize,
+    pub ncols: usize,
+}
+
+impl<T: Scalar> ParallelCsr<T> {
+    pub fn new(m: &Csr<T>, threads: usize) -> Self {
+        let partition = balance_rows(m, threads, 1);
+        let parts = partition.ranges.iter().map(|r| m.row_slice(r.start, r.end)).collect();
+        Self { parts, partition, nrows: m.nrows, ncols: m.ncols }
+    }
+
+    /// `y = A·x` across scoped threads (disjoint y slices, no locking).
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let slices = split_disjoint(y, &self.partition);
+        std::thread::scope(|scope| {
+            for (part, ys) in self.parts.iter().zip(slices) {
+                scope.spawn(move || native::spmv_csr(part, x, ys));
+            }
+        });
+    }
+}
+
+/// An SPC5 matrix pre-partitioned for `threads` workers: each thread owns the
+/// β(r,VS) conversion of its own row slice.
+pub struct ParallelSpc5<T: Scalar> {
+    pub parts: Vec<Spc5Matrix<T>>,
+    pub partition: Partition,
+    pub nrows: usize,
+    pub ncols: usize,
+    pub r: usize,
+}
+
+impl<T: Scalar> ParallelSpc5<T> {
+    /// Partition (panel-aligned) and convert each slice in parallel.
+    pub fn new(m: &Csr<T>, r: usize, threads: usize) -> Self {
+        let partition = balance_rows(m, threads, r);
+        let mut parts: Vec<Option<Spc5Matrix<T>>> = Vec::new();
+        parts.resize_with(partition.ranges.len(), || None);
+        std::thread::scope(|scope| {
+            for (slot, range) in parts.iter_mut().zip(&partition.ranges) {
+                scope.spawn(move || {
+                    let slice = m.row_slice(range.start, range.end);
+                    *slot = Some(csr_to_spc5(&slice, r, T::VS));
+                });
+            }
+        });
+        Self {
+            parts: parts.into_iter().map(|p| p.unwrap()).collect(),
+            partition,
+            nrows: m.nrows,
+            ncols: m.ncols,
+            r,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.parts.iter().map(|p| p.nnz()).sum()
+    }
+
+    /// `y = A·x` across scoped threads.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let slices = split_disjoint(y, &self.partition);
+        std::thread::scope(|scope| {
+            for (part, ys) in self.parts.iter().zip(slices) {
+                scope.spawn(move || native::spmv_spc5(part, x, ys));
+            }
+        });
+    }
+}
+
+/// Split `y` into the partition's disjoint mutable slices.
+fn split_disjoint<'a, T>(y: &'a mut [T], partition: &Partition) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(partition.ranges.len());
+    let mut rest = y;
+    let mut offset = 0usize;
+    for r in &partition.ranges {
+        debug_assert_eq!(r.start, offset);
+        let (head, tail) = rest.split_at_mut(r.len());
+        out.push(head);
+        rest = tail;
+        offset = r.end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::minitest::property;
+
+    fn fixture(n: usize) -> (Csr<f64>, Vec<f64>, Vec<f64>) {
+        let m: Csr<f64> = gen::Structured {
+            nrows: n,
+            ncols: n,
+            nnz_per_row: 8.0,
+            run_len: 3.0,
+            row_corr: 0.5,
+            skew: 0.4,
+            bandwidth: None,
+        }
+        .generate(9);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut want = vec![0.0; n];
+        m.spmv(&x, &mut want);
+        (m, x, want)
+    }
+
+    #[test]
+    fn parallel_csr_matches_serial() {
+        let (m, x, want) = fixture(333);
+        for threads in [1, 2, 4, 7] {
+            let pm = ParallelCsr::new(&m, threads);
+            let mut y = vec![0.0; 333];
+            pm.spmv(&x, &mut y);
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_spc5_matches_serial() {
+        let (m, x, want) = fixture(250);
+        for r in [1usize, 4, 8] {
+            for threads in [1, 3, 6] {
+                let pm = ParallelSpc5::new(&m, r, threads);
+                assert_eq!(pm.nnz(), m.nnz());
+                let mut y = vec![0.0; 250];
+                pm.spmv(&x, &mut y);
+                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_align_to_panels() {
+        let (m, _, _) = fixture(100);
+        let pm = ParallelSpc5::new(&m, 8, 3);
+        for range in &pm.partition.ranges[..pm.partition.ranges.len() - 1] {
+            assert_eq!(range.end % 8, 0);
+        }
+    }
+
+    #[test]
+    fn property_parallel_equals_serial() {
+        property("parallel spc5 == serial csr", |g| {
+            let n = g.usize_in(1..150);
+            let m: Csr<f64> = gen::random_uniform(n, (1.0 + g.f64_unit() * 4.0).min(n as f64), g.u64());
+            let x: Vec<f64> = (0..n).map(|_| g.f64_in(1.0)).collect();
+            let mut want = vec![0.0; n];
+            m.spmv(&x, &mut want);
+            let threads = g.usize_in(1..9);
+            let r = *g.pick(&[1usize, 2, 4, 8]);
+            let pm = ParallelSpc5::new(&m, r, threads);
+            let mut y = vec![0.0; n];
+            pm.spmv(&x, &mut y);
+            crate::scalar::assert_allclose(&y, &want, 1e-11, 1e-12);
+        });
+    }
+}

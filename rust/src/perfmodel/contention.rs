@@ -1,0 +1,139 @@
+//! Parallel performance model (Fig 8).
+//!
+//! The paper parallelizes by splitting rows across threads ("the computation
+//! is naively divided among the threads") with thread-local data placement.
+//! The model: each thread's slice runs through its own core model (private
+//! caches — smaller slices hit better, which is how the paper's superlinear
+//! A64FX speedups happen), then the threads of one bandwidth domain (CMG /
+//! NUMA node) share that domain's sustainable bandwidth.
+
+use super::estimate::PerfReport;
+use super::machine::Machine;
+
+/// Combine per-thread reports into a parallel wall-time estimate (seconds).
+///
+/// Threads are assigned round-robin blocks to domains in order (thread t →
+/// domain t / cores_per_domain), matching first-touch placement with compact
+/// pinning. Per-domain: the compute time of its slowest thread, and the
+/// domain's aggregate traffic over its bandwidth; the run finishes when the
+/// slowest domain finishes (one barrier at the end).
+pub fn parallel_seconds(machine: &Machine, reports: &[PerfReport]) -> f64 {
+    assert!(!reports.is_empty());
+    assert!(
+        reports.len() <= machine.total_cores(),
+        "more threads ({}) than cores ({})",
+        reports.len(),
+        machine.total_cores()
+    );
+    let per_domain = machine.cores_per_domain;
+    let mut worst = 0.0f64;
+    for chunk in reports.chunks(per_domain) {
+        // Compute-side: slowest thread in the domain, charged at issue+stall
+        // (its private-core view, bandwidth excluded).
+        let compute = chunk
+            .iter()
+            .map(|r| (r.issue_cycles + r.tail_cycles + r.stall_cycles) / (r.freq_ghz * 1e9))
+            .fold(0.0f64, f64::max);
+        // Bandwidth-side: the domain moves the sum of its threads' traffic
+        // through the shared controllers.
+        let bytes: u64 = chunk.iter().map(|r| r.mem_bytes).sum();
+        let bw_time = bytes as f64 / (machine.domain_bw_gbs * 1e9);
+        worst = worst.max(compute.max(bw_time));
+    }
+    // Fork/join overhead: one software barrier (~2 µs), matching an OpenMP
+    // parallel-for on these machines.
+    worst + 2e-6
+}
+
+/// GFlop/s of a parallel run over per-thread reports.
+pub fn parallel_gflops(machine: &Machine, reports: &[PerfReport]) -> f64 {
+    let flops: u64 = reports.iter().map(|r| r.flops).sum();
+    flops as f64 / parallel_seconds(machine, reports) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::machine::{a64fx, cascade_lake};
+
+    fn fake_report(cycles: f64, mem_bytes: u64, flops: u64, freq: f64) -> PerfReport {
+        PerfReport {
+            cycles,
+            issue_cycles: cycles,
+            tail_cycles: 0.0,
+            stall_cycles: 0.0,
+            bw_cycles: 0.0,
+            mem_bytes,
+            instr: 0,
+            flops,
+            freq_ghz: freq,
+        }
+    }
+
+    #[test]
+    fn single_thread_equals_its_own_time() {
+        let m = cascade_lake();
+        let r = fake_report(2.6e9, 0, 1_000_000_000, 2.6); // 1 second of compute
+        let t = parallel_seconds(&m, &[r]);
+        assert!((t - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn compute_bound_scales_linearly() {
+        let m = a64fx();
+        let one = fake_report(1.8e9, 0, 1_000_000, 1.8); // 1 s
+        let t1 = parallel_seconds(&m, &[one]);
+        // 12 threads each with 1/12 the work.
+        let twelve: Vec<_> = (0..12).map(|_| fake_report(1.8e9 / 12.0, 0, 1_000_000 / 12, 1.8)).collect();
+        let t12 = parallel_seconds(&m, &twelve);
+        assert!(t1 / t12 > 10.0, "speedup {}", t1 / t12);
+    }
+
+    #[test]
+    fn bandwidth_bound_saturates_per_domain() {
+        let m = cascade_lake();
+        // 18 threads on one NUMA node, each moving 1 GB: domain moves 18 GB
+        // over 105 GB/s -> ~0.171 s regardless of compute.
+        let rs: Vec<_> = (0..18)
+            .map(|_| fake_report(1e6, 1_000_000_000, 1_000_000, 2.6))
+            .collect();
+        let t = parallel_seconds(&m, &rs);
+        assert!((t - 18.0 / 105.0).abs() < 0.01, "t={t}");
+        // Same threads split across both sockets: half the time.
+        let t2 = parallel_seconds(
+            &m,
+            &(0..36).map(|_| fake_report(1e6, 500_000_000, 1_000_000, 2.6)).collect::<Vec<_>>(),
+        );
+        assert!((t2 - 9.0 / 105.0).abs() < 0.01, "t2={t2}");
+    }
+
+    #[test]
+    fn slowest_domain_gates_the_run() {
+        let m = cascade_lake();
+        let fast = fake_report(2.6e6, 0, 1, 2.6); // 1 ms
+        let slow = fake_report(2.6e9, 0, 1, 2.6); // 1 s
+        // 18 fast on node 0, 1 slow on node 1.
+        let mut rs = vec![fast; 18];
+        rs.push(slow);
+        let t = parallel_seconds(&m, &rs);
+        assert!(t > 0.9);
+    }
+
+    #[test]
+    #[should_panic(expected = "more threads")]
+    fn rejects_oversubscription() {
+        let m = cascade_lake();
+        let r = fake_report(1.0, 0, 1, 2.6);
+        let _ = parallel_seconds(&m, &vec![r; 37]);
+    }
+
+    #[test]
+    fn gflops_aggregates_flops() {
+        let m = a64fx();
+        let rs: Vec<_> = (0..4).map(|_| fake_report(1.8e9, 0, 500_000_000, 1.8)).collect();
+        // 4 threads: chunks of 12 -> all in one domain;
+        // each takes 1 s -> total 2 GFlop in 1 s.
+        let g = parallel_gflops(&m, &rs);
+        assert!((g - 2.0).abs() < 0.01, "g={g}");
+    }
+}

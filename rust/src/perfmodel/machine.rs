@@ -1,0 +1,218 @@
+//! The two machine models of §4.1.
+//!
+//! Numbers come from the sources the paper itself uses: the A64FX
+//! microarchitecture manual (instruction latencies: `addv` 12, `uzp1/2` 6,
+//! `whilelt` 4; 64 KB L1/core, 8 MB shared L2 per 12-core CMG, HBM2) and
+//! public Skylake-X/Cascade Lake tables (Agner Fog) for the Xeon Gold 6240
+//! (32 KB L1, 1 MB L2, 25 MB shared L3, 2 NUMA nodes).
+//!
+//! Scalar FMA issue costs are *chain* costs: a scalar row-sum is a serial
+//! dependency chain, so each scalar FMA effectively costs its latency, not
+//! its throughput. This reproduces the paper's scalar baselines (~0.2-0.4
+//! GFlop/s on A64FX, ~0.6-1.4 on the Xeon).
+
+use crate::simd::trace::Op;
+
+use super::cache::{Cache, Hierarchy};
+
+/// Per-instruction cost entry: issue cost (reciprocal throughput, cycles)
+/// and the latency charged when the op sits on the serial reduction tail.
+#[derive(Clone, Copy, Debug)]
+pub struct OpCost {
+    pub issue: f64,
+    pub tail_latency: f64,
+}
+
+/// A machine model: frequency, cost table, cache geometry, bandwidths and
+/// topology (for the parallel model).
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    pub freq_ghz: f64,
+    /// Cores per bandwidth domain (CMG on A64FX, NUMA node on the Xeon).
+    pub cores_per_domain: usize,
+    pub domains: usize,
+    /// Sustainable memory bandwidth per domain (GB/s).
+    pub domain_bw_gbs: f64,
+    /// Sustainable single-core bandwidth (GB/s) — the roofline term for the
+    /// sequential results.
+    pub core_bw_gbs: f64,
+    costs: fn(Op) -> OpCost,
+    cache_builder: fn() -> Hierarchy,
+}
+
+impl Machine {
+    pub fn cost(&self, op: Op) -> OpCost {
+        (self.costs)(op)
+    }
+
+    pub fn new_hierarchy(&self) -> Hierarchy {
+        (self.cache_builder)()
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.cores_per_domain * self.domains
+    }
+}
+
+const fn c(issue: f64, tail_latency: f64) -> OpCost {
+    OpCost { issue, tail_latency }
+}
+
+/// Fujitsu A64FX (Fugaku node): 48 cores @ 1.8 GHz, 512-bit SVE, 2 FLA
+/// pipes, 4 CMGs × 12 cores × 8 GB HBM2.
+pub fn a64fx() -> Machine {
+    fn costs(op: Op) -> OpCost {
+        use Op::*;
+        match op {
+            // Scalar side. SFma = serial fp chain: charge ~latency (9).
+            SLoad => c(0.5, 5.0),
+            SStore => c(1.0, 1.0),
+            SFma => c(9.0, 9.0),
+            SInt => c(0.35, 1.0),
+            Popcnt => c(1.0, 3.0),
+            // SVE: 2×512-bit FLA pipes -> 0.5 throughput for simple FP ops,
+            // but A64FX issue width limits mixed streams; predicate ops run
+            // on the single PR pipe.
+            SvLoad => c(1.0, 11.0),
+            SvStore => c(1.5, 1.5),
+            SvCompact => c(1.0, 6.0),
+            SvDup => c(0.25, 4.0),
+            SvCmp => c(0.5, 4.0),
+            SvAnd => c(0.25, 4.0),
+            SvCntp => c(0.5, 6.0),
+            SvWhilelt => c(0.5, 4.0),   // manual: 4
+            SvFma => c(0.75, 9.0),
+            SvAdd => c(0.75, 9.0),
+            SvAddv => c(4.0, 12.0),     // manual: latency 12 (tail), issue ~4
+            SvUzp => c(2.0, 6.0),       // manual: 6
+            // A64FX gather (svld1_gather): slow, effectively per-lane
+            // (used only by the vectorized-CSR comparison kernel).
+            VGather => c(18.0, 30.0),
+            // AVX ops never appear on this machine; charge absurdly so a
+            // mis-dispatched kernel is obvious in the report.
+            VLoad | VExpandLoad | VFma | VAdd | VShuffle | VReduceNative
+            | VStore | VBcast | KMov => c(1000.0, 1000.0),
+        }
+    }
+    fn caches() -> Hierarchy {
+        Hierarchy::new(
+            vec![
+                Cache::new(64 * 1024, 4, 256),       // L1D 64 KB, 4-way, 256 B lines
+                Cache::new(8 * 1024 * 1024, 16, 256), // L2 8 MB/CMG (one core's view)
+            ],
+            vec![37.0, 0.0],
+            180.0, // HBM2 ~100 ns at 1.8 GHz
+            8.0,   // deep OoO + hw prefetch overlap
+        )
+    }
+    Machine {
+        name: "Fujitsu-SVE (A64FX)",
+        freq_ghz: 1.8,
+        cores_per_domain: 12,
+        domains: 4,
+        domain_bw_gbs: 220.0, // HBM2: 1024 GB/s node, ~220 effective per CMG
+        core_bw_gbs: 38.0,
+        costs,
+        cache_builder: caches,
+    }
+}
+
+/// Intel Xeon Gold 6240 (Cascade Lake): 2×18 cores @ 2.6 GHz (AVX-512),
+/// 2 FMA ports per core, 2 NUMA nodes with DRAM.
+pub fn cascade_lake() -> Machine {
+    fn costs(op: Op) -> OpCost {
+        use Op::*;
+        match op {
+            SLoad => c(0.5, 4.0),
+            SStore => c(1.0, 1.0),
+            SFma => c(3.5, 4.0), // scalar chain ~ fadd latency 4
+            SInt => c(0.3, 1.0),
+            Popcnt => c(1.0, 3.0),
+            VLoad => c(0.6, 7.0),
+            VExpandLoad => c(2.0, 7.0), // vexpandloadu: ~2 uops p5+load
+            VGather => c(14.0, 25.0),   // 8-lane gather: ~1.7 cyc/lane effective
+            // (SKX gathers defeat the prefetcher and split into per-lane uops)
+            VFma => c(0.55, 4.0),
+            VAdd => c(0.55, 4.0),
+            VShuffle => c(1.0, 3.0),
+            VReduceNative => c(4.0, 14.0), // compiler shuffle/add tree: lat 14 on the tail
+            VStore => c(1.0, 1.0),
+            VBcast => c(0.5, 3.0),
+            KMov => c(1.0, 2.0),
+            // SVE ops never appear here.
+            SvLoad | SvStore | SvCompact | SvDup | SvCmp | SvAnd | SvCntp | SvWhilelt
+            | SvFma | SvAdd | SvAddv | SvUzp => c(1000.0, 1000.0),
+        }
+    }
+    fn caches() -> Hierarchy {
+        Hierarchy::new(
+            vec![
+                Cache::new(32 * 1024, 8, 64),         // L1D 32 KB
+                Cache::new(1024 * 1024, 16, 64),      // L2 1 MB
+                Cache::new(25 * 1024 * 1024, 11, 64), // L3 25 MB shared (one core's view)
+            ],
+            vec![12.0, 38.0, 6.0],
+            170.0, // ~65 ns DRAM at 2.6 GHz
+            10.0,
+        )
+    }
+    Machine {
+        name: "Intel-AVX512 (Cascade Lake 6240)",
+        freq_ghz: 2.6,
+        cores_per_domain: 18,
+        domains: 2,
+        domain_bw_gbs: 105.0, // 6-channel DDR4-2933 per socket
+        core_bw_gbs: 15.0,
+        costs,
+        cache_builder: caches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topologies_match_paper() {
+        let a = a64fx();
+        assert_eq!(a.total_cores(), 48);
+        assert_eq!(a.domains, 4);
+        assert!((a.freq_ghz - 1.8).abs() < 1e-12);
+        let x = cascade_lake();
+        assert_eq!(x.total_cores(), 36);
+        assert_eq!(x.domains, 2);
+        assert!((x.freq_ghz - 2.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_cited_latencies() {
+        let a = a64fx();
+        assert_eq!(a.cost(Op::SvAddv).tail_latency, 12.0);
+        assert_eq!(a.cost(Op::SvUzp).tail_latency, 6.0);
+        assert_eq!(a.cost(Op::SvWhilelt).tail_latency, 4.0);
+    }
+
+    #[test]
+    fn wrong_isa_ops_are_poisoned() {
+        assert!(a64fx().cost(Op::VFma).issue >= 1000.0);
+        assert!(cascade_lake().cost(Op::SvFma).issue >= 1000.0);
+    }
+
+    #[test]
+    fn cache_geometries() {
+        let h = a64fx().new_hierarchy();
+        assert_eq!(h.levels.len(), 2);
+        assert_eq!(h.levels[0].line_bytes(), 256);
+        let h = cascade_lake().new_hierarchy();
+        assert_eq!(h.levels.len(), 3);
+        assert_eq!(h.levels[0].line_bytes(), 64);
+    }
+
+    #[test]
+    fn expand_cheaper_than_gather() {
+        // The structural reason SPC5 wins over gather-based CSR on AVX-512.
+        let x = cascade_lake();
+        assert!(x.cost(Op::VExpandLoad).issue < x.cost(Op::VGather).issue);
+    }
+}

@@ -1,0 +1,31 @@
+//! Performance models of the paper's two testbeds (§4.1).
+//!
+//! We do not have a Fujitsu A64FX or an Intel Cascade Lake machine; the
+//! simulated kernels in [`crate::kernels`] emit instruction/memory traces,
+//! and this module turns a trace into cycles — and therefore GFlop/s — for
+//! a specific machine:
+//!
+//! - [`cache`]: set-associative LRU caches with a stride-1 stream prefetcher,
+//!   composed into per-machine hierarchies;
+//! - [`machine`]: the two machine descriptions (frequencies, cache geometry,
+//!   per-instruction issue costs and latencies, per-core and per-domain
+//!   memory bandwidth). Latency values follow the A64FX microarchitecture
+//!   manual (the paper cites: `addv` 12, `uzp` 6, `whilelt` 4) and Agner
+//!   Fog's Skylake-X tables for the Intel side;
+//! - [`estimate`]: the [`crate::simd::trace::CostSink`] implementation that
+//!   integrates issue costs, dependency-chain penalties for the reduction
+//!   tails, cache stalls and a bandwidth roofline into a cycle count;
+//! - [`contention`]: the parallel extension for Fig 8 — per-thread traces
+//!   plus shared-bandwidth contention per NUMA node / CMG.
+//!
+//! Absolute GFlop/s are a model, not a measurement; the reproduction targets
+//! the paper's *relative* results (see DESIGN.md §Substitutions).
+
+pub mod cache;
+pub mod contention;
+pub mod estimate;
+pub mod machine;
+
+pub use contention::parallel_gflops;
+pub use estimate::{MachineSink, PerfReport};
+pub use machine::{cascade_lake, a64fx, Machine};

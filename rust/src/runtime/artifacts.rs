@@ -1,0 +1,246 @@
+//! Artifact discovery and the Rust-side construction of the kernel inputs.
+//!
+//! `aot.py` bakes the example problem's *shapes* into the HLO; the concrete
+//! arrays are built here, by the same deterministic conversion the Python
+//! side uses (β(1,VS), front-aligned values, per-block permutation). The
+//! `spmv_meta.json` file pins the shapes so a drifted artifact fails loudly
+//! instead of executing garbage.
+
+use std::path::{Path, PathBuf};
+
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::spc5::csr_to_spc5;
+use crate::util::json::Json;
+
+/// Parsed `spmv_meta.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub grid: usize,
+    pub n: usize,
+    pub vs: usize,
+    pub tile: usize,
+    pub nblocks: usize,
+    pub nblocks_padded: usize,
+    pub cg_iters: usize,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let field = |k: &str| -> Result<usize, String> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing field '{k}'"))
+        };
+        Ok(Self {
+            grid: field("grid")?,
+            n: field("n")?,
+            vs: field("vs")?,
+            tile: field("tile")?,
+            nblocks: field("nblocks")?,
+            nblocks_padded: field("nblocks_padded")?,
+            cg_iters: field("cg_iters")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("spmv_meta.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Default artifacts directory: `$SPC5_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SPC5_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// The TPU-layout SPC5 arrays (mirror of `python/compile/format.py`).
+#[derive(Clone, Debug)]
+pub struct Spc5Arrays {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub vs: usize,
+    pub nblocks: usize,
+    /// Padded length (multiple of the Pallas tile).
+    pub cols: Vec<i32>,
+    pub block_row: Vec<i32>,
+    /// (nblocks_padded × vs), row-major, front-aligned packed values.
+    pub vals: Vec<f32>,
+    /// (nblocks_padded × vs), row-major.
+    pub perm: Vec<i32>,
+    pub count: Vec<i32>,
+}
+
+impl Spc5Arrays {
+    pub fn nblocks_padded(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Build from a CSR matrix at β(1,vs), padding blocks to `tile`.
+    ///
+    /// Must stay bit-identical to `compile.format.csr_to_spc5` — the
+    /// integration test pins the two through the HLO artifact.
+    pub fn from_csr<T: Scalar>(m: &Csr<T>, vs: usize, tile: usize) -> Self {
+        let spc5 = csr_to_spc5(m, 1, vs);
+        let nblocks = spc5.nblocks();
+        let padded = if tile > 1 {
+            ((nblocks + tile - 1) / tile * tile).max(tile)
+        } else {
+            nblocks.max(1)
+        };
+
+        let mut cols = Vec::with_capacity(padded);
+        let mut block_row = Vec::with_capacity(padded);
+        let mut vals = vec![0.0f32; padded * vs];
+        let mut perm = vec![(vs - 1) as i32; padded * vs];
+        let mut count = Vec::with_capacity(padded);
+
+        let mut idx_val = 0usize;
+        for p in 0..spc5.npanels() {
+            for b in spc5.panel_blocks(p) {
+                let col = spc5.block_colidx[b];
+                let mask = spc5.masks[b]; // r = 1: one mask per block
+                let bi = cols.len();
+                cols.push(col as i32);
+                block_row.push(p as i32); // r = 1: panel == row
+                let mut k = 0usize;
+                for bit in 0..vs {
+                    if (mask >> bit) & 1 == 1 {
+                        vals[bi * vs + k] = spc5.vals[idx_val].to_f64() as f32;
+                        perm[bi * vs + k] = bit as i32;
+                        idx_val += 1;
+                        k += 1;
+                    }
+                }
+                count.push(k as i32);
+            }
+        }
+        debug_assert_eq!(idx_val, spc5.nnz());
+        // Padding blocks point one past the last row (dropped by the model's
+        // segment-sum).
+        while cols.len() < padded {
+            cols.push(0);
+            block_row.push(m.nrows as i32);
+            count.push(0);
+        }
+        Self {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            vs,
+            nblocks,
+            cols,
+            block_row,
+            vals,
+            perm,
+            count,
+        }
+    }
+
+    /// Filling statistic over real blocks (Table 1 semantics).
+    pub fn filling(&self) -> f64 {
+        if self.nblocks == 0 {
+            return 0.0;
+        }
+        let nnz: i64 = self.count.iter().map(|&c| c as i64).sum();
+        nnz as f64 / (self.nblocks * self.vs) as f64
+    }
+
+    /// Reference SpMV over this layout (used to cross-check the PJRT path).
+    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0f32; self.nrows + 1];
+        for b in 0..self.nblocks_padded() {
+            let col = self.cols[b] as usize;
+            let mut sum = 0.0f32;
+            for k in 0..self.count[b] as usize {
+                let off = self.perm[b * self.vs + k] as usize;
+                let xi = x[(col + off).min(self.ncols - 1)];
+                sum += self.vals[b * self.vs + k] * xi;
+            }
+            let row = self.block_row[b] as usize;
+            y[row.min(self.nrows)] += sum;
+        }
+        y.truncate(self.nrows);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn meta_parses() {
+        let text = r#"{"grid":32,"n":1024,"vs":16,"tile":128,"nblocks":3008,
+                       "nblocks_padded":3072,"cg_iters":64,"dtype":"f32","inputs":[]}"#;
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.n, 1024);
+        assert_eq!(m.vs, 16);
+        assert_eq!(m.nblocks_padded, 3072);
+        assert!(ArtifactMeta::parse("{}").is_err());
+    }
+
+    #[test]
+    fn arrays_match_python_shapes_for_poisson32() {
+        // The numbers baked in artifacts/spmv_meta.json (grid=32, vs=16,
+        // tile=128): the Rust conversion must reproduce them exactly.
+        let m: Csr<f64> = gen::poisson2d(32);
+        let a = Spc5Arrays::from_csr(&m, 16, 128);
+        assert_eq!(a.nrows, 1024);
+        assert_eq!(a.nblocks, 3008);
+        assert_eq!(a.nblocks_padded(), 3072);
+    }
+
+    #[test]
+    fn front_alignment_and_perm() {
+        // Row with nnz at cols {1, 3}: one block at col 1, values packed
+        // front-aligned, perm = [0, 2, dummy...].
+        let mut coo = crate::matrix::Coo::<f64>::new(1, 10);
+        coo.push(0, 1, 5.0);
+        coo.push(0, 3, 7.0);
+        let m = Csr::from_coo(coo);
+        let a = Spc5Arrays::from_csr(&m, 8, 1);
+        assert_eq!(a.nblocks, 1);
+        assert_eq!(a.cols[0], 1);
+        assert_eq!(&a.vals[..3], &[5.0, 7.0, 0.0]);
+        assert_eq!(&a.perm[..2], &[0, 2]);
+        assert_eq!(a.count[0], 2);
+    }
+
+    #[test]
+    fn spmv_ref_matches_csr() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 50,
+            ncols: 60,
+            nnz_per_row: 5.0,
+            run_len: 3.0,
+            ..Default::default()
+        }
+        .generate(4);
+        let a = Spc5Arrays::from_csr(&m, 16, 128);
+        let x: Vec<f32> = (0..60).map(|i| i as f32 * 0.1).collect();
+        let got = a.spmv_ref(&x);
+        let m32: Csr<f32> = {
+            let coo = m.to_coo();
+            let mut c2 = crate::matrix::Coo::<f32>::new(50, 60);
+            for i in 0..coo.nnz() {
+                c2.push(coo.rows[i] as usize, coo.cols[i] as usize, coo.vals[i] as f32);
+            }
+            Csr::from_coo(c2)
+        };
+        let mut want = vec![0.0f32; 50];
+        m32.spmv(&x, &mut want);
+        crate::scalar::assert_allclose(&got, &want, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn filling_of_dense_rows() {
+        let m: Csr<f64> = gen::dense(16, 0);
+        let a = Spc5Arrays::from_csr(&m, 8, 1);
+        assert!((a.filling() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! The three-layer contract: Python (JAX + Pallas) lowers the model once at
+//! build time to HLO *text* (`make artifacts`); this module compiles those
+//! artifacts on the PJRT CPU client and executes them from the Rust request
+//! path. Python is never loaded at runtime.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactMeta, Spc5Arrays};
+pub use pjrt::PjrtRunner;

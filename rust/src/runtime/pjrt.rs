@@ -1,0 +1,87 @@
+//! The PJRT bridge: HLO text → compiled executable → execution.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{ArtifactMeta, Spc5Arrays};
+
+/// A PJRT CPU client with the two compiled artifacts.
+pub struct PjrtRunner {
+    client: xla::PjRtClient,
+    spmv: xla::PjRtLoadedExecutable,
+    cg: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl PjrtRunner {
+    /// Load and compile `spmv_f32.hlo.txt` + `cg_f32.hlo.txt` from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = ArtifactMeta::load(dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let spmv = Self::compile(&client, &dir.join("spmv_f32.hlo.txt"))?;
+        let cg = Self::compile(&client, &dir.join("cg_f32.hlo.txt"))?;
+        Ok(Self { client, spmv, cg, meta })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).with_context(|| format!("compile {}", path.display()))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn inputs(&self, arrays: &Spc5Arrays, x: &[f32]) -> Result<[xla::Literal; 5]> {
+        let b = arrays.nblocks_padded() as i64;
+        let vs = arrays.vs as i64;
+        anyhow::ensure!(
+            arrays.nblocks_padded() == self.meta.nblocks_padded
+                && arrays.vs == self.meta.vs
+                && arrays.nrows == self.meta.n,
+            "array shapes do not match the compiled artifact (run `make artifacts`?)"
+        );
+        anyhow::ensure!(x.len() == self.meta.n, "x length {} != n {}", x.len(), self.meta.n);
+        Ok([
+            xla::Literal::vec1(&arrays.cols),
+            xla::Literal::vec1(&arrays.block_row),
+            xla::Literal::vec1(&arrays.vals).reshape(&[b, vs])?,
+            xla::Literal::vec1(&arrays.perm).reshape(&[b, vs])?,
+            xla::Literal::vec1(x),
+        ])
+    }
+
+    /// Execute the SpMV artifact: `y = A·x`.
+    pub fn spmv(&self, arrays: &Spc5Arrays, x: &[f32]) -> Result<Vec<f32>> {
+        let inputs = self.inputs(arrays, x)?;
+        let result = self.spmv.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let y = result.to_tuple1().context("unwrap 1-tuple")?;
+        Ok(y.to_vec::<f32>()?)
+    }
+
+    /// Execute the fixed-iteration CG artifact: returns `(x, ‖r‖)`.
+    pub fn cg_solve(&self, arrays: &Spc5Arrays, b: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let inputs = self.inputs(arrays, b)?;
+        let result = self.cg.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (x, rnorm) = result.to_tuple2().context("unwrap 2-tuple")?;
+        Ok((x.to_vec::<f32>()?, rnorm.get_first_element::<f32>()?))
+    }
+}
+
+// PJRT execution tests live in rust/tests/runtime_pjrt.rs (they need the
+// artifacts built); unit tests here only cover pure logic.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loading_missing_dir_gives_actionable_error() {
+        match PjrtRunner::load(Path::new("/nonexistent")) {
+            Ok(_) => panic!("expected error"),
+            Err(err) => assert!(err.to_string().contains("make artifacts"), "{err}"),
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! The floating-point scalar abstraction.
+//!
+//! The paper evaluates everything in both single (`f32`) and double (`f64`)
+//! precision; every kernel, format and model in this crate is generic over
+//! [`Scalar`]. The vector length (`VS` in the paper) follows from the scalar
+//! width and the 512-bit vector registers of both target ISAs.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// A floating point scalar usable by the kernels (implemented for `f32`/`f64`).
+pub trait Scalar:
+    Copy
+    + Default
+    + Debug
+    + Display
+    + PartialOrd
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + Sum
+    + Send
+    + Sync
+    + 'static
+{
+    /// Size in bytes (4 or 8).
+    const BYTES: usize;
+    /// Short name used in reports ("f32" / "f64"), matching the paper's
+    /// float/double columns.
+    const NAME: &'static str;
+    /// Number of lanes in one 512-bit vector: `VS` in the paper
+    /// (16 for f32, 8 for f64 — §4.1).
+    const VS: usize;
+
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn is_finite(self) -> bool;
+    /// Machine epsilon.
+    fn eps() -> Self;
+}
+
+impl Scalar for f32 {
+    const BYTES: usize = 4;
+    const NAME: &'static str = "f32";
+    const VS: usize = 16;
+
+    #[inline(always)]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline(always)]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f32::mul_add(self, a, b)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+    #[inline(always)]
+    fn eps() -> Self {
+        f32::EPSILON
+    }
+}
+
+impl Scalar for f64 {
+    const BYTES: usize = 8;
+    const NAME: &'static str = "f64";
+    const VS: usize = 8;
+
+    #[inline(always)]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline(always)]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f64::mul_add(self, a, b)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+    #[inline(always)]
+    fn eps() -> Self {
+        f64::EPSILON
+    }
+}
+
+/// Relative-tolerance comparison used by the numeric test suites: true when
+/// `|a-b| <= atol + rtol*max(|a|,|b|)`.
+pub fn approx_eq<T: Scalar>(a: T, b: T, rtol: f64, atol: f64) -> bool {
+    let (a, b) = (a.to_f64(), b.to_f64());
+    (a - b).abs() <= atol + rtol * a.abs().max(b.abs())
+}
+
+/// Assert two slices are element-wise approx-equal; panics with the first
+/// offending index.
+pub fn assert_allclose<T: Scalar>(got: &[T], want: &[T], rtol: f64, atol: f64) {
+    assert_eq!(got.len(), want.len(), "length mismatch {} vs {}", got.len(), want.len());
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            approx_eq(g, w, rtol, atol),
+            "mismatch at [{i}]: got {g}, want {w} (rtol={rtol}, atol={atol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_lengths_match_paper() {
+        // §4.1: a 512-bit vector holds 16 f32 or 8 f64.
+        assert_eq!(<f32 as Scalar>::VS, 16);
+        assert_eq!(<f64 as Scalar>::VS, 8);
+        assert_eq!(<f32 as Scalar>::BYTES * <f32 as Scalar>::VS, 64);
+        assert_eq!(<f64 as Scalar>::BYTES * <f64 as Scalar>::VS, 64);
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        assert!(approx_eq(1.0f64, 1.0 + 1e-13, 1e-12, 0.0));
+        assert!(!approx_eq(1.0f64, 1.1, 1e-12, 0.0));
+        assert!(approx_eq(0.0f32, 1e-9f32, 0.0, 1e-8));
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at [1]")]
+    fn allclose_reports_index() {
+        assert_allclose(&[1.0f64, 2.0], &[1.0, 3.0], 1e-12, 0.0);
+    }
+
+    #[test]
+    fn mul_add_fused() {
+        assert_eq!(2.0f64.mul_add(3.0, 4.0), 10.0);
+        assert_eq!(<f32 as Scalar>::mul_add(2.0, 3.0, 4.0), 10.0);
+    }
+}

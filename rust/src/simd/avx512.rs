@@ -1,0 +1,303 @@
+//! AVX-512 intrinsic semantics (Cascade Lake flavour).
+//!
+//! Each function mirrors one intrinsic (or one compiler-synthesized sequence)
+//! used by the SPC5 AVX-512 kernel of Algorithm 1, computing the exact lane
+//! values and reporting the instruction + memory traffic to the sink.
+
+use crate::scalar::Scalar;
+
+use super::trace::{Op, SimCtx};
+use super::vreg::{VReg, VSlice, VSliceMut};
+
+/// `_mm512_loadu_*`: full-width load of `VS` elements starting at `idx`.
+/// Reads past the end of the array return zero (kernels pad `x` by `VS`, but
+/// the simulator stays safe regardless); the memory system is still charged
+/// for the full vector, as the hardware would be.
+pub fn loadu<T: Scalar>(ctx: &mut SimCtx, src: &VSlice<T>, idx: usize) -> VReg<T> {
+    ctx.op(Op::VLoad);
+    ctx.mem(src.addr(idx), (ctx.vs * T::BYTES) as u32, false);
+    let mut v = VReg::zero(ctx.vs);
+    for (lane, out) in v.lanes.iter_mut().enumerate() {
+        if let Some(&x) = src.data.get(idx + lane) {
+            *out = x;
+        }
+    }
+    v
+}
+
+/// `_mm512_maskz_expandloadu_*`: load `popcount(mask)` *contiguous* elements
+/// from `src[idx..]` and scatter them to the lanes whose mask bit is set
+/// (zeroing the rest). This is the single instruction that makes the packed
+/// SPC5 value array consumable on AVX-512 (§3, Fig 3 left).
+pub fn maskz_expandloadu<T: Scalar>(
+    ctx: &mut SimCtx,
+    mask: u64,
+    src: &VSlice<T>,
+    idx: usize,
+) -> VReg<T> {
+    ctx.op(Op::VExpandLoad);
+    let count = (mask & lane_mask(ctx.vs)).count_ones() as usize;
+    ctx.mem(src.addr(idx), (count * T::BYTES) as u32, false);
+    let mut v = VReg::zero(ctx.vs);
+    let mut next = 0usize;
+    for lane in 0..ctx.vs {
+        if (mask >> lane) & 1 == 1 {
+            v.lanes[lane] = src.data.get(idx + next).copied().unwrap_or_else(T::zero);
+            next += 1;
+        }
+    }
+    debug_assert_eq!(next, count);
+    v
+}
+
+/// `_mm512_i32gather_*`: indexed gather — used by the vectorized-CSR
+/// baseline (MKL stand-in), not by SPC5 itself. One memory transaction per
+/// active lane.
+pub fn gather<T: Scalar>(ctx: &mut SimCtx, src: &VSlice<T>, indices: &[u32]) -> VReg<T> {
+    ctx.op(Op::VGather);
+    let mut v = VReg::zero(ctx.vs);
+    for (lane, &i) in indices.iter().take(ctx.vs).enumerate() {
+        ctx.mem(src.addr(i as usize), T::BYTES as u32, false);
+        v.lanes[lane] = src.data.get(i as usize).copied().unwrap_or_else(T::zero);
+    }
+    v
+}
+
+/// `_mm512_fmadd_*`: `a*b + c` per lane.
+pub fn fmadd<T: Scalar>(ctx: &mut SimCtx, a: &VReg<T>, b: &VReg<T>, c: &VReg<T>) -> VReg<T> {
+    ctx.op(Op::VFma);
+    zip3(a, b, c, |x, y, z| x.mul_add(y, z))
+}
+
+/// `_mm512_add_*`.
+pub fn add<T: Scalar>(ctx: &mut SimCtx, a: &VReg<T>, b: &VReg<T>) -> VReg<T> {
+    ctx.op(Op::VAdd);
+    zip2(a, b, |x, y| x + y)
+}
+
+/// `_mm512_set1_*` broadcast.
+pub fn broadcast<T: Scalar>(ctx: &mut SimCtx, v: T) -> VReg<T> {
+    ctx.op(Op::VBcast);
+    VReg::splat(ctx.vs, v)
+}
+
+/// `_mm512_reduce_add_*`: the *compiler-provided* horizontal sum (§4.3 notes
+/// it is not a hardware instruction — GCC expands it to a shuffle/add tree).
+/// Charged as one `VReduceNative` macro-op; the cost table expands it.
+pub fn reduce_add<T: Scalar>(ctx: &mut SimCtx, v: &VReg<T>) -> T {
+    ctx.op(Op::VReduceNative);
+    // Pairwise tree, matching the avx512fintrin.h expansion order.
+    tree_hsum(&v.lanes)
+}
+
+/// Manual multi-reduction (§3.2): reduce `k ≤ VS` accumulator vectors into a
+/// single vector whose lane `i` holds `hsum(vecs[i])`, so `y` can be updated
+/// with one vector add + store instead of `k` scalar round-trips. Implemented
+/// on hardware by a `hadd` tree over AVX/SSE sub-registers; charged as
+/// `k·log2(VS)` shuffle+add pairs (the factorized tree the paper describes).
+pub fn multi_reduce<T: Scalar>(ctx: &mut SimCtx, vecs: &[VReg<T>]) -> VReg<T> {
+    let k = vecs.len();
+    assert!(k >= 1 && k <= ctx.vs);
+    let levels = ctx.vs.trailing_zeros() as u64;
+    ctx.ops(Op::VShuffle, k as u64 * levels);
+    ctx.ops(Op::VAdd, k as u64 * levels);
+    let mut out = VReg::zero(ctx.vs);
+    for (i, v) in vecs.iter().enumerate() {
+        out.lanes[i] = tree_hsum(&v.lanes);
+    }
+    out
+}
+
+/// `_mm512_storeu_*`: full-width store.
+pub fn storeu<T: Scalar>(ctx: &mut SimCtx, dst: &mut VSliceMut<T>, idx: usize, v: &VReg<T>) {
+    ctx.op(Op::VStore);
+    ctx.mem(dst.addr(idx), (ctx.vs * T::BYTES) as u32, true);
+    for (lane, &val) in v.lanes.iter().enumerate() {
+        if let Some(slot) = dst.data.get_mut(idx + lane) {
+            *slot = val;
+        }
+    }
+}
+
+/// Masked store of the low `count` lanes (`_mm512_mask_storeu_*` with a
+/// `(1<<count)-1` mask) — used for the tail of the y update.
+pub fn mask_store_prefix<T: Scalar>(
+    ctx: &mut SimCtx,
+    dst: &mut VSliceMut<T>,
+    idx: usize,
+    v: &VReg<T>,
+    count: usize,
+) {
+    ctx.op(Op::VStore);
+    ctx.op(Op::KMov);
+    ctx.mem(dst.addr(idx), (count * T::BYTES) as u32, true);
+    for lane in 0..count.min(ctx.vs) {
+        if let Some(slot) = dst.data.get_mut(idx + lane) {
+            *slot = v.lanes[lane];
+        }
+    }
+}
+
+fn lane_mask(vs: usize) -> u64 {
+    if vs >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << vs) - 1
+    }
+}
+
+fn zip2<T: Scalar>(a: &VReg<T>, b: &VReg<T>, f: impl Fn(T, T) -> T) -> VReg<T> {
+    assert_eq!(a.vs(), b.vs());
+    VReg { lanes: a.lanes.iter().zip(&b.lanes).map(|(&x, &y)| f(x, y)).collect() }
+}
+
+fn zip3<T: Scalar>(a: &VReg<T>, b: &VReg<T>, c: &VReg<T>, f: impl Fn(T, T, T) -> T) -> VReg<T> {
+    assert_eq!(a.vs(), b.vs());
+    assert_eq!(a.vs(), c.vs());
+    VReg {
+        lanes: a
+            .lanes
+            .iter()
+            .zip(&b.lanes)
+            .zip(&c.lanes)
+            .map(|((&x, &y), &z)| f(x, y, z))
+            .collect(),
+    }
+}
+
+/// Pairwise summation tree (numerically matches the hadd sequence better
+/// than left-to-right accumulation).
+fn tree_hsum<T: Scalar>(lanes: &[T]) -> T {
+    match lanes.len() {
+        0 => T::zero(),
+        1 => lanes[0],
+        n => {
+            let (lo, hi) = lanes.split_at(n / 2);
+            tree_hsum(lo) + tree_hsum(hi)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::trace::{CountingSink, SimCtx};
+    use crate::simd::vreg::{vslice, AddressSpace};
+
+    fn ctx_with(vs: usize, sink: &mut CountingSink) -> SimCtx<'_> {
+        SimCtx::new(vs, sink)
+    }
+
+    #[test]
+    fn loadu_reads_and_charges_full_vector() {
+        let mut sink = CountingSink::new();
+        let mut ctx = ctx_with(8, &mut sink);
+        let mut space = AddressSpace::new();
+        let data: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let s = vslice(&mut space, &data);
+        let v = loadu(&mut ctx, &s, 1);
+        assert_eq!(v.lanes, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(sink.count(Op::VLoad), 1);
+        assert_eq!(sink.load_bytes, 64);
+    }
+
+    #[test]
+    fn loadu_past_end_is_zero() {
+        let mut sink = CountingSink::new();
+        let mut ctx = ctx_with(8, &mut sink);
+        let mut space = AddressSpace::new();
+        let data = [1.0f64, 2.0];
+        let s = vslice(&mut space, &data);
+        let v = loadu(&mut ctx, &s, 1);
+        assert_eq!(v.lanes[0], 2.0);
+        assert!(v.lanes[1..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn expandload_matches_paper_fig3() {
+        // Fig 3: mask 1101 (MSB..LSB) = lanes {0,2,3} -> values L,M,N expand
+        // to [L, 0, M, N, ...].
+        let mut sink = CountingSink::new();
+        let mut ctx = ctx_with(8, &mut sink);
+        let mut space = AddressSpace::new();
+        let packed = [10.0f64, 20.0, 30.0]; // L, M, N
+        let s = vslice(&mut space, &packed);
+        let v = maskz_expandloadu(&mut ctx, 0b1101, &s, 0);
+        assert_eq!(v.lanes, vec![10.0, 0.0, 20.0, 30.0, 0.0, 0.0, 0.0, 0.0]);
+        // Only 3 elements worth of memory traffic (the format's whole point).
+        assert_eq!(sink.load_bytes, 24);
+        assert_eq!(sink.count(Op::VExpandLoad), 1);
+    }
+
+    #[test]
+    fn fma_and_add_lanes() {
+        let mut sink = CountingSink::new();
+        let mut ctx = ctx_with(4, &mut sink);
+        let a = VReg { lanes: vec![1.0f32, 2.0, 3.0, 4.0] };
+        let b = VReg { lanes: vec![10.0f32, 10.0, 10.0, 10.0] };
+        let c = VReg { lanes: vec![1.0f32, 1.0, 1.0, 1.0] };
+        let r = fmadd(&mut ctx, &a, &b, &c);
+        assert_eq!(r.lanes, vec![11.0, 21.0, 31.0, 41.0]);
+        let s = add(&mut ctx, &a, &b);
+        assert_eq!(s.lanes, vec![11.0, 12.0, 13.0, 14.0]);
+        assert_eq!(sink.count(Op::VFma), 1);
+        assert_eq!(sink.count(Op::VAdd), 1);
+    }
+
+    #[test]
+    fn reduce_add_sums_lanes() {
+        let mut sink = CountingSink::new();
+        let mut ctx = ctx_with(8, &mut sink);
+        let v = VReg { lanes: (1..=8).map(|i| i as f64).collect() };
+        assert_eq!(reduce_add(&mut ctx, &v), 36.0);
+        assert_eq!(sink.count(Op::VReduceNative), 1);
+    }
+
+    #[test]
+    fn multi_reduce_lane_placement_and_cost() {
+        let mut sink = CountingSink::new();
+        let mut ctx = ctx_with(8, &mut sink);
+        let vecs: Vec<VReg<f64>> = (0..4)
+            .map(|k| VReg { lanes: vec![(k + 1) as f64; 8] })
+            .collect();
+        let r = multi_reduce(&mut ctx, &vecs);
+        assert_eq!(&r.lanes[..4], &[8.0, 16.0, 24.0, 32.0]);
+        assert!(r.lanes[4..].iter().all(|&x| x == 0.0));
+        // 4 vectors × log2(8)=3 levels of shuffle+add.
+        assert_eq!(sink.count(Op::VShuffle), 12);
+        assert_eq!(sink.count(Op::VAdd), 12);
+    }
+
+    #[test]
+    fn gather_charges_per_lane() {
+        let mut sink = CountingSink::new();
+        let mut ctx = ctx_with(4, &mut sink);
+        let mut space = AddressSpace::new();
+        let data: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let s = vslice(&mut space, &data);
+        let v = gather(&mut ctx, &s, &[5, 50, 7, 99]);
+        assert_eq!(v.lanes, vec![5.0, 50.0, 7.0, 99.0]);
+        assert_eq!(sink.loads, 4);
+        assert_eq!(sink.load_bytes, 16);
+    }
+
+    #[test]
+    fn stores_write_through() {
+        let mut sink = CountingSink::new();
+        let mut ctx = ctx_with(4, &mut sink);
+        let mut space = AddressSpace::new();
+        let mut data = vec![0.0f64; 8];
+        let base = space.alloc(64);
+        let mut d = VSliceMut::new(&mut data, base, 8);
+        let v = VReg { lanes: vec![1.0, 2.0, 3.0, 4.0] };
+        storeu(&mut ctx, &mut d, 2, &v);
+        assert_eq!(data[2..6], [1.0, 2.0, 3.0, 4.0]);
+        let mut d = VSliceMut::new(&mut data, base, 8);
+        let w = VReg { lanes: vec![9.0, 9.0, 9.0, 9.0] };
+        mask_store_prefix(&mut ctx, &mut d, 0, &w, 2);
+        // First store put lanes [1,2,3,4] at data[2..6]; prefix store
+        // overwrites only the first two slots.
+        assert_eq!(data[..3], [9.0, 9.0, 1.0]);
+        assert_eq!(sink.store_bytes, 32 + 16);
+    }
+}

@@ -1,0 +1,24 @@
+//! Vector-ISA simulator.
+//!
+//! The paper's kernels target two real 512-bit SIMD ISAs we do not have in
+//! this environment: x86 AVX-512 (Cascade Lake) and ARM SVE (A64FX). This
+//! module executes the kernels *semantics-exactly* in software — every
+//! intrinsic the paper uses is a function here that (a) computes the real
+//! lane values, and (b) reports the instruction and its memory traffic to a
+//! [`trace::CostSink`]. The performance model in [`crate::perfmodel`]
+//! implements a sink that charges per-instruction issue costs (from the
+//! A64FX microarchitecture manual the paper cites, and Agner Fog's Skylake-X
+//! tables) plus cache/memory stalls — see DESIGN.md §Substitutions.
+//!
+//! Numerics and cost accounting are inseparable by construction: the same
+//! call both produces the arithmetic result and the trace event, so a kernel
+//! cannot accidentally be "measured" on a different code path than the one
+//! that computes.
+
+pub mod avx512;
+pub mod sve;
+pub mod trace;
+pub mod vreg;
+
+pub use trace::{CostSink, CountingSink, NullSink, Op, SimCtx};
+pub use vreg::{AddressSpace, Pred, VReg, VSlice, VSliceMut};

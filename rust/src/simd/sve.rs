@@ -1,0 +1,291 @@
+//! ARM SVE intrinsic semantics (A64FX flavour).
+//!
+//! SVE has no expand-load; the SPC5 SVE kernel (§3, Fig 3 right) instead
+//! *compacts* the x values down to the packed non-zero positions:
+//!
+//! ```text
+//! mask_vec  = svand(svdup(valMask), filter)      // filter = [1<<0, ..]
+//! active    = svcmpne(mask_vec, 0)
+//! increment = svcntp(active)
+//! xvals     = svcompact(active, svld1(active, &x[idxCol]))
+//! block     = svld1(svwhilelt(0, increment), &values[idxVal])
+//! sum      += block * xvals
+//! ```
+//!
+//! Every function mirrors one ACLE intrinsic, computes exact lane values and
+//! reports the instruction + memory traffic.
+
+use crate::scalar::Scalar;
+
+use super::trace::{Op, SimCtx};
+use super::vreg::{Pred, VReg, VSlice, VSliceMut};
+
+/// `svdup_n_u64`: broadcast a mask word to all lanes (as integers).
+pub fn svdup_u64(ctx: &mut SimCtx, v: u64) -> Vec<u64> {
+    ctx.op(Op::SvDup);
+    vec![v; ctx.vs]
+}
+
+/// The filter vector `[1<<0, 1<<1, ..., 1<<(VS-1)]` (Algorithm 1 line 4).
+/// Built once per kernel invocation (svindex + svlsl); charged as two ops.
+pub fn filter_vector(ctx: &mut SimCtx) -> Vec<u64> {
+    ctx.op(Op::SvDup);
+    ctx.op(Op::SvAnd); // index+shift pair approximated
+    (0..ctx.vs).map(|i| 1u64 << i).collect()
+}
+
+/// `svand_u64_z`: lane-wise and.
+pub fn svand(ctx: &mut SimCtx, a: &[u64], b: &[u64]) -> Vec<u64> {
+    ctx.op(Op::SvAnd);
+    a.iter().zip(b).map(|(&x, &y)| x & y).collect()
+}
+
+/// `svcmpne_n_u64`: predicate of lanes != 0.
+pub fn svcmpne0(ctx: &mut SimCtx, a: &[u64]) -> Pred {
+    ctx.op(Op::SvCmp);
+    Pred { lanes: a.iter().map(|&x| x != 0).collect() }
+}
+
+/// `svcntp_b`: number of active predicate lanes.
+pub fn svcntp(ctx: &mut SimCtx, p: &Pred) -> usize {
+    ctx.op(Op::SvCntp);
+    p.count()
+}
+
+/// `svwhilelt_b`: predicate with the first `n` lanes active.
+pub fn svwhilelt(ctx: &mut SimCtx, n: usize) -> Pred {
+    ctx.op(Op::SvWhilelt);
+    Pred { lanes: (0..ctx.vs).map(|i| i < n).collect() }
+}
+
+/// `svld1`: predicated contiguous load from `src[idx..]`. Inactive lanes are
+/// zero. Memory charge: the span up to the last active lane — §3.1 observes
+/// the hardware cost of a predicated load depends on the *location* of the
+/// data, not on how many predicate lanes are false, so a partial load of a
+/// span still touches the same cache lines a full load would.
+pub fn svld1<T: Scalar>(ctx: &mut SimCtx, pred: &Pred, src: &VSlice<T>, idx: usize) -> VReg<T> {
+    assert_eq!(pred.vs(), ctx.vs);
+    ctx.op(Op::SvLoad);
+    let span = pred.lanes.iter().rposition(|&b| b).map_or(0, |p| p + 1);
+    if span > 0 {
+        ctx.mem(src.addr(idx), (span * T::BYTES) as u32, false);
+    }
+    let mut v = VReg::zero(ctx.vs);
+    for lane in 0..ctx.vs {
+        if pred.lanes[lane] {
+            v.lanes[lane] = src.data.get(idx + lane).copied().unwrap_or_else(T::zero);
+        }
+    }
+    v
+}
+
+/// `svcompact`: pack the active lanes of `v` to the front (Fig 3 right).
+pub fn svcompact<T: Scalar>(ctx: &mut SimCtx, pred: &Pred, v: &VReg<T>) -> VReg<T> {
+    assert_eq!(pred.vs(), v.vs());
+    ctx.op(Op::SvCompact);
+    let mut out = VReg::zero(v.vs());
+    let mut next = 0usize;
+    for lane in 0..v.vs() {
+        if pred.lanes[lane] {
+            out.lanes[next] = v.lanes[lane];
+            next += 1;
+        }
+    }
+    out
+}
+
+/// `svmla` (fused multiply-accumulate): `acc + a*b` per lane.
+pub fn svmla<T: Scalar>(ctx: &mut SimCtx, acc: &VReg<T>, a: &VReg<T>, b: &VReg<T>) -> VReg<T> {
+    ctx.op(Op::SvFma);
+    assert_eq!(acc.vs(), a.vs());
+    assert_eq!(a.vs(), b.vs());
+    VReg {
+        lanes: acc
+            .lanes
+            .iter()
+            .zip(&a.lanes)
+            .zip(&b.lanes)
+            .map(|((&c, &x), &y)| x.mul_add(y, c))
+            .collect(),
+    }
+}
+
+/// `svadd`.
+pub fn svadd<T: Scalar>(ctx: &mut SimCtx, a: &VReg<T>, b: &VReg<T>) -> VReg<T> {
+    ctx.op(Op::SvAdd);
+    assert_eq!(a.vs(), b.vs());
+    VReg { lanes: a.lanes.iter().zip(&b.lanes).map(|(&x, &y)| x + y).collect() }
+}
+
+/// `svaddv`: native horizontal sum (latency 12 on A64FX — §4.3).
+pub fn svaddv<T: Scalar>(ctx: &mut SimCtx, v: &VReg<T>) -> T {
+    ctx.op(Op::SvAddv);
+    tree_hsum(&v.lanes)
+}
+
+/// Manual multi-reduction (§3.2, SVE flavour): reduce `k` accumulators into
+/// one vector (lane `i` = hsum of accumulator `i`) using `svuzp1`/`svuzp2`
+/// interleaves. Unlike AVX-512 the vector length is unknown at compile time,
+/// so the hardware implementation loops log2(VS) times; the charge is
+/// `k·log2(VS)` uzp pairs + adds, which lands near the ~96-cycle latency the
+/// paper derives for the tail.
+pub fn sve_multi_reduce<T: Scalar>(ctx: &mut SimCtx, vecs: &[VReg<T>]) -> VReg<T> {
+    let k = vecs.len();
+    assert!(k >= 1 && k <= ctx.vs);
+    let levels = ctx.vs.trailing_zeros() as u64;
+    ctx.ops(Op::SvUzp, 2 * k as u64 * levels / 2); // uzp1+uzp2 per pair-level
+    ctx.ops(Op::SvAdd, k as u64 * levels);
+    ctx.op(Op::SvWhilelt);
+    let mut out = VReg::zero(ctx.vs);
+    for (i, v) in vecs.iter().enumerate() {
+        out.lanes[i] = tree_hsum(&v.lanes);
+    }
+    out
+}
+
+/// `svst1`: predicated store of the first `count` lanes.
+pub fn svst1_prefix<T: Scalar>(
+    ctx: &mut SimCtx,
+    dst: &mut VSliceMut<T>,
+    idx: usize,
+    v: &VReg<T>,
+    count: usize,
+) {
+    ctx.op(Op::SvStore);
+    let n = count.min(ctx.vs);
+    if n > 0 {
+        ctx.mem(dst.addr(idx), (n * T::BYTES) as u32, true);
+    }
+    for lane in 0..n {
+        if let Some(slot) = dst.data.get_mut(idx + lane) {
+            *slot = v.lanes[lane];
+        }
+    }
+}
+
+fn tree_hsum<T: Scalar>(lanes: &[T]) -> T {
+    match lanes.len() {
+        0 => T::zero(),
+        1 => lanes[0],
+        n => {
+            let (lo, hi) = lanes.split_at(n / 2);
+            tree_hsum(lo) + tree_hsum(hi)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::trace::{CountingSink, SimCtx};
+    use crate::simd::vreg::{vslice, AddressSpace};
+
+    #[test]
+    fn filter_and_mask_pipeline_matches_algorithm1() {
+        // valMask = 0b1101 -> active lanes {0,2,3}, increment 3.
+        let mut sink = CountingSink::new();
+        let mut ctx = SimCtx::new(8, &mut sink);
+        let filter = filter_vector(&mut ctx);
+        assert_eq!(filter[3], 8);
+        let dup = svdup_u64(&mut ctx, 0b1101);
+        let masked = svand(&mut ctx, &dup, &filter);
+        let active = svcmpne0(&mut ctx, &masked);
+        assert_eq!(active.lanes[..4], [true, false, true, true]);
+        assert_eq!(svcntp(&mut ctx, &active), 3);
+    }
+
+    #[test]
+    fn svld1_respects_predicate_and_span() {
+        let mut sink = CountingSink::new();
+        let mut ctx = SimCtx::new(8, &mut sink);
+        let mut space = AddressSpace::new();
+        let data: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let s = vslice(&mut space, &data);
+        let pred = Pred::from_mask(8, 0b0000_1101);
+        let v = svld1(&mut ctx, &pred, &s, 4);
+        assert_eq!(v.lanes, vec![4.0, 0.0, 6.0, 7.0, 0.0, 0.0, 0.0, 0.0]);
+        // Span = lanes 0..=3 -> 4 elements charged.
+        assert_eq!(sink.load_bytes, 32);
+    }
+
+    #[test]
+    fn svcompact_packs_like_fig3() {
+        // Fig 3 right: compact [L,_,M,N] with mask 1101 -> [L,M,N,0...].
+        let mut sink = CountingSink::new();
+        let mut ctx = SimCtx::new(8, &mut sink);
+        let v = VReg { lanes: vec![10.0f64, -1.0, 20.0, 30.0, -1.0, -1.0, -1.0, -1.0] };
+        let pred = Pred::from_mask(8, 0b1101);
+        let c = svcompact(&mut ctx, &pred, &v);
+        assert_eq!(c.lanes, vec![10.0, 20.0, 30.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn compact_of_x_equals_expand_of_values_dual() {
+        // The two ISA strategies must produce the same dot-product: expand
+        // the packed values (AVX) vs compact the x window (SVE).
+        use crate::simd::avx512;
+        let mut sink = CountingSink::new();
+        let mask: u64 = 0b0110_1001;
+        let packed = [2.0f64, 3.0, 4.0, 5.0];
+        let xwin: Vec<f64> = (10..18).map(|i| i as f64).collect();
+        let mut space = AddressSpace::new();
+        let pslice = vslice(&mut space, &packed);
+        let xslice = vslice(&mut space, &xwin);
+
+        // AVX: expand packed values, multiply by full x window, sum.
+        let mut ctx = SimCtx::new(8, &mut sink);
+        let vexp = avx512::maskz_expandloadu(&mut ctx, mask, &pslice, 0);
+        let xfull = avx512::loadu(&mut ctx, &xslice, 0);
+        let prod = avx512::fmadd(&mut ctx, &vexp, &xfull, &VReg::zero(8));
+        let avx_sum = avx512::reduce_add(&mut ctx, &prod);
+
+        // SVE: compact x window, multiply by contiguous packed load, sum.
+        let pred = Pred::from_mask(8, mask);
+        let xv = svld1(&mut ctx, &pred, &xslice, 0);
+        let xc = svcompact(&mut ctx, &pred, &xv);
+        let n = svcntp(&mut ctx, &pred);
+        let wl = svwhilelt(&mut ctx, n);
+        let vals = svld1(&mut ctx, &wl, &pslice, 0);
+        let prod = svmla(&mut ctx, &VReg::zero(8), &vals, &xc);
+        let sve_sum = svaddv(&mut ctx, &prod);
+
+        assert!((avx_sum - sve_sum).abs() < 1e-12);
+        // Ground truth: 2*10 + 3*13 + 4*15 + 5*16 (mask bits 0,3,5,6)
+        assert!((avx_sum - (20.0 + 39.0 + 60.0 + 80.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_reduce_places_sums() {
+        let mut sink = CountingSink::new();
+        let mut ctx = SimCtx::new(8, &mut sink);
+        let vecs: Vec<VReg<f64>> = (0..2).map(|k| VReg::splat(8, (k + 1) as f64)).collect();
+        let r = sve_multi_reduce(&mut ctx, &vecs);
+        assert_eq!(&r.lanes[..2], &[8.0, 16.0]);
+        assert!(sink.count(Op::SvUzp) > 0);
+        assert!(sink.count(Op::SvAdd) > 0);
+    }
+
+    #[test]
+    fn svaddv_and_store() {
+        let mut sink = CountingSink::new();
+        let mut ctx = SimCtx::new(4, &mut sink);
+        let v = VReg { lanes: vec![1.0f32, 2.0, 3.0, 4.0] };
+        assert_eq!(svaddv(&mut ctx, &v), 10.0);
+        let mut space = AddressSpace::new();
+        let mut y = vec![0.0f32; 4];
+        let base = space.alloc(16);
+        let mut d = VSliceMut::new(&mut y, base, 4);
+        svst1_prefix(&mut ctx, &mut d, 1, &v, 2);
+        assert_eq!(y, vec![0.0, 1.0, 2.0, 0.0]);
+        assert_eq!(sink.store_bytes, 8);
+    }
+
+    #[test]
+    fn whilelt_prefix() {
+        let mut sink = CountingSink::new();
+        let mut ctx = SimCtx::new(8, &mut sink);
+        let p = svwhilelt(&mut ctx, 3);
+        assert_eq!(p.count(), 3);
+        assert!(p.lanes[2] && !p.lanes[3]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Instruction/memory trace plumbing between the simulated kernels and the
+//! performance model.
+
+use std::collections::BTreeMap;
+
+/// Instruction classes emitted by the simulated kernels. The taxonomy is the
+/// union of what Algorithm 1 needs on both ISAs, at the granularity the cost
+/// tables distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Op {
+    // ---- scalar (baseline kernel + loop control on both ISAs) ----
+    /// Scalar load (index, mask or value).
+    SLoad,
+    /// Scalar store.
+    SStore,
+    /// Scalar floating multiply-add chain step (one mul + one add).
+    SFma,
+    /// Scalar integer/bookkeeping op (index increment, compare&branch).
+    SInt,
+    /// popcount of a mask register.
+    Popcnt,
+
+    // ---- AVX-512 ----
+    /// Full-width aligned/unaligned vector load (`_mm512_loadu_*`).
+    VLoad,
+    /// Mask expand-load (`_mm512_maskz_expandloadu_*`) — the AVX-512 heart
+    /// of the SPC5 kernel (§3, line 20).
+    VExpandLoad,
+    /// Gather (`_mm512_i32gather_*`) — used by the vectorized-CSR baseline.
+    VGather,
+    /// Vector FMA (`_mm512_fmadd_*`).
+    VFma,
+    /// Vector add/mul (non-fused).
+    VAdd,
+    /// In-register shuffle/permute/hadd step (the manual multi-reduction of
+    /// §3.2 is a sequence of these).
+    VShuffle,
+    /// `_mm512_reduce_add_*` — compiler-synthesized horizontal reduction
+    /// (§4.3: not a real hardware instruction).
+    VReduceNative,
+    /// Vector store.
+    VStore,
+    /// Broadcast scalar to vector.
+    VBcast,
+    /// Mask register move/logic (k-regs).
+    KMov,
+
+    // ---- SVE ----
+    /// Predicated contiguous load (`svld1`).
+    SvLoad,
+    /// Predicated store (`svst1`).
+    SvStore,
+    /// `svcompact` — pack active lanes to the front (§3, line 26).
+    SvCompact,
+    /// `svdup` broadcast.
+    SvDup,
+    /// Predicate-producing compare (`svcmpne`).
+    SvCmp,
+    /// Vector bitwise and (`svand`).
+    SvAnd,
+    /// `svcntp` — count active predicate lanes.
+    SvCntp,
+    /// `svwhilelt` — predicate from loop bounds.
+    SvWhilelt,
+    /// Vector FMA (`svmla`).
+    SvFma,
+    /// Vector add/mul.
+    SvAdd,
+    /// `svaddv` — native horizontal reduction (latency 12 on A64FX, §4.3).
+    SvAddv,
+    /// `svuzp1`/`svuzp2` interleave step of the manual multi-reduction.
+    SvUzp,
+}
+
+impl Op {
+    /// True when this op belongs to the serial reduction tail of a row panel
+    /// (charged at latency, not throughput — see `perfmodel::cost`).
+    pub fn is_reduction_tail(self) -> bool {
+        matches!(self, Op::VReduceNative | Op::SvAddv | Op::VShuffle | Op::SvUzp)
+    }
+
+    pub fn all() -> &'static [Op] {
+        use Op::*;
+        &[
+            SLoad, SStore, SFma, SInt, Popcnt, VLoad, VExpandLoad, VGather, VFma, VAdd,
+            VShuffle, VReduceNative, VStore, VBcast, KMov, SvLoad, SvStore, SvCompact, SvDup,
+            SvCmp, SvAnd, SvCntp, SvWhilelt, SvFma, SvAdd, SvAddv, SvUzp,
+        ]
+    }
+}
+
+/// Receives instruction and memory events from the simulated kernels.
+pub trait CostSink {
+    /// `n` occurrences of instruction `op`.
+    fn op(&mut self, op: Op, n: u64);
+    /// A memory access of `bytes` bytes at virtual address `addr`.
+    fn mem(&mut self, addr: u64, bytes: u32, write: bool);
+}
+
+/// Sink that counts instructions and bytes but models no machine. Used by
+/// tests and by the structural reports (instruction-mix tables).
+#[derive(Default, Debug, Clone)]
+pub struct CountingSink {
+    pub ops: BTreeMap<Op, u64>,
+    pub load_bytes: u64,
+    pub store_bytes: u64,
+    pub loads: u64,
+    pub stores: u64,
+}
+
+impl CountingSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn count(&self, op: Op) -> u64 {
+        self.ops.get(&op).copied().unwrap_or(0)
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.ops.values().sum()
+    }
+}
+
+impl CostSink for CountingSink {
+    fn op(&mut self, op: Op, n: u64) {
+        *self.ops.entry(op).or_insert(0) += n;
+    }
+
+    fn mem(&mut self, _addr: u64, bytes: u32, write: bool) {
+        if write {
+            self.store_bytes += bytes as u64;
+            self.stores += 1;
+        } else {
+            self.load_bytes += bytes as u64;
+            self.loads += 1;
+        }
+    }
+}
+
+/// Sink that ignores everything — used when only the numeric result of a
+/// simulated kernel is wanted (e.g. correctness tests of kernel semantics).
+#[derive(Default, Debug, Clone, Copy)]
+pub struct NullSink;
+
+impl CostSink for NullSink {
+    fn op(&mut self, _op: Op, _n: u64) {}
+    fn mem(&mut self, _addr: u64, _bytes: u32, _write: bool) {}
+}
+
+/// Execution context handed to every simulated kernel: the vector length and
+/// the cost sink. `VS` (lanes) is `Scalar::VS` for the 512-bit ISAs.
+pub struct SimCtx<'a> {
+    pub vs: usize,
+    pub sink: &'a mut dyn CostSink,
+}
+
+impl<'a> SimCtx<'a> {
+    pub fn new(vs: usize, sink: &'a mut dyn CostSink) -> Self {
+        assert!(vs.is_power_of_two() && vs <= 64);
+        Self { vs, sink }
+    }
+
+    #[inline]
+    pub fn op(&mut self, op: Op) {
+        self.sink.op(op, 1);
+    }
+
+    #[inline]
+    pub fn ops(&mut self, op: Op, n: u64) {
+        self.sink.op(op, n);
+    }
+
+    #[inline]
+    pub fn mem(&mut self, addr: u64, bytes: u32, write: bool) {
+        self.sink.mem(addr, bytes, write);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_sink_accumulates() {
+        let mut s = CountingSink::new();
+        s.op(Op::VFma, 3);
+        s.op(Op::VFma, 2);
+        s.op(Op::SvAddv, 1);
+        s.mem(0x1000, 64, false);
+        s.mem(0x2000, 8, true);
+        assert_eq!(s.count(Op::VFma), 5);
+        assert_eq!(s.count(Op::SvAddv), 1);
+        assert_eq!(s.count(Op::SLoad), 0);
+        assert_eq!(s.total_ops(), 6);
+        assert_eq!(s.load_bytes, 64);
+        assert_eq!(s.store_bytes, 8);
+        assert_eq!(s.loads, 1);
+        assert_eq!(s.stores, 1);
+    }
+
+    #[test]
+    fn reduction_tail_classification() {
+        assert!(Op::SvAddv.is_reduction_tail());
+        assert!(Op::VReduceNative.is_reduction_tail());
+        assert!(!Op::VFma.is_reduction_tail());
+        assert!(!Op::SvCompact.is_reduction_tail());
+    }
+
+    #[test]
+    fn ctx_validates_vs() {
+        let mut s = NullSink;
+        let ctx = SimCtx::new(8, &mut s);
+        assert_eq!(ctx.vs, 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ctx_rejects_non_pow2() {
+        let mut s = NullSink;
+        let _ = SimCtx::new(6, &mut s);
+    }
+
+    #[test]
+    fn all_ops_listed_once() {
+        let all = Op::all();
+        let set: std::collections::BTreeSet<_> = all.iter().collect();
+        assert_eq!(set.len(), all.len());
+    }
+}

@@ -1,0 +1,203 @@
+//! Simulated vector registers, predicates and virtually-addressed arrays.
+
+use crate::scalar::Scalar;
+
+/// A simulated vector register of `VS` lanes. Heap-backed because SVE is a
+/// vector-length-agnostic ISA (the kernels never hardcode the length).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VReg<T: Scalar> {
+    pub lanes: Vec<T>,
+}
+
+impl<T: Scalar> VReg<T> {
+    pub fn zero(vs: usize) -> Self {
+        Self { lanes: vec![T::zero(); vs] }
+    }
+
+    pub fn splat(vs: usize, v: T) -> Self {
+        Self { lanes: vec![v; vs] }
+    }
+
+    pub fn vs(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Plain (un-simulated) horizontal sum; used by tests as ground truth.
+    pub fn hsum(&self) -> T {
+        let mut acc = T::zero();
+        for &l in &self.lanes {
+            acc += l;
+        }
+        acc
+    }
+}
+
+/// A predicate register: one boolean per lane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pred {
+    pub lanes: Vec<bool>,
+}
+
+impl Pred {
+    pub fn none(vs: usize) -> Self {
+        Self { lanes: vec![false; vs] }
+    }
+
+    pub fn all(vs: usize) -> Self {
+        Self { lanes: vec![true; vs] }
+    }
+
+    /// Predicate from the low `vs` bits of a mask word (bit i ↔ lane i).
+    pub fn from_mask(vs: usize, mask: u64) -> Self {
+        Self { lanes: (0..vs).map(|i| (mask >> i) & 1 == 1).collect() }
+    }
+
+    pub fn count(&self) -> usize {
+        self.lanes.iter().filter(|&&b| b).count()
+    }
+
+    pub fn vs(&self) -> usize {
+        self.lanes.len()
+    }
+}
+
+/// Assigns virtual base addresses to the kernel's arrays so the cache model
+/// sees a realistic layout (distinct arrays far apart, elements contiguous,
+/// 256-byte alignment like a NUMA-aware allocator would give).
+#[derive(Debug, Default)]
+pub struct AddressSpace {
+    next: u64,
+}
+
+impl AddressSpace {
+    pub fn new() -> Self {
+        // Leave page zero unmapped, like a real process.
+        Self { next: 0x1_0000 }
+    }
+
+    /// Reserve `bytes` and return the base address.
+    pub fn alloc(&mut self, bytes: usize) -> u64 {
+        let base = (self.next + 255) & !255;
+        self.next = base + bytes as u64;
+        base
+    }
+}
+
+/// A read-only array with a virtual base address.
+#[derive(Clone, Copy, Debug)]
+pub struct VSlice<'a, T> {
+    pub data: &'a [T],
+    pub base: u64,
+    pub elem_bytes: u32,
+}
+
+impl<'a, T: Copy> VSlice<'a, T> {
+    pub fn new(data: &'a [T], base: u64, elem_bytes: u32) -> Self {
+        Self { data, base, elem_bytes }
+    }
+
+    #[inline]
+    pub fn addr(&self, idx: usize) -> u64 {
+        self.base + idx as u64 * self.elem_bytes as u64
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// A mutable array with a virtual base address.
+#[derive(Debug)]
+pub struct VSliceMut<'a, T> {
+    pub data: &'a mut [T],
+    pub base: u64,
+    pub elem_bytes: u32,
+}
+
+impl<'a, T: Copy> VSliceMut<'a, T> {
+    pub fn new(data: &'a mut [T], base: u64, elem_bytes: u32) -> Self {
+        Self { data, base, elem_bytes }
+    }
+
+    #[inline]
+    pub fn addr(&self, idx: usize) -> u64 {
+        self.base + idx as u64 * self.elem_bytes as u64
+    }
+}
+
+/// Convenience: allocate addresses for a scalar slice.
+pub fn vslice<'a, T: Scalar>(space: &mut AddressSpace, data: &'a [T]) -> VSlice<'a, T> {
+    let base = space.alloc(data.len() * T::BYTES);
+    VSlice::new(data, base, T::BYTES as u32)
+}
+
+/// Convenience: allocate addresses for a u32 index slice.
+pub fn vslice_u32<'a>(space: &mut AddressSpace, data: &'a [u32]) -> VSlice<'a, u32> {
+    let base = space.alloc(data.len() * 4);
+    VSlice::new(data, base, 4)
+}
+
+/// Convenience: allocate addresses for a u16 mask slice with explicit
+/// element width (SPC5 stores 1-byte masks for f64, 2-byte for f32).
+pub fn vslice_mask<'a>(space: &mut AddressSpace, data: &'a [u16], mask_bytes: u32) -> VSlice<'a, u16> {
+    let base = space.alloc(data.len() * mask_bytes as usize);
+    VSlice::new(data, base, mask_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vreg_basics() {
+        let v = VReg::<f64>::splat(8, 2.0);
+        assert_eq!(v.vs(), 8);
+        assert_eq!(v.hsum(), 16.0);
+        assert_eq!(VReg::<f32>::zero(16).hsum(), 0.0);
+    }
+
+    #[test]
+    fn pred_from_mask_bit_order() {
+        // mask 0b1101: lanes 0,2,3 active (LSB = lane 0, paper Fig 3).
+        let p = Pred::from_mask(4, 0b1101);
+        assert_eq!(p.lanes, vec![true, false, true, true]);
+        assert_eq!(p.count(), 3);
+    }
+
+    #[test]
+    fn address_space_alignment_and_disjointness() {
+        let mut s = AddressSpace::new();
+        let a = s.alloc(100);
+        let b = s.alloc(64);
+        assert_eq!(a % 256, 0);
+        assert_eq!(b % 256, 0);
+        assert!(b >= a + 100);
+    }
+
+    #[test]
+    fn vslice_addresses() {
+        let mut space = AddressSpace::new();
+        let data = [1.0f64, 2.0, 3.0];
+        let s = vslice(&mut space, &data);
+        assert_eq!(s.addr(2) - s.addr(0), 16);
+        assert_eq!(s.len(), 3);
+        let idx = [1u32, 2];
+        let si = vslice_u32(&mut space, &idx);
+        assert_eq!(si.addr(1) - si.addr(0), 4);
+        assert!(si.base >= s.addr(2));
+    }
+
+    #[test]
+    fn mask_slice_width_models_precision() {
+        let mut space = AddressSpace::new();
+        let masks = [0u16; 4];
+        let m64 = vslice_mask(&mut space, &masks, 1); // f64: 8 lanes -> 1 byte
+        let m32 = vslice_mask(&mut space, &masks, 2); // f32: 16 lanes -> 2 bytes
+        assert_eq!(m64.addr(3) - m64.addr(0), 3);
+        assert_eq!(m32.addr(3) - m32.addr(0), 6);
+    }
+}

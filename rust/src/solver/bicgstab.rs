@@ -1,0 +1,150 @@
+//! BiCGSTAB for general (non-symmetric) systems.
+
+use crate::scalar::Scalar;
+
+use super::{axpy, dot, norm2, LinOp, SolveResult};
+
+/// Solve `A·x = b` by BiCGSTAB (van der Vorst 1992). Stops at
+/// `‖r‖/‖b‖ <= rtol` or `max_iter`.
+pub fn bicgstab<T: Scalar, A: LinOp<T>>(
+    a: &A,
+    b: &[T],
+    rtol: f64,
+    max_iter: usize,
+) -> SolveResult<T> {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+
+    let mut x = vec![T::zero(); n];
+    let mut r = b.to_vec();
+    let r_hat = r.clone(); // shadow residual
+    let mut p = vec![T::zero(); n];
+    let mut v = vec![T::zero(); n];
+    let mut s = vec![T::zero(); n];
+    let mut t = vec![T::zero(); n];
+
+    let mut rho = T::one();
+    let mut alpha = T::one();
+    let mut omega = T::one();
+
+    let mut residuals = vec![norm2(&r) / bnorm];
+
+    for _ in 0..max_iter {
+        if residuals.last().copied().unwrap() <= rtol {
+            return SolveResult { x, residuals, converged: true };
+        }
+        let rho_new = dot(&r_hat, &r);
+        if rho_new.to_f64().abs() < 1e-300 {
+            return SolveResult { x, residuals, converged: false }; // breakdown
+        }
+        let beta = (rho_new / rho) * (alpha / omega);
+        rho = rho_new;
+        // p = r + beta*(p - omega*v)
+        for i in 0..n {
+            p[i] = r[i] + beta * (p[i] - omega * v[i]);
+        }
+        a.apply(&p, &mut v);
+        let rhv = dot(&r_hat, &v);
+        if rhv.to_f64().abs() < 1e-300 {
+            return SolveResult { x, residuals, converged: false };
+        }
+        alpha = rho / rhv;
+        // s = r - alpha*v
+        for i in 0..n {
+            s[i] = r[i] - alpha * v[i];
+        }
+        if norm2(&s) / bnorm <= rtol {
+            axpy(alpha, &p, &mut x);
+            residuals.push(norm2(&s) / bnorm);
+            return SolveResult { x, residuals, converged: true };
+        }
+        a.apply(&s, &mut t);
+        let tt = dot(&t, &t);
+        if tt.to_f64() <= 0.0 {
+            return SolveResult { x, residuals, converged: false };
+        }
+        omega = dot(&t, &s) / tt;
+        // x += alpha*p + omega*s
+        axpy(alpha, &p, &mut x);
+        axpy(omega, &s, &mut x);
+        // r = s - omega*t
+        for i in 0..n {
+            r[i] = s[i] - omega * t[i];
+        }
+        residuals.push(norm2(&r) / bnorm);
+        if omega.to_f64().abs() < 1e-300 {
+            let converged = residuals.last().copied().unwrap() <= rtol;
+            return SolveResult { x, residuals, converged };
+        }
+    }
+    let converged = residuals.last().copied().unwrap() <= rtol;
+    SolveResult { x, residuals, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Coo, Csr};
+    use crate::spc5::csr_to_spc5;
+
+    /// Non-symmetric diagonally-dominant test matrix.
+    fn nonsym(n: usize) -> Csr<f64> {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+            if i + 1 < n {
+                coo.push(i, i + 1, -1.0);
+            }
+            if i > 0 {
+                coo.push(i, i - 1, -0.5); // asymmetry
+            }
+            if i + 7 < n {
+                coo.push(i, i + 7, 0.25);
+            }
+        }
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn solves_nonsymmetric_system() {
+        let a = nonsym(200);
+        let b: Vec<f64> = (0..200).map(|i| 1.0 + (i % 3) as f64).collect();
+        let res = bicgstab(&a, &b, 1e-9, 400);
+        assert!(res.converged, "residuals {:?}", res.residuals.last());
+        let mut ax = vec![0.0; 200];
+        crate::solver::LinOp::apply(&a, &res.x, &mut ax);
+        crate::scalar::assert_allclose(&ax, &b, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn works_through_spc5_format() {
+        let a = nonsym(150);
+        let b = vec![1.0; 150];
+        let spc5 = csr_to_spc5(&a, 2, 8);
+        let res = bicgstab(&spc5, &b, 1e-9, 400);
+        assert!(res.converged);
+        let direct = bicgstab(&a, &b, 1e-9, 400);
+        crate::scalar::assert_allclose(&res.x, &direct.x, 1e-6, 1e-8);
+    }
+
+    #[test]
+    fn also_solves_spd() {
+        let a = gen::poisson2d::<f64>(10);
+        let b = vec![1.0; 100];
+        let res = bicgstab(&a, &b, 1e-8, 500);
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn reports_breakdown_not_panic() {
+        // Singular matrix (zero row) breaks down; must return gracefully.
+        let mut coo = Coo::<f64>::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 1, 1.0);
+        // row 2 empty
+        let a = Csr::from_coo(coo);
+        let res = bicgstab(&a, &[1.0, 1.0, 1.0], 1e-12, 50);
+        assert!(!res.converged);
+    }
+}

@@ -1,0 +1,123 @@
+//! Conjugate Gradient for symmetric positive-definite systems.
+
+use crate::scalar::Scalar;
+
+use super::{axpy, dot, norm2, xpay, LinOp, SolveResult};
+
+/// Solve `A·x = b` by CG. Stops when `‖r‖/‖b‖ <= rtol` or after `max_iter`
+/// iterations. `x0` of zeros is used as the start.
+pub fn cg<T: Scalar, A: LinOp<T>>(
+    a: &A,
+    b: &[T],
+    rtol: f64,
+    max_iter: usize,
+) -> SolveResult<T> {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+
+    let mut x = vec![T::zero(); n];
+    let mut r = b.to_vec(); // r = b - A*0
+    let mut p = r.clone();
+    let mut ap = vec![T::zero(); n];
+
+    let mut rr = dot(&r, &r);
+    let mut residuals = vec![rr.to_f64().sqrt() / bnorm];
+
+    for _ in 0..max_iter {
+        if residuals.last().copied().unwrap() <= rtol {
+            return SolveResult { x, residuals, converged: true };
+        }
+        a.apply(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap.to_f64() <= 0.0 {
+            // Not SPD (or breakdown): bail out honestly.
+            return SolveResult { x, residuals, converged: false };
+        }
+        let alpha = rr / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rr_new = dot(&r, &r);
+        residuals.push(rr_new.to_f64().sqrt() / bnorm);
+        let beta = rr_new / rr;
+        rr = rr_new;
+        // p = r + beta*p
+        xpay(beta, &r, &mut p);
+    }
+    let converged = residuals.last().copied().unwrap() <= rtol;
+    SolveResult { x, residuals, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::parallel::ParallelSpc5;
+    use crate::spc5::csr_to_spc5;
+
+    #[test]
+    fn solves_poisson_to_tolerance() {
+        let a = gen::poisson2d::<f64>(16); // 256 unknowns
+        let b = vec![1.0; 256];
+        let res = cg(&a, &b, 1e-8, 1000);
+        assert!(res.converged, "residual {:?}", res.residuals.last());
+        // Check A*x == b.
+        let mut ax = vec![0.0; 256];
+        crate::solver::LinOp::apply(&a, &res.x, &mut ax);
+        for i in 0..256 {
+            assert!((ax[i] - 1.0).abs() < 1e-6, "i={i}: {}", ax[i]);
+        }
+    }
+
+    #[test]
+    fn residuals_monotone_enough_and_recorded() {
+        let a = gen::tridiag::<f64>(100);
+        let b: Vec<f64> = (0..100).map(|i| (i as f64 * 0.3).cos()).collect();
+        let res = cg(&a, &b, 1e-10, 500);
+        assert!(res.converged);
+        assert!(res.iterations() > 3);
+        assert!(res.residuals.first().unwrap() > res.residuals.last().unwrap());
+    }
+
+    #[test]
+    fn same_solution_through_spc5_and_parallel() {
+        let a = gen::poisson2d::<f64>(12);
+        let b: Vec<f64> = (0..144).map(|i| ((i * 7) % 5) as f64 - 2.0).collect();
+        let r1 = cg(&a, &b, 1e-9, 800);
+        let spc5 = csr_to_spc5(&a, 4, 8);
+        let r2 = cg(&spc5, &b, 1e-9, 800);
+        let par = ParallelSpc5::new(&a, 2, 4);
+        let r3 = cg(&par, &b, 1e-9, 800);
+        assert!(r1.converged && r2.converged && r3.converged);
+        crate::scalar::assert_allclose(&r2.x, &r1.x, 1e-6, 1e-8);
+        crate::scalar::assert_allclose(&r3.x, &r1.x, 1e-6, 1e-8);
+    }
+
+    #[test]
+    fn f32_converges_looser() {
+        let a = gen::poisson2d::<f32>(8);
+        let b = vec![1.0f32; 64];
+        let res = cg(&a, &b, 1e-4, 500);
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn non_spd_reports_failure() {
+        // A matrix with a negative diagonal entry is not SPD.
+        let mut coo = crate::matrix::Coo::<f64>::new(2, 2);
+        coo.push(0, 0, -1.0);
+        coo.push(1, 1, 1.0);
+        let a = crate::matrix::Csr::from_coo(coo);
+        let res = cg(&a, &[1.0, 1.0], 1e-12, 10);
+        assert!(!res.converged);
+    }
+
+    #[test]
+    fn zero_rhs_converges_immediately() {
+        let a = gen::tridiag::<f64>(10);
+        let res = cg(&a, &vec![0.0; 10], 1e-12, 10);
+        assert!(res.converged);
+        assert_eq!(res.iterations(), 0);
+        assert!(res.x.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,152 @@
+//! Iterative linear solvers — the application the paper motivates SpMV with
+//! ("the most important component of iterative linear solvers", §1).
+//!
+//! All solvers are generic over [`LinOp`], implemented by CSR, SPC5 and the
+//! parallel matrices, so the whole format machinery is exercised end-to-end
+//! (see `examples/poisson_cg.rs`).
+
+pub mod bicgstab;
+pub mod cg;
+pub mod power;
+
+use crate::matrix::Csr;
+use crate::parallel::{ParallelCsr, ParallelSpc5};
+use crate::scalar::Scalar;
+use crate::spc5::Spc5Matrix;
+
+pub use bicgstab::bicgstab;
+pub use cg::cg;
+pub use power::power_iteration;
+
+/// A linear operator `y = A·x` over square matrices.
+pub trait LinOp<T: Scalar> {
+    fn dim(&self) -> usize;
+    fn apply(&self, x: &[T], y: &mut [T]);
+}
+
+impl<T: Scalar> LinOp<T> for Csr<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        crate::kernels::native::spmv_csr(self, x, y);
+    }
+}
+
+impl<T: Scalar> LinOp<T> for Spc5Matrix<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        // Real AVX-512 kernel when the host supports it (§Perf).
+        crate::kernels::native_avx512::spmv_spc5_auto(self, x, y);
+    }
+}
+
+impl<T: Scalar> LinOp<T> for ParallelCsr<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+}
+
+impl<T: Scalar> LinOp<T> for ParallelSpc5<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+}
+
+/// Solver outcome: the solution plus the residual-norm history (one entry
+/// per iteration, starting with the initial residual).
+#[derive(Clone, Debug)]
+pub struct SolveResult<T: Scalar> {
+    pub x: Vec<T>,
+    pub residuals: Vec<f64>,
+    pub converged: bool,
+}
+
+impl<T: Scalar> SolveResult<T> {
+    pub fn iterations(&self) -> usize {
+        self.residuals.len().saturating_sub(1)
+    }
+}
+
+// ---- shared small BLAS-1 helpers ----
+
+pub(crate) fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    let mut s0 = T::zero();
+    let mut s1 = T::zero();
+    let n = a.len() / 2 * 2;
+    let mut i = 0;
+    while i < n {
+        s0 = a[i].mul_add(b[i], s0);
+        s1 = a[i + 1].mul_add(b[i + 1], s1);
+        i += 2;
+    }
+    if i < a.len() {
+        s0 = a[i].mul_add(b[i], s0);
+    }
+    s0 + s1
+}
+
+pub(crate) fn norm2<T: Scalar>(a: &[T]) -> f64 {
+    dot(a, a).to_f64().sqrt()
+}
+
+/// `y += alpha * x`
+pub(crate) fn axpy<T: Scalar>(alpha: T, x: &[T], y: &mut [T]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = alpha.mul_add(xi, *yi);
+    }
+}
+
+/// `x = alpha*x + y` (used by CG's direction update)
+pub(crate) fn xpay<T: Scalar>(alpha: T, y: &[T], x: &mut [T]) {
+    for (xi, &yi) in x.iter_mut().zip(y) {
+        *xi = alpha.mul_add(*xi, yi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blas1_helpers() {
+        let a = vec![1.0f64, 2.0, 3.0];
+        let b = vec![4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert!((norm2(&a) - 14.0f64.sqrt()).abs() < 1e-12);
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        let mut x = vec![1.0, 1.0, 1.0];
+        xpay(3.0, &a, &mut x);
+        assert_eq!(x, vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn linop_impls_agree() {
+        let m: Csr<f64> = crate::matrix::gen::poisson2d(6);
+        let x: Vec<f64> = (0..36).map(|i| i as f64 * 0.1).collect();
+        let mut y1 = vec![0.0; 36];
+        LinOp::apply(&m, &x, &mut y1);
+        let spc5 = crate::spc5::csr_to_spc5(&m, 4, 8);
+        let mut y2 = vec![0.0; 36];
+        LinOp::apply(&spc5, &x, &mut y2);
+        crate::scalar::assert_allclose(&y2, &y1, 1e-12, 1e-13);
+        let par = ParallelSpc5::new(&m, 2, 3);
+        let mut y3 = vec![0.0; 36];
+        LinOp::apply(&par, &x, &mut y3);
+        crate::scalar::assert_allclose(&y3, &y1, 1e-12, 1e-13);
+    }
+}

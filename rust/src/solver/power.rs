@@ -1,0 +1,87 @@
+//! Power iteration — dominant-eigenvalue estimation (e.g. for spectral
+//! bounds of iteration matrices; also a second SpMV-heavy workload for the
+//! examples).
+
+use crate::scalar::Scalar;
+
+use super::{norm2, LinOp};
+
+/// Estimate the dominant eigenvalue (by magnitude) and its eigenvector.
+/// Returns `(lambda, v, iterations)`; stops when two successive Rayleigh
+/// quotients differ by less than `tol` relatively.
+pub fn power_iteration<T: Scalar, A: LinOp<T>>(
+    a: &A,
+    tol: f64,
+    max_iter: usize,
+) -> (f64, Vec<T>, usize) {
+    let n = a.dim();
+    // Deterministic non-degenerate start.
+    let mut v: Vec<T> = (0..n)
+        .map(|i| T::from_f64(1.0 + ((i * 2654435761) % 97) as f64 / 97.0))
+        .collect();
+    let norm = norm2(&v);
+    for vi in v.iter_mut() {
+        *vi = *vi / T::from_f64(norm);
+    }
+    let mut av = vec![T::zero(); n];
+    let mut lambda = 0.0f64;
+    for it in 0..max_iter {
+        a.apply(&v, &mut av);
+        let new_lambda = super::dot(&v, &av).to_f64();
+        let an = norm2(&av);
+        if an == 0.0 {
+            return (0.0, v, it);
+        }
+        for (vi, &avi) in v.iter_mut().zip(&av) {
+            *vi = avi / T::from_f64(an);
+        }
+        if it > 0 && (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-300) {
+            return (new_lambda, v, it + 1);
+        }
+        lambda = new_lambda;
+    }
+    (lambda, v, max_iter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Coo, Csr};
+    use crate::spc5::csr_to_spc5;
+
+    #[test]
+    fn diagonal_matrix_dominant_value() {
+        let mut coo = Coo::<f64>::new(4, 4);
+        for (i, d) in [1.0, -7.0, 3.0, 5.0].iter().enumerate() {
+            coo.push(i, i, *d);
+        }
+        let a = Csr::from_coo(coo);
+        let (lambda, v, _) = power_iteration(&a, 1e-12, 10_000);
+        assert!((lambda.abs() - 7.0).abs() < 1e-6, "lambda {lambda}");
+        // Eigenvector concentrates on index 1.
+        let max_idx = v
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 1);
+    }
+
+    #[test]
+    fn poisson_spectral_radius_bound() {
+        // 2D Poisson eigenvalues are in (0, 8); the largest approaches 8.
+        let a = gen::poisson2d::<f64>(12);
+        let (lambda, _, _) = power_iteration(&a, 1e-10, 5000);
+        assert!(lambda > 6.0 && lambda < 8.0, "lambda {lambda}");
+    }
+
+    #[test]
+    fn spc5_form_gives_same_eigenvalue() {
+        let a = gen::poisson2d::<f64>(10);
+        let (l1, _, _) = power_iteration(&a, 1e-10, 5000);
+        let m = csr_to_spc5(&a, 4, 8);
+        let (l2, _, _) = power_iteration(&m, 1e-10, 5000);
+        assert!((l1 - l2).abs() < 1e-6);
+    }
+}

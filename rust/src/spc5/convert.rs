@@ -1,0 +1,249 @@
+//! CSR ↔ SPC5 conversion (paper §2.4).
+//!
+//! The β(1,*) conversion leaves the value array untouched relative to CSR
+//! (the paper highlights this as the cheap-to-adopt case); for r > 1 the
+//! values of a panel are re-ordered row-major *within each block*.
+
+use crate::matrix::{Coo, Csr};
+use crate::scalar::Scalar;
+
+use super::format::Spc5Matrix;
+
+/// Convert CSR to SPC5 β(r,width). `width` is the block length in columns —
+/// pass `T::VS` for the paper's β(r,VS) kernels (the ablation sweeps other
+/// widths). Panics if `width > 32` (mask storage) or `r ∉ {1,2,4,8}`.
+pub fn csr_to_spc5<T: Scalar>(csr: &Csr<T>, r: usize, width: usize) -> Spc5Matrix<T> {
+    assert!(matches!(r, 1 | 2 | 4 | 8), "r must be 1, 2, 4 or 8");
+    assert!(width >= 1 && width <= 32, "width must be 1..=32");
+
+    let npanels = csr.nrows.div_ceil(r);
+    let mut block_rowptr = Vec::with_capacity(npanels + 1);
+    let mut block_colidx: Vec<u32> = Vec::new();
+    let mut masks: Vec<u32> = Vec::new();
+    let mut vals: Vec<T> = Vec::with_capacity(csr.nnz());
+    block_rowptr.push(0u32);
+
+    // Per-row cursors into the CSR arrays.
+    let mut cursor = vec![0usize; r];
+
+    for p in 0..npanels {
+        let row0 = p * r;
+        let rows_here = r.min(csr.nrows - row0);
+        for (j, c) in cursor.iter_mut().enumerate().take(rows_here) {
+            *c = csr.row_ptr[row0 + j] as usize;
+        }
+        loop {
+            // Find the smallest unconsumed column across the panel's rows.
+            let mut min_col = u32::MAX;
+            for j in 0..rows_here {
+                let end = csr.row_ptr[row0 + j + 1] as usize;
+                if cursor[j] < end {
+                    min_col = min_col.min(csr.col_idx[cursor[j]]);
+                }
+            }
+            if min_col == u32::MAX {
+                break; // panel fully consumed
+            }
+            // Open a block at min_col covering [min_col, min_col+width).
+            let limit = min_col as u64 + width as u64;
+            block_colidx.push(min_col);
+            for j in 0..r {
+                let mut mask = 0u32;
+                if j < rows_here {
+                    let end = csr.row_ptr[row0 + j + 1] as usize;
+                    while cursor[j] < end && (csr.col_idx[cursor[j]] as u64) < limit {
+                        let bit = csr.col_idx[cursor[j]] - min_col;
+                        mask |= 1 << bit;
+                        vals.push(csr.vals[cursor[j]]);
+                        cursor[j] += 1;
+                    }
+                }
+                masks.push(mask);
+            }
+        }
+        block_rowptr.push(block_colidx.len() as u32);
+    }
+
+    let out = Spc5Matrix {
+        nrows: csr.nrows,
+        ncols: csr.ncols,
+        r,
+        width,
+        block_rowptr,
+        block_colidx,
+        masks,
+        vals,
+    };
+    debug_assert_eq!(out.nnz(), csr.nnz());
+    out
+}
+
+/// Convert back to CSR (exact inverse — SPC5 stores no extra zeros).
+pub fn spc5_to_csr<T: Scalar>(m: &Spc5Matrix<T>) -> Csr<T> {
+    let mut coo = Coo::with_capacity(m.nrows, m.ncols, m.nnz());
+    let mut idx_val = 0usize;
+    for p in 0..m.npanels() {
+        for b in m.panel_blocks(p) {
+            let col = m.block_colidx[b] as usize;
+            for j in 0..m.r {
+                let row = p * m.r + j;
+                let mask = m.masks[b * m.r + j];
+                for k in 0..m.width {
+                    if (mask >> k) & 1 == 1 {
+                        coo.push(row, col + k, m.vals[idx_val]);
+                        idx_val += 1;
+                    }
+                }
+            }
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::minitest::property;
+
+    fn sample_csr() -> Csr<f64> {
+        // rows: 0 -> cols {0, 2, 9}; 1 -> {3}; 2 -> {}; 3 -> {0,1,2,3}
+        let mut coo = Coo::new(4, 12);
+        for (r, c, v) in [
+            (0, 0, 1.0),
+            (0, 2, 2.0),
+            (0, 9, 3.0),
+            (1, 3, 4.0),
+            (3, 0, 5.0),
+            (3, 1, 6.0),
+            (3, 2, 7.0),
+            (3, 3, 8.0),
+        ] {
+            coo.push(r, c, v);
+        }
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn beta1_blocks_and_masks() {
+        let m = csr_to_spc5(&sample_csr(), 1, 4);
+        m.check().unwrap();
+        // Row 0: block@0 (cols 0,2 -> mask 0b0101), block@9 (mask 0b0001).
+        // Row 1: block@3. Row 2: none. Row 3: block@0 mask 0b1111.
+        assert_eq!(m.block_colidx, vec![0, 9, 3, 0]);
+        assert_eq!(m.masks, vec![0b0101, 0b0001, 0b0001, 0b1111]);
+        assert_eq!(m.block_rowptr, vec![0, 2, 3, 3, 4]);
+        // β(1,*) leaves the CSR value order unchanged (paper §5).
+        assert_eq!(m.vals, sample_csr().vals);
+    }
+
+    #[test]
+    fn beta2_merges_row_pairs() {
+        let m = csr_to_spc5(&sample_csr(), 2, 4);
+        m.check().unwrap();
+        // Panel 0 (rows 0,1): min col 0 -> block@0 covers cols 0..4:
+        //   row0 mask 0b0101 (cols 0,2), row1 mask 0b1000 (col 3)
+        // then block@9: row0 mask 0b0001, row1 0.
+        // Panel 1 (rows 2,3): block@0: row2 0, row3 0b1111.
+        assert_eq!(m.block_colidx, vec![0, 9, 0]);
+        assert_eq!(m.masks, vec![0b0101, 0b1000, 0b0001, 0, 0, 0b1111]);
+        // Values reordered row-major within blocks:
+        assert_eq!(m.vals, vec![1.0, 2.0, 4.0, 3.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let csr = sample_csr();
+        for r in [1usize, 2, 4, 8] {
+            for width in [4usize, 8, 16] {
+                let spc5 = csr_to_spc5(&csr, r, width);
+                spc5.check().unwrap();
+                let back = spc5_to_csr(&spc5);
+                assert_eq!(back.row_ptr, csr.row_ptr, "r={r} w={width}");
+                assert_eq!(back.col_idx, csr.col_idx);
+                assert_eq!(back.vals, csr.vals);
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_ref_matches_csr() {
+        let csr = sample_csr();
+        let x: Vec<f64> = (0..12).map(|i| (i as f64) * 0.5 + 1.0).collect();
+        let mut want = vec![0.0; 4];
+        csr.spmv(&x, &mut want);
+        for r in [1usize, 2, 4, 8] {
+            let spc5 = csr_to_spc5(&csr, r, 8);
+            let mut got = vec![0.0; 4];
+            spc5.spmv_ref(&x, &mut got);
+            assert_eq!(got, want, "r={r}");
+        }
+    }
+
+    #[test]
+    fn dense_matrix_is_fully_filled() {
+        let d: Csr<f64> = gen::dense(32, 1);
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&d, r, 8);
+            assert!((m.filling() - 1.0).abs() < 1e-12, "r={r}");
+            assert_eq!(m.nblocks(), (32 / r) * (32 / 8));
+        }
+    }
+
+    #[test]
+    fn worst_case_single_nnz_blocks() {
+        // One nnz every `width+1` columns: every block holds exactly 1 value.
+        let mut coo = Coo::new(1, 100);
+        for c in (0..100).step_by(9) {
+            coo.push(0, c, 1.0);
+        }
+        let csr = Csr::from_coo(coo);
+        let m = csr_to_spc5(&csr, 1, 8);
+        assert_eq!(m.nblocks(), csr.nnz());
+        assert!((m.filling() - 1.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        property("csr -> spc5 -> csr is identity", |g| {
+            let nrows = g.usize_in(1..60);
+            let ncols = g.usize_in(1..120);
+            let nnz_per_row = 1.0 + g.f64_unit() * 8.0;
+            let run_len = 1.0 + g.f64_unit() * 6.0;
+            let csr: Csr<f64> = gen::Structured {
+                nrows,
+                ncols,
+                nnz_per_row: nnz_per_row.min(ncols as f64),
+                run_len,
+                row_corr: g.f64_unit(),
+                skew: g.f64_unit(),
+                bandwidth: None,
+            }
+            .generate(g.u64());
+            let r = *g.pick(&[1usize, 2, 4, 8]);
+            let width = *g.pick(&[2usize, 4, 8, 16, 32]);
+            let spc5 = csr_to_spc5(&csr, r, width);
+            spc5.check().expect("invariants");
+            let back = spc5_to_csr(&spc5);
+            assert_eq!(back.row_ptr, csr.row_ptr);
+            assert_eq!(back.col_idx, csr.col_idx);
+            assert_eq!(back.vals, csr.vals);
+        });
+    }
+
+    #[test]
+    fn property_spmv_ref_equals_csr() {
+        property("spc5 spmv_ref == csr spmv", |g| {
+            let n = g.usize_in(1..50);
+            let csr: Csr<f64> = gen::random_uniform(n, 1.0 + g.f64_unit() * 5.0, g.u64());
+            let x: Vec<f64> = (0..n).map(|i| (i % 7) as f64 - 3.0).collect();
+            let mut want = vec![0.0; n];
+            csr.spmv(&x, &mut want);
+            let r = *g.pick(&[1usize, 2, 4, 8]);
+            let spc5 = csr_to_spc5(&csr, r, 8);
+            let mut got = vec![0.0; n];
+            spc5.spmv_ref(&x, &mut got);
+            crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+        });
+    }
+}

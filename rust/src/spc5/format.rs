@@ -1,0 +1,278 @@
+//! The SPC5 matrix container.
+
+use crate::scalar::Scalar;
+
+/// Rows per block — the `r` of β(r,VS). The paper evaluates 1, 2, 4, 8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BlockRows {
+    R1 = 1,
+    R2 = 2,
+    R4 = 4,
+    R8 = 8,
+}
+
+impl BlockRows {
+    pub fn all() -> [BlockRows; 4] {
+        [BlockRows::R1, BlockRows::R2, BlockRows::R4, BlockRows::R8]
+    }
+
+    pub fn as_usize(self) -> usize {
+        self as usize
+    }
+
+    /// Kernel display name, e.g. `β(4,VS)`.
+    pub fn label(self) -> String {
+        format!("beta({},VS)", self.as_usize())
+    }
+}
+
+/// A sparse matrix in SPC5 β(r,width) format.
+///
+/// Blocks of a row panel (a group of `r` consecutive rows) are stored in
+/// column order. For each block: one column index (`block_colidx`), `r`
+/// bit-masks (`masks`, row-major within the block) and the packed non-zero
+/// values (`vals`), ordered row-by-row inside the block. The mask bit `k` of
+/// row `j` says column `block_colidx + k` of row `panel*r + j` holds the next
+/// packed value (paper Fig 2).
+#[derive(Clone, Debug)]
+pub struct Spc5Matrix<T: Scalar> {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Rows per block (`r`).
+    pub r: usize,
+    /// Block column width — `VS` in the paper; the ablation sweeps it.
+    pub width: usize,
+    /// Per row-panel start index into `block_colidx`; length = npanels+1.
+    pub block_rowptr: Vec<u32>,
+    /// Per-block first column.
+    pub block_colidx: Vec<u32>,
+    /// Per-block, per-row bit-masks (row-major within block): length =
+    /// nblocks * r. Stored as u32 in memory here; the *format's* footprint
+    /// (see [`Spc5Matrix::mask_bytes`]) is width/8 bytes per mask, matching
+    /// the paper (1 byte for f64, 2 for f32 at width = VS).
+    pub masks: Vec<u32>,
+    /// Packed non-zero values (no zero padding).
+    pub vals: Vec<T>,
+}
+
+impl<T: Scalar> Spc5Matrix<T> {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.block_colidx.len()
+    }
+
+    /// Number of row panels (⌈nrows/r⌉).
+    pub fn npanels(&self) -> usize {
+        self.nrows.div_ceil(self.r)
+    }
+
+    /// Bytes of one stored mask: one bit per block column.
+    pub fn mask_bytes(&self) -> usize {
+        self.width.div_ceil(8)
+    }
+
+    /// Storage footprint in bytes (paper §2.4 accounting): block row
+    /// pointers + one u32 column index per block + r masks per block +
+    /// packed values.
+    pub fn bytes(&self) -> usize {
+        self.block_rowptr.len() * 4
+            + self.nblocks() * 4
+            + self.nblocks() * self.r * self.mask_bytes()
+            + self.nnz() * T::BYTES
+    }
+
+    /// Mean block filling: nnz / (nblocks · r · width). The paper's Table 1
+    /// metric and the predictor of kernel performance (§4.3).
+    pub fn filling(&self) -> f64 {
+        if self.nblocks() == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.nblocks() * self.r * self.width) as f64
+    }
+
+    /// Blocks of panel `p` as a range into `block_colidx`/`masks`.
+    pub fn panel_blocks(&self, p: usize) -> std::ops::Range<usize> {
+        self.block_rowptr[p] as usize..self.block_rowptr[p + 1] as usize
+    }
+
+    /// Scalar reference SpMV (`y = A·x`), the blue lines of Algorithm 1.
+    /// This is also the conversion oracle for the vectorized kernels.
+    pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let mut idx_val = 0usize;
+        for p in 0..self.npanels() {
+            let row0 = p * self.r;
+            let mut sums = vec![T::zero(); self.r];
+            for b in self.panel_blocks(p) {
+                let col = self.block_colidx[b] as usize;
+                for j in 0..self.r {
+                    let mask = self.masks[b * self.r + j];
+                    let mut k = 0usize;
+                    while k < self.width {
+                        if (mask >> k) & 1 == 1 {
+                            sums[j] += self.vals[idx_val] * x[col + k];
+                            idx_val += 1;
+                        }
+                        k += 1;
+                    }
+                }
+            }
+            for j in 0..self.r {
+                if row0 + j < self.nrows {
+                    y[row0 + j] = sums[j];
+                }
+            }
+        }
+        debug_assert_eq!(idx_val, self.nnz());
+    }
+
+    /// Validate the structural invariants; used by property tests.
+    pub fn check(&self) -> Result<(), String> {
+        if self.width == 0 || self.width > 32 {
+            return Err(format!("width {} out of range", self.width));
+        }
+        if !matches!(self.r, 1 | 2 | 4 | 8) {
+            return Err(format!("r {} not in {{1,2,4,8}}", self.r));
+        }
+        if self.block_rowptr.len() != self.npanels() + 1 {
+            return Err("block_rowptr length".into());
+        }
+        if self.block_rowptr[0] != 0
+            || *self.block_rowptr.last().unwrap() as usize != self.nblocks()
+        {
+            return Err("block_rowptr endpoints".into());
+        }
+        if self.masks.len() != self.nblocks() * self.r {
+            return Err("masks length".into());
+        }
+        let mut nnz = 0usize;
+        for p in 0..self.npanels() {
+            let blocks = self.panel_blocks(p);
+            if blocks.start > blocks.end {
+                return Err(format!("panel {p} non-monotone"));
+            }
+            let mut prev_end: i64 = -1;
+            for b in blocks {
+                let col = self.block_colidx[b] as usize;
+                // Blocks within a panel are ordered and non-overlapping: the
+                // next block starts after the previous block's window only if
+                // the previous window had no nnz beyond it — the invariant
+                // from the construction is: strictly increasing start, and
+                // start > previous start.
+                if (col as i64) <= prev_end - self.width as i64 {
+                    return Err(format!("panel {p} blocks not ordered"));
+                }
+                prev_end = col as i64 + self.width as i64;
+                if col + 1 > self.ncols {
+                    return Err(format!("block col {col} out of bounds"));
+                }
+                let mut block_nnz = 0usize;
+                for j in 0..self.r {
+                    let m = self.masks[b * self.r + j];
+                    if self.width < 32 && (m >> self.width) != 0 {
+                        return Err(format!("mask has bits above width in panel {p}"));
+                    }
+                    // Mask bits must not address columns out of range.
+                    if m != 0 {
+                        let top = 31 - m.leading_zeros() as usize;
+                        if col + top >= self.ncols {
+                            return Err(format!("mask bit over ncols in panel {p}"));
+                        }
+                    }
+                    // Virtual padding rows (beyond nrows) must be empty.
+                    if p * self.r + j >= self.nrows && m != 0 {
+                        return Err(format!("padding row has nnz in panel {p}"));
+                    }
+                    block_nnz += m.count_ones() as usize;
+                }
+                if block_nnz == 0 {
+                    return Err(format!("empty block in panel {p}"));
+                }
+                nnz += block_nnz;
+            }
+        }
+        if nnz != self.nnz() {
+            return Err(format!("mask popcount {nnz} != vals {}", self.nnz()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built β(1,4) example of the paper's Fig 2 flavour:
+    /// row0: cols 0,2 (block at 0, mask 0b0101)
+    /// row1: cols 5,6,7 (block at 5, mask 0b0111)
+    fn tiny() -> Spc5Matrix<f64> {
+        Spc5Matrix {
+            nrows: 2,
+            ncols: 9,
+            r: 1,
+            width: 4,
+            block_rowptr: vec![0, 1, 2],
+            block_colidx: vec![0, 5],
+            masks: vec![0b0101, 0b0111],
+            vals: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        }
+    }
+
+    #[test]
+    fn invariants_hold() {
+        tiny().check().unwrap();
+    }
+
+    #[test]
+    fn counts_and_filling() {
+        let m = tiny();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.nblocks(), 2);
+        assert_eq!(m.npanels(), 2);
+        assert!((m.filling() - 5.0 / 8.0).abs() < 1e-12);
+        assert_eq!(m.mask_bytes(), 1);
+        // bytes: rowptr 3*4 + colidx 2*4 + masks 2*1 + vals 5*8
+        assert_eq!(m.bytes(), 12 + 8 + 2 + 40);
+    }
+
+    #[test]
+    fn spmv_ref_math() {
+        let m = tiny();
+        let x: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        let mut y = vec![0.0; 2];
+        m.spmv_ref(&x, &mut y);
+        // row0: 1*x0 + 2*x2 = 1 + 6 = 7
+        // row1: 3*x5 + 4*x6 + 5*x7 = 18 + 28 + 40 = 86
+        assert_eq!(y, vec![7.0, 86.0]);
+    }
+
+    #[test]
+    fn check_rejects_corruption() {
+        let mut m = tiny();
+        m.masks[0] = 0b1_0101; // bit above width
+        assert!(m.check().is_err());
+
+        let mut m = tiny();
+        m.vals.pop(); // popcount mismatch
+        assert!(m.check().is_err());
+
+        let mut m = tiny();
+        m.masks[1] = 0; // empty block
+        assert!(m.check().is_err());
+
+        let mut m = tiny();
+        m.block_colidx[1] = 7; // mask bit 2 would hit col 9 == ncols
+        assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn block_rows_enum() {
+        assert_eq!(BlockRows::R4.as_usize(), 4);
+        assert_eq!(BlockRows::all().map(|r| r.as_usize()), [1, 2, 4, 8]);
+        assert_eq!(BlockRows::R2.label(), "beta(2,VS)");
+    }
+}

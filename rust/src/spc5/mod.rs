@@ -1,0 +1,16 @@
+//! The SPC5 β(r,VS) block storage format (paper §2.4).
+//!
+//! SPC5 extends CSR by splitting each row (or group of `r` rows) into blocks
+//! of up to `VS` columns. A block starts at the column of its first non-zero
+//! and covers the next `VS-1` columns; a per-row bit-mask records which of
+//! those columns hold a non-zero. Values stay *packed* — no zero padding —
+//! so the worst case costs CSR + one mask per block-row, and the best case
+//! saves one column index per extra value in a block.
+
+pub mod convert;
+pub mod format;
+pub mod stats;
+
+pub use convert::{csr_to_spc5, spc5_to_csr};
+pub use format::{BlockRows, Spc5Matrix};
+pub use stats::FormatStats;

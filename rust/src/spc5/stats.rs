@@ -1,0 +1,121 @@
+//! Format statistics — the quantities reported in the paper's Table 1 and
+//! used by the coordinator's format selector.
+
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+
+use super::convert::csr_to_spc5;
+use super::format::Spc5Matrix;
+
+/// Statistics of one β(r,width) formatting of a matrix.
+#[derive(Clone, Debug)]
+pub struct FormatStats {
+    pub r: usize,
+    pub width: usize,
+    pub nnz: usize,
+    pub nblocks: usize,
+    /// Mean block filling in [0,1] (Table 1 prints this as a percentage).
+    pub filling: f64,
+    /// Mean non-zeros per block (the coordinator's selection heuristic uses
+    /// the paper's observation that SPC5 beats CSR above ~2 nnz/block).
+    pub nnz_per_block: f64,
+    /// SPC5 storage bytes.
+    pub bytes: usize,
+    /// CSR storage bytes of the same matrix, for the footprint ratio.
+    pub csr_bytes: usize,
+}
+
+impl FormatStats {
+    pub fn of<T: Scalar>(m: &Spc5Matrix<T>, csr_bytes: usize) -> Self {
+        Self {
+            r: m.r,
+            width: m.width,
+            nnz: m.nnz(),
+            nblocks: m.nblocks(),
+            filling: m.filling(),
+            nnz_per_block: if m.nblocks() == 0 {
+                0.0
+            } else {
+                m.nnz() as f64 / m.nblocks() as f64
+            },
+            bytes: m.bytes(),
+            csr_bytes,
+        }
+    }
+
+    /// Compute stats for one (r, width) without keeping the converted matrix.
+    pub fn measure<T: Scalar>(csr: &Csr<T>, r: usize, width: usize) -> Self {
+        let m = csr_to_spc5(csr, r, width);
+        Self::of(&m, csr.bytes())
+    }
+
+    /// SPC5 bytes relative to CSR (1.0 = same footprint; the paper's worst
+    /// case is CSR + one mask per nnz, the best saves an index per value).
+    pub fn bytes_ratio(&self) -> f64 {
+        self.bytes as f64 / self.csr_bytes as f64
+    }
+
+    pub fn filling_percent(&self) -> f64 {
+        self.filling * 100.0
+    }
+}
+
+/// The paper's Table 1 row for one matrix: fillings of β(1,VS)…β(8,VS) in
+/// both precisions (VS = 8 for f64, 16 for f32).
+pub fn table1_fillings(csr64: &Csr<f64>, csr32: &Csr<f32>) -> ([f64; 4], [f64; 4]) {
+    let rs = [1usize, 2, 4, 8];
+    let f64s = rs.map(|r| FormatStats::measure(csr64, r, 8).filling_percent());
+    let f32s = rs.map(|r| FormatStats::measure(csr32, r, 16).filling_percent());
+    (f64s, f32s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn dense_filling_is_100() {
+        let d: Csr<f64> = gen::dense(32, 0);
+        let s = FormatStats::measure(&d, 4, 8);
+        assert!((s.filling_percent() - 100.0).abs() < 1e-9);
+        assert_eq!(s.nnz, 1024);
+        assert_eq!(s.nnz_per_block, 32.0);
+    }
+
+    #[test]
+    fn scattered_filling_low_and_monotone_decreasing_in_r() {
+        let m: Csr<f64> = gen::random_uniform(400, 4.0, 3);
+        let fillings: Vec<f64> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&r| FormatStats::measure(&m, r, 8).filling)
+            .collect();
+        for w in fillings.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "filling should not increase with r: {fillings:?}");
+        }
+        assert!(fillings[0] < 0.5);
+    }
+
+    #[test]
+    fn f32_filling_not_above_f64() {
+        // Wider vectors (VS=16) can only dilute blocks.
+        let m64: Csr<f64> = gen::random_uniform(300, 6.0, 9);
+        let m32: Csr<f32> = gen::random_uniform(300, 6.0, 9);
+        let (f64s, f32s) = table1_fillings(&m64, &m32);
+        for i in 0..4 {
+            assert!(f32s[i] <= f64s[i] + 1e-9, "{f32s:?} vs {f64s:?}");
+        }
+    }
+
+    #[test]
+    fn bytes_ratio_bounds() {
+        // Worst case: every block holds one value -> ratio > 1 (CSR + mask).
+        let scattered: Csr<f64> = gen::random_uniform(200, 2.0, 5);
+        let s = FormatStats::measure(&scattered, 1, 8);
+        assert!(s.bytes_ratio() > 0.95, "ratio {}", s.bytes_ratio());
+        // Best case: dense rows -> big savings.
+        let d: Csr<f64> = gen::dense(64, 1);
+        let s = FormatStats::measure(&d, 1, 8);
+        assert!(s.bytes_ratio() < 0.8, "ratio {}", s.bytes_ratio());
+    }
+}

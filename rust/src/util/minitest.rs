@@ -1,0 +1,183 @@
+//! A property-based testing mini-framework (offline stand-in for `proptest`).
+//!
+//! Provides seeded random-input generation, a configurable number of cases,
+//! and greedy shrinking of failing inputs. Used throughout the test suite to
+//! state invariants over random sparse matrices and kernel configurations,
+//! e.g. "for all CSR matrices, CSR -> SPC5 -> dense equals CSR -> dense".
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath flags)
+//! use spc5::util::minitest::{property, Gen};
+//! property("reverse twice is identity", |g| {
+//!     let xs = g.vec_usize(0..50, 0..100);
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     assert_eq!(xs, twice);
+//! });
+//! ```
+
+use super::prng::{Rng, Xoshiro256};
+
+/// Number of random cases per property (override with `SPC5_PROPTEST_CASES`).
+fn num_cases() -> usize {
+    std::env::var("SPC5_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Input generator handed to each property case. Wraps a seeded PRNG and
+/// records sizes so failures are reproducible from the printed seed.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// The seed of this case — printed on failure.
+    pub seed: u64,
+    /// Shrink level 0..: generators should produce smaller inputs at higher
+    /// levels. Level 0 = full-size.
+    pub shrink: u32,
+}
+
+impl Gen {
+    fn new(seed: u64, shrink: u32) -> Self {
+        Self { rng: Xoshiro256::new(seed), seed, shrink }
+    }
+
+    /// Scale an upper bound down by the shrink level (halving each level,
+    /// never below `lo + 1`).
+    fn shrunk_hi(&self, lo: usize, hi: usize) -> usize {
+        let span = hi - lo;
+        let scaled = span >> self.shrink;
+        lo + scaled.max(1)
+    }
+
+    pub fn usize_in(&mut self, r: std::ops::Range<usize>) -> usize {
+        let hi = self.shrunk_hi(r.start, r.end);
+        self.rng.range(r.start, hi)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// f64 in [-scale, scale], well-conditioned (no subnormals/NaN).
+    pub fn f64_in(&mut self, scale: f64) -> f64 {
+        (self.rng.next_f64() * 2.0 - 1.0) * scale
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    pub fn vec_usize(&mut self, len: std::ops::Range<usize>, each: std::ops::Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.range(each.start, each.end)).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: std::ops::Range<usize>, scale: f64) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| (self.rng.next_f64() * 2.0 - 1.0) * scale).collect()
+    }
+
+    /// Access the raw RNG for custom generators (matrix corpus etc.).
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Run `f` on `num_cases()` random inputs. On a panic, retry the same seed at
+/// increasing shrink levels to find a smaller failing input, then re-panic
+/// with a reproduction message.
+pub fn property(name: &str, f: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base_seed = std::env::var("SPC5_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_5eed_u64);
+    for case in 0..num_cases() {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let outcome = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 0);
+            f(&mut g);
+        });
+        if let Err(err) = outcome {
+            // Shrink: same seed, progressively smaller size bounds. Keep the
+            // deepest level that still fails.
+            let mut best_level = 0;
+            for level in 1..=6 {
+                let failed = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, level);
+                    f(&mut g);
+                })
+                .is_err();
+                if failed {
+                    best_level = level;
+                }
+            }
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, minimal shrink level {best_level}):\n  {msg}\n  \
+                 reproduce with SPC5_PROPTEST_SEED={base_seed} (case offset {case})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        property("always true", |g| {
+            let _ = g.u64();
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), num_cases());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_seed() {
+        property("always false", |_g| panic!("nope"));
+    }
+
+    #[test]
+    fn shrink_reduces_sizes() {
+        let mut g0 = Gen::new(1, 0);
+        let mut g4 = Gen::new(1, 4);
+        // At shrink level 4 the upper bound 1000 collapses to <= 1000/16 + lo.
+        let hi0 = (0..200).map(|_| g0.usize_in(0..1000)).max().unwrap();
+        let hi4 = (0..200).map(|_| g4.usize_in(0..1000)).max().unwrap();
+        assert!(hi4 < hi0 / 4, "hi0={hi0} hi4={hi4}");
+    }
+
+    #[test]
+    fn gen_pick_and_vec() {
+        let mut g = Gen::new(2, 0);
+        let xs = [1, 2, 3];
+        for _ in 0..10 {
+            assert!(xs.contains(g.pick(&xs)));
+        }
+        let v = g.vec_f64(5..6, 2.0);
+        assert_eq!(v.len(), 5);
+        assert!(v.iter().all(|x| x.abs() <= 2.0));
+    }
+}

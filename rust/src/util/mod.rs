@@ -1,0 +1,22 @@
+//! Utility substrates.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `proptest`, `criterion`, `serde_json`) are unavailable. This
+//! module provides the minimal, well-tested equivalents the rest of the
+//! framework needs:
+//!
+//! - [`prng`] — SplitMix64 / Xoshiro256** pseudo-random number generators,
+//! - [`stats`] — streaming summary statistics (mean/median/stddev/quantiles),
+//! - [`json`] — a small JSON value/writer used by the bench emitters,
+//! - [`minitest`] — a property-based testing mini-framework (proptest stand-in),
+//! - [`timing`] — monotonic timers and throughput helpers.
+
+pub mod json;
+pub mod minitest;
+pub mod prng;
+pub mod stats;
+pub mod timing;
+
+pub use prng::{Rng, SplitMix64, Xoshiro256};
+pub use stats::Summary;
+pub use timing::Timer;

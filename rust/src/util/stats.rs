@@ -1,0 +1,179 @@
+//! Summary statistics for benchmark measurements.
+
+/// A batch of samples with the usual summary statistics. Used by the bench
+/// harness (`crate::bench`) to report stable medians and spread.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_samples(samples: Vec<f64>) -> Self {
+        let mut s = Self { samples, sorted: false };
+        s.sort();
+        s
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    fn sort(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.sort();
+        self.samples.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.sort();
+        self.samples.last().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    /// Linear-interpolated quantile, `q` in `[0,1]`.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        self.sort();
+        let n = self.samples.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n == 1 {
+            return self.samples[0];
+        }
+        let pos = q * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    /// Median absolute deviation — robust spread measure used to detect
+    /// noisy benchmark runs.
+    pub fn mad(&mut self) -> f64 {
+        let med = self.median();
+        let devs: Vec<f64> = self.samples.iter().map(|x| (x - med).abs()).collect();
+        Summary::from_samples(devs).median()
+    }
+}
+
+/// Geometric mean over strictly-positive values; the paper's "average" rows
+/// across matrices are ratio-like, so the geomean is also reported.
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let log_sum: f64 = values
+        .iter()
+        .map(|&v| {
+            assert!(v > 0.0, "geomean of non-positive value {v}");
+            v.ln()
+        })
+        .sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.len(), 3);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.median(), 2.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let s = Summary::from_samples(vec![2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        // population variance is 4; sample stddev = sqrt(32/7)
+        assert!((s.stddev() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let mut s = Summary::from_samples(vec![0.0, 10.0]);
+        assert!((s.quantile(0.25) - 2.5).abs() < 1e-12);
+        assert!((s.quantile(0.75) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_even_count() {
+        let mut s = Summary::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mad_robust() {
+        let mut s = Summary::from_samples(vec![1.0, 1.0, 2.0, 2.0, 4.0, 6.0, 100.0]);
+        assert_eq!(s.mad(), 1.0);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+        assert!(geomean(&[]).is_nan());
+    }
+}

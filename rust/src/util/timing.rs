@@ -1,0 +1,73 @@
+//! Monotonic timing helpers for the bench harness and coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple monotonic stopwatch.
+#[derive(Clone, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        let d = self.start.elapsed();
+        d.as_secs() as f64 + d.subsec_nanos() as f64 * 1e-9
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// GFlop/s for `flops` floating point operations done in `secs` seconds.
+pub fn gflops(flops: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return f64::NAN;
+    }
+    flops as f64 / secs / 1e9
+}
+
+/// The paper counts 2 flops per non-zero (one multiply + one add).
+pub fn spmv_flops(nnz: u64) -> u64 {
+    2 * nnz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_secs() >= 0.002);
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(2_000_000_000, 1.0) - 2.0).abs() < 1e-12);
+        assert!((gflops(1_000_000_000, 0.5) - 2.0).abs() < 1e-12);
+        assert!(gflops(1, 0.0).is_nan());
+    }
+
+    #[test]
+    fn spmv_flop_count() {
+        assert_eq!(spmv_flops(10), 20);
+    }
+}

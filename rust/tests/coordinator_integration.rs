@@ -1,0 +1,91 @@
+//! Integration: the coordinator service under concurrent load, with format
+//! selection, batching and error handling all active.
+
+use std::sync::Arc;
+
+use spc5::coordinator::{FormatChoice, SpmvService};
+use spc5::matrix::{corpus_by_name, gen, Csr};
+
+#[test]
+fn concurrent_clients_many_matrices() {
+    let svc: Arc<SpmvService<f64>> = Arc::new(SpmvService::new(3, 8));
+    // Register a mix of formats: dense-ish (SPC5) and scattered (CSR).
+    let mats: Vec<Csr<f64>> = vec![
+        corpus_by_name("nd6k").unwrap().build(30_000),
+        corpus_by_name("wikipedia-20060925").unwrap().build(30_000),
+        gen::poisson2d(20),
+    ];
+    let ids: Vec<_> = mats.iter().map(|m| svc.register(m.clone())).collect();
+
+    // Expected results computed directly.
+    let mut expected = Vec::new();
+    for m in &mats {
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i % 9) as f64 * 0.5).collect();
+        let mut y = vec![0.0; m.nrows];
+        m.spmv(&x, &mut y);
+        expected.push((x, y));
+    }
+
+    std::thread::scope(|scope| {
+        for client in 0..4 {
+            let svc = Arc::clone(&svc);
+            let ids = ids.clone();
+            let expected = &expected;
+            scope.spawn(move || {
+                for round in 0..25 {
+                    let pick = (client + round) % ids.len();
+                    let (x, want) = &expected[pick];
+                    let y = svc.spmv(ids[pick], x.clone()).expect("spmv");
+                    spc5::scalar::assert_allclose(&y, want, 1e-11, 1e-12);
+                }
+            });
+        }
+    });
+
+    let snap = svc.metrics_json().to_string();
+    assert!(snap.contains("\"completed\":100"), "{snap}");
+}
+
+#[test]
+fn selector_decisions_visible_and_sane() {
+    let svc: SpmvService<f64> = SpmvService::new(1, 4);
+    let dense_id = svc.register(gen::dense(96, 1));
+    let scattered_id = svc.register(gen::random_uniform(800, 3.0, 2));
+    match svc.selection(dense_id).unwrap().choice {
+        FormatChoice::Spc5 { r } => assert!(r >= 2),
+        FormatChoice::Csr => panic!("dense should use SPC5"),
+    }
+    assert_eq!(svc.selection(scattered_id).unwrap().choice, FormatChoice::Csr);
+}
+
+#[test]
+fn service_survives_error_storm() {
+    let svc: SpmvService<f64> = SpmvService::new(2, 4);
+    let m: Csr<f64> = gen::poisson2d(10);
+    let id = svc.register(m);
+    // Interleave good and bad requests.
+    let mut receivers = Vec::new();
+    for k in 0..60 {
+        if k % 3 == 0 {
+            receivers.push((false, svc.submit(id, vec![0.0; 5]))); // bad dim
+        } else {
+            receivers.push((true, svc.submit(id, vec![1.0; 100])));
+        }
+    }
+    let mut ok = 0;
+    let mut err = 0;
+    for (should_succeed, rx) in receivers {
+        match rx.recv().unwrap() {
+            Ok(_) => {
+                assert!(should_succeed);
+                ok += 1;
+            }
+            Err(_) => {
+                assert!(!should_succeed);
+                err += 1;
+            }
+        }
+    }
+    assert_eq!(ok, 40);
+    assert_eq!(err, 20);
+}

@@ -1,0 +1,79 @@
+//! Integration: Matrix Market I/O ↔ CSR ↔ SPC5 round trips across the whole
+//! corpus, in both precisions.
+
+use spc5::matrix::{corpus_entries, mm_io, Csr};
+use spc5::spc5::{csr_to_spc5, spc5_to_csr, FormatStats};
+
+#[test]
+fn corpus_roundtrips_all_formats_f64() {
+    for e in corpus_entries() {
+        let m: Csr<f64> = e.build(15_000);
+        for r in [1usize, 2, 4, 8] {
+            let s = csr_to_spc5(&m, r, 8);
+            s.check().unwrap_or_else(|err| panic!("{} beta({r},8): {err}", e.name));
+            let back = spc5_to_csr(&s);
+            assert_eq!(back.row_ptr, m.row_ptr, "{} r={r}", e.name);
+            assert_eq!(back.col_idx, m.col_idx, "{} r={r}", e.name);
+            assert_eq!(back.vals, m.vals, "{} r={r}", e.name);
+        }
+    }
+}
+
+#[test]
+fn corpus_roundtrips_f32_vs16() {
+    for e in corpus_entries().into_iter().take(6) {
+        let m: Csr<f32> = e.build(10_000);
+        let s = csr_to_spc5(&m, 4, 16);
+        s.check().unwrap();
+        let back = spc5_to_csr(&s);
+        assert_eq!(back.col_idx, m.col_idx, "{}", e.name);
+    }
+}
+
+#[test]
+fn matrix_market_file_roundtrip_through_spc5() {
+    let dir = std::env::temp_dir().join("spc5_mm_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let m: Csr<f64> = corpus_entries()[1].build(5_000); // CO
+    let path_a = dir.join("a.mtx");
+    mm_io::write_csr_file(&m, &path_a).unwrap();
+    let loaded: Csr<f64> = mm_io::read_csr(&path_a).unwrap();
+    assert_eq!(loaded.col_idx, m.col_idx);
+
+    // Through SPC5 and back to a second file.
+    let s = csr_to_spc5(&loaded, 2, 8);
+    let back = spc5_to_csr(&s);
+    let path_b = dir.join("b.mtx");
+    mm_io::write_csr_file(&back, &path_b).unwrap();
+    let reloaded: Csr<f64> = mm_io::read_csr(&path_b).unwrap();
+    assert_eq!(reloaded.row_ptr, m.row_ptr);
+    assert_eq!(reloaded.col_idx, m.col_idx);
+    for (a, b) in reloaded.vals.iter().zip(&m.vals) {
+        assert!((a - b).abs() < 1e-12 * b.abs().max(1.0));
+    }
+}
+
+#[test]
+fn fillings_decrease_with_r_across_corpus() {
+    // Table 1's structural pattern, on our synthetic corpus.
+    for e in corpus_entries() {
+        let m: Csr<f64> = e.build(15_000);
+        let mut prev = f64::INFINITY;
+        for r in [1usize, 2, 4, 8] {
+            let f = FormatStats::measure(&m, r, 8).filling;
+            assert!(f <= prev + 1e-9, "{}: filling grew at r={r}", e.name);
+            prev = f;
+        }
+    }
+}
+
+#[test]
+fn beta1_preserves_csr_value_order() {
+    // §5: "The β(1,*) format has a low conversion cost as it leaves the
+    // array of NNZ unchanged compared to CSR".
+    for e in corpus_entries().into_iter().take(8) {
+        let m: Csr<f64> = e.build(8_000);
+        let s = csr_to_spc5(&m, 1, 8);
+        assert_eq!(s.vals, m.vals, "{}", e.name);
+    }
+}

@@ -1,0 +1,112 @@
+//! Integration: every kernel (scalar, vectorized-CSR, SPC5 on both simulated
+//! ISAs, hybrid, native) computes the same SpMV on every corpus matrix.
+
+use spc5::kernels::{
+    dispatch::run_simulated, native, KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad,
+};
+use spc5::matrix::{corpus_entries, Csr};
+use spc5::scalar::assert_allclose;
+use spc5::simd::NullSink;
+use spc5::spc5::csr_to_spc5;
+
+fn all_kinds() -> Vec<KernelKind> {
+    let mut v = vec![KernelKind::ScalarCsr, KernelKind::CsrVec];
+    for r in [1usize, 2, 4, 8] {
+        v.push(KernelKind::ScalarSpc5 { r });
+        for x_load in [XLoad::Single, XLoad::Partial] {
+            for reduction in [Reduction::Native, Reduction::Manual] {
+                v.push(KernelKind::Spc5 { r, x_load, reduction });
+            }
+        }
+        v.push(KernelKind::Hybrid { r, threshold: 3 });
+    }
+    v
+}
+
+#[test]
+fn all_kernels_agree_on_corpus_f64() {
+    for e in corpus_entries().into_iter().step_by(3) {
+        let csr: Csr<f64> = e.build(8_000);
+        let n = csr.ncols;
+        let x: Vec<f64> = (0..n).map(|i| 0.5 + ((i * 13) % 7) as f64 * 0.25).collect();
+        let mut want = vec![0.0; csr.nrows];
+        csr.spmv(&x, &mut want);
+        let mut set = MatrixSet::new(csr);
+        for kind in all_kinds() {
+            for isa in [SimIsa::Avx512, SimIsa::Sve] {
+                // Hybrid is AVX-only in the dispatch; skip the SVE duplicate.
+                if matches!(kind, KernelKind::Hybrid { .. }) && isa == SimIsa::Sve {
+                    continue;
+                }
+                let mut sink = NullSink;
+                let y = run_simulated(KernelCfg { isa, kind }, &mut set, &x, &mut sink);
+                assert_allclose(&y, &want, 1e-11, 1e-11);
+            }
+        }
+    }
+}
+
+#[test]
+fn all_kernels_agree_f32() {
+    let e = &corpus_entries()[11]; // nd6k: high filling
+    let csr: Csr<f32> = e.build(6_000);
+    let n = csr.ncols;
+    let x: Vec<f32> = (0..n).map(|i| 0.5 + ((i * 7) % 5) as f32 * 0.3).collect();
+    let mut want = vec![0.0f32; csr.nrows];
+    csr.spmv(&x, &mut want);
+    let mut set = MatrixSet::new(csr);
+    for kind in [
+        KernelKind::ScalarCsr,
+        KernelKind::Spc5 { r: 4, x_load: XLoad::Single, reduction: Reduction::Manual },
+        KernelKind::CsrVec,
+    ] {
+        let mut sink = NullSink;
+        let y = run_simulated(KernelCfg { isa: SimIsa::Avx512, kind }, &mut set, &x, &mut sink);
+        assert_allclose(&y, &want, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn native_kernels_agree_with_simulated() {
+    let e = &corpus_entries()[14]; // pwtk
+    let csr: Csr<f64> = e.build(10_000);
+    let x: Vec<f64> = (0..csr.ncols).map(|i| (i as f64 * 0.37).cos()).collect();
+    let mut y_native_csr = vec![0.0; csr.nrows];
+    native::spmv_csr(&csr, &x, &mut y_native_csr);
+    for r in [1usize, 2, 4, 8] {
+        let m = csr_to_spc5(&csr, r, 8);
+        let mut y = vec![0.0; csr.nrows];
+        native::spmv_spc5(&m, &x, &mut y);
+        assert_allclose(&y, &y_native_csr, 1e-11, 1e-12);
+    }
+}
+
+#[test]
+fn instruction_counts_scale_with_structure() {
+    use spc5::simd::{CountingSink, Op};
+    // The number of expand-loads equals blocks x r: fewer, fuller blocks on
+    // a high-correlation matrix; many near-empty ones on a scattered one.
+    let dense_ish: Csr<f64> = corpus_entries()[11].build(8_000); // nd6k
+    let scattered: Csr<f64> = corpus_entries()[22].build(8_000); // wikipedia
+    let count_expands = |csr: &Csr<f64>| {
+        let x = vec![1.0; csr.ncols];
+        let mut set = MatrixSet::new(csr.clone());
+        let mut sink = CountingSink::new();
+        run_simulated(
+            KernelCfg {
+                isa: SimIsa::Avx512,
+                kind: KernelKind::Spc5 { r: 1, x_load: XLoad::Single, reduction: Reduction::Manual },
+            },
+            &mut set,
+            &x,
+            &mut sink,
+        );
+        sink.count(Op::VExpandLoad) as f64 / csr.nnz() as f64
+    };
+    let dense_ratio = count_expands(&dense_ish);
+    let scattered_ratio = count_expands(&scattered);
+    assert!(
+        dense_ratio < 0.5 * scattered_ratio,
+        "expands/nnz: nd6k {dense_ratio:.2} vs wikipedia {scattered_ratio:.2}"
+    );
+}

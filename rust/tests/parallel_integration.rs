@@ -1,0 +1,78 @@
+//! Integration: parallel runtime correctness at scale and the Fig-8 model
+//! path (per-thread traces + contention).
+
+use spc5::kernels::{dispatch, KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad};
+use spc5::matrix::{corpus_by_name, Csr};
+use spc5::parallel::{balance_rows, ParallelSpc5};
+use spc5::perfmodel::{self, estimate::model_warm, parallel_gflops};
+
+#[test]
+fn parallel_native_equivalence_on_corpus() {
+    for name in ["nd6k", "CO", "torso1"] {
+        let m: Csr<f64> = corpus_by_name(name).unwrap().build(40_000);
+        let x: Vec<f64> = (0..m.ncols).map(|i| ((i % 23) as f64 - 11.0) * 0.1).collect();
+        let mut want = vec![0.0; m.nrows];
+        m.spmv(&x, &mut want);
+        for threads in [2usize, 5, 8] {
+            let pm = ParallelSpc5::new(&m, 4, threads);
+            let mut y = vec![0.0; m.nrows];
+            pm.spmv(&x, &mut y);
+            spc5::scalar::assert_allclose(&y, &want, 1e-11, 1e-12);
+        }
+    }
+}
+
+/// Model a parallel run the way fig8_parallel does: slice rows, run the
+/// simulated kernel per-slice (fresh private caches), combine with the
+/// machine's bandwidth topology.
+fn modeled_parallel_gflops(m: &Csr<f64>, threads: usize) -> f64 {
+    let machine = perfmodel::a64fx();
+    let partition = balance_rows(m, threads, 4);
+    let reports: Vec<_> = partition
+        .ranges
+        .iter()
+        .map(|range| {
+            let slice = m.row_slice(range.start, range.end);
+            let x = vec![1.0; slice.ncols];
+            let flops = 2 * slice.nnz() as u64;
+            let mut set = MatrixSet::new(slice);
+            let cfg = KernelCfg {
+                isa: SimIsa::Sve,
+                kind: KernelKind::Spc5 {
+                    r: 4,
+                    x_load: XLoad::Single,
+                    reduction: Reduction::Manual,
+                },
+            };
+            let (report, _) = model_warm(&machine, flops, |sink| {
+                dispatch::run_simulated(cfg, &mut set, &x, sink)
+            });
+            report
+        })
+        .collect();
+    parallel_gflops(&machine, &reports)
+}
+
+#[test]
+fn modeled_parallel_speedup_grows_then_saturates() {
+    let m: Csr<f64> = corpus_by_name("nd6k").unwrap().build(60_000);
+    let g1 = modeled_parallel_gflops(&m, 1);
+    let g4 = modeled_parallel_gflops(&m, 4);
+    let g12 = modeled_parallel_gflops(&m, 12);
+    assert!(g4 > 2.0 * g1, "4-thread speedup too small: {g1} -> {g4}");
+    assert!(g12 > g4, "more threads should not slow down: {g4} -> {g12}");
+    // Fig 8 sanity: speedup does not exceed thread count by much more than
+    // the cache-locality bonus allows.
+    assert!(g12 / g1 < 30.0, "speedup {:.1} is implausible", g12 / g1);
+}
+
+#[test]
+fn partitions_respect_thread_counts() {
+    let m: Csr<f64> = corpus_by_name("CO").unwrap().build(20_000);
+    for t in [1usize, 3, 16, 48] {
+        let p = balance_rows(&m, t, 8);
+        assert_eq!(p.nparts(), t);
+        let covered: usize = p.ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, m.nrows);
+    }
+}

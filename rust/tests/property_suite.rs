@@ -1,0 +1,161 @@
+//! Cross-module property suite: the framework-level invariants, each stated
+//! over random matrices and configurations (minitest = offline proptest
+//! stand-in, see DESIGN.md §Substitutions).
+
+use spc5::kernels::{dispatch, native, KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad};
+use spc5::matrix::{gen, Csr};
+use spc5::parallel::ParallelSpc5;
+use spc5::simd::{CountingSink, NullSink, Op};
+use spc5::spc5::{csr_to_spc5, spc5_to_csr};
+use spc5::util::minitest::{property, Gen};
+
+fn random_csr(g: &mut Gen) -> Csr<f64> {
+    let nrows = g.usize_in(1..80);
+    let ncols = g.usize_in(4..120);
+    gen::Structured {
+        nrows,
+        ncols,
+        nnz_per_row: (1.0 + g.f64_unit() * 7.0).min(ncols as f64),
+        run_len: 1.0 + g.f64_unit() * 6.0,
+        row_corr: g.f64_unit(),
+        skew: g.f64_unit() * 0.8,
+        bandwidth: None,
+    }
+    .generate(g.u64())
+}
+
+#[test]
+fn prop_format_is_lossless() {
+    property("spc5 conversion is lossless for all (r,width)", |g| {
+        let m = random_csr(g);
+        let r = *g.pick(&[1usize, 2, 4, 8]);
+        let width = *g.pick(&[2usize, 4, 8, 16, 32]);
+        let s = csr_to_spc5(&m, r, width);
+        s.check().expect("invariants");
+        let back = spc5_to_csr(&s);
+        assert_eq!(back.row_ptr, m.row_ptr);
+        assert_eq!(back.col_idx, m.col_idx);
+        assert_eq!(back.vals, m.vals);
+    });
+}
+
+#[test]
+fn prop_every_kernel_is_an_spmv() {
+    property("all kernels compute A*x", |g| {
+        let m = random_csr(g);
+        let x: Vec<f64> = (0..m.ncols).map(|_| g.f64_in(2.0)).collect();
+        let mut want = vec![0.0; m.nrows];
+        m.spmv(&x, &mut want);
+        let r = *g.pick(&[1usize, 2, 4, 8]);
+        let kind = *g.pick(&[
+            KernelKind::ScalarCsr,
+            KernelKind::ScalarSpc5 { r },
+            KernelKind::CsrVec,
+            KernelKind::Spc5 {
+                r,
+                x_load: XLoad::Single,
+                reduction: Reduction::Manual,
+            },
+            KernelKind::Spc5 {
+                r,
+                x_load: XLoad::Partial,
+                reduction: Reduction::Native,
+            },
+            KernelKind::Hybrid { r, threshold: 3 },
+        ]);
+        let isa = if matches!(kind, KernelKind::Hybrid { .. }) || g.bool() {
+            SimIsa::Avx512
+        } else {
+            SimIsa::Sve
+        };
+        let mut set = MatrixSet::new(m);
+        let y = dispatch::run_simulated(KernelCfg { isa, kind }, &mut set, &x, &mut NullSink);
+        spc5::scalar::assert_allclose(&y, &want, 1e-10, 1e-11);
+    });
+}
+
+#[test]
+fn prop_value_traffic_never_padded() {
+    property("SPC5 value traffic == nnz * bytes (no zero padding)", |g| {
+        let m = random_csr(g);
+        let nnz = m.nnz() as u64;
+        let r = *g.pick(&[1usize, 2, 4, 8]);
+        let x = vec![1.0; m.ncols];
+        let mut set = MatrixSet::new(m);
+        let mut sink = CountingSink::new();
+        dispatch::run_simulated(
+            KernelCfg {
+                isa: SimIsa::Avx512,
+                kind: KernelKind::Spc5 { r, x_load: XLoad::Single, reduction: Reduction::Native },
+            },
+            &mut set,
+            &x,
+            &mut sink,
+        );
+        // Expand-loads carry exactly the packed values; count their bytes by
+        // subtracting every other known stream.
+        let spc5 = set.spc5(r);
+        let expected_expand_bytes = nnz * 8;
+        let other = spc5.nblocks() as u64 * 64  // x windows
+            + spc5.nblocks() as u64 * 4          // col indices
+            + (spc5.nblocks() * spc5.r) as u64 * spc5.mask_bytes() as u64
+            + set.csr.nrows as u64 * 8; // y read-modify-write loads
+        assert_eq!(sink.load_bytes, expected_expand_bytes + other);
+    });
+}
+
+#[test]
+fn prop_parallel_equals_serial() {
+    property("parallel spmv == serial, any thread count", |g| {
+        let m = random_csr(g);
+        let x: Vec<f64> = (0..m.ncols).map(|_| g.f64_in(1.0)).collect();
+        let mut want = vec![0.0; m.nrows];
+        native::spmv_csr(&m, &x, &mut want);
+        let threads = g.usize_in(1..10);
+        let r = *g.pick(&[1usize, 2, 4, 8]);
+        let pm = ParallelSpc5::new(&m, r, threads);
+        let mut y = vec![0.0; m.nrows];
+        pm.spmv(&x, &mut y);
+        spc5::scalar::assert_allclose(&y, &want, 1e-10, 1e-12);
+    });
+}
+
+#[test]
+fn prop_fma_count_invariant() {
+    property("vector kernels do exactly nblocks*r FMAs", |g| {
+        let m = random_csr(g);
+        let r = *g.pick(&[1usize, 2, 4]);
+        let x = vec![1.0; m.ncols];
+        let mut set = MatrixSet::new(m);
+        let mut sink = CountingSink::new();
+        dispatch::run_simulated(
+            KernelCfg {
+                isa: SimIsa::Sve,
+                kind: KernelKind::Spc5 { r, x_load: XLoad::Single, reduction: Reduction::Manual },
+            },
+            &mut set,
+            &x,
+            &mut sink,
+        );
+        let spc5 = set.spc5(r);
+        assert_eq!(sink.count(Op::SvFma), (spc5.nblocks() * spc5.r) as u64);
+    });
+}
+
+#[test]
+fn prop_selector_never_picks_worse_than_csr_by_its_own_model() {
+    property("selector choice minimizes its own cost model", |g| {
+        let m = random_csr(g);
+        let model = spc5::coordinator::selector::SelectorModel::default();
+        let sel = spc5::coordinator::select_format(&m, &model);
+        let best_spc5 = sel
+            .candidates
+            .iter()
+            .map(|(_, _, c)| *c)
+            .fold(f64::INFINITY, f64::min);
+        match sel.choice {
+            spc5::coordinator::FormatChoice::Csr => assert!(sel.csr_cost <= best_spc5),
+            spc5::coordinator::FormatChoice::Spc5 { .. } => assert!(best_spc5 < sel.csr_cost),
+        }
+    });
+}

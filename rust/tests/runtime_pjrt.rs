@@ -1,0 +1,107 @@
+//! End-to-end three-layer integration: the JAX/Pallas-lowered HLO artifacts
+//! executed from Rust via PJRT, cross-checked against the native kernels.
+//!
+//! Requires `make artifacts` (skips with a message when missing, so
+//! `cargo test` works in a fresh checkout).
+
+use spc5::matrix::gen;
+use spc5::matrix::Csr;
+use spc5::runtime::{artifacts, PjrtRunner, Spc5Arrays};
+
+fn runner() -> Option<PjrtRunner> {
+    let dir = artifacts::artifacts_dir();
+    match PjrtRunner::load(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP runtime_pjrt: {e}");
+            None
+        }
+    }
+}
+
+fn poisson_arrays(meta: &spc5::runtime::ArtifactMeta) -> Spc5Arrays {
+    let m: Csr<f64> = gen::poisson2d(meta.grid);
+    Spc5Arrays::from_csr(&m, meta.vs, meta.tile)
+}
+
+#[test]
+fn pjrt_spmv_matches_native() {
+    let Some(runner) = runner() else { return };
+    let arrays = poisson_arrays(&runner.meta);
+    let n = runner.meta.n;
+    let x: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.25).collect();
+
+    let got = runner.spmv(&arrays, &x).expect("pjrt spmv");
+    let want = arrays.spmv_ref(&x);
+    assert_eq!(got.len(), n);
+    for i in 0..n {
+        assert!(
+            (got[i] - want[i]).abs() <= 1e-4 + 1e-4 * want[i].abs(),
+            "y[{i}]: pjrt {} vs native {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_spmv_matches_rust_f64_reference() {
+    // Cross-language, cross-precision check against the Rust CSR kernel.
+    let Some(runner) = runner() else { return };
+    let m64: Csr<f64> = gen::poisson2d(runner.meta.grid);
+    let arrays = poisson_arrays(&runner.meta);
+    let n = runner.meta.n;
+    let x32: Vec<f32> = (0..n).map(|i| (i as f32 * 0.001).sin()).collect();
+    let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+    let mut want = vec![0.0f64; n];
+    m64.spmv(&x64, &mut want);
+    let got = runner.spmv(&arrays, &x32).expect("pjrt spmv");
+    for i in 0..n {
+        assert!(
+            (got[i] as f64 - want[i]).abs() < 1e-3,
+            "y[{i}]: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_cg_reduces_residual_and_matches_rust_cg() {
+    let Some(runner) = runner() else { return };
+    let arrays = poisson_arrays(&runner.meta);
+    let n = runner.meta.n;
+    let b = vec![1.0f32; n];
+
+    let (x, rnorm) = runner.cg_solve(&arrays, &b).expect("pjrt cg");
+    let b_norm = (n as f32).sqrt();
+    assert!(
+        rnorm < 0.05 * b_norm,
+        "CG after {} iters: ||r|| = {rnorm} (||b|| = {b_norm})",
+        runner.meta.cg_iters
+    );
+
+    // The Rust CG (same iteration cap) must land at a comparable residual.
+    let m: Csr<f64> = gen::poisson2d(runner.meta.grid);
+    let b64 = vec![1.0f64; n];
+    let rust = spc5::solver::cg(&m, &b64, 0.0, runner.meta.cg_iters);
+    let rust_rel = rust.residuals.last().unwrap();
+    let pjrt_rel = (rnorm / b_norm) as f64;
+    assert!(
+        (pjrt_rel - rust_rel).abs() < 0.02,
+        "pjrt rel residual {pjrt_rel} vs rust {rust_rel}"
+    );
+
+    // And A·x ≈ b through the native kernel.
+    let ax = arrays.spmv_ref(&x);
+    let err: f32 = ax.iter().zip(&b).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+    assert!(err < 0.05 * b_norm, "||Ax-b|| = {err}");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(runner) = runner() else { return };
+    let arrays = poisson_arrays(&runner.meta);
+    let bad_x = vec![0.0f32; 3];
+    assert!(runner.spmv(&arrays, &bad_x).is_err());
+}

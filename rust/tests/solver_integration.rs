@@ -1,0 +1,104 @@
+//! Integration: solvers over every matrix representation, residual
+//! consistency across formats, and the motivating-workload path (SpMV inside
+//! CG/BiCGSTAB/power iteration).
+
+use spc5::matrix::{gen, Coo, Csr};
+use spc5::parallel::{ParallelCsr, ParallelSpc5};
+use spc5::solver::{bicgstab, cg, power_iteration, LinOp};
+use spc5::spc5::csr_to_spc5;
+
+#[test]
+fn cg_same_iteration_count_across_representations() {
+    let m: Csr<f64> = gen::poisson2d(24);
+    let b: Vec<f64> = (0..m.nrows).map(|i| 1.0 + (i % 3) as f64).collect();
+    let base = cg(&m, &b, 1e-9, 5000);
+    assert!(base.converged);
+    for r in [1usize, 4] {
+        let s = csr_to_spc5(&m, r, 8);
+        let res = cg(&s, &b, 1e-9, 5000);
+        assert!(res.converged);
+        // Identical arithmetic would give identical counts; formats reorder
+        // sums so allow a small difference.
+        assert!(
+            (res.iterations() as i64 - base.iterations() as i64).abs() <= 2,
+            "iters {} vs {}",
+            res.iterations(),
+            base.iterations()
+        );
+    }
+    let p = ParallelSpc5::new(&m, 4, 3);
+    let res = cg(&p, &b, 1e-9, 5000);
+    assert!(res.converged);
+    let pc = ParallelCsr::new(&m, 3);
+    assert!(cg(&pc, &b, 1e-9, 5000).converged);
+}
+
+#[test]
+fn bicgstab_on_structured_nonsymmetric() {
+    // Diagonally dominant non-symmetric matrix from the generator.
+    let mut coo = Coo::<f64>::new(500, 500);
+    let base: Csr<f64> = gen::Structured {
+        nrows: 500,
+        ncols: 500,
+        nnz_per_row: 6.0,
+        run_len: 2.0,
+        row_corr: 0.3,
+        bandwidth: Some(30),
+        ..Default::default()
+    }
+    .generate(3);
+    for r in 0..500 {
+        for (c, v) in base.row_cols(r).iter().zip(base.row_vals(r)) {
+            if *c as usize != r {
+                coo.push(r, *c as usize, v * 0.1);
+            }
+        }
+        coo.push(r, r, 10.0); // dominance
+    }
+    let a = Csr::from_coo(coo);
+    let b = vec![1.0; 500];
+    let direct = bicgstab(&a, &b, 1e-10, 1000);
+    assert!(direct.converged);
+    let via_spc5 = bicgstab(&csr_to_spc5(&a, 2, 8), &b, 1e-10, 1000);
+    assert!(via_spc5.converged);
+    spc5::scalar::assert_allclose(&via_spc5.x, &direct.x, 1e-6, 1e-9);
+}
+
+#[test]
+fn power_iteration_across_formats_and_parallel() {
+    let m: Csr<f64> = gen::poisson2d(16);
+    let (l_csr, _, _) = power_iteration(&m, 1e-9, 20_000);
+    let (l_spc5, _, _) = power_iteration(&csr_to_spc5(&m, 8, 8), 1e-9, 20_000);
+    let p = ParallelSpc5::new(&m, 2, 4);
+    let (l_par, _, _) = power_iteration(&p, 1e-9, 20_000);
+    assert!((l_csr - l_spc5).abs() < 1e-5);
+    assert!((l_csr - l_par).abs() < 1e-5);
+}
+
+#[test]
+fn solvers_share_the_linop_abstraction() {
+    fn residual_norm<A: LinOp<f64>>(a: &A, x: &[f64], b: &[f64]) -> f64 {
+        let mut ax = vec![0.0; b.len()];
+        a.apply(x, &mut ax);
+        ax.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt()
+    }
+    let m: Csr<f64> = gen::poisson2d(12);
+    let b = vec![1.0; m.nrows];
+    let res = cg(&m, &b, 1e-10, 2000);
+    assert!(residual_norm(&m, &res.x, &b) < 1e-7);
+    let s = csr_to_spc5(&m, 4, 8);
+    assert!(residual_norm(&s, &res.x, &b) < 1e-7);
+}
+
+#[test]
+fn large_poisson_e2e_sanity() {
+    // The examples/poisson_cg.rs workload at test scale.
+    let grid = 48;
+    let m: Csr<f64> = gen::poisson2d(grid);
+    let s = csr_to_spc5(&m, 4, 8);
+    let b = vec![1.0; m.nrows];
+    let res = cg(&s, &b, 1e-8, 10 * m.nrows);
+    assert!(res.converged, "grid {grid} residual {:?}", res.residuals.last());
+    // Interior solution of -∇²u = 1 on the unit square must be positive.
+    assert!(res.x.iter().all(|&v| v > 0.0));
+}
