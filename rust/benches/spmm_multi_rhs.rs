@@ -1,0 +1,137 @@
+//! **Multi-RHS (SpMM) sweep**: per-RHS cost of the fused β(r,VS) kernels as
+//! a function of the number of fused right-hand sides `k`, on both simulated
+//! ISAs. Not a paper figure — this extends the paper's amortization argument
+//! (SpMV is matrix-traffic bound, §2/§4.3) to the SpMM workload served by
+//! the coordinator's batching and the block-CG solver.
+//!
+//! Two views per ISA:
+//! - modeled per-RHS cycles (`model_warm` cycles / k): must decrease
+//!   monotonically with k;
+//! - instruction-level amortization (`CountingSink::per_rhs`): bytes of the
+//!   matrix stream charged to one RHS shrink as 1/k while x/y bytes stay
+//!   constant.
+//!
+//! Run: `cargo bench --bench spmm_multi_rhs`
+
+use spc5::bench::{table::fmt1, TextTable};
+use spc5::kernels::{dispatch, KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad};
+use spc5::matrix::gen;
+use spc5::perfmodel::{self, Machine};
+use spc5::simd::CountingSink;
+use spc5::util::json::Json;
+
+const KS: [usize; 5] = [1, 2, 4, 8, 16];
+const R: usize = 4;
+
+fn cfg(isa: SimIsa) -> KernelCfg {
+    KernelCfg {
+        isa,
+        kind: KernelKind::Spc5 { r: R, x_load: XLoad::Single, reduction: Reduction::Manual },
+    }
+}
+
+fn rhs_set(ncols: usize, k: usize) -> Vec<Vec<f64>> {
+    (0..k)
+        .map(|v| (0..ncols).map(|i| 1.0 + ((i * (v + 1)) % 9) as f64 * 0.125).collect())
+        .collect()
+}
+
+fn sweep(isa: SimIsa, machine: &Machine, set: &mut MatrixSet<f64>, json: &mut Json) -> bool {
+    println!("--- {} (modeled, fused beta({R},VS), manual reduction) ---", isa.name());
+    let mut table = TextTable::new(&[
+        "k", "GFlop/s (SpMM)", "cycles/RHS", "matrix+x+y bytes/RHS", "speedup vs k=1",
+    ]);
+    let ncols = set.csr.ncols;
+    let mut per_rhs_cycles = Vec::new();
+    let mut per_rhs_ops = Vec::new();
+    let mut arr = Json::Arr(vec![]);
+    for k in KS {
+        let xs = rhs_set(ncols, k);
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let flops = dispatch::flops_of_multi(set, k);
+        let (report, _) = perfmodel::estimate::model_warm(machine, flops, |sink| {
+            dispatch::run_simulated_multi(cfg(isa), set, &x_refs, sink)
+        });
+        // Instruction-level view (machine-independent).
+        let mut counting = CountingSink::new();
+        let _ = dispatch::run_simulated_multi(cfg(isa), set, &x_refs, &mut counting);
+        let amortized = counting.per_rhs(k);
+
+        let cycles_per_rhs = report.cycles / k as f64;
+        per_rhs_cycles.push(cycles_per_rhs);
+        per_rhs_ops.push(amortized.ops);
+        let speedup = per_rhs_cycles[0] / cycles_per_rhs;
+        table.row(vec![
+            format!("{k}"),
+            fmt1(report.gflops()),
+            format!("{cycles_per_rhs:.0}"),
+            format!("{:.0}", amortized.load_bytes + amortized.store_bytes),
+            format!("x{speedup:.2}"),
+        ]);
+        let mut o = Json::obj();
+        o.set("k", k as f64)
+            .set("gflops", report.gflops())
+            .set("cycles_per_rhs", cycles_per_rhs)
+            .set("bytes_per_rhs", amortized.load_bytes + amortized.store_bytes)
+            .set("ops_per_rhs", amortized.ops);
+        arr.push(o);
+    }
+    println!("{}", table.render());
+
+    // Hard gates (machine-independent + endpoint): instructions charged to
+    // one RHS shrink strictly with every k step — guaranteed by construction
+    // since the matrix decode is a positive constant — and the modeled
+    // per-RHS cycles at k_max must beat k = 1.
+    let ops_monotone = per_rhs_ops.windows(2).all(|w| w[1] < w[0]);
+    let cycles_improve = per_rhs_cycles.last().unwrap() < per_rhs_cycles.first().unwrap();
+    // Informational: strict per-step cycle monotonicity can wobble with the
+    // modeled cache state at large k, so it is reported but not asserted.
+    let cycles_monotone = per_rhs_cycles.windows(2).all(|w| w[1] < w[0]);
+    println!(
+        "check: per-RHS instructions decrease with k -> {}",
+        if ops_monotone { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "check: per-RHS cycles k={} beat k=1 -> {}",
+        KS[KS.len() - 1],
+        if cycles_improve { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "check: per-RHS cycles strictly monotone -> {}",
+        if cycles_monotone { "OK" } else { "MISMATCH (informational)" }
+    );
+    println!();
+    json.set(isa.name(), arr);
+    ops_monotone && cycles_improve
+}
+
+fn main() {
+    println!("== SpMM multi-RHS sweep: fused matrix pass on both simulated ISAs ==\n");
+    // A structured FEM-like matrix, the regime the paper targets.
+    let csr = gen::Structured {
+        nrows: 3000,
+        ncols: 3000,
+        nnz_per_row: 30.0,
+        run_len: 5.0,
+        row_corr: 0.8,
+        ..Default::default()
+    }
+    .generate(17);
+    println!(
+        "matrix: {}x{}, {} nnz ({:.1} nnz/row)\n",
+        csr.nrows,
+        csr.ncols,
+        csr.nnz(),
+        csr.nnz_per_row()
+    );
+    let mut set = MatrixSet::new(csr);
+
+    let mut json = Json::obj();
+    let ok_avx = sweep(SimIsa::Avx512, &perfmodel::cascade_lake(), &mut set, &mut json);
+    let ok_sve = sweep(SimIsa::Sve, &perfmodel::a64fx(), &mut set, &mut json);
+
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/spmm_multi_rhs.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/spmm_multi_rhs.json");
+    assert!(ok_avx && ok_sve, "per-RHS cost must decrease with k on both ISAs");
+}

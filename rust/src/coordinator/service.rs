@@ -12,15 +12,30 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use crate::coordinator::batch::Batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::selector::{select_format, FormatChoice, Selection, SelectorModel};
-use crate::kernels::native;
+use crate::kernels::{native, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
+use crate::simd::trace::{NullSink, SimCtx};
 use crate::spc5::{csr_to_spc5, Spc5Matrix};
 use crate::util::timing::Timer;
 
 /// Handle to a registered matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct MatrixId(pub u64);
+
+/// Which kernel family executes requests.
+///
+/// `Native` is the production wall-clock path. `Simulated` runs the paper's
+/// ISA kernels through the vector simulator (numerics-exact, no host SIMD
+/// required) — used to serve validation traffic and to exercise the fused
+/// SpMM batch path on both target ISAs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Optimized host kernels (AVX-512 when available, portable otherwise).
+    Native,
+    /// The paper's simulated ISA kernels for the given target.
+    Simulated(SimIsa),
+}
 
 /// A registered matrix with its selected execution format.
 pub struct Stored<T: Scalar> {
@@ -30,17 +45,81 @@ pub struct Stored<T: Scalar> {
 }
 
 impl<T: Scalar> Stored<T> {
-    fn spmv(&self, x: &[T], y: &mut [T]) {
-        match (&self.spc5, self.selection.choice) {
-            (Some(m), FormatChoice::Spc5 { .. }) => {
-                crate::kernels::native_avx512::spmv_spc5_auto(m, x, y)
+    fn spmv(&self, backend: Backend, x: &[T], y: &mut [T]) {
+        match backend {
+            Backend::Native => match (&self.spc5, self.selection.choice) {
+                (Some(m), FormatChoice::Spc5 { .. }) => {
+                    crate::kernels::native_avx512::spmv_spc5_auto(m, x, y)
+                }
+                _ => native::spmv_csr(&self.csr, x, y),
+            },
+            Backend::Simulated(isa) => {
+                let mut sink = NullSink;
+                let mut ctx = SimCtx::new(T::VS, &mut sink);
+                match &self.spc5 {
+                    Some(m) => match isa {
+                        SimIsa::Avx512 => spc5_avx512::spmv_spc5_avx512(
+                            &mut ctx,
+                            m,
+                            x,
+                            y,
+                            Reduction::Manual,
+                        ),
+                        SimIsa::Sve => spc5_sve::spmv_spc5_sve(
+                            &mut ctx,
+                            m,
+                            x,
+                            y,
+                            XLoad::Single,
+                            Reduction::Manual,
+                        ),
+                    },
+                    None => crate::kernels::scalar::spmv_scalar_csr(&mut ctx, &self.csr, x, y),
+                }
             }
-            _ => native::spmv_csr(&self.csr, x, y),
+        }
+    }
+
+    /// Fused multi-RHS execution of one batch: one matrix pass for all
+    /// right-hand sides on every backend that has an SPC5 form. Falls back
+    /// to per-request SpMV otherwise (CSR-selected matrix on the native
+    /// backend).
+    fn spmv_batch(&self, backend: Backend, xs: &[&[T]], ys: &mut [Vec<T>]) {
+        match (backend, &self.spc5) {
+            (Backend::Native, Some(m)) => native::spmv_spc5_multi(m, xs, ys),
+            (Backend::Simulated(isa), Some(m)) => {
+                let mut refs: Vec<&mut [T]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                let mut sink = NullSink;
+                let mut ctx = SimCtx::new(T::VS, &mut sink);
+                match isa {
+                    SimIsa::Avx512 => spc5_avx512::spmv_spc5_avx512_multi(
+                        &mut ctx,
+                        m,
+                        xs,
+                        &mut refs,
+                        Reduction::Manual,
+                    ),
+                    SimIsa::Sve => spc5_sve::spmv_spc5_sve_multi(
+                        &mut ctx,
+                        m,
+                        xs,
+                        &mut refs,
+                        XLoad::Single,
+                        Reduction::Manual,
+                    ),
+                }
+            }
+            _ => {
+                for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                    self.spmv(backend, x, y);
+                }
+            }
         }
     }
 }
 
 struct Shared<T: Scalar> {
+    backend: Backend,
     matrices: RwLock<HashMap<MatrixId, Arc<Stored<T>>>>,
     queue: Mutex<Batcher<MatrixId, Request<T>>>,
     queue_cv: Condvar,
@@ -55,15 +134,26 @@ struct Request<T: Scalar> {
 }
 
 /// Service errors surfaced to callers.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServiceError {
-    #[error("unknown matrix id {0:?}")]
     UnknownMatrix(MatrixId),
-    #[error("dimension mismatch: x has {got}, matrix needs {want}")]
     DimMismatch { got: usize, want: usize },
-    #[error("service is shut down")]
     ShutDown,
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::UnknownMatrix(id) => write!(f, "unknown matrix id {id:?}"),
+            ServiceError::DimMismatch { got, want } => {
+                write!(f, "dimension mismatch: x has {got}, matrix needs {want}")
+            }
+            ServiceError::ShutDown => write!(f, "service is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// The coordinator service. Dropping it joins the dispatcher and workers.
 pub struct SpmvService<T: Scalar> {
@@ -74,9 +164,18 @@ pub struct SpmvService<T: Scalar> {
 
 impl<T: Scalar> SpmvService<T> {
     /// `workers`: number of executor threads; `max_batch`: batch coalescing
-    /// limit (requests of one matrix executed back-to-back).
+    /// limit (requests of one matrix executed back-to-back). Uses the
+    /// [`Backend::Native`] kernels.
     pub fn new(workers: usize, max_batch: usize) -> Self {
+        Self::with_backend(workers, max_batch, Backend::Native)
+    }
+
+    /// Like [`SpmvService::new`] with an explicit execution backend. The
+    /// simulated backends serve batches through the fused multi-RHS SpMM
+    /// kernels of the selected ISA.
+    pub fn with_backend(workers: usize, max_batch: usize, backend: Backend) -> Self {
         let shared = Arc::new(Shared {
+            backend,
             matrices: RwLock::new(HashMap::new()),
             queue: Mutex::new(Batcher::new(max_batch)),
             queue_cv: Condvar::new(),
@@ -93,12 +192,15 @@ impl<T: Scalar> SpmvService<T> {
         Self { shared, next_id: AtomicU64::new(1), dispatcher: Some(dispatcher) }
     }
 
-    /// Register a matrix; the selector picks and pre-builds its format.
+    /// Register a matrix; the selector picks and pre-builds its format. On
+    /// the simulated backends an SPC5 form is always built (β(1,VS) when the
+    /// selector keeps CSR) so batches can run the fused SpMM kernels.
     pub fn register(&self, csr: Csr<T>) -> MatrixId {
         let selection = select_format(&csr, &SelectorModel::default());
-        let spc5 = match selection.choice {
-            FormatChoice::Spc5 { r } => Some(csr_to_spc5(&csr, r, T::VS)),
-            FormatChoice::Csr => None,
+        let spc5 = match (self.shared.backend, selection.choice) {
+            (_, FormatChoice::Spc5 { r }) => Some(csr_to_spc5(&csr, r, T::VS)),
+            (Backend::Simulated(_), FormatChoice::Csr) => Some(csr_to_spc5(&csr, 1, T::VS)),
+            (Backend::Native, FormatChoice::Csr) => None,
         };
         let id = MatrixId(self.next_id.fetch_add(1, Ordering::SeqCst));
         self.shared
@@ -204,34 +306,34 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
             Some(stored) => {
                 let shared = Arc::clone(&shared);
                 pool.submit(move || {
+                    let backend = shared.backend;
                     let flops = 2 * stored.csr.nnz() as u64;
-                    match (&stored.spc5, batch.items.len()) {
+                    let n = batch.items.len();
+                    if n > 1 {
                         // Fused multi-vector pass: the matrix stream is read
-                        // once for the whole batch (kernels::native::
-                        // spmv_spc5_multi) — the batching win of §Perf.
-                        (Some(m), n) if n > 1 => {
-                            let xs: Vec<&[T]> =
-                                batch.items.iter().map(|r| r.x.as_slice()).collect();
-                            let mut ys: Vec<Vec<T>> =
-                                (0..n).map(|_| vec![T::zero(); stored.csr.nrows]).collect();
-                            native::spmv_spc5_multi(m, &xs, &mut ys);
-                            for (req, y) in batch.items.into_iter().zip(ys) {
-                                shared
-                                    .metrics
-                                    .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
-                                let _ = req.reply.send(Ok(y));
-                            }
+                        // once for the whole batch (Stored::spmv_batch) on
+                        // the native *and* simulated backends — the batching
+                        // win of §Perf.
+                        let xs: Vec<&[T]> =
+                            batch.items.iter().map(|r| r.x.as_slice()).collect();
+                        let mut ys: Vec<Vec<T>> =
+                            (0..n).map(|_| vec![T::zero(); stored.csr.nrows]).collect();
+                        stored.spmv_batch(backend, &xs, &mut ys);
+                        for (req, y) in batch.items.into_iter().zip(ys) {
+                            shared
+                                .metrics
+                                .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
+                            let _ = req.reply.send(Ok(y));
                         }
-                        // Single request (or CSR-selected matrix): plain path.
-                        _ => {
-                            for req in batch.items {
-                                let mut y = vec![T::zero(); stored.csr.nrows];
-                                stored.spmv(&req.x, &mut y);
-                                shared
-                                    .metrics
-                                    .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
-                                let _ = req.reply.send(Ok(y));
-                            }
+                    } else {
+                        // Single request: plain path.
+                        for req in batch.items {
+                            let mut y = vec![T::zero(); stored.csr.nrows];
+                            stored.spmv(backend, &req.x, &mut y);
+                            shared
+                                .metrics
+                                .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
+                            let _ = req.reply.send(Ok(y));
                         }
                     }
                 });
@@ -326,6 +428,50 @@ mod tests {
         assert_eq!(y1.len(), 50);
         assert_eq!(y2.len(), 70);
         crate::scalar::assert_allclose(&y3, &y1, 0.0, 0.0);
+    }
+
+    #[test]
+    fn simulated_backends_serve_batches() {
+        for isa in [SimIsa::Avx512, SimIsa::Sve] {
+            let svc: SpmvService<f64> =
+                SpmvService::with_backend(2, 8, Backend::Simulated(isa));
+            let m: Csr<f64> = gen::Structured {
+                nrows: 96,
+                ncols: 96,
+                nnz_per_row: 8.0,
+                run_len: 3.0,
+                row_corr: 0.6,
+                ..Default::default()
+            }
+            .generate(13);
+            let id = svc.register(m.clone());
+            // A burst of same-matrix requests coalesces into fused batches.
+            let xs: Vec<Vec<f64>> = (0..12)
+                .map(|k| (0..96).map(|i| ((i * (k + 1)) % 9) as f64 * 0.5).collect())
+                .collect();
+            let rxs: Vec<_> = xs.iter().map(|x| svc.submit(id, x.clone())).collect();
+            for (x, rx) in xs.iter().zip(rxs) {
+                let y = rx.recv().unwrap().unwrap();
+                let mut want = vec![0.0; 96];
+                m.spmv(x, &mut want);
+                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn simulated_backend_serves_scattered_matrix() {
+        // A matrix the selector keeps in CSR still gets a β(1,VS) form on
+        // the simulated backend, so batches stay fused.
+        let svc: SpmvService<f64> =
+            SpmvService::with_backend(1, 4, Backend::Simulated(SimIsa::Sve));
+        let m: Csr<f64> = gen::random_uniform(80, 1.2, 3);
+        let id = svc.register(m.clone());
+        let x: Vec<f64> = (0..80).map(|i| (i % 5) as f64).collect();
+        let mut want = vec![0.0; 80];
+        m.spmv(&x, &mut want);
+        let got = svc.spmv(id, x).unwrap();
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
     }
 
     #[test]

@@ -1,5 +1,29 @@
 //! Kernel configuration surface shared by the bench harness, the CLI and the
 //! coordinator's format selector.
+//!
+//! [`run_simulated`] executes one fully-specified kernel ([`KernelCfg`]) on
+//! one right-hand side; [`run_simulated_multi`] fuses `k` right-hand sides
+//! into a single matrix pass (SpMM). Both report instruction and memory
+//! traffic to a [`CostSink`], so the same call that computes the numbers
+//! also produces the trace the performance model prices.
+//!
+//! ```
+//! use spc5::kernels::{dispatch, KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad};
+//! use spc5::matrix::gen;
+//! use spc5::simd::CountingSink;
+//!
+//! let csr = gen::random_uniform::<f64>(32, 4.0, 7);
+//! let x = vec![1.0; 32];
+//! let mut set = MatrixSet::new(csr);
+//! let cfg = KernelCfg {
+//!     isa: SimIsa::Avx512,
+//!     kind: KernelKind::Spc5 { r: 4, x_load: XLoad::Single, reduction: Reduction::Manual },
+//! };
+//! let mut sink = CountingSink::new();
+//! let y = dispatch::run_simulated(cfg, &mut set, &x, &mut sink);
+//! assert_eq!(y.len(), 32);
+//! assert!(sink.total_ops() > 0);
+//! ```
 
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
@@ -146,9 +170,75 @@ pub fn run_simulated<T: Scalar>(
     y
 }
 
+/// Run one simulated kernel over `k` right-hand sides, returning the `k`
+/// result vectors. For [`KernelKind::Spc5`] the fused SpMM kernels are used:
+/// one matrix-stream decode per block serves every right-hand side
+/// ([`super::spc5_avx512::spmv_spc5_avx512_multi`],
+/// [`super::spc5_sve::spmv_spc5_sve_multi`]), so the traffic charged to
+/// `sink` amortizes with `k`. The baseline kinds (scalar, vectorized CSR,
+/// hybrid) have no fused variant and fall back to one pass per RHS — which
+/// is exactly the comparison the SpMM bench draws.
+///
+/// ```
+/// use spc5::kernels::{dispatch, KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad};
+/// use spc5::matrix::gen;
+/// use spc5::simd::CountingSink;
+///
+/// let csr = gen::random_uniform::<f64>(24, 3.0, 1);
+/// let xs: Vec<Vec<f64>> = (0..4).map(|v| vec![1.0 + v as f64; 24]).collect();
+/// let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+/// let mut set = MatrixSet::new(csr);
+/// let cfg = KernelCfg {
+///     isa: SimIsa::Sve,
+///     kind: KernelKind::Spc5 { r: 2, x_load: XLoad::Single, reduction: Reduction::Manual },
+/// };
+/// let mut fused = CountingSink::new();
+/// let ys = dispatch::run_simulated_multi(cfg, &mut set, &x_refs, &mut fused);
+/// assert_eq!(ys.len(), 4);
+/// // Fusing 4 right-hand sides costs less per RHS than a single-vector run.
+/// let mut single = CountingSink::new();
+/// let _ = dispatch::run_simulated(cfg, &mut set, &x_refs[0], &mut single);
+/// assert!(fused.per_rhs(4).load_bytes < single.per_rhs(1).load_bytes);
+/// ```
+pub fn run_simulated_multi<T: Scalar>(
+    cfg: KernelCfg,
+    set: &mut MatrixSet<T>,
+    xs: &[&[T]],
+    sink: &mut dyn CostSink,
+) -> Vec<Vec<T>> {
+    let mut ys: Vec<Vec<T>> = (0..xs.len()).map(|_| vec![T::zero(); set.csr.nrows]).collect();
+    match cfg.kind {
+        KernelKind::Spc5 { r, x_load, reduction } => {
+            let m = set.spc5(r).clone();
+            let mut y_refs: Vec<&mut [T]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            let mut ctx = SimCtx::new(T::VS, sink);
+            match cfg.isa {
+                SimIsa::Avx512 => super::spc5_avx512::spmv_spc5_avx512_multi(
+                    &mut ctx, &m, xs, &mut y_refs, reduction,
+                ),
+                SimIsa::Sve => super::spc5_sve::spmv_spc5_sve_multi(
+                    &mut ctx, &m, xs, &mut y_refs, x_load, reduction,
+                ),
+            }
+        }
+        _ => {
+            // No fused variant: one full pass per right-hand side.
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                *y = run_simulated(cfg, set, x, sink);
+            }
+        }
+    }
+    ys
+}
+
 /// Floating point operations of one SpMV (the paper counts 2 per nnz).
 pub fn flops_of<T: Scalar>(set: &MatrixSet<T>) -> u64 {
     2 * set.csr.nnz() as u64
+}
+
+/// Floating point operations of one fused `k`-RHS SpMM pass.
+pub fn flops_of_multi<T: Scalar>(set: &MatrixSet<T>, k: usize) -> u64 {
+    flops_of(set) * k as u64
 }
 
 #[cfg(test)]
@@ -188,6 +278,43 @@ mod tests {
                 crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn multi_dispatch_agrees_with_singles() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 40,
+            ncols: 56,
+            nnz_per_row: 5.0,
+            run_len: 2.0,
+            row_corr: 0.5,
+            ..Default::default()
+        }
+        .generate(8);
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|v| (0..56).map(|i| ((i * (v + 1)) % 6) as f64 * 0.4 - 0.9).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut set = MatrixSet::new(csr);
+        let kinds = [
+            KernelKind::ScalarCsr,
+            KernelKind::Spc5 { r: 4, x_load: XLoad::Single, reduction: Reduction::Manual },
+            KernelKind::Spc5 { r: 2, x_load: XLoad::Partial, reduction: Reduction::Native },
+        ];
+        for isa in [SimIsa::Avx512, SimIsa::Sve] {
+            for kind in kinds {
+                let cfg = KernelCfg { isa, kind };
+                let mut sink = CountingSink::new();
+                let ys = run_simulated_multi(cfg, &mut set, &x_refs, &mut sink);
+                assert_eq!(ys.len(), 3);
+                for (x, y) in x_refs.iter().zip(&ys) {
+                    let mut s = CountingSink::new();
+                    let want = run_simulated(cfg, &mut set, x, &mut s);
+                    crate::scalar::assert_allclose(y, &want, 1e-12, 1e-13);
+                }
+            }
+        }
+        assert_eq!(flops_of_multi(&set, 3), 3 * flops_of(&set));
     }
 
     #[test]

@@ -45,6 +45,38 @@ pub fn spmv_csr<T: Scalar>(m: &Csr<T>, x: &[T], y: &mut [T]) {
     }
 }
 
+/// Multi-vector native CSR SpMV over output slices: `Y[v] = A·X[v]` in one
+/// matrix pass. One value + column-index load per non-zero serves all `K`
+/// right-hand sides, the same amortization [`spmv_spc5_multi_slices`] gives
+/// the SPC5 format.
+pub fn spmv_csr_multi_slices<T: Scalar>(m: &Csr<T>, xs: &[&[T]], ys: &mut [&mut [T]]) {
+    assert_eq!(xs.len(), ys.len());
+    let k = xs.len();
+    if k == 0 {
+        return;
+    }
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        assert_eq!(x.len(), m.ncols);
+        assert_eq!(y.len(), m.nrows);
+    }
+    let mut sums = vec![T::zero(); k];
+    for r in 0..m.nrows {
+        let lo = m.row_ptr[r] as usize;
+        let hi = m.row_ptr[r + 1] as usize;
+        sums.fill(T::zero());
+        for i in lo..hi {
+            let c = m.col_idx[i] as usize;
+            let v = m.vals[i];
+            for (vi, x) in xs.iter().enumerate() {
+                sums[vi] = v.mul_add(x[c], sums[vi]);
+            }
+        }
+        for (vi, y) in ys.iter_mut().enumerate() {
+            y[r] = sums[vi];
+        }
+    }
+}
+
 /// Native SPC5 SpMV (`y = A·x`), any `r`/`width`. Walks mask bits with
 /// `trailing_zeros`, so the per-block cost is proportional to the block's
 /// non-zero count plus a small constant — the format's design goal.
@@ -97,10 +129,20 @@ pub fn spmv_spc5<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
 }
 
 /// Multi-vector SPC5 SpMV: `Y[v] = A·X[v]` for `K` right-hand sides in one
-/// matrix pass. The matrix stream (values, column indices, masks) is read
-/// once and reused across all K vectors — the coordinator's batching win,
-/// since SpMV is matrix-traffic bound (§Perf iteration 3).
+/// matrix pass. Convenience wrapper over [`spmv_spc5_multi_slices`] for
+/// callers that own whole `Vec` outputs (the coordinator's batch path).
 pub fn spmv_spc5_multi<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mut [Vec<T>]) {
+    let mut refs: Vec<&mut [T]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+    spmv_spc5_multi_slices(m, xs, &mut refs);
+}
+
+/// Multi-vector SPC5 SpMV over output *slices*: `Y[v] = A·X[v]` for `K`
+/// right-hand sides in one matrix pass. The matrix stream (values, column
+/// indices, masks) is read once and reused across all K vectors — the
+/// coordinator's batching win, since SpMV is matrix-traffic bound (§Perf
+/// iteration 3). Slice outputs let the parallel runtime hand each thread the
+/// disjoint row ranges of every right-hand side.
+pub fn spmv_spc5_multi_slices<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mut [&mut [T]]) {
     assert_eq!(xs.len(), ys.len());
     let k = xs.len();
     if k == 0 {
@@ -298,6 +340,35 @@ mod tests {
         // Zero vectors: no-op without panics.
         let mut none: Vec<Vec<f64>> = vec![];
         spmv_spc5_multi(&m, &[], &mut none);
+    }
+
+    #[test]
+    fn csr_multi_matches_singles() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 55,
+            ncols: 66,
+            nnz_per_row: 5.0,
+            run_len: 2.0,
+            row_corr: 0.3,
+            ..Default::default()
+        }
+        .generate(4);
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|v| (0..66).map(|i| ((i + 3 * v) % 9) as f64 * 0.25 - 1.0).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 55]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+        spmv_csr_multi_slices(&csr, &x_refs, &mut y_refs);
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 55];
+            csr.spmv(x, &mut want);
+            // Different accumulation order than the unrolled single kernel:
+            // tolerance, not bitwise.
+            crate::scalar::assert_allclose(y, &want, 1e-12, 1e-13);
+        }
+        // Zero vectors: no-op.
+        spmv_csr_multi_slices::<f64>(&csr, &[], &mut []);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use crate::scalar::Scalar;
 use crate::simd::avx512 as v;
 use crate::simd::trace::{Op, SimCtx};
-use crate::simd::vreg::{vslice, vslice_u32, AddressSpace, VReg, VSliceMut};
+use crate::simd::vreg::{vslice, vslice_u32, AddressSpace, VReg, VSlice, VSliceMut};
 use crate::spc5::Spc5Matrix;
 
 use super::dispatch::Reduction;
@@ -18,6 +18,11 @@ use super::dispatch::Reduction;
 ///
 /// Panics if `m.width != ctx.vs` (the SIMD kernels only exist for blocks of
 /// exactly one vector length; other widths are ablation-only).
+///
+/// Implemented as the `k = 1` case of [`spmv_spc5_avx512_multi`]: the fused
+/// kernel's per-RHS instruction sequence is op-for-op the single kernel, so
+/// delegating makes the "multi equals k singles" invariant true by
+/// construction.
 pub fn spmv_spc5_avx512<T: Scalar>(
     ctx: &mut SimCtx,
     m: &Spc5Matrix<T>,
@@ -25,33 +30,65 @@ pub fn spmv_spc5_avx512<T: Scalar>(
     y: &mut [T],
     reduction: Reduction,
 ) {
+    spmv_spc5_avx512_multi(ctx, m, &[x], &mut [y], reduction);
+}
+
+/// Fused multi-RHS SPC5 SpMM on simulated AVX-512: `ys[v] = A·xs[v]` for all
+/// `k` right-hand sides in one matrix pass.
+///
+/// The matrix stream is decoded **once per block-row** — one mask load and
+/// one `vexpand` of the packed values — and the expanded value vector is
+/// reused by `k` FMAs, one per right-hand side (each with its own x-window
+/// load and accumulator set). Matrix traffic (values, column indices, masks)
+/// is therefore independent of `k`, while x/y traffic and FMA count scale
+/// linearly: the per-RHS cost strictly decreases with `k`, which is the SpMM
+/// amortization the coordinator's batching exploits.
+///
+/// Per-RHS numerics are identical to [`spmv_spc5_avx512`] (same FMA order),
+/// so `k` fused solves equal `k` independent ones bit-for-bit.
+pub fn spmv_spc5_avx512_multi<T: Scalar>(
+    ctx: &mut SimCtx,
+    m: &Spc5Matrix<T>,
+    xs: &[&[T]],
+    ys: &mut [&mut [T]],
+    reduction: Reduction,
+) {
     assert_eq!(m.width, ctx.vs, "SIMD kernel requires width == VS");
-    assert_eq!(x.len(), m.ncols);
-    assert_eq!(y.len(), m.nrows);
+    assert_eq!(xs.len(), ys.len());
+    let k = xs.len();
+    if k == 0 {
+        return;
+    }
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        assert_eq!(x.len(), m.ncols);
+        assert_eq!(y.len(), m.nrows);
+    }
     let vs = ctx.vs;
     let mut space = AddressSpace::new();
     let vals = vslice(&mut space, &m.vals);
     let cols = vslice_u32(&mut space, &m.block_colidx);
     let masks_base = space.alloc(m.masks.len() * m.mask_bytes());
-    let xs = vslice(&mut space, x);
-    let ybase = space.alloc(y.len() * T::BYTES);
+    let x_slices: Vec<VSlice<T>> = xs.iter().map(|x| vslice(&mut space, x)).collect();
+    let y_bases: Vec<u64> = ys.iter().map(|y| space.alloc(y.len() * T::BYTES)).collect();
 
     let mut idx_val = 0usize;
     for p in 0..m.npanels() {
         let row0 = p * m.r;
         let rows_here = m.r.min(m.nrows - row0);
-        let mut sums: Vec<VReg<T>> = (0..m.r).map(|_| VReg::zero(vs)).collect();
+        // Accumulators: [rhs][row-of-panel].
+        let mut sums: Vec<Vec<VReg<T>>> =
+            (0..k).map(|_| (0..m.r).map(|_| VReg::zero(vs)).collect()).collect();
 
         for b in m.panel_blocks(p) {
-            // Block column index (scalar load, kept hot in L1).
             ctx.op(Op::SLoad);
             ctx.mem(cols.addr(b), 4, false);
             let col = m.block_colidx[b] as usize;
 
-            // One full x-window load per block, reused across the r rows.
-            let x_vec = v::loadu(ctx, &xs, col);
+            // One x-window load per block *per RHS* (x vectors differ).
+            let x_vecs: Vec<VReg<T>> =
+                x_slices.iter().map(|xsl| v::loadu(ctx, xsl, col)).collect();
 
-            for (j, sum) in sums.iter_mut().enumerate().take(m.r) {
+            for j in 0..m.r {
                 ctx.op(Op::SLoad);
                 ctx.mem(
                     masks_base + ((b * m.r + j) * m.mask_bytes()) as u64,
@@ -59,10 +96,11 @@ pub fn spmv_spc5_avx512<T: Scalar>(
                     false,
                 );
                 let mask = m.masks[b * m.r + j] as u64;
-                // vexpand: scatter the packed values to the mask lanes.
+                // One expand-load serves all k right-hand sides.
                 let vblock = v::maskz_expandloadu(ctx, mask, &vals, idx_val);
-                *sum = v::fmadd(ctx, &vblock, &x_vec, sum);
-                // idxVal += popcount(mask)  (Algorithm 1 line 21)
+                for (vi, x_vec) in x_vecs.iter().enumerate() {
+                    sums[vi][j] = v::fmadd(ctx, &vblock, x_vec, &sums[vi][j]);
+                }
                 ctx.op(Op::Popcnt);
                 ctx.op(Op::SInt);
                 idx_val += mask.count_ones() as usize;
@@ -70,31 +108,37 @@ pub fn spmv_spc5_avx512<T: Scalar>(
             ctx.op(Op::SInt); // block-loop bookkeeping
         }
 
-        // y update (§3.2).
-        match reduction {
-            Reduction::Native => {
-                for (j, sum) in sums.iter().enumerate().take(rows_here) {
-                    let s = v::reduce_add(ctx, sum);
-                    ctx.op(Op::SLoad);
-                    ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, false);
-                    ctx.op(Op::SFma);
-                    ctx.op(Op::SStore);
-                    ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, true);
-                    y[row0 + j] += s;
+        // Per-RHS y update (§3.2), same strategies as the single kernel.
+        for (vi, y) in ys.iter_mut().enumerate() {
+            let ybase = y_bases[vi];
+            match reduction {
+                Reduction::Native => {
+                    for (j, sum) in sums[vi].iter().enumerate().take(rows_here) {
+                        let s = v::reduce_add(ctx, sum);
+                        ctx.op(Op::SLoad);
+                        ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, false);
+                        ctx.op(Op::SFma);
+                        ctx.op(Op::SStore);
+                        ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, true);
+                        y[row0 + j] += s;
+                    }
                 }
-            }
-            Reduction::Manual => {
-                let red = v::multi_reduce(ctx, &sums);
-                // y[row0..row0+rows_here] += red (vector load/add/store).
-                ctx.op(Op::VLoad);
-                ctx.mem(ybase + (row0 * T::BYTES) as u64, (rows_here * T::BYTES) as u32, false);
-                let mut yv = VReg::<T>::zero(vs);
-                for j in 0..rows_here {
-                    yv.lanes[j] = y[row0 + j];
+                Reduction::Manual => {
+                    let red = v::multi_reduce(ctx, &sums[vi]);
+                    ctx.op(Op::VLoad);
+                    ctx.mem(
+                        ybase + (row0 * T::BYTES) as u64,
+                        (rows_here * T::BYTES) as u32,
+                        false,
+                    );
+                    let mut yv = VReg::<T>::zero(vs);
+                    for j in 0..rows_here {
+                        yv.lanes[j] = y[row0 + j];
+                    }
+                    let yv = v::add(ctx, &red, &yv);
+                    let mut ydst = VSliceMut::new(y, ybase, T::BYTES as u32);
+                    v::mask_store_prefix(ctx, &mut ydst, row0, &yv, rows_here);
                 }
-                let yv = v::add(ctx, &red, &yv);
-                let mut ydst = VSliceMut::new(y, ybase, T::BYTES as u32);
-                v::mask_store_prefix(ctx, &mut ydst, row0, &yv, rows_here);
             }
         }
     }
@@ -225,6 +269,77 @@ mod tests {
             crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
             assert_eq!(sink.count(Op::VExpandLoad), (m.nblocks() * m.r) as u64);
         });
+    }
+
+    fn run_multi(
+        m: &Spc5Matrix<f64>,
+        xs: &[Vec<f64>],
+        red: Reduction,
+    ) -> (Vec<Vec<f64>>, CountingSink) {
+        let mut sink = CountingSink::new();
+        let mut ys: Vec<Vec<f64>> = (0..xs.len()).map(|_| vec![0.0; m.nrows]).collect();
+        {
+            let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+            let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            let mut ctx = SimCtx::new(8, &mut sink);
+            spmv_spc5_avx512_multi(&mut ctx, m, &x_refs, &mut y_refs, red);
+        }
+        (ys, sink)
+    }
+
+    #[test]
+    fn multi_equals_k_singles_bitwise() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 70,
+            ncols: 90,
+            nnz_per_row: 7.0,
+            run_len: 3.0,
+            row_corr: 0.6,
+            ..Default::default()
+        }
+        .generate(11);
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|v| (0..90).map(|i| ((i * (v + 2)) % 11) as f64 * 0.3 - 1.0).collect())
+            .collect();
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&csr, r, 8);
+            for red in [Reduction::Native, Reduction::Manual] {
+                let (ys, _) = run_multi(&m, &xs, red);
+                for (x, y) in xs.iter().zip(&ys) {
+                    let (want, _) = run(&m, x, red);
+                    // Same FMA order per RHS -> bit-identical, not just close.
+                    assert_eq!(y, &want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_amortizes_matrix_stream() {
+        let csr: Csr<f64> = gen::random_uniform(64, 6.0, 3);
+        let m = csr_to_spc5(&csr, 4, 8);
+        let k = 4usize;
+        let xs: Vec<Vec<f64>> = (0..k).map(|_| vec![1.0; csr.ncols]).collect();
+        let (_, sink) = run_multi(&m, &xs, Reduction::Native);
+        // Matrix decode happens once: expands/popcounts do not scale with k...
+        assert_eq!(sink.count(Op::VExpandLoad), (m.nblocks() * m.r) as u64);
+        // ...while x loads and FMAs are per-RHS.
+        assert_eq!(sink.count(Op::VLoad), (m.nblocks() * k) as u64);
+        assert_eq!(sink.count(Op::VFma), (m.nblocks() * m.r * k) as u64);
+        // Per-RHS amortized traffic strictly below the single-vector run.
+        let (_, single) = run_multi(&m, &xs[..1], Reduction::Native);
+        assert!(sink.per_rhs(k).load_bytes < single.per_rhs(1).load_bytes);
+        assert!(sink.per_rhs(k).ops < single.per_rhs(1).ops);
+    }
+
+    #[test]
+    fn multi_with_zero_rhs_is_noop() {
+        let csr: Csr<f64> = gen::random_uniform(10, 3.0, 1);
+        let m = csr_to_spc5(&csr, 2, 8);
+        let mut sink = CountingSink::new();
+        let mut ctx = SimCtx::new(8, &mut sink);
+        spmv_spc5_avx512_multi::<f64>(&mut ctx, &m, &[], &mut [], Reduction::Manual);
+        assert_eq!(sink.total_ops(), 0);
     }
 
     #[test]

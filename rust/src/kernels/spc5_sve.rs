@@ -23,12 +23,18 @@
 use crate::scalar::Scalar;
 use crate::simd::sve as v;
 use crate::simd::trace::{Op, SimCtx};
-use crate::simd::vreg::{vslice, vslice_u32, AddressSpace, Pred, VReg, VSliceMut};
+use crate::simd::vreg::{vslice, vslice_u32, AddressSpace, Pred, VReg, VSlice, VSliceMut};
 use crate::spc5::Spc5Matrix;
 
 use super::dispatch::{Reduction, XLoad};
 
 /// SPC5 β(r,VS) SpMV on simulated SVE: `y = A·x`.
+///
+/// Implemented as the `k = 1` case of [`spmv_spc5_sve_multi`]: the fused
+/// kernel's per-RHS instruction counts and numerics are identical to the
+/// single kernel (only the emission order of the memory-less `svcompact`
+/// relative to the packed-value load differs), so delegating makes the
+/// "multi equals k singles" invariant true by construction.
 pub fn spmv_spc5_sve<T: Scalar>(
     ctx: &mut SimCtx,
     m: &Spc5Matrix<T>,
@@ -37,18 +43,46 @@ pub fn spmv_spc5_sve<T: Scalar>(
     x_load: XLoad,
     reduction: Reduction,
 ) {
+    spmv_spc5_sve_multi(ctx, m, &[x], &mut [y], x_load, reduction);
+}
+
+/// Fused multi-RHS SPC5 SpMM on simulated SVE: `ys[v] = A·xs[v]` for all `k`
+/// right-hand sides in one matrix pass.
+///
+/// The per-block-row mask-decode pipeline (`svdup` → `svand` → `svcmpne` →
+/// `svcntp`) and the contiguous packed-value load run **once** per block-row
+/// and are reused by all `k` right-hand sides; only the x-side work (load,
+/// `svcompact`, `svmla`) and the y updates scale with `k`. As on AVX-512,
+/// matrix traffic is independent of `k`, so the per-RHS cost strictly
+/// decreases as more right-hand sides are fused.
+///
+/// Per-RHS numerics are identical to [`spmv_spc5_sve`].
+pub fn spmv_spc5_sve_multi<T: Scalar>(
+    ctx: &mut SimCtx,
+    m: &Spc5Matrix<T>,
+    xs: &[&[T]],
+    ys: &mut [&mut [T]],
+    x_load: XLoad,
+    reduction: Reduction,
+) {
     assert_eq!(m.width, ctx.vs, "SIMD kernel requires width == VS");
-    assert_eq!(x.len(), m.ncols);
-    assert_eq!(y.len(), m.nrows);
+    assert_eq!(xs.len(), ys.len());
+    let k = xs.len();
+    if k == 0 {
+        return;
+    }
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        assert_eq!(x.len(), m.ncols);
+        assert_eq!(y.len(), m.nrows);
+    }
     let vs = ctx.vs;
     let mut space = AddressSpace::new();
     let vals = vslice(&mut space, &m.vals);
     let cols = vslice_u32(&mut space, &m.block_colidx);
     let masks_base = space.alloc(m.masks.len() * m.mask_bytes());
-    let xs = vslice(&mut space, x);
-    let ybase = space.alloc(y.len() * T::BYTES);
+    let x_slices: Vec<VSlice<T>> = xs.iter().map(|x| vslice(&mut space, x)).collect();
+    let y_bases: Vec<u64> = ys.iter().map(|y| space.alloc(y.len() * T::BYTES)).collect();
 
-    // filter <- [1<<0, ..., 1<<VS-1]  (Algorithm 1 line 4, hoisted).
     let filter = v::filter_vector(ctx);
     let all = Pred::all(vs);
 
@@ -56,20 +90,24 @@ pub fn spmv_spc5_sve<T: Scalar>(
     for p in 0..m.npanels() {
         let row0 = p * m.r;
         let rows_here = m.r.min(m.nrows - row0);
-        let mut sums: Vec<VReg<T>> = (0..m.r).map(|_| VReg::zero(vs)).collect();
+        // Accumulators: [rhs][row-of-panel].
+        let mut sums: Vec<Vec<VReg<T>>> =
+            (0..k).map(|_| (0..m.r).map(|_| VReg::zero(vs)).collect()).collect();
 
         for b in m.panel_blocks(p) {
             ctx.op(Op::SLoad);
             ctx.mem(cols.addr(b), 4, false);
             let col = m.block_colidx[b] as usize;
 
-            // Single-x-load strategy: one full load per block (§3.1).
-            let x_full = match x_load {
-                XLoad::Single => Some(v::svld1(ctx, &all, &xs, col)),
+            // Single-x-load strategy: one full load per block per RHS (§3.1).
+            let x_fulls: Option<Vec<VReg<T>>> = match x_load {
+                XLoad::Single => {
+                    Some(x_slices.iter().map(|xsl| v::svld1(ctx, &all, xsl, col)).collect())
+                }
                 XLoad::Partial => None,
             };
 
-            for (j, sum) in sums.iter_mut().enumerate().take(m.r) {
+            for j in 0..m.r {
                 ctx.op(Op::SLoad);
                 ctx.mem(
                     masks_base + ((b * m.r + j) * m.mask_bytes()) as u64,
@@ -78,58 +116,65 @@ pub fn spmv_spc5_sve<T: Scalar>(
                 );
                 let mask = m.masks[b * m.r + j] as u64;
 
-                // mask_vec = svand(svdup(mask), filter); active = cmpne 0.
+                // Mask decode once per block-row, shared by all k RHS.
                 let dup = v::svdup_u64(ctx, mask);
                 let masked = v::svand(ctx, &dup, &filter);
                 let active = v::svcmpne0(ctx, &masked);
                 let increment = v::svcntp(ctx, &active);
 
-                // xvals: compact the active x lanes to the front.
-                let xvals = match &x_full {
-                    Some(full) => v::svcompact(ctx, &active, full),
-                    None => {
-                        let part = v::svld1(ctx, &active, &xs, col);
-                        v::svcompact(ctx, &active, &part)
-                    }
-                };
-
-                // block = contiguous load of `increment` packed values.
+                // One contiguous packed-value load for all k RHS.
                 let wl = v::svwhilelt(ctx, increment);
                 let block = v::svld1(ctx, &wl, &vals, idx_val);
 
-                *sum = v::svmla(ctx, sum, &block, &xvals);
+                for vi in 0..k {
+                    let xvals = match &x_fulls {
+                        Some(fulls) => v::svcompact(ctx, &active, &fulls[vi]),
+                        None => {
+                            let part = v::svld1(ctx, &active, &x_slices[vi], col);
+                            v::svcompact(ctx, &active, &part)
+                        }
+                    };
+                    sums[vi][j] = v::svmla(ctx, &sums[vi][j], &block, &xvals);
+                }
                 ctx.op(Op::SInt); // idxVal += increment
                 idx_val += increment;
             }
             ctx.op(Op::SInt); // block loop
         }
 
-        // y update (§3.2).
-        match reduction {
-            Reduction::Native => {
-                for (j, sum) in sums.iter().enumerate().take(rows_here) {
-                    let s = v::svaddv(ctx, sum);
-                    ctx.op(Op::SLoad);
-                    ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, false);
-                    ctx.op(Op::SFma);
-                    ctx.op(Op::SStore);
-                    ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, true);
-                    y[row0 + j] += s;
+        // Per-RHS y update (§3.2).
+        for (vi, y) in ys.iter_mut().enumerate() {
+            let ybase = y_bases[vi];
+            match reduction {
+                Reduction::Native => {
+                    for (j, sum) in sums[vi].iter().enumerate().take(rows_here) {
+                        let s = v::svaddv(ctx, sum);
+                        ctx.op(Op::SLoad);
+                        ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, false);
+                        ctx.op(Op::SFma);
+                        ctx.op(Op::SStore);
+                        ctx.mem(ybase + ((row0 + j) * T::BYTES) as u64, T::BYTES as u32, true);
+                        y[row0 + j] += s;
+                    }
                 }
-            }
-            Reduction::Manual => {
-                let red = v::sve_multi_reduce(ctx, &sums);
-                let wl = v::svwhilelt(ctx, rows_here);
-                let mut yv = VReg::<T>::zero(vs);
-                ctx.op(Op::SvLoad);
-                ctx.mem(ybase + (row0 * T::BYTES) as u64, (rows_here * T::BYTES) as u32, false);
-                for j in 0..rows_here {
-                    yv.lanes[j] = y[row0 + j];
+                Reduction::Manual => {
+                    let red = v::sve_multi_reduce(ctx, &sums[vi]);
+                    let wl = v::svwhilelt(ctx, rows_here);
+                    let mut yv = VReg::<T>::zero(vs);
+                    ctx.op(Op::SvLoad);
+                    ctx.mem(
+                        ybase + (row0 * T::BYTES) as u64,
+                        (rows_here * T::BYTES) as u32,
+                        false,
+                    );
+                    for j in 0..rows_here {
+                        yv.lanes[j] = y[row0 + j];
+                    }
+                    let yv = v::svadd(ctx, &red, &yv);
+                    let _ = wl;
+                    let mut ydst = VSliceMut::new(y, ybase, T::BYTES as u32);
+                    v::svst1_prefix(ctx, &mut ydst, row0, &yv, rows_here);
                 }
-                let yv = v::svadd(ctx, &red, &yv);
-                let _ = wl;
-                let mut ydst = VSliceMut::new(y, ybase, T::BYTES as u32);
-                v::svst1_prefix(ctx, &mut ydst, row0, &yv, rows_here);
             }
         }
     }
@@ -263,6 +308,66 @@ mod tests {
             };
             crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
         });
+    }
+
+    fn run_multi(
+        m: &Spc5Matrix<f64>,
+        xs: &[Vec<f64>],
+        xl: XLoad,
+        red: Reduction,
+    ) -> (Vec<Vec<f64>>, CountingSink) {
+        let mut sink = CountingSink::new();
+        let mut ys: Vec<Vec<f64>> = (0..xs.len()).map(|_| vec![0.0; m.nrows]).collect();
+        {
+            let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+            let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            let mut ctx = SimCtx::new(8, &mut sink);
+            spmv_spc5_sve_multi(&mut ctx, m, &x_refs, &mut y_refs, xl, red);
+        }
+        (ys, sink)
+    }
+
+    #[test]
+    fn multi_equals_k_singles_bitwise() {
+        let (csr, _, _) = fixture();
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|v| (0..90).map(|i| ((i * (v + 3)) % 13) as f64 * 0.2 - 1.1).collect())
+            .collect();
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&csr, r, 8);
+            for xl in [XLoad::Single, XLoad::Partial] {
+                for red in [Reduction::Native, Reduction::Manual] {
+                    let (ys, _) = run_multi(&m, &xs, xl, red);
+                    for (x, y) in xs.iter().zip(&ys) {
+                        let (want, _) = run(&m, x, xl, red);
+                        // Same svmla order per RHS -> bit-identical.
+                        assert_eq!(y, &want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_decodes_masks_once() {
+        let (csr, _, _) = fixture();
+        let m = csr_to_spc5(&csr, 4, 8);
+        let k = 4usize;
+        let xs: Vec<Vec<f64>> = (0..k).map(|_| vec![1.0; csr.ncols]).collect();
+        let (_, sink) = run_multi(&m, &xs, XLoad::Single, Reduction::Native);
+        let block_rows = (m.nblocks() * m.r) as u64;
+        // Mask decode pipeline once per block-row, independent of k...
+        assert_eq!(sink.count(Op::SvCmp), block_rows);
+        assert_eq!(sink.count(Op::SvCntp), block_rows);
+        // ...compact + fma per block-row per RHS.
+        assert_eq!(sink.count(Op::SvCompact), block_rows * k as u64);
+        assert_eq!(sink.count(Op::SvFma), block_rows * k as u64);
+        // Loads: one packed-value load per block-row + k x loads per block.
+        assert_eq!(sink.count(Op::SvLoad), block_rows + (m.nblocks() * k) as u64);
+        // Per-RHS amortized cost strictly below single-vector.
+        let (_, single) = run_multi(&m, &xs[..1], XLoad::Single, Reduction::Native);
+        assert!(sink.per_rhs(k).load_bytes < single.per_rhs(1).load_bytes);
+        assert!(sink.per_rhs(k).ops < single.per_rhs(1).ops);
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! - performance models of the paper's two testbeds — Fujitsu A64FX (SVE) and
 //!   Intel Cascade Lake (AVX-512) — with caches and bandwidth ([`perfmodel`]),
 //! - a native optimized host hot path ([`kernels::native`]),
+//! - a fused multi-RHS (SpMM) pipeline — one matrix pass for `k` right-hand
+//!   sides — through every layer: simulated and native kernels
+//!   ([`kernels::dispatch::run_simulated_multi`]), the parallel runtime
+//!   ([`parallel::ParallelSpc5::spmv_multi`]), the coordinator's batches and
+//!   the block-CG solver ([`solver::block_cg()`]),
 //! - a parallel runtime ([`parallel`]), iterative solvers ([`solver`]),
 //! - a PJRT runtime that executes the JAX/Pallas AOT artifacts ([`runtime`]),
 //! - and an SpMV coordinator service ([`coordinator`]).

@@ -13,8 +13,8 @@
 use std::path::PathBuf;
 
 use spc5::cli::Args;
-use spc5::coordinator::{FormatChoice, SpmvService};
-use spc5::kernels::native;
+use spc5::coordinator::{Backend, FormatChoice, SpmvService};
+use spc5::kernels::{native, SimIsa};
 use spc5::matrix::{corpus_by_name_or_fail, corpus_entries, gen, mm_io, Csr};
 use spc5::parallel::ParallelSpc5;
 use spc5::spc5::{csr_to_spc5, FormatStats};
@@ -207,8 +207,14 @@ fn cmd_solve(args: &mut Args) -> Result<(), String> {
 fn cmd_serve(args: &mut Args) -> Result<(), String> {
     let workers = args.opt_num::<usize>("workers", 2)?;
     let requests = args.opt_num::<usize>("requests", 200)?;
+    let backend = match args.opt("backend", "native").as_str() {
+        "native" => Backend::Native,
+        "avx512" => Backend::Simulated(SimIsa::Avx512),
+        "sve" => Backend::Simulated(SimIsa::Sve),
+        other => return Err(format!("unknown backend '{other}' (native|avx512|sve)")),
+    };
     args.finish()?;
-    let svc: SpmvService<f64> = SpmvService::new(workers, 16);
+    let svc: SpmvService<f64> = SpmvService::with_backend(workers, 16, backend);
     let m = corpus_by_name_or_fail("nd6k")?.build(100_000);
     let ncols = m.ncols;
     let id = svc.register(m);

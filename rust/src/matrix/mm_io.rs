@@ -14,14 +14,38 @@ use crate::scalar::Scalar;
 use super::coo::Coo;
 use super::csr::Csr;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MmError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error at line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
-    #[error("unsupported matrix market declaration: {0}")]
     Unsupported(String),
+}
+
+impl std::fmt::Display for MmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MmError::Io(e) => write!(f, "io: {e}"),
+            MmError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            MmError::Unsupported(what) => {
+                write!(f, "unsupported matrix market declaration: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MmError {
+    fn from(e: std::io::Error) -> Self {
+        MmError::Io(e)
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

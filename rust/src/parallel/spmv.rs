@@ -34,6 +34,25 @@ impl<T: Scalar> ParallelCsr<T> {
             }
         });
     }
+
+    /// Fused multi-RHS `ys[v] = A·xs[v]` across scoped threads: each thread
+    /// streams its row slice once for all `k` right-hand sides.
+    pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.ncols);
+            assert_eq!(y.len(), self.nrows);
+        }
+        let per_part = split_disjoint_multi(ys, &self.partition);
+        std::thread::scope(|scope| {
+            for (part, mut ys_part) in self.parts.iter().zip(per_part) {
+                scope.spawn(move || native::spmv_csr_multi_slices(part, xs, &mut ys_part));
+            }
+        });
+    }
 }
 
 /// An SPC5 matrix pre-partitioned for `threads` workers: each thread owns the
@@ -84,6 +103,45 @@ impl<T: Scalar> ParallelSpc5<T> {
             }
         });
     }
+
+    /// Fused multi-RHS `ys[v] = A·xs[v]` across scoped threads: each thread
+    /// decodes its β(r,VS) slice once (blocks, masks, packed values) and
+    /// reuses the stream for all `k` right-hand sides
+    /// ([`native::spmv_spc5_multi_slices`]). Matrix traffic per thread is
+    /// independent of `k` — the parallel form of the SpMM amortization.
+    pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.ncols);
+            assert_eq!(y.len(), self.nrows);
+        }
+        let per_part = split_disjoint_multi(ys, &self.partition);
+        std::thread::scope(|scope| {
+            for (part, mut ys_part) in self.parts.iter().zip(per_part) {
+                scope.spawn(move || native::spmv_spc5_multi_slices(part, xs, &mut ys_part));
+            }
+        });
+    }
+}
+
+/// Split every right-hand side's `y` by the partition and transpose the
+/// result: element `p` holds part `p`'s disjoint row range of *every* RHS,
+/// ready to hand to one thread.
+fn split_disjoint_multi<'a, T>(
+    ys: &'a mut [&mut [T]],
+    partition: &Partition,
+) -> Vec<Vec<&'a mut [T]>> {
+    let mut per_part: Vec<Vec<&'a mut [T]>> =
+        (0..partition.ranges.len()).map(|_| Vec::with_capacity(ys.len())).collect();
+    for y in ys.iter_mut() {
+        for (slot, s) in per_part.iter_mut().zip(split_disjoint(&mut y[..], partition)) {
+            slot.push(s);
+        }
+    }
+    per_part
 }
 
 /// Split `y` into the partition's disjoint mutable slices.
@@ -147,6 +205,42 @@ mod tests {
                 crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn parallel_multi_matches_serial_singles() {
+        let (m, _, _) = fixture(222);
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|v| (0..222).map(|i| ((i * (v + 2)) % 7) as f64 * 0.5 - 1.0).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        for threads in [1usize, 3, 6] {
+            // SPC5 path.
+            let pm = ParallelSpc5::new(&m, 4, threads);
+            let mut ys: Vec<Vec<f64>> = (0..5).map(|_| vec![0.0; 222]).collect();
+            let mut y_refs: Vec<&mut [f64]> =
+                ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            pm.spmv_multi(&x_refs, &mut y_refs);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut want = vec![0.0; 222];
+                pm.spmv(x, &mut want);
+                crate::scalar::assert_allclose(y, &want, 0.0, 0.0);
+            }
+            // CSR path.
+            let pc = ParallelCsr::new(&m, threads);
+            let mut ys: Vec<Vec<f64>> = (0..5).map(|_| vec![0.0; 222]).collect();
+            let mut y_refs: Vec<&mut [f64]> =
+                ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            pc.spmv_multi(&x_refs, &mut y_refs);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut want = vec![0.0; 222];
+                m.spmv(x, &mut want);
+                crate::scalar::assert_allclose(y, &want, 1e-12, 1e-13);
+            }
+        }
+        // Zero right-hand sides: no-op.
+        let pm = ParallelSpc5::new(&m, 2, 2);
+        pm.spmv_multi(&[], &mut []);
     }
 
     #[test]

@@ -122,6 +122,45 @@ impl CountingSink {
     }
 }
 
+/// Per-right-hand-side view of a fused multi-RHS (SpMM) trace.
+///
+/// A fused pass reads the matrix stream (values, column indices, masks) once
+/// for `k` right-hand sides, so dividing every counter by `k` gives the cost
+/// *attributable to one SpMV* inside the fused pass. Comparing
+/// `per_rhs(k)` against `per_rhs(1)` of a single-vector run is how the
+/// benches quantify the amortization win.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PerRhsCost {
+    /// Number of fused right-hand sides the trace covered.
+    pub k: usize,
+    /// Instructions per RHS.
+    pub ops: f64,
+    /// Load transactions per RHS.
+    pub loads: f64,
+    /// Bytes loaded per RHS.
+    pub load_bytes: f64,
+    /// Store transactions per RHS.
+    pub stores: f64,
+    /// Bytes stored per RHS.
+    pub store_bytes: f64,
+}
+
+impl CountingSink {
+    /// Amortize this trace over `k` fused right-hand sides.
+    pub fn per_rhs(&self, k: usize) -> PerRhsCost {
+        assert!(k >= 1, "per_rhs needs k >= 1");
+        let k_f = k as f64;
+        PerRhsCost {
+            k,
+            ops: self.total_ops() as f64 / k_f,
+            loads: self.loads as f64 / k_f,
+            load_bytes: self.load_bytes as f64 / k_f,
+            stores: self.stores as f64 / k_f,
+            store_bytes: self.store_bytes as f64 / k_f,
+        }
+    }
+}
+
 impl CostSink for CountingSink {
     fn op(&mut self, op: Op, n: u64) {
         *self.ops.entry(op).or_insert(0) += n;
@@ -219,6 +258,25 @@ mod tests {
     fn ctx_rejects_non_pow2() {
         let mut s = NullSink;
         let _ = SimCtx::new(6, &mut s);
+    }
+
+    #[test]
+    fn per_rhs_divides_every_counter() {
+        let mut s = CountingSink::new();
+        s.op(Op::VFma, 8);
+        s.mem(0x1000, 64, false);
+        s.mem(0x2000, 64, false);
+        s.mem(0x3000, 16, true);
+        let p = s.per_rhs(4);
+        assert_eq!(p.k, 4);
+        assert_eq!(p.ops, 2.0);
+        assert_eq!(p.loads, 0.5);
+        assert_eq!(p.load_bytes, 32.0);
+        assert_eq!(p.stores, 0.25);
+        assert_eq!(p.store_bytes, 4.0);
+        // k = 1 is the identity view.
+        let one = s.per_rhs(1);
+        assert_eq!(one.ops, s.total_ops() as f64);
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Lockstep block Conjugate Gradient: `K` symmetric-positive-definite
+//! systems `A·x_v = b_v` advanced together so every iteration performs **one
+//! fused SpMM pass** over the matrix instead of `K` independent SpMVs.
+//!
+//! Each system keeps its own CG scalars (alpha, beta, residual history) — the
+//! per-system iterates are mathematically identical to running
+//! [`super::cg()`] independently — but the dominant cost, the matrix
+//! application, runs
+//! through [`super::MultiLinOp::apply_multi`], which streams the matrix once
+//! for all still-active systems. Converged (or broken-down) systems are
+//! frozen and drop out of the fused pass, so late iterations only pay for
+//! the systems that still need them.
+
+use crate::scalar::Scalar;
+
+use super::{axpy, dot, norm2, xpay, MultiLinOp, SolveResult};
+
+/// Solve `A·x_v = b_v` for all right-hand sides by lockstep CG. Each system
+/// stops when `‖r_v‖/‖b_v‖ <= rtol` (or breaks down, or `max_iter` is
+/// reached); the fused pass continues until every system has stopped.
+/// Returns one [`SolveResult`] per right-hand side, in input order.
+pub fn block_cg<T: Scalar, A: MultiLinOp<T>>(
+    a: &A,
+    bs: &[&[T]],
+    rtol: f64,
+    max_iter: usize,
+) -> Vec<SolveResult<T>> {
+    let n = a.dim();
+    let k = bs.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    for b in bs {
+        assert_eq!(b.len(), n);
+    }
+
+    let bnorms: Vec<f64> = bs.iter().map(|b| norm2(b).max(f64::MIN_POSITIVE)).collect();
+    let mut xs: Vec<Vec<T>> = (0..k).map(|_| vec![T::zero(); n]).collect();
+    let mut rs: Vec<Vec<T>> = bs.iter().map(|b| b.to_vec()).collect();
+    let mut ps: Vec<Vec<T>> = rs.clone();
+    let mut aps: Vec<Vec<T>> = (0..k).map(|_| vec![T::zero(); n]).collect();
+    let mut rrs: Vec<T> = rs.iter().map(|r| dot(r, r)).collect();
+    let mut residuals: Vec<Vec<f64>> =
+        (0..k).map(|i| vec![rrs[i].to_f64().sqrt() / bnorms[i]]).collect();
+    // A frozen system no longer participates in the fused pass. `broken`
+    // marks non-SPD breakdown (frozen but *not* converged).
+    let mut frozen: Vec<bool> = (0..k).map(|i| residuals[i][0] <= rtol).collect();
+    let mut broken = vec![false; k];
+
+    for _ in 0..max_iter {
+        // Gather the still-active systems for one fused matrix pass.
+        let mut idxs: Vec<usize> = Vec::with_capacity(k);
+        let mut p_refs: Vec<&[T]> = Vec::with_capacity(k);
+        let mut ap_refs: Vec<&mut [T]> = Vec::with_capacity(k);
+        for (i, ap) in aps.iter_mut().enumerate() {
+            if !frozen[i] {
+                idxs.push(i);
+                p_refs.push(ps[i].as_slice());
+                ap_refs.push(ap.as_mut_slice());
+            }
+        }
+        if idxs.is_empty() {
+            break;
+        }
+        a.apply_multi(&p_refs, &mut ap_refs);
+        drop(ap_refs);
+
+        // Per-system CG scalar updates.
+        for &i in &idxs {
+            let pap = dot(&ps[i], &aps[i]);
+            if pap.to_f64() <= 0.0 {
+                // Not SPD (or breakdown): freeze honestly.
+                frozen[i] = true;
+                broken[i] = true;
+                continue;
+            }
+            let alpha = rrs[i] / pap;
+            axpy(alpha, &ps[i], &mut xs[i]);
+            axpy(-alpha, &aps[i], &mut rs[i]);
+            let rr_new = dot(&rs[i], &rs[i]);
+            residuals[i].push(rr_new.to_f64().sqrt() / bnorms[i]);
+            let beta = rr_new / rrs[i];
+            rrs[i] = rr_new;
+            xpay(beta, &rs[i], &mut ps[i]);
+            if *residuals[i].last().unwrap() <= rtol {
+                frozen[i] = true;
+            }
+        }
+    }
+
+    xs.into_iter()
+        .zip(residuals)
+        .zip(broken)
+        .map(|((x, res), broke)| {
+            let converged = !broke && *res.last().unwrap() <= rtol;
+            SolveResult { x, residuals: res, converged }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::parallel::ParallelSpc5;
+    use crate::solver::{cg, LinOp};
+    use crate::spc5::csr_to_spc5;
+
+    fn rhs_set(n: usize, k: usize) -> Vec<Vec<f64>> {
+        (0..k)
+            .map(|v| (0..n).map(|i| ((i * (v + 2)) % 7) as f64 * 0.4 - 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn matches_independent_cg_runs() {
+        let a = gen::poisson2d::<f64>(12); // 144 unknowns
+        let bs = rhs_set(144, 4);
+        let b_refs: Vec<&[f64]> = bs.iter().map(|b| b.as_slice()).collect();
+        let results = block_cg(&a, &b_refs, 1e-9, 800);
+        assert_eq!(results.len(), 4);
+        for (b, res) in bs.iter().zip(&results) {
+            assert!(res.converged, "residual {:?}", res.residuals.last());
+            let single = cg(&a, b, 1e-9, 800);
+            crate::scalar::assert_allclose(&res.x, &single.x, 1e-6, 1e-8);
+        }
+    }
+
+    #[test]
+    fn exercises_spc5_and_parallel_operators() {
+        let a = gen::poisson2d::<f64>(10);
+        let bs = rhs_set(100, 3);
+        let b_refs: Vec<&[f64]> = bs.iter().map(|b| b.as_slice()).collect();
+        let dense = block_cg(&a, &b_refs, 1e-9, 600);
+
+        let spc5 = csr_to_spc5(&a, 4, 8);
+        let via_spc5 = block_cg(&spc5, &b_refs, 1e-9, 600);
+        let par = ParallelSpc5::new(&a, 2, 3);
+        let via_par = block_cg(&par, &b_refs, 1e-9, 600);
+        for i in 0..3 {
+            assert!(dense[i].converged && via_spc5[i].converged && via_par[i].converged);
+            crate::scalar::assert_allclose(&via_spc5[i].x, &dense[i].x, 1e-6, 1e-8);
+            crate::scalar::assert_allclose(&via_par[i].x, &dense[i].x, 1e-6, 1e-8);
+        }
+    }
+
+    #[test]
+    fn solutions_actually_solve() {
+        let a = gen::tridiag::<f64>(120);
+        let bs = rhs_set(120, 5);
+        let b_refs: Vec<&[f64]> = bs.iter().map(|b| b.as_slice()).collect();
+        let results = block_cg(&a, &b_refs, 1e-10, 1000);
+        for (b, res) in bs.iter().zip(&results) {
+            assert!(res.converged);
+            let mut ax = vec![0.0; 120];
+            LinOp::apply(&a, &res.x, &mut ax);
+            crate::scalar::assert_allclose(&ax, b, 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn systems_freeze_independently() {
+        // A zero RHS converges at iteration 0 and must not perturb the rest.
+        let a = gen::poisson2d::<f64>(8);
+        let hard: Vec<f64> = (0..64).map(|i| (i as f64 * 0.3).sin()).collect();
+        let zero = vec![0.0f64; 64];
+        let results = block_cg(&a, &[hard.as_slice(), zero.as_slice()], 1e-9, 400);
+        assert!(results[0].converged && results[0].iterations() > 3);
+        assert!(results[1].converged);
+        assert_eq!(results[1].iterations(), 0);
+        assert!(results[1].x.iter().all(|&v| v == 0.0));
+        // The hard system matches its independent solve.
+        let single = cg(&a, &hard, 1e-9, 400);
+        crate::scalar::assert_allclose(&results[0].x, &single.x, 1e-6, 1e-8);
+    }
+
+    #[test]
+    fn non_spd_breaks_down_per_system() {
+        let mut coo = crate::matrix::Coo::<f64>::new(2, 2);
+        coo.push(0, 0, -1.0);
+        coo.push(1, 1, 1.0);
+        let a = crate::matrix::Csr::from_coo(coo);
+        let good = [0.0, 2.0];
+        let bad = [1.0, 0.0];
+        let results = block_cg(&a, &[bad.as_slice(), good.as_slice()], 1e-12, 50);
+        assert!(!results[0].converged);
+        assert!(results[1].converged);
+        crate::scalar::assert_allclose(&results[1].x, &[0.0, 2.0], 1e-10, 1e-12);
+    }
+
+    #[test]
+    fn empty_rhs_list_is_noop() {
+        let a = gen::tridiag::<f64>(10);
+        assert!(block_cg::<f64, _>(&a, &[], 1e-9, 10).is_empty());
+    }
+}

@@ -6,15 +6,18 @@
 //! (see `examples/poisson_cg.rs`).
 
 pub mod bicgstab;
+pub mod block_cg;
 pub mod cg;
 pub mod power;
 
+use crate::kernels::native;
 use crate::matrix::Csr;
 use crate::parallel::{ParallelCsr, ParallelSpc5};
 use crate::scalar::Scalar;
 use crate::spc5::Spc5Matrix;
 
 pub use bicgstab::bicgstab;
+pub use block_cg::block_cg;
 pub use cg::cg;
 pub use power::power_iteration;
 
@@ -22,6 +25,44 @@ pub use power::power_iteration;
 pub trait LinOp<T: Scalar> {
     fn dim(&self) -> usize;
     fn apply(&self, x: &[T], y: &mut [T]);
+}
+
+/// A linear operator with a fused multi-RHS application: `ys[v] = A·xs[v]`
+/// for all right-hand sides in **one** matrix pass. Implementors stream the
+/// matrix once per call, which is what makes [`block_cg()`] cheaper per
+/// system than independent CG runs (SpMV is matrix-traffic bound). The default
+/// implementation falls back to one [`LinOp::apply`] per right-hand side.
+pub trait MultiLinOp<T: Scalar>: LinOp<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            self.apply(x, y);
+        }
+    }
+}
+
+impl<T: Scalar> MultiLinOp<T> for Csr<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        native::spmv_csr_multi_slices(self, xs, ys);
+    }
+}
+
+impl<T: Scalar> MultiLinOp<T> for Spc5Matrix<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        native::spmv_spc5_multi_slices(self, xs, ys);
+    }
+}
+
+impl<T: Scalar> MultiLinOp<T> for ParallelCsr<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        self.spmv_multi(xs, ys);
+    }
+}
+
+impl<T: Scalar> MultiLinOp<T> for ParallelSpc5<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        self.spmv_multi(xs, ys);
+    }
 }
 
 impl<T: Scalar> LinOp<T> for Csr<T> {
@@ -132,6 +173,37 @@ mod tests {
         let mut x = vec![1.0, 1.0, 1.0];
         xpay(3.0, &a, &mut x);
         assert_eq!(x, vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn multi_linop_impls_agree() {
+        let m: Csr<f64> = crate::matrix::gen::poisson2d(6);
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|v| (0..36).map(|i| ((i + v) % 5) as f64 * 0.2).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let want: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|x| {
+                let mut y = vec![0.0; 36];
+                LinOp::apply(&m, x, &mut y);
+                y
+            })
+            .collect();
+        let spc5 = crate::spc5::csr_to_spc5(&m, 4, 8);
+        let par = ParallelSpc5::new(&m, 2, 3);
+        let mut ys: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 36]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+        MultiLinOp::apply_multi(&spc5, &x_refs, &mut y_refs);
+        for (y, w) in ys.iter().zip(&want) {
+            crate::scalar::assert_allclose(y, w, 1e-12, 1e-13);
+        }
+        let mut ys2: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 36]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys2.iter_mut().map(|y| y.as_mut_slice()).collect();
+        MultiLinOp::apply_multi(&par, &x_refs, &mut y_refs);
+        for (y, w) in ys2.iter().zip(&want) {
+            crate::scalar::assert_allclose(y, w, 1e-12, 1e-13);
+        }
     }
 
     #[test]

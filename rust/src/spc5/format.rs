@@ -34,6 +34,27 @@ impl BlockRows {
 /// values (`vals`), ordered row-by-row inside the block. The mask bit `k` of
 /// row `j` says column `block_colidx + k` of row `panel*r + j` holds the next
 /// packed value (paper Fig 2).
+///
+/// Matrices are normally built from CSR via [`crate::spc5::csr_to_spc5`]:
+///
+/// ```
+/// use spc5::matrix::gen;
+/// use spc5::spc5::csr_to_spc5;
+///
+/// let csr = gen::random_uniform::<f64>(32, 4.0, 9);
+/// let m = csr_to_spc5(&csr, 4, 8); // β(4,VS) at VS = 8 (f64, 512-bit)
+/// m.check().expect("structural invariants hold");
+/// assert_eq!(m.nnz(), csr.nnz());
+/// assert!(m.filling() > 0.0 && m.filling() <= 1.0);
+///
+/// // The scalar reference kernel is the conversion oracle.
+/// let x = vec![1.0; 32];
+/// let mut y_spc5 = vec![0.0; 32];
+/// let mut y_csr = vec![0.0; 32];
+/// m.spmv_ref(&x, &mut y_spc5);
+/// csr.spmv(&x, &mut y_csr);
+/// spc5::scalar::assert_allclose(&y_spc5, &y_csr, 1e-12, 1e-12);
+/// ```
 #[derive(Clone, Debug)]
 pub struct Spc5Matrix<T: Scalar> {
     pub nrows: usize,

@@ -1,0 +1,140 @@
+//! SpMM correctness: a fused multi-RHS pass equals k independent single
+//! SpMVs on every kernel family — scalar reference, native (CSR and SPC5),
+//! and the simulated AVX-512 and SVE kernels — for every β(r,VS).
+
+use spc5::kernels::{
+    dispatch::{run_simulated, run_simulated_multi},
+    native, KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad,
+};
+use spc5::matrix::{gen, Csr};
+use spc5::scalar::assert_allclose;
+use spc5::simd::NullSink;
+use spc5::spc5::csr_to_spc5;
+use spc5::util::minitest::property;
+
+fn random_rhs_set(g: &mut spc5::util::minitest::Gen, ncols: usize, k: usize) -> Vec<Vec<f64>> {
+    (0..k).map(|_| (0..ncols).map(|_| g.f64_in(2.0)).collect()).collect()
+}
+
+#[test]
+fn property_multi_equals_singles_every_kernel() {
+    property("fused k-RHS SpMM == k single SpMVs (all kernels, all r)", |g| {
+        let nrows = g.usize_in(1..50);
+        let ncols = g.usize_in(8..70);
+        let csr: Csr<f64> = gen::Structured {
+            nrows,
+            ncols,
+            nnz_per_row: (1.0 + g.f64_unit() * 6.0).min(ncols as f64),
+            run_len: 1.0 + g.f64_unit() * 5.0,
+            row_corr: g.f64_unit(),
+            skew: 0.0,
+            bandwidth: None,
+        }
+        .generate(g.u64());
+        let k = g.usize_in(1..6);
+        let xs = random_rhs_set(g, ncols, k);
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let r = *g.pick(&[1usize, 2, 4, 8]);
+
+        // Scalar reference: the ground truth every family must match.
+        let reference: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|x| {
+                let mut y = vec![0.0; nrows];
+                csr.spmv(x, &mut y);
+                y
+            })
+            .collect();
+
+        // Native CSR fused pass.
+        {
+            let mut ys: Vec<Vec<f64>> = (0..k).map(|_| vec![0.0; nrows]).collect();
+            let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            native::spmv_csr_multi_slices(&csr, &x_refs, &mut y_refs);
+            for (y, want) in ys.iter().zip(&reference) {
+                assert_allclose(y, want, 1e-11, 1e-12);
+            }
+        }
+
+        // Native SPC5 fused pass: bitwise equal to the single native kernel.
+        let m = csr_to_spc5(&csr, r, 8);
+        {
+            let mut ys: Vec<Vec<f64>> = (0..k).map(|_| vec![0.0; nrows]).collect();
+            native::spmv_spc5_multi(&m, &x_refs, &mut ys);
+            for (x, y) in x_refs.iter().zip(&ys) {
+                let mut want = vec![0.0; nrows];
+                native::spmv_spc5(&m, x, &mut want);
+                assert_allclose(y, &want, 0.0, 0.0);
+                let mut ref_y = vec![0.0; nrows];
+                csr.spmv(x, &mut ref_y);
+                assert_allclose(y, &ref_y, 1e-11, 1e-12);
+            }
+        }
+
+        // Simulated AVX-512 and SVE fused kernels: bitwise equal to their
+        // single-RHS counterparts, close to the reference.
+        let x_load = if g.bool() { XLoad::Single } else { XLoad::Partial };
+        let reduction = if g.bool() { Reduction::Manual } else { Reduction::Native };
+        let mut set = MatrixSet::new(csr.clone());
+        for isa in [SimIsa::Avx512, SimIsa::Sve] {
+            let cfg = KernelCfg { isa, kind: KernelKind::Spc5 { r, x_load, reduction } };
+            let mut sink = NullSink;
+            let ys = run_simulated_multi(cfg, &mut set, &x_refs, &mut sink);
+            for (x, (y, want)) in x_refs.iter().zip(ys.iter().zip(&reference)) {
+                let mut sink = NullSink;
+                let single = run_simulated(cfg, &mut set, x, &mut sink);
+                assert_allclose(y, &single, 0.0, 0.0);
+                assert_allclose(y, want, 1e-11, 1e-11);
+            }
+        }
+
+        // The scalar-SPC5 kind goes through the per-RHS fallback and must
+        // still agree.
+        {
+            let cfg = KernelCfg { isa: SimIsa::Avx512, kind: KernelKind::ScalarSpc5 { r } };
+            let mut sink = NullSink;
+            let ys = run_simulated_multi(cfg, &mut set, &x_refs, &mut sink);
+            for (y, want) in ys.iter().zip(&reference) {
+                assert_allclose(y, want, 1e-11, 1e-11);
+            }
+        }
+    });
+}
+
+#[test]
+fn corpus_spot_check_k8() {
+    // One deterministic, heavier case: 8 fused right-hand sides on a corpus
+    // matrix, every r, both ISAs.
+    let e = spc5::matrix::corpus_by_name("nd6k").unwrap();
+    let csr: Csr<f64> = e.build(6_000);
+    let xs: Vec<Vec<f64>> = (0..8)
+        .map(|v| (0..csr.ncols).map(|i| ((i * (v + 1)) % 13) as f64 * 0.25 - 1.5).collect())
+        .collect();
+    let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+    let reference: Vec<Vec<f64>> = xs
+        .iter()
+        .map(|x| {
+            let mut y = vec![0.0; csr.nrows];
+            csr.spmv(x, &mut y);
+            y
+        })
+        .collect();
+    let mut set = MatrixSet::new(csr);
+    for r in [1usize, 2, 4, 8] {
+        for isa in [SimIsa::Avx512, SimIsa::Sve] {
+            let cfg = KernelCfg {
+                isa,
+                kind: KernelKind::Spc5 {
+                    r,
+                    x_load: XLoad::Single,
+                    reduction: Reduction::Manual,
+                },
+            };
+            let mut sink = NullSink;
+            let ys = run_simulated_multi(cfg, &mut set, &x_refs, &mut sink);
+            for (y, want) in ys.iter().zip(&reference) {
+                assert_allclose(y, want, 1e-11, 1e-11);
+            }
+        }
+    }
+}
