@@ -6,8 +6,8 @@
 
 use spc5::bench::{table::fmt1, time_samples, TextTable};
 use spc5::kernels::{native, native_avx512};
-use spc5::matrix::{corpus_by_name, Csr};
-use spc5::spc5::csr_to_spc5;
+use spc5::matrix::{corpus_by_name, gen, Coo, Csr};
+use spc5::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix};
 use spc5::util::json::Json;
 use spc5::util::timing::{gflops, spmv_flops};
 
@@ -111,8 +111,156 @@ fn main() {
         json.set(name, o);
     }
     println!("{}", table.render());
+
+    // ---- §Perf iterations 4-5: specialized vs generic bodies, planned
+    // adaptive execution vs the best single fixed r (portable kernels on
+    // both sides, so the comparison isolates the plan layer itself). ----
+    println!("\n== plan layer: specialized vs generic, planned vs best fixed r (portable) ==\n");
+    let mut t2 = TextTable::new(&[
+        "matrix", "nnz", "gen b4", "spec b4", "spec/gen",
+        "best fixed", "planned", "plan/best", "plan r-mix",
+    ]);
+    // `is_mixed` marks matrices with *chunk-scale* structural contrast where
+    // the plan must strictly win. The power-law "skewed" matrix is row-level
+    // skew, statistically homogeneous at chunk granularity, so it belongs
+    // with the tie-check group.
+    let corpus2: Vec<(&str, bool, Csr<f64>)> = vec![
+        ("CO", false, corpus_by_name("CO").unwrap().build(BUDGET)),
+        ("nd6k", false, corpus_by_name("nd6k").unwrap().build(BUDGET)),
+        ("skewed", false, skewed_matrix(40_000)),
+        ("mixed", true, mixed_matrix(20_000)),
+    ];
+    let mut plan_json = Json::obj();
+    let mut uniform_ok = true;
+    let mut mixed_ok = true;
+    let mut spec_ok = true;
+    for (name, is_mixed, m) in &corpus2 {
+        let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+        let mut y = vec![0.0; m.nrows];
+        let flops = spmv_flops(m.nnz() as u64);
+
+        let s4 = csr_to_spc5(m, 4, 8);
+        let mut t = time_samples(WARMUP, SAMPLES, || {
+            native::spmv_spc5_dyn(&s4, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        let gen_g = gflops(flops, t.median());
+        let mut t = time_samples(WARMUP, SAMPLES, || {
+            native::spmv_spc5(&s4, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        let spec_g = gflops(flops, t.median());
+
+        let mut best_g = 0.0f64;
+        let mut best_r = 1usize;
+        for r in [1usize, 2, 4, 8] {
+            let s = csr_to_spc5(m, r, 8);
+            let mut t = time_samples(WARMUP, SAMPLES, || {
+                native::spmv_spc5(&s, &x, &mut y);
+                std::hint::black_box(&y);
+            });
+            let g = gflops(flops, t.median());
+            if g > best_g {
+                best_g = g;
+                best_r = r;
+            }
+        }
+
+        let plan = PlannedMatrix::build(m, &PlanConfig::default());
+        let mut t = time_samples(WARMUP, SAMPLES, || {
+            plan.spmv_portable(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        let plan_g = gflops(flops, t.median());
+        let mut counts = [0usize; 9];
+        for r in plan.chunk_rs() {
+            counts[r] += 1;
+        }
+        let mix = format!(
+            "1:{} 2:{} 4:{} 8:{}",
+            counts[1], counts[2], counts[4], counts[8]
+        );
+
+        // Per-nnz speed == GFlop/s on the same matrix (2 flops per nnz).
+        if *is_mixed {
+            mixed_ok &= plan_g > best_g;
+        } else {
+            uniform_ok &= plan_g >= 0.95 * best_g;
+        }
+        spec_ok &= spec_g >= 0.95 * gen_g;
+
+        t2.row(vec![
+            (*name).into(),
+            m.nnz().to_string(),
+            fmt1(gen_g),
+            fmt1(spec_g),
+            format!("x{:.2}", spec_g / gen_g),
+            format!("{} (b{})", fmt1(best_g), best_r),
+            fmt1(plan_g),
+            format!("x{:.2}", plan_g / best_g),
+            mix,
+        ]);
+        let mut o = Json::obj();
+        o.set("nnz", m.nnz())
+            .set("generic_b4_gflops", gen_g)
+            .set("specialized_b4_gflops", spec_g)
+            .set("best_fixed_r", best_r)
+            .set("best_fixed_gflops", best_g)
+            .set("planned_gflops", plan_g);
+        plan_json.set(name, o);
+    }
+    println!("{}", t2.render());
+    println!(
+        "check: specialized beta(4) >= 0.95x generic walk -> {}",
+        if spec_ok { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "check: planned >= 0.95x best fixed r per-nnz on uniform/skewed corpus -> {}",
+        if uniform_ok { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "check: planned strictly faster than best fixed r on mixed corpus -> {}",
+        if mixed_ok { "OK" } else { "MISMATCH" }
+    );
+
+    json.set("plan_layer", plan_json);
     json.set("copy_bw_gbs", bw);
     std::fs::create_dir_all("target/bench-results").ok();
     std::fs::write("target/bench-results/native_hotpath.json", json.to_pretty()).ok();
     println!("json: target/bench-results/native_hotpath.json");
+}
+
+/// Power-law row-degree matrix: a few very heavy rows, a long light tail —
+/// the regime where one whole-matrix r is wrong somewhere.
+fn skewed_matrix(n: usize) -> Csr<f64> {
+    gen::Structured {
+        nrows: n,
+        ncols: n,
+        nnz_per_row: 8.0,
+        run_len: 3.0,
+        row_corr: 0.5,
+        skew: 1.0,
+        bandwidth: None,
+    }
+    .generate(31)
+}
+
+/// Mixed-structure matrix: panel-dense 32-column bands on the top half
+/// (tall blocks win), scattered singletons on the bottom half (β(1,VS)
+/// wins) — no single fixed r is right for both.
+fn mixed_matrix(n: usize) -> Csr<f64> {
+    let mut coo = Coo::<f64>::new(n, n);
+    let half = n / 2;
+    for r in 0..half {
+        let base = ((r / 8) * 392) % (n - 32);
+        for c in 0..32 {
+            coo.push(r, base + c, 1.0 + c as f64 * 0.01);
+        }
+    }
+    for r in half..n {
+        for k in 0..3 {
+            coo.push(r, (r * 97 + k * 131) % n, 0.5);
+        }
+    }
+    Csr::from_coo(coo)
 }

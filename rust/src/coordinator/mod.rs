@@ -13,4 +13,4 @@ pub mod selector;
 pub mod service;
 
 pub use selector::{select_format, FormatChoice, Selection};
-pub use service::{Backend, MatrixId, SpmvService};
+pub use service::{Backend, MatrixId, PlanMode, SpmvService};

@@ -16,7 +16,7 @@ use crate::kernels::{native, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
 use crate::simd::trace::{NullSink, SimCtx};
-use crate::spc5::{csr_to_spc5, Spc5Matrix};
+use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 use crate::util::timing::Timer;
 
 /// Handle to a registered matrix.
@@ -37,18 +37,34 @@ pub enum Backend {
     Simulated(SimIsa),
 }
 
+/// Whether the native backend compiles registered matrices into
+/// heterogeneous-`r` execution plans ([`crate::spc5::plan`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PlanMode {
+    /// Compile a plan for every matrix the selector keeps in SPC5 — the
+    /// production default: traffic runs the per-chunk-fastest layout.
+    #[default]
+    Auto,
+    /// Serve the selector's single whole-matrix format (pre-plan behavior).
+    Off,
+}
+
 /// A registered matrix with its selected execution format.
 pub struct Stored<T: Scalar> {
     pub csr: Csr<T>,
     pub spc5: Option<Spc5Matrix<T>>,
+    /// The compiled execution plan (native backend, [`PlanMode::Auto`],
+    /// SPC5-selected matrices only). Preferred over `spc5` when present.
+    pub plan: Option<PlannedMatrix<T>>,
     pub selection: Selection,
 }
 
 impl<T: Scalar> Stored<T> {
     fn spmv(&self, backend: Backend, x: &[T], y: &mut [T]) {
         match backend {
-            Backend::Native => match (&self.spc5, self.selection.choice) {
-                (Some(m), FormatChoice::Spc5 { .. }) => {
+            Backend::Native => match (&self.plan, &self.spc5, self.selection.choice) {
+                (Some(plan), _, _) => plan.spmv(x, y),
+                (None, Some(m), FormatChoice::Spc5 { .. }) => {
                     crate::kernels::native_avx512::spmv_spc5_auto(m, x, y)
                 }
                 _ => native::spmv_csr(&self.csr, x, y),
@@ -85,6 +101,11 @@ impl<T: Scalar> Stored<T> {
     /// to per-request SpMV otherwise (CSR-selected matrix on the native
     /// backend).
     fn spmv_batch(&self, backend: Backend, xs: &[&[T]], ys: &mut [Vec<T>]) {
+        if let (Backend::Native, Some(plan)) = (backend, &self.plan) {
+            let mut refs: Vec<&mut [T]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            plan.spmv_multi_slices(xs, &mut refs);
+            return;
+        }
         match (backend, &self.spc5) {
             (Backend::Native, Some(m)) => native::spmv_spc5_multi(m, xs, ys),
             (Backend::Simulated(isa), Some(m)) => {
@@ -120,6 +141,7 @@ impl<T: Scalar> Stored<T> {
 
 struct Shared<T: Scalar> {
     backend: Backend,
+    plan_mode: PlanMode,
     matrices: RwLock<HashMap<MatrixId, Arc<Stored<T>>>>,
     queue: Mutex<Batcher<MatrixId, Request<T>>>,
     queue_cv: Condvar,
@@ -174,8 +196,20 @@ impl<T: Scalar> SpmvService<T> {
     /// simulated backends serve batches through the fused multi-RHS SpMM
     /// kernels of the selected ISA.
     pub fn with_backend(workers: usize, max_batch: usize, backend: Backend) -> Self {
+        Self::with_plan(workers, max_batch, backend, PlanMode::default())
+    }
+
+    /// Full constructor: backend plus the native plan mode (CLI:
+    /// `serve --plan auto|off`).
+    pub fn with_plan(
+        workers: usize,
+        max_batch: usize,
+        backend: Backend,
+        plan_mode: PlanMode,
+    ) -> Self {
         let shared = Arc::new(Shared {
             backend,
+            plan_mode,
             matrices: RwLock::new(HashMap::new()),
             queue: Mutex::new(Batcher::new(max_batch)),
             queue_cv: Condvar::new(),
@@ -194,21 +228,46 @@ impl<T: Scalar> SpmvService<T> {
 
     /// Register a matrix; the selector picks and pre-builds its format. On
     /// the simulated backends an SPC5 form is always built (β(1,VS) when the
-    /// selector keeps CSR) so batches can run the fused SpMM kernels.
+    /// selector keeps CSR) so batches can run the fused SpMM kernels. On the
+    /// native backend with [`PlanMode::Auto`], SPC5-selected matrices are
+    /// additionally compiled into a heterogeneous-`r` execution plan, which
+    /// then serves all traffic.
     pub fn register(&self, csr: Csr<T>) -> MatrixId {
         let selection = select_format(&csr, &SelectorModel::default());
-        let spc5 = match (self.shared.backend, selection.choice) {
-            (_, FormatChoice::Spc5 { r }) => Some(csr_to_spc5(&csr, r, T::VS)),
-            (Backend::Simulated(_), FormatChoice::Csr) => Some(csr_to_spc5(&csr, 1, T::VS)),
-            (Backend::Native, FormatChoice::Csr) => None,
+        let plan = match (self.shared.backend, self.shared.plan_mode, selection.choice) {
+            (Backend::Native, PlanMode::Auto, FormatChoice::Spc5 { .. }) => {
+                Some(PlannedMatrix::build(&csr, &PlanConfig::default()))
+            }
+            _ => None,
+        };
+        // The plan supersedes the whole-matrix conversion — don't build and
+        // hold a second copy of every value/mask/index when one exists.
+        let spc5 = match (&plan, self.shared.backend, selection.choice) {
+            (Some(_), _, _) => None,
+            (None, _, FormatChoice::Spc5 { r }) => Some(csr_to_spc5(&csr, r, T::VS)),
+            (None, Backend::Simulated(_), FormatChoice::Csr) => {
+                Some(csr_to_spc5(&csr, 1, T::VS))
+            }
+            (None, Backend::Native, FormatChoice::Csr) => None,
         };
         let id = MatrixId(self.next_id.fetch_add(1, Ordering::SeqCst));
         self.shared
             .matrices
             .write()
             .expect("matrices lock")
-            .insert(id, Arc::new(Stored { csr, spc5, selection }));
+            .insert(id, Arc::new(Stored { csr, spc5, plan, selection }));
         id
+    }
+
+    /// The compiled plan's block height per chunk, when the matrix runs
+    /// through a plan (native backend, [`PlanMode::Auto`], SPC5-selected).
+    pub fn plan_chunk_rs(&self, id: MatrixId) -> Option<Vec<usize>> {
+        self.shared
+            .matrices
+            .read()
+            .expect("matrices lock")
+            .get(&id)
+            .and_then(|s| s.plan.as_ref().map(|p| p.chunk_rs()))
     }
 
     /// The selection evidence for a registered matrix.
@@ -470,6 +529,56 @@ mod tests {
         let x: Vec<f64> = (0..80).map(|i| (i % 5) as f64).collect();
         let mut want = vec![0.0; 80];
         m.spmv(&x, &mut want);
+        let got = svc.spmv(id, x).unwrap();
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn plan_mode_auto_builds_and_serves_plans() {
+        // Blocky matrix -> selector picks SPC5 -> Auto compiles a plan.
+        let svc = SpmvService::new(2, 8);
+        let m: Csr<f64> = gen::Structured {
+            nrows: 300,
+            ncols: 300,
+            nnz_per_row: 20.0,
+            run_len: 6.0,
+            row_corr: 0.9,
+            ..Default::default()
+        }
+        .generate(23);
+        let id = svc.register(m.clone());
+        let rs = svc.plan_chunk_rs(id).expect("plan compiled under Auto");
+        assert!(!rs.is_empty() && rs.iter().all(|&r| matches!(r, 1 | 2 | 4 | 8)));
+        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.1).cos()).collect();
+        let mut want = vec![0.0; 300];
+        m.spmv(&x, &mut want);
+        // Single request (plan.spmv) and a batch (plan.spmv_multi_slices).
+        let got = svc.spmv(id, x.clone()).unwrap();
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+        let rxs: Vec<_> = (0..6).map(|_| svc.submit(id, x.clone())).collect();
+        for rx in rxs {
+            let y = rx.recv().unwrap().unwrap();
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+        }
+
+        // PlanMode::Off: same numerics, no plan.
+        let svc_off: SpmvService<f64> =
+            SpmvService::with_plan(2, 8, Backend::Native, PlanMode::Off);
+        let id_off = svc_off.register(m);
+        assert!(svc_off.plan_chunk_rs(id_off).is_none());
+        let got_off = svc_off.spmv(id_off, x).unwrap();
+        crate::scalar::assert_allclose(&got_off, &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn csr_selected_matrix_gets_no_plan() {
+        let svc = SpmvService::new(1, 4);
+        let scattered: Csr<f64> = gen::random_uniform(200, 1.5, 9);
+        let id = svc.register(scattered.clone());
+        assert!(svc.plan_chunk_rs(id).is_none());
+        let x = vec![1.0; 200];
+        let mut want = vec![0.0; 200];
+        scattered.spmv(&x, &mut want);
         let got = svc.spmv(id, x).unwrap();
         crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
     }

@@ -28,7 +28,7 @@
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
 use crate::simd::trace::{CostSink, SimCtx};
-use crate::spc5::{csr_to_spc5, Spc5Matrix};
+use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 
 /// Which simulated ISA a kernel runs on (the paper's two testbeds).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -108,17 +108,28 @@ pub struct KernelCfg {
 pub struct MatrixSet<T: Scalar> {
     pub csr: Csr<T>,
     spc5: std::collections::HashMap<usize, Spc5Matrix<T>>,
+    planned: Option<PlannedMatrix<T>>,
 }
 
 impl<T: Scalar> MatrixSet<T> {
     pub fn new(csr: Csr<T>) -> Self {
-        Self { csr, spc5: std::collections::HashMap::new() }
+        Self { csr, spc5: std::collections::HashMap::new(), planned: None }
     }
 
     /// Get (convert once) the β(r,VS) form.
     pub fn spc5(&mut self, r: usize) -> &Spc5Matrix<T> {
         let csr = &self.csr;
         self.spc5.entry(r).or_insert_with(|| csr_to_spc5(csr, r, T::VS))
+    }
+
+    /// Get (compile once) the default execution plan
+    /// ([`crate::spc5::plan`]): heterogeneous-`r` chunks selected by the
+    /// cycle model.
+    pub fn planned(&mut self) -> &PlannedMatrix<T> {
+        if self.planned.is_none() {
+            self.planned = Some(PlannedMatrix::build(&self.csr, &PlanConfig::default()));
+        }
+        self.planned.as_ref().unwrap()
     }
 
     /// Pre-convert all four β sizes.
@@ -231,6 +242,42 @@ pub fn run_simulated_multi<T: Scalar>(
     ys
 }
 
+/// A native (wall-clock) kernel choice — the host-side counterpart of
+/// [`KernelCfg`], used by the benches and anything that wants one entry
+/// point over the CSR baseline, a fixed β(r,VS) and the adaptive plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NativeKernel {
+    /// Unrolled native CSR baseline.
+    Csr,
+    /// Portable monomorphized SPC5 at a fixed block height.
+    Spc5 { r: usize },
+    /// The model-driven heterogeneous-`r` execution plan.
+    Planned,
+}
+
+impl NativeKernel {
+    pub fn label(self) -> String {
+        match self {
+            NativeKernel::Csr => "native-csr".into(),
+            NativeKernel::Spc5 { r } => format!("native beta({r},VS)"),
+            NativeKernel::Planned => "native-planned".into(),
+        }
+    }
+}
+
+/// Run one native kernel on the host, returning `y = A·x`. Conversions and
+/// the plan are cached in the [`MatrixSet`], so repeated timing runs measure
+/// execution, not compilation.
+pub fn run_native<T: Scalar>(kind: NativeKernel, set: &mut MatrixSet<T>, x: &[T]) -> Vec<T> {
+    let mut y = vec![T::zero(); set.csr.nrows];
+    match kind {
+        NativeKernel::Csr => super::native::spmv_csr(&set.csr, x, &mut y),
+        NativeKernel::Spc5 { r } => super::native::spmv_spc5(set.spc5(r), x, &mut y),
+        NativeKernel::Planned => set.planned().spmv_portable(x, &mut y),
+    }
+    y
+}
+
 /// Floating point operations of one SpMV (the paper counts 2 per nnz).
 pub fn flops_of<T: Scalar>(set: &MatrixSet<T>) -> u64 {
     2 * set.csr.nnz() as u64
@@ -315,6 +362,38 @@ mod tests {
             }
         }
         assert_eq!(flops_of_multi(&set, 3), 3 * flops_of(&set));
+    }
+
+    #[test]
+    fn native_kernels_agree_including_planned() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 100,
+            ncols: 100,
+            nnz_per_row: 8.0,
+            run_len: 3.0,
+            row_corr: 0.6,
+            skew: 0.5,
+            bandwidth: None,
+        }
+        .generate(19);
+        let x: Vec<f64> = (0..100).map(|i| (i % 11) as f64 * 0.2 - 1.0).collect();
+        let mut want = vec![0.0; 100];
+        csr.spmv(&x, &mut want);
+        let mut set = MatrixSet::new(csr);
+        for kind in [
+            NativeKernel::Csr,
+            NativeKernel::Spc5 { r: 1 },
+            NativeKernel::Spc5 { r: 4 },
+            NativeKernel::Planned,
+        ] {
+            let y = run_native(kind, &mut set, &x);
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            assert!(!kind.label().is_empty());
+        }
+        // The plan is compiled once and cached.
+        let p1 = set.planned() as *const _;
+        let p2 = set.planned() as *const _;
+        assert_eq!(p1, p2);
     }
 
     #[test]

@@ -36,12 +36,18 @@ pub fn spmv_hybrid_avx512<T: Scalar>(
     let xs = vslice(&mut space, x);
     let ybase = space.alloc(y.len() * T::BYTES);
 
+    // Accumulators allocated once per call, zeroed per panel (§Perf: these
+    // used to be fresh heap allocations inside the panel loop).
+    let mut sums = vec![T::zero(); m.r];
+    let mut vsums: Vec<VReg<T>> = (0..m.r).map(|_| VReg::zero(vs)).collect();
     let mut idx_val = 0usize;
     for p in 0..m.npanels() {
         let row0 = p * m.r;
         let rows_here = m.r.min(m.nrows - row0);
-        let mut sums = vec![T::zero(); m.r];
-        let mut vsums: Vec<VReg<T>> = (0..m.r).map(|_| VReg::zero(vs)).collect();
+        sums.fill(T::zero());
+        for v in vsums.iter_mut() {
+            v.lanes.fill(T::zero());
+        }
 
         for b in m.panel_blocks(p) {
             ctx.op(Op::SLoad);

@@ -23,4 +23,6 @@ pub mod scalar;
 pub mod spc5_avx512;
 pub mod spc5_sve;
 
-pub use dispatch::{KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad};
+pub use dispatch::{
+    run_native, KernelCfg, KernelKind, MatrixSet, NativeKernel, Reduction, SimIsa, XLoad,
+};

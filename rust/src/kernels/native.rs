@@ -77,41 +77,46 @@ pub fn spmv_csr_multi_slices<T: Scalar>(m: &Csr<T>, xs: &[&[T]], ys: &mut [&mut 
     }
 }
 
-/// Native SPC5 SpMV (`y = A·x`), any `r`/`width`. Walks mask bits with
-/// `trailing_zeros`, so the per-block cost is proportional to the block's
-/// non-zero count plus a small constant — the format's design goal.
+/// Monomorphized SPC5 panel walk: `R` is the block height, so the
+/// accumulator array is fixed-size and the per-row loop fully unrolls; the
+/// value cursor restarts from `block_valptr[b]` at every block, so there is
+/// no loop-carried serial dependency between blocks (and the value stream is
+/// prefetch-friendly: the next block's start address is known up front).
+/// Writes panels `panels` into `y`, where `y[0]` corresponds to row
+/// `panels.start * R` — callers hand disjoint `y` slices to threads.
 ///
 /// §Perf: the inner loop uses unchecked indexing. Safety rests on the format
 /// invariant (`Spc5Matrix::check`): every mask bit `k` addresses column
-/// `block_colidx[b] + k < ncols`, and the total mask popcount equals
-/// `vals.len()`; both are enforced by the converter and validated by the
-/// property suite. The checked path is kept under `debug_assertions`.
-pub fn spmv_spc5<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
-    assert_eq!(x.len(), m.ncols);
-    assert_eq!(y.len(), m.nrows);
-    debug_assert!(m.check().is_ok());
-    let r = m.r;
+/// `block_colidx[b] + k < ncols`, and `block_valptr[b]` plus the mask
+/// popcount prefix stays below `vals.len()`; both are enforced by the
+/// converter and validated by the property suite.
+#[inline(always)]
+fn spmv_spc5_body<T: Scalar, const R: usize, const ACC: bool>(
+    m: &Spc5Matrix<T>,
+    panels: std::ops::Range<usize>,
+    x: &[T],
+    y: &mut [T],
+) {
+    debug_assert_eq!(m.r, R);
     let vals = m.vals.as_ptr();
-    let nnz = m.vals.len();
-    let mut idx_val = 0usize;
-    // Stack accumulators for up to r = 8.
-    let mut sums = [T::zero(); 8];
-    for p in 0..m.npanels() {
-        let row0 = p * r;
-        let rows_here = r.min(m.nrows - row0);
-        sums[..r].fill(T::zero());
+    let row_base = panels.start * R;
+    for p in panels {
+        let row0 = p * R - row_base;
+        let rows_here = R.min(m.nrows - p * R);
+        let mut sums = [T::zero(); R];
         for b in m.panel_blocks(p) {
             // SAFETY: b < nblocks (panel_blocks is bounded by block_rowptr),
             // and the format invariant bounds col + bit < ncols.
             let col = unsafe { *m.block_colidx.get_unchecked(b) } as usize;
             let xwin = unsafe { x.as_ptr().add(col) };
-            let mrow = b * r;
-            for (j, sum) in sums.iter_mut().enumerate().take(r) {
+            let mut idx_val = unsafe { *m.block_valptr.get_unchecked(b) } as usize;
+            let mrow = b * R;
+            for (j, sum) in sums.iter_mut().enumerate() {
                 let mut mask = unsafe { *m.masks.get_unchecked(mrow + j) };
                 while mask != 0 {
                     let k = mask.trailing_zeros() as usize;
-                    debug_assert!(idx_val < nnz && col + k < m.ncols);
-                    // SAFETY: idx_val < nnz (mask popcounts sum to nnz) and
+                    debug_assert!(idx_val < m.vals.len() && col + k < m.ncols);
+                    // SAFETY: idx_val < nnz (valptr + popcount prefix) and
                     // col + k < ncols (format invariant).
                     unsafe {
                         *sum = (*vals.add(idx_val)).mul_add(*xwin.add(k), *sum);
@@ -122,10 +127,101 @@ pub fn spmv_spc5<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
             }
         }
         for j in 0..rows_here {
-            y[row0 + j] = sums[j];
+            if ACC {
+                y[row0 + j] += sums[j];
+            } else {
+                y[row0 + j] = sums[j];
+            }
         }
     }
-    debug_assert_eq!(idx_val, nnz);
+}
+
+/// Runtime-`r` SPC5 panel walk — the pre-specialization kernel, kept as the
+/// fallback for non-{1,2,4,8} block heights and as the "generic" baseline
+/// the `native_hotpath` bench compares the const-generic bodies against.
+pub fn spmv_spc5_dyn<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    spmv_spc5_dyn_range(m, 0..m.npanels(), x, y, false);
+}
+
+fn spmv_spc5_dyn_range<T: Scalar>(
+    m: &Spc5Matrix<T>,
+    panels: std::ops::Range<usize>,
+    x: &[T],
+    y: &mut [T],
+    acc: bool,
+) {
+    let r = m.r;
+    let vals = m.vals.as_ptr();
+    let row_base = panels.start * r;
+    // Stack accumulators for up to r = 8 (larger r is rejected by check()).
+    assert!(r <= 8);
+    let mut sums = [T::zero(); 8];
+    for p in panels {
+        let row0 = p * r - row_base;
+        let rows_here = r.min(m.nrows - p * r);
+        sums[..r].fill(T::zero());
+        for b in m.panel_blocks(p) {
+            let col = unsafe { *m.block_colidx.get_unchecked(b) } as usize;
+            let xwin = unsafe { x.as_ptr().add(col) };
+            let mut idx_val = unsafe { *m.block_valptr.get_unchecked(b) } as usize;
+            let mrow = b * r;
+            for (j, sum) in sums.iter_mut().enumerate().take(r) {
+                let mut mask = unsafe { *m.masks.get_unchecked(mrow + j) };
+                while mask != 0 {
+                    let k = mask.trailing_zeros() as usize;
+                    debug_assert!(idx_val < m.vals.len() && col + k < m.ncols);
+                    // SAFETY: same invariants as the monomorphized body.
+                    unsafe {
+                        *sum = (*vals.add(idx_val)).mul_add(*xwin.add(k), *sum);
+                    }
+                    idx_val += 1;
+                    mask &= mask - 1;
+                }
+            }
+        }
+        for j in 0..rows_here {
+            if acc {
+                y[row0 + j] += sums[j];
+            } else {
+                y[row0 + j] = sums[j];
+            }
+        }
+    }
+}
+
+/// Native SPC5 SpMV (`y = A·x`), any `r`/`width`. Walks mask bits with
+/// `trailing_zeros`, so the per-block cost is proportional to the block's
+/// non-zero count plus a small constant — the format's design goal. The
+/// block height is dispatched once to a const-generic body
+/// (`spmv_spc5_body`), so the accumulator loop is fully unrolled.
+pub fn spmv_spc5<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    debug_assert!(m.check().is_ok());
+    spmv_spc5_panels(m, 0..m.npanels(), x, y);
+}
+
+/// Execute only panels `panels` of `m`, writing into `y` whose element 0 is
+/// row `panels.start * m.r`. With per-block value offsets any panel range is
+/// an independent unit, so a *shared* converted matrix can be split across
+/// threads at panel boundaries (see [`crate::parallel::balance_panels`])
+/// instead of re-converting per-thread row slices.
+pub fn spmv_spc5_panels<T: Scalar>(
+    m: &Spc5Matrix<T>,
+    panels: std::ops::Range<usize>,
+    x: &[T],
+    y: &mut [T],
+) {
+    assert!(panels.start <= panels.end && panels.end <= m.npanels());
+    match m.r {
+        1 => spmv_spc5_body::<T, 1, false>(m, panels, x, y),
+        2 => spmv_spc5_body::<T, 2, false>(m, panels, x, y),
+        4 => spmv_spc5_body::<T, 4, false>(m, panels, x, y),
+        8 => spmv_spc5_body::<T, 8, false>(m, panels, x, y),
+        _ => spmv_spc5_dyn_range(m, panels, x, y, false),
+    }
 }
 
 /// Multi-vector SPC5 SpMV: `Y[v] = A·X[v]` for `K` right-hand sides in one
@@ -152,20 +248,38 @@ pub fn spmv_spc5_multi_slices<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mu
         assert_eq!(x.len(), m.ncols);
         assert_eq!(y.len(), m.nrows);
     }
-    let r = m.r;
+    match m.r {
+        1 => spmv_spc5_multi_body::<T, 1>(m, xs, ys),
+        2 => spmv_spc5_multi_body::<T, 2>(m, xs, ys),
+        4 => spmv_spc5_multi_body::<T, 4>(m, xs, ys),
+        8 => spmv_spc5_multi_body::<T, 8>(m, xs, ys),
+        r => panic!("unsupported block height r={r}"),
+    }
+}
+
+/// Monomorphized fused multi-RHS body: fixed `R` unrolls the per-panel row
+/// loop; the value cursor restarts from `block_valptr[b]` per block.
+#[inline(always)]
+fn spmv_spc5_multi_body<T: Scalar, const R: usize>(
+    m: &Spc5Matrix<T>,
+    xs: &[&[T]],
+    ys: &mut [&mut [T]],
+) {
+    debug_assert_eq!(m.r, R);
+    let k = xs.len();
     // Accumulators: [vector][row-of-panel]; K is unbounded so heap-allocate
     // once per call (outside the hot loop).
-    let mut sums = vec![T::zero(); k * r];
+    let mut sums = vec![T::zero(); k * R];
     let vals = m.vals.as_ptr();
-    let mut idx_val = 0usize;
     for p in 0..m.npanels() {
-        let row0 = p * r;
-        let rows_here = r.min(m.nrows - row0);
+        let row0 = p * R;
+        let rows_here = R.min(m.nrows - row0);
         sums.fill(T::zero());
         for b in m.panel_blocks(p) {
             let col = unsafe { *m.block_colidx.get_unchecked(b) } as usize;
-            let mrow = b * r;
-            for j in 0..r {
+            let mut idx_val = unsafe { *m.block_valptr.get_unchecked(b) } as usize;
+            let mrow = b * R;
+            for j in 0..R {
                 let mut mask = unsafe { *m.masks.get_unchecked(mrow + j) };
                 while mask != 0 {
                     let kbit = mask.trailing_zeros() as usize;
@@ -174,7 +288,7 @@ pub fn spmv_spc5_multi_slices<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mu
                     for (vi, x) in xs.iter().enumerate() {
                         // SAFETY: same invariants as spmv_spc5.
                         unsafe {
-                            let s = sums.get_unchecked_mut(vi * r + j);
+                            let s = sums.get_unchecked_mut(vi * R + j);
                             *s = v.mul_add(*x.as_ptr().add(col + kbit), *s);
                         }
                     }
@@ -185,42 +299,25 @@ pub fn spmv_spc5_multi_slices<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mu
         }
         for (vi, y) in ys.iter_mut().enumerate() {
             for j in 0..rows_here {
-                y[row0 + j] = sums[vi * r + j];
+                y[row0 + j] = sums[vi * R + j];
             }
         }
     }
-    debug_assert_eq!(idx_val, m.nnz());
 }
 
 /// `y = A·x` accumulating into y (`y += A·x`) — used by the solvers to fuse
-/// the residual update.
+/// the residual update. Same monomorphized, cursor-free bodies as
+/// [`spmv_spc5`], with the accumulate flag resolved at compile time.
 pub fn spmv_spc5_acc<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
     assert_eq!(x.len(), m.ncols);
     assert_eq!(y.len(), m.nrows);
-    let r = m.r;
-    let mut idx_val = 0usize;
-    let mut sums = [T::zero(); 8];
-    for p in 0..m.npanels() {
-        let row0 = p * r;
-        let rows_here = r.min(m.nrows - row0);
-        sums[..r].fill(T::zero());
-        for b in m.panel_blocks(p) {
-            let col = m.block_colidx[b] as usize;
-            let xwin = &x[col..];
-            let mrow = b * r;
-            for (j, sum) in sums.iter_mut().enumerate().take(r) {
-                let mut mask = m.masks[mrow + j];
-                while mask != 0 {
-                    let k = mask.trailing_zeros() as usize;
-                    *sum = m.vals[idx_val].mul_add(xwin[k], *sum);
-                    idx_val += 1;
-                    mask &= mask - 1;
-                }
-            }
-        }
-        for j in 0..rows_here {
-            y[row0 + j] += sums[j];
-        }
+    let panels = 0..m.npanels();
+    match m.r {
+        1 => spmv_spc5_body::<T, 1, true>(m, panels, x, y),
+        2 => spmv_spc5_body::<T, 2, true>(m, panels, x, y),
+        4 => spmv_spc5_body::<T, 4, true>(m, panels, x, y),
+        8 => spmv_spc5_body::<T, 8, true>(m, panels, x, y),
+        _ => spmv_spc5_dyn_range(m, panels, x, y, true),
     }
 }
 
@@ -369,6 +466,63 @@ mod tests {
         }
         // Zero vectors: no-op.
         spmv_csr_multi_slices::<f64>(&csr, &[], &mut []);
+    }
+
+    #[test]
+    fn specialized_matches_generic_and_panel_ranges() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 97,
+            ncols: 120,
+            nnz_per_row: 6.0,
+            run_len: 2.5,
+            row_corr: 0.4,
+            skew: 0.6,
+            bandwidth: None,
+        }
+        .generate(13);
+        let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.11).cos()).collect();
+        let mut want = vec![0.0; 97];
+        csr.spmv(&x, &mut want);
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&csr, r, 8);
+            // The runtime-r generic walk agrees with the reference...
+            let mut a = vec![0.0; 97];
+            spmv_spc5_dyn(&m, &x, &mut a);
+            crate::scalar::assert_allclose(&a, &want, 1e-12, 1e-12);
+            // ...and with the specialized bodies, bitwise.
+            let mut b = vec![0.0; 97];
+            spmv_spc5(&m, &x, &mut b);
+            assert_eq!(a, b, "r={r}");
+            // Disjoint panel ranges reassemble the full product.
+            let np = m.npanels();
+            let mid = np / 2;
+            let mut c = vec![0.0; 97];
+            let rows_mid = (mid * r).min(97);
+            let (lo, hi) = c.split_at_mut(rows_mid);
+            spmv_spc5_panels(&m, 0..mid, &x, lo);
+            spmv_spc5_panels(&m, mid..np, &x, hi);
+            assert_eq!(c, b, "r={r} split at panel {mid}");
+            // Empty range is a no-op.
+            let mut d = vec![7.0; 0];
+            spmv_spc5_panels(&m, 0..0, &x, &mut d);
+        }
+    }
+
+    #[test]
+    fn accumulating_variant_all_r() {
+        let csr: Csr<f64> = gen::random_uniform(41, 4.0, 17);
+        let x: Vec<f64> = (0..41).map(|i| 0.3 * i as f64 - 2.0).collect();
+        let mut base = vec![0.0; 41];
+        csr.spmv(&x, &mut base);
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&csr, r, 8);
+            let mut y: Vec<f64> = (0..41).map(|i| (i as f64).sin()).collect();
+            let before = y.clone();
+            spmv_spc5_acc(&m, &x, &mut y);
+            for i in 0..41 {
+                assert!((y[i] - (before[i] + base[i])).abs() < 1e-10, "r={r} row {i}");
+            }
+        }
     }
 
     #[test]

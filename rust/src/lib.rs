@@ -10,7 +10,14 @@
 //!   vector-ISA simulator ([`simd`], [`kernels`]),
 //! - performance models of the paper's two testbeds — Fujitsu A64FX (SVE) and
 //!   Intel Cascade Lake (AVX-512) — with caches and bandwidth ([`perfmodel`]),
-//! - a native optimized host hot path ([`kernels::native`]),
+//! - a native optimized host hot path ([`kernels::native`]) with
+//!   const-generic β(R) kernel bodies over cursor-free per-block value
+//!   offsets,
+//! - an execution-plan layer ([`spc5::plan`]): per-row-chunk β(r,VS)
+//!   selection driven by the machine cycle model, emitting heterogeneous-`r`
+//!   [`spc5::PlannedMatrix`] plans served by the coordinator
+//!   (`serve --plan auto`), the parallel runtime
+//!   ([`parallel::ParallelPlanned`]) and the solvers,
 //! - a fused multi-RHS (SpMM) pipeline — one matrix pass for `k` right-hand
 //!   sides — through every layer: simulated and native kernels
 //!   ([`kernels::dispatch::run_simulated_multi`]), the parallel runtime

@@ -13,7 +13,7 @@
 use std::path::PathBuf;
 
 use spc5::cli::Args;
-use spc5::coordinator::{Backend, FormatChoice, SpmvService};
+use spc5::coordinator::{Backend, FormatChoice, PlanMode, SpmvService};
 use spc5::kernels::{native, SimIsa};
 use spc5::matrix::{corpus_by_name_or_fail, corpus_entries, gen, mm_io, Csr};
 use spc5::parallel::ParallelSpc5;
@@ -213,11 +213,33 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
         "sve" => Backend::Simulated(SimIsa::Sve),
         other => return Err(format!("unknown backend '{other}' (native|avx512|sve)")),
     };
+    let plan = match args.opt("plan", "auto").as_str() {
+        "auto" => PlanMode::Auto,
+        "off" => PlanMode::Off,
+        other => return Err(format!("unknown plan mode '{other}' (auto|off)")),
+    };
     args.finish()?;
-    let svc: SpmvService<f64> = SpmvService::with_backend(workers, 16, backend);
+    let svc: SpmvService<f64> = SpmvService::with_plan(workers, 16, backend, plan);
     let m = corpus_by_name_or_fail("nd6k")?.build(100_000);
     let ncols = m.ncols;
     let id = svc.register(m);
+    match svc.plan_chunk_rs(id) {
+        Some(rs) => {
+            let mut counts = [0usize; 9];
+            for r in &rs {
+                counts[*r] += 1;
+            }
+            println!(
+                "execution plan: {} chunks (r=1: {}, r=2: {}, r=4: {}, r=8: {})",
+                rs.len(),
+                counts[1],
+                counts[2],
+                counts[4],
+                counts[8]
+            );
+        }
+        None => println!("execution plan: none (plan={plan:?}, selector format kept)"),
+    }
     println!("registered nd6k-like matrix as {id:?}; submitting {requests} requests...");
     let t = Timer::start();
     let rxs: Vec<_> = (0..requests)

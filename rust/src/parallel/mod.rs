@@ -10,10 +10,18 @@
 //! pool used by the coordinator service, and the data-parallel helpers use
 //! scoped threads.
 
+//!
+//! The plan layer adds two splitting modes on top of per-thread conversion:
+//! [`ParallelPlanned`] deals a compiled [`crate::spc5::PlannedMatrix`]'s
+//! chunks to threads by nnz, and [`spmv_spc5_shared`] splits **one** shared
+//! conversion at panel boundaries ([`balance_panels`]) — both possible
+//! because per-block value offsets make any block range independently
+//! executable.
+
 pub mod partition;
 pub mod pool;
 pub mod spmv;
 
-pub use partition::{balance_rows, Partition};
+pub use partition::{balance_panels, balance_rows, balance_units, Partition};
 pub use pool::ThreadPool;
-pub use spmv::{ParallelCsr, ParallelSpc5};
+pub use spmv::{spmv_spc5_shared, ParallelCsr, ParallelPlanned, ParallelSpc5};

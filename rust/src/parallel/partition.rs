@@ -1,7 +1,15 @@
-//! Static row partitioning balanced by non-zero count.
+//! Static work partitioning balanced by non-zero count.
+//!
+//! Three granularities: CSR rows ([`balance_rows`], panel-aligned for
+//! per-thread conversion), generic weighted units ([`balance_units`], used
+//! by the plan layer to assign chunks to threads), and SPC5 panels
+//! ([`balance_panels`] — possible at all because `block_valptr` makes
+//! per-panel nnz an O(1) lookup, so one *already converted* matrix can be
+//! split at panel boundaries instead of re-converting row slices).
 
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
+use crate::spc5::Spc5Matrix;
 
 /// A partition of `[0, nrows)` into contiguous thread slices.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -23,7 +31,6 @@ impl Partition {
 pub fn balance_rows<T: Scalar>(m: &Csr<T>, parts: usize, align: usize) -> Partition {
     assert!(parts >= 1);
     assert!(align >= 1);
-    let total = m.nnz() as u64;
     let mut ranges = Vec::with_capacity(parts);
     let mut row = 0usize;
     for p in 0..parts {
@@ -31,24 +38,79 @@ pub fn balance_rows<T: Scalar>(m: &Csr<T>, parts: usize, align: usize) -> Partit
             ranges.push(row..row);
             continue;
         }
-        // Target cumulative nnz for the end of part p.
-        let target = total * (p as u64 + 1) / parts as u64;
+        if p + 1 == parts {
+            ranges.push(row..m.nrows);
+            row = m.nrows;
+            continue;
+        }
+        // Target an equal share of the *remaining* nnz, so alignment
+        // round-down (or a huge row swallowed by an earlier part) re-balances
+        // over the parts still to come instead of piling up on the tail.
+        let remaining = (m.row_ptr[m.nrows] - m.row_ptr[row]) as u64;
+        let target = m.row_ptr[row] as u64 + remaining.div_ceil((parts - p) as u64);
         let mut end = row;
         while end < m.nrows && (m.row_ptr[end + 1] as u64) < target {
             end += 1;
         }
         let mut end = (end + 1).min(m.nrows);
-        // Align to panel height (last part takes the remainder).
-        if p + 1 < parts {
-            end -= end % align;
-        } else {
-            end = m.nrows;
+        // Align to panel height; never emit an empty middle part while
+        // aligned rows remain (the old `end -= end % align` could round an
+        // end back to `row` on skewed matrices, starving this part and
+        // overflowing later ones).
+        end -= end % align;
+        if end <= row {
+            end = (row + align).min(m.nrows);
         }
-        let end = end.max(row);
         ranges.push(row..end);
         row = end;
     }
     Partition { ranges }
+}
+
+/// Split `weights.len()` contiguous units into `parts` ranges with roughly
+/// equal total weight (each part re-targets an equal share of the remaining
+/// weight; every non-exhausted part takes at least one unit; the last part
+/// takes the rest). Used to assign planned chunks — or any weighted work
+/// list — to threads.
+pub fn balance_units(weights: &[u64], parts: usize) -> Partition {
+    assert!(parts >= 1);
+    let n = weights.len();
+    let total: u64 = weights.iter().sum();
+    let mut ranges = Vec::with_capacity(parts);
+    let mut i = 0usize;
+    let mut used = 0u64;
+    for p in 0..parts {
+        if i >= n {
+            ranges.push(i..i);
+            continue;
+        }
+        if p + 1 == parts {
+            ranges.push(i..n);
+            i = n;
+            continue;
+        }
+        let target = used + (total - used).div_ceil((parts - p) as u64);
+        let start = i;
+        while i < n {
+            used += weights[i];
+            i += 1;
+            if used >= target {
+                break;
+            }
+        }
+        ranges.push(start..i);
+    }
+    Partition { ranges }
+}
+
+/// Split the panels of one converted SPC5 matrix into `parts` contiguous
+/// panel ranges with roughly equal nnz. Ranges index *panels*; multiply by
+/// `m.r` for rows. Per-panel nnz is O(1) via [`Spc5Matrix::panel_nnz`]
+/// (block value offsets), which is what makes sharing one conversion across
+/// threads practical.
+pub fn balance_panels<T: Scalar>(m: &Spc5Matrix<T>, parts: usize) -> Partition {
+    let weights: Vec<u64> = (0..m.npanels()).map(|p| m.panel_nnz(p) as u64).collect();
+    balance_units(&weights, parts)
 }
 
 #[cfg(test)]
@@ -102,6 +164,96 @@ mod tests {
         let max = *nnzs.iter().max().unwrap() as f64;
         let min = *nnzs.iter().min().unwrap() as f64;
         assert!(max / min.max(1.0) < 2.5, "{nnzs:?}");
+    }
+
+    #[test]
+    fn skewed_alignment_regression() {
+        // Row 0 holds almost all non-zeros: the old code rounded part 0's
+        // end down to 0 (empty part) and dumped everything on the tail.
+        let mut coo = crate::matrix::Coo::<f64>::new(64, 512);
+        for c in 0..500 {
+            coo.push(0, c, 1.0);
+        }
+        for r in 1..64 {
+            coo.push(r, r, 1.0);
+        }
+        let m = Csr::from_coo(coo);
+        let p = balance_rows(&m, 4, 8);
+        // Coverage and alignment.
+        let mut row = 0;
+        for (i, r) in p.ranges.iter().enumerate() {
+            assert_eq!(r.start, row, "{:?}", p.ranges);
+            if i + 1 < p.ranges.len() {
+                assert_eq!(r.end % 8, 0, "{:?}", p.ranges);
+            }
+            row = r.end;
+        }
+        assert_eq!(row, 64);
+        // No empty part may precede a non-empty one.
+        for w in p.ranges.windows(2) {
+            assert!(
+                !w[0].is_empty() || w[1].is_empty(),
+                "empty part before non-empty: {:?}",
+                p.ranges
+            );
+        }
+        // The heavy row is isolated into a minimal aligned slice, and the
+        // row-remainder is spread over the other parts rather than one tail.
+        assert_eq!(p.ranges[0], 0..8, "{:?}", p.ranges);
+        let tail_rows: Vec<usize> = p.ranges[1..].iter().map(|r| r.len()).collect();
+        assert!(tail_rows.iter().all(|&n| n > 0), "{:?}", p.ranges);
+        let max = *tail_rows.iter().max().unwrap();
+        let min = *tail_rows.iter().min().unwrap();
+        assert!(max <= 2 * min + 8, "{:?}", p.ranges);
+    }
+
+    #[test]
+    fn balance_units_shapes() {
+        // Equal weights split evenly.
+        let p = balance_units(&[1; 12], 4);
+        assert_eq!(p.ranges, vec![0..3, 3..6, 6..9, 9..12]);
+        // A heavy head unit takes a part of its own.
+        let p = balance_units(&[100, 1, 1, 1, 1, 1], 3);
+        assert_eq!(p.ranges[0], 0..1, "{:?}", p.ranges);
+        assert!(!p.ranges[1].is_empty() && !p.ranges[2].is_empty(), "{:?}", p.ranges);
+        assert_eq!(p.ranges.last().unwrap().end, 6);
+        // More parts than units: one unit each, then empties.
+        let p = balance_units(&[5, 5], 4);
+        assert_eq!(p.ranges[0], 0..1);
+        assert_eq!(p.ranges[1], 1..2);
+        assert!(p.ranges[2].is_empty() && p.ranges[3].is_empty());
+        // Zero units.
+        let p = balance_units(&[], 2);
+        assert_eq!(p.ranges, vec![0..0, 0..0]);
+    }
+
+    #[test]
+    fn balance_panels_by_valptr_nnz() {
+        use crate::spc5::csr_to_spc5;
+        let m: Csr<f64> = gen::Structured {
+            nrows: 256,
+            ncols: 256,
+            nnz_per_row: 8.0,
+            skew: 0.9,
+            ..Default::default()
+        }
+        .generate(7);
+        let s = csr_to_spc5(&m, 4, 8);
+        let p = balance_panels(&s, 3);
+        assert_eq!(p.nparts(), 3);
+        // Panel ranges tile [0, npanels) and are nnz-balanced.
+        let mut panel = 0;
+        let mut nnzs = Vec::new();
+        for r in &p.ranges {
+            assert_eq!(r.start, panel);
+            nnzs.push(r.clone().map(|q| s.panel_nnz(q)).sum::<usize>());
+            panel = r.end;
+        }
+        assert_eq!(panel, s.npanels());
+        assert_eq!(nnzs.iter().sum::<usize>(), s.nnz());
+        let max = *nnzs.iter().max().unwrap() as f64;
+        let min = *nnzs.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 3.0, "{nnzs:?}");
     }
 
     #[test]

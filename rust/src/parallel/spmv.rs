@@ -3,9 +3,9 @@
 use crate::kernels::native;
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
-use crate::spc5::{csr_to_spc5, Spc5Matrix};
+use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 
-use super::partition::{balance_rows, Partition};
+use super::partition::{balance_panels, balance_rows, balance_units, Partition};
 
 /// A CSR matrix pre-partitioned for `threads` workers. Each part is an
 /// independent row slice (thread-local allocation, as the paper describes).
@@ -125,6 +125,133 @@ impl<T: Scalar> ParallelSpc5<T> {
             }
         });
     }
+}
+
+/// A planned (heterogeneous-`r`) matrix pre-assigned to `threads` workers:
+/// the plan is compiled once, then whole chunks are dealt to threads
+/// balanced by nnz ([`balance_units`]) — chunk boundaries are the split
+/// points the per-block value offsets make free.
+pub struct ParallelPlanned<T: Scalar> {
+    pub plan: PlannedMatrix<T>,
+    /// Per-thread contiguous chunk-index ranges.
+    pub assignments: Vec<std::ops::Range<usize>>,
+    /// The same assignment as row ranges (for splitting y).
+    pub partition: Partition,
+    pub nrows: usize,
+    pub ncols: usize,
+}
+
+impl<T: Scalar> ParallelPlanned<T> {
+    pub fn new(m: &Csr<T>, cfg: &PlanConfig, threads: usize) -> Self {
+        let plan = PlannedMatrix::build(m, cfg);
+        Self::from_plan(plan, threads)
+    }
+
+    pub fn from_plan(plan: PlannedMatrix<T>, threads: usize) -> Self {
+        let weights: Vec<u64> = plan.chunks.iter().map(|c| c.m.nnz() as u64).collect();
+        let assignments = balance_units(&weights, threads.max(1)).ranges;
+        let ranges = assignments
+            .iter()
+            .map(|a| {
+                let start =
+                    plan.chunks.get(a.start).map_or(plan.nrows, |c| c.row0);
+                let end = if a.end < plan.chunks.len() {
+                    plan.chunks[a.end].row0
+                } else {
+                    plan.nrows
+                };
+                start..end
+            })
+            .collect();
+        Self {
+            nrows: plan.nrows,
+            ncols: plan.ncols,
+            plan,
+            assignments,
+            partition: Partition { ranges },
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.plan.nnz()
+    }
+
+    /// `y = A·x` across scoped threads; each thread executes its chunks'
+    /// specialized kernels into its disjoint y slice (one shared x padding
+    /// per thread, see [`crate::spc5::plan::spmv_chunks`]).
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let slices = split_disjoint(y, &self.partition);
+        std::thread::scope(|scope| {
+            for (a, ys) in self.assignments.iter().zip(slices) {
+                let chunks = &self.plan.chunks[a.clone()];
+                if chunks.is_empty() {
+                    continue;
+                }
+                scope.spawn(move || crate::spc5::plan::spmv_chunks(chunks, x, ys));
+            }
+        });
+    }
+
+    /// Fused multi-RHS `ys[v] = A·xs[v]`: each thread streams each of its
+    /// chunks once for all `k` right-hand sides.
+    pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.ncols);
+            assert_eq!(y.len(), self.nrows);
+        }
+        let per_part = split_disjoint_multi(ys, &self.partition);
+        std::thread::scope(|scope| {
+            for (a, mut ys_part) in self.assignments.iter().zip(per_part) {
+                let chunks = &self.plan.chunks[a.clone()];
+                let Some(first) = chunks.first() else { continue };
+                let base = first.row0;
+                scope.spawn(move || {
+                    for c in chunks {
+                        let lo = c.row0 - base;
+                        let mut sub: Vec<&mut [T]> = ys_part
+                            .iter_mut()
+                            .map(|y| &mut y[lo..lo + c.m.nrows])
+                            .collect();
+                        native::spmv_spc5_multi_slices(&c.m, xs, &mut sub);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Parallel SpMV over **one shared** SPC5 conversion: panels are split at
+/// nnz-balanced boundaries ([`balance_panels`]) and each thread runs
+/// [`native::spmv_spc5_panels`] on its range — no per-thread re-conversion,
+/// no loop-carried value cursor to serialize on. (With `block_valptr` any
+/// panel range is independently executable; before it, threads had to own a
+/// private conversion of their row slice.)
+pub fn spmv_spc5_shared<T: Scalar>(m: &Spc5Matrix<T>, threads: usize, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    let panel_parts = balance_panels(m, threads.max(1));
+    let row_ranges: Vec<std::ops::Range<usize>> = panel_parts
+        .ranges
+        .iter()
+        .map(|pr| (pr.start * m.r).min(m.nrows)..(pr.end * m.r).min(m.nrows))
+        .collect();
+    let rows = Partition { ranges: row_ranges };
+    let slices = split_disjoint(y, &rows);
+    std::thread::scope(|scope| {
+        for (pr, ys) in panel_parts.ranges.iter().zip(slices) {
+            if pr.is_empty() {
+                continue;
+            }
+            let pr = pr.clone();
+            scope.spawn(move || native::spmv_spc5_panels(m, pr, x, ys));
+        }
+    });
 }
 
 /// Split every right-hand side's `y` by the partition and transpose the
@@ -249,6 +376,46 @@ mod tests {
         let pm = ParallelSpc5::new(&m, 8, 3);
         for range in &pm.partition.ranges[..pm.partition.ranges.len() - 1] {
             assert_eq!(range.end % 8, 0);
+        }
+    }
+
+    #[test]
+    fn parallel_planned_matches_serial() {
+        let (m, x, want) = fixture(321);
+        for threads in [1usize, 2, 5] {
+            let pp = ParallelPlanned::new(&m, &PlanConfig { chunk_rows: 64, ..Default::default() }, threads);
+            assert_eq!(pp.nnz(), m.nnz());
+            let mut y = vec![0.0; 321];
+            pp.spmv(&x, &mut y);
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            // Fused multi-RHS agrees with per-RHS serial.
+            let xs: Vec<Vec<f64>> = (0..3)
+                .map(|v| (0..321).map(|i| ((i + v) % 5) as f64 * 0.3).collect())
+                .collect();
+            let x_refs: Vec<&[f64]> = xs.iter().map(|s| s.as_slice()).collect();
+            let mut ys: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 321]).collect();
+            let mut y_refs: Vec<&mut [f64]> =
+                ys.iter_mut().map(|s| s.as_mut_slice()).collect();
+            pp.spmv_multi(&x_refs, &mut y_refs);
+            for (xv, yv) in xs.iter().zip(&ys) {
+                let mut w = vec![0.0; 321];
+                m.spmv(xv, &mut w);
+                crate::scalar::assert_allclose(yv, &w, 1e-12, 1e-12);
+            }
+            pp.spmv_multi(&[], &mut []);
+        }
+    }
+
+    #[test]
+    fn shared_matrix_panel_split_matches_serial() {
+        let (m, x, want) = fixture(277);
+        for r in [1usize, 4, 8] {
+            let s = csr_to_spc5(&m, r, 8);
+            for threads in [1usize, 3, 6, 64] {
+                let mut y = vec![0.0; 277];
+                spmv_spc5_shared(&s, threads, &x, &mut y);
+                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            }
         }
     }
 

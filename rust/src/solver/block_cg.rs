@@ -145,6 +145,30 @@ mod tests {
     }
 
     #[test]
+    fn exercises_planned_operators() {
+        use crate::parallel::ParallelPlanned;
+        use crate::spc5::{plan_auto, PlanConfig};
+        let a = gen::poisson2d::<f64>(10);
+        let bs = rhs_set(100, 3);
+        let b_refs: Vec<&[f64]> = bs.iter().map(|b| b.as_slice()).collect();
+        let dense = block_cg(&a, &b_refs, 1e-9, 600);
+
+        let planned = plan_auto(&a);
+        let via_plan = block_cg(&planned, &b_refs, 1e-9, 600);
+        let par = ParallelPlanned::new(
+            &a,
+            &PlanConfig { chunk_rows: 32, ..Default::default() },
+            3,
+        );
+        let via_par = block_cg(&par, &b_refs, 1e-9, 600);
+        for i in 0..3 {
+            assert!(dense[i].converged && via_plan[i].converged && via_par[i].converged);
+            crate::scalar::assert_allclose(&via_plan[i].x, &dense[i].x, 1e-6, 1e-8);
+            crate::scalar::assert_allclose(&via_par[i].x, &dense[i].x, 1e-6, 1e-8);
+        }
+    }
+
+    #[test]
     fn solutions_actually_solve() {
         let a = gen::tridiag::<f64>(120);
         let bs = rhs_set(120, 5);

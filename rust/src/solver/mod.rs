@@ -12,9 +12,9 @@ pub mod power;
 
 use crate::kernels::native;
 use crate::matrix::Csr;
-use crate::parallel::{ParallelCsr, ParallelSpc5};
+use crate::parallel::{ParallelCsr, ParallelPlanned, ParallelSpc5};
 use crate::scalar::Scalar;
-use crate::spc5::Spc5Matrix;
+use crate::spc5::{PlannedMatrix, Spc5Matrix};
 
 pub use bicgstab::bicgstab;
 pub use block_cg::block_cg;
@@ -65,6 +65,18 @@ impl<T: Scalar> MultiLinOp<T> for ParallelSpc5<T> {
     }
 }
 
+impl<T: Scalar> MultiLinOp<T> for PlannedMatrix<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        self.spmv_multi_slices(xs, ys);
+    }
+}
+
+impl<T: Scalar> MultiLinOp<T> for ParallelPlanned<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        self.spmv_multi(xs, ys);
+    }
+}
+
 impl<T: Scalar> LinOp<T> for Csr<T> {
     fn dim(&self) -> usize {
         assert_eq!(self.nrows, self.ncols);
@@ -97,6 +109,26 @@ impl<T: Scalar> LinOp<T> for ParallelCsr<T> {
 }
 
 impl<T: Scalar> LinOp<T> for ParallelSpc5<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+}
+
+impl<T: Scalar> LinOp<T> for PlannedMatrix<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+}
+
+impl<T: Scalar> LinOp<T> for ParallelPlanned<T> {
     fn dim(&self) -> usize {
         assert_eq!(self.nrows, self.ncols);
         self.nrows

@@ -20,6 +20,7 @@ pub fn csr_to_spc5<T: Scalar>(csr: &Csr<T>, r: usize, width: usize) -> Spc5Matri
     let mut block_rowptr = Vec::with_capacity(npanels + 1);
     let mut block_colidx: Vec<u32> = Vec::new();
     let mut masks: Vec<u32> = Vec::new();
+    let mut block_valptr: Vec<u32> = vec![0];
     let mut vals: Vec<T> = Vec::with_capacity(csr.nnz());
     block_rowptr.push(0u32);
 
@@ -60,6 +61,8 @@ pub fn csr_to_spc5<T: Scalar>(csr: &Csr<T>, r: usize, width: usize) -> Spc5Matri
                 }
                 masks.push(mask);
             }
+            // Close the block: record where the next block's values start.
+            block_valptr.push(vals.len() as u32);
         }
         block_rowptr.push(block_colidx.len() as u32);
     }
@@ -72,6 +75,7 @@ pub fn csr_to_spc5<T: Scalar>(csr: &Csr<T>, r: usize, width: usize) -> Spc5Matri
         block_rowptr,
         block_colidx,
         masks,
+        block_valptr,
         vals,
     };
     debug_assert_eq!(out.nnz(), csr.nnz());
@@ -81,10 +85,10 @@ pub fn csr_to_spc5<T: Scalar>(csr: &Csr<T>, r: usize, width: usize) -> Spc5Matri
 /// Convert back to CSR (exact inverse — SPC5 stores no extra zeros).
 pub fn spc5_to_csr<T: Scalar>(m: &Spc5Matrix<T>) -> Csr<T> {
     let mut coo = Coo::with_capacity(m.nrows, m.ncols, m.nnz());
-    let mut idx_val = 0usize;
     for p in 0..m.npanels() {
         for b in m.panel_blocks(p) {
             let col = m.block_colidx[b] as usize;
+            let mut idx_val = m.block_valptr[b] as usize;
             for j in 0..m.r {
                 let row = p * m.r + j;
                 let mask = m.masks[b * m.r + j];
@@ -133,6 +137,7 @@ mod tests {
         assert_eq!(m.block_colidx, vec![0, 9, 3, 0]);
         assert_eq!(m.masks, vec![0b0101, 0b0001, 0b0001, 0b1111]);
         assert_eq!(m.block_rowptr, vec![0, 2, 3, 3, 4]);
+        assert_eq!(m.block_valptr, vec![0, 2, 3, 4, 8]);
         // β(1,*) leaves the CSR value order unchanged (paper §5).
         assert_eq!(m.vals, sample_csr().vals);
     }
@@ -147,6 +152,7 @@ mod tests {
         // Panel 1 (rows 2,3): block@0: row2 0, row3 0b1111.
         assert_eq!(m.block_colidx, vec![0, 9, 0]);
         assert_eq!(m.masks, vec![0b0101, 0b1000, 0b0001, 0, 0, 0b1111]);
+        assert_eq!(m.block_valptr, vec![0, 3, 4, 8]);
         // Values reordered row-major within blocks:
         assert_eq!(m.vals, vec![1.0, 2.0, 4.0, 3.0, 5.0, 6.0, 7.0, 8.0]);
     }

@@ -72,6 +72,14 @@ pub struct Spc5Matrix<T: Scalar> {
     /// (see [`Spc5Matrix::mask_bytes`]) is width/8 bytes per mask, matching
     /// the paper (1 byte for f64, 2 for f32 at width = VS).
     pub masks: Vec<u32>,
+    /// Per-block offset into `vals` (length = nblocks + 1): block `b` owns
+    /// `vals[block_valptr[b]..block_valptr[b+1]]`. Precomputed by the
+    /// converter so kernels need no loop-carried value cursor — any block
+    /// (and therefore any panel) is an independently executable unit, which
+    /// is what lets the partitioner split one converted matrix across
+    /// threads and the plan layer mix block heights. Auxiliary index, not
+    /// part of the paper's §2.4 storage accounting ([`Spc5Matrix::bytes`]).
+    pub block_valptr: Vec<u32>,
     /// Packed non-zero values (no zero padding).
     pub vals: Vec<T>,
 }
@@ -119,17 +127,33 @@ impl<T: Scalar> Spc5Matrix<T> {
         self.block_rowptr[p] as usize..self.block_rowptr[p + 1] as usize
     }
 
+    /// Packed values of block `b` as a range into `vals`.
+    pub fn block_vals(&self, b: usize) -> std::ops::Range<usize> {
+        self.block_valptr[b] as usize..self.block_valptr[b + 1] as usize
+    }
+
+    /// Non-zeros of panel `p` — O(1) via the per-block value offsets, which
+    /// is what makes nnz-balanced splitting of an *already converted* matrix
+    /// cheap (see [`crate::parallel::balance_panels`]).
+    pub fn panel_nnz(&self, p: usize) -> usize {
+        let b0 = self.block_rowptr[p] as usize;
+        let b1 = self.block_rowptr[p + 1] as usize;
+        (self.block_valptr[b1] - self.block_valptr[b0]) as usize
+    }
+
     /// Scalar reference SpMV (`y = A·x`), the blue lines of Algorithm 1.
     /// This is also the conversion oracle for the vectorized kernels.
     pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        let mut idx_val = 0usize;
+        // One accumulator buffer per call, not per panel (§Perf).
+        let mut sums = vec![T::zero(); self.r];
         for p in 0..self.npanels() {
             let row0 = p * self.r;
-            let mut sums = vec![T::zero(); self.r];
+            sums.fill(T::zero());
             for b in self.panel_blocks(p) {
                 let col = self.block_colidx[b] as usize;
+                let mut idx_val = self.block_valptr[b] as usize;
                 for j in 0..self.r {
                     let mask = self.masks[b * self.r + j];
                     let mut k = 0usize;
@@ -141,6 +165,7 @@ impl<T: Scalar> Spc5Matrix<T> {
                         k += 1;
                     }
                 }
+                debug_assert_eq!(idx_val, self.block_vals(b).end);
             }
             for j in 0..self.r {
                 if row0 + j < self.nrows {
@@ -148,7 +173,6 @@ impl<T: Scalar> Spc5Matrix<T> {
                 }
             }
         }
-        debug_assert_eq!(idx_val, self.nnz());
     }
 
     /// Validate the structural invariants; used by property tests.
@@ -169,6 +193,14 @@ impl<T: Scalar> Spc5Matrix<T> {
         }
         if self.masks.len() != self.nblocks() * self.r {
             return Err("masks length".into());
+        }
+        if self.block_valptr.len() != self.nblocks() + 1 {
+            return Err("block_valptr length".into());
+        }
+        if self.block_valptr[0] != 0
+            || *self.block_valptr.last().unwrap() as usize != self.nnz()
+        {
+            return Err("block_valptr endpoints".into());
         }
         let mut nnz = 0usize;
         for p in 0..self.npanels() {
@@ -213,6 +245,14 @@ impl<T: Scalar> Spc5Matrix<T> {
                 if block_nnz == 0 {
                     return Err(format!("empty block in panel {p}"));
                 }
+                // The per-block value offset must equal the mask-popcount
+                // prefix — the invariant the cursor-free kernels rely on.
+                if self.block_valptr[b] as usize != nnz {
+                    return Err(format!(
+                        "block_valptr[{b}] = {} != prefix nnz {nnz}",
+                        self.block_valptr[b]
+                    ));
+                }
                 nnz += block_nnz;
             }
         }
@@ -239,6 +279,7 @@ mod tests {
             block_rowptr: vec![0, 1, 2],
             block_colidx: vec![0, 5],
             masks: vec![0b0101, 0b0111],
+            block_valptr: vec![0, 2, 5],
             vals: vec![1.0, 2.0, 3.0, 4.0, 5.0],
         }
     }
@@ -288,6 +329,23 @@ mod tests {
         let mut m = tiny();
         m.block_colidx[1] = 7; // mask bit 2 would hit col 9 == ncols
         assert!(m.check().is_err());
+
+        let mut m = tiny();
+        m.block_valptr[1] = 3; // desynced value offset
+        assert!(m.check().is_err());
+
+        let mut m = tiny();
+        m.block_valptr.pop(); // wrong length
+        assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn block_vals_and_panel_nnz() {
+        let m = tiny();
+        assert_eq!(m.block_vals(0), 0..2);
+        assert_eq!(m.block_vals(1), 2..5);
+        assert_eq!(m.panel_nnz(0), 2);
+        assert_eq!(m.panel_nnz(1), 3);
     }
 
     #[test]

@@ -7,10 +7,17 @@
 //! so the worst case costs CSR + one mask per block-row, and the best case
 //! saves one column index per extra value in a block.
 
+//!
+//! [`plan`] layers an execution compiler on top: per-row-chunk β(r,VS)
+//! selection driven by the cycle model, emitting a heterogeneous-`r`
+//! [`PlannedMatrix`] the native kernels execute directly.
+
 pub mod convert;
 pub mod format;
+pub mod plan;
 pub mod stats;
 
 pub use convert::{csr_to_spc5, spc5_to_csr};
 pub use format::{BlockRows, Spc5Matrix};
+pub use plan::{plan_auto, PlanConfig, PlanScoring, PlannedChunk, PlannedMatrix, PLAN_ALIGN};
 pub use stats::FormatStats;

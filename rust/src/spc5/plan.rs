@@ -1,0 +1,457 @@
+//! The execution-plan layer: compile a CSR matrix into a directly-executable
+//! heterogeneous-`r` SPC5 plan.
+//!
+//! The paper's central §4.3 observation is that the best β(r,VS) kernel
+//! varies per matrix and is predicted by block filling; its §5 future work
+//! asks for *heterogeneous* blocking. The predecessor paper (Bramas & Kus,
+//! arXiv:1801.01134) selects the best kernel per matrix; Alappat et al.
+//! (arXiv:2103.03013) shows a cycle model can drive that selection instead
+//! of exhaustive trial. This module applies both ideas at *row-chunk*
+//! granularity: split the matrix into aligned row chunks, convert each
+//! chunk's β(r,VS) candidates, score them with the
+//! [`crate::perfmodel::estimate`] cycle model (or a quick measured probe),
+//! and emit a [`PlannedMatrix`] whose chunks run back-to-back through the
+//! monomorphized native kernels. Because every chunk is an independent
+//! [`Spc5Matrix`] with its own `block_valptr`, execution needs no cross-chunk
+//! state and parallel runtimes can split work at any chunk boundary.
+//!
+//! ```
+//! use spc5::matrix::gen;
+//! use spc5::spc5::{PlanConfig, PlannedMatrix};
+//!
+//! let csr = gen::random_uniform::<f64>(64, 6.0, 3);
+//! let plan = PlannedMatrix::build(&csr, &PlanConfig::default());
+//! plan.check().expect("plan invariants");
+//! assert_eq!(plan.nnz(), csr.nnz());
+//!
+//! let x = vec![1.0; 64];
+//! let mut y_plan = vec![0.0; 64];
+//! let mut y_csr = vec![0.0; 64];
+//! plan.spmv(&x, &mut y_plan);
+//! csr.spmv(&x, &mut y_csr);
+//! spc5::scalar::assert_allclose(&y_plan, &y_csr, 1e-12, 1e-12);
+//! ```
+
+use crate::matrix::Csr;
+use crate::perfmodel::estimate::MachineSink;
+use crate::perfmodel::machine::{cascade_lake, Machine};
+use crate::scalar::Scalar;
+use crate::simd::trace::{CostSink, Op};
+use crate::util::timing::Timer;
+
+use super::convert::csr_to_spc5;
+use super::format::Spc5Matrix;
+
+/// Chunk boundaries are aligned to this (the lcm of the candidate block
+/// heights), so every candidate `r` tiles a chunk without straddling it.
+pub const PLAN_ALIGN: usize = 8;
+
+/// How plan candidates are scored (lower score wins; ties go to the earlier
+/// candidate, so scoring is deterministic for a deterministic scorer).
+#[derive(Clone, Debug)]
+pub enum PlanScoring {
+    /// Price the chunk's block/mask/value event counts with a machine's
+    /// cycle model ([`MachineSink`]): instruction issue + reduction-tail
+    /// latency + a bandwidth term for the matrix stream. Deterministic —
+    /// same matrix and machine always produce the same plan.
+    CycleModel(Machine),
+    /// Refine by measurement: time the candidate's actual native kernel on
+    /// the chunk (`reps` repetitions, best-of). Most faithful, but not
+    /// deterministic across runs; use for offline tuning.
+    Probe { reps: usize },
+}
+
+/// Configuration of [`PlannedMatrix::build`].
+#[derive(Clone, Debug)]
+pub struct PlanConfig {
+    /// Rows per chunk; rounded up to a multiple of [`PLAN_ALIGN`].
+    pub chunk_rows: usize,
+    /// Candidate block heights, tried in order (each must pass
+    /// [`Spc5Matrix::check`]'s `r ∈ {1,2,4,8}`).
+    pub candidates: Vec<usize>,
+    /// Block width; `None` means the scalar type's `VS` (8 for f64, 16 for
+    /// f32 — the paper's β(r,VS)).
+    pub width: Option<usize>,
+    pub scoring: PlanScoring,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        Self {
+            chunk_rows: 256,
+            candidates: vec![1, 2, 4, 8],
+            width: None,
+            scoring: PlanScoring::CycleModel(cascade_lake()),
+        }
+    }
+}
+
+impl PlanConfig {
+    /// The effective (aligned) chunk height.
+    pub fn aligned_chunk_rows(&self) -> usize {
+        self.chunk_rows.max(1).div_ceil(PLAN_ALIGN) * PLAN_ALIGN
+    }
+}
+
+/// One row chunk of a plan: rows `row0 .. row0 + m.nrows` of the original
+/// matrix, stored as an independent SPC5 matrix with the chunk's own best
+/// block height.
+pub struct PlannedChunk<T: Scalar> {
+    pub row0: usize,
+    pub m: Spc5Matrix<T>,
+    /// The winning candidate's predicted cost (model units or seconds,
+    /// depending on [`PlanScoring`]). Kept as selection evidence.
+    pub score: f64,
+    /// The winner's block filling ([`Spc5Matrix::filling`]) — the paper's
+    /// §4.3 performance predictor, kept alongside the score as evidence.
+    pub filling: f64,
+}
+
+/// A compiled execution plan: heterogeneous-`r` chunks executed
+/// back-to-back. This is the §5 "blocks of different sizes" hybrid at chunk
+/// granularity, driven by the cost model instead of exhaustive per-matrix
+/// trial.
+pub struct PlannedMatrix<T: Scalar> {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub chunks: Vec<PlannedChunk<T>>,
+}
+
+impl<T: Scalar> PlannedMatrix<T> {
+    /// Compile `csr` into a plan under `cfg`.
+    pub fn build(csr: &Csr<T>, cfg: &PlanConfig) -> Self {
+        assert!(!cfg.candidates.is_empty(), "need at least one candidate r");
+        let width = cfg.width.unwrap_or(T::VS);
+        let chunk_rows = cfg.aligned_chunk_rows();
+        let mut chunks = Vec::with_capacity(csr.nrows.div_ceil(chunk_rows));
+        let mut row0 = 0usize;
+        while row0 < csr.nrows {
+            let end = (row0 + chunk_rows).min(csr.nrows);
+            let slice = csr.row_slice(row0, end);
+            let mut best: Option<(Spc5Matrix<T>, f64)> = None;
+            for &r in &cfg.candidates {
+                let cand = csr_to_spc5(&slice, r, width);
+                let score = score_chunk(&cfg.scoring, &cand, slice.ncols);
+                if best.as_ref().map_or(true, |(_, s)| score < *s) {
+                    best = Some((cand, score));
+                }
+            }
+            let (m, score) = best.unwrap();
+            let filling = m.filling();
+            chunks.push(PlannedChunk { row0, m, score, filling });
+            row0 = end;
+        }
+        Self { nrows: csr.nrows, ncols: csr.ncols, chunks }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.chunks.iter().map(|c| c.m.nnz()).sum()
+    }
+
+    pub fn nchunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// The chosen block height per chunk — the plan's shape, used by tests
+    /// and the CLI report.
+    pub fn chunk_rs(&self) -> Vec<usize> {
+        self.chunks.iter().map(|c| c.m.r).collect()
+    }
+
+    /// Validate plan invariants: chunks tile `[0, nrows)` contiguously, all
+    /// share `ncols`, and each chunk passes the format check.
+    pub fn check(&self) -> Result<(), String> {
+        let mut row = 0usize;
+        for (i, c) in self.chunks.iter().enumerate() {
+            if c.row0 != row {
+                return Err(format!("chunk {i} starts at {} expected {row}", c.row0));
+            }
+            if c.m.ncols != self.ncols {
+                return Err(format!("chunk {i} ncols {}", c.m.ncols));
+            }
+            c.m.check().map_err(|e| format!("chunk {i}: {e}"))?;
+            row += c.m.nrows;
+        }
+        if row != self.nrows {
+            return Err(format!("chunks cover {row} of {} rows", self.nrows));
+        }
+        Ok(())
+    }
+
+    /// `y = A·x` through the best available kernel per chunk (real AVX-512
+    /// when the host supports it, portable mask-walk otherwise). This is the
+    /// production path the coordinator and solvers run.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        spmv_chunks(&self.chunks, x, y);
+    }
+
+    /// `y = A·x` through the portable monomorphized kernels only — the
+    /// apples-to-apples comparator for `benches/native_hotpath.rs`, where
+    /// fixed-`r` baselines also run portably.
+    pub fn spmv_portable(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for c in &self.chunks {
+            let ys = &mut y[c.row0..c.row0 + c.m.nrows];
+            crate::kernels::native::spmv_spc5(&c.m, x, ys);
+        }
+    }
+
+    /// Fused multi-RHS `ys[v] = A·xs[v]`: each chunk's matrix stream is
+    /// decoded once for all `k` right-hand sides.
+    pub fn spmv_multi_slices(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.ncols);
+            assert_eq!(y.len(), self.nrows);
+        }
+        for c in &self.chunks {
+            let mut sub: Vec<&mut [T]> =
+                ys.iter_mut().map(|y| &mut y[c.row0..c.row0 + c.m.nrows]).collect();
+            crate::kernels::native::spmv_spc5_multi_slices(&c.m, xs, &mut sub);
+        }
+    }
+}
+
+/// Convenience: compile with the default configuration (β(r,VS) candidates,
+/// Cascade Lake cycle model).
+pub fn plan_auto<T: Scalar>(csr: &Csr<T>) -> PlannedMatrix<T> {
+    PlannedMatrix::build(csr, &PlanConfig::default())
+}
+
+/// Execute a contiguous run of planned chunks into `y`, where `y[0]` is the
+/// first chunk's `row0`. On AVX-512 hosts the x vector is padded **once**
+/// and shared by every chunk's kernel call (padding per chunk would copy x
+/// `nchunks` times per SpMV — rivaling the matrix traffic itself); elsewhere
+/// the portable monomorphized kernels run directly. Used by
+/// [`PlannedMatrix::spmv`] and by each [`crate::parallel::ParallelPlanned`]
+/// worker thread on its chunk range.
+pub fn spmv_chunks<T: Scalar>(chunks: &[PlannedChunk<T>], x: &[T], y: &mut [T]) {
+    use std::any::TypeId;
+    let Some(first) = chunks.first() else { return };
+    let base = first.row0;
+    if crate::kernels::native_avx512::available() {
+        if TypeId::of::<T>() == TypeId::of::<f64>() && chunks.iter().all(|c| c.m.width == 8) {
+            // SAFETY: T == f64 (checked above); identity casts.
+            let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+            let y64 =
+                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
+            let padded = crate::kernels::native_avx512::PaddedX::new(x64, 8);
+            for c in chunks {
+                let m64 =
+                    unsafe { &*(&c.m as *const Spc5Matrix<T> as *const Spc5Matrix<f64>) };
+                let lo = c.row0 - base;
+                let ok = crate::kernels::native_avx512::spmv_spc5_f64(
+                    m64,
+                    &padded,
+                    &mut y64[lo..lo + c.m.nrows],
+                );
+                debug_assert!(ok);
+            }
+            return;
+        }
+        if TypeId::of::<T>() == TypeId::of::<f32>() && chunks.iter().all(|c| c.m.width == 16) {
+            // SAFETY: T == f32 (checked above); identity casts.
+            let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+            let y32 =
+                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
+            let padded = crate::kernels::native_avx512::PaddedX::new(x32, 16);
+            for c in chunks {
+                let m32 =
+                    unsafe { &*(&c.m as *const Spc5Matrix<T> as *const Spc5Matrix<f32>) };
+                let lo = c.row0 - base;
+                let ok = crate::kernels::native_avx512::spmv_spc5_f32(
+                    m32,
+                    &padded,
+                    &mut y32[lo..lo + c.m.nrows],
+                );
+                debug_assert!(ok);
+            }
+            return;
+        }
+    }
+    for c in chunks {
+        let lo = c.row0 - base;
+        crate::kernels::native::spmv_spc5(&c.m, x, &mut y[lo..lo + c.m.nrows]);
+    }
+}
+
+fn score_chunk<T: Scalar>(scoring: &PlanScoring, cand: &Spc5Matrix<T>, ncols: usize) -> f64 {
+    match scoring {
+        PlanScoring::CycleModel(machine) => chunk_cycles(machine, cand),
+        PlanScoring::Probe { reps } => probe_seconds(cand, ncols, *reps),
+    }
+}
+
+/// Price one chunk candidate with the machine cycle model. Event counts
+/// mirror the structure of the native/AVX-512 kernels — per block: a column
+/// index load and a full-width x load; per block-row: mask load,
+/// expand-load, FMA; per panel: `r` horizontal reductions on the serial
+/// tail plus the y stores. The memory term charges the matrix stream
+/// (values + column indices + masks) and the y write-back. Issue, tail and
+/// bandwidth cycles are summed (an upper bound, not a max-roofline): only
+/// the candidates' *ranking* matters, and the additive form keeps compute
+/// differences visible on bandwidth-bound chunks.
+fn chunk_cycles<T: Scalar>(machine: &Machine, m: &Spc5Matrix<T>) -> f64 {
+    let nblocks = m.nblocks() as u64;
+    let block_rows = nblocks * m.r as u64;
+    let reductions = (m.npanels() * m.r) as u64;
+    let nnz = m.nnz() as u64;
+    let mut sink = MachineSink::new(machine);
+    sink.op(Op::SLoad, nblocks); // block column index
+    sink.op(Op::VLoad, nblocks); // x window
+    sink.op(Op::SInt, nblocks); // block-loop control
+    sink.op(Op::SLoad, block_rows); // masks
+    sink.op(Op::VExpandLoad, block_rows);
+    sink.op(Op::VFma, block_rows);
+    sink.op(Op::VReduceNative, reductions);
+    sink.op(Op::SStore, reductions);
+    sink.hier.mem_bytes = (nnz as usize * T::BYTES
+        + m.nblocks() * 4
+        + m.nblocks() * m.r * m.mask_bytes()
+        + m.nrows * T::BYTES) as u64;
+    let rep = sink.report(2 * nnz);
+    rep.issue_cycles + rep.tail_cycles + rep.stall_cycles + rep.bw_cycles
+}
+
+/// Measure one chunk candidate: best-of-`reps` wall-clock of the portable
+/// native kernel on the chunk.
+fn probe_seconds<T: Scalar>(m: &Spc5Matrix<T>, ncols: usize, reps: usize) -> f64 {
+    let x = vec![T::one(); ncols];
+    let mut y = vec![T::zero(); m.nrows];
+    crate::kernels::native::spmv_spc5(m, &x, &mut y); // warm-up
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = Timer::start();
+        crate::kernels::native::spmv_spc5(m, &x, &mut y);
+        best = best.min(t.elapsed_secs());
+    }
+    std::hint::black_box(&y);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Coo};
+
+    fn oracle(csr: &Csr<f64>, x: &[f64]) -> Vec<f64> {
+        let mut want = vec![0.0; csr.nrows];
+        csr.spmv(x, &mut want);
+        want
+    }
+
+    #[test]
+    fn plan_covers_and_matches_reference() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 123, // not a multiple of any chunk or r
+            ncols: 140,
+            nnz_per_row: 7.0,
+            run_len: 3.0,
+            row_corr: 0.5,
+            skew: 0.4,
+            bandwidth: None,
+        }
+        .generate(3);
+        let x: Vec<f64> = (0..140).map(|i| (i as f64 * 0.21).sin() + 1.0).collect();
+        let want = oracle(&csr, &x);
+        for chunk_rows in [8usize, 16, 64, 1024] {
+            let cfg = PlanConfig { chunk_rows, ..PlanConfig::default() };
+            let plan = PlannedMatrix::build(&csr, &cfg);
+            plan.check().unwrap();
+            assert_eq!(plan.nnz(), csr.nnz());
+            let mut y = vec![0.0; 123];
+            plan.spmv(&x, &mut y);
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            let mut y = vec![0.0; 123];
+            plan.spmv_portable(&x, &mut y);
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+        }
+    }
+
+    #[test]
+    fn plan_multi_matches_singles() {
+        let csr: Csr<f64> = gen::random_uniform(90, 5.0, 7);
+        let plan = plan_auto(&csr);
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|v| (0..90).map(|i| ((i * (v + 2)) % 9) as f64 * 0.3 - 1.0).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 90]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+        plan.spmv_multi_slices(&x_refs, &mut y_refs);
+        for (x, y) in xs.iter().zip(&ys) {
+            crate::scalar::assert_allclose(y, &oracle(&csr, x), 1e-12, 1e-12);
+        }
+        // Zero RHS: no-op.
+        plan.spmv_multi_slices(&[], &mut []);
+    }
+
+    #[test]
+    fn empty_row_bands_plan_and_execute() {
+        // Rows 16..48 are completely empty: those chunks still plan (any
+        // candidate, zero blocks) and write zeros.
+        let mut coo = Coo::<f64>::new(64, 64);
+        for r in (0..16).chain(48..64) {
+            coo.push(r, (r * 7) % 64, 1.0 + r as f64);
+        }
+        let csr = Csr::from_coo(coo);
+        let cfg = PlanConfig { chunk_rows: 16, ..PlanConfig::default() };
+        let plan = PlannedMatrix::build(&csr, &cfg);
+        plan.check().unwrap();
+        assert_eq!(plan.nchunks(), 4);
+        let x = vec![1.0; 64];
+        let mut y = vec![9.0; 64];
+        plan.spmv(&x, &mut y);
+        crate::scalar::assert_allclose(&y, &oracle(&csr, &x), 0.0, 0.0);
+    }
+
+    #[test]
+    fn probe_scoring_builds_valid_plan() {
+        let csr: Csr<f64> = gen::random_uniform(64, 6.0, 5);
+        let cfg = PlanConfig {
+            chunk_rows: 32,
+            scoring: PlanScoring::Probe { reps: 2 },
+            ..PlanConfig::default()
+        };
+        let plan = PlannedMatrix::build(&csr, &cfg);
+        plan.check().unwrap();
+        let x = vec![0.5; 64];
+        let mut y = vec![0.0; 64];
+        plan.spmv(&x, &mut y);
+        crate::scalar::assert_allclose(&y, &oracle(&csr, &x), 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn cycle_model_prefers_tall_blocks_on_dense() {
+        // Fully dense chunk: β(8,VS) shares one column index + x window
+        // across 8 rows — the model must see that.
+        let dense: Csr<f64> = gen::dense(64, 1);
+        let machine = cascade_lake();
+        let c1 = chunk_cycles(&machine, &csr_to_spc5(&dense, 1, 8));
+        let c8 = chunk_cycles(&machine, &csr_to_spc5(&dense, 8, 8));
+        assert!(c8 < c1, "dense: beta(8) {c8} should beat beta(1) {c1}");
+        // Scattered singletons: β(1,VS) avoids 8x empty mask rows.
+        let mut coo = Coo::<f64>::new(64, 512);
+        for r in 0..64 {
+            coo.push(r, (r * 67) % 512, 1.0);
+        }
+        let scat = Csr::from_coo(coo);
+        let s1 = chunk_cycles(&machine, &csr_to_spc5(&scat, 1, 8));
+        let s8 = chunk_cycles(&machine, &csr_to_spc5(&scat, 8, 8));
+        assert!(s1 < s8, "scattered: beta(1) {s1} should beat beta(8) {s8}");
+    }
+
+    #[test]
+    fn config_alignment() {
+        let cfg = PlanConfig { chunk_rows: 13, ..PlanConfig::default() };
+        assert_eq!(cfg.aligned_chunk_rows(), 16);
+        let cfg = PlanConfig { chunk_rows: 0, ..PlanConfig::default() };
+        assert_eq!(cfg.aligned_chunk_rows(), 8);
+    }
+}

@@ -1,0 +1,224 @@
+//! Plan-vs-oracle property suite (ISSUE 3 acceptance): `PlannedMatrix`
+//! execution must equal the `spmv_ref`/CSR oracle across mixed-`r` chunk
+//! boundaries, for all r ∈ {1,2,4,8}, widths {8,16}, f32 and f64, including
+//! empty chunks and nrows not divisible by any chunk or block height — plus
+//! plan determinism (same matrix + machine model → same plan).
+
+use spc5::matrix::{gen, Coo, Csr};
+use spc5::scalar::{assert_allclose, Scalar};
+use spc5::spc5::{csr_to_spc5, PlanConfig, PlanScoring, PlannedMatrix};
+use spc5::util::minitest::{property, Gen};
+
+fn random_csr<T: Scalar>(g: &mut Gen) -> Csr<T> {
+    let nrows = g.usize_in(1..120);
+    let ncols = g.usize_in(4..150);
+    gen::Structured {
+        nrows,
+        ncols,
+        nnz_per_row: (1.0 + g.f64_unit() * 7.0).min(ncols as f64),
+        run_len: 1.0 + g.f64_unit() * 6.0,
+        row_corr: g.f64_unit(),
+        skew: g.f64_unit() * 0.8,
+        bandwidth: None,
+    }
+    .generate(g.u64())
+}
+
+/// Core oracle check for one (matrix, config): plan covers the matrix,
+/// passes `check()`, and all three execution paths match the CSR product.
+fn assert_plan_matches<T: Scalar>(csr: &Csr<T>, cfg: &PlanConfig, rtol: f64, atol: f64) {
+    let plan = PlannedMatrix::build(csr, cfg);
+    plan.check().expect("plan invariants");
+    assert_eq!(plan.nnz(), csr.nnz());
+    let x: Vec<T> = (0..csr.ncols)
+        .map(|i| T::from_f64(((i % 13) as f64) * 0.25 - 1.5))
+        .collect();
+    let mut want = vec![T::zero(); csr.nrows];
+    csr.spmv(&x, &mut want);
+
+    let mut y = vec![T::zero(); csr.nrows];
+    plan.spmv(&x, &mut y);
+    assert_allclose(&y, &want, rtol, atol);
+
+    let mut y = vec![T::zero(); csr.nrows];
+    plan.spmv_portable(&x, &mut y);
+    assert_allclose(&y, &want, rtol, atol);
+
+    // Fused multi-RHS across the same chunk boundaries.
+    let xs: Vec<Vec<T>> = (0..3)
+        .map(|v| {
+            (0..csr.ncols)
+                .map(|i| T::from_f64(((i * (v + 2)) % 7) as f64 * 0.4 - 1.0))
+                .collect()
+        })
+        .collect();
+    let x_refs: Vec<&[T]> = xs.iter().map(|s| s.as_slice()).collect();
+    let mut ys: Vec<Vec<T>> = (0..3).map(|_| vec![T::zero(); csr.nrows]).collect();
+    let mut y_refs: Vec<&mut [T]> = ys.iter_mut().map(|s| s.as_mut_slice()).collect();
+    plan.spmv_multi_slices(&x_refs, &mut y_refs);
+    for (xv, yv) in xs.iter().zip(&ys) {
+        let mut w = vec![T::zero(); csr.nrows];
+        csr.spmv(xv, &mut w);
+        assert_allclose(yv, &w, rtol, atol);
+    }
+}
+
+#[test]
+fn prop_plan_equals_oracle_f64() {
+    property("planned execution == csr oracle (f64, width 8)", |g| {
+        let csr: Csr<f64> = random_csr(g);
+        let cfg = PlanConfig {
+            chunk_rows: *g.pick(&[8usize, 16, 40, 64, 512]),
+            width: Some(8),
+            ..PlanConfig::default()
+        };
+        assert_plan_matches(&csr, &cfg, 1e-11, 1e-12);
+    });
+}
+
+#[test]
+fn prop_plan_equals_oracle_f32() {
+    property("planned execution == csr oracle (f32, width 16)", |g| {
+        let csr: Csr<f32> = random_csr(g);
+        let cfg = PlanConfig {
+            chunk_rows: *g.pick(&[8usize, 24, 64]),
+            width: Some(16),
+            ..PlanConfig::default()
+        };
+        assert_plan_matches(&csr, &cfg, 1e-4, 1e-4);
+    });
+}
+
+#[test]
+fn single_candidate_plans_all_r_and_widths() {
+    // Pins every (r, width, precision) combination of the acceptance
+    // criterion through forced single-candidate plans, so each specialized
+    // body executes against the oracle at chunk granularity.
+    let csr64: Csr<f64> = gen::Structured {
+        nrows: 101, // not divisible by 8, 16 or any r
+        ncols: 90,
+        nnz_per_row: 6.0,
+        run_len: 3.0,
+        row_corr: 0.6,
+        skew: 0.5,
+        bandwidth: None,
+    }
+    .generate(41);
+    let csr32: Csr<f32> = gen::Structured {
+        nrows: 77,
+        ncols: 84,
+        nnz_per_row: 5.0,
+        run_len: 2.0,
+        row_corr: 0.4,
+        skew: 0.3,
+        bandwidth: None,
+    }
+    .generate(42);
+    for r in [1usize, 2, 4, 8] {
+        for width in [8usize, 16] {
+            let cfg = PlanConfig {
+                chunk_rows: 24,
+                candidates: vec![r],
+                width: Some(width),
+                ..PlanConfig::default()
+            };
+            assert_plan_matches(&csr64, &cfg, 1e-11, 1e-12);
+            assert_plan_matches(&csr32, &cfg, 1e-4, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn mixed_structure_produces_heterogeneous_plan() {
+    // Top half: a dense column band shared by all rows (full blocks at any
+    // r -> tall blocks amortize the per-block work 8x and must win).
+    // Bottom half: scattered singletons (beta(1,VS) wins).
+    let n = 128usize;
+    let mut coo = Coo::<f64>::new(n, 256);
+    for r in 0..n / 2 {
+        for c in 0..32 {
+            coo.push(r, c, 1.0 + (r + c) as f64 * 0.01);
+        }
+    }
+    for r in n / 2..n {
+        coo.push(r, (r * 67) % 256, 2.0);
+    }
+    let csr = Csr::from_coo(coo);
+    let cfg = PlanConfig { chunk_rows: 64, width: Some(8), ..PlanConfig::default() };
+    let plan = PlannedMatrix::build(&csr, &cfg);
+    plan.check().unwrap();
+    let rs = plan.chunk_rs();
+    assert_eq!(rs.len(), 2);
+    assert!(rs[0] >= 4, "dense chunk picked beta({},VS)", rs[0]);
+    assert_eq!(rs[1], 1, "scattered chunk picked beta({},VS)", rs[1]);
+    // And the heterogeneous plan still matches the oracle exactly.
+    assert_plan_matches(&csr, &cfg, 1e-12, 1e-12);
+}
+
+#[test]
+fn plans_are_deterministic() {
+    // Same matrix + same machine model -> identical plan (shape, scores,
+    // chunk contents). The cycle-model scorer has no randomness; ties break
+    // to the earlier candidate.
+    let csr: Csr<f64> = gen::Structured {
+        nrows: 333,
+        ncols: 333,
+        nnz_per_row: 9.0,
+        run_len: 4.0,
+        row_corr: 0.7,
+        skew: 0.6,
+        bandwidth: None,
+    }
+    .generate(77);
+    let cfg = PlanConfig { chunk_rows: 48, ..PlanConfig::default() };
+    let a = PlannedMatrix::build(&csr, &cfg);
+    let b = PlannedMatrix::build(&csr, &cfg);
+    assert_eq!(a.chunk_rs(), b.chunk_rs());
+    assert_eq!(a.nchunks(), b.nchunks());
+    for (ca, cb) in a.chunks.iter().zip(&b.chunks) {
+        assert_eq!(ca.row0, cb.row0);
+        assert_eq!(ca.score.to_bits(), cb.score.to_bits(), "scores must be bitwise equal");
+        assert_eq!(ca.m.block_colidx, cb.m.block_colidx);
+        assert_eq!(ca.m.block_valptr, cb.m.block_valptr);
+        assert_eq!(ca.m.masks, cb.m.masks);
+    }
+}
+
+#[test]
+fn probe_scored_plan_matches_oracle() {
+    // Probe scoring measures, so the chosen rs may vary between runs — but
+    // whatever plan comes out must still compute the exact product.
+    let csr: Csr<f64> = gen::random_uniform(150, 6.0, 3);
+    let cfg = PlanConfig {
+        chunk_rows: 40,
+        scoring: PlanScoring::Probe { reps: 2 },
+        ..PlanConfig::default()
+    };
+    assert_plan_matches(&csr, &cfg, 1e-11, 1e-12);
+}
+
+#[test]
+fn plan_agrees_with_fixed_conversions() {
+    // A single-chunk plan with all candidates equals the best fixed-r
+    // conversion's spmv_ref bitwise (same kernels, same order).
+    let csr: Csr<f64> = gen::Structured {
+        nrows: 64,
+        ncols: 64,
+        nnz_per_row: 10.0,
+        run_len: 5.0,
+        row_corr: 0.8,
+        ..Default::default()
+    }
+    .generate(5);
+    let cfg = PlanConfig { chunk_rows: 4096, width: Some(8), ..PlanConfig::default() };
+    let plan = PlannedMatrix::build(&csr, &cfg);
+    assert_eq!(plan.nchunks(), 1);
+    let chosen_r = plan.chunk_rs()[0];
+    let fixed = csr_to_spc5(&csr, chosen_r, 8);
+    let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.3).sin()).collect();
+    let mut y_plan = vec![0.0; 64];
+    plan.spmv_portable(&x, &mut y_plan);
+    let mut y_fixed = vec![0.0; 64];
+    spc5::kernels::native::spmv_spc5(&fixed, &x, &mut y_fixed);
+    assert_eq!(y_plan, y_fixed, "same kernel, same order -> bitwise equal");
+}
