@@ -4,10 +4,13 @@
 //!
 //! Run: `cargo bench --bench native_hotpath`
 
+use std::sync::Arc;
+
 use spc5::bench::{table::fmt1, time_samples, TextTable};
 use spc5::kernels::{native, native_avx512};
 use spc5::matrix::{corpus_by_name, gen, Coo, Csr};
-use spc5::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix};
+use spc5::parallel::{balance_panels, panel_row_ranges, Partition, SharedSpc5, Team};
+use spc5::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 use spc5::util::json::Json;
 use spc5::util::timing::{gflops, spmv_flops};
 
@@ -223,11 +226,112 @@ fn main() {
         if mixed_ok { "OK" } else { "MISMATCH" }
     );
 
+    // ---- executor dispatch overhead: spawn-per-call vs persistent team.
+    // Same kernels, same panel partition; the only difference is whether
+    // each SpMV spawns scoped threads (the old model) or wakes the resident
+    // Team workers through the epoch barrier. The gap IS the per-call
+    // dispatch overhead the tentpole removes. ----
+    const EXEC_THREADS: usize = 8;
+    println!("\n== executor dispatch overhead: scoped spawn vs persistent team ({EXEC_THREADS} threads) ==\n");
+    let mut t3 = TextTable::new(&[
+        "matrix", "nnz", "iters", "scoped us/call", "team us/call", "spawn/team",
+    ]);
+    let sizes: [(&str, usize); 3] =
+        [("small", 40_000), ("medium", 400_000), ("large", 1_500_000)];
+    let iters_list = [1usize, 10, 1000];
+    let team = Arc::new(Team::exact(EXEC_THREADS));
+    let mut exec_json = Json::obj();
+    let mut never_slower = true;
+    let mut small_speedup_1000 = 0.0f64;
+    for (label, budget) in sizes {
+        let m: Csr<f64> = corpus_by_name("nd6k").unwrap().build(budget);
+        let s = csr_to_spc5(&m, 4, 8);
+        let parts = balance_panels(&s, EXEC_THREADS);
+        let shared = SharedSpc5::new(s.clone(), Arc::clone(&team));
+        let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+        let mut y = vec![0.0; m.nrows];
+        let mut scoped_us = Vec::new();
+        let mut team_us = Vec::new();
+        for &iters in &iters_list {
+            // Fewer outer samples for the long repeats.
+            let samples = if iters >= 1000 { 3 } else { 9 };
+            let mut ts = time_samples(1, samples, || {
+                for _ in 0..iters {
+                    scoped_spmv_panels(&s, &parts, &x, &mut y);
+                }
+                std::hint::black_box(&y);
+            });
+            let sc = ts.median() / iters as f64 * 1e6;
+            let mut tt = time_samples(1, samples, || {
+                for _ in 0..iters {
+                    shared.spmv(&x, &mut y);
+                }
+                std::hint::black_box(&y);
+            });
+            let tm = tt.median() / iters as f64 * 1e6;
+            never_slower &= tm <= sc * 1.05;
+            if label == "small" && iters == 1000 {
+                small_speedup_1000 = sc / tm;
+            }
+            t3.row(vec![
+                label.into(),
+                m.nnz().to_string(),
+                iters.to_string(),
+                format!("{sc:.1}"),
+                format!("{tm:.1}"),
+                format!("x{:.2}", sc / tm),
+            ]);
+            scoped_us.push(sc);
+            team_us.push(tm);
+        }
+        let mut o = Json::obj();
+        o.set("nnz", m.nnz())
+            .set("threads", EXEC_THREADS)
+            .set("iters", iters_list.iter().map(|&i| i as f64).collect::<Vec<_>>())
+            .set("scoped_us_per_call", scoped_us)
+            .set("team_us_per_call", team_us);
+        exec_json.set(label, o);
+    }
+    println!("{}", t3.render());
+    println!(
+        "check: persistent team never slower than scoped spawn -> {}",
+        if never_slower { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "check: team >=5x faster per call on small matrix at 1000 iters -> {} (x{:.1})",
+        if small_speedup_1000 >= 5.0 { "OK" } else { "MISMATCH" },
+        small_speedup_1000
+    );
+    json.set("exec_overhead", exec_json);
+
     json.set("plan_layer", plan_json);
     json.set("copy_bw_gbs", bw);
     std::fs::create_dir_all("target/bench-results").ok();
     std::fs::write("target/bench-results/native_hotpath.json", json.to_pretty()).ok();
     println!("json: target/bench-results/native_hotpath.json");
+}
+
+/// The dispatch model the persistent executor replaced: spawn scoped
+/// threads on every call, one per panel range, same kernels and partition
+/// as the team path — so the measured gap is pure dispatch overhead.
+fn scoped_spmv_panels(m: &Spc5Matrix<f64>, parts: &Partition, x: &[f64], y: &mut [f64]) {
+    let row_ranges = panel_row_ranges(m, parts).ranges;
+    let mut rest = &mut y[..];
+    let mut slices = Vec::new();
+    for rr in &row_ranges {
+        let (head, tail) = rest.split_at_mut(rr.len());
+        slices.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        for (pr, ys) in parts.ranges.iter().zip(slices) {
+            if pr.is_empty() {
+                continue;
+            }
+            let pr = pr.clone();
+            scope.spawn(move || native::spmv_spc5_panels(m, pr, x, ys));
+        }
+    });
 }
 
 /// Power-law row-degree matrix: a few very heavy rows, a long light tail —

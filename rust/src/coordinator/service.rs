@@ -4,6 +4,13 @@
 //! [`super::batch::Batcher`]; a dispatcher thread drains batches to the
 //! worker pool; each batch runs all its right-hand sides against the
 //! matrix's *selected* format back-to-back (matrix-traffic locality).
+//!
+//! The service owns one persistent [`Team`] executor (sized by the
+//! constructor's `threads`, default = `workers`; CLI `serve --threads`),
+//! shared across every request and batch: per-matrix lane partitions are
+//! computed once at registration, so the native execution of a request is
+//! one epoch-barrier wake of the resident workers — no thread spawn, no
+//! re-partitioning.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -14,6 +21,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::selector::{select_format, FormatChoice, Selection, SelectorModel};
 use crate::kernels::{native, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
 use crate::matrix::Csr;
+use crate::parallel::spmv::{panel_row_ranges, plan_assignments, spmv_spc5_panels_team};
+use crate::parallel::{balance_panels, balance_rows, Partition, SendPtr, Team};
 use crate::scalar::Scalar;
 use crate::simd::trace::{NullSink, SimCtx};
 use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
@@ -49,6 +58,40 @@ pub enum PlanMode {
     Off,
 }
 
+/// Cached executor state of one registered matrix: lane partitions for the
+/// service team (computed once at registration) and per-lane accumulator
+/// scratch for fused batches (allocated lazily, reused across batches).
+struct StoredExec<T: Scalar> {
+    /// CSR row ranges — the native fallback split (shared matrix, no
+    /// per-lane copies).
+    rows: Partition,
+    /// Panel ranges + matching row ranges of the SPC5 form, when present.
+    panels: Option<(Partition, Partition)>,
+    /// Chunk-index ranges + matching row ranges of the plan, when present.
+    chunks: Option<(Vec<std::ops::Range<usize>>, Partition)>,
+    /// Per-lane fused-batch accumulator scratch.
+    scratch: Vec<Mutex<Vec<T>>>,
+}
+
+impl<T: Scalar> StoredExec<T> {
+    fn build(
+        csr: &Csr<T>,
+        spc5: Option<&Spc5Matrix<T>>,
+        plan: Option<&PlannedMatrix<T>>,
+        lanes: usize,
+    ) -> Self {
+        let rows = balance_rows(csr, lanes, 1);
+        let panels = spc5.map(|m| {
+            let pp = balance_panels(m, lanes);
+            let rr = panel_row_ranges(m, &pp);
+            (pp, rr)
+        });
+        let chunks = plan.map(|p| plan_assignments(p, lanes));
+        let scratch = (0..lanes).map(|_| Mutex::new(Vec::new())).collect();
+        Self { rows, panels, chunks, scratch }
+    }
+}
+
 /// A registered matrix with its selected execution format.
 pub struct Stored<T: Scalar> {
     pub csr: Csr<T>,
@@ -57,18 +100,13 @@ pub struct Stored<T: Scalar> {
     /// SPC5-selected matrices only). Preferred over `spc5` when present.
     pub plan: Option<PlannedMatrix<T>>,
     pub selection: Selection,
+    exec: StoredExec<T>,
 }
 
 impl<T: Scalar> Stored<T> {
-    fn spmv(&self, backend: Backend, x: &[T], y: &mut [T]) {
+    fn spmv(&self, backend: Backend, team: &Team, x: &[T], y: &mut [T]) {
         match backend {
-            Backend::Native => match (&self.plan, &self.spc5, self.selection.choice) {
-                (Some(plan), _, _) => plan.spmv(x, y),
-                (None, Some(m), FormatChoice::Spc5 { .. }) => {
-                    crate::kernels::native_avx512::spmv_spc5_auto(m, x, y)
-                }
-                _ => native::spmv_csr(&self.csr, x, y),
-            },
+            Backend::Native => self.spmv_native(team, x, y),
             Backend::Simulated(isa) => {
                 let mut sink = NullSink;
                 let mut ctx = SimCtx::new(T::VS, &mut sink);
@@ -96,45 +134,159 @@ impl<T: Scalar> Stored<T> {
         }
     }
 
-    /// Fused multi-RHS execution of one batch: one matrix pass for all
-    /// right-hand sides on every backend that has an SPC5 form. Falls back
-    /// to per-request SpMV otherwise (CSR-selected matrix on the native
-    /// backend).
-    fn spmv_batch(&self, backend: Backend, xs: &[&[T]], ys: &mut [Vec<T>]) {
-        if let (Backend::Native, Some(plan)) = (backend, &self.plan) {
-            let mut refs: Vec<&mut [T]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
-            plan.spmv_multi_slices(xs, &mut refs);
+    /// Native single-RHS execution on the service team. A 1-lane team keeps
+    /// the serial AVX-512-capable kernels; otherwise the cached partitions
+    /// split the product across lanes (plan chunks > shared-SPC5 panels >
+    /// shared-CSR rows).
+    fn spmv_native(&self, team: &Team, x: &[T], y: &mut [T]) {
+        if team.threads() == 1 {
+            match (&self.plan, &self.spc5, self.selection.choice) {
+                (Some(plan), _, _) => plan.spmv(x, y),
+                (None, Some(m), FormatChoice::Spc5 { .. }) => {
+                    crate::kernels::native_avx512::spmv_spc5_auto(m, x, y)
+                }
+                _ => native::spmv_csr(&self.csr, x, y),
+            }
             return;
         }
-        match (backend, &self.spc5) {
-            (Backend::Native, Some(m)) => native::spmv_spc5_multi(m, xs, ys),
-            (Backend::Simulated(isa), Some(m)) => {
-                let mut refs: Vec<&mut [T]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
-                let mut sink = NullSink;
-                let mut ctx = SimCtx::new(T::VS, &mut sink);
-                match isa {
-                    SimIsa::Avx512 => spc5_avx512::spmv_spc5_avx512_multi(
-                        &mut ctx,
-                        m,
-                        xs,
-                        &mut refs,
-                        Reduction::Manual,
-                    ),
-                    SimIsa::Sve => spc5_sve::spmv_spc5_sve_multi(
-                        &mut ctx,
-                        m,
-                        xs,
-                        &mut refs,
-                        XLoad::Single,
-                        Reduction::Manual,
-                    ),
+        let ybase = SendPtr::new(y.as_mut_ptr());
+        if let (Some(plan), Some((assign, rows))) = (&self.plan, &self.exec.chunks) {
+            team.run_parts(assign.len(), &|i| {
+                let chunks = &plan.chunks[assign[i].clone()];
+                if chunks.is_empty() {
+                    return;
                 }
-            }
-            _ => {
-                for (x, y) in xs.iter().zip(ys.iter_mut()) {
-                    self.spmv(backend, x, y);
+                // SAFETY: lane chunk/row ranges are disjoint (see
+                // parallel::spmv); the team's completion barrier keeps the
+                // borrow alive.
+                let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
+                crate::spc5::plan::spmv_chunks(chunks, x, ys);
+            });
+        } else if let (Some(m), Some((panels, rows))) = (&self.spc5, &self.exec.panels) {
+            // AVX-512 panel kernels with one shared x padding when the host
+            // has them — multi-lane dispatch never trades the vector kernel
+            // away (`parallel::spmv::spmv_spc5_panels_team`).
+            spmv_spc5_panels_team(m, panels, rows, team, x, y);
+        } else {
+            let rows = &self.exec.rows;
+            team.run_parts(rows.ranges.len(), &|i| {
+                let rr = rows.ranges[i].clone();
+                if rr.is_empty() {
+                    return;
                 }
+                // SAFETY: disjoint row ranges.
+                let ys = unsafe { ybase.slice(rr.clone()) };
+                native::spmv_csr_rows(&self.csr, rr, x, ys);
+            });
+        }
+    }
+
+    /// Fused multi-RHS execution of one batch: one matrix pass for all
+    /// right-hand sides on every backend, split across the team's lanes on
+    /// the native backend (per-lane scratch reused across batches).
+    fn spmv_batch(&self, backend: Backend, team: &Team, xs: &[&[T]], ys: &mut [Vec<T>]) {
+        match backend {
+            Backend::Native => self.spmv_batch_native(team, xs, ys),
+            Backend::Simulated(isa) => match &self.spc5 {
+                Some(m) => {
+                    let mut refs: Vec<&mut [T]> =
+                        ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                    let mut sink = NullSink;
+                    let mut ctx = SimCtx::new(T::VS, &mut sink);
+                    match isa {
+                        SimIsa::Avx512 => spc5_avx512::spmv_spc5_avx512_multi(
+                            &mut ctx,
+                            m,
+                            xs,
+                            &mut refs,
+                            Reduction::Manual,
+                        ),
+                        SimIsa::Sve => spc5_sve::spmv_spc5_sve_multi(
+                            &mut ctx,
+                            m,
+                            xs,
+                            &mut refs,
+                            XLoad::Single,
+                            Reduction::Manual,
+                        ),
+                    }
+                }
+                None => {
+                    for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                        self.spmv(backend, team, x, y);
+                    }
+                }
+            },
+        }
+    }
+
+    fn spmv_batch_native(&self, team: &Team, xs: &[&[T]], ys: &mut [Vec<T>]) {
+        if team.threads() == 1 {
+            let mut refs: Vec<&mut [T]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            // Reuse the cached scratch when it is free, but never serialize
+            // concurrent same-matrix batches on it: with a 1-lane team the
+            // pool workers ARE the parallelism, and blocking one for the
+            // other's whole fused pass would defeat them. The fallback
+            // allocation is k*r elements — negligible.
+            let mut local: Vec<T> = Vec::new();
+            let mut cached = self.exec.scratch[0].try_lock();
+            let s: &mut Vec<T> = match &mut cached {
+                Ok(g) => &mut **g,
+                Err(_) => &mut local,
+            };
+            if let Some(plan) = &self.plan {
+                plan.spmv_multi_slices_with(xs, &mut refs, s);
+            } else if let Some(m) = &self.spc5 {
+                native::spmv_spc5_multi_panels(m, 0..m.npanels(), xs, &mut refs, s);
+            } else {
+                native::spmv_csr_multi_rows(&self.csr, 0..self.csr.nrows, xs, &mut refs, s);
             }
+            return;
+        }
+        let bases: Vec<SendPtr<T>> =
+            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
+        let scratch = &self.exec.scratch;
+        if let (Some(plan), Some((assign, _rows))) = (&self.plan, &self.exec.chunks) {
+            team.run_parts(assign.len(), &|i| {
+                let chunks = &plan.chunks[assign[i].clone()];
+                if chunks.is_empty() {
+                    return;
+                }
+                let mut s = scratch[i].lock().expect("lane scratch");
+                for c in chunks {
+                    // SAFETY: chunk row ranges are disjoint across lanes.
+                    let mut sub: Vec<&mut [T]> = bases
+                        .iter()
+                        .map(|b| unsafe { b.slice(c.row0..c.row0 + c.m.nrows) })
+                        .collect();
+                    native::spmv_spc5_multi_panels(&c.m, 0..c.m.npanels(), xs, &mut sub, &mut s);
+                }
+            });
+        } else if let (Some(m), Some((panels, rows))) = (&self.spc5, &self.exec.panels) {
+            team.run_parts(panels.ranges.len(), &|i| {
+                let pr = panels.ranges[i].clone();
+                if pr.is_empty() {
+                    return;
+                }
+                // SAFETY: disjoint row ranges per panel range.
+                let mut sub: Vec<&mut [T]> =
+                    bases.iter().map(|b| unsafe { b.slice(rows.ranges[i].clone()) }).collect();
+                let mut s = scratch[i].lock().expect("lane scratch");
+                native::spmv_spc5_multi_panels(m, pr, xs, &mut sub, &mut s);
+            });
+        } else {
+            let rows = &self.exec.rows;
+            team.run_parts(rows.ranges.len(), &|i| {
+                let rr = rows.ranges[i].clone();
+                if rr.is_empty() {
+                    return;
+                }
+                // SAFETY: disjoint row ranges.
+                let mut sub: Vec<&mut [T]> =
+                    bases.iter().map(|b| unsafe { b.slice(rr.clone()) }).collect();
+                let mut s = scratch[i].lock().expect("lane scratch");
+                native::spmv_csr_multi_rows(&self.csr, rr, xs, &mut sub, &mut s);
+            });
         }
     }
 }
@@ -142,6 +294,9 @@ impl<T: Scalar> Stored<T> {
 struct Shared<T: Scalar> {
     backend: Backend,
     plan_mode: PlanMode,
+    /// The persistent executor every native request/batch runs on, created
+    /// once per service and shared across all matrices.
+    team: Arc<Team>,
     matrices: RwLock<HashMap<MatrixId, Arc<Stored<T>>>>,
     queue: Mutex<Batcher<MatrixId, Request<T>>>,
     queue_cv: Condvar,
@@ -199,17 +354,32 @@ impl<T: Scalar> SpmvService<T> {
         Self::with_plan(workers, max_batch, backend, PlanMode::default())
     }
 
-    /// Full constructor: backend plus the native plan mode (CLI:
-    /// `serve --plan auto|off`).
+    /// Backend plus the native plan mode (CLI: `serve --plan auto|off`);
+    /// the executor team is sized to `workers`.
     pub fn with_plan(
         workers: usize,
         max_batch: usize,
         backend: Backend,
         plan_mode: PlanMode,
     ) -> Self {
+        Self::with_exec(workers, max_batch, backend, plan_mode, workers)
+    }
+
+    /// Full constructor: backend, native plan mode and executor width — the
+    /// service team gets `threads` lanes (subject to the `SPC5_THREADS`
+    /// override), independent of the request-worker count (CLI:
+    /// `serve --threads`).
+    pub fn with_exec(
+        workers: usize,
+        max_batch: usize,
+        backend: Backend,
+        plan_mode: PlanMode,
+        threads: usize,
+    ) -> Self {
         let shared = Arc::new(Shared {
             backend,
             plan_mode,
+            team: Arc::new(Team::new(threads)),
             matrices: RwLock::new(HashMap::new()),
             queue: Mutex::new(Batcher::new(max_batch)),
             queue_cv: Condvar::new(),
@@ -251,12 +421,20 @@ impl<T: Scalar> SpmvService<T> {
             (None, Backend::Native, FormatChoice::Csr) => None,
         };
         let id = MatrixId(self.next_id.fetch_add(1, Ordering::SeqCst));
+        let exec =
+            StoredExec::build(&csr, spc5.as_ref(), plan.as_ref(), self.shared.team.threads());
         self.shared
             .matrices
             .write()
             .expect("matrices lock")
-            .insert(id, Arc::new(Stored { csr, spc5, plan, selection }));
+            .insert(id, Arc::new(Stored { csr, spc5, plan, selection, exec }));
         id
+    }
+
+    /// The service's executor team (one per service, shared by all
+    /// matrices; callers may enlist it for their own parallel work).
+    pub fn team(&self) -> &Arc<Team> {
+        &self.shared.team
     }
 
     /// The compiled plan's block height per chunk, when the matrix runs
@@ -366,6 +544,7 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
                 let shared = Arc::clone(&shared);
                 pool.submit(move || {
                     let backend = shared.backend;
+                    let team = &shared.team;
                     let flops = 2 * stored.csr.nnz() as u64;
                     let n = batch.items.len();
                     if n > 1 {
@@ -377,7 +556,7 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
                             batch.items.iter().map(|r| r.x.as_slice()).collect();
                         let mut ys: Vec<Vec<T>> =
                             (0..n).map(|_| vec![T::zero(); stored.csr.nrows]).collect();
-                        stored.spmv_batch(backend, &xs, &mut ys);
+                        stored.spmv_batch(backend, team, &xs, &mut ys);
                         for (req, y) in batch.items.into_iter().zip(ys) {
                             shared
                                 .metrics
@@ -388,7 +567,7 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
                         // Single request: plain path.
                         for req in batch.items {
                             let mut y = vec![T::zero(); stored.csr.nrows];
-                            stored.spmv(backend, &req.x, &mut y);
+                            stored.spmv(backend, team, &req.x, &mut y);
                             shared
                                 .metrics
                                 .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
@@ -590,5 +769,66 @@ mod tests {
             let _ = svc.submit(id, vec![1.0; 120]);
         }
         drop(svc); // must join without deadlock
+    }
+
+    #[test]
+    fn wide_team_serves_all_native_formats() {
+        // 4-lane executor, every native execution shape: plan chunks
+        // (blocky matrix), shared-SPC5 panels (plan off), shared-CSR rows
+        // (scattered matrix) — singles and fused batches.
+        for plan_mode in [PlanMode::Auto, PlanMode::Off] {
+            let svc: SpmvService<f64> =
+                SpmvService::with_exec(2, 8, Backend::Native, plan_mode, 4);
+            assert!(svc.team().threads() >= 1);
+            let blocky: Csr<f64> = gen::Structured {
+                nrows: 250,
+                ncols: 250,
+                nnz_per_row: 12.0,
+                run_len: 5.0,
+                row_corr: 0.8,
+                ..Default::default()
+            }
+            .generate(41);
+            let scattered: Csr<f64> = gen::random_uniform(170, 1.3, 7);
+            for m in [blocky, scattered] {
+                let id = svc.register(m.clone());
+                let x: Vec<f64> = (0..m.ncols).map(|i| ((i % 13) as f64 - 6.0) * 0.2).collect();
+                let mut want = vec![0.0; m.nrows];
+                m.spmv(&x, &mut want);
+                let got = svc.spmv(id, x.clone()).unwrap();
+                crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+                let rxs: Vec<_> = (0..9).map(|_| svc.submit(id, x.clone())).collect();
+                for rx in rxs {
+                    let y = rx.recv().unwrap().unwrap();
+                    crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversubscribed_team_small_matrix() {
+        // More lanes than panels/rows: empty lane ranges must be harmless.
+        let svc: SpmvService<f64> =
+            SpmvService::with_exec(1, 4, Backend::Native, PlanMode::Auto, 16);
+        let tiny: Csr<f64> = gen::Structured {
+            nrows: 9,
+            ncols: 9,
+            nnz_per_row: 3.0,
+            run_len: 2.0,
+            row_corr: 0.5,
+            ..Default::default()
+        }
+        .generate(3);
+        let id = svc.register(tiny.clone());
+        let x = vec![1.0; 9];
+        let mut want = vec![0.0; 9];
+        tiny.spmv(&x, &mut want);
+        let got = svc.spmv(id, x.clone()).unwrap();
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+        let rxs: Vec<_> = (0..6).map(|_| svc.submit(id, x.clone())).collect();
+        for rx in rxs {
+            crate::scalar::assert_allclose(&rx.recv().unwrap().unwrap(), &want, 1e-12, 1e-12);
+        }
     }
 }

@@ -25,7 +25,10 @@
 //! assert!(sink.total_ops() > 0);
 //! ```
 
+use std::sync::Arc;
+
 use crate::matrix::Csr;
+use crate::parallel::{ParallelCsr, ParallelPlanned, ParallelSpc5, Team};
 use crate::scalar::Scalar;
 use crate::simd::trace::{CostSink, SimCtx};
 use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
@@ -109,11 +112,21 @@ pub struct MatrixSet<T: Scalar> {
     pub csr: Csr<T>,
     spc5: std::collections::HashMap<usize, Spc5Matrix<T>>,
     planned: Option<PlannedMatrix<T>>,
+    par_csr: Option<ParallelCsr<T>>,
+    par_spc5: std::collections::HashMap<usize, ParallelSpc5<T>>,
+    par_planned: Option<ParallelPlanned<T>>,
 }
 
 impl<T: Scalar> MatrixSet<T> {
     pub fn new(csr: Csr<T>) -> Self {
-        Self { csr, spc5: std::collections::HashMap::new(), planned: None }
+        Self {
+            csr,
+            spc5: std::collections::HashMap::new(),
+            planned: None,
+            par_csr: None,
+            par_spc5: std::collections::HashMap::new(),
+            par_planned: None,
+        }
     }
 
     /// Get (convert once) the β(r,VS) form.
@@ -137,6 +150,40 @@ impl<T: Scalar> MatrixSet<T> {
         for r in [1, 2, 4, 8] {
             self.spc5(r);
         }
+    }
+
+    /// Get (partition once) the row-split CSR form bound to `team`. Rebuilt
+    /// only if a *different* team is handed in.
+    pub fn parallel_csr(&mut self, team: &Arc<Team>) -> &ParallelCsr<T> {
+        if self.par_csr.as_ref().map_or(true, |p| !Arc::ptr_eq(p.team(), team)) {
+            self.par_csr = Some(ParallelCsr::with_team(&self.csr, Arc::clone(team)));
+        }
+        self.par_csr.as_ref().unwrap()
+    }
+
+    /// Get (partition + convert once) the per-lane β(r,VS) form bound to
+    /// `team`.
+    pub fn parallel_spc5(&mut self, r: usize, team: &Arc<Team>) -> &ParallelSpc5<T> {
+        let stale = self
+            .par_spc5
+            .get(&r)
+            .map_or(true, |p| !Arc::ptr_eq(p.team(), team));
+        if stale {
+            self.par_spc5.insert(r, ParallelSpc5::with_team(&self.csr, r, Arc::clone(team)));
+        }
+        self.par_spc5.get(&r).unwrap()
+    }
+
+    /// Get (compile + assign once) the planned form bound to `team`.
+    pub fn parallel_planned(&mut self, team: &Arc<Team>) -> &ParallelPlanned<T> {
+        if self.par_planned.as_ref().map_or(true, |p| !Arc::ptr_eq(p.team(), team)) {
+            self.par_planned = Some(ParallelPlanned::with_team(
+                &self.csr,
+                &PlanConfig::default(),
+                Arc::clone(team),
+            ));
+        }
+        self.par_planned.as_ref().unwrap()
     }
 }
 
@@ -278,6 +325,25 @@ pub fn run_native<T: Scalar>(kind: NativeKernel, set: &mut MatrixSet<T>, x: &[T]
     y
 }
 
+/// Run one native kernel data-parallel on the persistent `team`, returning
+/// `y = A·x`. Partitions, conversions and plan assignments are cached in the
+/// [`MatrixSet`] (keyed to the team), so repeated calls measure executor
+/// dispatch plus kernel execution — no re-partitioning, no thread spawn.
+pub fn run_native_team<T: Scalar>(
+    kind: NativeKernel,
+    set: &mut MatrixSet<T>,
+    x: &[T],
+    team: &Arc<Team>,
+) -> Vec<T> {
+    let mut y = vec![T::zero(); set.csr.nrows];
+    match kind {
+        NativeKernel::Csr => set.parallel_csr(team).spmv(x, &mut y),
+        NativeKernel::Spc5 { r } => set.parallel_spc5(r, team).spmv(x, &mut y),
+        NativeKernel::Planned => set.parallel_planned(team).spmv(x, &mut y),
+    }
+    y
+}
+
 /// Floating point operations of one SpMV (the paper counts 2 per nnz).
 pub fn flops_of<T: Scalar>(set: &MatrixSet<T>) -> u64 {
     2 * set.csr.nnz() as u64
@@ -393,6 +459,40 @@ mod tests {
         // The plan is compiled once and cached.
         let p1 = set.planned() as *const _;
         let p2 = set.planned() as *const _;
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn native_team_dispatch_agrees_with_serial() {
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 150,
+            ncols: 150,
+            nnz_per_row: 7.0,
+            run_len: 2.5,
+            row_corr: 0.5,
+            skew: 0.3,
+            bandwidth: None,
+        }
+        .generate(29);
+        let x: Vec<f64> = (0..150).map(|i| (i % 9) as f64 * 0.25 - 1.0).collect();
+        let mut set = MatrixSet::new(csr);
+        let team = Arc::new(Team::exact(3));
+        for kind in [
+            NativeKernel::Csr,
+            NativeKernel::Spc5 { r: 2 },
+            NativeKernel::Spc5 { r: 4 },
+            NativeKernel::Planned,
+        ] {
+            let want = run_native(kind, &mut set, &x);
+            // Same team handed twice: the parallel form is cached and
+            // repeated dispatches stay consistent.
+            for _ in 0..2 {
+                let y = run_native_team(kind, &mut set, &x, &team);
+                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            }
+        }
+        let p1 = set.parallel_spc5(4, &team) as *const _;
+        let p2 = set.parallel_spc5(4, &team) as *const _;
         assert_eq!(p1, p2);
     }
 

@@ -18,7 +18,26 @@ use crate::spc5::Spc5Matrix;
 pub fn spmv_csr<T: Scalar>(m: &Csr<T>, x: &[T], y: &mut [T]) {
     assert_eq!(x.len(), m.ncols);
     assert_eq!(y.len(), m.nrows);
-    for r in 0..m.nrows {
+    spmv_csr_rows(m, 0..m.nrows, x, y);
+}
+
+/// Execute only rows `rows` of `m`, writing into `y` whose element 0 is row
+/// `rows.start`. Any row range is independently executable, so one *shared*
+/// CSR matrix can be split across executor lanes at row boundaries (the
+/// coordinator's native fallback path) instead of copying row slices per
+/// thread. Per-row accumulation is identical to [`spmv_csr`], so a split
+/// product is bitwise-equal to the serial one.
+pub fn spmv_csr_rows<T: Scalar>(
+    m: &Csr<T>,
+    rows: std::ops::Range<usize>,
+    x: &[T],
+    y: &mut [T],
+) {
+    assert!(rows.start <= rows.end && rows.end <= m.nrows);
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), rows.len());
+    let base = rows.start;
+    for r in rows {
         let lo = m.row_ptr[r] as usize;
         let hi = m.row_ptr[r + 1] as usize;
         let cols = &m.col_idx[lo..hi];
@@ -41,7 +60,7 @@ pub fn spmv_csr<T: Scalar>(m: &Csr<T>, x: &[T], y: &mut [T]) {
             s0 = vals[i].mul_add(x[cols[i] as usize], s0);
             i += 1;
         }
-        y[r] = (s0 + s1) + (s2 + s3);
+        y[r - base] = (s0 + s1) + (s2 + s3);
     }
 }
 
@@ -50,17 +69,37 @@ pub fn spmv_csr<T: Scalar>(m: &Csr<T>, x: &[T], y: &mut [T]) {
 /// right-hand sides, the same amortization [`spmv_spc5_multi_slices`] gives
 /// the SPC5 format.
 pub fn spmv_csr_multi_slices<T: Scalar>(m: &Csr<T>, xs: &[&[T]], ys: &mut [&mut [T]]) {
+    let mut scratch = Vec::new();
+    spmv_csr_multi_rows(m, 0..m.nrows, xs, ys, &mut scratch);
+}
+
+/// [`spmv_csr_multi_slices`] over only rows `rows` (each `ys[v]`'s element 0
+/// is row `rows.start`), accumulating into a caller-provided `scratch`
+/// buffer. Reusing `scratch` across calls removes the per-SpMM heap
+/// allocation — the coordinator's batch path and block-CG pass one buffer
+/// for a whole request stream / solve.
+pub fn spmv_csr_multi_rows<T: Scalar>(
+    m: &Csr<T>,
+    rows: std::ops::Range<usize>,
+    xs: &[&[T]],
+    ys: &mut [&mut [T]],
+    scratch: &mut Vec<T>,
+) {
     assert_eq!(xs.len(), ys.len());
     let k = xs.len();
     if k == 0 {
         return;
     }
+    assert!(rows.start <= rows.end && rows.end <= m.nrows);
     for (x, y) in xs.iter().zip(ys.iter()) {
         assert_eq!(x.len(), m.ncols);
-        assert_eq!(y.len(), m.nrows);
+        assert_eq!(y.len(), rows.len());
     }
-    let mut sums = vec![T::zero(); k];
-    for r in 0..m.nrows {
+    scratch.clear();
+    scratch.resize(k, T::zero());
+    let sums = &mut scratch[..];
+    let base = rows.start;
+    for r in rows {
         let lo = m.row_ptr[r] as usize;
         let hi = m.row_ptr[r + 1] as usize;
         sums.fill(T::zero());
@@ -72,7 +111,7 @@ pub fn spmv_csr_multi_slices<T: Scalar>(m: &Csr<T>, xs: &[&[T]], ys: &mut [&mut 
             }
         }
         for (vi, y) in ys.iter_mut().enumerate() {
-            y[r] = sums[vi];
+            y[r - base] = sums[vi];
         }
     }
 }
@@ -239,20 +278,43 @@ pub fn spmv_spc5_multi<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mut [Vec<
 /// iteration 3). Slice outputs let the parallel runtime hand each thread the
 /// disjoint row ranges of every right-hand side.
 pub fn spmv_spc5_multi_slices<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mut [&mut [T]]) {
+    let mut scratch = Vec::new();
+    spmv_spc5_multi_panels(m, 0..m.npanels(), xs, ys, &mut scratch);
+}
+
+/// [`spmv_spc5_multi_slices`] over only panels `panels` (each `ys[v]`'s
+/// element 0 is row `panels.start * m.r`), with the `k*r` accumulator block
+/// in a caller-provided `scratch` buffer. The panel range makes the fused
+/// SpMM splittable across executor lanes (one shared conversion, disjoint
+/// panel ranges); the scratch parameter removes the per-call heap
+/// allocation for callers that stream many SpMMs (coordinator batches,
+/// block-CG iterations).
+pub fn spmv_spc5_multi_panels<T: Scalar>(
+    m: &Spc5Matrix<T>,
+    panels: std::ops::Range<usize>,
+    xs: &[&[T]],
+    ys: &mut [&mut [T]],
+    scratch: &mut Vec<T>,
+) {
     assert_eq!(xs.len(), ys.len());
     let k = xs.len();
     if k == 0 {
         return;
     }
+    assert!(panels.start <= panels.end && panels.end <= m.npanels());
+    let rows_lo = (panels.start * m.r).min(m.nrows);
+    let rows_hi = (panels.end * m.r).min(m.nrows);
     for (x, y) in xs.iter().zip(ys.iter()) {
         assert_eq!(x.len(), m.ncols);
-        assert_eq!(y.len(), m.nrows);
+        assert_eq!(y.len(), rows_hi - rows_lo);
     }
+    scratch.clear();
+    scratch.resize(k * m.r, T::zero());
     match m.r {
-        1 => spmv_spc5_multi_body::<T, 1>(m, xs, ys),
-        2 => spmv_spc5_multi_body::<T, 2>(m, xs, ys),
-        4 => spmv_spc5_multi_body::<T, 4>(m, xs, ys),
-        8 => spmv_spc5_multi_body::<T, 8>(m, xs, ys),
+        1 => spmv_spc5_multi_body::<T, 1>(m, panels, xs, ys, scratch),
+        2 => spmv_spc5_multi_body::<T, 2>(m, panels, xs, ys, scratch),
+        4 => spmv_spc5_multi_body::<T, 4>(m, panels, xs, ys, scratch),
+        8 => spmv_spc5_multi_body::<T, 8>(m, panels, xs, ys, scratch),
         r => panic!("unsupported block height r={r}"),
     }
 }
@@ -262,18 +324,18 @@ pub fn spmv_spc5_multi_slices<T: Scalar>(m: &Spc5Matrix<T>, xs: &[&[T]], ys: &mu
 #[inline(always)]
 fn spmv_spc5_multi_body<T: Scalar, const R: usize>(
     m: &Spc5Matrix<T>,
+    panels: std::ops::Range<usize>,
     xs: &[&[T]],
     ys: &mut [&mut [T]],
+    sums: &mut [T],
 ) {
     debug_assert_eq!(m.r, R);
-    let k = xs.len();
-    // Accumulators: [vector][row-of-panel]; K is unbounded so heap-allocate
-    // once per call (outside the hot loop).
-    let mut sums = vec![T::zero(); k * R];
+    debug_assert_eq!(sums.len(), xs.len() * R);
     let vals = m.vals.as_ptr();
-    for p in 0..m.npanels() {
-        let row0 = p * R;
-        let rows_here = R.min(m.nrows - row0);
+    let row_base = panels.start * R;
+    for p in panels {
+        let row0 = p * R - row_base;
+        let rows_here = R.min(m.nrows - p * R);
         sums.fill(T::zero());
         for b in m.panel_blocks(p) {
             let col = unsafe { *m.block_colidx.get_unchecked(b) } as usize;
@@ -523,6 +585,84 @@ mod tests {
                 assert!((y[i] - (before[i] + base[i])).abs() < 1e-10, "r={r} row {i}");
             }
         }
+    }
+
+    #[test]
+    fn csr_row_ranges_reassemble_bitwise() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 83,
+            ncols: 77,
+            nnz_per_row: 6.0,
+            run_len: 2.0,
+            row_corr: 0.4,
+            ..Default::default()
+        }
+        .generate(17);
+        let x: Vec<f64> = (0..77).map(|i| (i % 7) as f64 * 0.3 - 1.0).collect();
+        let mut whole = vec![0.0; 83];
+        spmv_csr(&m, &x, &mut whole);
+        // Disjoint row ranges write exactly the serial values.
+        let mut split = vec![0.0; 83];
+        let (lo, hi) = split.split_at_mut(30);
+        spmv_csr_rows(&m, 0..30, &x, lo);
+        spmv_csr_rows(&m, 30..83, &x, hi);
+        assert_eq!(split, whole);
+        // Empty range: no-op.
+        spmv_csr_rows(&m, 40..40, &x, &mut []);
+    }
+
+    #[test]
+    fn multi_row_and_panel_ranges_reassemble_with_scratch_reuse() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 96,
+            ncols: 96,
+            nnz_per_row: 7.0,
+            run_len: 3.0,
+            row_corr: 0.5,
+            ..Default::default()
+        }
+        .generate(19);
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|v| (0..96).map(|i| ((i * (v + 1)) % 11) as f64 * 0.2).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|s| s.as_slice()).collect();
+        // CSR: whole vs split, one scratch reused across both calls.
+        let mut whole: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 96]).collect();
+        let mut w_refs: Vec<&mut [f64]> = whole.iter_mut().map(|s| s.as_mut_slice()).collect();
+        spmv_csr_multi_slices(&m, &x_refs, &mut w_refs);
+        let mut scratch = Vec::new();
+        let mut split: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 96]).collect();
+        {
+            let mut tops: Vec<&mut [f64]> =
+                split.iter_mut().map(|s| &mut s.as_mut_slice()[..40]).collect();
+            spmv_csr_multi_rows(&m, 0..40, &x_refs, &mut tops, &mut scratch);
+        }
+        {
+            let mut bots: Vec<&mut [f64]> =
+                split.iter_mut().map(|s| &mut s.as_mut_slice()[40..]).collect();
+            spmv_csr_multi_rows(&m, 40..96, &x_refs, &mut bots, &mut scratch);
+        }
+        assert_eq!(split, whole);
+        // SPC5: whole vs panel split, same scratch again (capacity reused).
+        let s = csr_to_spc5(&m, 4, 8);
+        let mut whole5: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 96]).collect();
+        let mut w5: Vec<&mut [f64]> = whole5.iter_mut().map(|s| s.as_mut_slice()).collect();
+        spmv_spc5_multi_slices(&s, &x_refs, &mut w5);
+        let np = s.npanels();
+        let mid = np / 2;
+        let rows_mid = (mid * 4).min(96);
+        let mut split5: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 96]).collect();
+        {
+            let mut tops: Vec<&mut [f64]> =
+                split5.iter_mut().map(|v| &mut v.as_mut_slice()[..rows_mid]).collect();
+            spmv_spc5_multi_panels(&s, 0..mid, &x_refs, &mut tops, &mut scratch);
+        }
+        {
+            let mut bots: Vec<&mut [f64]> =
+                split5.iter_mut().map(|v| &mut v.as_mut_slice()[rows_mid..]).collect();
+            spmv_spc5_multi_panels(&s, mid..np, &x_refs, &mut bots, &mut scratch);
+        }
+        assert_eq!(split5, whole5);
     }
 
     #[test]

@@ -54,31 +54,63 @@ pub fn available() -> bool {
 /// AVX-512 f64 SPC5 SpMV (`y = A·x`). Returns false (computing nothing) when
 /// the CPU lacks AVX-512F or the format is not β(r,8).
 pub fn spmv_spc5_f64(m: &Spc5Matrix<f64>, x: &PaddedX<f64>, y: &mut [f64]) -> bool {
-    if m.width != 8 || !available() {
-        return false;
-    }
-    assert_eq!(x.ncols, m.ncols);
-    assert!(x.data.len() >= m.ncols + 8, "x must be padded by >= 8 lanes");
-    assert_eq!(y.len(), m.nrows);
-    #[cfg(target_arch = "x86_64")]
-    unsafe {
-        imp::spmv_f64(m, &x.data, y);
-    }
-    true
+    spmv_spc5_panels_f64(m, x, 0..m.npanels(), y)
 }
 
 /// AVX-512 f32 SPC5 SpMV (`y = A·x`), β(r,16). Same contract as
 /// [`spmv_spc5_f64`].
 pub fn spmv_spc5_f32(m: &Spc5Matrix<f32>, x: &PaddedX<f32>, y: &mut [f32]) -> bool {
+    spmv_spc5_panels_f32(m, x, 0..m.npanels(), y)
+}
+
+/// AVX-512 f64 SPC5 SpMV over only panels `panels` — `y[0]` is row
+/// `panels.start * m.r`. Per-block value offsets make any panel range
+/// independently executable, so executor lanes can share one conversion
+/// *and* one x padding while still running the real vector kernel. Returns
+/// false (computing nothing) when the CPU lacks AVX-512F or the format is
+/// not β(r,8).
+pub fn spmv_spc5_panels_f64(
+    m: &Spc5Matrix<f64>,
+    x: &PaddedX<f64>,
+    panels: std::ops::Range<usize>,
+    y: &mut [f64],
+) -> bool {
+    if m.width != 8 || !available() {
+        return false;
+    }
+    assert_eq!(x.ncols, m.ncols);
+    assert!(x.data.len() >= m.ncols + 8, "x must be padded by >= 8 lanes");
+    assert!(panels.start <= panels.end && panels.end <= m.npanels());
+    let rows_lo = (panels.start * m.r).min(m.nrows);
+    let rows_hi = (panels.end * m.r).min(m.nrows);
+    assert_eq!(y.len(), rows_hi - rows_lo);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::spmv_f64_panels(m, &x.data, panels, y);
+    }
+    true
+}
+
+/// AVX-512 f32 panel-range SpMV, β(r,16). Same contract as
+/// [`spmv_spc5_panels_f64`].
+pub fn spmv_spc5_panels_f32(
+    m: &Spc5Matrix<f32>,
+    x: &PaddedX<f32>,
+    panels: std::ops::Range<usize>,
+    y: &mut [f32],
+) -> bool {
     if m.width != 16 || !available() {
         return false;
     }
     assert_eq!(x.ncols, m.ncols);
     assert!(x.data.len() >= m.ncols + 16, "x must be padded by >= 16 lanes");
-    assert_eq!(y.len(), m.nrows);
+    assert!(panels.start <= panels.end && panels.end <= m.npanels());
+    let rows_lo = (panels.start * m.r).min(m.nrows);
+    let rows_hi = (panels.end * m.r).min(m.nrows);
+    assert_eq!(y.len(), rows_hi - rows_lo);
     #[cfg(target_arch = "x86_64")]
     unsafe {
-        imp::spmv_f32(m, &x.data, y);
+        imp::spmv_f32_panels(m, &x.data, panels, y);
     }
     true
 }
@@ -88,15 +120,22 @@ mod imp {
     use super::*;
     use std::arch::x86_64::*;
 
-    /// Algorithm 1, AVX-512 flavour, r ∈ {1,2,4,8}, width 16 (f32).
+    /// Algorithm 1, AVX-512 flavour, r ∈ {1,2,4,8}, width 16 (f32), over a
+    /// panel range (`y[0]` = row `panels.start * r`).
     #[target_feature(enable = "avx512f")]
-    pub unsafe fn spmv_f32(m: &Spc5Matrix<f32>, x_padded: &[f32], y: &mut [f32]) {
+    pub unsafe fn spmv_f32_panels(
+        m: &Spc5Matrix<f32>,
+        x_padded: &[f32],
+        panels: std::ops::Range<usize>,
+        y: &mut [f32],
+    ) {
         let r = m.r;
         let xp = x_padded.as_ptr();
         let vp = m.vals.as_ptr();
-        for p in 0..m.npanels() {
-            let row0 = p * r;
-            let rows_here = r.min(m.nrows - row0);
+        let row_base = panels.start * r;
+        for p in panels {
+            let row0 = p * r - row_base;
+            let rows_here = r.min(m.nrows - p * r);
             let mut sums = [_mm512_setzero_ps(); 8];
             for b in m.panel_blocks(p) {
                 let col = *m.block_colidx.get_unchecked(b) as usize;
@@ -117,16 +156,22 @@ mod imp {
         }
     }
 
-    /// Algorithm 1, AVX-512 flavour, r ∈ {1,2,4,8}, width 8 (f64).
+    /// Algorithm 1, AVX-512 flavour, r ∈ {1,2,4,8}, width 8 (f64), over a
+    /// panel range (`y[0]` = row `panels.start * r`).
     #[target_feature(enable = "avx512f")]
-    pub unsafe fn spmv_f64(m: &Spc5Matrix<f64>, x_padded: &[f64], y: &mut [f64]) {
+    pub unsafe fn spmv_f64_panels(
+        m: &Spc5Matrix<f64>,
+        x_padded: &[f64],
+        panels: std::ops::Range<usize>,
+        y: &mut [f64],
+    ) {
         let r = m.r;
         let xp = x_padded.as_ptr();
         let vp = m.vals.as_ptr();
-        let npanels = m.npanels();
-        for p in 0..npanels {
-            let row0 = p * r;
-            let rows_here = r.min(m.nrows - row0);
+        let row_base = panels.start * r;
+        for p in panels {
+            let row0 = p * r - row_base;
+            let rows_here = r.min(m.nrows - p * r);
             let mut sums = [_mm512_setzero_pd(); 8];
             let blocks = m.panel_blocks(p);
             for b in blocks {

@@ -23,6 +23,13 @@
 //!   ([`kernels::dispatch::run_simulated_multi`]), the parallel runtime
 //!   ([`parallel::ParallelSpc5::spmv_multi`]), the coordinator's batches and
 //!   the block-CG solver ([`solver::block_cg()`]),
+//! - a persistent data-parallel executor ([`parallel::exec::Team`]): a
+//!   fixed worker team woken per call through an epoch barrier (atomics +
+//!   park/unpark, no steady-state allocation), on which every per-call
+//!   parallel SpMV path runs — the parallel matrix types, the solvers (one
+//!   team per solve) and the coordinator (one team per service, cached
+//!   per-matrix lane partitions); `std::thread::scope` survives only for
+//!   construction-time conversion work,
 //! - a parallel runtime ([`parallel`]), iterative solvers ([`solver`]),
 //! - a PJRT runtime that executes the JAX/Pallas AOT artifacts ([`runtime`]),
 //! - and an SpMV coordinator service ([`coordinator`]).

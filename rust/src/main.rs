@@ -206,6 +206,7 @@ fn cmd_solve(args: &mut Args) -> Result<(), String> {
 
 fn cmd_serve(args: &mut Args) -> Result<(), String> {
     let workers = args.opt_num::<usize>("workers", 2)?;
+    let threads = args.opt_num::<usize>("threads", workers)?;
     let requests = args.opt_num::<usize>("requests", 200)?;
     let backend = match args.opt("backend", "native").as_str() {
         "native" => Backend::Native,
@@ -219,10 +220,14 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
         other => return Err(format!("unknown plan mode '{other}' (auto|off)")),
     };
     args.finish()?;
-    let svc: SpmvService<f64> = SpmvService::with_plan(workers, 16, backend, plan);
+    let svc: SpmvService<f64> = SpmvService::with_exec(workers, 16, backend, plan, threads);
     let m = corpus_by_name_or_fail("nd6k")?.build(100_000);
     let ncols = m.ncols;
     let id = svc.register(m);
+    println!(
+        "executor team: {} lane(s) (persistent; --threads, SPC5_THREADS overrides)",
+        svc.team().threads()
+    );
     match svc.plan_chunk_rs(id) {
         Some(rs) => {
             let mut counts = [0usize; 9];

@@ -1,0 +1,469 @@
+//! Persistent data-parallel executor: a fixed worker team created once and
+//! woken per call, replacing the spawn-per-SpMV `std::thread::scope` model.
+//!
+//! A CG solve with 500 iterations used to pay 500× thread-creation latency;
+//! the ECM analysis of SpMV on A64FX (Alappat et al.) holds only when the
+//! per-invocation runtime overhead is negligible, which requires the
+//! execution backend to be persistent and reusable, not rebuilt per product.
+//!
+//! ## Wake/quiesce protocol (see DESIGN.md §Persistent executor)
+//!
+//! One dispatch ("job") is a `&dyn Fn(usize)` executed once per part index.
+//! Lane 0 is the *calling* thread; lanes `1..L` are the persistent workers.
+//! Part `p` runs on lane `p % L`, so any number of parts works on a fixed
+//! team (oversubscription and undersubscription are both just strides).
+//!
+//! Steady-state dispatch performs **no allocation**: the job is published as
+//! a type-erased borrow in an `UnsafeCell`, the epoch counter is bumped with
+//! `Release`, and workers observing the bump with `Acquire` are guaranteed
+//! to see the job write (release/acquire pairing on `epoch`). Completion is
+//! the mirror image: each worker's output writes are sequenced before its
+//! `remaining.fetch_sub(Release)`, and the caller's `Acquire` load observing
+//! zero therefore sees every worker's writes before `run_parts` returns —
+//! which is exactly the guarantee that makes handing out raw `&mut [T]`
+//! slices sound.
+//!
+//! Idle threads spin briefly (cheap wake while a solver is in its BLAS-1
+//! phase between two SpMVs) and then `park()`. `unpark()` tokens make the
+//! sleep race-free: a worker that checks the epoch, loses the race with the
+//! caller's bump, and then parks consumes the caller's token and returns
+//! immediately; every wait re-checks its condition in a loop.
+
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{JoinHandle, Thread};
+
+/// Spins before parking. Long enough that back-to-back SpMVs (a solver's
+/// steady state) never pay a futex round trip; short enough that an idle
+/// team quiesces within microseconds.
+const SPIN: u32 = 1 << 13;
+
+/// Shared state between the caller and the worker lanes. The `UnsafeCell`s
+/// are published/retired purely through the `epoch`/`remaining` protocol
+/// described in the module docs.
+struct Inner {
+    /// Job generation counter. Bumped (`Release`) once per dispatch, after
+    /// the job/caller/nparts writes below.
+    epoch: AtomicU64,
+    /// Worker lanes still executing the current job.
+    remaining: AtomicUsize,
+    /// Part count of the current job (lane `l` runs parts `l, l+L, ...`).
+    nparts: AtomicUsize,
+    /// The current job. Valid from the epoch bump until `remaining` hits 0;
+    /// the `'static` lifetime is a lie confined to that window (the caller
+    /// blocks in `run_parts` for its whole duration, keeping the borrow
+    /// alive).
+    job: UnsafeCell<Option<&'static (dyn Fn(usize) + Sync)>>,
+    /// The dispatching thread, unparked by the last worker to finish.
+    /// Written before the epoch bump, read by workers before their
+    /// `remaining` decrement — both ends of the window are fenced.
+    caller: UnsafeCell<Option<Thread>>,
+    /// A worker lane panicked while executing the current job.
+    panicked: AtomicBool,
+    /// Team is shutting down; workers exit their wait loop.
+    shutdown: AtomicBool,
+    /// Total lanes (workers + the caller).
+    lanes: usize,
+}
+
+// SAFETY: the UnsafeCells are written only by the dispatching thread while
+// no job is in flight (`remaining == 0` observed with Acquire, serialized by
+// the dispatch mutex) and read only by workers between the epoch bump
+// (Acquire) and their own `remaining` decrement (Release) — release/acquire
+// pairs on `epoch` and `remaining` order every access.
+unsafe impl Sync for Inner {}
+
+fn worker_loop(inner: &Inner, lane: usize) {
+    let mut seen = 0u64;
+    let mut spins = 0u32;
+    loop {
+        let e = inner.epoch.load(Ordering::Acquire);
+        if e == seen {
+            if inner.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if spins < SPIN {
+                spins += 1;
+                std::hint::spin_loop();
+            } else {
+                std::thread::park();
+            }
+            continue;
+        }
+        seen = e;
+        spins = 0;
+        // SAFETY: the Acquire load of the bumped epoch synchronizes with the
+        // caller's Release bump, which is sequenced after the job write.
+        let job = unsafe { (*inner.job.get()).expect("team job missing") };
+        let nparts = inner.nparts.load(Ordering::Relaxed);
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            let mut p = lane;
+            while p < nparts {
+                job(p);
+                p += inner.lanes;
+            }
+        }));
+        if ok.is_err() {
+            inner.panicked.store(true, Ordering::Release);
+        }
+        // Read the caller handle BEFORE the decrement: after the last
+        // decrement the caller may return and start writing the next job's
+        // fields, so touching the cells later would race.
+        // SAFETY: same window argument as `job` above.
+        let caller = unsafe { (*inner.caller.get()).clone() };
+        if inner.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            if let Some(t) = caller {
+                t.unpark();
+            }
+        }
+    }
+}
+
+/// Blocks until all worker lanes finished the current job — as a drop guard,
+/// so the caller waits even when its own lane-0 share panics (workers may
+/// still hold borrows of the caller's stack; unwinding past them would be a
+/// use-after-free).
+struct WaitRemaining<'a> {
+    inner: &'a Inner,
+}
+
+impl Drop for WaitRemaining<'_> {
+    fn drop(&mut self) {
+        let mut spins = 0u32;
+        while self.inner.remaining.load(Ordering::Acquire) != 0 {
+            if spins < SPIN {
+                spins += 1;
+                std::hint::spin_loop();
+            } else {
+                std::thread::park();
+            }
+        }
+    }
+}
+
+/// A persistent worker team executing data-parallel jobs.
+///
+/// Created once (per parallel matrix, solver run, or coordinator service)
+/// and woken per call; the steady-state dispatch path performs no heap
+/// allocation and no thread creation. Concurrent `run_parts` calls from
+/// different threads serialize on an internal mutex, so one `Team` can be
+/// shared via [`Arc`] by everything in a process.
+///
+/// Dropping the team (idle or right after a call) wakes and joins all
+/// workers; `run_parts` must not be called re-entrantly from inside a job.
+pub struct Team {
+    inner: Arc<Inner>,
+    /// Unpark handles of the worker lanes (index 0 here is lane 1).
+    worker_threads: Vec<Thread>,
+    handles: Vec<JoinHandle<()>>,
+    dispatch: Mutex<()>,
+}
+
+impl Team {
+    /// A team with `threads` lanes, honoring the `SPC5_THREADS` environment
+    /// override (used by CI to exercise every thread count; see
+    /// [`env_threads`]). Lane 0 is the calling thread, so `threads == 1`
+    /// spawns nothing and executes jobs inline.
+    pub fn new(threads: usize) -> Self {
+        Self::exact(env_threads().unwrap_or(threads.max(1)))
+    }
+
+    /// A team with exactly `threads` lanes, ignoring the environment
+    /// override (benches and tests that must pin the team size).
+    pub fn exact(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            epoch: AtomicU64::new(0),
+            remaining: AtomicUsize::new(0),
+            nparts: AtomicUsize::new(0),
+            job: UnsafeCell::new(None),
+            caller: UnsafeCell::new(None),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            lanes: threads,
+        });
+        let handles: Vec<JoinHandle<()>> = (1..threads)
+            .map(|lane| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("spc5-exec-{lane}"))
+                    .spawn(move || worker_loop(&inner, lane))
+                    .expect("spawn team worker")
+            })
+            .collect();
+        let worker_threads = handles.iter().map(|h| h.thread().clone()).collect();
+        Self { inner, worker_threads, handles, dispatch: Mutex::new(()) }
+    }
+
+    /// Number of lanes (including the calling thread).
+    pub fn threads(&self) -> usize {
+        self.inner.lanes
+    }
+
+    /// Execute `f(p)` for every part `p in 0..nparts`, part `p` on lane
+    /// `p % threads()`; lane 0 is the calling thread. Returns after every
+    /// part finished — at which point all worker writes are visible to the
+    /// caller (Release/Acquire on the completion counter).
+    ///
+    /// Callers hand lanes disjoint `&mut` output ranges by capturing a raw
+    /// base pointer (see [`SendPtr`]) and slicing per part; the completion
+    /// barrier is what makes that sound.
+    pub fn run_parts(&self, nparts: usize, f: &(dyn Fn(usize) + Sync)) {
+        if nparts == 0 {
+            return;
+        }
+        // Serial fast paths: a 1-lane team, or a single part — no handshake.
+        if self.handles.is_empty() || nparts == 1 {
+            for p in 0..nparts {
+                f(p);
+            }
+            return;
+        }
+        let guard = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &*self.inner;
+        // SAFETY: no job is in flight (previous run_parts observed
+        // remaining == 0 before returning; the dispatch mutex serializes
+        // dispatchers), so the cells are exclusively ours. The 'static
+        // transmute is confined to this call: we do not return before
+        // remaining hits 0 again (WaitRemaining guard below).
+        unsafe {
+            *inner.caller.get() = Some(std::thread::current());
+            *inner.job.get() = Some(std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(f));
+        }
+        inner.nparts.store(nparts, Ordering::Relaxed);
+        inner.remaining.store(self.handles.len(), Ordering::Relaxed);
+        inner.epoch.fetch_add(1, Ordering::Release);
+        for t in &self.worker_threads {
+            t.unpark();
+        }
+        let lane0 = {
+            let wait = WaitRemaining { inner };
+            // Lane 0 = this thread. Catch its panic so the completion wait
+            // and the panic-flag reset below run on both paths.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                let mut p = 0usize;
+                while p < nparts {
+                    f(p);
+                    p += inner.lanes;
+                }
+            }));
+            drop(wait); // blocks until all workers finished
+            result
+        };
+        // Read-and-clear the worker-panic flag while still holding the
+        // dispatch lock: a later dispatcher must never observe (or be blamed
+        // for) this job's panic.
+        let worker_panicked = inner.panicked.swap(false, Ordering::AcqRel);
+        drop(guard);
+        if let Err(payload) = lane0 {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("a Team worker lane panicked while executing a job");
+        }
+    }
+
+}
+
+impl Drop for Team {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        for t in &self.worker_threads {
+            t.unpark();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The `SPC5_THREADS` environment override, when set and valid (>= 1).
+/// CI runs the suite at 1/2/8 to exercise the executor beyond the sizes the
+/// tests ask for.
+pub fn env_threads() -> Option<usize> {
+    parse_threads(&std::env::var("SPC5_THREADS").ok()?)
+}
+
+fn parse_threads(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// A raw mutable base pointer that may cross lane boundaries. Wrapping it is
+/// what lets a `Fn` job closure hand each lane its own disjoint `&mut [T]`
+/// window: the pointer itself is shared, the ranges sliced from it are not.
+///
+/// Safety contract (on the *user* of `get`): every lane must slice a range
+/// disjoint from all other lanes', in bounds of the original allocation, and
+/// only between the dispatch and the completion barrier of one
+/// [`Team::run_parts`] call.
+pub struct SendPtr<T>(*mut T);
+
+// SAFETY: SendPtr is a plain address; the disjointness contract above is
+// what makes concurrent use sound, exactly as with scoped-thread splitting.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        Self(p)
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+
+    /// The disjoint window `range` of the underlying allocation.
+    ///
+    /// # Safety
+    /// `range` must be in bounds of the allocation `self` points into and
+    /// disjoint from every other window sliced from it during the same
+    /// dispatch.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, range: std::ops::Range<usize>) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(range.start), range.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+
+    #[test]
+    fn all_parts_execute_exactly_once() {
+        let team = Team::exact(4);
+        for nparts in [0usize, 1, 3, 4, 7, 64] {
+            let hits: Vec<TestCounter> = (0..nparts).map(|_| TestCounter::new(0)).collect();
+            team.run_parts(nparts, &|p| {
+                hits[p].fetch_add(1, Ordering::SeqCst);
+            });
+            for (p, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "nparts={nparts} part {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_output_slices() {
+        let team = Team::exact(3);
+        let mut y = vec![0u64; 30];
+        let base = SendPtr::new(y.as_mut_ptr());
+        team.run_parts(3, &|p| {
+            // SAFETY: ranges [10p, 10p+10) are disjoint per part.
+            let ys = unsafe { base.slice(10 * p..10 * p + 10) };
+            for (i, v) in ys.iter_mut().enumerate() {
+                *v = (10 * p + i) as u64;
+            }
+        });
+        let want: Vec<u64> = (0..30).collect();
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn reused_across_many_calls_and_part_counts() {
+        let team = Team::exact(4);
+        let total = TestCounter::new(0);
+        for call in 0..200 {
+            let nparts = 1 + call % 9;
+            team.run_parts(nparts, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let want: u64 = (0..200).map(|c| (1 + c % 9) as u64).sum();
+        assert_eq!(total.load(Ordering::SeqCst), want);
+    }
+
+    #[test]
+    fn drop_while_idle_and_right_after_call_terminate() {
+        let t0 = std::time::Instant::now();
+        // Idle drop.
+        let team = Team::exact(4);
+        drop(team);
+        // Drop immediately after a call (workers may be mid-quiesce).
+        for _ in 0..20 {
+            let team = Team::exact(3);
+            let n = TestCounter::new(0);
+            team.run_parts(3, &|_| {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(n.load(Ordering::SeqCst), 3);
+            drop(team);
+        }
+        // Generous bound: the point is "terminates", not "fast", but a
+        // deadlock would hang the suite — keep an explicit ceiling.
+        assert!(t0.elapsed() < std::time::Duration::from_secs(30));
+    }
+
+    #[test]
+    fn single_lane_team_runs_inline() {
+        let team = Team::exact(1);
+        assert_eq!(team.threads(), 1);
+        let mut y = vec![0usize; 5];
+        let base = SendPtr::new(y.as_mut_ptr());
+        team.run_parts(5, &|p| {
+            // SAFETY: disjoint single-element windows.
+            unsafe { base.slice(p..p + 1) }[0] = p + 1;
+        });
+        assert_eq!(y, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn oversubscribed_more_lanes_than_parts() {
+        let team = Team::exact(8);
+        let hits: Vec<TestCounter> = (0..2).map(|_| TestCounter::new(0)).collect();
+        for _ in 0..50 {
+            team.run_parts(2, &|p| {
+                hits[p].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits[0].load(Ordering::SeqCst), 50);
+        assert_eq!(hits[1].load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialize() {
+        let team = Arc::new(Team::exact(4));
+        let total = Arc::new(TestCounter::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let team = Arc::clone(&team);
+                let total = Arc::clone(&total);
+                scope.spawn(move || {
+                    for _ in 0..50 {
+                        team.run_parts(4, &|_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 50 * 4);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_team_survives_drop() {
+        let team = Team::exact(2);
+        let hit = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            team.run_parts(2, &|p| {
+                if p == 1 {
+                    panic!("lane boom");
+                }
+            });
+        }));
+        assert!(hit.is_err());
+        drop(team); // must still join cleanly
+    }
+
+    #[test]
+    fn env_parse() {
+        assert_eq!(parse_threads("8"), Some(8));
+        assert_eq!(parse_threads(" 2 "), Some(2));
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads("x"), None);
+    }
+}

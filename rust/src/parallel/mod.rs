@@ -1,4 +1,5 @@
-//! Parallel runtime: row partitioning, a thread pool, and parallel SpMV.
+//! Parallel runtime: row partitioning, a persistent executor, a thread
+//! pool, and parallel SpMV.
 //!
 //! The paper's parallelization (§4.3, Fig 8) is a static row split with
 //! thread-local data: "the matrices are split and allocated by the threads
@@ -6,22 +7,26 @@
 //! its CPU core". [`ParallelSpc5`] mirrors that exactly: each thread owns an
 //! independent SPC5 conversion of its row slice.
 //!
-//! The environment has no `rayon`/`tokio`; [`pool`] is a small std::thread
-//! pool used by the coordinator service, and the data-parallel helpers use
-//! scoped threads.
-
+//! The environment has no `rayon`/`tokio`; [`exec::Team`] is the persistent
+//! data-parallel executor every per-call SpMV path runs on (fixed worker
+//! team, epoch-barrier wake, no spawn per product), and [`pool`] is a small
+//! job queue used by the coordinator service for request execution.
 //!
 //! The plan layer adds two splitting modes on top of per-thread conversion:
 //! [`ParallelPlanned`] deals a compiled [`crate::spc5::PlannedMatrix`]'s
-//! chunks to threads by nnz, and [`spmv_spc5_shared`] splits **one** shared
-//! conversion at panel boundaries ([`balance_panels`]) — both possible
-//! because per-block value offsets make any block range independently
-//! executable.
+//! chunks to lanes by nnz, and [`SharedSpc5`] / [`spmv_spc5_shared`] split
+//! **one** shared conversion at panel boundaries ([`balance_panels`]) — both
+//! possible because per-block value offsets make any block range
+//! independently executable.
 
+pub mod exec;
 pub mod partition;
 pub mod pool;
 pub mod spmv;
 
+pub use exec::{SendPtr, Team};
 pub use partition::{balance_panels, balance_rows, balance_units, Partition};
 pub use pool::ThreadPool;
-pub use spmv::{spmv_spc5_shared, ParallelCsr, ParallelPlanned, ParallelSpc5};
+pub use spmv::{
+    panel_row_ranges, spmv_spc5_shared, ParallelCsr, ParallelPlanned, ParallelSpc5, SharedSpc5,
+};

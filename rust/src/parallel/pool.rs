@@ -1,19 +1,28 @@
 //! A small fixed-size thread pool (no tokio/rayon offline).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Completion signal: `in_flight` under a mutex paired with a condvar, so
+/// [`ThreadPool::wait_idle`] parks instead of burning a core (it used to
+/// `yield_now`-spin). `wait_wakeups` counts condvar returns — a cheap probe
+/// the tests use to prove the wait actually sleeps.
+struct PoolState {
+    in_flight: Mutex<usize>,
+    idle: Condvar,
+    wait_wakeups: AtomicUsize,
+}
+
 /// Fixed worker pool with a shared FIFO queue. Used by the coordinator
-/// service for request execution; data-parallel kernels use scoped threads
-/// instead (see [`super::spmv`]).
+/// service for request execution; data-parallel kernels run on the
+/// persistent [`super::Team`] executor instead (see [`super::spmv`]).
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    in_flight: Arc<AtomicUsize>,
+    state: Arc<PoolState>,
 }
 
 impl ThreadPool {
@@ -21,11 +30,15 @@ impl ThreadPool {
         assert!(threads >= 1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(PoolState {
+            in_flight: Mutex::new(0),
+            idle: Condvar::new(),
+            wait_wakeups: AtomicUsize::new(0),
+        });
         let workers = (0..threads)
             .map(|i| {
                 let rx = Arc::clone(&rx);
-                let in_flight = Arc::clone(&in_flight);
+                let state = Arc::clone(&state);
                 std::thread::Builder::new()
                     .name(format!("spc5-worker-{i}"))
                     .spawn(move || loop {
@@ -36,7 +49,12 @@ impl ThreadPool {
                         match job {
                             Ok(job) => {
                                 job();
-                                in_flight.fetch_sub(1, Ordering::SeqCst);
+                                let mut n =
+                                    state.in_flight.lock().expect("pool state poisoned");
+                                *n -= 1;
+                                if *n == 0 {
+                                    state.idle.notify_all();
+                                }
                             }
                             Err(_) => break, // channel closed: shut down
                         }
@@ -44,7 +62,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        Self { tx: Some(tx), workers, in_flight }
+        Self { tx: Some(tx), workers, state }
     }
 
     pub fn threads(&self) -> usize {
@@ -53,7 +71,7 @@ impl ThreadPool {
 
     /// Enqueue a job.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        *self.state.in_flight.lock().expect("pool state poisoned") += 1;
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -63,14 +81,25 @@ impl ThreadPool {
 
     /// Number of submitted-but-unfinished jobs.
     pub fn pending(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
+        *self.state.in_flight.lock().expect("pool state poisoned")
     }
 
-    /// Busy-wait (with yields) until all submitted jobs finished.
+    /// Block (parked on a condvar, not spinning) until all submitted jobs
+    /// finished.
     pub fn wait_idle(&self) {
-        while self.pending() > 0 {
-            std::thread::yield_now();
+        let mut n = self.state.in_flight.lock().expect("pool state poisoned");
+        while *n > 0 {
+            n = self.state.idle.wait(n).expect("pool state poisoned");
+            self.state.wait_wakeups.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// How many times a [`ThreadPool::wait_idle`] wait has woken since pool
+    /// creation. A parked wait wakes O(1) times per completion batch; the
+    /// old busy-spin "woke" tens of thousands of times. Exposed so tests can
+    /// assert the wait parks within a bounded number of wakeups.
+    pub fn idle_wait_wakeups(&self) -> usize {
+        self.state.wait_wakeups.load(Ordering::Relaxed)
     }
 }
 
@@ -143,5 +172,33 @@ mod tests {
         block_tx.send(()).unwrap();
         pool.wait_idle();
         assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn idle_wait_parks_instead_of_spinning() {
+        let pool = ThreadPool::new(1);
+        // Hold the single worker busy for a while; the waiter must sleep
+        // through it, not spin.
+        for _ in 0..4 {
+            pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(20)));
+        }
+        let t0 = std::time::Instant::now();
+        pool.wait_idle();
+        let waited = t0.elapsed();
+        // Returned only after the jobs (so it really waited)...
+        assert!(waited >= std::time::Duration::from_millis(60), "{waited:?}");
+        assert_eq!(pool.pending(), 0);
+        // ...and woke a bounded number of times. A yield_now busy-wait over
+        // ~80ms iterates tens of thousands of times; a parked condvar wait
+        // wakes once per completion batch plus rare spurious wakeups.
+        assert!(
+            pool.idle_wait_wakeups() <= 100,
+            "wait_idle woke {} times — busy-spinning?",
+            pool.idle_wait_wakeups()
+        );
+        // An idle wait returns immediately without any further wakeups.
+        let before = pool.idle_wait_wakeups();
+        pool.wait_idle();
+        assert_eq!(pool.idle_wait_wakeups(), before);
     }
 }

@@ -1,42 +1,73 @@
-//! Thread-parallel native SpMV over partitioned matrices.
+//! Thread-parallel native SpMV over partitioned matrices, executed on the
+//! persistent [`Team`] executor (no per-call thread spawn).
+//!
+//! Every parallel matrix type holds (or shares via [`Arc`]) a [`Team`]:
+//! partitions and per-lane scratch are computed once at construction, and a
+//! steady-state `spmv` call is one epoch-barrier wake of the resident
+//! workers — the dispatch cost the `exec_overhead` bench section tracks.
+
+use std::sync::{Arc, Mutex};
 
 use crate::kernels::native;
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
 use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 
+use super::exec::{SendPtr, Team};
 use super::partition::{balance_panels, balance_rows, balance_units, Partition};
 
-/// A CSR matrix pre-partitioned for `threads` workers. Each part is an
+/// A CSR matrix pre-partitioned for the team's lanes. Each part is an
 /// independent row slice (thread-local allocation, as the paper describes).
 pub struct ParallelCsr<T: Scalar> {
     pub parts: Vec<Csr<T>>,
     pub partition: Partition,
     pub nrows: usize,
     pub ncols: usize,
+    team: Arc<Team>,
+    scratch: Vec<Mutex<Vec<T>>>,
 }
 
 impl<T: Scalar> ParallelCsr<T> {
+    /// Partition for a private team of `threads` lanes.
     pub fn new(m: &Csr<T>, threads: usize) -> Self {
-        let partition = balance_rows(m, threads, 1);
-        let parts = partition.ranges.iter().map(|r| m.row_slice(r.start, r.end)).collect();
-        Self { parts, partition, nrows: m.nrows, ncols: m.ncols }
+        Self::with_team(m, Arc::new(Team::new(threads)))
     }
 
-    /// `y = A·x` across scoped threads (disjoint y slices, no locking).
+    /// Partition for (a share of) an existing team — one executor can back
+    /// any number of matrices, solvers and coordinator requests.
+    pub fn with_team(m: &Csr<T>, team: Arc<Team>) -> Self {
+        let partition = balance_rows(m, team.threads(), 1);
+        let parts = partition.ranges.iter().map(|r| m.row_slice(r.start, r.end)).collect();
+        let scratch = per_lane_scratch(partition.nparts());
+        Self { parts, partition, nrows: m.nrows, ncols: m.ncols, team, scratch }
+    }
+
+    pub fn team(&self) -> &Arc<Team> {
+        &self.team
+    }
+
+    /// `y = A·x` across the team's lanes (disjoint y slices, no locking).
     pub fn spmv(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        let slices = split_disjoint(y, &self.partition);
-        std::thread::scope(|scope| {
-            for (part, ys) in self.parts.iter().zip(slices) {
-                scope.spawn(move || native::spmv_csr(part, x, ys));
+        let ybase = SendPtr::new(y.as_mut_ptr());
+        let ranges = &self.partition.ranges;
+        let parts = &self.parts;
+        self.team.run_parts(ranges.len(), &|i| {
+            let r = &ranges[i];
+            if r.is_empty() {
+                return;
             }
+            // SAFETY: partition ranges tile [0, nrows) disjointly, and the
+            // team's completion barrier outlives every lane's slice.
+            let ys = unsafe { ybase.slice(r.clone()) };
+            native::spmv_csr(&parts[i], x, ys);
         });
     }
 
-    /// Fused multi-RHS `ys[v] = A·xs[v]` across scoped threads: each thread
-    /// streams its row slice once for all `k` right-hand sides.
+    /// Fused multi-RHS `ys[v] = A·xs[v]`: each lane streams its row slice
+    /// once for all `k` right-hand sides, accumulating into its own
+    /// persistent scratch.
     pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
         assert_eq!(xs.len(), ys.len());
         if xs.is_empty() {
@@ -46,16 +77,26 @@ impl<T: Scalar> ParallelCsr<T> {
             assert_eq!(x.len(), self.ncols);
             assert_eq!(y.len(), self.nrows);
         }
-        let per_part = split_disjoint_multi(ys, &self.partition);
-        std::thread::scope(|scope| {
-            for (part, mut ys_part) in self.parts.iter().zip(per_part) {
-                scope.spawn(move || native::spmv_csr_multi_slices(part, xs, &mut ys_part));
+        let bases: Vec<SendPtr<T>> =
+            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
+        let ranges = &self.partition.ranges;
+        let parts = &self.parts;
+        let scratch = &self.scratch;
+        self.team.run_parts(ranges.len(), &|i| {
+            let r = &ranges[i];
+            if r.is_empty() {
+                return;
             }
+            // SAFETY: disjoint row ranges of every right-hand side.
+            let mut sub: Vec<&mut [T]> =
+                bases.iter().map(|b| unsafe { b.slice(r.clone()) }).collect();
+            let mut s = scratch[i].lock().expect("lane scratch");
+            native::spmv_csr_multi_rows(&parts[i], 0..parts[i].nrows, xs, &mut sub, &mut s);
         });
     }
 }
 
-/// An SPC5 matrix pre-partitioned for `threads` workers: each thread owns the
+/// An SPC5 matrix pre-partitioned for the team's lanes: each lane owns the
 /// β(r,VS) conversion of its own row slice.
 pub struct ParallelSpc5<T: Scalar> {
     pub parts: Vec<Spc5Matrix<T>>,
@@ -63,12 +104,21 @@ pub struct ParallelSpc5<T: Scalar> {
     pub nrows: usize,
     pub ncols: usize,
     pub r: usize,
+    team: Arc<Team>,
+    scratch: Vec<Mutex<Vec<T>>>,
 }
 
 impl<T: Scalar> ParallelSpc5<T> {
-    /// Partition (panel-aligned) and convert each slice in parallel.
+    /// Partition (panel-aligned) and convert each slice, with a private team.
     pub fn new(m: &Csr<T>, r: usize, threads: usize) -> Self {
-        let partition = balance_rows(m, threads, r);
+        Self::with_team(m, r, Arc::new(Team::new(threads)))
+    }
+
+    /// Partition for (a share of) an existing team. Conversion of the row
+    /// slices is construction-time work and uses scoped threads (the
+    /// executor is for the per-call hot path).
+    pub fn with_team(m: &Csr<T>, r: usize, team: Arc<Team>) -> Self {
+        let partition = balance_rows(m, team.threads(), r);
         let mut parts: Vec<Option<Spc5Matrix<T>>> = Vec::new();
         parts.resize_with(partition.ranges.len(), || None);
         std::thread::scope(|scope| {
@@ -79,35 +129,48 @@ impl<T: Scalar> ParallelSpc5<T> {
                 });
             }
         });
+        let scratch = per_lane_scratch(partition.nparts());
         Self {
             parts: parts.into_iter().map(|p| p.unwrap()).collect(),
             partition,
             nrows: m.nrows,
             ncols: m.ncols,
             r,
+            team,
+            scratch,
         }
+    }
+
+    pub fn team(&self) -> &Arc<Team> {
+        &self.team
     }
 
     pub fn nnz(&self) -> usize {
         self.parts.iter().map(|p| p.nnz()).sum()
     }
 
-    /// `y = A·x` across scoped threads.
+    /// `y = A·x` across the team's lanes.
     pub fn spmv(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        let slices = split_disjoint(y, &self.partition);
-        std::thread::scope(|scope| {
-            for (part, ys) in self.parts.iter().zip(slices) {
-                scope.spawn(move || native::spmv_spc5(part, x, ys));
+        let ybase = SendPtr::new(y.as_mut_ptr());
+        let ranges = &self.partition.ranges;
+        let parts = &self.parts;
+        self.team.run_parts(ranges.len(), &|i| {
+            let r = &ranges[i];
+            if r.is_empty() {
+                return;
             }
+            // SAFETY: disjoint row ranges (partition tiles [0, nrows)).
+            let ys = unsafe { ybase.slice(r.clone()) };
+            native::spmv_spc5(&parts[i], x, ys);
         });
     }
 
-    /// Fused multi-RHS `ys[v] = A·xs[v]` across scoped threads: each thread
-    /// decodes its β(r,VS) slice once (blocks, masks, packed values) and
-    /// reuses the stream for all `k` right-hand sides
-    /// ([`native::spmv_spc5_multi_slices`]). Matrix traffic per thread is
+    /// Fused multi-RHS `ys[v] = A·xs[v]` across the team: each lane decodes
+    /// its β(r,VS) slice once (blocks, masks, packed values) and reuses the
+    /// stream for all `k` right-hand sides
+    /// ([`native::spmv_spc5_multi_panels`]). Matrix traffic per lane is
     /// independent of `k` — the parallel form of the SpMM amortization.
     pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
         assert_eq!(xs.len(), ys.len());
@@ -118,83 +181,128 @@ impl<T: Scalar> ParallelSpc5<T> {
             assert_eq!(x.len(), self.ncols);
             assert_eq!(y.len(), self.nrows);
         }
-        let per_part = split_disjoint_multi(ys, &self.partition);
-        std::thread::scope(|scope| {
-            for (part, mut ys_part) in self.parts.iter().zip(per_part) {
-                scope.spawn(move || native::spmv_spc5_multi_slices(part, xs, &mut ys_part));
+        let bases: Vec<SendPtr<T>> =
+            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
+        let ranges = &self.partition.ranges;
+        let parts = &self.parts;
+        let scratch = &self.scratch;
+        self.team.run_parts(ranges.len(), &|i| {
+            let r = &ranges[i];
+            if r.is_empty() {
+                return;
             }
+            // SAFETY: disjoint row ranges of every right-hand side.
+            let mut sub: Vec<&mut [T]> =
+                bases.iter().map(|b| unsafe { b.slice(r.clone()) }).collect();
+            let mut s = scratch[i].lock().expect("lane scratch");
+            native::spmv_spc5_multi_panels(
+                &parts[i],
+                0..parts[i].npanels(),
+                xs,
+                &mut sub,
+                &mut s,
+            );
         });
     }
 }
 
-/// A planned (heterogeneous-`r`) matrix pre-assigned to `threads` workers:
-/// the plan is compiled once, then whole chunks are dealt to threads
-/// balanced by nnz ([`balance_units`]) — chunk boundaries are the split
-/// points the per-block value offsets make free.
+/// A planned (heterogeneous-`r`) matrix pre-assigned to the team's lanes:
+/// the plan is compiled once, then whole chunks are dealt to lanes balanced
+/// by nnz ([`balance_units`]) — chunk boundaries are the split points the
+/// per-block value offsets make free.
 pub struct ParallelPlanned<T: Scalar> {
     pub plan: PlannedMatrix<T>,
-    /// Per-thread contiguous chunk-index ranges.
+    /// Per-lane contiguous chunk-index ranges.
     pub assignments: Vec<std::ops::Range<usize>>,
     /// The same assignment as row ranges (for splitting y).
     pub partition: Partition,
     pub nrows: usize,
     pub ncols: usize,
+    team: Arc<Team>,
+    scratch: Vec<Mutex<Vec<T>>>,
+}
+
+/// Deal a plan's chunks to `parts` lanes balanced by nnz, returning the
+/// chunk-index ranges and the matching row ranges. Shared by
+/// [`ParallelPlanned`] and the coordinator's cached per-matrix assignments.
+pub(crate) fn plan_assignments<T: Scalar>(
+    plan: &PlannedMatrix<T>,
+    parts: usize,
+) -> (Vec<std::ops::Range<usize>>, Partition) {
+    let weights: Vec<u64> = plan.chunks.iter().map(|c| c.m.nnz() as u64).collect();
+    let assignments = balance_units(&weights, parts.max(1)).ranges;
+    let ranges = assignments
+        .iter()
+        .map(|a| {
+            let start = plan.chunks.get(a.start).map_or(plan.nrows, |c| c.row0);
+            let end = if a.end < plan.chunks.len() {
+                plan.chunks[a.end].row0
+            } else {
+                plan.nrows
+            };
+            start..end
+        })
+        .collect();
+    (assignments, Partition { ranges })
 }
 
 impl<T: Scalar> ParallelPlanned<T> {
     pub fn new(m: &Csr<T>, cfg: &PlanConfig, threads: usize) -> Self {
-        let plan = PlannedMatrix::build(m, cfg);
-        Self::from_plan(plan, threads)
+        Self::from_plan(PlannedMatrix::build(m, cfg), threads)
+    }
+
+    pub fn with_team(m: &Csr<T>, cfg: &PlanConfig, team: Arc<Team>) -> Self {
+        Self::from_plan_team(PlannedMatrix::build(m, cfg), team)
     }
 
     pub fn from_plan(plan: PlannedMatrix<T>, threads: usize) -> Self {
-        let weights: Vec<u64> = plan.chunks.iter().map(|c| c.m.nnz() as u64).collect();
-        let assignments = balance_units(&weights, threads.max(1)).ranges;
-        let ranges = assignments
-            .iter()
-            .map(|a| {
-                let start =
-                    plan.chunks.get(a.start).map_or(plan.nrows, |c| c.row0);
-                let end = if a.end < plan.chunks.len() {
-                    plan.chunks[a.end].row0
-                } else {
-                    plan.nrows
-                };
-                start..end
-            })
-            .collect();
+        Self::from_plan_team(plan, Arc::new(Team::new(threads)))
+    }
+
+    pub fn from_plan_team(plan: PlannedMatrix<T>, team: Arc<Team>) -> Self {
+        let (assignments, partition) = plan_assignments(&plan, team.threads());
+        let scratch = per_lane_scratch(assignments.len());
         Self {
             nrows: plan.nrows,
             ncols: plan.ncols,
             plan,
             assignments,
-            partition: Partition { ranges },
+            partition,
+            team,
+            scratch,
         }
+    }
+
+    pub fn team(&self) -> &Arc<Team> {
+        &self.team
     }
 
     pub fn nnz(&self) -> usize {
         self.plan.nnz()
     }
 
-    /// `y = A·x` across scoped threads; each thread executes its chunks'
+    /// `y = A·x` across the team; each lane executes its chunks'
     /// specialized kernels into its disjoint y slice (one shared x padding
-    /// per thread, see [`crate::spc5::plan::spmv_chunks`]).
+    /// per lane, see [`crate::spc5::plan::spmv_chunks`]).
     pub fn spmv(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        let slices = split_disjoint(y, &self.partition);
-        std::thread::scope(|scope| {
-            for (a, ys) in self.assignments.iter().zip(slices) {
-                let chunks = &self.plan.chunks[a.clone()];
-                if chunks.is_empty() {
-                    continue;
-                }
-                scope.spawn(move || crate::spc5::plan::spmv_chunks(chunks, x, ys));
+        let ybase = SendPtr::new(y.as_mut_ptr());
+        let assignments = &self.assignments;
+        let ranges = &self.partition.ranges;
+        let chunks = &self.plan.chunks;
+        self.team.run_parts(assignments.len(), &|i| {
+            let lane_chunks = &chunks[assignments[i].clone()];
+            if lane_chunks.is_empty() {
+                return;
             }
+            // SAFETY: chunk row ranges are disjoint per lane.
+            let ys = unsafe { ybase.slice(ranges[i].clone()) };
+            crate::spc5::plan::spmv_chunks(lane_chunks, x, ys);
         });
     }
 
-    /// Fused multi-RHS `ys[v] = A·xs[v]`: each thread streams each of its
+    /// Fused multi-RHS `ys[v] = A·xs[v]`: each lane streams each of its
     /// chunks once for all `k` right-hand sides.
     pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
         assert_eq!(xs.len(), ys.len());
@@ -205,85 +313,214 @@ impl<T: Scalar> ParallelPlanned<T> {
             assert_eq!(x.len(), self.ncols);
             assert_eq!(y.len(), self.nrows);
         }
-        let per_part = split_disjoint_multi(ys, &self.partition);
-        std::thread::scope(|scope| {
-            for (a, mut ys_part) in self.assignments.iter().zip(per_part) {
-                let chunks = &self.plan.chunks[a.clone()];
-                let Some(first) = chunks.first() else { continue };
-                let base = first.row0;
-                scope.spawn(move || {
-                    for c in chunks {
-                        let lo = c.row0 - base;
-                        let mut sub: Vec<&mut [T]> = ys_part
-                            .iter_mut()
-                            .map(|y| &mut y[lo..lo + c.m.nrows])
-                            .collect();
-                        native::spmv_spc5_multi_slices(&c.m, xs, &mut sub);
-                    }
-                });
+        let bases: Vec<SendPtr<T>> =
+            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
+        let assignments = &self.assignments;
+        let chunks = &self.plan.chunks;
+        let scratch = &self.scratch;
+        self.team.run_parts(assignments.len(), &|i| {
+            let lane_chunks = &chunks[assignments[i].clone()];
+            if lane_chunks.is_empty() {
+                return;
+            }
+            let mut s = scratch[i].lock().expect("lane scratch");
+            for c in lane_chunks {
+                // SAFETY: chunk row ranges are disjoint across all lanes.
+                let mut sub: Vec<&mut [T]> = bases
+                    .iter()
+                    .map(|b| unsafe { b.slice(c.row0..c.row0 + c.m.nrows) })
+                    .collect();
+                native::spmv_spc5_multi_panels(&c.m, 0..c.m.npanels(), xs, &mut sub, &mut s);
             }
         });
     }
 }
 
-/// Parallel SpMV over **one shared** SPC5 conversion: panels are split at
-/// nnz-balanced boundaries ([`balance_panels`]) and each thread runs
-/// [`native::spmv_spc5_panels`] on its range — no per-thread re-conversion,
-/// no loop-carried value cursor to serialize on. (With `block_valptr` any
-/// panel range is independently executable; before it, threads had to own a
-/// private conversion of their row slice.)
-pub fn spmv_spc5_shared<T: Scalar>(m: &Spc5Matrix<T>, threads: usize, x: &[T], y: &mut [T]) {
+/// Derive the row ranges of a panel partition (panels × r, clamped to
+/// nrows). Shared by [`SharedSpc5`], [`spmv_spc5_shared`], the
+/// coordinator's cached per-matrix partitions, and the scoped-dispatch
+/// baselines in the lifecycle test and `native_hotpath` bench.
+pub fn panel_row_ranges<T: Scalar>(
+    m: &Spc5Matrix<T>,
+    panel_parts: &Partition,
+) -> Partition {
+    Partition {
+        ranges: panel_parts
+            .ranges
+            .iter()
+            .map(|pr| (pr.start * m.r).min(m.nrows)..(pr.end * m.r).min(m.nrows))
+            .collect(),
+    }
+}
+
+/// **One shared** SPC5 conversion split across a team at nnz-balanced panel
+/// boundaries: no per-lane re-conversion, no loop-carried value cursor to
+/// serialize on, and the panel/row partitions are computed once. (With
+/// `block_valptr` any panel range is independently executable; before it,
+/// threads had to own a private conversion of their row slice.)
+pub struct SharedSpc5<T: Scalar> {
+    pub m: Spc5Matrix<T>,
+    /// Per-lane contiguous panel ranges (nnz-balanced).
+    pub panel_parts: Partition,
+    /// The same split as row ranges (for splitting y).
+    pub partition: Partition,
+    team: Arc<Team>,
+    scratch: Vec<Mutex<Vec<T>>>,
+}
+
+impl<T: Scalar> SharedSpc5<T> {
+    pub fn new(m: Spc5Matrix<T>, team: Arc<Team>) -> Self {
+        let panel_parts = balance_panels(&m, team.threads());
+        let partition = panel_row_ranges(&m, &panel_parts);
+        let scratch = per_lane_scratch(panel_parts.nparts());
+        Self { m, panel_parts, partition, team, scratch }
+    }
+
+    pub fn team(&self) -> &Arc<Team> {
+        &self.team
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    /// `y = A·x` across the team's lanes over the shared conversion.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.m.ncols);
+        assert_eq!(y.len(), self.m.nrows);
+        let ybase = SendPtr::new(y.as_mut_ptr());
+        let panels = &self.panel_parts.ranges;
+        let rows = &self.partition.ranges;
+        let m = &self.m;
+        self.team.run_parts(panels.len(), &|i| {
+            if panels[i].is_empty() {
+                return;
+            }
+            // SAFETY: panel ranges map to disjoint row ranges.
+            let ys = unsafe { ybase.slice(rows[i].clone()) };
+            native::spmv_spc5_panels(m, panels[i].clone(), x, ys);
+        });
+    }
+
+    /// Fused multi-RHS `ys[v] = A·xs[v]` over the shared conversion: each
+    /// lane streams its panel range once for all `k` right-hand sides.
+    pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.m.ncols);
+            assert_eq!(y.len(), self.m.nrows);
+        }
+        let bases: Vec<SendPtr<T>> =
+            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
+        let panels = &self.panel_parts.ranges;
+        let rows = &self.partition.ranges;
+        let m = &self.m;
+        let scratch = &self.scratch;
+        self.team.run_parts(panels.len(), &|i| {
+            if panels[i].is_empty() {
+                return;
+            }
+            // SAFETY: disjoint row ranges of every right-hand side.
+            let mut sub: Vec<&mut [T]> =
+                bases.iter().map(|b| unsafe { b.slice(rows[i].clone()) }).collect();
+            let mut s = scratch[i].lock().expect("lane scratch");
+            native::spmv_spc5_multi_panels(m, panels[i].clone(), xs, &mut sub, &mut s);
+        });
+    }
+}
+
+/// Parallel SpMV over one shared SPC5 conversion on an existing team —
+/// the one-shot convenience form of [`SharedSpc5`] (which additionally
+/// caches the partitions for repeated calls).
+pub fn spmv_spc5_shared<T: Scalar>(m: &Spc5Matrix<T>, team: &Team, x: &[T], y: &mut [T]) {
     assert_eq!(x.len(), m.ncols);
     assert_eq!(y.len(), m.nrows);
-    let panel_parts = balance_panels(m, threads.max(1));
-    let row_ranges: Vec<std::ops::Range<usize>> = panel_parts
-        .ranges
-        .iter()
-        .map(|pr| (pr.start * m.r).min(m.nrows)..(pr.end * m.r).min(m.nrows))
-        .collect();
-    let rows = Partition { ranges: row_ranges };
-    let slices = split_disjoint(y, &rows);
-    std::thread::scope(|scope| {
-        for (pr, ys) in panel_parts.ranges.iter().zip(slices) {
-            if pr.is_empty() {
-                continue;
-            }
-            let pr = pr.clone();
-            scope.spawn(move || native::spmv_spc5_panels(m, pr, x, ys));
+    let panel_parts = balance_panels(m, team.threads());
+    let rows = panel_row_ranges(m, &panel_parts);
+    let ybase = SendPtr::new(y.as_mut_ptr());
+    let panels = &panel_parts.ranges;
+    team.run_parts(panels.len(), &|i| {
+        if panels[i].is_empty() {
+            return;
         }
+        // SAFETY: panel ranges map to disjoint row ranges.
+        let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
+        native::spmv_spc5_panels(m, panels[i].clone(), x, ys);
     });
 }
 
-/// Split every right-hand side's `y` by the partition and transpose the
-/// result: element `p` holds part `p`'s disjoint row range of *every* RHS,
-/// ready to hand to one thread.
-fn split_disjoint_multi<'a, T>(
-    ys: &'a mut [&mut [T]],
-    partition: &Partition,
-) -> Vec<Vec<&'a mut [T]>> {
-    let mut per_part: Vec<Vec<&'a mut [T]>> =
-        (0..partition.ranges.len()).map(|_| Vec::with_capacity(ys.len())).collect();
-    for y in ys.iter_mut() {
-        for (slot, s) in per_part.iter_mut().zip(split_disjoint(&mut y[..], partition)) {
-            slot.push(s);
-        }
-    }
-    per_part
+fn per_lane_scratch<T: Scalar>(parts: usize) -> Vec<Mutex<Vec<T>>> {
+    (0..parts).map(|_| Mutex::new(Vec::new())).collect()
 }
 
-/// Split `y` into the partition's disjoint mutable slices.
-fn split_disjoint<'a, T>(y: &'a mut [T], partition: &Partition) -> Vec<&'a mut [T]> {
-    let mut out = Vec::with_capacity(partition.ranges.len());
-    let mut rest = y;
-    let mut offset = 0usize;
-    for r in &partition.ranges {
-        debug_assert_eq!(r.start, offset);
-        let (head, tail) = rest.split_at_mut(r.len());
-        out.push(head);
-        rest = tail;
-        offset = r.end;
+/// Execute pre-computed panel/row lane ranges of one shared conversion on
+/// the team, through the real AVX-512 kernels when the host supports them —
+/// x is padded **once** per call and shared by every lane (the serial
+/// `spmv_spc5_auto` paid the same padding cost for one lane's worth of
+/// kernel). Falls back to the portable panel walk otherwise. Used by the
+/// coordinator's cached per-matrix panel path, so going multi-lane never
+/// trades the vector kernel away.
+pub(crate) fn spmv_spc5_panels_team<T: Scalar>(
+    m: &Spc5Matrix<T>,
+    panels: &Partition,
+    rows: &Partition,
+    team: &Team,
+    x: &[T],
+    y: &mut [T],
+) {
+    use crate::kernels::native_avx512 as avx;
+    use std::any::TypeId;
+    if avx::available() {
+        if TypeId::of::<T>() == TypeId::of::<f64>() && m.width == 8 {
+            // SAFETY: T == f64 (checked above); identity casts.
+            let m64 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f64>) };
+            let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+            let padded = avx::PaddedX::new(x64, 8);
+            let ybase = SendPtr::new(y.as_mut_ptr() as *mut f64);
+            team.run_parts(panels.ranges.len(), &|i| {
+                let pr = panels.ranges[i].clone();
+                if pr.is_empty() {
+                    return;
+                }
+                // SAFETY: panel ranges map to disjoint row ranges.
+                let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
+                let ok = avx::spmv_spc5_panels_f64(m64, &padded, pr, ys);
+                debug_assert!(ok);
+            });
+            return;
+        }
+        if TypeId::of::<T>() == TypeId::of::<f32>() && m.width == 16 {
+            // SAFETY: T == f32 (checked above); identity casts.
+            let m32 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f32>) };
+            let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+            let padded = avx::PaddedX::new(x32, 16);
+            let ybase = SendPtr::new(y.as_mut_ptr() as *mut f32);
+            team.run_parts(panels.ranges.len(), &|i| {
+                let pr = panels.ranges[i].clone();
+                if pr.is_empty() {
+                    return;
+                }
+                // SAFETY: panel ranges map to disjoint row ranges.
+                let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
+                let ok = avx::spmv_spc5_panels_f32(m32, &padded, pr, ys);
+                debug_assert!(ok);
+            });
+            return;
+        }
     }
-    out
+    let ybase = SendPtr::new(y.as_mut_ptr());
+    team.run_parts(panels.ranges.len(), &|i| {
+        let pr = panels.ranges[i].clone();
+        if pr.is_empty() {
+            return;
+        }
+        // SAFETY: panel ranges map to disjoint row ranges.
+        let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
+        native::spmv_spc5_panels(m, pr, x, ys);
+    });
 }
 
 #[cfg(test)]
@@ -383,7 +620,11 @@ mod tests {
     fn parallel_planned_matches_serial() {
         let (m, x, want) = fixture(321);
         for threads in [1usize, 2, 5] {
-            let pp = ParallelPlanned::new(&m, &PlanConfig { chunk_rows: 64, ..Default::default() }, threads);
+            let pp = ParallelPlanned::new(
+                &m,
+                &PlanConfig { chunk_rows: 64, ..Default::default() },
+                threads,
+            );
             assert_eq!(pp.nnz(), m.nnz());
             let mut y = vec![0.0; 321];
             pp.spmv(&x, &mut y);
@@ -412,8 +653,65 @@ mod tests {
         for r in [1usize, 4, 8] {
             let s = csr_to_spc5(&m, r, 8);
             for threads in [1usize, 3, 6, 64] {
+                let team = Team::exact(threads);
                 let mut y = vec![0.0; 277];
-                spmv_spc5_shared(&s, threads, &x, &mut y);
+                spmv_spc5_shared(&s, &team, &x, &mut y);
+                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_spc5_cached_matches_serial_and_multi() {
+        let (m, x, want) = fixture(260);
+        for threads in [1usize, 4, 9] {
+            let team = Arc::new(Team::exact(threads));
+            let shared = SharedSpc5::new(csr_to_spc5(&m, 4, 8), Arc::clone(&team));
+            assert_eq!(shared.nnz(), m.nnz());
+            let mut y = vec![0.0; 260];
+            shared.spmv(&x, &mut y);
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            // Fused multi agrees bitwise with the serial fused kernel.
+            let xs: Vec<Vec<f64>> = (0..3)
+                .map(|v| (0..260).map(|i| ((i * (v + 3)) % 11) as f64 * 0.2).collect())
+                .collect();
+            let x_refs: Vec<&[f64]> = xs.iter().map(|s| s.as_slice()).collect();
+            let mut ys: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 260]).collect();
+            let mut y_refs: Vec<&mut [f64]> =
+                ys.iter_mut().map(|s| s.as_mut_slice()).collect();
+            shared.spmv_multi(&x_refs, &mut y_refs);
+            let mut want_multi: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 260]).collect();
+            let mut w_refs: Vec<&mut [f64]> =
+                want_multi.iter_mut().map(|s| s.as_mut_slice()).collect();
+            native::spmv_spc5_multi_slices(&shared.m, &x_refs, &mut w_refs);
+            for (y, w) in ys.iter().zip(&want_multi) {
+                crate::scalar::assert_allclose(y, w, 0.0, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn one_team_shared_across_all_parallel_types() {
+        let (m, x, want) = fixture(200);
+        let team = Arc::new(Team::exact(3));
+        let pc = ParallelCsr::with_team(&m, Arc::clone(&team));
+        let ps = ParallelSpc5::with_team(&m, 4, Arc::clone(&team));
+        let pp = ParallelPlanned::with_team(
+            &m,
+            &PlanConfig { chunk_rows: 64, ..Default::default() },
+            Arc::clone(&team),
+        );
+        let sh = SharedSpc5::new(csr_to_spc5(&m, 2, 8), Arc::clone(&team));
+        let runs: Vec<Box<dyn Fn(&[f64], &mut [f64]) + '_>> = vec![
+            Box::new(|x, y| pc.spmv(x, y)),
+            Box::new(|x, y| ps.spmv(x, y)),
+            Box::new(|x, y| pp.spmv(x, y)),
+            Box::new(|x, y| sh.spmv(x, y)),
+        ];
+        for _ in 0..3 {
+            for run in &runs {
+                let mut y = vec![0.0; 200];
+                run(&x, &mut y);
                 crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
             }
         }

@@ -46,6 +46,9 @@ pub fn block_cg<T: Scalar, A: MultiLinOp<T>>(
     // marks non-SPD breakdown (frozen but *not* converged).
     let mut frozen: Vec<bool> = (0..k).map(|i| residuals[i][0] <= rtol).collect();
     let mut broken = vec![false; k];
+    // Accumulator scratch for the fused pass, allocated once per solve and
+    // reused by every iteration ([`MultiLinOp::apply_multi_with`]).
+    let mut scratch: Vec<T> = Vec::new();
 
     for _ in 0..max_iter {
         // Gather the still-active systems for one fused matrix pass.
@@ -62,7 +65,7 @@ pub fn block_cg<T: Scalar, A: MultiLinOp<T>>(
         if idxs.is_empty() {
             break;
         }
-        a.apply_multi(&p_refs, &mut ap_refs);
+        a.apply_multi_with(&p_refs, &mut ap_refs, &mut scratch);
         drop(ap_refs);
 
         // Per-system CG scalar updates.

@@ -12,7 +12,7 @@ pub mod power;
 
 use crate::kernels::native;
 use crate::matrix::Csr;
-use crate::parallel::{ParallelCsr, ParallelPlanned, ParallelSpc5};
+use crate::parallel::{ParallelCsr, ParallelPlanned, ParallelSpc5, SharedSpc5};
 use crate::scalar::Scalar;
 use crate::spc5::{PlannedMatrix, Spc5Matrix};
 
@@ -39,17 +39,32 @@ pub trait MultiLinOp<T: Scalar>: LinOp<T> {
             self.apply(x, y);
         }
     }
+
+    /// [`MultiLinOp::apply_multi`] with a caller-held accumulator scratch
+    /// buffer, so an iterative solver ([`block_cg()`]) streaming one fused
+    /// pass per iteration allocates the `k*r` accumulator block once per
+    /// solve, not once per iteration. Operators with their own persistent
+    /// scratch (the parallel types) ignore the buffer.
+    fn apply_multi_with(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        self.apply_multi(xs, ys);
+    }
 }
 
 impl<T: Scalar> MultiLinOp<T> for Csr<T> {
     fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
         native::spmv_csr_multi_slices(self, xs, ys);
     }
+    fn apply_multi_with(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        native::spmv_csr_multi_rows(self, 0..self.nrows, xs, ys, scratch);
+    }
 }
 
 impl<T: Scalar> MultiLinOp<T> for Spc5Matrix<T> {
     fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
         native::spmv_spc5_multi_slices(self, xs, ys);
+    }
+    fn apply_multi_with(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        native::spmv_spc5_multi_panels(self, 0..self.npanels(), xs, ys, scratch);
     }
 }
 
@@ -69,9 +84,18 @@ impl<T: Scalar> MultiLinOp<T> for PlannedMatrix<T> {
     fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
         self.spmv_multi_slices(xs, ys);
     }
+    fn apply_multi_with(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        self.spmv_multi_slices_with(xs, ys, scratch);
+    }
 }
 
 impl<T: Scalar> MultiLinOp<T> for ParallelPlanned<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        self.spmv_multi(xs, ys);
+    }
+}
+
+impl<T: Scalar> MultiLinOp<T> for SharedSpc5<T> {
     fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
         self.spmv_multi(xs, ys);
     }
@@ -132,6 +156,16 @@ impl<T: Scalar> LinOp<T> for ParallelPlanned<T> {
     fn dim(&self) -> usize {
         assert_eq!(self.nrows, self.ncols);
         self.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+}
+
+impl<T: Scalar> LinOp<T> for SharedSpc5<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.m.nrows, self.m.ncols);
+        self.m.nrows
     }
     fn apply(&self, x: &[T], y: &mut [T]) {
         self.spmv(x, y);

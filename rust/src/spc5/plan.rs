@@ -202,6 +202,19 @@ impl<T: Scalar> PlannedMatrix<T> {
     /// Fused multi-RHS `ys[v] = A·xs[v]`: each chunk's matrix stream is
     /// decoded once for all `k` right-hand sides.
     pub fn spmv_multi_slices(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        let mut scratch = Vec::new();
+        self.spmv_multi_slices_with(xs, ys, &mut scratch);
+    }
+
+    /// [`PlannedMatrix::spmv_multi_slices`] with a caller-held accumulator
+    /// scratch buffer, reused across chunks (and, by iterative callers like
+    /// block-CG, across whole passes).
+    pub fn spmv_multi_slices_with(
+        &self,
+        xs: &[&[T]],
+        ys: &mut [&mut [T]],
+        scratch: &mut Vec<T>,
+    ) {
         assert_eq!(xs.len(), ys.len());
         if xs.is_empty() {
             return;
@@ -213,7 +226,13 @@ impl<T: Scalar> PlannedMatrix<T> {
         for c in &self.chunks {
             let mut sub: Vec<&mut [T]> =
                 ys.iter_mut().map(|y| &mut y[c.row0..c.row0 + c.m.nrows]).collect();
-            crate::kernels::native::spmv_spc5_multi_slices(&c.m, xs, &mut sub);
+            crate::kernels::native::spmv_spc5_multi_panels(
+                &c.m,
+                0..c.m.npanels(),
+                xs,
+                &mut sub,
+                scratch,
+            );
         }
     }
 }

@@ -1,0 +1,200 @@
+//! Executor lifecycle: one persistent `Team` reused across kernel families,
+//! k-RHS widths and matrices; results bitwise-equal to the scoped-thread
+//! dispatch it replaced; clean drop; oversubscription.
+
+use std::sync::Arc;
+
+use spc5::kernels::native;
+use spc5::matrix::{gen, Csr};
+use spc5::parallel::{
+    balance_panels, panel_row_ranges, spmv_spc5_shared, ParallelCsr, ParallelPlanned,
+    ParallelSpc5, Partition, SharedSpc5, Team,
+};
+use spc5::spc5::{csr_to_spc5, PlanConfig, Spc5Matrix};
+
+fn fixture(n: usize, seed: u64) -> (Csr<f64>, Vec<f64>) {
+    let m: Csr<f64> = gen::Structured {
+        nrows: n,
+        ncols: n,
+        nnz_per_row: 9.0,
+        run_len: 3.0,
+        row_corr: 0.6,
+        skew: 0.5,
+        bandwidth: None,
+    }
+    .generate(seed);
+    let x: Vec<f64> = (0..n).map(|i| ((i * 7) % 23) as f64 * 0.1 - 1.0).collect();
+    (m, x)
+}
+
+/// The dispatch model the executor replaced: spawn scoped threads per call,
+/// one per panel range, running the *same* kernels on the *same* partition.
+/// Per-row accumulation is partition-local in every kernel, so the team path
+/// must reproduce this bitwise.
+fn scoped_spmv_panels(m: &Spc5Matrix<f64>, parts: &Partition, x: &[f64], y: &mut [f64]) {
+    let row_ranges = panel_row_ranges(m, parts).ranges;
+    let mut rest = &mut y[..];
+    let mut offset = 0usize;
+    let mut slices = Vec::new();
+    for rr in &row_ranges {
+        let (head, tail) = rest.split_at_mut(rr.len());
+        slices.push(head);
+        rest = tail;
+        offset += rr.len();
+    }
+    assert_eq!(offset, m.nrows);
+    std::thread::scope(|scope| {
+        for (pr, ys) in parts.ranges.iter().zip(slices) {
+            if pr.is_empty() {
+                continue;
+            }
+            let pr = pr.clone();
+            scope.spawn(move || native::spmv_spc5_panels(m, pr, x, ys));
+        }
+    });
+}
+
+#[test]
+fn team_bitwise_equals_scoped_thread_dispatch() {
+    let (m, x) = fixture(331, 11);
+    for r in [1usize, 4, 8] {
+        let s = csr_to_spc5(&m, r, 8);
+        for lanes in [2usize, 3, 8] {
+            let team = Team::exact(lanes);
+            let parts = balance_panels(&s, team.threads());
+            let mut scoped = vec![0.0; 331];
+            scoped_spmv_panels(&s, &parts, &x, &mut scoped);
+            let mut teamed = vec![0.0; 331];
+            spmv_spc5_shared(&s, &team, &x, &mut teamed);
+            assert_eq!(scoped, teamed, "r={r} lanes={lanes}");
+        }
+    }
+}
+
+#[test]
+fn one_team_reused_across_kernels_and_rhs_widths() {
+    let (m, x) = fixture(300, 23);
+    let mut want = vec![0.0; 300];
+    m.spmv(&x, &mut want);
+    let team = Arc::new(Team::exact(4));
+
+    let pc = ParallelCsr::with_team(&m, Arc::clone(&team));
+    let ps = ParallelSpc5::with_team(&m, 4, Arc::clone(&team));
+    let pp = ParallelPlanned::with_team(
+        &m,
+        &PlanConfig { chunk_rows: 64, ..Default::default() },
+        Arc::clone(&team),
+    );
+    let sh = SharedSpc5::new(csr_to_spc5(&m, 2, 8), Arc::clone(&team));
+
+    // Interleave single-RHS products across all four kernel families on the
+    // same executor, twice, to prove the team survives reuse.
+    let runs: Vec<Box<dyn Fn(&[f64], &mut [f64]) + '_>> = vec![
+        Box::new(|x, y| pc.spmv(x, y)),
+        Box::new(|x, y| ps.spmv(x, y)),
+        Box::new(|x, y| pp.spmv(x, y)),
+        Box::new(|x, y| sh.spmv(x, y)),
+    ];
+    for _ in 0..2 {
+        for run in &runs {
+            let mut y = vec![0.0; 300];
+            run(&x, &mut y);
+            spc5::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+        }
+    }
+
+    // Fused multi-RHS at several widths, still on the same team; each
+    // result equals the corresponding single-RHS product of the same type.
+    for k in [1usize, 3, 8] {
+        let xs: Vec<Vec<f64>> = (0..k)
+            .map(|v| (0..300).map(|i| ((i * (v + 2)) % 9) as f64 * 0.3 - 1.0).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|s| s.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = (0..k).map(|_| vec![0.0; 300]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|s| s.as_mut_slice()).collect();
+        ps.spmv_multi(&x_refs, &mut y_refs);
+        for (xv, yv) in xs.iter().zip(&ys) {
+            let mut single = vec![0.0; 300];
+            ps.spmv(xv, &mut single);
+            spc5::scalar::assert_allclose(yv, &single, 0.0, 0.0);
+        }
+        let mut ys2: Vec<Vec<f64>> = (0..k).map(|_| vec![0.0; 300]).collect();
+        let mut y2_refs: Vec<&mut [f64]> = ys2.iter_mut().map(|s| s.as_mut_slice()).collect();
+        sh.spmv_multi(&x_refs, &mut y2_refs);
+        for (xv, yv) in xs.iter().zip(&ys2) {
+            let mut w = vec![0.0; 300];
+            m.spmv(xv, &mut w);
+            spc5::scalar::assert_allclose(yv, &w, 1e-12, 1e-12);
+        }
+    }
+}
+
+#[test]
+fn drop_idle_and_drop_right_after_a_call() {
+    let (m, x) = fixture(200, 31);
+    let t0 = std::time::Instant::now();
+    // Idle drop: team never dispatched.
+    {
+        let team = Arc::new(Team::exact(4));
+        let _ps = ParallelSpc5::with_team(&m, 4, Arc::clone(&team));
+        drop(_ps);
+        drop(team);
+    }
+    // Drop immediately after a call, repeatedly (workers mid-quiesce).
+    for _ in 0..10 {
+        let team = Arc::new(Team::exact(3));
+        let ps = ParallelSpc5::with_team(&m, 4, Arc::clone(&team));
+        let mut y = vec![0.0; 200];
+        ps.spmv(&x, &mut y);
+        drop(ps);
+        drop(team);
+    }
+    assert!(t0.elapsed() < std::time::Duration::from_secs(30), "drop hung");
+}
+
+#[test]
+fn oversubscribed_team_more_lanes_than_panels() {
+    // 3 panels of height 8 on a 24-row matrix, 16-lane team: most lanes get
+    // empty ranges and must no-op without corrupting neighbours.
+    let (m, x) = fixture(24, 41);
+    let mut want = vec![0.0; 24];
+    m.spmv(&x, &mut want);
+    let team = Arc::new(Team::exact(16));
+    let sh = SharedSpc5::new(csr_to_spc5(&m, 8, 8), Arc::clone(&team));
+    for _ in 0..5 {
+        let mut y = vec![0.0; 24];
+        sh.spmv(&x, &mut y);
+        spc5::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+    }
+    let ps = ParallelSpc5::with_team(&m, 8, Arc::clone(&team));
+    let mut y = vec![0.0; 24];
+    ps.spmv(&x, &mut y);
+    spc5::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+}
+
+#[test]
+fn solvers_reuse_one_team_for_a_whole_solve() {
+    // The operator holds the team, so every CG iteration reuses it; the
+    // solution matches the serial operator's.
+    let a = gen::poisson2d::<f64>(14); // 196 unknowns
+    let b: Vec<f64> = (0..196).map(|i| ((i % 7) as f64) * 0.5 - 1.0).collect();
+    let serial = spc5::solver::cg(&a, &b, 1e-9, 800);
+    let team = Arc::new(Team::exact(3));
+    let par = ParallelSpc5::with_team(&a, 2, Arc::clone(&team));
+    let teamed = spc5::solver::cg(&par, &b, 1e-9, 800);
+    assert!(serial.converged && teamed.converged);
+    spc5::scalar::assert_allclose(&teamed.x, &serial.x, 1e-6, 1e-8);
+    // Shared-conversion operator on the same team, block-CG (fused SpMM).
+    let sh = SharedSpc5::new(csr_to_spc5(&a, 4, 8), Arc::clone(&team));
+    let bs: Vec<Vec<f64>> = (0..3)
+        .map(|v| (0..196).map(|i| ((i + v * 3) % 5) as f64 * 0.4).collect())
+        .collect();
+    let b_refs: Vec<&[f64]> = bs.iter().map(|s| s.as_slice()).collect();
+    let results = spc5::solver::block_cg(&sh, &b_refs, 1e-9, 800);
+    for (bv, res) in bs.iter().zip(&results) {
+        assert!(res.converged);
+        let mut ax = vec![0.0; 196];
+        spc5::solver::LinOp::apply(&a, &res.x, &mut ax);
+        spc5::scalar::assert_allclose(&ax, bv, 1e-6, 1e-7);
+    }
+}
