@@ -8,7 +8,9 @@ use std::sync::Arc;
 
 use spc5::bench::{table::fmt1, time_samples, TextTable};
 use spc5::kernels::{native, native_avx512};
+use spc5::matrix::sell::SellMatrix;
 use spc5::matrix::{corpus_by_name, gen, Coo, Csr};
+use spc5::ops::{self, FormatChoice, SparseOp};
 use spc5::parallel::{balance_panels, panel_row_ranges, Partition, SharedSpc5, Team};
 use spc5::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 use spc5::util::json::Json;
@@ -264,7 +266,9 @@ fn main() {
             let sc = ts.median() / iters as f64 * 1e6;
             let mut tt = time_samples(1, samples, || {
                 for _ in 0..iters {
-                    shared.spmv(&x, &mut y);
+                    // Portable walk on both sides: the scoped baseline is
+                    // portable, so the gap stays pure dispatch overhead.
+                    shared.spmv_portable(&x, &mut y);
                 }
                 std::hint::black_box(&y);
             });
@@ -303,6 +307,91 @@ fn main() {
         small_speedup_1000
     );
     json.set("exec_overhead", exec_json);
+
+    // ---- format bake-off: the one operator surface. Everything below is
+    // built through ops::build and timed through SparseOp::spmv — the bench
+    // iterates operators, not enum arms, exactly as the coordinator serves
+    // them. The sell-avx column times the AVX-512 SELL kernel directly
+    // (the operator itself keeps the exact-order portable kernel, which is
+    // the bitwise-pinned serving path). ----
+    println!("\n== format bake-off: csr vs spc5 vs sell vs planned (ops::build, serial) ==\n");
+    let mut t5 = TextTable::new(&[
+        "matrix", "nnz", "selector", "csr", "spc5 b4", "sell", "sell-avx", "planned", "agree",
+    ]);
+    let bake_corpus: Vec<(&str, Csr<f64>)> = vec![
+        ("nd6k", corpus_by_name("nd6k").unwrap().build(BUDGET)),
+        ("CO", corpus_by_name("CO").unwrap().build(BUDGET)),
+        ("wikipedia", corpus_by_name("wikipedia-20060925").unwrap().build(BUDGET)),
+        ("mixed", mixed_matrix(20_000)),
+    ];
+    let serial_team = Arc::new(Team::exact(1));
+    let mut bake_json = Json::obj();
+    let mut bake_agree = true;
+    for (name, m) in &bake_corpus {
+        let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+        let mut want = vec![0.0; m.nrows];
+        m.spmv(&x, &mut want);
+        let flops = spmv_flops(m.nnz() as u64);
+        let sel = spc5::coordinator::select_format(m, &Default::default());
+        let sigma = sel.best_sell_sigma();
+        let ops_list: Vec<(&str, Box<dyn SparseOp<f64>>)> = vec![
+            ("csr", ops::build(m, FormatChoice::Csr, &serial_team)),
+            ("spc5", ops::build(m, FormatChoice::Spc5 { r: 4 }, &serial_team)),
+            ("sell", ops::build(m, FormatChoice::Sell { sigma }, &serial_team)),
+            ("planned", ops::build(m, FormatChoice::Planned, &serial_team)),
+        ];
+        let mut gfs = Vec::new();
+        let mut o = Json::obj();
+        let mut matrix_agree = true;
+        for (label, op) in &ops_list {
+            let mut y = vec![0.0; m.nrows];
+            let mut t = time_samples(WARMUP, SAMPLES, || {
+                op.spmv(&x, &mut y);
+                std::hint::black_box(&y);
+            });
+            let g = gflops(flops, t.median());
+            // Correctness gate: the operator surface never trades numerics.
+            let ok = y
+                .iter()
+                .zip(&want)
+                .all(|(a, b)| (a - b).abs() <= 1e-9 * b.abs().max(1.0));
+            matrix_agree &= ok;
+            gfs.push(g);
+            o.set(&format!("{label}_gflops"), g);
+        }
+        bake_agree &= matrix_agree;
+        // The AVX-512 SELL kernel, timed outside the operator.
+        let sell_m = SellMatrix::from_csr(m, sigma);
+        let mut y = vec![0.0; m.nrows];
+        let mut t = time_samples(WARMUP, SAMPLES, || {
+            native_avx512::spmv_sell_auto(&sell_m, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        let sell_avx_g = gflops(flops, t.median());
+        o.set("sell_avx_gflops", sell_avx_g)
+            .set("sell_sigma", sigma)
+            .set("sell_occupancy", sell_m.occupancy())
+            .set("selector", sel.choice.kind_name())
+            .set("nnz", m.nnz());
+        t5.row(vec![
+            (*name).into(),
+            m.nnz().to_string(),
+            sel.choice.kind_name().into(),
+            fmt1(gfs[0]),
+            fmt1(gfs[1]),
+            fmt1(gfs[2]),
+            fmt1(sell_avx_g),
+            fmt1(gfs[3]),
+            if matrix_agree { "yes".into() } else { "NO".into() },
+        ]);
+        bake_json.set(name, o);
+    }
+    println!("{}", t5.render());
+    println!(
+        "check: every operator matches the CSR reference -> {}",
+        if bake_agree { "OK" } else { "MISMATCH" }
+    );
+    json.set("format_bakeoff", bake_json);
 
     json.set("plan_layer", plan_json);
     json.set("copy_bw_gbs", bw);

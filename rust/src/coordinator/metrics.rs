@@ -6,20 +6,77 @@ use std::sync::Mutex;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+/// The four-way format bucket the service reports its selection/request mix
+/// in — what `serve` shows the operator about what the selector actually
+/// chose under load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FormatKind {
+    Csr,
+    Spc5,
+    Sell,
+    Plan,
+}
+
+impl FormatKind {
+    pub const ALL: [FormatKind; 4] =
+        [FormatKind::Csr, FormatKind::Spc5, FormatKind::Sell, FormatKind::Plan];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatKind::Csr => "csr",
+            FormatKind::Spc5 => "spc5",
+            FormatKind::Sell => "sell",
+            FormatKind::Plan => "plan",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            FormatKind::Csr => 0,
+            FormatKind::Spc5 => 1,
+            FormatKind::Sell => 2,
+            FormatKind::Plan => 3,
+        }
+    }
+}
+
 /// Thread-safe service counters. Latencies are recorded in microseconds.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub batches: AtomicU64,
     pub flops: AtomicU64,
     pub errors: AtomicU64,
+    /// Matrices registered per resolved execution format.
+    selected: [AtomicU64; 4],
+    /// Requests completed per execution format.
+    format_requests: [AtomicU64; 4],
     latencies_us: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            flops: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            selected: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+            format_requests: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+            latencies_us: Mutex::new(Vec::new()),
+        }
     }
 
     pub fn record_request(&self) {
@@ -41,6 +98,26 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One matrix registered with `kind` as its resolved execution format.
+    pub fn record_selection(&self, kind: FormatKind) {
+        self.selected[kind.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` requests completed against a matrix of execution format `kind`.
+    pub fn record_format_requests(&self, kind: FormatKind, n: u64) {
+        self.format_requests[kind.idx()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Selection count per format bucket.
+    pub fn selected(&self, kind: FormatKind) -> u64 {
+        self.selected[kind.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Completed-request count per format bucket.
+    pub fn format_requests(&self, kind: FormatKind) -> u64 {
+        self.format_requests[kind.idx()].load(Ordering::Relaxed)
+    }
+
     /// Latency summary snapshot (p50/p95/p99 in µs).
     pub fn latency_summary(&self) -> Summary {
         Summary::from_samples(self.latencies_us.lock().expect("metrics lock").clone())
@@ -55,12 +132,25 @@ impl Metrics {
             .set("batches", self.batches.load(Ordering::Relaxed))
             .set("errors", self.errors.load(Ordering::Relaxed))
             .set("flops", self.flops.load(Ordering::Relaxed));
+        let mut sel = Json::obj();
+        let mut req = Json::obj();
+        for kind in FormatKind::ALL {
+            sel.set(kind.name(), self.selected(kind));
+            req.set(kind.name(), self.format_requests(kind));
+        }
+        o.set("format_selected", sel).set("format_requests", req);
         if !lat.is_empty() {
             o.set("latency_us_p50", lat.quantile(0.5))
                 .set("latency_us_p95", lat.quantile(0.95))
                 .set("latency_us_p99", lat.quantile(0.99));
         }
         o
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -80,6 +170,25 @@ mod tests {
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
         assert_eq!(m.flops.load(Ordering::Relaxed), 2000);
         assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn format_mix_counters() {
+        let m = Metrics::new();
+        m.record_selection(FormatKind::Sell);
+        m.record_selection(FormatKind::Sell);
+        m.record_selection(FormatKind::Plan);
+        m.record_format_requests(FormatKind::Sell, 7);
+        m.record_format_requests(FormatKind::Csr, 2);
+        assert_eq!(m.selected(FormatKind::Sell), 2);
+        assert_eq!(m.selected(FormatKind::Plan), 1);
+        assert_eq!(m.selected(FormatKind::Spc5), 0);
+        assert_eq!(m.format_requests(FormatKind::Sell), 7);
+        assert_eq!(m.format_requests(FormatKind::Csr), 2);
+        let s = m.snapshot().to_string();
+        assert!(s.contains("format_selected"), "{s}");
+        assert!(s.contains("format_requests"), "{s}");
+        assert!(s.contains("\"sell\":2"), "{s}");
     }
 
     #[test]

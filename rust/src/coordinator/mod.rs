@@ -2,15 +2,18 @@
 //!
 //! The paper ships SPC5 as a library; a production deployment needs the
 //! layer this module provides: register a matrix once, let the framework
-//! pick the best format for it ([`selector`] — the paper's "faster than CSR
-//! above ~2 nnz/block" rule generalized), then serve SpMV requests through a
-//! thread pool with same-matrix batching for x/format locality ([`batch`],
-//! [`service`]) and operational metrics ([`metrics`]).
+//! pick the best format for it ([`selector`] — three-way CSR vs β(r,VS) vs
+//! SELL-C-σ, the paper's "faster than CSR above ~2 nnz/block" rule
+//! generalized), build it into one [`crate::ops::SparseOp`], then serve
+//! SpMV requests through a thread pool with same-matrix batching for
+//! x/format locality ([`batch`], [`service`]) and operational metrics
+//! including the per-format selection/request mix ([`metrics`]).
 
 pub mod batch;
 pub mod metrics;
 pub mod selector;
 pub mod service;
 
+pub use metrics::FormatKind;
 pub use selector::{select_format, FormatChoice, Selection};
-pub use service::{Backend, MatrixId, PlanMode, SpmvService};
+pub use service::{Backend, FormatMode, MatrixId, PlanMode, SpmvService};

@@ -1,19 +1,29 @@
-//! Automatic format selection.
+//! Automatic format selection — now three-way.
 //!
 //! The paper's guidance (§4.3/§5): SPC5 beats CSR when blocks hold more than
 //! ~2 non-zeros; β(4,VS) is the best default on SVE, β(8,VS) on AVX-512, but
 //! the right choice is matrix-dependent. The selector measures the β(r,VS)
 //! fillings of the actual matrix and scores each candidate with a per-block
-//! cost model whose constants mirror the kernels' structure: a fixed cost
-//! per block (column index + x window) plus a per-block-row cost (mask
-//! pipeline) plus a per-value cost.
+//! cost model whose constants mirror the kernels' structure.
+//!
+//! SELL-C-σ ([`crate::matrix::sell`]) widens the choice where β(r,VS)
+//! loses: rows whose non-zeros are scattered (blocks degenerate to
+//! singletons) but whose lengths are similar. Its candidates are scored
+//! from per-chunk occupancy statistics ([`SellStats`], measured from row
+//! lengths alone) over a ladder of sorting windows σ ∈ {C, 4C, 16C}. CSR
+//! survives as the fallback for the regime neither format covers: scattered
+//! rows with length skew that σ-sorting cannot absorb (SELL pays padding)
+//! on matrices too empty for blocks.
 
+use crate::matrix::sell::SellStats;
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
 use crate::spc5::FormatStats;
 
+pub use crate::ops::FormatChoice;
+
 /// Cost-model constants (in abstract "per-event units"; only ratios matter).
-/// Defaults approximate the native host kernel; the ISA simulators have
+/// Defaults approximate the native host kernels; the ISA simulators have
 /// their own exact models in `perfmodel`.
 #[derive(Clone, Copy, Debug)]
 pub struct SelectorModel {
@@ -27,6 +37,18 @@ pub struct SelectorModel {
     pub csr_per_row: f64,
     /// Cost per non-zero for CSR (includes the per-value column index).
     pub csr_per_value: f64,
+    /// Fixed cost per SELL chunk (width decode + accumulator drain/scatter).
+    pub sell_per_chunk: f64,
+    /// Cost per stored SELL slot — value load + x lane, charged on padding
+    /// too, which makes occupancy the selector's lever. Priced at parity
+    /// with `csr_per_value`: the *serving* SELL kernel is the exact-order
+    /// walk (the bitwise anchor — see [`crate::ops`]), so SELL's win over
+    /// CSR in this model comes from amortized per-row overhead, not from an
+    /// assumed vector speedup; the AVX-512 SELL kernel's extra headroom
+    /// (bench `format_bakeoff`) is deliberately not priced in.
+    pub sell_per_slot: f64,
+    /// Per-row SELL scatter cost (the `y[perm[i]]` write-back).
+    pub sell_per_row: f64,
 }
 
 impl Default for SelectorModel {
@@ -37,24 +59,42 @@ impl Default for SelectorModel {
             per_value: 1.0,
             csr_per_row: 4.0,
             csr_per_value: 2.2,
+            sell_per_chunk: 8.0,
+            sell_per_slot: 2.2,
+            sell_per_row: 0.5,
         }
     }
-}
-
-/// The selected storage format.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum FormatChoice {
-    Csr,
-    Spc5 { r: usize },
 }
 
 /// Selection result: the choice plus the evidence it was based on.
 #[derive(Clone, Debug)]
 pub struct Selection {
     pub choice: FormatChoice,
-    /// (r, stats, predicted cost) per candidate, in evaluation order.
+    /// (r, stats, predicted cost) per β(r,VS) candidate, in evaluation order.
     pub candidates: Vec<(usize, FormatStats, f64)>,
+    /// (σ, stats, predicted cost) per SELL-C-σ candidate window.
+    pub sell_candidates: Vec<(usize, SellStats, f64)>,
     pub csr_cost: f64,
+}
+
+impl Selection {
+    /// The cheapest β(r,VS) candidate's block height (the CLI's forced-SPC5
+    /// parameter). Defaults to 4 if no candidates were scored.
+    pub fn best_spc5_r(&self) -> usize {
+        self.candidates
+            .iter()
+            .min_by(|a, b| a.2.total_cmp(&b.2))
+            .map_or(4, |(r, _, _)| *r)
+    }
+
+    /// The cheapest SELL candidate's sorting window (the CLI's forced-SELL
+    /// parameter). Defaults to 4 chunks' worth of rows if none were scored.
+    pub fn best_sell_sigma(&self) -> usize {
+        self.sell_candidates
+            .iter()
+            .min_by(|a, b| a.2.total_cmp(&b.2))
+            .map_or(32, |(s, _, _)| *s)
+    }
 }
 
 impl SelectorModel {
@@ -66,9 +106,17 @@ impl SelectorModel {
     pub fn csr_cost<T: Scalar>(&self, m: &Csr<T>) -> f64 {
         m.nrows as f64 * self.csr_per_row + m.nnz() as f64 * self.csr_per_value
     }
+
+    pub fn sell_cost(&self, s: &SellStats, nrows: usize) -> f64 {
+        s.nchunks as f64 * self.sell_per_chunk
+            + s.slots as f64 * self.sell_per_slot
+            + nrows as f64 * self.sell_per_row
+    }
 }
 
-/// Pick the best format for `m` under `model`.
+/// Pick the best format for `m` under `model`: cheapest of CSR, the four
+/// β(r,VS) candidates and the SELL-C-σ window ladder. Ties prefer SPC5 over
+/// SELL over CSR (deterministic for a deterministic model).
 pub fn select_format<T: Scalar>(m: &Csr<T>, model: &SelectorModel) -> Selection {
     let csr_cost = model.csr_cost(m);
     let mut best: Option<(usize, f64)> = None;
@@ -81,19 +129,35 @@ pub fn select_format<T: Scalar>(m: &Csr<T>, model: &SelectorModel) -> Selection 
         }
         candidates.push((r, stats, cost));
     }
-    let (best_r, best_cost) = best.unwrap();
-    let choice = if best_cost < csr_cost {
+    let (best_r, best_spc5) = best.unwrap();
+
+    let mut best_sell: Option<(usize, f64)> = None;
+    let mut sell_candidates = Vec::with_capacity(3);
+    for mult in [1usize, 4, 16] {
+        let sigma = mult * T::VS;
+        let stats = SellStats::measure(m, sigma, T::VS);
+        let cost = model.sell_cost(&stats, m.nrows);
+        if best_sell.map_or(true, |(_, c)| cost < c) {
+            best_sell = Some((sigma, cost));
+        }
+        sell_candidates.push((sigma, stats, cost));
+    }
+    let (best_sigma, best_sell) = best_sell.unwrap();
+
+    let choice = if best_spc5 < csr_cost && best_spc5 <= best_sell {
         FormatChoice::Spc5 { r: best_r }
+    } else if best_sell < csr_cost {
+        FormatChoice::Sell { sigma: best_sigma }
     } else {
         FormatChoice::Csr
     };
-    Selection { choice, candidates, csr_cost }
+    Selection { choice, candidates, sell_candidates, csr_cost }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::gen;
+    use crate::matrix::{gen, Coo};
 
     #[test]
     fn dense_matrix_selects_large_blocks() {
@@ -101,17 +165,57 @@ mod tests {
         let sel = select_format(&m, &SelectorModel::default());
         match sel.choice {
             FormatChoice::Spc5 { r } => assert!(r >= 4, "picked r={r}"),
-            FormatChoice::Csr => panic!("dense must use SPC5"),
+            other => panic!("dense must use SPC5, picked {other:?}"),
         }
     }
 
     #[test]
-    fn scattered_matrix_falls_back_to_csr() {
+    fn scattered_uniform_matrix_selects_sell() {
         // ~1 nnz per block: the paper says SPC5 loses below ~2 per block.
+        // Rows are short and similar, so σ-sorting yields high occupancy —
+        // exactly SELL-C-σ's regime (previously this fell back to CSR).
         let m: Csr<f64> = gen::random_uniform(800, 3.0, 7);
         let sel = select_format(&m, &SelectorModel::default());
-        assert_eq!(sel.choice, FormatChoice::Csr, "candidates: {:?}",
-            sel.candidates.iter().map(|(r, s, c)| (*r, s.nnz_per_block, *c)).collect::<Vec<_>>());
+        match sel.choice {
+            FormatChoice::Sell { sigma } => assert!(sigma >= 8, "sigma={sigma}"),
+            other => panic!(
+                "scattered-uniform should pick SELL, got {other:?}; sell: {:?}",
+                sel.sell_candidates
+                    .iter()
+                    .map(|(s, st, c)| (*s, st.occupancy(), *c))
+                    .collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    #[test]
+    fn skewed_scattered_matrix_falls_back_to_csr() {
+        // Heavy rows every 33 rows (co-prime with every σ window), length 1
+        // elsewhere: whatever the window, each heavy row drags a whole
+        // chunk to width ~200, so SELL pays massive padding — and blocks
+        // are singletons, so SPC5 loses too. CSR's regime.
+        let n = 660usize;
+        let mut coo = Coo::<f64>::new(n, n);
+        for r in 0..n {
+            if r % 33 == 0 {
+                for k in 0..200 {
+                    coo.push(r, (r * 7 + k * 3) % n, 1.0 + k as f64 * 0.01);
+                }
+            } else {
+                coo.push(r, (r * 97) % n, 0.5);
+            }
+        }
+        let m = Csr::from_coo(coo);
+        let sel = select_format(&m, &SelectorModel::default());
+        assert_eq!(
+            sel.choice,
+            FormatChoice::Csr,
+            "sell candidates: {:?}",
+            sel.sell_candidates
+                .iter()
+                .map(|(s, st, c)| (*s, st.occupancy(), *c))
+                .collect::<Vec<_>>()
+        );
     }
 
     #[test]
@@ -126,7 +230,7 @@ mod tests {
         }
         .generate(3);
         let sel = select_format(&m, &SelectorModel::default());
-        assert!(matches!(sel.choice, FormatChoice::Spc5 { .. }));
+        assert!(matches!(sel.choice, FormatChoice::Spc5 { .. }), "{:?}", sel.choice);
     }
 
     #[test]
@@ -139,7 +243,18 @@ mod tests {
             assert!(*cost > 0.0);
             assert!(stats.filling > 0.0 && stats.filling <= 1.0);
         }
+        assert_eq!(sel.sell_candidates.len(), 3);
+        assert_eq!(
+            sel.sell_candidates.iter().map(|(s, _, _)| *s).collect::<Vec<_>>(),
+            vec![8, 32, 128]
+        );
+        for (_, stats, cost) in &sel.sell_candidates {
+            assert!(*cost > 0.0);
+            assert!(stats.occupancy() > 0.0 && stats.occupancy() <= 1.0);
+        }
         assert!(sel.csr_cost > 0.0);
+        assert!(matches!(sel.best_spc5_r(), 1 | 2 | 4 | 8));
+        assert!(sel.sell_candidates.iter().any(|(s, _, _)| *s == sel.best_sell_sigma()));
     }
 
     #[test]
@@ -158,5 +273,16 @@ mod tests {
         let c_loose = model.spc5_cost(&FormatStats::measure(&loose, 1, 8));
         let c_tight = model.spc5_cost(&FormatStats::measure(&tight, 1, 8));
         assert!(c_tight < c_loose);
+    }
+
+    #[test]
+    fn sell_cost_rewards_occupancy() {
+        let model = SelectorModel::default();
+        // Same nnz, different padding: higher occupancy must cost less.
+        let uniform: Csr<f64> = gen::random_uniform(400, 4.0, 5);
+        let tight = SellStats::measure(&uniform, 8, 8); // sort only in-chunk
+        let wide = SellStats::measure(&uniform, 128, 8); // sort 16 chunks
+        assert!(wide.slots <= tight.slots);
+        assert!(model.sell_cost(&wide, 400) <= model.sell_cost(&tight, 400));
     }
 }

@@ -3,297 +3,148 @@
 //! Request path (all Rust, never Python): `submit` enqueues into the
 //! [`super::batch::Batcher`]; a dispatcher thread drains batches to the
 //! worker pool; each batch runs all its right-hand sides against the
-//! matrix's *selected* format back-to-back (matrix-traffic locality).
+//! matrix's *built operator* back-to-back (matrix-traffic locality).
+//!
+//! Since the operator-layer refactor the service contains **no per-format
+//! dispatch**: registration resolves a [`FormatChoice`] (selector or CLI
+//! override), hands it to [`crate::ops::build_backend`], and every request
+//! or fused batch afterwards is a virtual call on the built
+//! [`SparseOp`] — serial or team-dispatched, native or simulated, CSR,
+//! β(r,VS), SELL-C-σ or planned.
 //!
 //! The service owns one persistent [`Team`] executor (sized by the
 //! constructor's `threads`, default = `workers`; CLI `serve --threads`),
-//! shared across every request and batch: per-matrix lane partitions are
-//! computed once at registration, so the native execution of a request is
-//! one epoch-barrier wake of the resident workers — no thread spawn, no
-//! re-partitioning.
+//! shared across every request and batch; operators cache their lane
+//! partitions at build time, so the native execution of a request is one
+//! epoch-barrier wake of the resident workers.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 
 use crate::coordinator::batch::Batcher;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{FormatKind, Metrics};
 use crate::coordinator::selector::{select_format, FormatChoice, Selection, SelectorModel};
-use crate::kernels::{native, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
 use crate::matrix::Csr;
-use crate::parallel::spmv::{panel_row_ranges, plan_assignments, spmv_spc5_panels_team};
-use crate::parallel::{balance_panels, balance_rows, Partition, SendPtr, Team};
+use crate::ops::{self, SparseOp};
+use crate::parallel::Team;
 use crate::scalar::Scalar;
-use crate::simd::trace::{NullSink, SimCtx};
-use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 use crate::util::timing::Timer;
+
+pub use crate::ops::Backend;
 
 /// Handle to a registered matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct MatrixId(pub u64);
 
-/// Which kernel family executes requests.
-///
-/// `Native` is the production wall-clock path. `Simulated` runs the paper's
-/// ISA kernels through the vector simulator (numerics-exact, no host SIMD
-/// required) — used to serve validation traffic and to exercise the fused
-/// SpMM batch path on both target ISAs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// Optimized host kernels (AVX-512 when available, portable otherwise).
-    Native,
-    /// The paper's simulated ISA kernels for the given target.
-    Simulated(SimIsa),
-}
-
-/// Whether the native backend compiles registered matrices into
+/// Whether the native backend compiles SPC5-selected matrices into
 /// heterogeneous-`r` execution plans ([`crate::spc5::plan`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum PlanMode {
-    /// Compile a plan for every matrix the selector keeps in SPC5 — the
+    /// Compile a plan for every matrix the selector puts in SPC5 — the
     /// production default: traffic runs the per-chunk-fastest layout.
     #[default]
     Auto,
-    /// Serve the selector's single whole-matrix format (pre-plan behavior).
+    /// Serve the selector's format as-is (pre-plan behavior).
     Off,
 }
 
-/// Cached executor state of one registered matrix: lane partitions for the
-/// service team (computed once at registration) and per-lane accumulator
-/// scratch for fused batches (allocated lazily, reused across batches).
-struct StoredExec<T: Scalar> {
-    /// CSR row ranges — the native fallback split (shared matrix, no
-    /// per-lane copies).
-    rows: Partition,
-    /// Panel ranges + matching row ranges of the SPC5 form, when present.
-    panels: Option<(Partition, Partition)>,
-    /// Chunk-index ranges + matching row ranges of the plan, when present.
-    chunks: Option<(Vec<std::ops::Range<usize>>, Partition)>,
-    /// Per-lane fused-batch accumulator scratch.
-    scratch: Vec<Mutex<Vec<T>>>,
+/// How registration resolves the execution format (CLI:
+/// `serve --format auto|csr|spc5|sell|plan`). Forced modes take their
+/// parameter (block height r, sorting window σ) from the selector's
+/// cheapest candidate, so the evidence is still gathered and reported.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FormatMode {
+    /// The three-way selector picks; [`PlanMode::Auto`] may upgrade an SPC5
+    /// selection to a compiled plan.
+    #[default]
+    Auto,
+    Csr,
+    Spc5,
+    Sell,
+    Plan,
 }
 
-impl<T: Scalar> StoredExec<T> {
-    fn build(
-        csr: &Csr<T>,
-        spc5: Option<&Spc5Matrix<T>>,
-        plan: Option<&PlannedMatrix<T>>,
-        lanes: usize,
-    ) -> Self {
-        let rows = balance_rows(csr, lanes, 1);
-        let panels = spc5.map(|m| {
-            let pp = balance_panels(m, lanes);
-            let rr = panel_row_ranges(m, &pp);
-            (pp, rr)
-        });
-        let chunks = plan.map(|p| plan_assignments(p, lanes));
-        let scratch = (0..lanes).map(|_| Mutex::new(Vec::new())).collect();
-        Self { rows, panels, chunks, scratch }
+/// Recycled backing store for the per-batch `Vec<&mut [T]>` reference
+/// lists: the *allocation* survives across batches while the short-lived
+/// borrows inside never do (the vector is emptied before it is parked).
+/// This is the fused-batch counterpart of the per-matrix accumulator
+/// scratch — without it every batch re-allocated the reference list on
+/// every backend.
+struct RefPool<T: Scalar>(Mutex<Vec<&'static mut [T]>>);
+
+impl<T: Scalar> RefPool<T> {
+    fn new() -> Self {
+        Self(Mutex::new(Vec::new()))
+    }
+
+    /// Borrow the parked (empty) vector, or a fresh one if another batch of
+    /// this matrix holds it right now.
+    fn take<'a>(&self) -> Vec<&'a mut [T]> {
+        let v: Vec<&'static mut [T]> = self
+            .0
+            .try_lock()
+            .map(|mut g| std::mem::take(&mut *g))
+            .unwrap_or_default();
+        // SAFETY: the vector is empty — transmuting its lifetime parameter
+        // transfers only the heap allocation (identical layout, no live
+        // borrows).
+        unsafe { std::mem::transmute::<Vec<&'static mut [T]>, Vec<&'a mut [T]>>(v) }
+    }
+
+    /// Park the vector's allocation for the next batch.
+    fn put(&self, mut v: Vec<&mut [T]>) {
+        v.clear();
+        // SAFETY: empty again — see `take`.
+        let v = unsafe { std::mem::transmute::<Vec<&mut [T]>, Vec<&'static mut [T]>>(v) };
+        if let Ok(mut g) = self.0.try_lock() {
+            *g = v;
+        }
     }
 }
 
-/// A registered matrix with its selected execution format.
+/// A registered matrix: its built execution operator plus the selection
+/// evidence and the per-matrix batch scratch.
 pub struct Stored<T: Scalar> {
-    pub csr: Csr<T>,
-    pub spc5: Option<Spc5Matrix<T>>,
-    /// The compiled execution plan (native backend, [`PlanMode::Auto`],
-    /// SPC5-selected matrices only). Preferred over `spc5` when present.
-    pub plan: Option<PlannedMatrix<T>>,
+    /// What executes every request and batch of this matrix.
+    pub op: Box<dyn SparseOp<T>>,
     pub selection: Selection,
-    exec: StoredExec<T>,
+    /// The metrics bucket of the resolved format.
+    pub kind: FormatKind,
+    /// Accumulator scratch for the fused serial paths (team operators carry
+    /// their own per-lane scratch and ignore it).
+    batch_scratch: Mutex<Vec<T>>,
+    refs: RefPool<T>,
 }
 
 impl<T: Scalar> Stored<T> {
-    fn spmv(&self, backend: Backend, team: &Team, x: &[T], y: &mut [T]) {
-        match backend {
-            Backend::Native => self.spmv_native(team, x, y),
-            Backend::Simulated(isa) => {
-                let mut sink = NullSink;
-                let mut ctx = SimCtx::new(T::VS, &mut sink);
-                match &self.spc5 {
-                    Some(m) => match isa {
-                        SimIsa::Avx512 => spc5_avx512::spmv_spc5_avx512(
-                            &mut ctx,
-                            m,
-                            x,
-                            y,
-                            Reduction::Manual,
-                        ),
-                        SimIsa::Sve => spc5_sve::spmv_spc5_sve(
-                            &mut ctx,
-                            m,
-                            x,
-                            y,
-                            XLoad::Single,
-                            Reduction::Manual,
-                        ),
-                    },
-                    None => crate::kernels::scalar::spmv_scalar_csr(&mut ctx, &self.csr, x, y),
-                }
-            }
-        }
-    }
-
-    /// Native single-RHS execution on the service team. A 1-lane team keeps
-    /// the serial AVX-512-capable kernels; otherwise the cached partitions
-    /// split the product across lanes (plan chunks > shared-SPC5 panels >
-    /// shared-CSR rows).
-    fn spmv_native(&self, team: &Team, x: &[T], y: &mut [T]) {
-        if team.threads() == 1 {
-            match (&self.plan, &self.spc5, self.selection.choice) {
-                (Some(plan), _, _) => plan.spmv(x, y),
-                (None, Some(m), FormatChoice::Spc5 { .. }) => {
-                    crate::kernels::native_avx512::spmv_spc5_auto(m, x, y)
-                }
-                _ => native::spmv_csr(&self.csr, x, y),
-            }
-            return;
-        }
-        let ybase = SendPtr::new(y.as_mut_ptr());
-        if let (Some(plan), Some((assign, rows))) = (&self.plan, &self.exec.chunks) {
-            team.run_parts(assign.len(), &|i| {
-                let chunks = &plan.chunks[assign[i].clone()];
-                if chunks.is_empty() {
-                    return;
-                }
-                // SAFETY: lane chunk/row ranges are disjoint (see
-                // parallel::spmv); the team's completion barrier keeps the
-                // borrow alive.
-                let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
-                crate::spc5::plan::spmv_chunks(chunks, x, ys);
-            });
-        } else if let (Some(m), Some((panels, rows))) = (&self.spc5, &self.exec.panels) {
-            // AVX-512 panel kernels with one shared x padding when the host
-            // has them — multi-lane dispatch never trades the vector kernel
-            // away (`parallel::spmv::spmv_spc5_panels_team`).
-            spmv_spc5_panels_team(m, panels, rows, team, x, y);
-        } else {
-            let rows = &self.exec.rows;
-            team.run_parts(rows.ranges.len(), &|i| {
-                let rr = rows.ranges[i].clone();
-                if rr.is_empty() {
-                    return;
-                }
-                // SAFETY: disjoint row ranges.
-                let ys = unsafe { ybase.slice(rr.clone()) };
-                native::spmv_csr_rows(&self.csr, rr, x, ys);
-            });
-        }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        self.op.spmv(x, y);
     }
 
     /// Fused multi-RHS execution of one batch: one matrix pass for all
-    /// right-hand sides on every backend, split across the team's lanes on
-    /// the native backend (per-lane scratch reused across batches).
-    fn spmv_batch(&self, backend: Backend, team: &Team, xs: &[&[T]], ys: &mut [Vec<T>]) {
-        match backend {
-            Backend::Native => self.spmv_batch_native(team, xs, ys),
-            Backend::Simulated(isa) => match &self.spc5 {
-                Some(m) => {
-                    let mut refs: Vec<&mut [T]> =
-                        ys.iter_mut().map(|y| y.as_mut_slice()).collect();
-                    let mut sink = NullSink;
-                    let mut ctx = SimCtx::new(T::VS, &mut sink);
-                    match isa {
-                        SimIsa::Avx512 => spc5_avx512::spmv_spc5_avx512_multi(
-                            &mut ctx,
-                            m,
-                            xs,
-                            &mut refs,
-                            Reduction::Manual,
-                        ),
-                        SimIsa::Sve => spc5_sve::spmv_spc5_sve_multi(
-                            &mut ctx,
-                            m,
-                            xs,
-                            &mut refs,
-                            XLoad::Single,
-                            Reduction::Manual,
-                        ),
-                    }
-                }
-                None => {
-                    for (x, y) in xs.iter().zip(ys.iter_mut()) {
-                        self.spmv(backend, team, x, y);
-                    }
-                }
-            },
-        }
-    }
-
-    fn spmv_batch_native(&self, team: &Team, xs: &[&[T]], ys: &mut [Vec<T>]) {
-        if team.threads() == 1 {
-            let mut refs: Vec<&mut [T]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
-            // Reuse the cached scratch when it is free, but never serialize
-            // concurrent same-matrix batches on it: with a 1-lane team the
-            // pool workers ARE the parallelism, and blocking one for the
-            // other's whole fused pass would defeat them. The fallback
-            // allocation is k*r elements — negligible.
-            let mut local: Vec<T> = Vec::new();
-            let mut cached = self.exec.scratch[0].try_lock();
-            let s: &mut Vec<T> = match &mut cached {
-                Ok(g) => &mut **g,
-                Err(_) => &mut local,
-            };
-            if let Some(plan) = &self.plan {
-                plan.spmv_multi_slices_with(xs, &mut refs, s);
-            } else if let Some(m) = &self.spc5 {
-                native::spmv_spc5_multi_panels(m, 0..m.npanels(), xs, &mut refs, s);
-            } else {
-                native::spmv_csr_multi_rows(&self.csr, 0..self.csr.nrows, xs, &mut refs, s);
-            }
-            return;
-        }
-        let bases: Vec<SendPtr<T>> =
-            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
-        let scratch = &self.exec.scratch;
-        if let (Some(plan), Some((assign, _rows))) = (&self.plan, &self.exec.chunks) {
-            team.run_parts(assign.len(), &|i| {
-                let chunks = &plan.chunks[assign[i].clone()];
-                if chunks.is_empty() {
-                    return;
-                }
-                let mut s = scratch[i].lock().expect("lane scratch");
-                for c in chunks {
-                    // SAFETY: chunk row ranges are disjoint across lanes.
-                    let mut sub: Vec<&mut [T]> = bases
-                        .iter()
-                        .map(|b| unsafe { b.slice(c.row0..c.row0 + c.m.nrows) })
-                        .collect();
-                    native::spmv_spc5_multi_panels(&c.m, 0..c.m.npanels(), xs, &mut sub, &mut s);
-                }
-            });
-        } else if let (Some(m), Some((panels, rows))) = (&self.spc5, &self.exec.panels) {
-            team.run_parts(panels.ranges.len(), &|i| {
-                let pr = panels.ranges[i].clone();
-                if pr.is_empty() {
-                    return;
-                }
-                // SAFETY: disjoint row ranges per panel range.
-                let mut sub: Vec<&mut [T]> =
-                    bases.iter().map(|b| unsafe { b.slice(rows.ranges[i].clone()) }).collect();
-                let mut s = scratch[i].lock().expect("lane scratch");
-                native::spmv_spc5_multi_panels(m, pr, xs, &mut sub, &mut s);
-            });
-        } else {
-            let rows = &self.exec.rows;
-            team.run_parts(rows.ranges.len(), &|i| {
-                let rr = rows.ranges[i].clone();
-                if rr.is_empty() {
-                    return;
-                }
-                // SAFETY: disjoint row ranges.
-                let mut sub: Vec<&mut [T]> =
-                    bases.iter().map(|b| unsafe { b.slice(rr.clone()) }).collect();
-                let mut s = scratch[i].lock().expect("lane scratch");
-                native::spmv_csr_multi_rows(&self.csr, rr, xs, &mut sub, &mut s);
-            });
-        }
+    /// right-hand sides on every backend. Reuses the cached scratch when it
+    /// is free, but never serializes concurrent same-matrix batches on it:
+    /// the fallback allocation is k*r elements — negligible.
+    fn spmv_batch(&self, xs: &[&[T]], ys: &mut [Vec<T>]) {
+        let mut refs = self.refs.take();
+        refs.extend(ys.iter_mut().map(|y| y.as_mut_slice()));
+        let mut local: Vec<T> = Vec::new();
+        let mut cached = self.batch_scratch.try_lock();
+        let s: &mut Vec<T> = match &mut cached {
+            Ok(g) => &mut **g,
+            Err(_) => &mut local,
+        };
+        self.op.spmv_multi(xs, &mut refs, s);
+        drop(cached);
+        self.refs.put(refs);
     }
 }
 
 struct Shared<T: Scalar> {
     backend: Backend,
     plan_mode: PlanMode,
+    format_mode: FormatMode,
     /// The persistent executor every native request/batch runs on, created
     /// once per service and shared across all matrices.
     team: Arc<Team>,
@@ -365,10 +216,9 @@ impl<T: Scalar> SpmvService<T> {
         Self::with_exec(workers, max_batch, backend, plan_mode, workers)
     }
 
-    /// Full constructor: backend, native plan mode and executor width — the
-    /// service team gets `threads` lanes (subject to the `SPC5_THREADS`
-    /// override), independent of the request-worker count (CLI:
-    /// `serve --threads`).
+    /// Backend, plan mode and executor width — the service team gets
+    /// `threads` lanes (subject to the `SPC5_THREADS` override),
+    /// independent of the request-worker count (CLI: `serve --threads`).
     pub fn with_exec(
         workers: usize,
         max_batch: usize,
@@ -376,9 +226,23 @@ impl<T: Scalar> SpmvService<T> {
         plan_mode: PlanMode,
         threads: usize,
     ) -> Self {
+        Self::with_format(workers, max_batch, backend, plan_mode, threads, FormatMode::Auto)
+    }
+
+    /// Full constructor: backend, plan mode, executor width and the format
+    /// resolution mode (CLI: `serve --format auto|csr|spc5|sell|plan`).
+    pub fn with_format(
+        workers: usize,
+        max_batch: usize,
+        backend: Backend,
+        plan_mode: PlanMode,
+        threads: usize,
+        format_mode: FormatMode,
+    ) -> Self {
         let shared = Arc::new(Shared {
             backend,
             plan_mode,
+            format_mode,
             team: Arc::new(Team::new(threads)),
             matrices: RwLock::new(HashMap::new()),
             queue: Mutex::new(Batcher::new(max_batch)),
@@ -396,38 +260,51 @@ impl<T: Scalar> SpmvService<T> {
         Self { shared, next_id: AtomicU64::new(1), dispatcher: Some(dispatcher) }
     }
 
-    /// Register a matrix; the selector picks and pre-builds its format. On
-    /// the simulated backends an SPC5 form is always built (β(1,VS) when the
-    /// selector keeps CSR) so batches can run the fused SpMM kernels. On the
-    /// native backend with [`PlanMode::Auto`], SPC5-selected matrices are
-    /// additionally compiled into a heterogeneous-`r` execution plan, which
-    /// then serves all traffic.
+    /// Resolve the execution format for one registration: the CLI override,
+    /// or the selector's choice with [`PlanMode::Auto`] upgrading SPC5 to a
+    /// compiled plan on the native backend.
+    fn resolve_choice(&self, selection: &Selection) -> FormatChoice {
+        match self.shared.format_mode {
+            FormatMode::Csr => FormatChoice::Csr,
+            FormatMode::Spc5 => FormatChoice::Spc5 { r: selection.best_spc5_r() },
+            FormatMode::Sell => FormatChoice::Sell { sigma: selection.best_sell_sigma() },
+            FormatMode::Plan => FormatChoice::Planned,
+            FormatMode::Auto => {
+                match (self.shared.backend, self.shared.plan_mode, selection.choice) {
+                    (Backend::Native, PlanMode::Auto, FormatChoice::Spc5 { .. }) => {
+                        FormatChoice::Planned
+                    }
+                    (_, _, choice) => choice,
+                }
+            }
+        }
+    }
+
+    /// Register a matrix: the selector gathers its evidence, the format
+    /// mode resolves a [`FormatChoice`], and [`crate::ops::build_backend`]
+    /// builds the operator that serves all of this matrix's traffic.
     pub fn register(&self, csr: Csr<T>) -> MatrixId {
         let selection = select_format(&csr, &SelectorModel::default());
-        let plan = match (self.shared.backend, self.shared.plan_mode, selection.choice) {
-            (Backend::Native, PlanMode::Auto, FormatChoice::Spc5 { .. }) => {
-                Some(PlannedMatrix::build(&csr, &PlanConfig::default()))
-            }
-            _ => None,
+        let choice = self.resolve_choice(&selection);
+        let op = ops::build_backend(&csr, choice, self.shared.backend, &self.shared.team);
+        // The metrics bucket tracks what *executes*: the simulated backends
+        // always serve an SPC5 form regardless of the resolved choice.
+        let kind = match self.shared.backend {
+            Backend::Simulated(_) => FormatKind::Spc5,
+            Backend::Native => kind_of(choice),
         };
-        // The plan supersedes the whole-matrix conversion — don't build and
-        // hold a second copy of every value/mask/index when one exists.
-        let spc5 = match (&plan, self.shared.backend, selection.choice) {
-            (Some(_), _, _) => None,
-            (None, _, FormatChoice::Spc5 { r }) => Some(csr_to_spc5(&csr, r, T::VS)),
-            (None, Backend::Simulated(_), FormatChoice::Csr) => {
-                Some(csr_to_spc5(&csr, 1, T::VS))
-            }
-            (None, Backend::Native, FormatChoice::Csr) => None,
-        };
+        self.shared.metrics.record_selection(kind);
         let id = MatrixId(self.next_id.fetch_add(1, Ordering::SeqCst));
-        let exec =
-            StoredExec::build(&csr, spc5.as_ref(), plan.as_ref(), self.shared.team.threads());
-        self.shared
-            .matrices
-            .write()
-            .expect("matrices lock")
-            .insert(id, Arc::new(Stored { csr, spc5, plan, selection, exec }));
+        self.shared.matrices.write().expect("matrices lock").insert(
+            id,
+            Arc::new(Stored {
+                op,
+                selection,
+                kind,
+                batch_scratch: Mutex::new(Vec::new()),
+                refs: RefPool::new(),
+            }),
+        );
         id
     }
 
@@ -437,15 +314,25 @@ impl<T: Scalar> SpmvService<T> {
         &self.shared.team
     }
 
-    /// The compiled plan's block height per chunk, when the matrix runs
-    /// through a plan (native backend, [`PlanMode::Auto`], SPC5-selected).
+    /// The compiled plan's block height per chunk, when the matrix executes
+    /// through a heterogeneous-`r` plan.
     pub fn plan_chunk_rs(&self, id: MatrixId) -> Option<Vec<usize>> {
         self.shared
             .matrices
             .read()
             .expect("matrices lock")
             .get(&id)
-            .and_then(|s| s.plan.as_ref().map(|p| p.chunk_rs()))
+            .and_then(|s| s.op.chunk_rs())
+    }
+
+    /// The execution-form label of a registered matrix's operator.
+    pub fn op_label(&self, id: MatrixId) -> Option<String> {
+        self.shared
+            .matrices
+            .read()
+            .expect("matrices lock")
+            .get(&id)
+            .map(|s| s.op.label())
     }
 
     /// The selection evidence for a registered matrix.
@@ -475,7 +362,7 @@ impl<T: Scalar> SpmvService<T> {
                     let _ = tx.send(Err(ServiceError::UnknownMatrix(id)));
                     return rx;
                 }
-                Some(s) => s.csr.ncols,
+                Some(s) => s.op.ncols(),
             }
         };
         if x.len() != want {
@@ -496,9 +383,20 @@ impl<T: Scalar> SpmvService<T> {
         self.submit(id, x).recv().map_err(|_| ServiceError::ShutDown)?
     }
 
-    /// Metrics snapshot as JSON.
+    /// Metrics snapshot as JSON (includes the per-format selection and
+    /// request mix).
     pub fn metrics_json(&self) -> crate::util::json::Json {
         self.shared.metrics.snapshot()
+    }
+}
+
+/// Map a resolved choice onto its metrics bucket.
+fn kind_of(choice: FormatChoice) -> FormatKind {
+    match choice {
+        FormatChoice::Csr => FormatKind::Csr,
+        FormatChoice::Spc5 { .. } => FormatKind::Spc5,
+        FormatChoice::Sell { .. } => FormatKind::Sell,
+        FormatChoice::Planned => FormatKind::Plan,
     }
 }
 
@@ -543,20 +441,19 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
             Some(stored) => {
                 let shared = Arc::clone(&shared);
                 pool.submit(move || {
-                    let backend = shared.backend;
-                    let team = &shared.team;
-                    let flops = 2 * stored.csr.nnz() as u64;
+                    let flops = stored.op.flops();
+                    let nrows = stored.op.nrows();
                     let n = batch.items.len();
+                    shared.metrics.record_format_requests(stored.kind, n as u64);
                     if n > 1 {
                         // Fused multi-vector pass: the matrix stream is read
-                        // once for the whole batch (Stored::spmv_batch) on
-                        // the native *and* simulated backends — the batching
-                        // win of §Perf.
+                        // once for the whole batch on every backend — the
+                        // batching win of §Perf.
                         let xs: Vec<&[T]> =
                             batch.items.iter().map(|r| r.x.as_slice()).collect();
                         let mut ys: Vec<Vec<T>> =
-                            (0..n).map(|_| vec![T::zero(); stored.csr.nrows]).collect();
-                        stored.spmv_batch(backend, team, &xs, &mut ys);
+                            (0..n).map(|_| vec![T::zero(); nrows]).collect();
+                        stored.spmv_batch(&xs, &mut ys);
                         for (req, y) in batch.items.into_iter().zip(ys) {
                             shared
                                 .metrics
@@ -566,8 +463,8 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
                     } else {
                         // Single request: plain path.
                         for req in batch.items {
-                            let mut y = vec![T::zero(); stored.csr.nrows];
-                            stored.spmv(backend, team, &req.x, &mut y);
+                            let mut y = vec![T::zero(); nrows];
+                            stored.spmv(&req.x, &mut y);
                             shared
                                 .metrics
                                 .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
@@ -584,6 +481,7 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::SimIsa;
     use crate::matrix::gen;
 
     fn service() -> (SpmvService<f64>, MatrixId, Csr<f64>) {
@@ -646,6 +544,8 @@ mod tests {
         let (svc, id, _) = service();
         let sel = svc.selection(id).unwrap();
         assert_eq!(sel.candidates.len(), 4);
+        assert_eq!(sel.sell_candidates.len(), 3);
+        assert!(svc.op_label(id).is_some());
     }
 
     #[test]
@@ -683,6 +583,7 @@ mod tests {
             }
             .generate(13);
             let id = svc.register(m.clone());
+            assert!(svc.op_label(id).unwrap().starts_with("sim-"), "{:?}", svc.op_label(id));
             // A burst of same-matrix requests coalesces into fused batches.
             let xs: Vec<Vec<f64>> = (0..12)
                 .map(|k| (0..96).map(|i| ((i * (k + 1)) % 9) as f64 * 0.5).collect())
@@ -699,8 +600,8 @@ mod tests {
 
     #[test]
     fn simulated_backend_serves_scattered_matrix() {
-        // A matrix the selector keeps in CSR still gets a β(1,VS) form on
-        // the simulated backend, so batches stay fused.
+        // A matrix the selector keeps row-oriented still gets a β(1,VS)
+        // form on the simulated backend, so batches stay fused.
         let svc: SpmvService<f64> =
             SpmvService::with_backend(1, 4, Backend::Simulated(SimIsa::Sve));
         let m: Csr<f64> = gen::random_uniform(80, 1.2, 3);
@@ -731,7 +632,7 @@ mod tests {
         let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.1).cos()).collect();
         let mut want = vec![0.0; 300];
         m.spmv(&x, &mut want);
-        // Single request (plan.spmv) and a batch (plan.spmv_multi_slices).
+        // Single request and a fused batch, both through the plan operator.
         let got = svc.spmv(id, x.clone()).unwrap();
         crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
         let rxs: Vec<_> = (0..6).map(|_| svc.submit(id, x.clone())).collect();
@@ -750,7 +651,7 @@ mod tests {
     }
 
     #[test]
-    fn csr_selected_matrix_gets_no_plan() {
+    fn non_spc5_selection_gets_no_plan() {
         let svc = SpmvService::new(1, 4);
         let scattered: Csr<f64> = gen::random_uniform(200, 1.5, 9);
         let id = svc.register(scattered.clone());
@@ -760,6 +661,51 @@ mod tests {
         scattered.spmv(&x, &mut want);
         let got = svc.spmv(id, x).unwrap();
         crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn forced_formats_serve_correctly_and_count() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 140,
+            ncols: 140,
+            nnz_per_row: 8.0,
+            run_len: 3.0,
+            row_corr: 0.6,
+            ..Default::default()
+        }
+        .generate(31);
+        let x: Vec<f64> = (0..140).map(|i| ((i % 11) as f64 - 5.0) * 0.3).collect();
+        let mut want = vec![0.0; 140];
+        m.spmv(&x, &mut want);
+        for (mode, kind, label_frag) in [
+            (FormatMode::Csr, FormatKind::Csr, "csr"),
+            (FormatMode::Spc5, FormatKind::Spc5, "beta("),
+            (FormatMode::Sell, FormatKind::Sell, "sell"),
+            (FormatMode::Plan, FormatKind::Plan, "planned"),
+        ] {
+            let svc: SpmvService<f64> =
+                SpmvService::with_format(2, 8, Backend::Native, PlanMode::Auto, 2, mode);
+            let id = svc.register(m.clone());
+            let label = svc.op_label(id).unwrap();
+            assert!(label.contains(label_frag), "mode {mode:?}: label {label}");
+            // Singles and a fused batch both serve correctly.
+            let got = svc.spmv(id, x.clone()).unwrap();
+            crate::scalar::assert_allclose(&got, &want, 1e-11, 1e-12);
+            let rxs: Vec<_> = (0..5).map(|_| svc.submit(id, x.clone())).collect();
+            for rx in rxs {
+                crate::scalar::assert_allclose(
+                    &rx.recv().unwrap().unwrap(),
+                    &want,
+                    1e-11,
+                    1e-12,
+                );
+            }
+            // The format mix is visible in the metrics.
+            assert_eq!(svc.shared.metrics.selected(kind), 1, "mode {mode:?}");
+            assert_eq!(svc.shared.metrics.format_requests(kind), 6, "mode {mode:?}");
+            let snap = svc.metrics_json().to_string();
+            assert!(snap.contains("format_selected"), "{snap}");
+        }
     }
 
     #[test]
@@ -774,8 +720,8 @@ mod tests {
     #[test]
     fn wide_team_serves_all_native_formats() {
         // 4-lane executor, every native execution shape: plan chunks
-        // (blocky matrix), shared-SPC5 panels (plan off), shared-CSR rows
-        // (scattered matrix) — singles and fused batches.
+        // (blocky matrix), shared-SPC5 panels (plan off), team CSR/SELL
+        // (scattered matrices) — singles and fused batches.
         for plan_mode in [PlanMode::Auto, PlanMode::Off] {
             let svc: SpmvService<f64> =
                 SpmvService::with_exec(2, 8, Backend::Native, plan_mode, 4);
@@ -808,7 +754,7 @@ mod tests {
 
     #[test]
     fn oversubscribed_team_small_matrix() {
-        // More lanes than panels/rows: empty lane ranges must be harmless.
+        // More lanes than chunks/rows: empty lane ranges must be harmless.
         let svc: SpmvService<f64> =
             SpmvService::with_exec(1, 4, Backend::Native, PlanMode::Auto, 16);
         let tiny: Csr<f64> = gen::Structured {

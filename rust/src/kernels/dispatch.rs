@@ -1,5 +1,6 @@
-//! Kernel configuration surface shared by the bench harness, the CLI and the
-//! coordinator's format selector.
+//! Simulated-kernel configuration surface used by the bench harness and the
+//! table/figure regenerators. (Native execution lives behind
+//! [`crate::ops::SparseOp`].)
 //!
 //! [`run_simulated`] executes one fully-specified kernel ([`KernelCfg`]) on
 //! one right-hand side; [`run_simulated_multi`] fuses `k` right-hand sides
@@ -25,13 +26,10 @@
 //! assert!(sink.total_ops() > 0);
 //! ```
 
-use std::sync::Arc;
-
 use crate::matrix::Csr;
-use crate::parallel::{ParallelCsr, ParallelPlanned, ParallelSpc5, Team};
 use crate::scalar::Scalar;
 use crate::simd::trace::{CostSink, SimCtx};
-use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
+use crate::spc5::{csr_to_spc5, Spc5Matrix};
 
 /// Which simulated ISA a kernel runs on (the paper's two testbeds).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -106,27 +104,21 @@ pub struct KernelCfg {
     pub kind: KernelKind,
 }
 
-/// Owns the per-(r) SPC5 conversions of one matrix so repeated kernel runs
-/// do not re-convert. The benches and the coordinator build one per matrix.
+/// Owns the per-(r) SPC5 conversions of one matrix so repeated *simulated*
+/// kernel runs do not re-convert. The bench harness builds one per matrix.
+///
+/// The native execution forms (serial, team-dispatched, planned, SELL) live
+/// behind [`crate::ops::SparseOp`] and its `build` factory — this type no
+/// longer reaches into the parallel runtime, which is what broke the old
+/// `kernels ⇄ parallel` layering cycle.
 pub struct MatrixSet<T: Scalar> {
     pub csr: Csr<T>,
     spc5: std::collections::HashMap<usize, Spc5Matrix<T>>,
-    planned: Option<PlannedMatrix<T>>,
-    par_csr: Option<ParallelCsr<T>>,
-    par_spc5: std::collections::HashMap<usize, ParallelSpc5<T>>,
-    par_planned: Option<ParallelPlanned<T>>,
 }
 
 impl<T: Scalar> MatrixSet<T> {
     pub fn new(csr: Csr<T>) -> Self {
-        Self {
-            csr,
-            spc5: std::collections::HashMap::new(),
-            planned: None,
-            par_csr: None,
-            par_spc5: std::collections::HashMap::new(),
-            par_planned: None,
-        }
+        Self { csr, spc5: std::collections::HashMap::new() }
     }
 
     /// Get (convert once) the β(r,VS) form.
@@ -135,55 +127,11 @@ impl<T: Scalar> MatrixSet<T> {
         self.spc5.entry(r).or_insert_with(|| csr_to_spc5(csr, r, T::VS))
     }
 
-    /// Get (compile once) the default execution plan
-    /// ([`crate::spc5::plan`]): heterogeneous-`r` chunks selected by the
-    /// cycle model.
-    pub fn planned(&mut self) -> &PlannedMatrix<T> {
-        if self.planned.is_none() {
-            self.planned = Some(PlannedMatrix::build(&self.csr, &PlanConfig::default()));
-        }
-        self.planned.as_ref().unwrap()
-    }
-
     /// Pre-convert all four β sizes.
     pub fn prepare_all(&mut self) {
         for r in [1, 2, 4, 8] {
             self.spc5(r);
         }
-    }
-
-    /// Get (partition once) the row-split CSR form bound to `team`. Rebuilt
-    /// only if a *different* team is handed in.
-    pub fn parallel_csr(&mut self, team: &Arc<Team>) -> &ParallelCsr<T> {
-        if self.par_csr.as_ref().map_or(true, |p| !Arc::ptr_eq(p.team(), team)) {
-            self.par_csr = Some(ParallelCsr::with_team(&self.csr, Arc::clone(team)));
-        }
-        self.par_csr.as_ref().unwrap()
-    }
-
-    /// Get (partition + convert once) the per-lane β(r,VS) form bound to
-    /// `team`.
-    pub fn parallel_spc5(&mut self, r: usize, team: &Arc<Team>) -> &ParallelSpc5<T> {
-        let stale = self
-            .par_spc5
-            .get(&r)
-            .map_or(true, |p| !Arc::ptr_eq(p.team(), team));
-        if stale {
-            self.par_spc5.insert(r, ParallelSpc5::with_team(&self.csr, r, Arc::clone(team)));
-        }
-        self.par_spc5.get(&r).unwrap()
-    }
-
-    /// Get (compile + assign once) the planned form bound to `team`.
-    pub fn parallel_planned(&mut self, team: &Arc<Team>) -> &ParallelPlanned<T> {
-        if self.par_planned.as_ref().map_or(true, |p| !Arc::ptr_eq(p.team(), team)) {
-            self.par_planned = Some(ParallelPlanned::with_team(
-                &self.csr,
-                &PlanConfig::default(),
-                Arc::clone(team),
-            ));
-        }
-        self.par_planned.as_ref().unwrap()
     }
 }
 
@@ -289,61 +237,6 @@ pub fn run_simulated_multi<T: Scalar>(
     ys
 }
 
-/// A native (wall-clock) kernel choice — the host-side counterpart of
-/// [`KernelCfg`], used by the benches and anything that wants one entry
-/// point over the CSR baseline, a fixed β(r,VS) and the adaptive plan.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum NativeKernel {
-    /// Unrolled native CSR baseline.
-    Csr,
-    /// Portable monomorphized SPC5 at a fixed block height.
-    Spc5 { r: usize },
-    /// The model-driven heterogeneous-`r` execution plan.
-    Planned,
-}
-
-impl NativeKernel {
-    pub fn label(self) -> String {
-        match self {
-            NativeKernel::Csr => "native-csr".into(),
-            NativeKernel::Spc5 { r } => format!("native beta({r},VS)"),
-            NativeKernel::Planned => "native-planned".into(),
-        }
-    }
-}
-
-/// Run one native kernel on the host, returning `y = A·x`. Conversions and
-/// the plan are cached in the [`MatrixSet`], so repeated timing runs measure
-/// execution, not compilation.
-pub fn run_native<T: Scalar>(kind: NativeKernel, set: &mut MatrixSet<T>, x: &[T]) -> Vec<T> {
-    let mut y = vec![T::zero(); set.csr.nrows];
-    match kind {
-        NativeKernel::Csr => super::native::spmv_csr(&set.csr, x, &mut y),
-        NativeKernel::Spc5 { r } => super::native::spmv_spc5(set.spc5(r), x, &mut y),
-        NativeKernel::Planned => set.planned().spmv_portable(x, &mut y),
-    }
-    y
-}
-
-/// Run one native kernel data-parallel on the persistent `team`, returning
-/// `y = A·x`. Partitions, conversions and plan assignments are cached in the
-/// [`MatrixSet`] (keyed to the team), so repeated calls measure executor
-/// dispatch plus kernel execution — no re-partitioning, no thread spawn.
-pub fn run_native_team<T: Scalar>(
-    kind: NativeKernel,
-    set: &mut MatrixSet<T>,
-    x: &[T],
-    team: &Arc<Team>,
-) -> Vec<T> {
-    let mut y = vec![T::zero(); set.csr.nrows];
-    match kind {
-        NativeKernel::Csr => set.parallel_csr(team).spmv(x, &mut y),
-        NativeKernel::Spc5 { r } => set.parallel_spc5(r, team).spmv(x, &mut y),
-        NativeKernel::Planned => set.parallel_planned(team).spmv(x, &mut y),
-    }
-    y
-}
-
 /// Floating point operations of one SpMV (the paper counts 2 per nnz).
 pub fn flops_of<T: Scalar>(set: &MatrixSet<T>) -> u64 {
     2 * set.csr.nnz() as u64
@@ -428,72 +321,6 @@ mod tests {
             }
         }
         assert_eq!(flops_of_multi(&set, 3), 3 * flops_of(&set));
-    }
-
-    #[test]
-    fn native_kernels_agree_including_planned() {
-        let csr: Csr<f64> = gen::Structured {
-            nrows: 100,
-            ncols: 100,
-            nnz_per_row: 8.0,
-            run_len: 3.0,
-            row_corr: 0.6,
-            skew: 0.5,
-            bandwidth: None,
-        }
-        .generate(19);
-        let x: Vec<f64> = (0..100).map(|i| (i % 11) as f64 * 0.2 - 1.0).collect();
-        let mut want = vec![0.0; 100];
-        csr.spmv(&x, &mut want);
-        let mut set = MatrixSet::new(csr);
-        for kind in [
-            NativeKernel::Csr,
-            NativeKernel::Spc5 { r: 1 },
-            NativeKernel::Spc5 { r: 4 },
-            NativeKernel::Planned,
-        ] {
-            let y = run_native(kind, &mut set, &x);
-            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
-            assert!(!kind.label().is_empty());
-        }
-        // The plan is compiled once and cached.
-        let p1 = set.planned() as *const _;
-        let p2 = set.planned() as *const _;
-        assert_eq!(p1, p2);
-    }
-
-    #[test]
-    fn native_team_dispatch_agrees_with_serial() {
-        let csr: Csr<f64> = gen::Structured {
-            nrows: 150,
-            ncols: 150,
-            nnz_per_row: 7.0,
-            run_len: 2.5,
-            row_corr: 0.5,
-            skew: 0.3,
-            bandwidth: None,
-        }
-        .generate(29);
-        let x: Vec<f64> = (0..150).map(|i| (i % 9) as f64 * 0.25 - 1.0).collect();
-        let mut set = MatrixSet::new(csr);
-        let team = Arc::new(Team::exact(3));
-        for kind in [
-            NativeKernel::Csr,
-            NativeKernel::Spc5 { r: 2 },
-            NativeKernel::Spc5 { r: 4 },
-            NativeKernel::Planned,
-        ] {
-            let want = run_native(kind, &mut set, &x);
-            // Same team handed twice: the parallel form is cached and
-            // repeated dispatches stay consistent.
-            for _ in 0..2 {
-                let y = run_native_team(kind, &mut set, &x, &team);
-                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
-            }
-        }
-        let p1 = set.parallel_spc5(4, &team) as *const _;
-        let p2 = set.parallel_spc5(4, &team) as *const _;
-        assert_eq!(p1, p2);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!   measured by wall-clock on this host (`benches/native_hotpath.rs`) — the
 //!   performance-optimized deliverable.
 //!
-//! [`dispatch`] provides the unified configuration surface used by the bench
-//! harness and the coordinator.
+//! [`dispatch`] provides the *simulated-kernel* configuration surface used
+//! by the bench harness; the native execution forms are unified behind
+//! [`crate::ops::SparseOp`] (which is the only module that sees both the
+//! kernels and the parallel runtime).
 
 pub mod csr_vec;
 pub mod dispatch;
@@ -23,6 +25,4 @@ pub mod scalar;
 pub mod spc5_avx512;
 pub mod spc5_sve;
 
-pub use dispatch::{
-    run_native, KernelCfg, KernelKind, MatrixSet, NativeKernel, Reduction, SimIsa, XLoad,
-};
+pub use dispatch::{KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad};

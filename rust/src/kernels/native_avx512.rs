@@ -13,6 +13,7 @@
 
 #![allow(unsafe_op_in_unsafe_fn)]
 
+use crate::matrix::sell::SellMatrix;
 use crate::scalar::Scalar;
 use crate::spc5::Spc5Matrix;
 
@@ -115,6 +116,70 @@ pub fn spmv_spc5_panels_f32(
     true
 }
 
+/// AVX-512 f64 SELL-C-σ SpMV (`y = A·x`), C = 8: one 512-bit FMA per column
+/// slot processes 8 rows. Returns false (computing nothing) when the CPU
+/// lacks AVX-512F or the chunk height is not 8. The x window is gathered
+/// with scalar loads into a vector register (keeps us on the stabilized
+/// intrinsic subset; the FMA over 8 rows per slot is where SELL's
+/// vectorization win lives).
+pub fn spmv_sell_f64(m: &SellMatrix<f64>, x: &[f64], y: &mut [f64]) -> bool {
+    if m.c != 8 || !available() {
+        return false;
+    }
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::sell_f64(m, x, y);
+    }
+    true
+}
+
+/// AVX-512 f32 SELL-C-σ SpMV, C = 16. Same contract as [`spmv_sell_f64`].
+pub fn spmv_sell_f32(m: &SellMatrix<f32>, x: &[f32], y: &mut [f32]) -> bool {
+    if m.c != 16 || !available() {
+        return false;
+    }
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::sell_f32(m, x, y);
+    }
+    true
+}
+
+/// Generic auto-dispatch for SELL: real AVX-512 kernel when the CPU supports
+/// it and `c == VS`, the exact-order portable kernel otherwise. The AVX
+/// path fuses multiply-add (FMA rounding), so it matches the portable
+/// kernel to tolerance, not bitwise — callers that need the bitwise CSR
+/// anchor (the ops equivalence suite) use [`SellMatrix::spmv`] directly.
+pub fn spmv_sell_auto<T: Scalar>(m: &SellMatrix<T>, x: &[T], y: &mut [T]) {
+    use std::any::TypeId;
+    if available() {
+        if TypeId::of::<T>() == TypeId::of::<f64>() && m.c == 8 {
+            // SAFETY: T == f64 (checked above); identity casts.
+            let m64 = unsafe { &*(m as *const SellMatrix<T> as *const SellMatrix<f64>) };
+            let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+            let y64 =
+                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
+            if spmv_sell_f64(m64, x64, y64) {
+                return;
+            }
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() && m.c == 16 {
+            // SAFETY: T == f32 (checked above); identity casts.
+            let m32 = unsafe { &*(m as *const SellMatrix<T> as *const SellMatrix<f32>) };
+            let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+            let y32 =
+                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
+            if spmv_sell_f32(m32, x32, y32) {
+                return;
+            }
+        }
+    }
+    m.spmv(x, y);
+}
+
 #[cfg(target_arch = "x86_64")]
 mod imp {
     use super::*;
@@ -192,6 +257,104 @@ mod imp {
             }
             for j in 0..rows_here {
                 *y.get_unchecked_mut(row0 + j) = _mm512_reduce_add_pd(sums[j]);
+            }
+        }
+    }
+
+    /// SELL-C-σ, C = 8, f64: per chunk one 8-lane accumulator; per column
+    /// slot one packed value load, one gathered x window, one FMA. Results
+    /// scatter to `y[perm[row]]` (σ-sorting displaced the rows).
+    ///
+    /// Padding lanes gather **nothing** (their x stays 0.0, their stored
+    /// value is an exact 0.0, so the FMA adds +0.0) — a padded slot never
+    /// touches x, which keeps non-finite x entries from leaking NaN into
+    /// rows that do not reference them. Lanes of a chunk are length-sorted
+    /// (format invariant), so the active set per slot is a shrinking
+    /// prefix.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn sell_f64(m: &SellMatrix<f64>, x: &[f64], y: &mut [f64]) {
+        let xp = x.as_ptr();
+        let vp = m.vals.as_ptr();
+        let cp = m.col_idx.as_ptr();
+        for k in 0..m.nchunks() {
+            let lo = *m.chunk_ptr.get_unchecked(k) as usize;
+            let hi = *m.chunk_ptr.get_unchecked(k + 1) as usize;
+            let lens = &m.row_len[k * 8..(k + 1) * 8];
+            let mut active = 8usize;
+            while active > 0 && lens[active - 1] == 0 {
+                active -= 1;
+            }
+            let mut sum = _mm512_setzero_pd();
+            let mut base = lo;
+            let mut s = 0usize;
+            while base < hi {
+                while active > 0 && (lens[active - 1] as usize) <= s {
+                    active -= 1;
+                }
+                let mut xw = [0.0f64; 8];
+                for (j, w) in xw.iter_mut().enumerate().take(active) {
+                    // SAFETY: col_idx < ncols for real slots (format
+                    // invariant); only active (non-padding) lanes gather.
+                    *w = *xp.add(*cp.add(base + j) as usize);
+                }
+                let xv = _mm512_loadu_pd(xw.as_ptr());
+                let vv = _mm512_loadu_pd(vp.add(base));
+                sum = _mm512_fmadd_pd(vv, xv, sum);
+                base += 8;
+                s += 1;
+            }
+            let mut out = [0.0f64; 8];
+            _mm512_storeu_pd(out.as_mut_ptr(), sum);
+            let row0 = k * 8;
+            let rows_here = 8.min(m.nrows - row0);
+            for (j, &v) in out.iter().enumerate().take(rows_here) {
+                // SAFETY: perm is a bijection over [0, nrows).
+                *y.get_unchecked_mut(*m.perm.get_unchecked(row0 + j) as usize) = v;
+            }
+        }
+    }
+
+    /// SELL-C-σ, C = 16, f32 flavour of [`sell_f64`] (same padding-lane
+    /// guarantees).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn sell_f32(m: &SellMatrix<f32>, x: &[f32], y: &mut [f32]) {
+        let xp = x.as_ptr();
+        let vp = m.vals.as_ptr();
+        let cp = m.col_idx.as_ptr();
+        for k in 0..m.nchunks() {
+            let lo = *m.chunk_ptr.get_unchecked(k) as usize;
+            let hi = *m.chunk_ptr.get_unchecked(k + 1) as usize;
+            let lens = &m.row_len[k * 16..(k + 1) * 16];
+            let mut active = 16usize;
+            while active > 0 && lens[active - 1] == 0 {
+                active -= 1;
+            }
+            let mut sum = _mm512_setzero_ps();
+            let mut base = lo;
+            let mut s = 0usize;
+            while base < hi {
+                while active > 0 && (lens[active - 1] as usize) <= s {
+                    active -= 1;
+                }
+                let mut xw = [0.0f32; 16];
+                for (j, w) in xw.iter_mut().enumerate().take(active) {
+                    // SAFETY: col_idx < ncols for real slots (format
+                    // invariant); only active (non-padding) lanes gather.
+                    *w = *xp.add(*cp.add(base + j) as usize);
+                }
+                let xv = _mm512_loadu_ps(xw.as_ptr());
+                let vv = _mm512_loadu_ps(vp.add(base));
+                sum = _mm512_fmadd_ps(vv, xv, sum);
+                base += 16;
+                s += 1;
+            }
+            let mut out = [0.0f32; 16];
+            _mm512_storeu_ps(out.as_mut_ptr(), sum);
+            let row0 = k * 16;
+            let rows_here = 16.min(m.nrows - row0);
+            for (j, &v) in out.iter().enumerate().take(rows_here) {
+                // SAFETY: perm is a bijection over [0, nrows).
+                *y.get_unchecked_mut(*m.perm.get_unchecked(row0 + j) as usize) = v;
             }
         }
     }
@@ -382,6 +545,81 @@ mod tests {
         csr32.spmv(&x, &mut want);
         let mut got = vec![0.0f32; 60];
         spmv_spc5_auto(&m, &x, &mut got);
+        crate::scalar::assert_allclose(&got, &want, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn sell_avx512_matches_portable() {
+        if !available() {
+            eprintln!("SKIP: no AVX-512F on this host");
+            return;
+        }
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 301,
+            ncols: 260,
+            nnz_per_row: 7.0,
+            run_len: 2.0,
+            row_corr: 0.3,
+            skew: 0.7,
+            bandwidth: None,
+        }
+        .generate(23);
+        let x: Vec<f64> = (0..260).map(|i| (i as f64 * 0.13).cos() - 0.2).collect();
+        let mut want = vec![0.0; 301];
+        csr.spmv(&x, &mut want);
+        for sigma in [8usize, 64, 512] {
+            let m = SellMatrix::from_csr(&csr, sigma);
+            let mut got = vec![0.0; 301];
+            assert!(spmv_sell_f64(&m, &x, &mut got));
+            crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+        }
+    }
+
+    #[test]
+    fn sell_avx512_padding_never_touches_x() {
+        if !available() {
+            return;
+        }
+        // Chunk rows of unequal length force padding; x[0] is non-finite
+        // but no stored entry references column 0 — padding lanes must not
+        // gather, or NaN leaks into every short row.
+        let mut coo = crate::matrix::Coo::<f64>::new(16, 32);
+        for r in 0..16 {
+            let len = if r % 2 == 0 { 5 } else { 1 };
+            for k in 0..len {
+                coo.push(r, 1 + (r * 3 + k) % 31, 1.0 + k as f64);
+            }
+        }
+        let csr = Csr::from_coo(coo);
+        let mut x: Vec<f64> = (0..32).map(|i| i as f64 * 0.5).collect();
+        x[0] = f64::INFINITY;
+        let mut want = vec![0.0; 16];
+        csr.spmv(&x, &mut want);
+        let m = SellMatrix::from_csr(&csr, 16);
+        let mut got = vec![0.0; 16];
+        assert!(spmv_sell_f64(&m, &x, &mut got));
+        assert!(got.iter().all(|v| v.is_finite()), "{got:?}");
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn sell_auto_both_precisions() {
+        let csr64: Csr<f64> = gen::random_uniform(90, 4.0, 4);
+        let m = SellMatrix::from_csr(&csr64, 32);
+        let x = vec![1.25; csr64.ncols];
+        let mut want = vec![0.0; 90];
+        csr64.spmv(&x, &mut want);
+        let mut got = vec![0.0; 90];
+        spmv_sell_auto(&m, &x, &mut got);
+        crate::scalar::assert_allclose(&got, &want, 1e-12, 1e-12);
+
+        let csr32: Csr<f32> = gen::random_uniform(90, 4.0, 4);
+        let m = SellMatrix::from_csr(&csr32, 32);
+        let x = vec![0.75f32; csr32.ncols];
+        let mut want = vec![0.0f32; 90];
+        csr32.spmv(&x, &mut want);
+        let mut got = vec![0.0f32; 90];
+        spmv_sell_auto(&m, &x, &mut got);
         crate::scalar::assert_allclose(&got, &want, 1e-5, 1e-5);
     }
 

@@ -30,6 +30,15 @@
 //!   team per solve) and the coordinator (one team per service, cached
 //!   per-matrix lane partitions); `std::thread::scope` survives only for
 //!   construction-time conversion work,
+//! - a unified sparse-operator layer ([`ops`]): every execution form —
+//!   serial CSR/SPC5/SELL/planned, the team-dispatched parallel forms, the
+//!   simulated-ISA backends — behind one [`ops::SparseOp`] trait with a
+//!   `build(csr, FormatChoice, team)` factory; the coordinator, solvers and
+//!   benches program against the trait instead of matching on formats,
+//! - a second storage format, SELL-C-σ ([`matrix::sell`]): C = VS chunks
+//!   over σ-window length-sorted rows, with exact-order portable and
+//!   AVX-512 kernels — the format the three-way selector picks where
+//!   β(r,VS) blocks degenerate to singletons,
 //! - a parallel runtime ([`parallel`]), iterative solvers ([`solver`]),
 //! - a PJRT runtime that executes the JAX/Pallas AOT artifacts ([`runtime`]),
 //! - and an SpMV coordinator service ([`coordinator`]).
@@ -45,6 +54,7 @@ pub mod spc5;
 pub mod kernels;
 pub mod perfmodel;
 pub mod parallel;
+pub mod ops;
 pub mod solver;
 pub mod coordinator;
 pub mod runtime;

@@ -13,7 +13,7 @@
 use std::path::PathBuf;
 
 use spc5::cli::Args;
-use spc5::coordinator::{Backend, FormatChoice, PlanMode, SpmvService};
+use spc5::coordinator::{Backend, FormatChoice, FormatMode, PlanMode, SpmvService};
 use spc5::kernels::{native, SimIsa};
 use spc5::matrix::{corpus_by_name_or_fail, corpus_entries, gen, mm_io, Csr};
 use spc5::parallel::ParallelSpc5;
@@ -86,10 +86,22 @@ fn cmd_info(args: &mut Args) -> Result<(), String> {
             s.bytes_ratio()
         );
     }
+    println!("\nSELL-C-sigma occupancies (f64, C=8):");
+    for sigma in [8usize, 32, 128] {
+        let s = spc5::matrix::SellStats::measure(&m, sigma, 8);
+        println!(
+            "  sell-8-{sigma:<3}: occupancy {:5.1}%  chunks {:6}  slots {:8}",
+            s.occupancy() * 100.0,
+            s.nchunks,
+            s.slots
+        );
+    }
     let sel = spc5::coordinator::select_format(&m, &Default::default());
     match sel.choice {
-        FormatChoice::Csr => println!("\nselector: keep CSR (blocks too empty)"),
+        FormatChoice::Csr => println!("\nselector: keep CSR (blocks empty, lengths skewed)"),
         FormatChoice::Spc5 { r } => println!("\nselector: SPC5 beta({r},VS)"),
+        FormatChoice::Sell { sigma } => println!("\nselector: SELL-C-sigma (sigma = {sigma})"),
+        FormatChoice::Planned => println!("\nselector: execution plan"),
     }
     Ok(())
 }
@@ -124,7 +136,7 @@ fn cmd_spmv(args: &mut Args) -> Result<(), String> {
     let r = if r == 0 {
         match spc5::coordinator::select_format(&m, &Default::default()).choice {
             FormatChoice::Spc5 { r } => r,
-            FormatChoice::Csr => 1,
+            _ => 1,
         }
     } else {
         r
@@ -219,14 +231,30 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
         "off" => PlanMode::Off,
         other => return Err(format!("unknown plan mode '{other}' (auto|off)")),
     };
+    let format = match args.opt("format", "auto").as_str() {
+        "auto" => FormatMode::Auto,
+        "csr" => FormatMode::Csr,
+        "spc5" => FormatMode::Spc5,
+        "sell" => FormatMode::Sell,
+        "plan" => FormatMode::Plan,
+        other => {
+            return Err(format!("unknown format '{other}' (auto|csr|spc5|sell|plan)"))
+        }
+    };
     args.finish()?;
-    let svc: SpmvService<f64> = SpmvService::with_exec(workers, 16, backend, plan, threads);
+    let svc: SpmvService<f64> =
+        SpmvService::with_format(workers, 16, backend, plan, threads, format);
     let m = corpus_by_name_or_fail("nd6k")?.build(100_000);
     let ncols = m.ncols;
     let id = svc.register(m);
     println!(
         "executor team: {} lane(s) (persistent; --threads, SPC5_THREADS overrides)",
         svc.team().threads()
+    );
+    println!(
+        "execution operator: {} (--format {:?})",
+        svc.op_label(id).unwrap_or_default(),
+        format
     );
     match svc.plan_chunk_rs(id) {
         Some(rs) => {

@@ -1,0 +1,606 @@
+//! SELL-C-σ storage — the second citizen of the operator layer.
+//!
+//! SELL-C-σ (Kreutzer et al.; Alappat et al.'s A64FX ECM study) groups rows
+//! into chunks of `C` consecutive rows, pads each chunk to the length of its
+//! longest row and stores it column-major, so one vector instruction
+//! processes one column slot of `C` rows. Sorting rows by length inside a
+//! window of `σ` rows before chunking keeps chunk padding small while
+//! bounding how far a row is displaced from its original position.
+//!
+//! This is the format that wins exactly where β(r,VS) loses: rows whose
+//! non-zeros are scattered (blocks degenerate to singletons) but whose
+//! *lengths* are similar — the vector unit then runs at chunk occupancy,
+//! which σ-sorting pushes toward 1. The selector scores occupancy per
+//! candidate σ ([`SellStats`]) against the CSR and SPC5 cost models.
+//!
+//! `C` is the scalar type's `VS` (8 for f64, 16 for f32) by default, matching
+//! the 512-bit vector width everywhere else in the crate.
+//!
+//! ```
+//! use spc5::matrix::gen;
+//! use spc5::matrix::sell::SellMatrix;
+//!
+//! let csr = gen::random_uniform::<f64>(64, 4.0, 7);
+//! let m = SellMatrix::from_csr(&csr, 32); // sigma = 32, C = VS = 8
+//! m.check().expect("structural invariants hold");
+//! assert_eq!(m.nnz(), csr.nnz());
+//!
+//! // The portable kernel reproduces the CSR reference *bitwise*: per row it
+//! // performs the identical multiply-add sequence in the identical order.
+//! let x = vec![1.0; 64];
+//! let mut y_sell = vec![0.0; 64];
+//! let mut y_csr = vec![0.0; 64];
+//! m.spmv(&x, &mut y_sell);
+//! csr.spmv(&x, &mut y_csr);
+//! assert_eq!(y_sell, y_csr);
+//! ```
+
+use crate::scalar::Scalar;
+
+use super::csr::Csr;
+
+/// A sparse matrix in SELL-C-σ format.
+///
+/// Rows are length-sorted inside σ-windows (σ is rounded up to a multiple of
+/// `c`, so every chunk lies inside one window), then grouped into chunks of
+/// `c` sorted rows. Chunk `k` stores `c * width_k` slots column-major:
+/// slot `s` of lane `j` lives at `chunk_ptr[k] + s*c + j`. Padding slots
+/// carry an exact zero value and column 0.
+#[derive(Clone, Debug)]
+pub struct SellMatrix<T: Scalar> {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Chunk height `C` (= the scalar's `VS` via [`SellMatrix::from_csr`]).
+    pub c: usize,
+    /// Sorting-window height σ (a multiple of `c`).
+    pub sigma: usize,
+    /// `perm[i]` = original row stored at sorted position `i` (new → old,
+    /// the [`crate::matrix::reorder`] convention). A bijection that only
+    /// permutes inside σ-windows.
+    pub perm: Vec<u32>,
+    /// Per-chunk start offset into `col_idx`/`vals`; length = nchunks + 1.
+    /// Chunk `k` holds `chunk_ptr[k+1] - chunk_ptr[k]` = `c * width_k` slots.
+    pub chunk_ptr: Vec<u32>,
+    /// Per sorted row (incl. virtual padding rows) its real non-zero count;
+    /// length = nchunks * c, non-increasing within each chunk.
+    pub row_len: Vec<u32>,
+    /// Column indices, column-major within each chunk; padding slots are 0.
+    pub col_idx: Vec<u32>,
+    /// Values, same layout; padding slots are exact zeros.
+    pub vals: Vec<T>,
+    nnz: usize,
+}
+
+impl<T: Scalar> SellMatrix<T> {
+    /// Convert `m` with the scalar type's natural chunk height `C = VS`.
+    pub fn from_csr(m: &Csr<T>, sigma: usize) -> Self {
+        Self::with_chunk(m, sigma, T::VS)
+    }
+
+    /// Convert with an explicit chunk height `c` (tests and ablations).
+    /// `sigma` is rounded up to a multiple of `c` (minimum one chunk).
+    pub fn with_chunk(m: &Csr<T>, sigma: usize, c: usize) -> Self {
+        let c = c.max(1);
+        let sigma = sigma.max(c).div_ceil(c) * c;
+        let perm = length_sorted_perm(m, sigma);
+        let nchunks = m.nrows.div_ceil(c);
+        let mut row_len = vec![0u32; nchunks * c];
+        for (i, &orig) in perm.iter().enumerate() {
+            row_len[i] = m.row_cols(orig as usize).len() as u32;
+        }
+        let mut chunk_ptr = Vec::with_capacity(nchunks + 1);
+        chunk_ptr.push(0u32);
+        let mut off = 0usize;
+        for k in 0..nchunks {
+            let w = row_len[k * c..(k + 1) * c].iter().copied().max().unwrap_or(0) as usize;
+            off += c * w;
+            chunk_ptr.push(off as u32);
+        }
+        let mut col_idx = vec![0u32; off];
+        let mut vals = vec![T::zero(); off];
+        for k in 0..nchunks {
+            let base = chunk_ptr[k] as usize;
+            for j in 0..c {
+                let i = k * c + j;
+                if i >= m.nrows {
+                    break;
+                }
+                let orig = perm[i] as usize;
+                let cols = m.row_cols(orig);
+                let rvals = m.row_vals(orig);
+                for (s, (&cc, &vv)) in cols.iter().zip(rvals).enumerate() {
+                    col_idx[base + s * c + j] = cc;
+                    vals[base + s * c + j] = vv;
+                }
+            }
+        }
+        Self {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            c,
+            sigma,
+            perm,
+            chunk_ptr,
+            row_len,
+            col_idx,
+            vals,
+            nnz: m.nnz(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn nchunks(&self) -> usize {
+        self.chunk_ptr.len() - 1
+    }
+
+    /// Stored slots (values incl. padding) — `vals.len()`.
+    pub fn slots(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column width of chunk `k`.
+    pub fn chunk_width(&self, k: usize) -> usize {
+        (self.chunk_ptr[k + 1] - self.chunk_ptr[k]) as usize / self.c
+    }
+
+    /// Real non-zeros of chunk `k` (the partitioner's balance weight).
+    pub fn chunk_nnz(&self, k: usize) -> usize {
+        self.row_len[k * self.c..(k + 1) * self.c].iter().map(|&l| l as usize).sum()
+    }
+
+    /// nnz / slots in (0, 1]; 1.0 means no padding (also for the empty
+    /// matrix). The paper-side performance predictor of this format, the
+    /// sell analogue of [`crate::spc5::Spc5Matrix::filling`].
+    pub fn occupancy(&self) -> f64 {
+        if self.slots() == 0 {
+            1.0
+        } else {
+            self.nnz as f64 / self.slots() as f64
+        }
+    }
+
+    /// Storage footprint in bytes: chunk pointers + per-row lengths + the
+    /// permutation + padded column indices and values.
+    pub fn bytes(&self) -> usize {
+        self.chunk_ptr.len() * 4
+            + self.row_len.len() * 4
+            + self.perm.len() * 4
+            + self.col_idx.len() * 4
+            + self.vals.len() * T::BYTES
+    }
+
+    /// `y = A·x` through the exact-order portable kernel: per row the
+    /// multiply-add sequence is identical (order and operations) to
+    /// [`Csr::spmv`], so the result is **bitwise** equal to the CSR
+    /// reference — the anchor the ops equivalence suite pins every other
+    /// form against.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        // SAFETY: y spans all nrows and no other writer exists.
+        unsafe { self.spmv_chunks_into(0..self.nchunks(), x, y.as_mut_ptr()) }
+    }
+
+    /// Execute only chunks `chunks`, scattering each sorted row's result to
+    /// `*ybase.add(perm[row])`. The scatter through a raw base pointer is
+    /// what lets executor lanes share one full-length `y` without aliasing
+    /// `&mut` slices: distinct chunk ranges cover distinct sorted rows, and
+    /// `perm` is a bijection, so every output element has exactly one writer.
+    ///
+    /// # Safety
+    /// `ybase` must point at (at least) `nrows` valid elements, and no other
+    /// thread may concurrently access any row permuted into `chunks`.
+    pub unsafe fn spmv_chunks_into(
+        &self,
+        chunks: std::ops::Range<usize>,
+        x: &[T],
+        ybase: *mut T,
+    ) {
+        let c = self.c;
+        for k in chunks {
+            let base = self.chunk_ptr[k] as usize;
+            for j in 0..c {
+                let i = k * c + j;
+                if i >= self.nrows {
+                    break;
+                }
+                let len = self.row_len[i] as usize;
+                let mut sum = T::zero();
+                for s in 0..len {
+                    let slot = base + s * c + j;
+                    // Same op and order as Csr::spmv: sum += v * x[col].
+                    sum += self.vals[slot] * x[self.col_idx[slot] as usize];
+                }
+                // SAFETY: perm[i] < nrows (bijection), single writer (above).
+                unsafe { *ybase.add(self.perm[i] as usize) = sum };
+            }
+        }
+    }
+
+    /// Fused multi-RHS `ys[v] = A·xs[v]`: each chunk's matrix slots are read
+    /// once for all `k` right-hand sides (`scratch` holds the k per-row
+    /// accumulators, reused across calls). Per right-hand side the
+    /// accumulation order equals [`SellMatrix::spmv`], so each fused column
+    /// is bitwise equal to its single-RHS product.
+    pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        assert_eq!(xs.len(), ys.len());
+        let k = xs.len();
+        if k == 0 {
+            return;
+        }
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.ncols);
+            assert_eq!(y.len(), self.nrows);
+        }
+        scratch.clear();
+        scratch.resize(k, T::zero());
+        let sums = &mut scratch[..];
+        self.multi_chunk_walk(0..self.nchunks(), xs, sums, |vi, row, val| {
+            ys[vi][row] = val;
+        });
+    }
+
+    /// The one fused multi-RHS chunk walk: streams the slots of `chunks`
+    /// once for all right-hand sides and hands every finished `(rhs, row)`
+    /// sum to `write` (`row` is the *original* row — the σ-sort permutation
+    /// is already applied). Both [`SellMatrix::spmv_multi`] and the
+    /// team-parallel lanes run **this** loop, so their accumulation order is
+    /// identical by construction — the bitwise team==serial contract cannot
+    /// drift. `sums` must hold `xs.len()` elements.
+    pub(crate) fn multi_chunk_walk<F: FnMut(usize, usize, T)>(
+        &self,
+        chunks: std::ops::Range<usize>,
+        xs: &[&[T]],
+        sums: &mut [T],
+        mut write: F,
+    ) {
+        debug_assert_eq!(sums.len(), xs.len());
+        let c = self.c;
+        for kk in chunks {
+            let base = self.chunk_ptr[kk] as usize;
+            for j in 0..c {
+                let i = kk * c + j;
+                if i >= self.nrows {
+                    break;
+                }
+                let len = self.row_len[i] as usize;
+                sums.fill(T::zero());
+                for s in 0..len {
+                    let slot = base + s * c + j;
+                    let v = self.vals[slot];
+                    let col = self.col_idx[slot] as usize;
+                    for (vi, x) in xs.iter().enumerate() {
+                        sums[vi] = sums[vi] + v * x[col];
+                    }
+                }
+                let row = self.perm[i] as usize;
+                for (vi, &sum) in sums.iter().enumerate() {
+                    write(vi, row, sum);
+                }
+            }
+        }
+    }
+
+    /// Validate the structural invariants; used by the property suites.
+    pub fn check(&self) -> Result<(), String> {
+        let c = self.c;
+        if c == 0 {
+            return Err("chunk height 0".into());
+        }
+        if self.sigma % c != 0 || self.sigma == 0 {
+            return Err(format!("sigma {} not a positive multiple of c {c}", self.sigma));
+        }
+        let nchunks = self.nrows.div_ceil(c);
+        if self.chunk_ptr.len() != nchunks + 1 {
+            return Err("chunk_ptr length".into());
+        }
+        if self.row_len.len() != nchunks * c {
+            return Err("row_len length".into());
+        }
+        if self.perm.len() != self.nrows {
+            return Err("perm length".into());
+        }
+        // perm is a bijection that stays inside its σ-window.
+        let mut seen = vec![false; self.nrows];
+        for (i, &p) in self.perm.iter().enumerate() {
+            let p = p as usize;
+            if p >= self.nrows || seen[p] {
+                return Err(format!("perm[{i}] = {p} not a permutation"));
+            }
+            seen[p] = true;
+            if p / self.sigma != i / self.sigma {
+                return Err(format!("perm[{i}] = {p} escapes its sigma window"));
+            }
+        }
+        let mut nnz = 0usize;
+        for k in 0..nchunks {
+            let (lo, hi) = (self.chunk_ptr[k] as usize, self.chunk_ptr[k + 1] as usize);
+            if lo > hi || hi > self.vals.len() {
+                return Err(format!("chunk {k} offsets not monotone"));
+            }
+            if (hi - lo) % c != 0 {
+                return Err(format!("chunk {k} slot count not a multiple of c"));
+            }
+            let w = (hi - lo) / c;
+            let mut maxlen = 0usize;
+            for j in 0..c {
+                let i = k * c + j;
+                let len = self.row_len[i] as usize;
+                if len > w {
+                    return Err(format!("row_len over chunk width in chunk {k}"));
+                }
+                if j > 0 && len > self.row_len[i - 1] as usize {
+                    return Err(format!("chunk {k} rows not length-sorted"));
+                }
+                if i >= self.nrows && len != 0 {
+                    return Err(format!("padding row has nnz in chunk {k}"));
+                }
+                maxlen = maxlen.max(len);
+                nnz += len;
+                for s in 0..w {
+                    let slot = lo + s * c + j;
+                    if self.col_idx[slot] as usize >= self.ncols.max(1) {
+                        return Err(format!("column out of bounds in chunk {k}"));
+                    }
+                    if s >= len && self.vals[slot].to_f64() != 0.0 {
+                        return Err(format!("padding slot non-zero in chunk {k}"));
+                    }
+                }
+            }
+            if maxlen != w {
+                return Err(format!("chunk {k} width {w} != max row length {maxlen}"));
+            }
+        }
+        if *self.chunk_ptr.last().unwrap() as usize != self.vals.len()
+            || self.col_idx.len() != self.vals.len()
+        {
+            return Err("chunk_ptr end / col_idx / vals length mismatch".into());
+        }
+        if nnz != self.nnz {
+            return Err(format!("row lengths sum {nnz} != nnz {}", self.nnz));
+        }
+        Ok(())
+    }
+}
+
+/// The within-window length-sort permutation (new → old): descending length,
+/// ties by original index — deterministic for a deterministic input.
+fn length_sorted_perm<T: Scalar>(m: &Csr<T>, sigma: usize) -> Vec<u32> {
+    let mut perm = Vec::with_capacity(m.nrows);
+    let mut w0 = 0usize;
+    while w0 < m.nrows {
+        let end = (w0 + sigma).min(m.nrows);
+        let mut rows: Vec<u32> = (w0 as u32..end as u32).collect();
+        rows.sort_by_key(|&r| {
+            (std::cmp::Reverse(m.row_cols(r as usize).len()), r)
+        });
+        perm.extend_from_slice(&rows);
+        w0 = end;
+    }
+    perm
+}
+
+/// Occupancy statistics of one SELL-C-σ candidate, computed from row lengths
+/// alone (no matrix materialization) — what the coordinator's selector
+/// scores per candidate σ.
+#[derive(Clone, Debug)]
+pub struct SellStats {
+    pub c: usize,
+    pub sigma: usize,
+    pub nnz: usize,
+    pub nchunks: usize,
+    /// Stored slots (nnz + padding).
+    pub slots: usize,
+}
+
+impl SellStats {
+    pub fn measure<T: Scalar>(m: &Csr<T>, sigma: usize, c: usize) -> Self {
+        let c = c.max(1);
+        let sigma = sigma.max(c).div_ceil(c) * c;
+        let nchunks = m.nrows.div_ceil(c);
+        let mut slots = 0usize;
+        let mut w0 = 0usize;
+        let mut lens: Vec<usize> = Vec::with_capacity(sigma);
+        while w0 < m.nrows {
+            let end = (w0 + sigma).min(m.nrows);
+            lens.clear();
+            lens.extend((w0..end).map(|r| m.row_cols(r).len()));
+            lens.sort_unstable_by(|a, b| b.cmp(a));
+            for chunk in lens.chunks(c) {
+                slots += c * chunk[0]; // sorted desc: first is the chunk max
+            }
+            w0 = end;
+        }
+        Self { c, sigma, nnz: m.nnz(), nchunks, slots }
+    }
+
+    /// nnz / slots in (0, 1]; 1.0 when there are no slots at all.
+    pub fn occupancy(&self) -> f64 {
+        if self.slots == 0 {
+            1.0
+        } else {
+            self.nnz as f64 / self.slots as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Coo};
+
+    fn reference(m: &Csr<f64>, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; m.nrows];
+        m.spmv(x, &mut y);
+        y
+    }
+
+    #[test]
+    fn matches_csr_reference_bitwise() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 123, // ragged: not a multiple of C
+            ncols: 140,
+            nnz_per_row: 6.0,
+            run_len: 2.0,
+            row_corr: 0.4,
+            skew: 0.5,
+            bandwidth: None,
+        }
+        .generate(11);
+        let x: Vec<f64> = (0..140).map(|i| (i as f64 * 0.17).sin() - 0.3).collect();
+        let want = reference(&m, &x);
+        for sigma in [1usize, 8, 32, 123, 4096] {
+            let s = SellMatrix::from_csr(&m, sigma);
+            s.check().unwrap();
+            assert_eq!(s.nnz(), m.nnz());
+            let mut y = vec![7.0; 123];
+            s.spmv(&x, &mut y);
+            assert_eq!(y, want, "sigma={sigma}");
+        }
+    }
+
+    #[test]
+    fn sorting_improves_occupancy_on_skewed_rows() {
+        // Row lengths alternate wildly; a larger sigma sorts them together.
+        let mut coo = Coo::<f64>::new(256, 512);
+        for r in 0..256 {
+            let len = if r % 8 == 0 { 40 } else { 2 };
+            for k in 0..len {
+                coo.push(r, (r * 131 + k * 7) % 512, 1.0 + k as f64);
+            }
+        }
+        let m = Csr::from_coo(coo);
+        let tight = SellMatrix::from_csr(&m, 8);
+        let wide = SellMatrix::from_csr(&m, 128);
+        assert!(
+            wide.occupancy() > tight.occupancy(),
+            "sigma=128 occupancy {} should beat sigma=8 {}",
+            wide.occupancy(),
+            tight.occupancy()
+        );
+        // Both still compute the right answer.
+        let x: Vec<f64> = (0..512).map(|i| ((i % 13) as f64 - 6.0) * 0.25).collect();
+        let want = reference(&m, &x);
+        for s in [&tight, &wide] {
+            s.check().unwrap();
+            let mut y = vec![0.0; 256];
+            s.spmv(&x, &mut y);
+            assert_eq!(y, want);
+        }
+        // The stats-only measurement agrees with the built matrix.
+        let st = SellStats::measure(&m, 128, 8);
+        assert_eq!(st.slots, wide.slots());
+        assert_eq!(st.nnz, wide.nnz());
+        assert!((st.occupancy() - wide.occupancy()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_rows_and_empty_matrix() {
+        let mut coo = Coo::<f64>::new(20, 20);
+        for r in [0usize, 7, 13] {
+            coo.push(r, (r * 3) % 20, 2.0);
+        }
+        let m = Csr::from_coo(coo);
+        let s = SellMatrix::from_csr(&m, 16);
+        s.check().unwrap();
+        let x = vec![1.0; 20];
+        let want = reference(&m, &x);
+        let mut y = vec![9.0; 20];
+        s.spmv(&x, &mut y);
+        assert_eq!(y, want);
+
+        let empty = Csr::<f64>::from_parts(3, 3, vec![0, 0, 0, 0], vec![], vec![]).unwrap();
+        let s = SellMatrix::from_csr(&empty, 8);
+        s.check().unwrap();
+        assert_eq!(s.slots(), 0);
+        assert_eq!(s.occupancy(), 1.0);
+        let x3 = vec![1.0; 3];
+        let mut y = vec![5.0; 3];
+        s.spmv(&x3, &mut y);
+        assert_eq!(y, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn multi_rhs_matches_singles_bitwise() {
+        let m: Csr<f64> = gen::random_uniform(90, 5.0, 3);
+        let s = SellMatrix::from_csr(&m, 32);
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|v| (0..90).map(|i| ((i * (v + 2)) % 9) as f64 * 0.3 - 1.1).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 90]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+        let mut scratch = Vec::new();
+        s.spmv_multi(&x_refs, &mut y_refs, &mut scratch);
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 90];
+            s.spmv(x, &mut want);
+            assert_eq!(y, &want);
+        }
+        // Zero right-hand sides: no-op.
+        s.spmv_multi(&[], &mut [], &mut scratch);
+    }
+
+    #[test]
+    fn chunk_ranges_reassemble() {
+        let m: Csr<f64> = gen::random_uniform(77, 4.0, 9);
+        let s = SellMatrix::from_csr(&m, 16);
+        let x: Vec<f64> = (0..77).map(|i| (i % 5) as f64 * 0.4).collect();
+        let mut whole = vec![0.0; 77];
+        s.spmv(&x, &mut whole);
+        let mid = s.nchunks() / 2;
+        let mut split = vec![0.0; 77];
+        // Disjoint chunk ranges scatter into disjoint permuted rows.
+        unsafe {
+            s.spmv_chunks_into(0..mid, &x, split.as_mut_ptr());
+            s.spmv_chunks_into(mid..s.nchunks(), &x, split.as_mut_ptr());
+        }
+        assert_eq!(split, whole);
+    }
+
+    #[test]
+    fn check_rejects_corruption() {
+        let m: Csr<f64> = gen::random_uniform(40, 3.0, 5);
+        let good = SellMatrix::from_csr(&m, 16);
+        good.check().unwrap();
+
+        let mut bad = good.clone();
+        if !bad.perm.is_empty() {
+            bad.perm[0] = bad.perm[bad.perm.len() - 1]; // not a bijection
+            assert!(bad.check().is_err());
+        }
+
+        let mut bad = good.clone();
+        bad.nnz += 1; // length-sum mismatch
+        assert!(bad.check().is_err());
+
+        let mut bad = good.clone();
+        if let Some(v) = bad.col_idx.first_mut() {
+            *v = 10_000; // column out of bounds
+            assert!(bad.check().is_err());
+        }
+    }
+
+    #[test]
+    fn stats_without_build_match_build() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 200,
+            ncols: 200,
+            nnz_per_row: 7.0,
+            run_len: 2.0,
+            row_corr: 0.3,
+            skew: 0.8,
+            bandwidth: None,
+        }
+        .generate(3);
+        for sigma in [8usize, 64, 256] {
+            let st = SellStats::measure(&m, sigma, 8);
+            let built = SellMatrix::with_chunk(&m, sigma, 8);
+            assert_eq!(st.slots, built.slots(), "sigma={sigma}");
+            assert_eq!(st.nchunks, built.nchunks());
+        }
+    }
+}

@@ -1,0 +1,665 @@
+//! The unified sparse-operator layer: **one dispatch surface** from the
+//! kernels up to the coordinator.
+//!
+//! Every execution form the crate knows — serial CSR/SPC5/SELL/planned, the
+//! team-dispatched parallel forms, and the simulated-ISA backends — is a
+//! [`SparseOp`]: `spmv`, fused `spmv_multi` with caller-held scratch, and
+//! the size/traffic metadata consumers need (`nnz`, `flops`, `bytes`,
+//! `label`). The [`build`] factory turns a CSR matrix plus a
+//! [`FormatChoice`] into a boxed operator bound to a [`Team`]; everything
+//! above this module (coordinator, solvers, benches, CLI) holds a
+//! `Box<dyn SparseOp<T>>` and stops matching on formats.
+//!
+//! Adding a storage format now means: implement the container + kernels,
+//! implement `SparseOp` for its serial and team forms, add a
+//! `FormatChoice` arm here and a score in the selector — the coordinator,
+//! solvers and benches pick it up unchanged. SELL-C-σ
+//! ([`crate::matrix::sell`]) is the proof of that claim.
+//!
+//! This module is also what breaks the old `kernels ⇄ parallel` layering
+//! cycle: only `ops` sees both the kernel families and the executor, so
+//! `kernels::dispatch` no longer reaches into `parallel` for the native
+//! team path.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use spc5::matrix::gen;
+//! use spc5::ops::{self, FormatChoice};
+//! use spc5::parallel::Team;
+//!
+//! let csr = gen::random_uniform::<f64>(48, 4.0, 9);
+//! let team = Arc::new(Team::exact(2));
+//! let op = ops::build(&csr, FormatChoice::Sell { sigma: 32 }, &team);
+//! let x = vec![1.0; 48];
+//! let mut y = vec![0.0; 48];
+//! op.spmv(&x, &mut y);
+//! assert_eq!(op.nnz(), csr.nnz());
+//! assert_eq!(op.flops(), 2 * csr.nnz() as u64);
+//! ```
+
+use std::sync::Arc;
+
+use crate::kernels::{native, native_avx512, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
+use crate::matrix::sell::SellMatrix;
+use crate::matrix::Csr;
+use crate::parallel::{
+    ParallelCsr, ParallelPlanned, ParallelSell, ParallelSpc5, SharedSpc5, Team,
+};
+use crate::scalar::Scalar;
+use crate::simd::trace::{NullSink, SimCtx};
+use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
+
+/// The storage/execution format of one operator — what the selector picks
+/// (three-way: CSR vs β(r,VS) vs SELL-C-σ) and what the coordinator CLI can
+/// force (`serve --format csr|spc5|sell|plan`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FormatChoice {
+    /// Row-pointer baseline; wins on scattered rows with skewed lengths.
+    Csr,
+    /// SPC5 β(r,VS) blocks; wins when non-zeros cluster into blocks.
+    Spc5 { r: usize },
+    /// SELL-C-σ with C = VS; wins on scattered rows of similar length.
+    Sell { sigma: usize },
+    /// The heterogeneous-r execution plan compiled from β(r,VS) chunks —
+    /// the [`PlanMode::Auto`](crate::coordinator::PlanMode) upgrade of an
+    /// SPC5 selection.
+    Planned,
+}
+
+impl FormatChoice {
+    /// Display label matching the crate's kernel terminology.
+    pub fn label(self) -> String {
+        match self {
+            FormatChoice::Csr => "csr".into(),
+            FormatChoice::Spc5 { r } => format!("beta({r},VS)"),
+            FormatChoice::Sell { sigma } => format!("sell-C-{sigma}"),
+            FormatChoice::Planned => "planned".into(),
+        }
+    }
+
+    /// The four-way metrics bucket ("csr" | "spc5" | "sell" | "plan").
+    pub fn kind_name(self) -> &'static str {
+        match self {
+            FormatChoice::Csr => "csr",
+            FormatChoice::Spc5 { .. } => "spc5",
+            FormatChoice::Sell { .. } => "sell",
+            FormatChoice::Planned => "plan",
+        }
+    }
+}
+
+/// Which kernel family an operator executes with.
+///
+/// `Native` is the production wall-clock path. `Simulated` runs the paper's
+/// ISA kernels through the vector simulator (numerics-exact, no host SIMD
+/// required) — used to serve validation traffic and to exercise the fused
+/// SpMM batch path on both target ISAs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Optimized host kernels (AVX-512 when available, portable otherwise).
+    Native,
+    /// The paper's simulated ISA kernels for the given target.
+    Simulated(SimIsa),
+}
+
+/// A built sparse linear operator: the one execution surface every layer
+/// above the kernels programs against.
+///
+/// Contract shared by all implementations:
+/// - `spmv` overwrites `y` (length `nrows`) with `A·x` (`x` length `ncols`);
+/// - `spmv_multi` is the fused multi-RHS pass — one matrix-stream read for
+///   all right-hand sides. `scratch` is a caller-held accumulator buffer
+///   reused across calls; team-parallel operators carry their own per-lane
+///   scratch and ignore it;
+/// - repeated calls are bitwise deterministic (same operator, same input ⇒
+///   same bits), which is what lets the equivalence suite pin forms against
+///   each other.
+pub trait SparseOp<T: Scalar>: Send + Sync {
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    fn nnz(&self) -> usize;
+    /// Storage footprint of the operator's matrix data in bytes.
+    fn bytes(&self) -> usize;
+    /// Human-readable execution-form label (metrics, CLI, benches).
+    fn label(&self) -> String;
+    /// Floating-point work of one application (2 per stored non-zero).
+    fn flops(&self) -> u64 {
+        2 * self.nnz() as u64
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]);
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>);
+    /// Plan introspection: the per-chunk block heights when this operator
+    /// executes a compiled heterogeneous-r plan.
+    fn chunk_rs(&self) -> Option<Vec<usize>> {
+        None
+    }
+}
+
+// ---- serial forms ----
+
+impl<T: Scalar> SparseOp<T> for Csr<T> {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        Csr::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        Csr::bytes(self)
+    }
+    fn label(&self) -> String {
+        "native-csr".into()
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        native::spmv_csr(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        native::spmv_csr_multi_rows(self, 0..self.nrows, xs, ys, scratch);
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for Spc5Matrix<T> {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        Spc5Matrix::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        Spc5Matrix::bytes(self)
+    }
+    fn label(&self) -> String {
+        format!("beta({},VS)", self.r)
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        // Real AVX-512 kernel when the host supports it.
+        native_avx512::spmv_spc5_auto(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        native::spmv_spc5_multi_panels(self, 0..self.npanels(), xs, ys, scratch);
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for SellMatrix<T> {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        SellMatrix::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        SellMatrix::bytes(self)
+    }
+    fn label(&self) -> String {
+        format!("sell-{}-{}", self.c, self.sigma)
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        // Deliberate tradeoff: the serving path is the exact-order portable
+        // kernel — bitwise equal to the CSR reference and to the team form,
+        // which is the equivalence suite's anchor. The faster AVX-512
+        // variant (`native_avx512::spmv_sell_auto`, FMA rounding) is
+        // measured by the bench bake-off; switching the serving path to it
+        // means relaxing the bitwise contract to tolerance first. The
+        // selector prices SELL for *this* kernel (see
+        // `SelectorModel::sell_per_slot`).
+        SellMatrix::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        SellMatrix::spmv_multi(self, xs, ys, scratch);
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for PlannedMatrix<T> {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        PlannedMatrix::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.m.bytes()).sum()
+    }
+    fn label(&self) -> String {
+        format!("planned[{} chunks]", self.nchunks())
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        PlannedMatrix::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        self.spmv_multi_slices_with(xs, ys, scratch);
+    }
+    fn chunk_rs(&self) -> Option<Vec<usize>> {
+        Some(PlannedMatrix::chunk_rs(self))
+    }
+}
+
+// ---- team-dispatched forms ----
+
+impl<T: Scalar> SparseOp<T> for ParallelCsr<T> {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.parts.iter().map(|p| p.nnz()).sum()
+    }
+    fn bytes(&self) -> usize {
+        self.parts.iter().map(|p| p.bytes()).sum()
+    }
+    fn label(&self) -> String {
+        format!("team-csr[{} lanes]", self.team().threads())
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        ParallelCsr::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        ParallelCsr::spmv_multi(self, xs, ys);
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for ParallelSpc5<T> {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        ParallelSpc5::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        self.parts.iter().map(|p| p.bytes()).sum()
+    }
+    fn label(&self) -> String {
+        format!("team-beta({},VS)[{} lanes]", self.r, self.team().threads())
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        ParallelSpc5::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        ParallelSpc5::spmv_multi(self, xs, ys);
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for SharedSpc5<T> {
+    fn nrows(&self) -> usize {
+        self.m.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.m.ncols
+    }
+    fn nnz(&self) -> usize {
+        SharedSpc5::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        self.m.bytes()
+    }
+    fn label(&self) -> String {
+        format!("team-shared-beta({},VS)[{} lanes]", self.m.r, self.team().threads())
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        SharedSpc5::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        SharedSpc5::spmv_multi(self, xs, ys);
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for ParallelSell<T> {
+    fn nrows(&self) -> usize {
+        self.m.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.m.ncols
+    }
+    fn nnz(&self) -> usize {
+        ParallelSell::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        self.m.bytes()
+    }
+    fn label(&self) -> String {
+        format!(
+            "team-sell-{}-{}[{} lanes]",
+            self.m.c,
+            self.m.sigma,
+            self.team().threads()
+        )
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        ParallelSell::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        ParallelSell::spmv_multi(self, xs, ys);
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for ParallelPlanned<T> {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        ParallelPlanned::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        self.plan.chunks.iter().map(|c| c.m.bytes()).sum()
+    }
+    fn label(&self) -> String {
+        format!(
+            "team-planned[{} chunks, {} lanes]",
+            self.plan.nchunks(),
+            self.team().threads()
+        )
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        ParallelPlanned::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        ParallelPlanned::spmv_multi(self, xs, ys);
+    }
+    fn chunk_rs(&self) -> Option<Vec<usize>> {
+        Some(self.plan.chunk_rs())
+    }
+}
+
+// ---- simulated-ISA form ----
+
+/// An operator that executes the paper's simulated ISA kernels (exact
+/// numerics plus the instruction/memory trace machinery, run with a null
+/// sink). Always holds an SPC5 form — β(1,VS) when the caller's choice was
+/// row-oriented — so fused batches run the multi-RHS SpMM kernels on both
+/// target ISAs.
+pub struct SimulatedOp<T: Scalar> {
+    isa: SimIsa,
+    m: Spc5Matrix<T>,
+}
+
+impl<T: Scalar> SimulatedOp<T> {
+    pub fn new(csr: &Csr<T>, r: usize, isa: SimIsa) -> Self {
+        Self { isa, m: csr_to_spc5(csr, r, T::VS) }
+    }
+
+    pub fn isa(&self) -> SimIsa {
+        self.isa
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for SimulatedOp<T> {
+    fn nrows(&self) -> usize {
+        self.m.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.m.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+    fn bytes(&self) -> usize {
+        self.m.bytes()
+    }
+    fn label(&self) -> String {
+        format!("sim-{}:beta({},VS)", self.isa.name(), self.m.r)
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        let mut sink = NullSink;
+        let mut ctx = SimCtx::new(T::VS, &mut sink);
+        match self.isa {
+            SimIsa::Avx512 => {
+                spc5_avx512::spmv_spc5_avx512(&mut ctx, &self.m, x, y, Reduction::Manual)
+            }
+            SimIsa::Sve => spc5_sve::spmv_spc5_sve(
+                &mut ctx,
+                &self.m,
+                x,
+                y,
+                XLoad::Single,
+                Reduction::Manual,
+            ),
+        }
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        if xs.is_empty() {
+            return;
+        }
+        let mut sink = NullSink;
+        let mut ctx = SimCtx::new(T::VS, &mut sink);
+        match self.isa {
+            SimIsa::Avx512 => {
+                spc5_avx512::spmv_spc5_avx512_multi(&mut ctx, &self.m, xs, ys, Reduction::Manual)
+            }
+            SimIsa::Sve => spc5_sve::spmv_spc5_sve_multi(
+                &mut ctx,
+                &self.m,
+                xs,
+                ys,
+                XLoad::Single,
+                Reduction::Manual,
+            ),
+        }
+    }
+}
+
+// ---- the factory ----
+
+/// Build the native operator for `csr` under `choice`, bound to `team`.
+///
+/// A 1-lane team yields the serial forms (which keep the serial AVX-512
+/// kernels); a wider team yields the team-dispatched forms — one shared
+/// conversion split at panel/chunk boundaries, partitions cached at
+/// construction so every call is a single epoch-barrier wake.
+pub fn build<T: Scalar>(
+    csr: &Csr<T>,
+    choice: FormatChoice,
+    team: &Arc<Team>,
+) -> Box<dyn SparseOp<T>> {
+    if team.threads() == 1 {
+        match choice {
+            FormatChoice::Csr => Box::new(csr.clone()),
+            FormatChoice::Spc5 { r } => Box::new(csr_to_spc5(csr, r, T::VS)),
+            FormatChoice::Sell { sigma } => Box::new(SellMatrix::from_csr(csr, sigma)),
+            FormatChoice::Planned => Box::new(PlannedMatrix::build(csr, &PlanConfig::default())),
+        }
+    } else {
+        match choice {
+            FormatChoice::Csr => Box::new(ParallelCsr::with_team(csr, Arc::clone(team))),
+            FormatChoice::Spc5 { r } => {
+                Box::new(SharedSpc5::new(csr_to_spc5(csr, r, T::VS), Arc::clone(team)))
+            }
+            FormatChoice::Sell { sigma } => {
+                Box::new(ParallelSell::with_team(csr, sigma, Arc::clone(team)))
+            }
+            FormatChoice::Planned => Box::new(ParallelPlanned::with_team(
+                csr,
+                &PlanConfig::default(),
+                Arc::clone(team),
+            )),
+        }
+    }
+}
+
+/// [`build`] plus the backend dimension: the simulated backends always
+/// execute an SPC5 form (β(1,VS) when `choice` is row-oriented), so fused
+/// batches run the multi-RHS SpMM kernels of the selected ISA regardless of
+/// what the selector picked.
+pub fn build_backend<T: Scalar>(
+    csr: &Csr<T>,
+    choice: FormatChoice,
+    backend: Backend,
+    team: &Arc<Team>,
+) -> Box<dyn SparseOp<T>> {
+    match backend {
+        Backend::Native => build(csr, choice, team),
+        Backend::Simulated(isa) => {
+            let r = match choice {
+                FormatChoice::Spc5 { r } => r,
+                _ => 1,
+            };
+            Box::new(SimulatedOp::new(csr, r, isa))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    fn all_choices() -> [FormatChoice; 5] {
+        [
+            FormatChoice::Csr,
+            FormatChoice::Spc5 { r: 2 },
+            FormatChoice::Spc5 { r: 8 },
+            FormatChoice::Sell { sigma: 32 },
+            FormatChoice::Planned,
+        ]
+    }
+
+    #[test]
+    fn factory_forms_match_reference_serial_and_team() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 173,
+            ncols: 190,
+            nnz_per_row: 6.0,
+            run_len: 2.5,
+            row_corr: 0.5,
+            skew: 0.4,
+            bandwidth: None,
+        }
+        .generate(7);
+        let x: Vec<f64> = (0..190).map(|i| (i as f64 * 0.19).sin() + 0.5).collect();
+        let mut want = vec![0.0; 173];
+        m.spmv(&x, &mut want);
+        for choice in all_choices() {
+            for threads in [1usize, 4] {
+                let team = Arc::new(Team::exact(threads));
+                let op = build(&m, choice, &team);
+                assert_eq!(op.nrows(), 173);
+                assert_eq!(op.ncols(), 190);
+                assert_eq!(op.nnz(), m.nnz(), "{:?}", choice);
+                assert_eq!(op.flops(), 2 * m.nnz() as u64);
+                assert!(op.bytes() > 0);
+                assert!(!op.label().is_empty());
+                let mut y = vec![0.0; 173];
+                op.spmv(&x, &mut y);
+                crate::scalar::assert_allclose(&y, &want, 1e-11, 1e-12);
+                // Bitwise-deterministic across repeated calls.
+                let mut y2 = vec![9.0; 173];
+                op.spmv(&x, &mut y2);
+                assert_eq!(y, y2, "{:?} threads={threads}", choice);
+                // Plan introspection only on the planned forms.
+                assert_eq!(op.chunk_rs().is_some(), choice == FormatChoice::Planned);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_multi_matches_singles_every_form() {
+        let m: Csr<f64> = gen::random_uniform(120, 5.0, 11);
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|v| (0..120).map(|i| ((i * (v + 3)) % 11) as f64 * 0.2 - 0.8).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        for choice in all_choices() {
+            for threads in [1usize, 3] {
+                let team = Arc::new(Team::exact(threads));
+                let op = build(&m, choice, &team);
+                let mut ys: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 120]).collect();
+                let mut y_refs: Vec<&mut [f64]> =
+                    ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                let mut scratch = Vec::new();
+                op.spmv_multi(&x_refs, &mut y_refs, &mut scratch);
+                for (x, y) in xs.iter().zip(&ys) {
+                    let mut want = vec![0.0; 120];
+                    m.spmv(x, &mut want);
+                    crate::scalar::assert_allclose(y, &want, 1e-11, 1e-12);
+                }
+                // Zero right-hand sides: no-op.
+                op.spmv_multi(&[], &mut [], &mut scratch);
+            }
+        }
+    }
+
+    #[test]
+    fn simulated_backend_ops_serve_both_isas() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 96,
+            ncols: 96,
+            nnz_per_row: 7.0,
+            run_len: 3.0,
+            row_corr: 0.6,
+            ..Default::default()
+        }
+        .generate(5);
+        let x: Vec<f64> = (0..96).map(|i| ((i % 7) as f64 - 3.0) * 0.3).collect();
+        let mut want = vec![0.0; 96];
+        m.spmv(&x, &mut want);
+        let team = Arc::new(Team::exact(1));
+        for isa in [SimIsa::Avx512, SimIsa::Sve] {
+            // A row-oriented choice still yields an SPC5 form (beta(1,VS)).
+            for choice in [FormatChoice::Csr, FormatChoice::Spc5 { r: 4 }] {
+                let op = build_backend(&m, choice, Backend::Simulated(isa), &team);
+                assert!(op.label().starts_with("sim-"));
+                let mut y = vec![0.0; 96];
+                op.spmv(&x, &mut y);
+                crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+                // Fused batch through the multi-RHS simulated kernels.
+                let xs = [x.as_slice(), x.as_slice()];
+                let mut ys: Vec<Vec<f64>> = (0..2).map(|_| vec![0.0; 96]).collect();
+                let mut y_refs: Vec<&mut [f64]> =
+                    ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                let mut scratch = Vec::new();
+                op.spmv_multi(&xs, &mut y_refs, &mut scratch);
+                for y in &ys {
+                    crate::scalar::assert_allclose(y, &want, 1e-12, 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sell_operator_is_bitwise_csr_equal() {
+        // The SELL acceptance anchor: serial and team operators reproduce
+        // the CSR reference bit for bit (exact-order kernels).
+        let m: Csr<f64> = gen::random_uniform(257, 3.0, 17);
+        let x: Vec<f64> = (0..257).map(|i| ((i * 13) % 23) as f64 * 0.17 - 1.9).collect();
+        let mut want = vec![0.0; 257];
+        m.spmv(&x, &mut want);
+        for threads in [1usize, 5] {
+            let team = Arc::new(Team::exact(threads));
+            let op = build(&m, FormatChoice::Sell { sigma: 64 }, &team);
+            let mut y = vec![0.0; 257];
+            op.spmv(&x, &mut y);
+            assert_eq!(y, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn labels_and_kinds() {
+        assert_eq!(FormatChoice::Csr.kind_name(), "csr");
+        assert_eq!(FormatChoice::Spc5 { r: 4 }.kind_name(), "spc5");
+        assert_eq!(FormatChoice::Sell { sigma: 8 }.kind_name(), "sell");
+        assert_eq!(FormatChoice::Planned.kind_name(), "plan");
+        assert_eq!(FormatChoice::Spc5 { r: 4 }.label(), "beta(4,VS)");
+        let m: Csr<f64> = gen::random_uniform(30, 3.0, 1);
+        let team = Arc::new(Team::exact(2));
+        let op = build(&m, FormatChoice::Sell { sigma: 16 }, &team);
+        assert!(op.label().starts_with("team-sell-8-16"));
+    }
+}

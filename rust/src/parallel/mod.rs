@@ -17,7 +17,9 @@
 //! chunks to lanes by nnz, and [`SharedSpc5`] / [`spmv_spc5_shared`] split
 //! **one** shared conversion at panel boundaries ([`balance_panels`]) — both
 //! possible because per-block value offsets make any block range
-//! independently executable.
+//! independently executable. [`ParallelSell`] does the same for SELL-C-σ
+//! ([`crate::matrix::sell`]): one shared conversion split at nnz-balanced
+//! chunk boundaries, results scattered through the σ-sort permutation.
 
 pub mod exec;
 pub mod partition;
@@ -28,5 +30,6 @@ pub use exec::{SendPtr, Team};
 pub use partition::{balance_panels, balance_rows, balance_units, Partition};
 pub use pool::ThreadPool;
 pub use spmv::{
-    panel_row_ranges, spmv_spc5_shared, ParallelCsr, ParallelPlanned, ParallelSpc5, SharedSpc5,
+    panel_row_ranges, spmv_spc5_shared, ParallelCsr, ParallelPlanned, ParallelSell,
+    ParallelSpc5, SharedSpc5,
 };

@@ -9,6 +9,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::kernels::native;
+use crate::matrix::sell::SellMatrix;
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
 use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
@@ -223,8 +224,8 @@ pub struct ParallelPlanned<T: Scalar> {
 }
 
 /// Deal a plan's chunks to `parts` lanes balanced by nnz, returning the
-/// chunk-index ranges and the matching row ranges. Shared by
-/// [`ParallelPlanned`] and the coordinator's cached per-matrix assignments.
+/// chunk-index ranges and the matching row ranges ([`ParallelPlanned`]'s
+/// construction-time partitioning).
 pub(crate) fn plan_assignments<T: Scalar>(
     plan: &PlannedMatrix<T>,
     parts: usize,
@@ -337,9 +338,9 @@ impl<T: Scalar> ParallelPlanned<T> {
 }
 
 /// Derive the row ranges of a panel partition (panels × r, clamped to
-/// nrows). Shared by [`SharedSpc5`], [`spmv_spc5_shared`], the
-/// coordinator's cached per-matrix partitions, and the scoped-dispatch
-/// baselines in the lifecycle test and `native_hotpath` bench.
+/// nrows). Shared by [`SharedSpc5`], [`spmv_spc5_shared`], and the
+/// scoped-dispatch baselines in the lifecycle test and `native_hotpath`
+/// bench.
 pub fn panel_row_ranges<T: Scalar>(
     m: &Spc5Matrix<T>,
     panel_parts: &Partition,
@@ -384,8 +385,20 @@ impl<T: Scalar> SharedSpc5<T> {
         self.m.nnz()
     }
 
-    /// `y = A·x` across the team's lanes over the shared conversion.
+    /// `y = A·x` across the team's lanes over the shared conversion,
+    /// through the real AVX-512 panel kernels when the host has them (one
+    /// shared x padding per call; portable panel walk elsewhere).
     pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.m.ncols);
+        assert_eq!(y.len(), self.m.nrows);
+        spmv_spc5_panels_team(&self.m, &self.panel_parts, &self.partition, &self.team, x, y);
+    }
+
+    /// `y = A·x` through the portable panel walk only — the
+    /// apples-to-apples comparator for the `exec_overhead` bench, whose
+    /// scoped-thread baseline also runs the portable kernel (same kernels,
+    /// same partition; the measured gap is pure dispatch).
+    pub fn spmv_portable(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.m.ncols);
         assert_eq!(y.len(), self.m.nrows);
         let ybase = SendPtr::new(y.as_mut_ptr());
@@ -432,6 +445,104 @@ impl<T: Scalar> SharedSpc5<T> {
     }
 }
 
+/// **One shared** SELL-C-σ conversion split across a team at nnz-balanced
+/// chunk boundaries. Chunks are the format's natural parallel unit (each is
+/// an independent column-major tile); lane results scatter to
+/// `y[perm[row]]` through the shared base pointer — `perm` is a bijection,
+/// so every output element has exactly one writer even though the permuted
+/// rows of a lane are not contiguous.
+pub struct ParallelSell<T: Scalar> {
+    pub m: SellMatrix<T>,
+    /// Per-lane contiguous chunk-index ranges (nnz-balanced).
+    pub chunk_parts: Partition,
+    team: Arc<Team>,
+    scratch: Vec<Mutex<Vec<T>>>,
+}
+
+impl<T: Scalar> ParallelSell<T> {
+    /// Convert (σ-sorted, C = VS) and partition for a private team.
+    pub fn new(m: &Csr<T>, sigma: usize, threads: usize) -> Self {
+        Self::with_team(m, sigma, Arc::new(Team::new(threads)))
+    }
+
+    /// Convert and partition for (a share of) an existing team.
+    pub fn with_team(m: &Csr<T>, sigma: usize, team: Arc<Team>) -> Self {
+        Self::from_sell(SellMatrix::from_csr(m, sigma), team)
+    }
+
+    /// Partition an already-converted matrix for the team's lanes.
+    pub fn from_sell(m: SellMatrix<T>, team: Arc<Team>) -> Self {
+        let weights: Vec<u64> = (0..m.nchunks()).map(|k| m.chunk_nnz(k) as u64).collect();
+        let chunk_parts = balance_units(&weights, team.threads());
+        let scratch = per_lane_scratch(chunk_parts.nparts());
+        Self { m, chunk_parts, team, scratch }
+    }
+
+    pub fn team(&self) -> &Arc<Team> {
+        &self.team
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    /// `y = A·x` across the team's lanes (exact-order kernel per chunk, so
+    /// the split product is bitwise equal to the serial one).
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.m.ncols);
+        assert_eq!(y.len(), self.m.nrows);
+        let ybase = SendPtr::new(y.as_mut_ptr());
+        let ranges = &self.chunk_parts.ranges;
+        let m = &self.m;
+        self.team.run_parts(ranges.len(), &|i| {
+            let kr = ranges[i].clone();
+            if kr.is_empty() {
+                return;
+            }
+            // SAFETY: disjoint chunk ranges scatter to disjoint permuted
+            // rows (perm is a bijection); the team's completion barrier
+            // keeps the borrow alive.
+            unsafe { m.spmv_chunks_into(kr, x, ybase.get()) };
+        });
+    }
+
+    /// Fused multi-RHS `ys[v] = A·xs[v]`: each lane streams its chunks'
+    /// slots once for all `k` right-hand sides, through the *same* walk as
+    /// [`SellMatrix::spmv_multi`] ([`SellMatrix::multi_chunk_walk`] — one
+    /// loop, so the bitwise team == serial contract holds by construction).
+    pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.m.ncols);
+            assert_eq!(y.len(), self.m.nrows);
+        }
+        let bases: Vec<SendPtr<T>> =
+            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
+        let ranges = &self.chunk_parts.ranges;
+        let m = &self.m;
+        let scratch = &self.scratch;
+        let k = xs.len();
+        self.team.run_parts(ranges.len(), &|i| {
+            let kr = ranges[i].clone();
+            if kr.is_empty() {
+                return;
+            }
+            let mut s = scratch[i].lock().expect("lane scratch");
+            s.clear();
+            s.resize(k, T::zero());
+            m.multi_chunk_walk(kr, xs, &mut s[..], |vi, row, val| {
+                // SAFETY: perm bijection + disjoint chunk ranges — one
+                // writer per (rhs, row); the team's completion barrier
+                // keeps the borrow alive.
+                unsafe { *bases[vi].get().add(row) = val };
+            });
+        });
+    }
+}
+
 /// Parallel SpMV over one shared SPC5 conversion on an existing team —
 /// the one-shot convenience form of [`SharedSpc5`] (which additionally
 /// caches the partitions for repeated calls).
@@ -460,9 +571,9 @@ fn per_lane_scratch<T: Scalar>(parts: usize) -> Vec<Mutex<Vec<T>>> {
 /// the team, through the real AVX-512 kernels when the host supports them —
 /// x is padded **once** per call and shared by every lane (the serial
 /// `spmv_spc5_auto` paid the same padding cost for one lane's worth of
-/// kernel). Falls back to the portable panel walk otherwise. Used by the
-/// coordinator's cached per-matrix panel path, so going multi-lane never
-/// trades the vector kernel away.
+/// kernel). Falls back to the portable panel walk otherwise. This is
+/// [`SharedSpc5::spmv`]'s body — the operator layer's team-SPC5 path — so
+/// going multi-lane never trades the vector kernel away.
 pub(crate) fn spmv_spc5_panels_team<T: Scalar>(
     m: &Spc5Matrix<T>,
     panels: &Partition,
@@ -671,6 +782,9 @@ mod tests {
             let mut y = vec![0.0; 260];
             shared.spmv(&x, &mut y);
             crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+            let mut yp = vec![0.0; 260];
+            shared.spmv_portable(&x, &mut yp);
+            crate::scalar::assert_allclose(&yp, &want, 1e-12, 1e-12);
             // Fused multi agrees bitwise with the serial fused kernel.
             let xs: Vec<Vec<f64>> = (0..3)
                 .map(|v| (0..260).map(|i| ((i * (v + 3)) % 11) as f64 * 0.2).collect())
@@ -687,6 +801,38 @@ mod tests {
             for (y, w) in ys.iter().zip(&want_multi) {
                 crate::scalar::assert_allclose(y, w, 0.0, 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn parallel_sell_matches_serial_bitwise() {
+        let (m, x, _) = fixture(311);
+        let sell = SellMatrix::from_csr(&m, 64);
+        let mut serial = vec![0.0; 311];
+        sell.spmv(&x, &mut serial);
+        for threads in [1usize, 3, 6, 40] {
+            let ps = ParallelSell::new(&m, 64, threads);
+            assert_eq!(ps.nnz(), m.nnz());
+            let mut y = vec![7.0; 311];
+            ps.spmv(&x, &mut y);
+            // Exact-order chunk kernel: the split product is bitwise equal.
+            assert_eq!(y, serial, "threads={threads}");
+            // Fused multi agrees bitwise with the serial fused kernel.
+            let xs: Vec<Vec<f64>> = (0..3)
+                .map(|v| (0..311).map(|i| ((i * (v + 2)) % 7) as f64 * 0.3).collect())
+                .collect();
+            let x_refs: Vec<&[f64]> = xs.iter().map(|s| s.as_slice()).collect();
+            let mut ys: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 311]).collect();
+            let mut y_refs: Vec<&mut [f64]> =
+                ys.iter_mut().map(|s| s.as_mut_slice()).collect();
+            ps.spmv_multi(&x_refs, &mut y_refs);
+            let mut want: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 311]).collect();
+            let mut w_refs: Vec<&mut [f64]> =
+                want.iter_mut().map(|s| s.as_mut_slice()).collect();
+            let mut scratch = Vec::new();
+            sell.spmv_multi(&x_refs, &mut w_refs, &mut scratch);
+            assert_eq!(ys, want, "threads={threads}");
+            ps.spmv_multi(&[], &mut []);
         }
     }
 

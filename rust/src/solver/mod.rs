@@ -11,8 +11,10 @@ pub mod cg;
 pub mod power;
 
 use crate::kernels::native;
+use crate::matrix::sell::SellMatrix;
 use crate::matrix::Csr;
-use crate::parallel::{ParallelCsr, ParallelPlanned, ParallelSpc5, SharedSpc5};
+use crate::ops::SparseOp;
+use crate::parallel::{ParallelCsr, ParallelPlanned, ParallelSell, ParallelSpc5, SharedSpc5};
 use crate::scalar::Scalar;
 use crate::spc5::{PlannedMatrix, Spc5Matrix};
 
@@ -101,6 +103,45 @@ impl<T: Scalar> MultiLinOp<T> for SharedSpc5<T> {
     }
 }
 
+impl<T: Scalar> MultiLinOp<T> for SellMatrix<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        let mut scratch = Vec::new();
+        self.spmv_multi(xs, ys, &mut scratch);
+    }
+    fn apply_multi_with(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        self.spmv_multi(xs, ys, scratch);
+    }
+}
+
+impl<T: Scalar> MultiLinOp<T> for ParallelSell<T> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        self.spmv_multi(xs, ys);
+    }
+}
+
+/// Blanket operator-layer impls: anything [`crate::ops::build`] returns is a
+/// solver operand — CG, BiCGSTAB, power iteration and block-CG run against
+/// `Box<dyn SparseOp<T>>` without knowing the format or the execution form.
+impl<T: Scalar> LinOp<T> for Box<dyn SparseOp<T>> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows(), self.ncols());
+        self.nrows()
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+}
+
+impl<T: Scalar> MultiLinOp<T> for Box<dyn SparseOp<T>> {
+    fn apply_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        let mut scratch = Vec::new();
+        self.spmv_multi(xs, ys, &mut scratch);
+    }
+    fn apply_multi_with(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        self.spmv_multi(xs, ys, scratch);
+    }
+}
+
 impl<T: Scalar> LinOp<T> for Csr<T> {
     fn dim(&self) -> usize {
         assert_eq!(self.nrows, self.ncols);
@@ -163,6 +204,26 @@ impl<T: Scalar> LinOp<T> for ParallelPlanned<T> {
 }
 
 impl<T: Scalar> LinOp<T> for SharedSpc5<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.m.nrows, self.m.ncols);
+        self.m.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+}
+
+impl<T: Scalar> LinOp<T> for SellMatrix<T> {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+}
+
+impl<T: Scalar> LinOp<T> for ParallelSell<T> {
     fn dim(&self) -> usize {
         assert_eq!(self.m.nrows, self.m.ncols);
         self.m.nrows
@@ -270,6 +331,59 @@ mod tests {
         for (y, w) in ys2.iter().zip(&want) {
             crate::scalar::assert_allclose(y, w, 1e-12, 1e-13);
         }
+    }
+
+    #[test]
+    fn boxed_operator_solves_like_concrete() {
+        use crate::ops::{self, FormatChoice};
+        use std::sync::Arc;
+        let m: Csr<f64> = crate::matrix::gen::poisson2d(12);
+        let b = vec![1.0; 144];
+        let want = cg(&m, &b, 1e-10, 2000);
+        assert!(want.converged);
+        let team = Arc::new(crate::parallel::Team::exact(3));
+        for choice in [
+            FormatChoice::Csr,
+            FormatChoice::Spc5 { r: 4 },
+            FormatChoice::Sell { sigma: 32 },
+            FormatChoice::Planned,
+        ] {
+            let op = ops::build(&m, choice, &team);
+            assert_eq!(LinOp::dim(&op), 144);
+            let got = cg(&op, &b, 1e-10, 2000);
+            assert!(got.converged, "{choice:?}");
+            crate::scalar::assert_allclose(&got.x, &want.x, 1e-7, 1e-9);
+            // The fused multi application works through the box too.
+            let xs: Vec<Vec<f64>> = (0..2)
+                .map(|v| (0..144).map(|i| ((i + v) % 7) as f64 * 0.1).collect())
+                .collect();
+            let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+            let mut ys: Vec<Vec<f64>> = (0..2).map(|_| vec![0.0; 144]).collect();
+            let mut y_refs: Vec<&mut [f64]> =
+                ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            MultiLinOp::apply_multi(&op, &x_refs, &mut y_refs);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut w = vec![0.0; 144];
+                m.spmv(x, &mut w);
+                crate::scalar::assert_allclose(y, &w, 1e-11, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sell_forms_are_linops() {
+        let m: Csr<f64> = crate::matrix::gen::poisson2d(8);
+        let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut want = vec![0.0; 64];
+        LinOp::apply(&m, &x, &mut want);
+        let sell = SellMatrix::from_csr(&m, 32);
+        let mut y = vec![0.0; 64];
+        LinOp::apply(&sell, &x, &mut y);
+        crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-13);
+        let par = ParallelSell::new(&m, 32, 3);
+        let mut y2 = vec![0.0; 64];
+        LinOp::apply(&par, &x, &mut y2);
+        crate::scalar::assert_allclose(&y2, &want, 1e-12, 1e-13);
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! The operator-layer equivalence suite: every [`SparseOp`] execution form
+//! — serial and team-dispatched, csr / spc5 / sell / planned, f32 and f64,
+//! single and fused multi-RHS — pinned against the CSR scalar reference on
+//! ragged, empty-row and corpus-shaped matrices.
+//!
+//! Two levels of pinning:
+//! - every form matches the reference to tight tolerance (kernels are free
+//!   to reorder/fuse multiply-adds);
+//! - within one format, the team-dispatched product is **bitwise** equal to
+//!   the serial one (partitioning must never change a single bit), repeated
+//!   calls are bitwise stable, and the SELL forms are bitwise equal to the
+//!   CSR reference itself (exact-order kernels).
+//!
+//! CI runs this suite under `SPC5_THREADS=1,2,8` — the team sizes below are
+//! deliberately `Team::new` so the override exercises every lane count.
+
+use std::sync::Arc;
+
+use spc5::matrix::{gen, Coo, Csr};
+use spc5::ops::{self, FormatChoice, SparseOp};
+use spc5::parallel::Team;
+use spc5::scalar::Scalar;
+
+fn choices<T: Scalar>() -> Vec<FormatChoice> {
+    vec![
+        FormatChoice::Csr,
+        FormatChoice::Spc5 { r: 1 },
+        FormatChoice::Spc5 { r: 4 },
+        FormatChoice::Sell { sigma: 4 * T::VS },
+        FormatChoice::Planned,
+    ]
+}
+
+/// Ragged, empty-row, scattered and blocky corpus — the shapes that have
+/// historically broken padding, panel and permutation logic.
+fn matrices<T: Scalar>() -> Vec<(&'static str, Csr<T>)> {
+    let ragged: Csr<T> = gen::Structured {
+        nrows: 173, // not a multiple of any r, C or chunk size
+        ncols: 190,
+        nnz_per_row: 6.0,
+        run_len: 2.5,
+        row_corr: 0.5,
+        skew: 0.4,
+        bandwidth: None,
+    }
+    .generate(7);
+
+    let mut coo = Coo::<T>::new(96, 96);
+    for r in (0..32).chain(64..96) {
+        coo.push(r, (r * 7) % 96, T::from_f64(1.0 + r as f64 * 0.1));
+        coo.push(r, (r * 13 + 3) % 96, T::from_f64(0.5 - r as f64 * 0.01));
+    }
+    let empty_band = Csr::from_coo(coo); // rows 32..64 completely empty
+
+    let scattered: Csr<T> = gen::random_uniform(210, 2.0, 17);
+
+    let blocky: Csr<T> = gen::Structured {
+        nrows: 260,
+        ncols: 260,
+        nnz_per_row: 14.0,
+        run_len: 5.0,
+        row_corr: 0.8,
+        ..Default::default()
+    }
+    .generate(29);
+
+    let single_row: Csr<T> =
+        Csr::from_parts(1, 16, vec![0, 3], vec![0, 7, 15], vec![T::one(); 3]).unwrap();
+
+    vec![
+        ("ragged", ragged),
+        ("empty-band", empty_band),
+        ("scattered", scattered),
+        ("blocky", blocky),
+        ("single-row", single_row),
+    ]
+}
+
+fn tolerances<T: Scalar>() -> (f64, f64) {
+    if T::BYTES == 8 {
+        (1e-11, 1e-12)
+    } else {
+        (2e-4, 1e-5)
+    }
+}
+
+fn reference<T: Scalar>(m: &Csr<T>, x: &[T]) -> Vec<T> {
+    let mut y = vec![T::zero(); m.nrows];
+    m.spmv(x, &mut y);
+    y
+}
+
+fn probe_x<T: Scalar>(ncols: usize, salt: usize) -> Vec<T> {
+    (0..ncols)
+        .map(|i| T::from_f64(((i * (salt + 3)) % 23) as f64 * 0.17 - 1.9))
+        .collect()
+}
+
+fn bits<T: Scalar>(v: &[T]) -> Vec<u64> {
+    v.iter().map(|x| x.to_f64().to_bits()).collect()
+}
+
+fn run_suite<T: Scalar>() {
+    let (rtol, atol) = tolerances::<T>();
+    for (name, m) in matrices::<T>() {
+        let x = probe_x::<T>(m.ncols, 1);
+        let want = reference(&m, &x);
+        for choice in choices::<T>() {
+            // Serial anchor (exact 1-lane team, immune to SPC5_THREADS)...
+            let serial_team = Arc::new(Team::exact(1));
+            let serial = ops::build(&m, choice, &serial_team);
+            let mut y_serial = vec![T::zero(); m.nrows];
+            serial.spmv(&x, &mut y_serial);
+            spc5::scalar::assert_allclose(&y_serial, &want, rtol, atol);
+            // ...is bitwise stable across repeated calls...
+            let mut y_again = vec![T::one(); m.nrows];
+            serial.spmv(&x, &mut y_again);
+            assert_eq!(bits(&y_serial), bits(&y_again), "{name} {choice:?} repeat");
+            // ...and the team-dispatched form reproduces it bitwise
+            // (SPC5_THREADS may override the lane count — any width must
+            // give the same bits).
+            let team = Arc::new(Team::new(3));
+            let teamed = ops::build(&m, choice, &team);
+            assert_eq!(teamed.nnz(), m.nnz(), "{name} {choice:?}");
+            let mut y_team = vec![T::zero(); m.nrows];
+            teamed.spmv(&x, &mut y_team);
+            assert_eq!(
+                bits(&y_serial),
+                bits(&y_team),
+                "{name} {choice:?} team-vs-serial ({} lanes)",
+                team.threads()
+            );
+            // SELL's exact-order kernels are additionally bitwise equal to
+            // the CSR reference itself — the format's acceptance anchor.
+            if matches!(choice, FormatChoice::Sell { .. }) {
+                assert_eq!(bits(&y_serial), bits(&want), "{name} sell-vs-reference");
+            }
+
+            // Fused multi-RHS, k ∈ {1, 4}: matches the reference per
+            // column, and team bitwise-equals serial.
+            for k in [1usize, 4] {
+                let xs: Vec<Vec<T>> = (0..k).map(|v| probe_x::<T>(m.ncols, v + 2)).collect();
+                let x_refs: Vec<&[T]> = xs.iter().map(|v| v.as_slice()).collect();
+                let mut scratch = Vec::new();
+                let mut run = |op: &dyn SparseOp<T>| -> Vec<Vec<T>> {
+                    let mut ys: Vec<Vec<T>> =
+                        (0..k).map(|_| vec![T::zero(); m.nrows]).collect();
+                    let mut y_refs: Vec<&mut [T]> =
+                        ys.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    op.spmv_multi(&x_refs, &mut y_refs, &mut scratch);
+                    ys
+                };
+                let ys_serial = run(serial.as_ref());
+                let ys_team = run(teamed.as_ref());
+                for ((xv, ys), yt) in x_refs.iter().zip(&ys_serial).zip(&ys_team) {
+                    let w = reference(&m, xv);
+                    spc5::scalar::assert_allclose(ys, &w, rtol, atol);
+                    assert_eq!(
+                        bits(ys),
+                        bits(yt),
+                        "{name} {choice:?} multi k={k} team-vs-serial"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ops_equivalence_f64() {
+    run_suite::<f64>();
+}
+
+#[test]
+fn ops_equivalence_f32() {
+    run_suite::<f32>();
+}
+
+#[test]
+fn boxed_ops_are_send_sync() {
+    fn assert_send_sync<X: Send + Sync>(_: &X) {}
+    let m: Csr<f64> = gen::random_uniform(20, 2.0, 1);
+    let team = Arc::new(Team::exact(2));
+    for choice in choices::<f64>() {
+        let op = ops::build(&m, choice, &team);
+        assert_send_sync(&op);
+    }
+}

@@ -153,9 +153,23 @@ fn prop_selector_never_picks_worse_than_csr_by_its_own_model() {
             .iter()
             .map(|(_, _, c)| *c)
             .fold(f64::INFINITY, f64::min);
+        let best_sell = sel
+            .sell_candidates
+            .iter()
+            .map(|(_, _, c)| *c)
+            .fold(f64::INFINITY, f64::min);
         match sel.choice {
-            spc5::coordinator::FormatChoice::Csr => assert!(sel.csr_cost <= best_spc5),
-            spc5::coordinator::FormatChoice::Spc5 { .. } => assert!(best_spc5 < sel.csr_cost),
+            spc5::coordinator::FormatChoice::Csr => {
+                assert!(sel.csr_cost <= best_spc5 || best_sell <= best_spc5);
+                assert!(sel.csr_cost <= best_sell);
+            }
+            spc5::coordinator::FormatChoice::Spc5 { .. } => {
+                assert!(best_spc5 < sel.csr_cost && best_spc5 <= best_sell);
+            }
+            spc5::coordinator::FormatChoice::Sell { .. } => {
+                assert!(best_sell < sel.csr_cost);
+            }
+            other => panic!("selector never picks {other:?} on its own"),
         }
     });
 }
