@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use spc5::bench::{table::fmt1, time_samples, TextTable};
-use spc5::kernels::{native, native_avx512};
+use spc5::kernels::{avx2, isa, native, native_avx512};
 use spc5::matrix::sell::SellMatrix;
 use spc5::matrix::{corpus_by_name, gen, Coo, Csr};
 use spc5::ops::{self, FormatChoice, SparseOp};
@@ -392,6 +392,173 @@ fn main() {
         if bake_agree { "OK" } else { "MISMATCH" }
     );
     json.set("format_bakeoff", bake_json);
+
+    // ---- ISA-tier bake-off: the same hot kernels at every tier this host
+    // can execute. Concrete kernels guard on *raw* CPU capability (never on
+    // SPC5_FORCE_ISA), so one run times whatever the CPU offers; the active
+    // — possibly forced — tier is reported alongside. The checks assert
+    // numeric agreement only, never a performance ordering: tier speed is
+    // the data this section produces, not an invariant it enforces. ----
+    let detected = isa::detected();
+    let active = isa::active();
+    println!(
+        "\n== ISA-tier bake-off: portable vs AVX2 vs AVX-512 (f64; detected {detected}, active {active}) ==\n"
+    );
+    let mut t6 = TextTable::new(&["matrix", "kernel", "portable", "avx2", "avx512", "agree"]);
+    let tier_corpus: Vec<(&str, Csr<f64>)> = vec![
+        ("nd6k", corpus_by_name("nd6k").unwrap().build(BUDGET)),
+        ("CO", corpus_by_name("CO").unwrap().build(BUDGET)),
+        ("wikipedia", corpus_by_name("wikipedia-20060925").unwrap().build(BUDGET)),
+    ];
+    let mut tier_json = Json::obj();
+    tier_json.set("detected", detected.name()).set("active", active.name());
+    let mut tier_agree = true;
+    let cell = |g: f64| if g > 0.0 { fmt1(g) } else { "-".into() };
+    for (name, m) in &tier_corpus {
+        let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+        let mut want = vec![0.0; m.nrows];
+        m.spmv(&x, &mut want);
+        let flops = spmv_flops(m.nnz() as u64);
+        let agrees = |y: &[f64]| {
+            y.iter().zip(&want).all(|(a, b)| (a - b).abs() <= 1e-9 * b.abs().max(1.0))
+        };
+        let mut o = Json::obj();
+
+        // CSR: portable unrolled walk vs the AVX2 gather kernel (shared by
+        // the top two tiers — there is no separate AVX-512 CSR kernel).
+        {
+            let mut y = vec![0.0; m.nrows];
+            let mut t = time_samples(WARMUP, SAMPLES, || {
+                native::spmv_csr(m, &x, &mut y);
+                std::hint::black_box(&y);
+            });
+            let port_g = gflops(flops, t.median());
+            let mut ok = agrees(&y);
+            let mut avx2_g = 0.0;
+            if avx2::available() {
+                let mut t = time_samples(WARMUP, SAMPLES, || {
+                    avx2::spmv_csr_f64(m, &x, &mut y);
+                    std::hint::black_box(&y);
+                });
+                avx2_g = gflops(flops, t.median());
+                ok &= agrees(&y);
+            }
+            tier_agree &= ok;
+            t6.row(vec![
+                (*name).into(),
+                "csr".into(),
+                fmt1(port_g),
+                cell(avx2_g),
+                "-".into(),
+                if ok { "yes".into() } else { "NO".into() },
+            ]);
+            let mut k = Json::obj();
+            k.set("portable_gflops", port_g).set("avx2_gflops", avx2_g);
+            o.set("csr", k);
+        }
+
+        // SPC5 β(4,width): each tier at its native geometry — the portable
+        // walk and AVX-512 expand-load on β(4,8), the AVX2 emulated expand
+        // on β(4,4).
+        {
+            let full = csr_to_spc5(m, 4, 8);
+            let padded8 = native_avx512::PaddedX::new(&x, 8);
+            let mut y = vec![0.0; m.nrows];
+            let mut t = time_samples(WARMUP, SAMPLES, || {
+                native::spmv_spc5(&full, &x, &mut y);
+                std::hint::black_box(&y);
+            });
+            let port_g = gflops(flops, t.median());
+            let mut ok = agrees(&y);
+            let mut avx2_g = 0.0;
+            if avx2::available() {
+                let half = csr_to_spc5(m, 4, 4);
+                let padded4 = native_avx512::PaddedX::new(&x, 4);
+                let mut t = time_samples(WARMUP, SAMPLES, || {
+                    avx2::spmv_spc5_f64(&half, &padded4, &mut y);
+                    std::hint::black_box(&y);
+                });
+                avx2_g = gflops(flops, t.median());
+                ok &= agrees(&y);
+            }
+            let mut avx512_g = 0.0;
+            if native_avx512::available() {
+                let mut t = time_samples(WARMUP, SAMPLES, || {
+                    native_avx512::spmv_spc5_f64(&full, &padded8, &mut y);
+                    std::hint::black_box(&y);
+                });
+                avx512_g = gflops(flops, t.median());
+                ok &= agrees(&y);
+            }
+            tier_agree &= ok;
+            t6.row(vec![
+                (*name).into(),
+                "spc5 b4".into(),
+                fmt1(port_g),
+                cell(avx2_g),
+                cell(avx512_g),
+                if ok { "yes".into() } else { "NO".into() },
+            ]);
+            let mut k = Json::obj();
+            k.set("portable_gflops", port_g)
+                .set("avx2_gflops", avx2_g)
+                .set("avx512_gflops", avx512_g);
+            o.set("spc5_b4", k);
+        }
+
+        // SELL-C-σ at σ = 8C: exact-order portable walk vs the two vector
+        // kernels (which agree bitwise with each other).
+        {
+            let sell = SellMatrix::from_csr(m, 64);
+            let mut y = vec![0.0; m.nrows];
+            let mut t = time_samples(WARMUP, SAMPLES, || {
+                sell.spmv(&x, &mut y);
+                std::hint::black_box(&y);
+            });
+            let port_g = gflops(flops, t.median());
+            let mut ok = agrees(&y);
+            let mut avx2_g = 0.0;
+            if avx2::available() {
+                let mut t = time_samples(WARMUP, SAMPLES, || {
+                    avx2::spmv_sell_f64(&sell, &x, &mut y);
+                    std::hint::black_box(&y);
+                });
+                avx2_g = gflops(flops, t.median());
+                ok &= agrees(&y);
+            }
+            let mut avx512_g = 0.0;
+            if native_avx512::available() {
+                let mut t = time_samples(WARMUP, SAMPLES, || {
+                    native_avx512::spmv_sell_f64(&sell, &x, &mut y);
+                    std::hint::black_box(&y);
+                });
+                avx512_g = gflops(flops, t.median());
+                ok &= agrees(&y);
+            }
+            tier_agree &= ok;
+            t6.row(vec![
+                (*name).into(),
+                "sell s64".into(),
+                fmt1(port_g),
+                cell(avx2_g),
+                cell(avx512_g),
+                if ok { "yes".into() } else { "NO".into() },
+            ]);
+            let mut k = Json::obj();
+            k.set("portable_gflops", port_g)
+                .set("avx2_gflops", avx2_g)
+                .set("avx512_gflops", avx512_g);
+            o.set("sell_s64", k);
+        }
+
+        tier_json.set(name, o);
+    }
+    println!("{}", t6.render());
+    println!(
+        "check: every tier kernel matches the CSR reference -> {}",
+        if tier_agree { "OK" } else { "MISMATCH" }
+    );
+    json.set("isa_tiers", tier_json);
 
     json.set("plan_layer", plan_json);
     json.set("copy_bw_gbs", bw);

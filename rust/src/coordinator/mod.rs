@@ -15,5 +15,5 @@ pub mod selector;
 pub mod service;
 
 pub use metrics::FormatKind;
-pub use selector::{select_format, FormatChoice, Selection};
+pub use selector::{select_format, FormatChoice, Selection, SelectorModel};
 pub use service::{Backend, FormatMode, MatrixId, PlanMode, SpmvService};

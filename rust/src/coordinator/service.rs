@@ -284,7 +284,11 @@ impl<T: Scalar> SpmvService<T> {
     /// mode resolves a [`FormatChoice`], and [`crate::ops::build_backend`]
     /// builds the operator that serves all of this matrix's traffic.
     pub fn register(&self, csr: Csr<T>) -> MatrixId {
-        let selection = select_format(&csr, &SelectorModel::default());
+        // The cost model is calibrated to the ISA tier the kernels will
+        // actually run on (AVX-512 / AVX2 / portable) — lower tiers price
+        // SPC5 blocks higher, shifting borderline matrices toward SELL/CSR.
+        let model = SelectorModel::for_tier(crate::kernels::isa::active());
+        let selection = select_format(&csr, &model);
         let choice = self.resolve_choice(&selection);
         let op = ops::build_backend(&csr, choice, self.shared.backend, &self.shared.team);
         // The metrics bucket tracks what *executes*: the simulated backends
@@ -384,9 +388,11 @@ impl<T: Scalar> SpmvService<T> {
     }
 
     /// Metrics snapshot as JSON (includes the per-format selection and
-    /// request mix).
+    /// request mix, plus the ISA tier serving the traffic).
     pub fn metrics_json(&self) -> crate::util::json::Json {
-        self.shared.metrics.snapshot()
+        let mut snap = self.shared.metrics.snapshot();
+        snap.set("isa_tier", crate::kernels::isa::active().name());
+        snap
     }
 }
 
@@ -616,13 +622,15 @@ mod tests {
     #[test]
     fn plan_mode_auto_builds_and_serves_plans() {
         // Blocky matrix -> selector picks SPC5 -> Auto compiles a plan.
+        // Dense enough in blocks that the SPC5 verdict survives every tier's
+        // cost model (the suite runs under SPC5_FORCE_ISA overrides in CI).
         let svc = SpmvService::new(2, 8);
         let m: Csr<f64> = gen::Structured {
             nrows: 300,
             ncols: 300,
-            nnz_per_row: 20.0,
-            run_len: 6.0,
-            row_corr: 0.9,
+            nnz_per_row: 24.0,
+            run_len: 8.0,
+            row_corr: 0.95,
             ..Default::default()
         }
         .generate(23);
@@ -705,6 +713,9 @@ mod tests {
             assert_eq!(svc.shared.metrics.format_requests(kind), 6, "mode {mode:?}");
             let snap = svc.metrics_json().to_string();
             assert!(snap.contains("format_selected"), "{snap}");
+            // The snapshot names the tier that served the traffic.
+            let tier = crate::kernels::isa::active().name();
+            assert!(snap.contains(&format!("\"isa_tier\":\"{tier}\"")), "{snap}");
         }
     }
 

@@ -1,0 +1,926 @@
+//! Native AVX2+FMA kernel tier — 256-bit versions of the hot kernels for
+//! hosts (or forced configurations) without AVX-512.
+//!
+//! AVX2 has no expand-load, so the SPC5 kernels here use **half-width**
+//! block geometry — β(r,4) for f64, β(r,8) for f32 — one 256-bit register
+//! per mask row. The packed values of a mask row are expanded into a small
+//! stack window with a scalar bit-walk, then consumed by a single
+//! `_mm256_fmadd`: the matrix stream stays exactly as compact as the paper's
+//! format, only the expand is emulated. CSR rides `_mm256_i32gather`, and
+//! SELL-C-σ keeps the full `C = T::VS` chunk height split over two 256-bit
+//! accumulators (per-lane FMA order identical to the AVX-512 kernel, so the
+//! two vector tiers agree bitwise on SELL).
+//!
+//! Like [`super::native_avx512`], `available()` reports **raw CPU
+//! capability** — the force override ([`super::isa`]) is consulted by
+//! dispatchers, never here, so the differential suite can exercise this tier
+//! on any capable host regardless of `SPC5_FORCE_ISA`.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use crate::matrix::sell::SellMatrix;
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::spc5::Spc5Matrix;
+
+use super::native_avx512::PaddedX;
+
+/// True when the running CPU can execute the AVX2 kernels (AVX2 **and**
+/// FMA — the kernels fuse every multiply-add).
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// AVX2 f64 SPC5 SpMV (`y = A·x`), β(r,4). Returns false (computing
+/// nothing) when the CPU lacks AVX2/FMA or the format is not width 4.
+pub fn spmv_spc5_f64(m: &Spc5Matrix<f64>, x: &PaddedX<f64>, y: &mut [f64]) -> bool {
+    spmv_spc5_panels_f64(m, x, 0..m.npanels(), y)
+}
+
+/// AVX2 f32 SPC5 SpMV (`y = A·x`), β(r,8). Same contract as
+/// [`spmv_spc5_f64`].
+pub fn spmv_spc5_f32(m: &Spc5Matrix<f32>, x: &PaddedX<f32>, y: &mut [f32]) -> bool {
+    spmv_spc5_panels_f32(m, x, 0..m.npanels(), y)
+}
+
+/// AVX2 f64 SPC5 SpMV over only panels `panels` — `y[0]` is row
+/// `panels.start * m.r` (same panel-range contract as the AVX-512 kernel,
+/// so executor lanes share one conversion and one x padding).
+pub fn spmv_spc5_panels_f64(
+    m: &Spc5Matrix<f64>,
+    x: &PaddedX<f64>,
+    panels: std::ops::Range<usize>,
+    y: &mut [f64],
+) -> bool {
+    if m.width != 4 || !available() {
+        return false;
+    }
+    assert_eq!(x.ncols(), m.ncols);
+    assert!(x.padded().len() >= m.ncols + 4, "x must be padded by >= 4 lanes");
+    assert!(panels.start <= panels.end && panels.end <= m.npanels());
+    let rows_lo = (panels.start * m.r).min(m.nrows);
+    let rows_hi = (panels.end * m.r).min(m.nrows);
+    assert_eq!(y.len(), rows_hi - rows_lo);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::spmv_f64_panels(m, x.padded(), panels, y);
+    }
+    true
+}
+
+/// AVX2 f32 panel-range SpMV, β(r,8). Same contract as
+/// [`spmv_spc5_panels_f64`].
+pub fn spmv_spc5_panels_f32(
+    m: &Spc5Matrix<f32>,
+    x: &PaddedX<f32>,
+    panels: std::ops::Range<usize>,
+    y: &mut [f32],
+) -> bool {
+    if m.width != 8 || !available() {
+        return false;
+    }
+    assert_eq!(x.ncols(), m.ncols);
+    assert!(x.padded().len() >= m.ncols + 8, "x must be padded by >= 8 lanes");
+    assert!(panels.start <= panels.end && panels.end <= m.npanels());
+    let rows_lo = (panels.start * m.r).min(m.nrows);
+    let rows_hi = (panels.end * m.r).min(m.nrows);
+    assert_eq!(y.len(), rows_hi - rows_lo);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::spmv_f32_panels(m, x.padded(), panels, y);
+    }
+    true
+}
+
+/// AVX2 fused multi-RHS f64 SPC5 (`ys[v] = A·xs[v]`), β(r,4): the matrix
+/// stream (and each mask row's expand) is decoded **once** for all `k`
+/// right-hand sides. Per column the operation order is identical to the
+/// single-RHS kernel, so each output column is bitwise equal to a
+/// [`spmv_spc5_f64`] call on that column.
+pub fn spmv_spc5_multi_f64(
+    m: &Spc5Matrix<f64>,
+    xs: &[&[f64]],
+    ys: &mut [&mut [f64]],
+) -> bool {
+    if m.width != 4 || !available() {
+        return false;
+    }
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return true;
+    }
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        assert_eq!(x.len(), m.ncols);
+        assert_eq!(y.len(), m.nrows);
+    }
+    let pads: Vec<PaddedX<f64>> = xs.iter().map(|x| PaddedX::new(x, 4)).collect();
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        let pad_refs: Vec<&[f64]> = pads.iter().map(|p| p.padded()).collect();
+        imp::spmv_multi_f64(m, &pad_refs, ys);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = pads;
+    true
+}
+
+/// AVX2 fused multi-RHS f32 SPC5, β(r,8). Same contract (and per-column
+/// bitwise agreement with [`spmv_spc5_f32`]) as [`spmv_spc5_multi_f64`].
+pub fn spmv_spc5_multi_f32(
+    m: &Spc5Matrix<f32>,
+    xs: &[&[f32]],
+    ys: &mut [&mut [f32]],
+) -> bool {
+    if m.width != 8 || !available() {
+        return false;
+    }
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return true;
+    }
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        assert_eq!(x.len(), m.ncols);
+        assert_eq!(y.len(), m.nrows);
+    }
+    let pads: Vec<PaddedX<f32>> = xs.iter().map(|x| PaddedX::new(x, 8)).collect();
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        let pad_refs: Vec<&[f32]> = pads.iter().map(|p| p.padded()).collect();
+        imp::spmv_multi_f32(m, &pad_refs, ys);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = pads;
+    true
+}
+
+/// AVX2 f64 SELL-C-σ SpMV, C = 8 over two 256-bit accumulators. Per-lane
+/// FMA order matches the AVX-512 SELL kernel exactly (lane-independent
+/// accumulation, no cross-lane reduce), so the two vector tiers agree
+/// **bitwise** on SELL. Same padding-lane guarantee: only active lanes
+/// gather x.
+pub fn spmv_sell_f64(m: &SellMatrix<f64>, x: &[f64], y: &mut [f64]) -> bool {
+    if m.c != 8 || !available() {
+        return false;
+    }
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::sell_f64(m, x, y);
+    }
+    true
+}
+
+/// AVX2 f32 SELL-C-σ SpMV, C = 16 over two 256-bit accumulators. Same
+/// contract as [`spmv_sell_f64`].
+pub fn spmv_sell_f32(m: &SellMatrix<f32>, x: &[f32], y: &mut [f32]) -> bool {
+    if m.c != 16 || !available() {
+        return false;
+    }
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::sell_f32(m, x, y);
+    }
+    true
+}
+
+/// AVX2 f64 CSR SpMV: 4 values per step, the x window fetched with
+/// `_mm256_i32gather_pd`, one FMA, scalar `mul_add` tail. Returns false
+/// when the CPU lacks AVX2/FMA (or `ncols` exceeds the gather's signed
+/// 32-bit index range).
+pub fn spmv_csr_f64(m: &Csr<f64>, x: &[f64], y: &mut [f64]) -> bool {
+    if !available() || m.ncols > i32::MAX as usize {
+        return false;
+    }
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::csr_f64(m, x, y);
+    }
+    true
+}
+
+/// AVX2 f32 CSR SpMV, 8 values per step. Same contract as
+/// [`spmv_csr_f64`].
+pub fn spmv_csr_f32(m: &Csr<f32>, x: &[f32], y: &mut [f32]) -> bool {
+    if !available() || m.ncols > i32::MAX as usize {
+        return false;
+    }
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(y.len(), m.nrows);
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        imp::csr_f32(m, x, y);
+    }
+    true
+}
+
+/// Tier-aware CSR dispatch: the AVX2 gather kernel whenever the active
+/// tier allows it (there is no separate AVX-512 CSR kernel, so the top two
+/// tiers share it), the portable unrolled kernel otherwise. Rows are
+/// independent, so serial and partitioned-team callers using this same
+/// entry point stay bitwise identical.
+pub fn spmv_csr_auto<T: Scalar>(m: &Csr<T>, x: &[T], y: &mut [T]) {
+    use std::any::TypeId;
+    if super::isa::active().has_avx2() {
+        if TypeId::of::<T>() == TypeId::of::<f64>() {
+            // SAFETY: T == f64 (checked above); identity casts.
+            let m64 = unsafe { &*(m as *const Csr<T> as *const Csr<f64>) };
+            let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+            let y64 =
+                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
+            if spmv_csr_f64(m64, x64, y64) {
+                return;
+            }
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+            // SAFETY: T == f32 (checked above); identity casts.
+            let m32 = unsafe { &*(m as *const Csr<T> as *const Csr<f32>) };
+            let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+            let y32 =
+                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
+            if spmv_csr_f32(m32, x32, y32) {
+                return;
+            }
+        }
+    }
+    super::native::spmv_csr(m, x, y);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod imp {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// Emulated expand-load, f64: scatter the next `popcount(mask)` packed
+    /// values into the mask's lanes of a 4-wide window (AVX2 lacks
+    /// `vexpandpd` — this is the scalar stand-in the module doc describes).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn expand4(src: *const f64, mask: u32) -> __m256d {
+        let mut buf = [0.0f64; 4];
+        let mut cursor = 0usize;
+        let mut bits = mask;
+        while bits != 0 {
+            let lane = bits.trailing_zeros() as usize;
+            buf[lane] = *src.add(cursor);
+            cursor += 1;
+            bits &= bits - 1;
+        }
+        _mm256_loadu_pd(buf.as_ptr())
+    }
+
+    /// Emulated expand-load, f32 (8-lane window).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn expand8(src: *const f32, mask: u32) -> __m256 {
+        let mut buf = [0.0f32; 8];
+        let mut cursor = 0usize;
+        let mut bits = mask;
+        while bits != 0 {
+            let lane = bits.trailing_zeros() as usize;
+            buf[lane] = *src.add(cursor);
+            cursor += 1;
+            bits &= bits - 1;
+        }
+        _mm256_loadu_ps(buf.as_ptr())
+    }
+
+    /// Horizontal sum of a 4-lane f64 register: (v0+v2) + (v1+v3) —
+    /// deterministic order, pinned by the bitwise repeat-call tests.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum4(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let s = _mm_add_pd(lo, hi); // [v0+v2, v1+v3]
+        _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+    }
+
+    /// Horizontal sum of an 8-lane f32 register, pairwise, fixed order.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi); // [a, b, c, d]
+        let sums = _mm_add_ps(s, _mm_movehdup_ps(s)); // [a+b, _, c+d, _]
+        _mm_cvtss_f32(_mm_add_ss(sums, _mm_movehl_ps(sums, sums))) // (a+b)+(c+d)
+    }
+
+    /// Algorithm 1, AVX2 flavour: r ∈ {1,2,4,8}, width 4 (f64), over a
+    /// panel range (`y[0]` = row `panels.start * r`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmv_f64_panels(
+        m: &Spc5Matrix<f64>,
+        x_padded: &[f64],
+        panels: std::ops::Range<usize>,
+        y: &mut [f64],
+    ) {
+        let r = m.r;
+        let xp = x_padded.as_ptr();
+        let vp = m.vals.as_ptr();
+        let row_base = panels.start * r;
+        for p in panels {
+            let row0 = p * r - row_base;
+            let rows_here = r.min(m.nrows - p * r);
+            let mut sums = [_mm256_setzero_pd(); 8];
+            for b in m.panel_blocks(p) {
+                let col = *m.block_colidx.get_unchecked(b) as usize;
+                // One x-window load per block (x is padded by >= 4 lanes).
+                let xv = _mm256_loadu_pd(xp.add(col));
+                let mut idx_val = *m.block_valptr.get_unchecked(b) as usize;
+                let mrow = b * r;
+                for j in 0..r {
+                    let mask = *m.masks.get_unchecked(mrow + j) & 0xF;
+                    if mask != 0 {
+                        let vals = expand4(vp.add(idx_val), mask);
+                        sums[j] = _mm256_fmadd_pd(vals, xv, sums[j]);
+                        idx_val += mask.count_ones() as usize;
+                    }
+                }
+            }
+            for j in 0..rows_here {
+                *y.get_unchecked_mut(row0 + j) = hsum4(sums[j]);
+            }
+        }
+    }
+
+    /// Algorithm 1, AVX2 flavour: r ∈ {1,2,4,8}, width 8 (f32), over a
+    /// panel range.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmv_f32_panels(
+        m: &Spc5Matrix<f32>,
+        x_padded: &[f32],
+        panels: std::ops::Range<usize>,
+        y: &mut [f32],
+    ) {
+        let r = m.r;
+        let xp = x_padded.as_ptr();
+        let vp = m.vals.as_ptr();
+        let row_base = panels.start * r;
+        for p in panels {
+            let row0 = p * r - row_base;
+            let rows_here = r.min(m.nrows - p * r);
+            let mut sums = [_mm256_setzero_ps(); 8];
+            for b in m.panel_blocks(p) {
+                let col = *m.block_colidx.get_unchecked(b) as usize;
+                let xv = _mm256_loadu_ps(xp.add(col));
+                let mut idx_val = *m.block_valptr.get_unchecked(b) as usize;
+                let mrow = b * r;
+                for j in 0..r {
+                    let mask = *m.masks.get_unchecked(mrow + j) & 0xFF;
+                    if mask != 0 {
+                        let vals = expand8(vp.add(idx_val), mask);
+                        sums[j] = _mm256_fmadd_ps(vals, xv, sums[j]);
+                        idx_val += mask.count_ones() as usize;
+                    }
+                }
+            }
+            for j in 0..rows_here {
+                *y.get_unchecked_mut(row0 + j) = hsum8(sums[j]);
+            }
+        }
+    }
+
+    /// Fused multi-RHS β(r,4) f64: one expand per mask row feeds an FMA for
+    /// every right-hand side. `xs` are padded slices (>= ncols + 4).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmv_multi_f64(m: &Spc5Matrix<f64>, xs: &[&[f64]], ys: &mut [&mut [f64]]) {
+        let r = m.r;
+        let k = xs.len();
+        let vp = m.vals.as_ptr();
+        let mut acc: Vec<__m256d> = vec![_mm256_setzero_pd(); k * r];
+        let mut xwin: Vec<__m256d> = vec![_mm256_setzero_pd(); k];
+        for p in 0..m.npanels() {
+            let row0 = p * r;
+            let rows_here = r.min(m.nrows - row0);
+            for a in acc.iter_mut() {
+                *a = _mm256_setzero_pd();
+            }
+            for b in m.panel_blocks(p) {
+                let col = *m.block_colidx.get_unchecked(b) as usize;
+                for (w, x) in xwin.iter_mut().zip(xs) {
+                    *w = _mm256_loadu_pd(x.as_ptr().add(col));
+                }
+                let mut idx_val = *m.block_valptr.get_unchecked(b) as usize;
+                let mrow = b * r;
+                for j in 0..r {
+                    let mask = *m.masks.get_unchecked(mrow + j) & 0xF;
+                    if mask != 0 {
+                        let vals = expand4(vp.add(idx_val), mask);
+                        for v in 0..k {
+                            let a = acc.get_unchecked_mut(v * r + j);
+                            *a = _mm256_fmadd_pd(vals, *xwin.get_unchecked(v), *a);
+                        }
+                        idx_val += mask.count_ones() as usize;
+                    }
+                }
+            }
+            for (v, yv) in ys.iter_mut().enumerate() {
+                for j in 0..rows_here {
+                    *yv.get_unchecked_mut(row0 + j) = hsum4(*acc.get_unchecked(v * r + j));
+                }
+            }
+        }
+    }
+
+    /// Fused multi-RHS β(r,8) f32 flavour of [`spmv_multi_f64`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmv_multi_f32(m: &Spc5Matrix<f32>, xs: &[&[f32]], ys: &mut [&mut [f32]]) {
+        let r = m.r;
+        let k = xs.len();
+        let vp = m.vals.as_ptr();
+        let mut acc: Vec<__m256> = vec![_mm256_setzero_ps(); k * r];
+        let mut xwin: Vec<__m256> = vec![_mm256_setzero_ps(); k];
+        for p in 0..m.npanels() {
+            let row0 = p * r;
+            let rows_here = r.min(m.nrows - row0);
+            for a in acc.iter_mut() {
+                *a = _mm256_setzero_ps();
+            }
+            for b in m.panel_blocks(p) {
+                let col = *m.block_colidx.get_unchecked(b) as usize;
+                for (w, x) in xwin.iter_mut().zip(xs) {
+                    *w = _mm256_loadu_ps(x.as_ptr().add(col));
+                }
+                let mut idx_val = *m.block_valptr.get_unchecked(b) as usize;
+                let mrow = b * r;
+                for j in 0..r {
+                    let mask = *m.masks.get_unchecked(mrow + j) & 0xFF;
+                    if mask != 0 {
+                        let vals = expand8(vp.add(idx_val), mask);
+                        for v in 0..k {
+                            let a = acc.get_unchecked_mut(v * r + j);
+                            *a = _mm256_fmadd_ps(vals, *xwin.get_unchecked(v), *a);
+                        }
+                        idx_val += mask.count_ones() as usize;
+                    }
+                }
+            }
+            for (v, yv) in ys.iter_mut().enumerate() {
+                for j in 0..rows_here {
+                    *yv.get_unchecked_mut(row0 + j) = hsum8(*acc.get_unchecked(v * r + j));
+                }
+            }
+        }
+    }
+
+    /// SELL-C-σ, C = 8, f64 on two 256-bit accumulators. Structure (active
+    /// prefix, x-window gather, scatter through perm) mirrors the AVX-512
+    /// kernel; per-lane arithmetic is identical, so results agree bitwise.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sell_f64(m: &SellMatrix<f64>, x: &[f64], y: &mut [f64]) {
+        let xp = x.as_ptr();
+        let vp = m.vals.as_ptr();
+        let cp = m.col_idx.as_ptr();
+        for k in 0..m.nchunks() {
+            let lo = *m.chunk_ptr.get_unchecked(k) as usize;
+            let hi = *m.chunk_ptr.get_unchecked(k + 1) as usize;
+            let lens = &m.row_len[k * 8..(k + 1) * 8];
+            let mut active = 8usize;
+            while active > 0 && lens[active - 1] == 0 {
+                active -= 1;
+            }
+            let mut sum_lo = _mm256_setzero_pd();
+            let mut sum_hi = _mm256_setzero_pd();
+            let mut base = lo;
+            let mut s = 0usize;
+            while base < hi {
+                while active > 0 && (lens[active - 1] as usize) <= s {
+                    active -= 1;
+                }
+                let mut xw = [0.0f64; 8];
+                for (j, w) in xw.iter_mut().enumerate().take(active) {
+                    // SAFETY: col_idx < ncols for real slots (format
+                    // invariant); only active (non-padding) lanes gather.
+                    *w = *xp.add(*cp.add(base + j) as usize);
+                }
+                sum_lo = _mm256_fmadd_pd(
+                    _mm256_loadu_pd(vp.add(base)),
+                    _mm256_loadu_pd(xw.as_ptr()),
+                    sum_lo,
+                );
+                sum_hi = _mm256_fmadd_pd(
+                    _mm256_loadu_pd(vp.add(base + 4)),
+                    _mm256_loadu_pd(xw.as_ptr().add(4)),
+                    sum_hi,
+                );
+                base += 8;
+                s += 1;
+            }
+            let mut out = [0.0f64; 8];
+            _mm256_storeu_pd(out.as_mut_ptr(), sum_lo);
+            _mm256_storeu_pd(out.as_mut_ptr().add(4), sum_hi);
+            let row0 = k * 8;
+            let rows_here = 8.min(m.nrows - row0);
+            for (j, &v) in out.iter().enumerate().take(rows_here) {
+                // SAFETY: perm is a bijection over [0, nrows).
+                *y.get_unchecked_mut(*m.perm.get_unchecked(row0 + j) as usize) = v;
+            }
+        }
+    }
+
+    /// SELL-C-σ, C = 16, f32 flavour of [`sell_f64`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sell_f32(m: &SellMatrix<f32>, x: &[f32], y: &mut [f32]) {
+        let xp = x.as_ptr();
+        let vp = m.vals.as_ptr();
+        let cp = m.col_idx.as_ptr();
+        for k in 0..m.nchunks() {
+            let lo = *m.chunk_ptr.get_unchecked(k) as usize;
+            let hi = *m.chunk_ptr.get_unchecked(k + 1) as usize;
+            let lens = &m.row_len[k * 16..(k + 1) * 16];
+            let mut active = 16usize;
+            while active > 0 && lens[active - 1] == 0 {
+                active -= 1;
+            }
+            let mut sum_lo = _mm256_setzero_ps();
+            let mut sum_hi = _mm256_setzero_ps();
+            let mut base = lo;
+            let mut s = 0usize;
+            while base < hi {
+                while active > 0 && (lens[active - 1] as usize) <= s {
+                    active -= 1;
+                }
+                let mut xw = [0.0f32; 16];
+                for (j, w) in xw.iter_mut().enumerate().take(active) {
+                    // SAFETY: as in sell_f64.
+                    *w = *xp.add(*cp.add(base + j) as usize);
+                }
+                sum_lo = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(vp.add(base)),
+                    _mm256_loadu_ps(xw.as_ptr()),
+                    sum_lo,
+                );
+                sum_hi = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(vp.add(base + 8)),
+                    _mm256_loadu_ps(xw.as_ptr().add(8)),
+                    sum_hi,
+                );
+                base += 16;
+                s += 1;
+            }
+            let mut out = [0.0f32; 16];
+            _mm256_storeu_ps(out.as_mut_ptr(), sum_lo);
+            _mm256_storeu_ps(out.as_mut_ptr().add(8), sum_hi);
+            let row0 = k * 16;
+            let rows_here = 16.min(m.nrows - row0);
+            for (j, &v) in out.iter().enumerate().take(rows_here) {
+                // SAFETY: perm is a bijection over [0, nrows).
+                *y.get_unchecked_mut(*m.perm.get_unchecked(row0 + j) as usize) = v;
+            }
+        }
+    }
+
+    /// CSR f64: per row, 4 nnz per step — one 128-bit index load, one
+    /// 4-lane x gather, one FMA — then a scalar `mul_add` tail, summed in a
+    /// fixed order.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn csr_f64(m: &Csr<f64>, x: &[f64], y: &mut [f64]) {
+        let xp = x.as_ptr();
+        for row in 0..m.nrows {
+            let lo = *m.row_ptr.get_unchecked(row) as usize;
+            let hi = *m.row_ptr.get_unchecked(row + 1) as usize;
+            let n = hi - lo;
+            let cols = m.col_idx.as_ptr().add(lo);
+            let vals = m.vals.as_ptr().add(lo);
+            let mut acc = _mm256_setzero_pd();
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let idx = _mm_loadu_si128(cols.add(i) as *const __m128i);
+                let xv = _mm256_i32gather_pd::<8>(xp, idx);
+                acc = _mm256_fmadd_pd(_mm256_loadu_pd(vals.add(i)), xv, acc);
+                i += 4;
+            }
+            let mut tail = 0.0f64;
+            while i < n {
+                tail = (*vals.add(i)).mul_add(*xp.add(*cols.add(i) as usize), tail);
+                i += 1;
+            }
+            *y.get_unchecked_mut(row) = hsum4(acc) + tail;
+        }
+    }
+
+    /// CSR f32: 8 nnz per step with a 256-bit index load and 8-lane
+    /// gather.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn csr_f32(m: &Csr<f32>, x: &[f32], y: &mut [f32]) {
+        let xp = x.as_ptr();
+        for row in 0..m.nrows {
+            let lo = *m.row_ptr.get_unchecked(row) as usize;
+            let hi = *m.row_ptr.get_unchecked(row + 1) as usize;
+            let n = hi - lo;
+            let cols = m.col_idx.as_ptr().add(lo);
+            let vals = m.vals.as_ptr().add(lo);
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let idx = _mm256_loadu_si256(cols.add(i) as *const __m256i);
+                let xv = _mm256_i32gather_ps::<4>(xp, idx);
+                acc = _mm256_fmadd_ps(_mm256_loadu_ps(vals.add(i)), xv, acc);
+                i += 8;
+            }
+            let mut tail = 0.0f32;
+            while i < n {
+                tail = (*vals.add(i)).mul_add(*xp.add(*cols.add(i) as usize), tail);
+                i += 1;
+            }
+            *y.get_unchecked_mut(row) = hsum8(acc) + tail;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Coo};
+    use crate::scalar::assert_allclose;
+    use crate::spc5::csr_to_spc5;
+    use crate::util::minitest::property;
+
+    fn bits64(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn avx2_spc5_matches_reference_all_r_f64() {
+        if !available() {
+            eprintln!("SKIP: no AVX2/FMA on this host");
+            return;
+        }
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 333,
+            ncols: 401,
+            nnz_per_row: 9.0,
+            run_len: 3.0,
+            row_corr: 0.6,
+            skew: 0.3,
+            bandwidth: None,
+        }
+        .generate(7);
+        let x: Vec<f64> = (0..401).map(|i| (i as f64 * 0.17).sin() + 1.0).collect();
+        let mut want = vec![0.0; 333];
+        csr.spmv(&x, &mut want);
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&csr, r, 4);
+            let padded = PaddedX::new(&x, 4);
+            let mut got = vec![0.0; 333];
+            assert!(spmv_spc5_f64(&m, &padded, &mut got));
+            assert_allclose(&got, &want, 1e-12, 1e-12);
+        }
+    }
+
+    #[test]
+    fn avx2_spc5_matches_reference_all_r_f32() {
+        if !available() {
+            return;
+        }
+        let csr: Csr<f32> = gen::Structured {
+            nrows: 120,
+            ncols: 150,
+            nnz_per_row: 8.0,
+            run_len: 4.0,
+            row_corr: 0.5,
+            ..Default::default()
+        }
+        .generate(11);
+        let x: Vec<f32> = (0..150).map(|i| (i as f32 * 0.05).cos()).collect();
+        let mut want = vec![0.0f32; 120];
+        csr.spmv(&x, &mut want);
+        for r in [1usize, 2, 4, 8] {
+            let m = csr_to_spc5(&csr, r, 8);
+            let padded = PaddedX::new(&x, 8);
+            let mut got = vec![0.0f32; 120];
+            assert!(spmv_spc5_f32(&m, &padded, &mut got));
+            assert_allclose(&got, &want, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn blocks_at_right_edge_are_safe() {
+        if !available() {
+            return;
+        }
+        // Non-zeros in the last columns: the 4-lane window load hits the pad.
+        let mut coo = Coo::<f64>::new(4, 16);
+        for r in 0..4 {
+            coo.push(r, 15, 2.0);
+            coo.push(r, 14, 1.0);
+        }
+        let csr = Csr::from_coo(coo);
+        let m = csr_to_spc5(&csr, 2, 4);
+        let x: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let padded = PaddedX::new(&x, 4);
+        let mut y = vec![0.0; 4];
+        assert!(spmv_spc5_f64(&m, &padded, &mut y));
+        assert_eq!(y, vec![44.0; 4]); // 14 + 2*15
+    }
+
+    #[test]
+    fn multi_rhs_columns_are_bitwise_single_calls() {
+        if !available() {
+            return;
+        }
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 173,
+            ncols: 190,
+            nnz_per_row: 7.0,
+            run_len: 2.5,
+            row_corr: 0.5,
+            skew: 0.4,
+            bandwidth: None,
+        }
+        .generate(3);
+        let m = csr_to_spc5(&csr, 4, 4);
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|v| (0..190).map(|i| ((i * (v + 2)) % 11) as f64 * 0.3 - 1.2).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; 173]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|v| v.as_mut_slice()).collect();
+        assert!(spmv_spc5_multi_f64(&m, &x_refs, &mut y_refs));
+        for (x, y) in xs.iter().zip(&ys) {
+            let padded = PaddedX::new(x, 4);
+            let mut single = vec![0.0; 173];
+            assert!(spmv_spc5_f64(&m, &padded, &mut single));
+            assert_eq!(bits64(y), bits64(&single), "fused column != single kernel");
+        }
+    }
+
+    #[test]
+    fn multi_rhs_f32_matches_reference() {
+        if !available() {
+            return;
+        }
+        let csr: Csr<f32> = gen::random_uniform(140, 5.0, 9);
+        let m = csr_to_spc5(&csr, 2, 8);
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|v| (0..csr.ncols).map(|i| ((i + v) % 9) as f32 * 0.25 - 1.0).collect())
+            .collect();
+        let x_refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0f32; 140]).collect();
+        let mut y_refs: Vec<&mut [f32]> = ys.iter_mut().map(|v| v.as_mut_slice()).collect();
+        assert!(spmv_spc5_multi_f32(&m, &x_refs, &mut y_refs));
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0f32; 140];
+            csr.spmv(x, &mut want);
+            assert_allclose(y, &want, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn sell_avx2_matches_portable_and_avx512() {
+        if !available() {
+            eprintln!("SKIP: no AVX2/FMA on this host");
+            return;
+        }
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 301,
+            ncols: 260,
+            nnz_per_row: 7.0,
+            run_len: 2.0,
+            row_corr: 0.3,
+            skew: 0.7,
+            bandwidth: None,
+        }
+        .generate(23);
+        let x: Vec<f64> = (0..260).map(|i| (i as f64 * 0.13).cos() - 0.2).collect();
+        let mut want = vec![0.0; 301];
+        csr.spmv(&x, &mut want);
+        for sigma in [8usize, 64, 512] {
+            let m = SellMatrix::from_csr(&csr, sigma);
+            let mut got = vec![0.0; 301];
+            assert!(spmv_sell_f64(&m, &x, &mut got));
+            assert_allclose(&got, &want, 1e-12, 1e-12);
+            // Lane-independent FMA order == the AVX-512 kernel's: bitwise.
+            if super::super::native_avx512::available() {
+                let mut got512 = vec![0.0; 301];
+                assert!(super::super::native_avx512::spmv_sell_f64(&m, &x, &mut got512));
+                assert_eq!(bits64(&got), bits64(&got512), "sigma={sigma}");
+            }
+        }
+    }
+
+    #[test]
+    fn sell_avx2_padding_never_touches_x() {
+        if !available() {
+            return;
+        }
+        let mut coo = Coo::<f64>::new(16, 32);
+        for r in 0..16 {
+            let len = if r % 2 == 0 { 5 } else { 1 };
+            for k in 0..len {
+                coo.push(r, 1 + (r * 3 + k) % 31, 1.0 + k as f64);
+            }
+        }
+        let csr = Csr::from_coo(coo);
+        let mut x: Vec<f64> = (0..32).map(|i| i as f64 * 0.5).collect();
+        x[0] = f64::INFINITY;
+        let mut want = vec![0.0; 16];
+        csr.spmv(&x, &mut want);
+        let m = SellMatrix::from_csr(&csr, 16);
+        let mut got = vec![0.0; 16];
+        assert!(spmv_sell_f64(&m, &x, &mut got));
+        assert!(got.iter().all(|v| v.is_finite()), "{got:?}");
+        assert_allclose(&got, &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn sell_avx2_f32_matches_reference() {
+        if !available() {
+            return;
+        }
+        let csr: Csr<f32> = gen::random_uniform(200, 6.0, 31);
+        let x: Vec<f32> = (0..csr.ncols).map(|i| (i as f32 * 0.11).sin()).collect();
+        let mut want = vec![0.0f32; 200];
+        csr.spmv(&x, &mut want);
+        let m = SellMatrix::from_csr(&csr, 64);
+        let mut got = vec![0.0f32; 200];
+        assert!(spmv_sell_f32(&m, &x, &mut got));
+        assert_allclose(&got, &want, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn csr_gather_kernel_matches_reference_both_precisions() {
+        if !available() {
+            return;
+        }
+        let csr: Csr<f64> = gen::Structured {
+            nrows: 210,
+            ncols: 180,
+            nnz_per_row: 11.0,
+            run_len: 1.5,
+            row_corr: 0.2,
+            skew: 0.6,
+            bandwidth: None,
+        }
+        .generate(5);
+        let x: Vec<f64> = (0..180).map(|i| (i as f64 * 0.23).sin() * 1.5).collect();
+        let mut want = vec![0.0; 210];
+        csr.spmv(&x, &mut want);
+        let mut got = vec![0.0; 210];
+        assert!(spmv_csr_f64(&csr, &x, &mut got));
+        assert_allclose(&got, &want, 1e-12, 1e-12);
+
+        let csr32: Csr<f32> = gen::random_uniform(170, 9.0, 13);
+        let x32: Vec<f32> = (0..csr32.ncols).map(|i| ((i % 13) as f32) * 0.2 - 1.1).collect();
+        let mut want32 = vec![0.0f32; 170];
+        csr32.spmv(&x32, &mut want32);
+        let mut got32 = vec![0.0f32; 170];
+        assert!(spmv_csr_f32(&csr32, &x32, &mut got32));
+        assert_allclose(&got32, &want32, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn csr_auto_dispatch_works_everywhere() {
+        // No guard: on non-AVX2 hosts (or forced-scalar runs) this exercises
+        // the portable fallback inside the same entry point.
+        let csr: Csr<f64> = gen::random_uniform(64, 3.0, 21);
+        let x = vec![1.0; csr.ncols];
+        let mut want = vec![0.0; 64];
+        csr.spmv(&x, &mut want);
+        let mut got = vec![0.0; 64];
+        spmv_csr_auto(&csr, &x, &mut got);
+        assert_allclose(&got, &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn property_avx2_spc5_equals_scalar() {
+        if !available() {
+            return;
+        }
+        property("native avx2 == csr reference", |g| {
+            let nrows = g.usize_in(1..80);
+            let ncols = g.usize_in(8..120);
+            let csr: Csr<f64> = gen::Structured {
+                nrows,
+                ncols,
+                nnz_per_row: (1.0 + g.f64_unit() * 6.0).min(ncols as f64),
+                run_len: 1.0 + g.f64_unit() * 5.0,
+                row_corr: g.f64_unit(),
+                skew: 0.0,
+                bandwidth: None,
+            }
+            .generate(g.u64());
+            let x: Vec<f64> = (0..ncols).map(|_| g.f64_in(2.0)).collect();
+            let mut want = vec![0.0; nrows];
+            csr.spmv(&x, &mut want);
+            let r = *g.pick(&[1usize, 2, 4, 8]);
+            let m = csr_to_spc5(&csr, r, 4);
+            let padded = PaddedX::new(&x, 4);
+            let mut got = vec![0.0; nrows];
+            assert!(spmv_spc5_f64(&m, &padded, &mut got));
+            assert_allclose(&got, &want, 1e-12, 1e-12);
+        });
+    }
+}

@@ -1,0 +1,224 @@
+//! Runtime ISA tier: probe the host CPU **once**, pick the kernel tier every
+//! dispatcher uses, and let tests force a lower tier via `SPC5_FORCE_ISA`.
+//!
+//! The paper's kernels only win when they actually vectorize on the host ISA
+//! (AVX-512 on Intel, SVE on A64FX). Compile-time gating silently loses that
+//! on generically-built binaries, so the choice is made at runtime instead:
+//!
+//! - [`detected`] probes raw CPU capability (`is_x86_feature_detected!`) and
+//!   maps it to the best [`IsaTier`];
+//! - [`active`] resolves the tier the process actually runs:
+//!   `min(forced, detected)` when `SPC5_FORCE_ISA=scalar|avx2|avx512` is set
+//!   (forcing can only *lower* the tier — it must never enable instructions
+//!   the CPU lacks), `detected` otherwise. An unparsable value **panics**
+//!   rather than silently degrading to scalar. The result is cached in a
+//!   `OnceLock`, so the probe-once invariant holds no matter how many
+//!   operators are built.
+//!
+//! Division of labour (the contract `tests/isa_dispatch.rs` pins):
+//! *dispatchers* (`spmv_*_auto`, the plan/parallel tier ladders, the
+//! operator factory) consult [`active`] and therefore honor the force
+//! override; *concrete kernels* ([`super::native_avx512::available`],
+//! [`super::avx2::available`]) guard on raw CPU capability only, so the
+//! differential suite can run every CPU-supported kernel in one process
+//! regardless of the forced tier.
+
+use std::sync::OnceLock;
+
+use crate::scalar::Scalar;
+
+/// Environment variable that forces the active tier down (never up).
+pub const FORCE_ENV: &str = "SPC5_FORCE_ISA";
+
+/// The kernel tiers, ordered: `Scalar < Avx2 < Avx512`. "Scalar" means the
+/// portable Rust kernels (which the autovectorizer may still vectorize —
+/// the tier names the *kernel table*, not a compiler flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum IsaTier {
+    Scalar,
+    Avx2,
+    Avx512,
+}
+
+impl IsaTier {
+    /// The spelling used by `SPC5_FORCE_ISA`, `serve --isa` and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaTier::Scalar => "scalar",
+            IsaTier::Avx2 => "avx2",
+            IsaTier::Avx512 => "avx512",
+        }
+    }
+
+    /// May this tier run the 256-bit AVX2+FMA kernels?
+    pub fn has_avx2(self) -> bool {
+        self >= IsaTier::Avx2
+    }
+
+    /// May this tier run the 512-bit AVX-512F kernels?
+    pub fn has_avx512(self) -> bool {
+        self >= IsaTier::Avx512
+    }
+
+    /// All tiers, lowest first (test matrices iterate this).
+    pub fn all() -> [IsaTier; 3] {
+        [IsaTier::Scalar, IsaTier::Avx2, IsaTier::Avx512]
+    }
+}
+
+impl std::fmt::Display for IsaTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Raw CPU probe: the best tier this host can execute, ignoring any
+/// override. AVX2 kernels also need FMA (they are fused multiply-add
+/// throughout), so the middle tier requires both flags.
+pub fn detected() -> IsaTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return IsaTier::Avx512;
+        }
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return IsaTier::Avx2;
+        }
+        IsaTier::Scalar
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        IsaTier::Scalar
+    }
+}
+
+/// Parse a tier name as used by `SPC5_FORCE_ISA` / `serve --isa`. Bad
+/// values are an error, never a silent fallback.
+pub fn parse(s: &str) -> Result<IsaTier, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "scalar" => Ok(IsaTier::Scalar),
+        "avx2" => Ok(IsaTier::Avx2),
+        "avx512" => Ok(IsaTier::Avx512),
+        other => Err(format!("unknown ISA tier '{other}' (scalar|avx2|avx512)")),
+    }
+}
+
+/// Pure resolution rule: the tier a process with capability `detected` and
+/// override `force` runs. Forcing clamps to `min(forced, detected)` —
+/// requesting a tier above the CPU's capability is not an error, it simply
+/// cannot raise the tier (the binary must stay executable).
+pub fn resolve(detected: IsaTier, force: Option<&str>) -> Result<IsaTier, String> {
+    match force {
+        None => Ok(detected),
+        Some(s) => parse(s).map(|forced| forced.min(detected)),
+    }
+}
+
+/// The tier every dispatcher in this process uses. Probed and resolved
+/// once; an invalid `SPC5_FORCE_ISA` value panics with the parse error (a
+/// typo must not silently serve scalar kernels).
+pub fn active() -> IsaTier {
+    static ACTIVE: OnceLock<IsaTier> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let force = std::env::var(FORCE_ENV).ok();
+        resolve(detected(), force.as_deref())
+            .unwrap_or_else(|e| panic!("{FORCE_ENV}: {e}"))
+    })
+}
+
+/// The SPC5 block width β(r,width) a given tier vectorizes natively:
+/// full 512-bit `T::VS` for AVX-512, half of it for the 256-bit AVX2 tier.
+/// The scalar tier keeps the paper's `T::VS` geometry — the portable
+/// mask-walk kernel is width-agnostic, and full-width blocks have the best
+/// filling.
+pub fn spc5_width_for<T: Scalar>(tier: IsaTier) -> usize {
+    match tier {
+        IsaTier::Avx2 => T::VS / 2,
+        IsaTier::Scalar | IsaTier::Avx512 => T::VS,
+    }
+}
+
+/// [`spc5_width_for`] at the process's [`active`] tier — what
+/// `ops::build` converts with when the caller does not pin a width.
+pub fn spc5_width<T: Scalar>() -> usize {
+    spc5_width_for::<T>(active())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_order_and_capabilities() {
+        assert!(IsaTier::Scalar < IsaTier::Avx2);
+        assert!(IsaTier::Avx2 < IsaTier::Avx512);
+        assert!(!IsaTier::Scalar.has_avx2());
+        assert!(IsaTier::Avx2.has_avx2());
+        assert!(!IsaTier::Avx2.has_avx512());
+        assert!(IsaTier::Avx512.has_avx2());
+        assert!(IsaTier::Avx512.has_avx512());
+    }
+
+    #[test]
+    fn parse_accepts_the_three_names() {
+        assert_eq!(parse("scalar").unwrap(), IsaTier::Scalar);
+        assert_eq!(parse("avx2").unwrap(), IsaTier::Avx2);
+        assert_eq!(parse("AVX512").unwrap(), IsaTier::Avx512);
+        assert_eq!(parse(" avx2 ").unwrap(), IsaTier::Avx2);
+    }
+
+    #[test]
+    fn parse_rejects_bad_values() {
+        // The probe must error on typos, not silently serve scalar.
+        for bad in ["", "sse", "avx", "avx-512", "auto", "0"] {
+            let err = parse(bad).unwrap_err();
+            assert!(err.contains("unknown ISA tier"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn resolve_clamps_force_to_detected() {
+        use IsaTier::*;
+        // Forcing down always works.
+        assert_eq!(resolve(Avx512, Some("scalar")).unwrap(), Scalar);
+        assert_eq!(resolve(Avx512, Some("avx2")).unwrap(), Avx2);
+        assert_eq!(resolve(Avx2, Some("scalar")).unwrap(), Scalar);
+        // Forcing up clamps: never enable instructions the CPU lacks.
+        assert_eq!(resolve(Scalar, Some("avx512")).unwrap(), Scalar);
+        assert_eq!(resolve(Avx2, Some("avx512")).unwrap(), Avx2);
+        // No force: detected wins.
+        for t in IsaTier::all() {
+            assert_eq!(resolve(t, None).unwrap(), t);
+        }
+        // Bad values stay errors through resolve.
+        assert!(resolve(Avx512, Some("fast")).is_err());
+    }
+
+    #[test]
+    fn active_is_resolve_of_env_and_never_above_detected() {
+        // No env mutation here (set_var races concurrent test threads):
+        // assert the cached value is consistent with whatever environment
+        // this process actually runs under — including the CI force matrix.
+        let a = active();
+        let d = detected();
+        assert!(a <= d, "active {a} above detected {d}");
+        match std::env::var(FORCE_ENV) {
+            Ok(v) => assert_eq!(a, resolve(d, Some(&v)).unwrap()),
+            Err(_) => assert_eq!(a, d),
+        }
+        // Probe-once: repeated calls agree.
+        assert_eq!(active(), a);
+    }
+
+    #[test]
+    fn spc5_width_per_tier() {
+        assert_eq!(spc5_width_for::<f64>(IsaTier::Avx512), 8);
+        assert_eq!(spc5_width_for::<f64>(IsaTier::Avx2), 4);
+        assert_eq!(spc5_width_for::<f64>(IsaTier::Scalar), 8);
+        assert_eq!(spc5_width_for::<f32>(IsaTier::Avx512), 16);
+        assert_eq!(spc5_width_for::<f32>(IsaTier::Avx2), 8);
+        assert_eq!(spc5_width_for::<f32>(IsaTier::Scalar), 16);
+        assert_eq!(spc5_width::<f64>(), spc5_width_for::<f64>(active()));
+    }
+}

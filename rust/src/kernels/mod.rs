@@ -11,14 +11,21 @@
 //!   measured by wall-clock on this host (`benches/native_hotpath.rs`) — the
 //!   performance-optimized deliverable.
 //!
+//! The native family is tiered at runtime by [`isa`]: real AVX-512
+//! intrinsics ([`native_avx512`]), a 256-bit AVX2+FMA tier ([`avx2`]), and
+//! the portable kernels ([`native`]) as the universal floor. Dispatchers
+//! pick the best tier [`isa::active`] allows.
+//!
 //! [`dispatch`] provides the *simulated-kernel* configuration surface used
 //! by the bench harness; the native execution forms are unified behind
 //! [`crate::ops::SparseOp`] (which is the only module that sees both the
 //! kernels and the parallel runtime).
 
+pub mod avx2;
 pub mod csr_vec;
 pub mod dispatch;
 pub mod hybrid;
+pub mod isa;
 pub mod native;
 pub mod native_avx512;
 pub mod scalar;

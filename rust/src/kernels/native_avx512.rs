@@ -38,6 +38,12 @@ impl<T: Scalar> PaddedX<T> {
     pub fn as_slice(&self) -> &[T] {
         &self.data[..self.ncols]
     }
+
+    /// The full padded buffer (`ncols` real lanes plus the zero pad) — what
+    /// the kernels in this module and [`super::avx2`] actually load from.
+    pub fn padded(&self) -> &[T] {
+        &self.data
+    }
 }
 
 /// True when the running CPU can execute the AVX-512 kernels.
@@ -149,32 +155,38 @@ pub fn spmv_sell_f32(m: &SellMatrix<f32>, x: &[f32], y: &mut [f32]) -> bool {
     true
 }
 
-/// Generic auto-dispatch for SELL: real AVX-512 kernel when the CPU supports
-/// it and `c == VS`, the exact-order portable kernel otherwise. The AVX
-/// path fuses multiply-add (FMA rounding), so it matches the portable
-/// kernel to tolerance, not bitwise — callers that need the bitwise CSR
-/// anchor (the ops equivalence suite) use [`SellMatrix::spmv`] directly.
+/// Generic auto-dispatch for SELL: real AVX-512 kernel when the active
+/// tier allows it and `c == VS`, the AVX2 split-accumulator kernel on the
+/// middle tier (bitwise identical to the AVX-512 one — per-lane FMA order
+/// matches), the exact-order portable kernel otherwise. The vector paths
+/// fuse multiply-add (FMA rounding), so they match the portable kernel to
+/// the ULP bound codified in `tests/isa_dispatch.rs`, not bitwise —
+/// callers that need the bitwise CSR anchor (the ops equivalence suite)
+/// use [`SellMatrix::spmv`] directly.
 pub fn spmv_sell_auto<T: Scalar>(m: &SellMatrix<T>, x: &[T], y: &mut [T]) {
     use std::any::TypeId;
-    if available() {
-        if TypeId::of::<T>() == TypeId::of::<f64>() && m.c == 8 {
-            // SAFETY: T == f64 (checked above); identity casts.
-            let m64 = unsafe { &*(m as *const SellMatrix<T> as *const SellMatrix<f64>) };
-            let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
-            let y64 =
-                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
-            if spmv_sell_f64(m64, x64, y64) {
-                return;
-            }
-        } else if TypeId::of::<T>() == TypeId::of::<f32>() && m.c == 16 {
-            // SAFETY: T == f32 (checked above); identity casts.
-            let m32 = unsafe { &*(m as *const SellMatrix<T> as *const SellMatrix<f32>) };
-            let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
-            let y32 =
-                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
-            if spmv_sell_f32(m32, x32, y32) {
-                return;
-            }
+    let tier = super::isa::active();
+    if TypeId::of::<T>() == TypeId::of::<f64>() && m.c == 8 {
+        // SAFETY: T == f64 (checked above); identity casts.
+        let m64 = unsafe { &*(m as *const SellMatrix<T> as *const SellMatrix<f64>) };
+        let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+        let y64 = unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
+        if tier.has_avx512() && spmv_sell_f64(m64, x64, y64) {
+            return;
+        }
+        if tier.has_avx2() && super::avx2::spmv_sell_f64(m64, x64, y64) {
+            return;
+        }
+    } else if TypeId::of::<T>() == TypeId::of::<f32>() && m.c == 16 {
+        // SAFETY: T == f32 (checked above); identity casts.
+        let m32 = unsafe { &*(m as *const SellMatrix<T> as *const SellMatrix<f32>) };
+        let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+        let y32 = unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
+        if tier.has_avx512() && spmv_sell_f32(m32, x32, y32) {
+            return;
+        }
+        if tier.has_avx2() && super::avx2::spmv_sell_f32(m32, x32, y32) {
+            return;
         }
     }
     m.spmv(x, y);
@@ -360,43 +372,66 @@ mod imp {
     }
 }
 
-/// Dispatching wrapper: AVX-512 when possible, portable kernel otherwise.
-/// This is what the coordinator and solvers call on the f64 path.
+/// Dispatching wrapper: the best vector kernel the active tier allows for
+/// the matrix's width (AVX-512 on β(r,8), AVX2 on β(r,4)), portable kernel
+/// otherwise. This is what the coordinator and solvers call on the f64
+/// path.
 pub fn spmv_spc5_best_f64(m: &Spc5Matrix<f64>, x: &[f64], y: &mut [f64]) {
-    if m.width == 8 && available() {
+    let tier = super::isa::active();
+    if m.width == 8 && tier.has_avx512() {
         let padded = PaddedX::new(x, 8);
         let ok = spmv_spc5_f64(m, &padded, y);
         debug_assert!(ok);
-    } else {
-        super::native::spmv_spc5(m, x, y);
+        return;
     }
+    if m.width == 4 && tier.has_avx2() {
+        let padded = PaddedX::new(x, 4);
+        if super::avx2::spmv_spc5_f64(m, &padded, y) {
+            return;
+        }
+    }
+    super::native::spmv_spc5(m, x, y);
 }
 
-/// Generic auto-dispatch: routes `f64`/`f32` matrices with `width == VS`
-/// through the real AVX-512 kernels when the CPU supports them; portable
-/// mask-walk kernel otherwise. Monomorphization resolves the type test at
-/// compile time; the pointer casts are identity casts guarded by `TypeId`.
+/// Generic auto-dispatch: routes `f64`/`f32` matrices through the real
+/// AVX-512 kernels (`width == VS`) or the AVX2 half-width kernels
+/// (`width == VS/2`), whichever the active tier allows; portable mask-walk
+/// kernel otherwise. Monomorphization resolves the type test at compile
+/// time; the pointer casts are identity casts guarded by `TypeId`.
 pub fn spmv_spc5_auto<T: Scalar>(m: &Spc5Matrix<T>, x: &[T], y: &mut [T]) {
     use std::any::TypeId;
-    if available() {
-        if TypeId::of::<T>() == TypeId::of::<f64>() && m.width == 8 {
-            // SAFETY: T == f64 (checked above); these are identity casts.
-            let m64 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f64>) };
-            let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
-            let y64 =
-                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
+    let tier = super::isa::active();
+    if TypeId::of::<T>() == TypeId::of::<f64>() {
+        // SAFETY: T == f64 (checked above); these are identity casts.
+        let m64 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f64>) };
+        let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+        let y64 = unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
+        if tier.has_avx512() && m.width == 8 {
             let padded = PaddedX::new(x64, 8);
             if spmv_spc5_f64(m64, &padded, y64) {
                 return;
             }
-        } else if TypeId::of::<T>() == TypeId::of::<f32>() && m.width == 16 {
-            // SAFETY: T == f32 (checked above); identity casts.
-            let m32 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f32>) };
-            let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
-            let y32 =
-                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
+        }
+        if tier.has_avx2() && m.width == 4 {
+            let padded = PaddedX::new(x64, 4);
+            if super::avx2::spmv_spc5_f64(m64, &padded, y64) {
+                return;
+            }
+        }
+    } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+        // SAFETY: T == f32 (checked above); identity casts.
+        let m32 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f32>) };
+        let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+        let y32 = unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
+        if tier.has_avx512() && m.width == 16 {
             let padded = PaddedX::new(x32, 16);
             if spmv_spc5_f32(m32, &padded, y32) {
+                return;
+            }
+        }
+        if tier.has_avx2() && m.width == 8 {
+            let padded = PaddedX::new(x32, 8);
+            if super::avx2::spmv_spc5_f32(m32, &padded, y32) {
                 return;
             }
         }

@@ -13,8 +13,8 @@
 use std::path::PathBuf;
 
 use spc5::cli::Args;
-use spc5::coordinator::{Backend, FormatChoice, FormatMode, PlanMode, SpmvService};
-use spc5::kernels::{native, SimIsa};
+use spc5::coordinator::{Backend, FormatChoice, FormatMode, PlanMode, SelectorModel, SpmvService};
+use spc5::kernels::{isa, native, SimIsa};
 use spc5::matrix::{corpus_by_name_or_fail, corpus_entries, gen, mm_io, Csr};
 use spc5::parallel::ParallelSpc5;
 use spc5::spc5::{csr_to_spc5, FormatStats};
@@ -133,35 +133,38 @@ fn cmd_spmv(args: &mut Args) -> Result<(), String> {
     let threads = args.opt_num::<usize>("threads", 1)?;
     args.finish()?;
 
+    let tier = isa::active();
     let r = if r == 0 {
-        match spc5::coordinator::select_format(&m, &Default::default()).choice {
+        match spc5::coordinator::select_format(&m, &SelectorModel::for_tier(tier)).choice {
             FormatChoice::Spc5 { r } => r,
             _ => 1,
         }
     } else {
         r
     };
+    // Block width follows the tier: full VS on AVX-512/portable, VS/2 on AVX2.
+    let width = isa::spc5_width::<f64>();
     let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 + (i % 5) as f64 * 0.1).collect();
     let mut y = vec![0.0; m.nrows];
     let flops = spmv_flops(m.nnz() as u64);
 
-    // CSR baseline.
+    // CSR baseline (tier-dispatched: AVX2 gather kernel when available).
     let t = Timer::start();
     for _ in 0..iters {
-        native::spmv_csr(&m, &x, &mut y);
+        spc5::kernels::avx2::spmv_csr_auto(&m, &x, &mut y);
     }
     let csr_g = gflops(flops * iters as u64, t.elapsed_secs());
 
     if threads <= 1 {
-        let spc5m = csr_to_spc5(&m, r, 8);
+        let spc5m = csr_to_spc5(&m, r, width);
         let t = Timer::start();
         for _ in 0..iters {
-            // AVX-512 kernel when the host has it, portable otherwise.
+            // Best kernel the active tier offers, portable otherwise.
             spc5::kernels::native_avx512::spmv_spc5_auto(&spc5m, &x, &mut y);
         }
         let g = gflops(flops * iters as u64, t.elapsed_secs());
         println!(
-            "{name}: csr {csr_g:.2} GFlop/s | spc5 beta({r},8) {g:.2} GFlop/s [x{:.2}]",
+            "{name} [{tier}]: csr {csr_g:.2} GFlop/s | spc5 beta({r},{width}) {g:.2} GFlop/s [x{:.2}]",
             g / csr_g
         );
     } else {
@@ -171,8 +174,9 @@ fn cmd_spmv(args: &mut Args) -> Result<(), String> {
             pm.spmv(&x, &mut y);
         }
         let g = gflops(flops * iters as u64, t.elapsed_secs());
+        // ParallelSpc5 converts its row slices at the full VS width.
         println!(
-            "{name}: csr(1t) {csr_g:.2} GFlop/s | spc5 beta({r},8) x{threads} threads {g:.2} GFlop/s"
+            "{name} [{tier}]: csr(1t) {csr_g:.2} GFlop/s | spc5 beta({r},8) x{threads} threads {g:.2} GFlop/s"
         );
     }
     Ok(())
@@ -241,7 +245,19 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
             return Err(format!("unknown format '{other}' (auto|csr|spc5|sell|plan)"))
         }
     };
+    // --isa forces the kernel tier (same contract as SPC5_FORCE_ISA: the
+    // force is clamped to what the CPU supports, never raised above it).
+    // Applied via the env var *before* any dispatch consults the
+    // probe-once result; the process is still single-threaded here.
+    match args.opt("isa", "auto").as_str() {
+        "auto" => {}
+        other => {
+            let forced = isa::parse(other)?;
+            std::env::set_var(isa::FORCE_ENV, forced.name());
+        }
+    }
     args.finish()?;
+    println!("isa tier: {} active, {} detected (--isa / SPC5_FORCE_ISA force)", isa::active(), isa::detected());
     let svc: SpmvService<f64> =
         SpmvService::with_format(workers, 16, backend, plan, threads, format);
     let m = corpus_by_name_or_fail("nd6k")?.build(100_000);

@@ -39,7 +39,8 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{native, native_avx512, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
+use crate::kernels::isa::{self, IsaTier};
+use crate::kernels::{avx2, native, native_avx512, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
 use crate::matrix::sell::SellMatrix;
 use crate::matrix::Csr;
 use crate::parallel::{
@@ -154,7 +155,10 @@ impl<T: Scalar> SparseOp<T> for Csr<T> {
         "native-csr".into()
     }
     fn spmv(&self, x: &[T], y: &mut [T]) {
-        native::spmv_csr(self, x, y);
+        // Tier-aware: AVX2 gather kernel when the active tier allows it.
+        // [`ParallelCsr`] lanes route through the same entry point, so the
+        // team==serial bitwise contract holds on every tier.
+        avx2::spmv_csr_auto(self, x, y);
     }
     fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
         native::spmv_csr_multi_rows(self, 0..self.nrows, xs, ys, scratch);
@@ -205,12 +209,15 @@ impl<T: Scalar> SparseOp<T> for SellMatrix<T> {
     fn spmv(&self, x: &[T], y: &mut [T]) {
         // Deliberate tradeoff: the serving path is the exact-order portable
         // kernel — bitwise equal to the CSR reference and to the team form,
-        // which is the equivalence suite's anchor. The faster AVX-512
-        // variant (`native_avx512::spmv_sell_auto`, FMA rounding) is
-        // measured by the bench bake-off; switching the serving path to it
-        // means relaxing the bitwise contract to tolerance first. The
-        // selector prices SELL for *this* kernel (see
-        // `SelectorModel::sell_per_slot`).
+        // which is the equivalence suite's anchor. The faster vector
+        // variants (`native_avx512::spmv_sell_auto`, FMA rounding) are
+        // measured by the bench bake-off, and their divergence from this
+        // path is no longer just a comment: `tests/isa_dispatch.rs`
+        // (`sell_fma_tiers_stay_within_ulp_bound_of_exact_order`) pins it
+        // to the documented `util::ulp` bound on every capable host.
+        // Switching the serving path to the FMA kernels means relaxing the
+        // bitwise contract to that bound first. The selector prices SELL
+        // for *this* kernel (see `SelectorModel::sell_per_slot`).
         SellMatrix::spmv(self, x, y);
     }
     fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
@@ -458,9 +465,11 @@ impl<T: Scalar> SparseOp<T> for SimulatedOp<T> {
 
 // ---- the factory ----
 
-/// Build the native operator for `csr` under `choice`, bound to `team`.
+/// Build the native operator for `csr` under `choice`, bound to `team`, at
+/// the process's active ISA tier ([`build_tiered`] with
+/// [`crate::kernels::isa::active`]).
 ///
-/// A 1-lane team yields the serial forms (which keep the serial AVX-512
+/// A 1-lane team yields the serial forms (which keep the serial vector
 /// kernels); a wider team yields the team-dispatched forms — one shared
 /// conversion split at panel/chunk boundaries, partitions cached at
 /// construction so every call is a single epoch-barrier wake.
@@ -469,27 +478,43 @@ pub fn build<T: Scalar>(
     choice: FormatChoice,
     team: &Arc<Team>,
 ) -> Box<dyn SparseOp<T>> {
+    build_tiered(csr, choice, team, isa::active())
+}
+
+/// [`build`] with an explicit [`IsaTier`]: the tier picks the SPC5 block
+/// geometry — β(r, `T::VS`) on the AVX-512 and scalar tiers, the half-width
+/// β(r, `T::VS`/2) the 256-bit kernels consume on the AVX2 tier — for both
+/// the fixed-`r` and planned forms. Every `FormatChoice` builds a working
+/// operator on every tier (kernel *dispatch* still consults the process's
+/// active tier, so an operator built for a higher tier than the active one
+/// simply serves through the portable kernels).
+pub fn build_tiered<T: Scalar>(
+    csr: &Csr<T>,
+    choice: FormatChoice,
+    team: &Arc<Team>,
+    tier: IsaTier,
+) -> Box<dyn SparseOp<T>> {
+    let width = isa::spc5_width_for::<T>(tier);
+    let plan_cfg = || PlanConfig { width: Some(width), ..PlanConfig::default() };
     if team.threads() == 1 {
         match choice {
             FormatChoice::Csr => Box::new(csr.clone()),
-            FormatChoice::Spc5 { r } => Box::new(csr_to_spc5(csr, r, T::VS)),
+            FormatChoice::Spc5 { r } => Box::new(csr_to_spc5(csr, r, width)),
             FormatChoice::Sell { sigma } => Box::new(SellMatrix::from_csr(csr, sigma)),
-            FormatChoice::Planned => Box::new(PlannedMatrix::build(csr, &PlanConfig::default())),
+            FormatChoice::Planned => Box::new(PlannedMatrix::build(csr, &plan_cfg())),
         }
     } else {
         match choice {
             FormatChoice::Csr => Box::new(ParallelCsr::with_team(csr, Arc::clone(team))),
             FormatChoice::Spc5 { r } => {
-                Box::new(SharedSpc5::new(csr_to_spc5(csr, r, T::VS), Arc::clone(team)))
+                Box::new(SharedSpc5::new(csr_to_spc5(csr, r, width), Arc::clone(team)))
             }
             FormatChoice::Sell { sigma } => {
                 Box::new(ParallelSell::with_team(csr, sigma, Arc::clone(team)))
             }
-            FormatChoice::Planned => Box::new(ParallelPlanned::with_team(
-                csr,
-                &PlanConfig::default(),
-                Arc::clone(team),
-            )),
+            FormatChoice::Planned => {
+                Box::new(ParallelPlanned::with_team(csr, &plan_cfg(), Arc::clone(team)))
+            }
         }
     }
 }

@@ -62,7 +62,9 @@ impl<T: Scalar> ParallelCsr<T> {
             // SAFETY: partition ranges tile [0, nrows) disjointly, and the
             // team's completion barrier outlives every lane's slice.
             let ys = unsafe { ybase.slice(r.clone()) };
-            native::spmv_csr(&parts[i], x, ys);
+            // Same tier-aware entry point as the serial CSR operator — rows
+            // are independent, so the split stays bitwise equal to serial.
+            crate::kernels::avx2::spmv_csr_auto(&parts[i], x, ys);
         });
     }
 
@@ -568,12 +570,14 @@ fn per_lane_scratch<T: Scalar>(parts: usize) -> Vec<Mutex<Vec<T>>> {
 }
 
 /// Execute pre-computed panel/row lane ranges of one shared conversion on
-/// the team, through the real AVX-512 kernels when the host supports them —
+/// the team, through the best vector kernels the active ISA tier allows —
 /// x is padded **once** per call and shared by every lane (the serial
 /// `spmv_spc5_auto` paid the same padding cost for one lane's worth of
-/// kernel). Falls back to the portable panel walk otherwise. This is
-/// [`SharedSpc5::spmv`]'s body — the operator layer's team-SPC5 path — so
-/// going multi-lane never trades the vector kernel away.
+/// kernel). AVX-512 serves β(r,VS), the AVX2 tier serves the half-width
+/// β(r,VS/2) geometry, and everything else falls back to the portable
+/// panel walk. This is [`SharedSpc5::spmv`]'s body — the operator layer's
+/// team-SPC5 path — so going multi-lane never trades the vector kernel
+/// away.
 pub(crate) fn spmv_spc5_panels_team<T: Scalar>(
     m: &Spc5Matrix<T>,
     panels: &Partition,
@@ -582,13 +586,14 @@ pub(crate) fn spmv_spc5_panels_team<T: Scalar>(
     x: &[T],
     y: &mut [T],
 ) {
-    use crate::kernels::native_avx512 as avx;
+    use crate::kernels::{avx2, native_avx512 as avx};
     use std::any::TypeId;
-    if avx::available() {
-        if TypeId::of::<T>() == TypeId::of::<f64>() && m.width == 8 {
-            // SAFETY: T == f64 (checked above); identity casts.
-            let m64 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f64>) };
-            let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+    let tier = crate::kernels::isa::active();
+    if TypeId::of::<T>() == TypeId::of::<f64>() {
+        // SAFETY: T == f64 (checked above); identity casts.
+        let m64 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f64>) };
+        let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+        if tier.has_avx512() && m.width == 8 {
             let padded = avx::PaddedX::new(x64, 8);
             let ybase = SendPtr::new(y.as_mut_ptr() as *mut f64);
             team.run_parts(panels.ranges.len(), &|i| {
@@ -603,10 +608,26 @@ pub(crate) fn spmv_spc5_panels_team<T: Scalar>(
             });
             return;
         }
-        if TypeId::of::<T>() == TypeId::of::<f32>() && m.width == 16 {
-            // SAFETY: T == f32 (checked above); identity casts.
-            let m32 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f32>) };
-            let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+        if tier.has_avx2() && m.width == 4 {
+            let padded = avx::PaddedX::new(x64, 4);
+            let ybase = SendPtr::new(y.as_mut_ptr() as *mut f64);
+            team.run_parts(panels.ranges.len(), &|i| {
+                let pr = panels.ranges[i].clone();
+                if pr.is_empty() {
+                    return;
+                }
+                // SAFETY: panel ranges map to disjoint row ranges.
+                let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
+                let ok = avx2::spmv_spc5_panels_f64(m64, &padded, pr, ys);
+                debug_assert!(ok);
+            });
+            return;
+        }
+    } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+        // SAFETY: T == f32 (checked above); identity casts.
+        let m32 = unsafe { &*(m as *const Spc5Matrix<T> as *const Spc5Matrix<f32>) };
+        let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+        if tier.has_avx512() && m.width == 16 {
             let padded = avx::PaddedX::new(x32, 16);
             let ybase = SendPtr::new(y.as_mut_ptr() as *mut f32);
             team.run_parts(panels.ranges.len(), &|i| {
@@ -617,6 +638,21 @@ pub(crate) fn spmv_spc5_panels_team<T: Scalar>(
                 // SAFETY: panel ranges map to disjoint row ranges.
                 let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
                 let ok = avx::spmv_spc5_panels_f32(m32, &padded, pr, ys);
+                debug_assert!(ok);
+            });
+            return;
+        }
+        if tier.has_avx2() && m.width == 8 {
+            let padded = avx::PaddedX::new(x32, 8);
+            let ybase = SendPtr::new(y.as_mut_ptr() as *mut f32);
+            team.run_parts(panels.ranges.len(), &|i| {
+                let pr = panels.ranges[i].clone();
+                if pr.is_empty() {
+                    return;
+                }
+                // SAFETY: panel ranges map to disjoint row ranges.
+                let ys = unsafe { ybase.slice(rows.ranges[i].clone()) };
+                let ok = avx2::spmv_spc5_panels_f32(m32, &padded, pr, ys);
                 debug_assert!(ok);
             });
             return;

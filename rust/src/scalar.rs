@@ -46,6 +46,12 @@ pub trait Scalar:
     fn is_finite(self) -> bool;
     /// Machine epsilon.
     fn eps() -> Self;
+    /// Map the value to an integer that is *monotone in the float order*:
+    /// the distance between two mapped values counts the representable
+    /// floats between them (the ULP distance [`crate::util::ulp`] builds
+    /// on). Standard sign-magnitude-to-two's-complement trick; f32 widens
+    /// so both precisions share one codomain per-type scale.
+    fn ulp_ordered(self) -> i64;
 }
 
 impl Scalar for f32 {
@@ -89,6 +95,15 @@ impl Scalar for f32 {
     fn eps() -> Self {
         f32::EPSILON
     }
+    #[inline(always)]
+    fn ulp_ordered(self) -> i64 {
+        let b = self.to_bits();
+        if b >> 31 == 0 {
+            b as i64
+        } else {
+            -((b & 0x7FFF_FFFF) as i64)
+        }
+    }
 }
 
 impl Scalar for f64 {
@@ -131,6 +146,15 @@ impl Scalar for f64 {
     #[inline(always)]
     fn eps() -> Self {
         f64::EPSILON
+    }
+    #[inline(always)]
+    fn ulp_ordered(self) -> i64 {
+        let b = self.to_bits();
+        if b >> 63 == 0 {
+            b as i64
+        } else {
+            -((b & 0x7FFF_FFFF_FFFF_FFFF) as i64)
+        }
     }
 }
 
@@ -183,5 +207,19 @@ mod tests {
     fn mul_add_fused() {
         assert_eq!(2.0f64.mul_add(3.0, 4.0), 10.0);
         assert_eq!(<f32 as Scalar>::mul_add(2.0, 3.0, 4.0), 10.0);
+    }
+
+    #[test]
+    fn ulp_ordered_is_monotone() {
+        // Adjacent floats map to adjacent integers, across the zero
+        // straddle and in both precisions.
+        let xs64 = [-2.0f64, -1.0, -f64::MIN_POSITIVE, -0.0, 0.0, f64::MIN_POSITIVE, 1.0, 2.0];
+        for w in xs64.windows(2) {
+            assert!(w[0].ulp_ordered() <= w[1].ulp_ordered(), "{w:?}");
+        }
+        assert_eq!(1.0f64.ulp_ordered() + 1, (1.0f64 + f64::EPSILON).ulp_ordered());
+        assert_eq!((-0.0f64).ulp_ordered(), 0.0f64.ulp_ordered());
+        assert_eq!(1.0f32.ulp_ordered() + 1, (1.0f32 + f32::EPSILON).ulp_ordered());
+        assert!((-1.0f32).ulp_ordered() < (-0.5f32).ulp_ordered());
     }
 }

@@ -69,8 +69,10 @@ pub struct PlanConfig {
     /// Candidate block heights, tried in order (each must pass
     /// [`Spc5Matrix::check`]'s `r ∈ {1,2,4,8}`).
     pub candidates: Vec<usize>,
-    /// Block width; `None` means the scalar type's `VS` (8 for f64, 16 for
-    /// f32 — the paper's β(r,VS)).
+    /// Block width; `None` resolves per the active ISA tier
+    /// ([`crate::kernels::isa::spc5_width`]): the scalar type's `VS` (8 for
+    /// f64, 16 for f32 — the paper's β(r,VS)) on AVX-512 and scalar hosts,
+    /// `VS/2` where only the 256-bit AVX2 kernels can run.
     pub width: Option<usize>,
     pub scoring: PlanScoring,
 }
@@ -121,7 +123,9 @@ impl<T: Scalar> PlannedMatrix<T> {
     /// Compile `csr` into a plan under `cfg`.
     pub fn build(csr: &Csr<T>, cfg: &PlanConfig) -> Self {
         assert!(!cfg.candidates.is_empty(), "need at least one candidate r");
-        let width = cfg.width.unwrap_or(T::VS);
+        // Unpinned width follows the active ISA tier: T::VS on AVX-512 and
+        // scalar hosts, T::VS/2 where only the 256-bit kernels can run.
+        let width = cfg.width.unwrap_or_else(crate::kernels::isa::spc5_width::<T>);
         let chunk_rows = cfg.aligned_chunk_rows();
         let mut chunks = Vec::with_capacity(csr.nrows.div_ceil(chunk_rows));
         let mut row0 = 0usize;
@@ -244,9 +248,10 @@ pub fn plan_auto<T: Scalar>(csr: &Csr<T>) -> PlannedMatrix<T> {
 }
 
 /// Execute a contiguous run of planned chunks into `y`, where `y[0]` is the
-/// first chunk's `row0`. On AVX-512 hosts the x vector is padded **once**
-/// and shared by every chunk's kernel call (padding per chunk would copy x
-/// `nchunks` times per SpMV — rivaling the matrix traffic itself); elsewhere
+/// first chunk's `row0`. On vector tiers (AVX-512 for full-width plans,
+/// AVX2 for half-width ones) the x vector is padded **once** and shared by
+/// every chunk's kernel call (padding per chunk would copy x `nchunks`
+/// times per SpMV — rivaling the matrix traffic itself); elsewhere
 /// the portable monomorphized kernels run directly. Used by
 /// [`PlannedMatrix::spmv`] and by each [`crate::parallel::ParallelPlanned`]
 /// worker thread on its chunk range.
@@ -254,12 +259,12 @@ pub fn spmv_chunks<T: Scalar>(chunks: &[PlannedChunk<T>], x: &[T], y: &mut [T]) 
     use std::any::TypeId;
     let Some(first) = chunks.first() else { return };
     let base = first.row0;
-    if crate::kernels::native_avx512::available() {
-        if TypeId::of::<T>() == TypeId::of::<f64>() && chunks.iter().all(|c| c.m.width == 8) {
-            // SAFETY: T == f64 (checked above); identity casts.
-            let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
-            let y64 =
-                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
+    let tier = crate::kernels::isa::active();
+    if TypeId::of::<T>() == TypeId::of::<f64>() {
+        // SAFETY: T == f64 (checked above); identity casts.
+        let x64 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f64, x.len()) };
+        let y64 = unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f64, y.len()) };
+        if tier.has_avx512() && chunks.iter().all(|c| c.m.width == 8) {
             let padded = crate::kernels::native_avx512::PaddedX::new(x64, 8);
             for c in chunks {
                 let m64 =
@@ -274,17 +279,48 @@ pub fn spmv_chunks<T: Scalar>(chunks: &[PlannedChunk<T>], x: &[T], y: &mut [T]) 
             }
             return;
         }
-        if TypeId::of::<T>() == TypeId::of::<f32>() && chunks.iter().all(|c| c.m.width == 16) {
-            // SAFETY: T == f32 (checked above); identity casts.
-            let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
-            let y32 =
-                unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
+        if tier.has_avx2() && chunks.iter().all(|c| c.m.width == 4) {
+            let padded = crate::kernels::native_avx512::PaddedX::new(x64, 4);
+            for c in chunks {
+                let m64 =
+                    unsafe { &*(&c.m as *const Spc5Matrix<T> as *const Spc5Matrix<f64>) };
+                let lo = c.row0 - base;
+                let ok = crate::kernels::avx2::spmv_spc5_f64(
+                    m64,
+                    &padded,
+                    &mut y64[lo..lo + c.m.nrows],
+                );
+                debug_assert!(ok);
+            }
+            return;
+        }
+    }
+    if TypeId::of::<T>() == TypeId::of::<f32>() {
+        // SAFETY: T == f32 (checked above); identity casts.
+        let x32 = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const f32, x.len()) };
+        let y32 = unsafe { std::slice::from_raw_parts_mut(y.as_mut_ptr() as *mut f32, y.len()) };
+        if tier.has_avx512() && chunks.iter().all(|c| c.m.width == 16) {
             let padded = crate::kernels::native_avx512::PaddedX::new(x32, 16);
             for c in chunks {
                 let m32 =
                     unsafe { &*(&c.m as *const Spc5Matrix<T> as *const Spc5Matrix<f32>) };
                 let lo = c.row0 - base;
                 let ok = crate::kernels::native_avx512::spmv_spc5_f32(
+                    m32,
+                    &padded,
+                    &mut y32[lo..lo + c.m.nrows],
+                );
+                debug_assert!(ok);
+            }
+            return;
+        }
+        if tier.has_avx2() && chunks.iter().all(|c| c.m.width == 8) {
+            let padded = crate::kernels::native_avx512::PaddedX::new(x32, 8);
+            for c in chunks {
+                let m32 =
+                    unsafe { &*(&c.m as *const Spc5Matrix<T> as *const Spc5Matrix<f32>) };
+                let lo = c.row0 - base;
+                let ok = crate::kernels::avx2::spmv_spc5_f32(
                     m32,
                     &padded,
                     &mut y32[lo..lo + c.m.nrows],

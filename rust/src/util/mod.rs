@@ -9,14 +9,18 @@
 //! - [`stats`] — streaming summary statistics (mean/median/stddev/quantiles),
 //! - [`json`] — a small JSON value/writer used by the bench emitters,
 //! - [`minitest`] — a property-based testing mini-framework (proptest stand-in),
-//! - [`timing`] — monotonic timers and throughput helpers.
+//! - [`timing`] — monotonic timers and throughput helpers,
+//! - [`ulp`] — ULP-distance float comparison (the test suites' shared
+//!   tolerance vocabulary).
 
 pub mod json;
 pub mod minitest;
 pub mod prng;
 pub mod stats;
 pub mod timing;
+pub mod ulp;
 
 pub use prng::{Rng, SplitMix64, Xoshiro256};
 pub use stats::Summary;
 pub use timing::Timer;
+pub use ulp::{assert_ulp, max_ulp_for, ulp_diff};

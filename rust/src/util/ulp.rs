@@ -1,0 +1,125 @@
+//! ULP-distance float comparison — the shared tolerance vocabulary of the
+//! numeric test suites.
+//!
+//! Kernels in this crate are free to reorder and fuse multiply-adds (the
+//! FMA tiers, the panel reductions, the fused multi-RHS paths), so outputs
+//! match the scalar reference only up to rounding. The old suites each
+//! carried ad-hoc `(rtol, atol)` pairs; this module replaces them with one
+//! *documented* bound per precision, stated in units that mean something:
+//! representable floating-point steps (ULPs).
+//!
+//! [`assert_ulp`] accepts `got ≈ want` when **either**
+//!
+//! - the ULP distance ([`ulp_diff`], via [`Scalar::ulp_ordered`]) is at
+//!   most `max_ulp` — the scale-free relative criterion — **or**
+//! - `|got - want| <= max_ulp * eps` — an absolute floor anchored at
+//!   magnitude 1.0, which absorbs benign cancellation near zero (where a
+//!   tiny absolute error can be astronomically many ULPs).
+//!
+//! The per-precision defaults ([`max_ulp_for`]) are deliberately generous —
+//! they bound *kernel-reordering* error across every matrix in the test
+//! corpus (long rows accumulate `O(n·eps)` divergence), not a single
+//! operation's rounding: 2^16 ULPs for f64 (≈ 1.5e-11 relative) and 2^14
+//! ULPs for f32 (≈ 2.0e-3 relative). Cross-tier FMA divergence measured in
+//! the differential suite sits orders of magnitude below these bounds; they
+//! exist to fail on real defects (wrong element, dropped block, bad mask),
+//! which miss by *many* orders of magnitude.
+
+use crate::scalar::Scalar;
+
+/// Documented suite-wide ULP bound per precision: 2^16 for f64, 2^14 for
+/// f32 (see the module docs for the calibration rationale).
+pub fn max_ulp_for<T: Scalar>() -> u64 {
+    if T::BYTES == 8 {
+        1 << 16
+    } else {
+        1 << 14
+    }
+}
+
+/// The number of representable floats between `a` and `b` (0 when bitwise
+/// equal; saturates at `u64::MAX`; NaNs compare at their bit positions, so
+/// a NaN against a real number is astronomically far away).
+pub fn ulp_diff<T: Scalar>(a: T, b: T) -> u64 {
+    let d = (a.ulp_ordered() as i128 - b.ulp_ordered() as i128).unsigned_abs();
+    d.min(u64::MAX as u128) as u64
+}
+
+/// True when `a ≈ b` under the hybrid criterion described in the module
+/// docs (ULP distance or eps-anchored absolute floor).
+pub fn ulp_eq<T: Scalar>(a: T, b: T, max_ulp: u64) -> bool {
+    if ulp_diff(a, b) <= max_ulp {
+        return true;
+    }
+    let abs = (a.to_f64() - b.to_f64()).abs();
+    abs <= max_ulp as f64 * T::eps().to_f64()
+}
+
+/// Assert two slices are element-wise equal within `max_ulp`; panics with
+/// the first offending index, the ULP distance and the absolute error.
+pub fn assert_ulp<T: Scalar>(got: &[T], want: &[T], max_ulp: u64) {
+    assert_eq!(got.len(), want.len(), "length mismatch {} vs {}", got.len(), want.len());
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            ulp_eq(g, w, max_ulp),
+            "mismatch at [{i}]: got {g}, want {w} ({} ulps apart, |err| = {:.3e}, bound {max_ulp} ulps)",
+            ulp_diff(g, w),
+            (g.to_f64() - w.to_f64()).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacent_floats_are_one_ulp_apart() {
+        assert_eq!(ulp_diff(1.0f64, 1.0), 0);
+        assert_eq!(ulp_diff(1.0f64, 1.0 + f64::EPSILON), 1);
+        assert_eq!(ulp_diff(1.0f32, 1.0 + f32::EPSILON), 1);
+        // Distance is symmetric and crosses zero correctly.
+        assert_eq!(ulp_diff(-0.0f64, 0.0), 0);
+        assert_eq!(
+            ulp_diff(f64::MIN_POSITIVE, -f64::MIN_POSITIVE),
+            2 * f64::MIN_POSITIVE.to_bits()
+        );
+    }
+
+    #[test]
+    fn cancellation_near_zero_passes_via_absolute_floor() {
+        // 1e-18 vs -1e-18: astronomically many ULPs apart, but the
+        // absolute error (2e-18) is far inside max_ulp * eps ≈ 1.5e-11.
+        let max = max_ulp_for::<f64>();
+        assert!(ulp_diff(1e-18f64, -1e-18) > max);
+        assert!(ulp_eq(1e-18f64, -1e-18, max));
+    }
+
+    #[test]
+    fn real_defects_fail() {
+        let max = max_ulp_for::<f64>();
+        assert!(!ulp_eq(1.0f64, 1.001, max));
+        assert!(!ulp_eq(100.0f64, 101.0, max));
+        assert!(!ulp_eq(1.0f64, f64::NAN, max));
+        let max32 = max_ulp_for::<f32>();
+        assert!(!ulp_eq(1.0f32, 1.01, max32));
+    }
+
+    #[test]
+    fn bounds_are_looser_than_the_retired_ad_hoc_tolerances() {
+        // The suites previously accepted (rtol, atol) up to (1e-11, 1e-11)
+        // for f64 and (1e-3, 1e-3) for f32 — anything those accepted at
+        // |y| <= 1 must stay accepted, or swapping the helper in could
+        // introduce flakes.
+        let atol64 = max_ulp_for::<f64>() as f64 * f64::EPSILON;
+        assert!(atol64 > 1e-11, "{atol64}");
+        let atol32 = max_ulp_for::<f32>() as f64 * f32::EPSILON as f64;
+        assert!(atol32 > 1e-3, "{atol32}");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at [1]")]
+    fn assert_reports_index() {
+        assert_ulp(&[1.0f64, 2.0], &[1.0, 3.0], 4);
+    }
+}

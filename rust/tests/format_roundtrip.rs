@@ -1,8 +1,14 @@
 //! Integration: Matrix Market I/O ↔ CSR ↔ SPC5 round trips across the whole
-//! corpus, in both precisions.
+//! corpus, in both precisions — plus adversarial shapes (empty matrices,
+//! one-dense-row, zero columns, rows longer than a panel) that the corpus
+//! generators never produce.
 
-use spc5::matrix::{corpus_entries, mm_io, Csr};
+use spc5::kernels::native;
+use spc5::matrix::{corpus_entries, mm_io, Coo, Csr, SellMatrix};
 use spc5::spc5::{csr_to_spc5, spc5_to_csr, FormatStats};
+use spc5::util::minitest::property;
+use spc5::util::ulp::{assert_ulp, max_ulp_for};
+use spc5::util::Rng;
 
 #[test]
 fn corpus_roundtrips_all_formats_f64() {
@@ -76,4 +82,136 @@ fn beta1_preserves_csr_value_order() {
         let s = csr_to_spc5(&m, 1, 8);
         assert_eq!(s.vals, m.vals, "{}", e.name);
     }
+}
+
+// ---- adversarial shapes ----
+
+/// Degenerate matrices the corpus generators never emit. Every conversion
+/// must stay internally consistent (`check`), round-trip losslessly and
+/// serve the right product through the portable kernels.
+fn adversarial_shapes() -> Vec<(&'static str, Csr<f64>)> {
+    let all_empty = Csr::from_parts(5, 7, vec![0; 6], vec![], vec![]).unwrap();
+
+    let mut coo = Coo::<f64>::new(6, 40);
+    for c in 0..40 {
+        coo.push(3, c, 1.0 + c as f64 * 0.05); // one dense row among empties
+    }
+    let one_dense_row = Csr::from_coo(coo);
+
+    let no_columns = Csr::from_parts(4, 0, vec![0; 5], vec![], vec![]).unwrap();
+
+    let single_element = Csr::from_parts(1, 1, vec![0, 1], vec![0], vec![2.5]).unwrap();
+
+    // One row far longer than any β panel or SELL chunk (211 of 300
+    // columns), neighbours nearly empty — maximal per-row skew.
+    let mut coo = Coo::<f64>::new(8, 300);
+    for k in 0..211usize {
+        coo.push(2, (k * 7) % 300, 1.0 + k as f64 * 0.01);
+    }
+    for r in [0usize, 5, 7] {
+        coo.push(r, (r * 31) % 300, 0.5);
+    }
+    let monster_row = Csr::from_coo(coo);
+
+    vec![
+        ("all-empty", all_empty),
+        ("one-dense-row", one_dense_row),
+        ("no-columns", no_columns),
+        ("single-element", single_element),
+        ("monster-row", monster_row),
+    ]
+}
+
+#[test]
+fn adversarial_shapes_roundtrip_every_spc5_geometry() {
+    for (name, m) in adversarial_shapes() {
+        let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 + (i % 5) as f64 * 0.3).collect();
+        let mut want = vec![0.0; m.nrows];
+        m.spmv(&x, &mut want);
+        for r in [1usize, 2, 4, 8] {
+            for width in [2usize, 4, 8, 16] {
+                let s = csr_to_spc5(&m, r, width);
+                s.check().unwrap_or_else(|e| panic!("{name} beta({r},{width}): {e}"));
+                let back = spc5_to_csr(&s);
+                assert_eq!(back.row_ptr, m.row_ptr, "{name} beta({r},{width})");
+                assert_eq!(back.col_idx, m.col_idx, "{name} beta({r},{width})");
+                assert_eq!(back.vals, m.vals, "{name} beta({r},{width})");
+                let mut y = vec![0.0; m.nrows];
+                native::spmv_spc5(&s, &x, &mut y);
+                assert_ulp(&y, &want, max_ulp_for::<f64>());
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_shapes_convert_to_sell_and_serve_bitwise() {
+    // σ below the chunk height (clamped up), moderate, and far beyond the
+    // row count — the portable SELL kernel is exact-order, so the product
+    // must be bitwise the CSR reference on every shape.
+    for (name, m) in adversarial_shapes() {
+        let x: Vec<f64> = (0..m.ncols).map(|i| 0.4 + (i % 9) as f64 * 0.2).collect();
+        let mut want = vec![0.0; m.nrows];
+        m.spmv(&x, &mut want);
+        for sigma in [1usize, 8, 1000] {
+            let sell = SellMatrix::from_csr(&m, sigma);
+            sell.check().unwrap_or_else(|e| panic!("{name} sell sigma={sigma}: {e}"));
+            let mut y = vec![0.0; m.nrows];
+            sell.spmv(&x, &mut y);
+            let yb: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(yb, wb, "{name} sigma={sigma}");
+        }
+    }
+}
+
+#[test]
+fn property_random_adversarial_matrices_roundtrip_and_serve() {
+    // Random generator biased toward the degenerate cases above: ~40% of
+    // rows empty, occasional full-width monster rows, tiny dimensions.
+    property("format_roundtrip::adversarial", |g| {
+        let nrows = g.usize_in(1..24);
+        let ncols = g.usize_in(1..64);
+        let mut coo = Coo::<f64>::new(nrows, ncols);
+        for row in 0..nrows {
+            if g.chance(0.4) {
+                continue; // empty row
+            }
+            let len = if g.chance(0.15) {
+                ncols // monster row: every column occupied
+            } else {
+                g.usize_in(1..ncols.min(9) + 1)
+            };
+            let mut cols: Vec<usize> = (0..ncols).collect();
+            g.rng().shuffle(&mut cols);
+            for &c in cols.iter().take(len) {
+                coo.push(row, c, g.f64_in(2.0));
+            }
+        }
+        let m = Csr::from_coo(coo);
+        let x: Vec<f64> = (0..ncols).map(|i| 0.3 + (i % 7) as f64 * 0.4).collect();
+        let mut want = vec![0.0; nrows];
+        m.spmv(&x, &mut want);
+
+        let r = *g.pick(&[1usize, 2, 4, 8]);
+        let width = *g.pick(&[2usize, 4, 8, 16]);
+        let s = csr_to_spc5(&m, r, width);
+        s.check().unwrap_or_else(|e| panic!("beta({r},{width}): {e}"));
+        let back = spc5_to_csr(&s);
+        assert_eq!(back.row_ptr, m.row_ptr, "beta({r},{width})");
+        assert_eq!(back.col_idx, m.col_idx, "beta({r},{width})");
+        assert_eq!(back.vals, m.vals, "beta({r},{width})");
+        let mut y = vec![0.0; nrows];
+        native::spmv_spc5(&s, &x, &mut y);
+        assert_ulp(&y, &want, max_ulp_for::<f64>());
+
+        let sigma = *g.pick(&[1usize, 8, 64]);
+        let sell = SellMatrix::from_csr(&m, sigma);
+        sell.check().unwrap_or_else(|e| panic!("sell sigma={sigma}: {e}"));
+        let mut ys = vec![0.0; nrows];
+        sell.spmv(&x, &mut ys);
+        let yb: Vec<u64> = ys.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(yb, wb, "sell sigma={sigma}");
+    });
 }

@@ -1,0 +1,377 @@
+//! The cross-tier differential suite — proof that runtime ISA dispatch
+//! serves the same answers on every tier.
+//!
+//! Two complementary angles:
+//!
+//! - **In-process kernel differentials.** Concrete kernels guard on *raw CPU
+//!   capability* (`available()`), never on `SPC5_FORCE_ISA`, so one process
+//!   can run every kernel its host supports and compare them directly:
+//!   portable vs AVX2 vs AVX-512, for SPC5 β(r,·) r ∈ {1,2,4,8}, CSR, SELL
+//!   and planned forms, f32 and f64, single and fused multi-RHS.
+//! - **Forced-tier dispatch.** Dispatchers (`ops::build`, the `*_auto`
+//!   entry points) consult `isa::active()`, which honors the force. CI runs
+//!   this whole suite under `SPC5_FORCE_ISA=scalar` and `=avx2` (crossed
+//!   with the `SPC5_THREADS` matrix), so the same assertions pin each
+//!   forced kernel table end to end.
+//!
+//! Comparison levels: **bitwise** where the operation order is identical by
+//! construction (team vs serial, AVX2-SELL vs AVX-512-SELL, fused multi-RHS
+//! columns vs single calls), the documented ULP bound of
+//! [`spc5::util::ulp`] where FMA/reassociation legitimately changes the
+//! rounding (vector kernels vs the exact-order scalar reference).
+
+use std::sync::Arc;
+
+use spc5::kernels::isa::{self, IsaTier};
+use spc5::kernels::native_avx512::PaddedX;
+use spc5::kernels::{avx2, native, native_avx512};
+use spc5::matrix::{gen, Csr, SellMatrix};
+use spc5::ops::{self, FormatChoice, SparseOp};
+use spc5::parallel::Team;
+use spc5::scalar::Scalar;
+use spc5::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix};
+use spc5::util::ulp::{assert_ulp, max_ulp_for};
+
+/// Exact-order scalar reference: the inherent CSR row walk (never
+/// tier-dispatched — `ops`' CSR operator is, this method is not).
+fn reference<T: Scalar>(m: &Csr<T>, x: &[T]) -> Vec<T> {
+    let mut y = vec![T::zero(); m.nrows];
+    m.spmv(x, &mut y);
+    y
+}
+
+fn probe_x<T: Scalar>(ncols: usize, salt: usize) -> Vec<T> {
+    (0..ncols)
+        .map(|i| T::from_f64(((i * (salt + 5)) % 19) as f64 * 0.21 - 1.7))
+        .collect()
+}
+
+fn bits<T: Scalar>(v: &[T]) -> Vec<u64> {
+    v.iter().map(|x| x.to_f64().to_bits()).collect()
+}
+
+/// The shapes that historically break padding/panel/mask logic: ragged
+/// dims, a fully empty row band, near-singleton blocks, dense runs.
+fn shapes<T: Scalar>() -> Vec<(&'static str, Csr<T>)> {
+    let ragged: Csr<T> = gen::Structured {
+        nrows: 157, // prime: no multiple of r, C, chunk or lane count
+        ncols: 181,
+        nnz_per_row: 7.0,
+        run_len: 3.0,
+        row_corr: 0.6,
+        skew: 0.5,
+        bandwidth: None,
+    }
+    .generate(11);
+    let scattered: Csr<T> = gen::random_uniform(240, 2.5, 13);
+    let blocky: Csr<T> = gen::Structured {
+        nrows: 224,
+        ncols: 224,
+        nnz_per_row: 16.0,
+        run_len: 6.0,
+        row_corr: 0.9,
+        ..Default::default()
+    }
+    .generate(19);
+    vec![("ragged", ragged), ("scattered", scattered), ("blocky", blocky)]
+}
+
+// ---- the force contract ----
+
+#[test]
+fn active_tier_honors_the_force_and_never_exceeds_the_cpu() {
+    let active = isa::active();
+    let detected = isa::detected();
+    assert!(active <= detected, "active {active} above detected {detected}");
+    // Whatever environment CI put this process in, the cached tier is the
+    // pure resolution of it (clamped force, or detected when unforced).
+    match std::env::var(isa::FORCE_ENV) {
+        Ok(v) => assert_eq!(active, isa::resolve(detected, Some(&v)).unwrap(), "force '{v}'"),
+        Err(_) => assert_eq!(active, detected),
+    }
+}
+
+#[test]
+fn force_values_parse_strictly() {
+    for (s, want) in
+        [("scalar", IsaTier::Scalar), ("avx2", IsaTier::Avx2), ("avx512", IsaTier::Avx512)]
+    {
+        assert_eq!(isa::parse(s).unwrap(), want);
+    }
+    // A typo must be an error, not a silent scalar downgrade.
+    assert!(isa::parse("axv2").is_err());
+    assert!(isa::resolve(IsaTier::Avx512, Some("fast")).is_err());
+}
+
+// ---- SPC5 β(r,width) across tiers ----
+
+fn spc5_tiers_f64(name: &str, m: &Csr<f64>) {
+    let x = probe_x::<f64>(m.ncols, 1);
+    let want = reference(m, &x);
+    let max_ulp = max_ulp_for::<f64>();
+    for r in [1usize, 2, 4, 8] {
+        // Full-width geometry: portable kernel everywhere, AVX-512 on
+        // capable CPUs.
+        let full = csr_to_spc5(m, r, 8);
+        let mut y = vec![0.0; m.nrows];
+        native::spmv_spc5(&full, &x, &mut y);
+        assert_ulp(&y, &want, max_ulp);
+        if native_avx512::available() {
+            let mut y512 = vec![0.0; m.nrows];
+            assert!(native_avx512::spmv_spc5_f64(&full, &PaddedX::new(&x, 8), &mut y512));
+            assert_ulp(&y512, &want, max_ulp);
+        }
+        // Half-width geometry: the AVX2 tier's format; the portable kernel
+        // is width-agnostic and serves it too.
+        let half = csr_to_spc5(m, r, 4);
+        let mut yh = vec![0.0; m.nrows];
+        native::spmv_spc5(&half, &x, &mut yh);
+        assert_ulp(&yh, &want, max_ulp);
+        if avx2::available() {
+            let mut y2 = vec![0.0; m.nrows];
+            assert!(
+                avx2::spmv_spc5_f64(&half, &PaddedX::new(&x, 4), &mut y2),
+                "{name} r={r}: avx2 kernel refused width-4 matrix"
+            );
+            assert_ulp(&y2, &want, max_ulp);
+        }
+    }
+}
+
+fn spc5_tiers_f32(name: &str, m: &Csr<f32>) {
+    let x = probe_x::<f32>(m.ncols, 2);
+    let want = reference(m, &x);
+    let max_ulp = max_ulp_for::<f32>();
+    for r in [1usize, 2, 4, 8] {
+        let full = csr_to_spc5(m, r, 16);
+        let mut y = vec![0.0f32; m.nrows];
+        native::spmv_spc5(&full, &x, &mut y);
+        assert_ulp(&y, &want, max_ulp);
+        if native_avx512::available() {
+            let mut y512 = vec![0.0f32; m.nrows];
+            assert!(native_avx512::spmv_spc5_f32(&full, &PaddedX::new(&x, 16), &mut y512));
+            assert_ulp(&y512, &want, max_ulp);
+        }
+        let half = csr_to_spc5(m, r, 8);
+        let mut yh = vec![0.0f32; m.nrows];
+        native::spmv_spc5(&half, &x, &mut yh);
+        assert_ulp(&yh, &want, max_ulp);
+        if avx2::available() {
+            let mut y2 = vec![0.0f32; m.nrows];
+            assert!(
+                avx2::spmv_spc5_f32(&half, &PaddedX::new(&x, 8), &mut y2),
+                "{name} r={r}: avx2 kernel refused width-8 matrix"
+            );
+            assert_ulp(&y2, &want, max_ulp);
+        }
+    }
+}
+
+#[test]
+fn spc5_every_tier_agrees_with_the_scalar_reference() {
+    for (name, m) in shapes::<f64>() {
+        spc5_tiers_f64(name, &m);
+    }
+    for (name, m) in shapes::<f32>() {
+        spc5_tiers_f32(name, &m);
+    }
+}
+
+#[test]
+fn avx2_fused_multi_rhs_is_bitwise_the_single_kernel_per_column() {
+    if !avx2::available() {
+        return; // nothing to differentiate on this host
+    }
+    for (name, m) in shapes::<f64>() {
+        let half = csr_to_spc5(&m, 4, 4);
+        for k in [1usize, 4] {
+            let xs: Vec<Vec<f64>> = (0..k).map(|v| probe_x::<f64>(m.ncols, v + 3)).collect();
+            let x_refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+            let mut ys: Vec<Vec<f64>> = (0..k).map(|_| vec![0.0; m.nrows]).collect();
+            let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|v| v.as_mut_slice()).collect();
+            assert!(avx2::spmv_spc5_multi_f64(&half, &x_refs, &mut y_refs));
+            for (x, y_multi) in xs.iter().zip(&ys) {
+                let mut y_single = vec![0.0; m.nrows];
+                assert!(avx2::spmv_spc5_f64(&half, &PaddedX::new(x, 4), &mut y_single));
+                assert_eq!(bits(y_multi), bits(&y_single), "{name} k={k}");
+            }
+        }
+    }
+}
+
+// ---- CSR across tiers ----
+
+#[test]
+fn csr_tiers_agree_with_the_scalar_reference() {
+    for (name, m) in shapes::<f64>() {
+        let x = probe_x::<f64>(m.ncols, 4);
+        let want = reference(&m, &x);
+        let mut y = vec![0.0; m.nrows];
+        native::spmv_csr(&m, &x, &mut y);
+        assert_ulp(&y, &want, max_ulp_for::<f64>());
+        if avx2::available() {
+            let mut yg = vec![0.0; m.nrows];
+            assert!(avx2::spmv_csr_f64(&m, &x, &mut yg), "{name}: gather kernel refused");
+            assert_ulp(&yg, &want, max_ulp_for::<f64>());
+        }
+        // The dispatcher itself (whatever tier this process runs) stays in
+        // bound too — this is the entry point `ops`' CSR operators share.
+        let mut yd = vec![0.0; m.nrows];
+        avx2::spmv_csr_auto(&m, &x, &mut yd);
+        assert_ulp(&yd, &want, max_ulp_for::<f64>());
+    }
+    for (name, m) in shapes::<f32>() {
+        let x = probe_x::<f32>(m.ncols, 5);
+        let want = reference(&m, &x);
+        if avx2::available() {
+            let mut yg = vec![0.0f32; m.nrows];
+            assert!(avx2::spmv_csr_f32(&m, &x, &mut yg), "{name}: gather kernel refused");
+            assert_ulp(&yg, &want, max_ulp_for::<f32>());
+        }
+        let mut yd = vec![0.0f32; m.nrows];
+        avx2::spmv_csr_auto(&m, &x, &mut yd);
+        assert_ulp(&yd, &want, max_ulp_for::<f32>());
+    }
+}
+
+// ---- SELL-C-σ across tiers ----
+
+/// Codifies the note that used to live as a comment in `ops`: the serving
+/// SELL path is the exact-order walk (bitwise equal to the CSR reference),
+/// and the FMA tiers (AVX2, AVX-512) sit within the documented ULP bound of
+/// that exact order — never assumed, always asserted.
+#[test]
+fn sell_fma_tiers_stay_within_ulp_bound_of_exact_order() {
+    for (name, m) in shapes::<f64>() {
+        let sell = SellMatrix::from_csr(&m, 4 * 8);
+        let x = probe_x::<f64>(m.ncols, 6);
+        let want = reference(&m, &x);
+        let mut y_exact = vec![0.0; m.nrows];
+        sell.spmv(&x, &mut y_exact);
+        assert_eq!(bits(&y_exact), bits(&want), "{name}: portable SELL is the bitwise anchor");
+        if native_avx512::available() {
+            let mut y = vec![0.0; m.nrows];
+            assert!(native_avx512::spmv_sell_f64(&sell, &x, &mut y));
+            assert_ulp(&y, &y_exact, max_ulp_for::<f64>());
+        }
+        if avx2::available() {
+            let mut y = vec![0.0; m.nrows];
+            assert!(avx2::spmv_sell_f64(&sell, &x, &mut y));
+            assert_ulp(&y, &y_exact, max_ulp_for::<f64>());
+        }
+    }
+    for (name, m) in shapes::<f32>() {
+        let sell = SellMatrix::from_csr(&m, 4 * 16);
+        let x = probe_x::<f32>(m.ncols, 7);
+        let want = reference(&m, &x);
+        let mut y_exact = vec![0.0f32; m.nrows];
+        sell.spmv(&x, &mut y_exact);
+        assert_eq!(bits(&y_exact), bits(&want), "{name}: portable SELL is the bitwise anchor");
+        if native_avx512::available() {
+            let mut y = vec![0.0f32; m.nrows];
+            assert!(native_avx512::spmv_sell_f32(&sell, &x, &mut y));
+            assert_ulp(&y, &y_exact, max_ulp_for::<f32>());
+        }
+        if avx2::available() {
+            let mut y = vec![0.0f32; m.nrows];
+            assert!(avx2::spmv_sell_f32(&sell, &x, &mut y));
+            assert_ulp(&y, &y_exact, max_ulp_for::<f32>());
+        }
+    }
+}
+
+#[test]
+fn sell_vector_tiers_agree_bitwise() {
+    // Lane-independent accumulation, identical per-lane FMA order: the two
+    // vector SELL kernels must agree to the bit, not just within ULPs.
+    if !(avx2::available() && native_avx512::available()) {
+        return;
+    }
+    for (name, m) in shapes::<f64>() {
+        let sell = SellMatrix::from_csr(&m, 2 * 8);
+        let x = probe_x::<f64>(m.ncols, 8);
+        let (mut y2, mut y5) = (vec![0.0; m.nrows], vec![0.0; m.nrows]);
+        assert!(avx2::spmv_sell_f64(&sell, &x, &mut y2));
+        assert!(native_avx512::spmv_sell_f64(&sell, &x, &mut y5));
+        assert_eq!(bits(&y2), bits(&y5), "{name}");
+    }
+}
+
+// ---- planned form across widths ----
+
+#[test]
+fn planned_operator_serves_every_tier_width() {
+    // A plan compiled at any tier's width (pinned 4/8/16, or the active
+    // tier's default) must serve within the bound.
+    for (name, m) in shapes::<f64>() {
+        let x = probe_x::<f64>(m.ncols, 9);
+        let want = reference(&m, &x);
+        for width in [Some(4usize), Some(8), None] {
+            let plan = PlannedMatrix::build(&m, &PlanConfig { width, ..PlanConfig::default() });
+            assert_eq!(plan.nnz(), m.nnz(), "{name} width {width:?}");
+            let mut y = vec![0.0; m.nrows];
+            plan.spmv(&x, &mut y);
+            assert_ulp(&y, &want, max_ulp_for::<f64>());
+        }
+    }
+    for (name, m) in shapes::<f32>() {
+        let x = probe_x::<f32>(m.ncols, 10);
+        let want = reference(&m, &x);
+        for width in [Some(8usize), Some(16), None] {
+            let plan = PlannedMatrix::build(&m, &PlanConfig { width, ..PlanConfig::default() });
+            assert_eq!(plan.nnz(), m.nnz(), "{name} width {width:?}");
+            let mut y = vec![0.0f32; m.nrows];
+            plan.spmv(&x, &mut y);
+            assert_ulp(&y, &want, max_ulp_for::<f32>());
+        }
+    }
+}
+
+// ---- the operator factory across explicit tiers ----
+
+fn factory_suite<T: Scalar>() {
+    let max_ulp = max_ulp_for::<T>();
+    let choices = [
+        FormatChoice::Csr,
+        FormatChoice::Spc5 { r: 2 },
+        FormatChoice::Spc5 { r: 4 },
+        FormatChoice::Sell { sigma: 4 * T::VS },
+        FormatChoice::Planned,
+    ];
+    for (name, m) in shapes::<T>() {
+        let x = probe_x::<T>(m.ncols, 11);
+        let want = reference(&m, &x);
+        for tier in IsaTier::all() {
+            for choice in choices {
+                // Serial and team forms of the operator built for `tier`
+                // (dispatch still follows the *active* tier — a higher-tier
+                // geometry simply serves through the portable kernels).
+                let serial_team = Arc::new(Team::exact(1));
+                let serial = ops::build_tiered(&m, choice, &serial_team, tier);
+                assert_eq!(serial.nnz(), m.nnz(), "{name} {tier} {choice:?}");
+                let mut y_serial = vec![T::zero(); m.nrows];
+                serial.spmv(&x, &mut y_serial);
+                assert_ulp(&y_serial, &want, max_ulp);
+                let team = Arc::new(Team::new(3));
+                let teamed = ops::build_tiered(&m, choice, &team, tier);
+                let mut y_team = vec![T::zero(); m.nrows];
+                teamed.spmv(&x, &mut y_team);
+                assert_eq!(
+                    bits(&y_serial),
+                    bits(&y_team),
+                    "{name} {tier} {choice:?} team-vs-serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn operator_factory_builds_working_operators_for_every_tier_f64() {
+    factory_suite::<f64>();
+}
+
+#[test]
+fn operator_factory_builds_working_operators_for_every_tier_f32() {
+    factory_suite::<f32>();
+}

@@ -1,13 +1,16 @@
 //! Integration: every kernel (scalar, vectorized-CSR, SPC5 on both simulated
 //! ISAs, hybrid, native) computes the same SpMV on every corpus matrix.
+//!
+//! Tolerances are the suite-wide ULP bounds of [`spc5::util::ulp`] — one
+//! documented bound per precision instead of per-test (rtol, atol) pairs.
 
 use spc5::kernels::{
     dispatch::run_simulated, native, KernelCfg, KernelKind, MatrixSet, Reduction, SimIsa, XLoad,
 };
 use spc5::matrix::{corpus_entries, Csr};
-use spc5::scalar::assert_allclose;
 use spc5::simd::NullSink;
 use spc5::spc5::csr_to_spc5;
+use spc5::util::ulp::{assert_ulp, max_ulp_for};
 
 fn all_kinds() -> Vec<KernelKind> {
     let mut v = vec![KernelKind::ScalarCsr, KernelKind::CsrVec];
@@ -40,7 +43,7 @@ fn all_kernels_agree_on_corpus_f64() {
                 }
                 let mut sink = NullSink;
                 let y = run_simulated(KernelCfg { isa, kind }, &mut set, &x, &mut sink);
-                assert_allclose(&y, &want, 1e-11, 1e-11);
+                assert_ulp(&y, &want, max_ulp_for::<f64>());
             }
         }
     }
@@ -62,7 +65,7 @@ fn all_kernels_agree_f32() {
     ] {
         let mut sink = NullSink;
         let y = run_simulated(KernelCfg { isa: SimIsa::Avx512, kind }, &mut set, &x, &mut sink);
-        assert_allclose(&y, &want, 1e-3, 1e-3);
+        assert_ulp(&y, &want, max_ulp_for::<f32>());
     }
 }
 
@@ -77,7 +80,7 @@ fn native_kernels_agree_with_simulated() {
         let m = csr_to_spc5(&csr, r, 8);
         let mut y = vec![0.0; csr.nrows];
         native::spmv_spc5(&m, &x, &mut y);
-        assert_allclose(&y, &y_native_csr, 1e-11, 1e-12);
+        assert_ulp(&y, &y_native_csr, max_ulp_for::<f64>());
     }
 }
 

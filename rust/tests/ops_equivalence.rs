@@ -4,8 +4,8 @@
 //! ragged, empty-row and corpus-shaped matrices.
 //!
 //! Two levels of pinning:
-//! - every form matches the reference to tight tolerance (kernels are free
-//!   to reorder/fuse multiply-adds);
+//! - every form matches the reference within the suite-wide ULP bound of
+//!   [`spc5::util::ulp`] (kernels are free to reorder/fuse multiply-adds);
 //! - within one format, the team-dispatched product is **bitwise** equal to
 //!   the serial one (partitioning must never change a single bit), repeated
 //!   calls are bitwise stable, and the SELL forms are bitwise equal to the
@@ -20,6 +20,7 @@ use spc5::matrix::{gen, Coo, Csr};
 use spc5::ops::{self, FormatChoice, SparseOp};
 use spc5::parallel::Team;
 use spc5::scalar::Scalar;
+use spc5::util::ulp::{assert_ulp, max_ulp_for};
 
 fn choices<T: Scalar>() -> Vec<FormatChoice> {
     vec![
@@ -76,14 +77,6 @@ fn matrices<T: Scalar>() -> Vec<(&'static str, Csr<T>)> {
     ]
 }
 
-fn tolerances<T: Scalar>() -> (f64, f64) {
-    if T::BYTES == 8 {
-        (1e-11, 1e-12)
-    } else {
-        (2e-4, 1e-5)
-    }
-}
-
 fn reference<T: Scalar>(m: &Csr<T>, x: &[T]) -> Vec<T> {
     let mut y = vec![T::zero(); m.nrows];
     m.spmv(x, &mut y);
@@ -101,7 +94,7 @@ fn bits<T: Scalar>(v: &[T]) -> Vec<u64> {
 }
 
 fn run_suite<T: Scalar>() {
-    let (rtol, atol) = tolerances::<T>();
+    let max_ulp = max_ulp_for::<T>();
     for (name, m) in matrices::<T>() {
         let x = probe_x::<T>(m.ncols, 1);
         let want = reference(&m, &x);
@@ -111,7 +104,7 @@ fn run_suite<T: Scalar>() {
             let serial = ops::build(&m, choice, &serial_team);
             let mut y_serial = vec![T::zero(); m.nrows];
             serial.spmv(&x, &mut y_serial);
-            spc5::scalar::assert_allclose(&y_serial, &want, rtol, atol);
+            assert_ulp(&y_serial, &want, max_ulp);
             // ...is bitwise stable across repeated calls...
             let mut y_again = vec![T::one(); m.nrows];
             serial.spmv(&x, &mut y_again);
@@ -154,7 +147,7 @@ fn run_suite<T: Scalar>() {
                 let ys_team = run(teamed.as_ref());
                 for ((xv, ys), yt) in x_refs.iter().zip(&ys_serial).zip(&ys_team) {
                     let w = reference(&m, xv);
-                    spc5::scalar::assert_allclose(ys, &w, rtol, atol);
+                    assert_ulp(ys, &w, max_ulp);
                     assert_eq!(
                         bits(ys),
                         bits(yt),
