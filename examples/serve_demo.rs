@@ -19,7 +19,7 @@ fn main() {
     for name in names {
         let m = corpus_by_name(name).unwrap().build(80_000);
         let ncols = m.ncols;
-        let id = svc.register(m);
+        let id = svc.register(m).expect("valid corpus matrix");
         let sel = svc.selection(id).unwrap();
         println!("{name:<22} -> {:?} (choice {:?})", id, sel.choice);
         handles.push((id, ncols));

@@ -24,13 +24,24 @@ pub struct Batcher<K: Eq + Hash + Copy, P> {
     order: Vec<K>,
     /// Maximum items per drained batch (larger queues split).
     pub max_batch: usize,
+    /// Admission cap on the total queued items ([`is_full`](Self::is_full));
+    /// the service sheds load above it rather than queueing unboundedly.
+    cap: usize,
     len: usize,
 }
 
 impl<K: Eq + Hash + Copy, P> Batcher<K, P> {
     pub fn new(max_batch: usize) -> Self {
+        Self::with_cap(max_batch, usize::MAX)
+    }
+
+    /// [`new`](Self::new) with a bounded admission queue: once `len() >= cap`
+    /// the batcher reports [`is_full`](Self::is_full) and the caller is
+    /// expected to reject instead of push.
+    pub fn with_cap(max_batch: usize, cap: usize) -> Self {
         assert!(max_batch >= 1);
-        Self { queues: HashMap::new(), order: Vec::new(), max_batch, len: 0 }
+        assert!(cap >= 1);
+        Self { queues: HashMap::new(), order: Vec::new(), max_batch, cap, len: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -39,6 +50,15 @@ impl<K: Eq + Hash + Copy, P> Batcher<K, P> {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// At (or beyond) the admission cap — the backpressure signal.
+    pub fn is_full(&self) -> bool {
+        self.len >= self.cap
     }
 
     pub fn push(&mut self, key: K, payload: P) {
@@ -121,6 +141,24 @@ mod tests {
         assert_eq!((b3.key, b3.items), (7, vec![2, 3]));
         let b4 = b.pop_batch().unwrap();
         assert_eq!((b4.key, b4.items), (7, vec![4]));
+    }
+
+    #[test]
+    fn cap_signals_backpressure() {
+        let mut b: Batcher<u32, i32> = Batcher::with_cap(16, 3);
+        assert_eq!(b.cap(), 3);
+        for i in 0..3 {
+            assert!(!b.is_full());
+            b.push(1, i);
+        }
+        assert!(b.is_full());
+        // Draining frees admission slots again.
+        b.pop_batch().unwrap();
+        assert!(!b.is_full());
+        // The default construction is effectively unbounded.
+        let unbounded: Batcher<u32, i32> = Batcher::new(4);
+        assert_eq!(unbounded.cap(), usize::MAX);
+        assert!(!unbounded.is_full());
     }
 
     #[test]

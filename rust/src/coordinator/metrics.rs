@@ -48,6 +48,14 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub flops: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests refused at admission because the queue was at capacity.
+    pub rejected: AtomicU64,
+    /// Requests shed because their deadline passed before dispatch.
+    pub expired: AtomicU64,
+    /// Worker-lane panics caught and contained by the quarantine path.
+    pub panics_quarantined: AtomicU64,
+    /// Operators rebuilt as the scalar-CSR safe fallback.
+    pub fallback_rebuilds: AtomicU64,
     /// Matrices registered per resolved execution format.
     selected: [AtomicU64; 4],
     /// Requests completed per execution format.
@@ -63,6 +71,10 @@ impl Metrics {
             batches: AtomicU64::new(0),
             flops: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            panics_quarantined: AtomicU64::new(0),
+            fallback_rebuilds: AtomicU64::new(0),
             selected: [
                 AtomicU64::new(0),
                 AtomicU64::new(0),
@@ -86,7 +98,9 @@ impl Metrics {
     pub fn record_completion(&self, latency_us: f64, flops: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.flops.fetch_add(flops, Ordering::Relaxed);
-        self.latencies_us.lock().expect("metrics lock").push(latency_us);
+        // Metrics survive lock poisoning: a panicking recorder must not
+        // take observability down with it (the data is append-only).
+        self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).push(latency_us);
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -96,6 +110,26 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request refused at admission (queue at capacity).
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request shed because its deadline passed before dispatch.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One worker-lane panic caught and contained.
+    pub fn record_panic_quarantined(&self) {
+        self.panics_quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One operator rebuilt as the scalar-CSR safe fallback.
+    pub fn record_fallback_rebuild(&self) {
+        self.fallback_rebuilds.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One matrix registered with `kind` as its resolved execution format.
@@ -120,7 +154,8 @@ impl Metrics {
 
     /// Latency summary snapshot (p50/p95/p99 in µs).
     pub fn latency_summary(&self) -> Summary {
-        Summary::from_samples(self.latencies_us.lock().expect("metrics lock").clone())
+        let lat = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner());
+        Summary::from_samples(lat.clone())
     }
 
     /// JSON snapshot for the CLI / logs.
@@ -131,6 +166,10 @@ impl Metrics {
             .set("completed", self.completed.load(Ordering::Relaxed))
             .set("batches", self.batches.load(Ordering::Relaxed))
             .set("errors", self.errors.load(Ordering::Relaxed))
+            .set("requests_rejected", self.rejected.load(Ordering::Relaxed))
+            .set("requests_expired", self.expired.load(Ordering::Relaxed))
+            .set("panics_quarantined", self.panics_quarantined.load(Ordering::Relaxed))
+            .set("fallback_rebuilds", self.fallback_rebuilds.load(Ordering::Relaxed))
             .set("flops", self.flops.load(Ordering::Relaxed));
         let mut sel = Json::obj();
         let mut req = Json::obj();
@@ -189,6 +228,25 @@ mod tests {
         assert!(s.contains("format_selected"), "{s}");
         assert!(s.contains("format_requests"), "{s}");
         assert!(s.contains("\"sell\":2"), "{s}");
+    }
+
+    #[test]
+    fn fault_counters_accumulate_and_snapshot() {
+        let m = Metrics::new();
+        m.record_rejected();
+        m.record_rejected();
+        m.record_expired();
+        m.record_panic_quarantined();
+        m.record_fallback_rebuild();
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 2);
+        assert_eq!(m.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.panics_quarantined.load(Ordering::Relaxed), 1);
+        assert_eq!(m.fallback_rebuilds.load(Ordering::Relaxed), 1);
+        let s = m.snapshot().to_string();
+        assert!(s.contains("\"requests_rejected\":2"), "{s}");
+        assert!(s.contains("\"requests_expired\":1"), "{s}");
+        assert!(s.contains("\"panics_quarantined\":1"), "{s}");
+        assert!(s.contains("\"fallback_rebuilds\":1"), "{s}");
     }
 
     #[test]

@@ -14,6 +14,9 @@ pub mod metrics;
 pub mod selector;
 pub mod service;
 
-pub use metrics::FormatKind;
+pub use metrics::{FormatKind, Metrics};
 pub use selector::{select_format, FormatChoice, Selection, SelectorModel};
-pub use service::{Backend, FormatMode, MatrixId, PlanMode, SpmvService};
+pub use service::{
+    Backend, FormatMode, MatrixId, PlanMode, ServiceConfig, ServiceError, SpmvService,
+    DEFAULT_QUEUE_CAP,
+};

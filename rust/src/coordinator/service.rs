@@ -17,21 +17,37 @@
 //! shared across every request and batch; operators cache their lane
 //! partitions at build time, so the native execution of a request is one
 //! epoch-barrier wake of the resident workers.
+//!
+//! **Failure model** (DESIGN.md §Failure model): admission is bounded
+//! ([`ServiceConfig::queue_cap`] → [`ServiceError::Overloaded`]), requests
+//! can carry deadlines that are shed before dispatch
+//! ([`ServiceError::DeadlineExceeded`]), registration rejects malformed
+//! matrices with a typed [`SpmvError`], and a panic anywhere in a batch's
+//! execution is caught, the matrix's operator quarantined (rebuilt as the
+//! serial scalar-CSR fallback) and the batch replayed — one panic never
+//! takes down the service or loses a request.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
-use crate::coordinator::batch::Batcher;
+use crate::coordinator::batch::{Batch, Batcher};
 use crate::coordinator::metrics::{FormatKind, Metrics};
 use crate::coordinator::selector::{select_format, FormatChoice, Selection, SelectorModel};
+use crate::error::SpmvError;
 use crate::matrix::Csr;
 use crate::ops::{self, SparseOp};
 use crate::parallel::Team;
 use crate::scalar::Scalar;
+use crate::util::fault;
 use crate::util::timing::Timer;
 
 pub use crate::ops::Backend;
+
+/// Default bound on the admission queue ([`ServiceConfig::queue_cap`]).
+pub const DEFAULT_QUEUE_CAP: usize = 4096;
 
 /// Handle to a registered matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -104,13 +120,21 @@ impl<T: Scalar> RefPool<T> {
 }
 
 /// A registered matrix: its built execution operator plus the selection
-/// evidence and the per-matrix batch scratch.
+/// evidence, the quarantine state and the per-matrix batch scratch.
 pub struct Stored<T: Scalar> {
-    /// What executes every request and batch of this matrix.
-    pub op: Box<dyn SparseOp<T>>,
+    /// The validated CSR source, retained so quarantine can rebuild the
+    /// scalar fallback without re-contacting the caller.
+    csr: Csr<T>,
+    /// What executes every request and batch of this matrix. Behind a
+    /// `RwLock` so quarantine can swap in the fallback while requests keep
+    /// taking cheap read locks (readers panicking never poison it).
+    op: RwLock<Box<dyn SparseOp<T>>>,
     pub selection: Selection,
     /// The metrics bucket of the resolved format.
     pub kind: FormatKind,
+    /// Set once the operator has been quarantined (swapped for the scalar
+    /// fallback after a caught panic).
+    poisoned: AtomicBool,
     /// Accumulator scratch for the fused serial paths (team operators carry
     /// their own per-lane scratch and ignore it).
     batch_scratch: Mutex<Vec<T>>,
@@ -118,8 +142,24 @@ pub struct Stored<T: Scalar> {
 }
 
 impl<T: Scalar> Stored<T> {
+    fn new(csr: Csr<T>, op: Box<dyn SparseOp<T>>, selection: Selection, kind: FormatKind) -> Self {
+        Self {
+            csr,
+            op: RwLock::new(op),
+            selection,
+            kind,
+            poisoned: AtomicBool::new(false),
+            batch_scratch: Mutex::new(Vec::new()),
+            refs: RefPool::new(),
+        }
+    }
+
+    fn op(&self) -> std::sync::RwLockReadGuard<'_, Box<dyn SparseOp<T>>> {
+        self.op.read().unwrap_or_else(|e| e.into_inner())
+    }
+
     fn spmv(&self, x: &[T], y: &mut [T]) {
-        self.op.spmv(x, y);
+        self.op().spmv(x, y);
     }
 
     /// Fused multi-RHS execution of one batch: one matrix pass for all
@@ -135,9 +175,21 @@ impl<T: Scalar> Stored<T> {
             Ok(g) => &mut **g,
             Err(_) => &mut local,
         };
-        self.op.spmv_multi(xs, &mut refs, s);
+        self.op().spmv_multi(xs, &mut refs, s);
         drop(cached);
         self.refs.put(refs);
+    }
+
+    /// Swap the operator for the scalar-CSR safe fallback. Returns true if
+    /// this call performed the swap (false: already quarantined — e.g. two
+    /// concurrent batches of the same matrix both caught the panic).
+    fn quarantine(&self) -> bool {
+        if self.poisoned.swap(true, Ordering::SeqCst) {
+            return false;
+        }
+        let mut g = self.op.write().unwrap_or_else(|e| e.into_inner());
+        *g = Box::new(ops::ScalarCsr::new(self.csr.clone()));
+        true
     }
 }
 
@@ -148,6 +200,10 @@ struct Shared<T: Scalar> {
     /// The persistent executor every native request/batch runs on, created
     /// once per service and shared across all matrices.
     team: Arc<Team>,
+    /// Default deadline stamped on `submit` requests (None: no deadline).
+    deadline: Option<Duration>,
+    /// Pause before the bounded retry of a failed build or a replayed batch.
+    retry_backoff: Duration,
     matrices: RwLock<HashMap<MatrixId, Arc<Stored<T>>>>,
     queue: Mutex<Batcher<MatrixId, Request<T>>>,
     queue_cv: Condvar,
@@ -158,6 +214,8 @@ struct Shared<T: Scalar> {
 struct Request<T: Scalar> {
     x: Vec<T>,
     enqueued: Timer,
+    /// Absolute expiry; requests past it are shed before dispatch.
+    deadline: Option<Instant>,
     reply: mpsc::Sender<Result<Vec<T>, ServiceError>>,
 }
 
@@ -166,6 +224,15 @@ struct Request<T: Scalar> {
 pub enum ServiceError {
     UnknownMatrix(MatrixId),
     DimMismatch { got: usize, want: usize },
+    /// Admission queue at capacity — backpressure; retry later.
+    Overloaded { queued: usize, cap: usize },
+    /// The request's deadline passed before it was dispatched.
+    DeadlineExceeded,
+    /// Registration rejected the matrix (validation or conversion error).
+    Invalid(SpmvError),
+    /// Execution kept failing after quarantine + replay; the message is the
+    /// payload of the last caught panic.
+    Faulted(String),
     ShutDown,
 }
 
@@ -176,12 +243,57 @@ impl std::fmt::Display for ServiceError {
             ServiceError::DimMismatch { got, want } => {
                 write!(f, "dimension mismatch: x has {got}, matrix needs {want}")
             }
+            ServiceError::Overloaded { queued, cap } => {
+                write!(f, "overloaded: {queued} requests queued at cap {cap}")
+            }
+            ServiceError::DeadlineExceeded => write!(f, "deadline exceeded before dispatch"),
+            ServiceError::Invalid(e) => write!(f, "invalid registration: {e}"),
+            ServiceError::Faulted(msg) => write!(f, "execution faulted: {msg}"),
             ServiceError::ShutDown => write!(f, "service is shut down"),
         }
     }
 }
 
 impl std::error::Error for ServiceError {}
+
+/// Everything the full constructor takes, with production defaults — the
+/// growing constructor ladder ([`SpmvService::new`] … `with_format`)
+/// delegates here (CLI: `serve --queue-cap --deadline-ms …`).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Request-worker (dispatch pool) threads.
+    pub workers: usize,
+    /// Batch coalescing limit (same-matrix requests fused per batch).
+    pub max_batch: usize,
+    pub backend: Backend,
+    pub plan_mode: PlanMode,
+    /// Executor-team lanes; 0 means "same as `workers`".
+    pub threads: usize,
+    pub format_mode: FormatMode,
+    /// Admission bound: submissions beyond this many queued requests are
+    /// rejected with [`ServiceError::Overloaded`].
+    pub queue_cap: usize,
+    /// Default per-request deadline (None: requests never expire).
+    pub deadline: Option<Duration>,
+    /// Pause before the bounded retry of a failed build / replayed batch.
+    pub retry_backoff: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 16,
+            backend: Backend::Native,
+            plan_mode: PlanMode::default(),
+            threads: 0,
+            format_mode: FormatMode::default(),
+            queue_cap: DEFAULT_QUEUE_CAP,
+            deadline: None,
+            retry_backoff: Duration::from_millis(2),
+        }
+    }
+}
 
 /// The coordinator service. Dropping it joins the dispatcher and workers.
 pub struct SpmvService<T: Scalar> {
@@ -229,8 +341,9 @@ impl<T: Scalar> SpmvService<T> {
         Self::with_format(workers, max_batch, backend, plan_mode, threads, FormatMode::Auto)
     }
 
-    /// Full constructor: backend, plan mode, executor width and the format
-    /// resolution mode (CLI: `serve --format auto|csr|spc5|sell|plan`).
+    /// Backend, plan mode, executor width and the format resolution mode
+    /// (CLI: `serve --format auto|csr|spc5|sell|plan`); admission control
+    /// stays at the [`ServiceConfig`] defaults.
     pub fn with_format(
         workers: usize,
         max_batch: usize,
@@ -239,13 +352,30 @@ impl<T: Scalar> SpmvService<T> {
         threads: usize,
         format_mode: FormatMode,
     ) -> Self {
-        let shared = Arc::new(Shared {
+        Self::with_config(ServiceConfig {
+            workers,
+            max_batch,
             backend,
             plan_mode,
+            threads,
             format_mode,
+            ..ServiceConfig::default()
+        })
+    }
+
+    /// Full constructor: everything the ladder above fixes, plus admission
+    /// control (`queue_cap`, `deadline`) and the retry backoff.
+    pub fn with_config(cfg: ServiceConfig) -> Self {
+        let threads = if cfg.threads == 0 { cfg.workers } else { cfg.threads };
+        let shared = Arc::new(Shared {
+            backend: cfg.backend,
+            plan_mode: cfg.plan_mode,
+            format_mode: cfg.format_mode,
             team: Arc::new(Team::new(threads)),
+            deadline: cfg.deadline,
+            retry_backoff: cfg.retry_backoff,
             matrices: RwLock::new(HashMap::new()),
-            queue: Mutex::new(Batcher::new(max_batch)),
+            queue: Mutex::new(Batcher::with_cap(cfg.max_batch, cfg.queue_cap.max(1))),
             queue_cv: Condvar::new(),
             metrics: Metrics::new(),
             shutdown: Mutex::new(false),
@@ -254,7 +384,7 @@ impl<T: Scalar> SpmvService<T> {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name("spc5-dispatcher".into())
-                .spawn(move || dispatcher_loop(shared, workers))
+                .spawn(move || dispatcher_loop(shared, cfg.workers))
                 .expect("spawn dispatcher")
         };
         Self { shared, next_id: AtomicU64::new(1), dispatcher: Some(dispatcher) }
@@ -281,35 +411,77 @@ impl<T: Scalar> SpmvService<T> {
     }
 
     /// Register a matrix: the selector gathers its evidence, the format
-    /// mode resolves a [`FormatChoice`], and [`crate::ops::build_backend`]
-    /// builds the operator that serves all of this matrix's traffic.
-    pub fn register(&self, csr: Csr<T>) -> MatrixId {
+    /// mode resolves a [`FormatChoice`], and
+    /// [`crate::ops::try_build_backend`] builds the operator that serves all
+    /// of this matrix's traffic.
+    ///
+    /// Untrusted-input contract: a malformed matrix is a typed
+    /// [`ServiceError::Invalid`] rejection; a *transient* build failure
+    /// (injected conversion fault, panicking converter) gets one bounded
+    /// retry after [`ServiceConfig::retry_backoff`], then degrades to the
+    /// scalar-CSR safe fallback — registration never takes the service down.
+    pub fn register(&self, csr: Csr<T>) -> Result<MatrixId, ServiceError> {
+        // Validate before the selector touches the arrays: the selector and
+        // converters index by `col_idx` and trust `row_ptr`.
+        csr.check().map_err(ServiceError::Invalid)?;
         // The cost model is calibrated to the ISA tier the kernels will
         // actually run on (AVX-512 / AVX2 / portable) — lower tiers price
         // SPC5 blocks higher, shifting borderline matrices toward SELL/CSR.
         let model = SelectorModel::for_tier(crate::kernels::isa::active());
         let selection = select_format(&csr, &model);
         let choice = self.resolve_choice(&selection);
-        let op = ops::build_backend(&csr, choice, self.shared.backend, &self.shared.team);
+        let mut fell_back = false;
+        let op = match self.build_op(&csr, choice) {
+            Ok(op) => op,
+            Err(e @ SpmvError::InvalidMatrix(_)) => return Err(ServiceError::Invalid(e)),
+            Err(_) => {
+                // Transient: one bounded retry, then the safe fallback.
+                std::thread::sleep(self.shared.retry_backoff);
+                match self.build_op(&csr, choice) {
+                    Ok(op) => op,
+                    Err(_) => {
+                        self.shared.metrics.record_fallback_rebuild();
+                        fell_back = true;
+                        Box::new(ops::ScalarCsr::new(csr.clone()))
+                    }
+                }
+            }
+        };
         // The metrics bucket tracks what *executes*: the simulated backends
-        // always serve an SPC5 form regardless of the resolved choice.
-        let kind = match self.shared.backend {
-            Backend::Simulated(_) => FormatKind::Spc5,
-            Backend::Native => kind_of(choice),
+        // always serve an SPC5 form regardless of the resolved choice, and
+        // a degraded registration serves scalar CSR.
+        let kind = if fell_back {
+            FormatKind::Csr
+        } else {
+            match self.shared.backend {
+                Backend::Simulated(_) => FormatKind::Spc5,
+                Backend::Native => kind_of(choice),
+            }
         };
         self.shared.metrics.record_selection(kind);
         let id = MatrixId(self.next_id.fetch_add(1, Ordering::SeqCst));
-        self.shared.matrices.write().expect("matrices lock").insert(
-            id,
-            Arc::new(Stored {
-                op,
-                selection,
-                kind,
-                batch_scratch: Mutex::new(Vec::new()),
-                refs: RefPool::new(),
-            }),
-        );
-        id
+        self.shared
+            .matrices
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, Arc::new(Stored::new(csr, op, selection, kind)));
+        Ok(id)
+    }
+
+    /// One build attempt, with panics contained: a converter that panics
+    /// (e.g. an armed `convert.*` or `team.lane` fault during construction)
+    /// reports as an [`SpmvError`] the retry/fallback ladder can handle.
+    fn build_op(
+        &self,
+        csr: &Csr<T>,
+        choice: FormatChoice,
+    ) -> Result<Box<dyn SparseOp<T>>, SpmvError> {
+        catch_unwind(AssertUnwindSafe(|| {
+            ops::try_build_backend(csr, choice, self.shared.backend, &self.shared.team)
+        }))
+        .unwrap_or_else(|p| {
+            Err(SpmvError::Unsupported(format!("operator build panicked: {}", panic_message(p))))
+        })
     }
 
     /// The service's executor team (one per service, shared by all
@@ -324,19 +496,20 @@ impl<T: Scalar> SpmvService<T> {
         self.shared
             .matrices
             .read()
-            .expect("matrices lock")
+            .unwrap_or_else(|e| e.into_inner())
             .get(&id)
-            .and_then(|s| s.op.chunk_rs())
+            .and_then(|s| s.op().chunk_rs())
     }
 
-    /// The execution-form label of a registered matrix's operator.
+    /// The execution-form label of a registered matrix's operator
+    /// ("fallback-csr-scalar" once quarantined).
     pub fn op_label(&self, id: MatrixId) -> Option<String> {
         self.shared
             .matrices
             .read()
-            .expect("matrices lock")
+            .unwrap_or_else(|e| e.into_inner())
             .get(&id)
-            .map(|s| s.op.label())
+            .map(|s| s.op().label())
     }
 
     /// The selection evidence for a registered matrix.
@@ -344,29 +517,61 @@ impl<T: Scalar> SpmvService<T> {
         self.shared
             .matrices
             .read()
-            .expect("matrices lock")
+            .unwrap_or_else(|e| e.into_inner())
             .get(&id)
             .map(|s| s.selection.clone())
     }
 
-    /// Submit an SpMV asynchronously; the receiver yields `y = A·x`.
+    /// Whether a matrix's operator has been quarantined (a caught panic
+    /// swapped it for the scalar-CSR fallback).
+    pub fn is_quarantined(&self, id: MatrixId) -> Option<bool> {
+        self.shared
+            .matrices
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&id)
+            .map(|s| s.poisoned.load(Ordering::SeqCst))
+    }
+
+    /// The live service counters (the JSON snapshot is
+    /// [`metrics_json`](Self::metrics_json)).
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    /// Submit an SpMV asynchronously with the service's default deadline;
+    /// the receiver yields `y = A·x`.
     pub fn submit(
         &self,
         id: MatrixId,
         x: Vec<T>,
     ) -> mpsc::Receiver<Result<Vec<T>, ServiceError>> {
+        self.submit_with_deadline(id, x, self.shared.deadline)
+    }
+
+    /// [`submit`](Self::submit) with an explicit deadline override: the
+    /// request is shed with [`ServiceError::DeadlineExceeded`] if it is
+    /// still queued `deadline` after submission. Admission is bounded: a
+    /// full queue answers [`ServiceError::Overloaded`] immediately instead
+    /// of queueing without bound.
+    pub fn submit_with_deadline(
+        &self,
+        id: MatrixId,
+        x: Vec<T>,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<Result<Vec<T>, ServiceError>> {
         let (tx, rx) = mpsc::channel();
         self.shared.metrics.record_request();
         // Validate eagerly so the error is immediate.
         let want = {
-            let map = self.shared.matrices.read().expect("matrices lock");
+            let map = self.shared.matrices.read().unwrap_or_else(|e| e.into_inner());
             match map.get(&id) {
                 None => {
                     self.shared.metrics.record_error();
                     let _ = tx.send(Err(ServiceError::UnknownMatrix(id)));
                     return rx;
                 }
-                Some(s) => s.op.ncols(),
+                Some(s) => s.csr.ncols,
             }
         };
         if x.len() != want {
@@ -374,9 +579,19 @@ impl<T: Scalar> SpmvService<T> {
             let _ = tx.send(Err(ServiceError::DimMismatch { got: x.len(), want }));
             return rx;
         }
+        // `checked_add` so an effectively-infinite deadline saturates to
+        // "none" instead of panicking.
+        let deadline = deadline.and_then(|d| Instant::now().checked_add(d));
         {
-            let mut q = self.shared.queue.lock().expect("queue lock");
-            q.push(id, Request { x, enqueued: Timer::start(), reply: tx });
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            if q.is_full() {
+                let (queued, cap) = (q.len(), q.cap());
+                drop(q);
+                self.shared.metrics.record_rejected();
+                let _ = tx.send(Err(ServiceError::Overloaded { queued, cap }));
+                return rx;
+            }
+            q.push(id, Request { x, enqueued: Timer::start(), deadline, reply: tx });
         }
         self.shared.queue_cv.notify_one();
         rx
@@ -408,7 +623,7 @@ fn kind_of(choice: FormatChoice) -> FormatKind {
 
 impl<T: Scalar> Drop for SpmvService<T> {
     fn drop(&mut self) {
-        *self.shared.shutdown.lock().expect("shutdown lock") = true;
+        *self.shared.shutdown.lock().unwrap_or_else(|e| e.into_inner()) = true;
         self.shared.queue_cv.notify_all();
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -420,20 +635,27 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
     let pool = crate::parallel::ThreadPool::new(workers.max(1));
     loop {
         let batch = {
-            let mut q = shared.queue.lock().expect("queue lock");
+            let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if let Some(b) = q.pop_batch() {
                     break Some(b);
                 }
-                if *shared.shutdown.lock().expect("shutdown lock") {
+                if *shared.shutdown.lock().unwrap_or_else(|e| e.into_inner()) {
                     break None;
                 }
-                q = shared.queue_cv.wait(q).expect("queue wait");
+                q = match shared.queue_cv.wait(q) {
+                    Ok(g) => g,
+                    Err(e) => e.into_inner(),
+                };
             }
         };
         let Some(batch) = batch else { break };
+        // Chaos hook: an armed `service.latency` fault stalls dispatch here,
+        // which is what fills the bounded queue (overload) and expires
+        // deadlines in the chaos suite.
+        fault::maybe_delay(fault::site::SERVICE_LATENCY);
         let stored = {
-            let map = shared.matrices.read().expect("matrices lock");
+            let map = shared.matrices.read().unwrap_or_else(|e| e.into_inner());
             map.get(&batch.key).cloned()
         };
         shared.metrics.record_batch(batch.items.len());
@@ -446,42 +668,108 @@ fn dispatcher_loop<T: Scalar>(shared: Arc<Shared<T>>, workers: usize) {
             }
             Some(stored) => {
                 let shared = Arc::clone(&shared);
-                pool.submit(move || {
-                    let flops = stored.op.flops();
-                    let nrows = stored.op.nrows();
-                    let n = batch.items.len();
-                    shared.metrics.record_format_requests(stored.kind, n as u64);
-                    if n > 1 {
-                        // Fused multi-vector pass: the matrix stream is read
-                        // once for the whole batch on every backend — the
-                        // batching win of §Perf.
-                        let xs: Vec<&[T]> =
-                            batch.items.iter().map(|r| r.x.as_slice()).collect();
-                        let mut ys: Vec<Vec<T>> =
-                            (0..n).map(|_| vec![T::zero(); nrows]).collect();
-                        stored.spmv_batch(&xs, &mut ys);
-                        for (req, y) in batch.items.into_iter().zip(ys) {
-                            shared
-                                .metrics
-                                .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
-                            let _ = req.reply.send(Ok(y));
-                        }
-                    } else {
-                        // Single request: plain path.
-                        for req in batch.items {
-                            let mut y = vec![T::zero(); nrows];
-                            stored.spmv(&req.x, &mut y);
-                            shared
-                                .metrics
-                                .record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
-                            let _ = req.reply.send(Ok(y));
-                        }
-                    }
-                });
+                pool.submit(move || run_batch(&shared, &stored, batch));
             }
         }
     }
     pool.wait_idle();
+}
+
+/// Execute one batch on a pool worker: shed expired requests, run the fused
+/// (or single) pass with panics contained, and on a caught panic quarantine
+/// the operator and replay the batch once on the fallback.
+fn run_batch<T: Scalar>(
+    shared: &Arc<Shared<T>>,
+    stored: &Arc<Stored<T>>,
+    batch: Batch<MatrixId, Request<T>>,
+) {
+    // Deadline shedding happens at dispatch: a request that waited out its
+    // budget in the queue is answered without paying for its execution.
+    let now = Instant::now();
+    let mut live: Vec<Request<T>> = Vec::with_capacity(batch.items.len());
+    for req in batch.items {
+        if req.deadline.is_some_and(|d| d <= now) {
+            shared.metrics.record_expired();
+            let _ = req.reply.send(Err(ServiceError::DeadlineExceeded));
+        } else {
+            live.push(req);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    shared.metrics.record_format_requests(stored.kind, live.len() as u64);
+    let ys = match execute(stored, &live, true) {
+        Ok(ys) => ys,
+        Err(_panic) => {
+            // Panic quarantine: contain it, degrade the operator to the
+            // scalar-CSR fallback, and replay the batch — the caller sees a
+            // slower correct answer, not a crashed service.
+            shared.metrics.record_panic_quarantined();
+            if stored.quarantine() {
+                shared.metrics.record_fallback_rebuild();
+            }
+            std::thread::sleep(shared.retry_backoff);
+            match execute(stored, &live, false) {
+                Ok(ys) => ys,
+                Err(msg) => {
+                    for req in live {
+                        shared.metrics.record_error();
+                        let _ = req.reply.send(Err(ServiceError::Faulted(msg.clone())));
+                    }
+                    return;
+                }
+            }
+        }
+    };
+    let flops = stored.op().flops();
+    for (req, y) in live.into_iter().zip(ys) {
+        shared.metrics.record_completion(req.enqueued.elapsed_secs() * 1e6, flops);
+        let _ = req.reply.send(Ok(y));
+    }
+}
+
+/// One execution attempt over the batch's live requests, unwind-contained.
+/// `inject` arms the `exec.spmv` chaos site on the primary attempt only, so
+/// the post-quarantine replay runs clean (the `team.lane` site dies with
+/// the team: the fallback operator never touches the executor).
+fn execute<T: Scalar>(
+    stored: &Arc<Stored<T>>,
+    reqs: &[Request<T>],
+    inject: bool,
+) -> Result<Vec<Vec<T>>, String> {
+    catch_unwind(AssertUnwindSafe(|| {
+        if inject {
+            fault::maybe_panic(fault::site::EXEC_SPMV);
+        }
+        let nrows = stored.csr.nrows;
+        let n = reqs.len();
+        if n > 1 {
+            // Fused multi-vector pass: the matrix stream is read once for
+            // the whole batch on every backend — the batching win of §Perf.
+            let xs: Vec<&[T]> = reqs.iter().map(|r| r.x.as_slice()).collect();
+            let mut ys: Vec<Vec<T>> = (0..n).map(|_| vec![T::zero(); nrows]).collect();
+            stored.spmv_batch(&xs, &mut ys);
+            ys
+        } else {
+            // Single request: plain path.
+            let mut y = vec![T::zero(); nrows];
+            stored.spmv(&reqs[0].x, &mut y);
+            vec![y]
+        }
+    }))
+    .map_err(panic_message)
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).into()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
 }
 
 #[cfg(test)]
@@ -501,7 +789,7 @@ mod tests {
             ..Default::default()
         }
         .generate(5);
-        let id = svc.register(m.clone());
+        let id = svc.register(m.clone()).unwrap();
         (svc, id, m)
     }
 
@@ -546,6 +834,39 @@ mod tests {
     }
 
     #[test]
+    fn invalid_matrix_rejected_at_register() {
+        let svc: SpmvService<f64> = SpmvService::new(1, 4);
+        let bad: Csr<f64> =
+            Csr { nrows: 1, ncols: 1, row_ptr: vec![0, 2], col_idx: vec![0], vals: vec![1.0] };
+        match svc.register(bad) {
+            Err(ServiceError::Invalid(SpmvError::InvalidMatrix(_))) => {}
+            other => panic!("expected Invalid(InvalidMatrix), got {other:?}"),
+        }
+        // A rejected registration leaves the service fully serviceable.
+        let m: Csr<f64> = gen::random_uniform(30, 3.0, 5);
+        let id = svc.register(m.clone()).unwrap();
+        assert_eq!(svc.is_quarantined(id), Some(false));
+        let x = vec![1.0; 30];
+        let mut want = vec![0.0; 30];
+        m.spmv(&x, &mut want);
+        crate::scalar::assert_allclose(&svc.spmv(id, x).unwrap(), &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn zero_deadline_requests_are_shed() {
+        let (svc, id, _) = service();
+        let rxs: Vec<_> = (0..4)
+            .map(|_| svc.submit_with_deadline(id, vec![1.0; 120], Some(Duration::ZERO)))
+            .collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap(), Err(ServiceError::DeadlineExceeded));
+        }
+        assert!(svc.metrics().expired.load(Ordering::Relaxed) >= 4);
+        let snap = svc.metrics_json().to_string();
+        assert!(snap.contains("\"requests_expired\":"), "{snap}");
+    }
+
+    #[test]
     fn selection_exposed() {
         let (svc, id, _) = service();
         let sel = svc.selection(id).unwrap();
@@ -559,8 +880,8 @@ mod tests {
         let svc = SpmvService::new(2, 4);
         let a: Csr<f64> = gen::random_uniform(50, 4.0, 1);
         let b: Csr<f64> = gen::random_uniform(70, 4.0, 2);
-        let ida = svc.register(a.clone());
-        let idb = svc.register(b.clone());
+        let ida = svc.register(a.clone()).unwrap();
+        let idb = svc.register(b.clone()).unwrap();
         let xa = vec![1.0; 50];
         let xb = vec![1.0; 70];
         let rx1 = svc.submit(ida, xa.clone());
@@ -588,7 +909,7 @@ mod tests {
                 ..Default::default()
             }
             .generate(13);
-            let id = svc.register(m.clone());
+            let id = svc.register(m.clone()).unwrap();
             assert!(svc.op_label(id).unwrap().starts_with("sim-"), "{:?}", svc.op_label(id));
             // A burst of same-matrix requests coalesces into fused batches.
             let xs: Vec<Vec<f64>> = (0..12)
@@ -611,7 +932,7 @@ mod tests {
         let svc: SpmvService<f64> =
             SpmvService::with_backend(1, 4, Backend::Simulated(SimIsa::Sve));
         let m: Csr<f64> = gen::random_uniform(80, 1.2, 3);
-        let id = svc.register(m.clone());
+        let id = svc.register(m.clone()).unwrap();
         let x: Vec<f64> = (0..80).map(|i| (i % 5) as f64).collect();
         let mut want = vec![0.0; 80];
         m.spmv(&x, &mut want);
@@ -634,7 +955,7 @@ mod tests {
             ..Default::default()
         }
         .generate(23);
-        let id = svc.register(m.clone());
+        let id = svc.register(m.clone()).unwrap();
         let rs = svc.plan_chunk_rs(id).expect("plan compiled under Auto");
         assert!(!rs.is_empty() && rs.iter().all(|&r| matches!(r, 1 | 2 | 4 | 8)));
         let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.1).cos()).collect();
@@ -652,7 +973,7 @@ mod tests {
         // PlanMode::Off: same numerics, no plan.
         let svc_off: SpmvService<f64> =
             SpmvService::with_plan(2, 8, Backend::Native, PlanMode::Off);
-        let id_off = svc_off.register(m);
+        let id_off = svc_off.register(m).unwrap();
         assert!(svc_off.plan_chunk_rs(id_off).is_none());
         let got_off = svc_off.spmv(id_off, x).unwrap();
         crate::scalar::assert_allclose(&got_off, &want, 1e-12, 1e-12);
@@ -662,7 +983,7 @@ mod tests {
     fn non_spc5_selection_gets_no_plan() {
         let svc = SpmvService::new(1, 4);
         let scattered: Csr<f64> = gen::random_uniform(200, 1.5, 9);
-        let id = svc.register(scattered.clone());
+        let id = svc.register(scattered.clone()).unwrap();
         assert!(svc.plan_chunk_rs(id).is_none());
         let x = vec![1.0; 200];
         let mut want = vec![0.0; 200];
@@ -693,7 +1014,7 @@ mod tests {
         ] {
             let svc: SpmvService<f64> =
                 SpmvService::with_format(2, 8, Backend::Native, PlanMode::Auto, 2, mode);
-            let id = svc.register(m.clone());
+            let id = svc.register(m.clone()).unwrap();
             let label = svc.op_label(id).unwrap();
             assert!(label.contains(label_frag), "mode {mode:?}: label {label}");
             // Singles and a fused batch both serve correctly.
@@ -748,7 +1069,7 @@ mod tests {
             .generate(41);
             let scattered: Csr<f64> = gen::random_uniform(170, 1.3, 7);
             for m in [blocky, scattered] {
-                let id = svc.register(m.clone());
+                let id = svc.register(m.clone()).unwrap();
                 let x: Vec<f64> = (0..m.ncols).map(|i| ((i % 13) as f64 - 6.0) * 0.2).collect();
                 let mut want = vec![0.0; m.nrows];
                 m.spmv(&x, &mut want);
@@ -777,7 +1098,7 @@ mod tests {
             ..Default::default()
         }
         .generate(3);
-        let id = svc.register(tiny.clone());
+        let id = svc.register(tiny.clone()).unwrap();
         let x = vec![1.0; 9];
         let mut want = vec![0.0; 9];
         tiny.spmv(&x, &mut want);

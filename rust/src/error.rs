@@ -1,0 +1,87 @@
+//! The crate-wide failure taxonomy.
+//!
+//! Every untrusted-input path — Matrix Market parsing ([`crate::matrix::mm_io`]),
+//! CSR construction ([`crate::matrix::Csr::from_parts`]), format conversion
+//! ([`crate::spc5::try_csr_to_spc5`], [`crate::matrix::sell`]) — returns a
+//! typed [`SpmvError`] instead of panicking, so malformed input is a
+//! rejection the serving layer can report, never an abort. The coordinator
+//! wraps these in its own `ServiceError` at the request boundary.
+//!
+//! The taxonomy is deliberately small and `Clone + PartialEq + Eq`: errors
+//! cross thread/channel boundaries in the service and are asserted on in
+//! tests, so they carry owned strings rather than source errors.
+
+/// A typed failure from the matrix/format layers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpmvError {
+    /// I/O failure reading or writing matrix data. Carries the underlying
+    /// `std::io::Error` text (io errors are not `Clone`).
+    Io(String),
+    /// Malformed input at a specific line of a text format (Matrix Market).
+    Parse { line: usize, msg: String },
+    /// Well-formed input using a feature this crate does not implement.
+    Unsupported(String),
+    /// A matrix violating the structural invariants of its storage format
+    /// (non-monotone `row_ptr`, column index out of bounds, unsorted
+    /// columns, invalid block geometry).
+    InvalidMatrix(String),
+    /// A deterministic fault injected by [`crate::util::fault`]
+    /// (`SPC5_FAULT`). Distinguishable from real failures so chaos tests
+    /// can assert the exact propagation path.
+    FaultInjected { site: String },
+}
+
+impl std::fmt::Display for SpmvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpmvError::Io(msg) => write!(f, "io: {msg}"),
+            SpmvError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            SpmvError::Unsupported(what) => write!(f, "unsupported: {what}"),
+            SpmvError::InvalidMatrix(msg) => write!(f, "invalid matrix: {msg}"),
+            SpmvError::FaultInjected { site } => write!(f, "injected fault at site '{site}'"),
+        }
+    }
+}
+
+impl std::error::Error for SpmvError {}
+
+impl From<std::io::Error> for SpmvError {
+    fn from(e: std::io::Error) -> Self {
+        SpmvError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_every_variant() {
+        let cases = [
+            (SpmvError::Io("gone".into()), "io: gone"),
+            (
+                SpmvError::Parse { line: 3, msg: "bad row".into() },
+                "parse error at line 3: bad row",
+            ),
+            (SpmvError::Unsupported("array format".into()), "unsupported: array format"),
+            (
+                SpmvError::InvalidMatrix("row_ptr not monotone".into()),
+                "invalid matrix: row_ptr not monotone",
+            ),
+            (
+                SpmvError::FaultInjected { site: "convert.spc5".into() },
+                "injected fault at site 'convert.spc5'",
+            ),
+        ];
+        for (err, want) in cases {
+            assert_eq!(err.to_string(), want);
+        }
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "truncated");
+        let e: SpmvError = io.into();
+        assert!(matches!(e, SpmvError::Io(ref m) if m.contains("truncated")), "{e:?}");
+    }
+}

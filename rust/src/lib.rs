@@ -46,6 +46,7 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+pub mod error;
 pub mod scalar;
 pub mod util;
 pub mod matrix;
@@ -61,4 +62,5 @@ pub mod runtime;
 pub mod cli;
 pub mod bench;
 
+pub use error::SpmvError;
 pub use scalar::Scalar;

@@ -13,7 +13,10 @@
 use std::path::PathBuf;
 
 use spc5::cli::Args;
-use spc5::coordinator::{Backend, FormatChoice, FormatMode, PlanMode, SelectorModel, SpmvService};
+use spc5::coordinator::{
+    Backend, FormatChoice, FormatMode, PlanMode, SelectorModel, ServiceConfig, ServiceError,
+    SpmvService,
+};
 use spc5::kernels::{isa, native, SimIsa};
 use spc5::matrix::{corpus_by_name_or_fail, corpus_entries, gen, mm_io, Csr};
 use spc5::parallel::ParallelSpc5;
@@ -224,6 +227,16 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
     let workers = args.opt_num::<usize>("workers", 2)?;
     let threads = args.opt_num::<usize>("threads", workers)?;
     let requests = args.opt_num::<usize>("requests", 200)?;
+    // Admission control: --queue-cap 0 means unbounded, --deadline-ms 0
+    // means no deadline (DESIGN.md §Failure model).
+    let queue_cap = match args.opt_num::<usize>("queue-cap", 1024)? {
+        0 => usize::MAX,
+        cap => cap,
+    };
+    let deadline = match args.opt_num::<u64>("deadline-ms", 0)? {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
     let backend = match args.opt("backend", "native").as_str() {
         "native" => Backend::Native,
         "avx512" => Backend::Simulated(SimIsa::Avx512),
@@ -258,14 +271,35 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
     }
     args.finish()?;
     println!("isa tier: {} active, {} detected (--isa / SPC5_FORCE_ISA force)", isa::active(), isa::detected());
-    let svc: SpmvService<f64> =
-        SpmvService::with_format(workers, 16, backend, plan, threads, format);
+    if spc5::util::fault::is_armed() {
+        println!(
+            "fault injection ARMED via {}: {}",
+            spc5::util::fault::ENV,
+            spc5::util::fault::armed_sites().join(", ")
+        );
+    }
+    let svc: SpmvService<f64> = SpmvService::with_config(ServiceConfig {
+        workers,
+        max_batch: 16,
+        backend,
+        plan_mode: plan,
+        threads,
+        format_mode: format,
+        queue_cap,
+        deadline,
+        ..ServiceConfig::default()
+    });
     let m = corpus_by_name_or_fail("nd6k")?.build(100_000);
     let ncols = m.ncols;
-    let id = svc.register(m);
+    let id = svc.register(m).map_err(|e| e.to_string())?;
     println!(
         "executor team: {} lane(s) (persistent; --threads, SPC5_THREADS overrides)",
         svc.team().threads()
+    );
+    println!(
+        "admission: queue cap {} (--queue-cap, 0 = unbounded), deadline {} (--deadline-ms)",
+        if queue_cap == usize::MAX { "unbounded".into() } else { queue_cap.to_string() },
+        deadline.map_or("none".into(), |d| format!("{}ms", d.as_millis())),
     );
     println!(
         "execution operator: {} (--format {:?})",
@@ -294,10 +328,17 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
     let rxs: Vec<_> = (0..requests)
         .map(|k| svc.submit(id, (0..ncols).map(|i| ((i + k) % 13) as f64).collect()))
         .collect();
+    let (mut served, mut shed) = (0usize, 0usize);
     for rx in rxs {
-        rx.recv().map_err(|e| e.to_string())?.map_err(|e| e.to_string())?;
+        match rx.recv().map_err(|e| e.to_string())? {
+            Ok(_) => served += 1,
+            // Load shedding is the demo's expected behavior under an armed
+            // latency fault or a tight deadline — report, don't abort.
+            Err(ServiceError::Overloaded { .. } | ServiceError::DeadlineExceeded) => shed += 1,
+            Err(e) => return Err(e.to_string()),
+        }
     }
-    println!("done in {:.3}s", t.elapsed_secs());
+    println!("done in {:.3}s: {served} served, {shed} shed", t.elapsed_secs());
     println!("{}", svc.metrics_json().to_pretty());
     Ok(())
 }

@@ -1,5 +1,6 @@
 //! Compressed Sparse Row storage — the baseline format of the paper (§2.3).
 
+use crate::error::SpmvError;
 use crate::scalar::Scalar;
 
 use super::coo::Coo;
@@ -36,36 +37,39 @@ impl<T: Scalar> Csr<T> {
         }
     }
 
-    /// Build directly from raw parts, validating the invariants.
+    /// Build directly from raw parts, validating the invariants. Violations
+    /// surface as [`SpmvError::InvalidMatrix`] — the typed rejection the
+    /// service layer reports for untrusted registrations.
     pub fn from_parts(
         nrows: usize,
         ncols: usize,
         row_ptr: Vec<u32>,
         col_idx: Vec<u32>,
         vals: Vec<T>,
-    ) -> Result<Self, String> {
+    ) -> Result<Self, SpmvError> {
+        let invalid = |msg: String| SpmvError::InvalidMatrix(msg);
         if row_ptr.len() != nrows + 1 {
-            return Err(format!("row_ptr len {} != nrows+1 {}", row_ptr.len(), nrows + 1));
+            return Err(invalid(format!("row_ptr len {} != nrows+1 {}", row_ptr.len(), nrows + 1)));
         }
         if row_ptr[0] != 0 {
-            return Err("row_ptr[0] != 0".into());
+            return Err(invalid("row_ptr[0] != 0".into()));
         }
         if *row_ptr.last().unwrap() as usize != vals.len() || col_idx.len() != vals.len() {
-            return Err("row_ptr end / col_idx / vals length mismatch".into());
+            return Err(invalid("row_ptr end / col_idx / vals length mismatch".into()));
         }
         for w in row_ptr.windows(2) {
             if w[0] > w[1] {
-                return Err("row_ptr not monotone".into());
+                return Err(invalid("row_ptr not monotone".into()));
             }
         }
         for r in 0..nrows {
             let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
             for i in lo..hi {
                 if col_idx[i] as usize >= ncols {
-                    return Err(format!("col {} out of bounds in row {r}", col_idx[i]));
+                    return Err(invalid(format!("col {} out of bounds in row {r}", col_idx[i])));
                 }
                 if i > lo && col_idx[i - 1] >= col_idx[i] {
-                    return Err(format!("row {r} columns not strictly increasing"));
+                    return Err(invalid(format!("row {r} columns not strictly increasing")));
                 }
             }
         }
@@ -152,8 +156,8 @@ impl<T: Scalar> Csr<T> {
         }
     }
 
-    /// Validate internal invariants (used by property tests).
-    pub fn check(&self) -> Result<(), String> {
+    /// Validate internal invariants (property tests, service registration).
+    pub fn check(&self) -> Result<(), SpmvError> {
         Self::from_parts(
             self.nrows,
             self.ncols,
@@ -233,6 +237,13 @@ mod tests {
         assert!(Csr::<f64>::from_parts(1, 2, vec![0, 2], vec![1, 0], vec![1.0, 2.0]).is_err()); // unsorted cols
         assert!(Csr::<f64>::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err()); // col oob
         assert!(Csr::<f64>::from_parts(1, 1, vec![1, 1], vec![], vec![]).is_err()); // row_ptr[0] != 0
+        // Violations carry the typed InvalidMatrix error.
+        match Csr::<f64>::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]) {
+            Err(crate::error::SpmvError::InvalidMatrix(msg)) => {
+                assert!(msg.contains("out of bounds"), "{msg}");
+            }
+            other => panic!("expected InvalidMatrix, got {other:?}"),
+        }
     }
 
     #[test]

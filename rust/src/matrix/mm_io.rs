@@ -9,44 +9,17 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
 
+use crate::error::SpmvError;
 use crate::scalar::Scalar;
 
 use super::coo::Coo;
 use super::csr::Csr;
 
-#[derive(Debug)]
-pub enum MmError {
-    Io(std::io::Error),
-    Parse { line: usize, msg: String },
-    Unsupported(String),
-}
-
-impl std::fmt::Display for MmError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            MmError::Io(e) => write!(f, "io: {e}"),
-            MmError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
-            MmError::Unsupported(what) => {
-                write!(f, "unsupported matrix market declaration: {what}")
-            }
-        }
-    }
-}
-
-impl std::error::Error for MmError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            MmError::Io(e) => Some(e),
-            _ => None,
-        }
-    }
-}
-
-impl From<std::io::Error> for MmError {
-    fn from(e: std::io::Error) -> Self {
-        MmError::Io(e)
-    }
-}
+/// Cap on the entry-count reservation honored from a file's size line: a
+/// malicious header declaring 10^15 non-zeros must not OOM the process
+/// before the body-length check runs. Real entries still grow past this —
+/// it only bounds the *up-front* allocation.
+const MAX_PREALLOC: usize = 1 << 22;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Field {
@@ -61,12 +34,17 @@ enum Symmetry {
     Symmetric,
 }
 
-fn parse_err(line: usize, msg: impl Into<String>) -> MmError {
-    MmError::Parse { line, msg: msg.into() }
+fn parse_err(line: usize, msg: impl Into<String>) -> SpmvError {
+    SpmvError::Parse { line, msg: msg.into() }
 }
 
 /// Read a Matrix Market file into COO (symmetric storage is expanded).
-pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>, MmError> {
+///
+/// Every malformed input — bad header, bad size line, truncated or
+/// oversized body, out-of-range indices, non-square symmetric declaration,
+/// dimensions beyond the u32 index space — is a typed `Err`, never a panic
+/// (`corrupted_input_never_panics` below feeds this arbitrary corruptions).
+pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>, SpmvError> {
     let mut lines = BufReader::new(reader).lines().enumerate();
 
     // Header line: %%MatrixMarket matrix coordinate <field> <symmetry>
@@ -79,18 +57,18 @@ pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>, MmError> {
         return Err(parse_err(lno, "missing %%MatrixMarket matrix header"));
     }
     if toks[2] != "coordinate" {
-        return Err(MmError::Unsupported(format!("format '{}' (only coordinate)", toks[2])));
+        return Err(SpmvError::Unsupported(format!("format '{}' (only coordinate)", toks[2])));
     }
     let field = match toks[3].as_str() {
         "real" => Field::Real,
         "integer" => Field::Integer,
         "pattern" => Field::Pattern,
-        other => return Err(MmError::Unsupported(format!("field '{other}'"))),
+        other => return Err(SpmvError::Unsupported(format!("field '{other}'"))),
     };
     let symmetry = match toks[4].as_str() {
         "general" => Symmetry::General,
         "symmetric" => Symmetry::Symmetric,
-        other => return Err(MmError::Unsupported(format!("symmetry '{other}'"))),
+        other => return Err(SpmvError::Unsupported(format!("symmetry '{other}'"))),
     };
 
     // Skip comments, read size line.
@@ -115,8 +93,20 @@ pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>, MmError> {
         return Err(parse_err(lno, "size line must be 'nrows ncols nnz'"));
     }
     let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    if nrows > u32::MAX as usize || ncols > u32::MAX as usize {
+        return Err(parse_err(
+            lno,
+            format!("dimensions {nrows}x{ncols} exceed the u32 index space"),
+        ));
+    }
+    if symmetry == Symmetry::Symmetric && nrows != ncols {
+        return Err(parse_err(
+            lno,
+            format!("symmetric matrix must be square, got {nrows}x{ncols}"),
+        ));
+    }
 
-    let mut coo = Coo::with_capacity(nrows, ncols, nnz);
+    let mut coo = Coo::with_capacity(nrows, ncols, nnz.min(MAX_PREALLOC));
     let mut read = 0usize;
     for (n, l) in lines {
         let l = l?;
@@ -146,6 +136,9 @@ pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>, MmError> {
         if r == 0 || c == 0 || r > nrows || c > ncols {
             return Err(parse_err(n + 1, format!("index ({r},{c}) out of 1-based bounds")));
         }
+        if read == nnz {
+            return Err(parse_err(n + 1, format!("more entries than the declared nnz {nnz}")));
+        }
         coo.push(r - 1, c - 1, T::from_f64(v)); // MM is 1-based
         read += 1;
     }
@@ -159,13 +152,13 @@ pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>, MmError> {
 }
 
 /// Read a Matrix Market file straight into CSR.
-pub fn read_csr<T: Scalar>(path: &Path) -> Result<Csr<T>, MmError> {
+pub fn read_csr<T: Scalar>(path: &Path) -> Result<Csr<T>, SpmvError> {
     let f = std::fs::File::open(path)?;
     Ok(Csr::from_coo(read_coo(f)?))
 }
 
 /// Write a CSR matrix as `matrix coordinate real general`.
-pub fn write_csr<T: Scalar, W: Write>(m: &Csr<T>, mut w: W) -> Result<(), MmError> {
+pub fn write_csr<T: Scalar, W: Write>(m: &Csr<T>, mut w: W) -> Result<(), SpmvError> {
     writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
     writeln!(w, "% generated by the SPC5 reproduction framework")?;
     writeln!(w, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
@@ -179,7 +172,7 @@ pub fn write_csr<T: Scalar, W: Write>(m: &Csr<T>, mut w: W) -> Result<(), MmErro
 }
 
 /// Write to a path.
-pub fn write_csr_file<T: Scalar>(m: &Csr<T>, path: &Path) -> Result<(), MmError> {
+pub fn write_csr_file<T: Scalar>(m: &Csr<T>, path: &Path) -> Result<(), SpmvError> {
     let f = std::fs::File::create(path)?;
     write_csr(m, std::io::BufWriter::new(f))
 }
@@ -242,6 +235,58 @@ mod tests {
         // Out-of-bounds 1-based index.
         let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
         assert!(read_coo::<f64, _>(text.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_hostile_headers() {
+        // Dimensions beyond the u32 index space (would trip Coo's assert).
+        let text = "%%MatrixMarket matrix coordinate real general\n99999999999 2 1\n1 1 1.0\n";
+        assert!(read_coo::<f64, _>(text.as_bytes()).is_err());
+        // More entries than declared.
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n2 2 2.0\n";
+        assert!(read_coo::<f64, _>(text.as_bytes()).is_err());
+        // Symmetric declaration on a rectangular matrix (symmetrize would
+        // mirror entries out of bounds).
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n2 3 1\n1 1 1.0\n";
+        assert!(read_coo::<f64, _>(text.as_bytes()).is_err());
+        // A huge *declared* nnz with a tiny body parses the body, then
+        // rejects on the count mismatch — it must not reserve 10^15 slots.
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+            2 2 999999999999999\n1 1 1.0\n";
+        assert!(read_coo::<f64, _>(text.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn corrupted_input_never_panics() {
+        // The untrusted-input contract: arbitrary corruptions of a valid
+        // file — truncation, byte flips (incl. invalid UTF-8), insertions,
+        // deletions — always yield Ok or a typed Err, never a panic (the
+        // property harness fails the test on any panic).
+        crate::util::minitest::property("corrupted MatrixMarket bytes are rejected", |g| {
+            let mut bytes = SAMPLE.as_bytes().to_vec();
+            let junk: &[u8] = b" \t%-.e5\xff\x00\ncoordinate";
+            for _ in 0..g.usize_in(1..8) {
+                match g.usize_in(0..4) {
+                    0 => {
+                        let at = g.usize_in(0..bytes.len() + 1);
+                        bytes.truncate(at);
+                    }
+                    1 if !bytes.is_empty() => {
+                        let at = g.usize_in(0..bytes.len());
+                        bytes[at] = (g.u64() % 256) as u8;
+                    }
+                    2 => {
+                        let at = g.usize_in(0..bytes.len() + 1);
+                        bytes.insert(at, *g.pick(junk));
+                    }
+                    3 if !bytes.is_empty() => {
+                        bytes.remove(g.usize_in(0..bytes.len()));
+                    }
+                    _ => {}
+                }
+            }
+            let _ = read_coo::<f64, _>(&bytes[..]);
+        });
     }
 
     #[test]

@@ -77,6 +77,16 @@ impl<T: Scalar> SellMatrix<T> {
         Self::with_chunk(m, sigma, T::VS)
     }
 
+    /// Fallible conversion for untrusted input: validates the CSR
+    /// invariants first (the infallible paths trust their caller) and
+    /// consults the `convert.sell` fault-injection site. This is the entry
+    /// the operator factory's `try_` path uses.
+    pub fn try_from_csr(m: &Csr<T>, sigma: usize) -> Result<Self, crate::error::SpmvError> {
+        m.check()?;
+        crate::util::fault::maybe_fail(crate::util::fault::site::CONVERT_SELL)?;
+        Ok(Self::from_csr(m, sigma))
+    }
+
     /// Convert with an explicit chunk height `c` (tests and ablations).
     /// `sigma` is rounded up to a multiple of `c` (minimum one chunk).
     pub fn with_chunk(m: &Csr<T>, sigma: usize, c: usize) -> Self {

@@ -39,6 +39,7 @@
 
 use std::sync::Arc;
 
+use crate::error::SpmvError;
 use crate::kernels::isa::{self, IsaTier};
 use crate::kernels::{avx2, native, native_avx512, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
 use crate::matrix::sell::SellMatrix;
@@ -386,6 +387,47 @@ impl<T: Scalar> SparseOp<T> for ParallelPlanned<T> {
     }
 }
 
+// ---- the quarantine/degrade fallback form ----
+
+/// The safe-harbor operator the service degrades to after a panic
+/// quarantine or a failed build: serial CSR through the *scalar reference
+/// kernel* ([`Csr::spmv`]) — no SIMD dispatch, no team, no conversion. Its
+/// only dependency is the validated CSR arrays themselves, so it cannot
+/// re-trip a kernel/plan/executor bug; correct-but-slow is the contract.
+pub struct ScalarCsr<T: Scalar>(Csr<T>);
+
+impl<T: Scalar> ScalarCsr<T> {
+    pub fn new(csr: Csr<T>) -> Self {
+        Self(csr)
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for ScalarCsr<T> {
+    fn nrows(&self) -> usize {
+        self.0.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.0.ncols
+    }
+    fn nnz(&self) -> usize {
+        Csr::nnz(&self.0)
+    }
+    fn bytes(&self) -> usize {
+        Csr::bytes(&self.0)
+    }
+    fn label(&self) -> String {
+        "fallback-csr-scalar".into()
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        Csr::spmv(&self.0, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            Csr::spmv(&self.0, x, y);
+        }
+    }
+}
+
 // ---- simulated-ISA form ----
 
 /// An operator that executes the paper's simulated ISA kernels (exact
@@ -541,6 +583,69 @@ pub fn build_backend<T: Scalar>(
     }
 }
 
+/// Fallible [`build`] for untrusted input: validates the CSR invariants,
+/// consults the per-format `convert.*` fault-injection sites, then builds.
+/// The service's registration path goes through here so a malformed matrix
+/// (or an injected conversion failure) is a typed rejection the caller can
+/// retry or degrade from, never an abort.
+pub fn try_build<T: Scalar>(
+    csr: &Csr<T>,
+    choice: FormatChoice,
+    team: &Arc<Team>,
+) -> Result<Box<dyn SparseOp<T>>, SpmvError> {
+    try_build_tiered(csr, choice, team, isa::active())
+}
+
+/// [`try_build`] with an explicit [`IsaTier`] (see [`build_tiered`]).
+pub fn try_build_tiered<T: Scalar>(
+    csr: &Csr<T>,
+    choice: FormatChoice,
+    team: &Arc<Team>,
+    tier: IsaTier,
+) -> Result<Box<dyn SparseOp<T>>, SpmvError> {
+    csr.check()?;
+    match choice {
+        FormatChoice::Csr => {}
+        FormatChoice::Spc5 { r } => {
+            if !matches!(r, 1 | 2 | 4 | 8) {
+                return Err(SpmvError::InvalidMatrix(format!(
+                    "block height r={r} (want 1, 2, 4 or 8)"
+                )));
+            }
+            crate::util::fault::maybe_fail(crate::util::fault::site::CONVERT_SPC5)?;
+        }
+        FormatChoice::Sell { .. } => {
+            crate::util::fault::maybe_fail(crate::util::fault::site::CONVERT_SELL)?;
+        }
+        FormatChoice::Planned => {
+            crate::util::fault::maybe_fail(crate::util::fault::site::CONVERT_PLAN)?;
+        }
+    }
+    Ok(build_tiered(csr, choice, team, tier))
+}
+
+/// Fallible [`build_backend`]: the `try_` path of the service's
+/// registration (validation + fault sites), across both backends.
+pub fn try_build_backend<T: Scalar>(
+    csr: &Csr<T>,
+    choice: FormatChoice,
+    backend: Backend,
+    team: &Arc<Team>,
+) -> Result<Box<dyn SparseOp<T>>, SpmvError> {
+    match backend {
+        Backend::Native => try_build(csr, choice, team),
+        Backend::Simulated(isa) => {
+            csr.check()?;
+            crate::util::fault::maybe_fail(crate::util::fault::site::CONVERT_SPC5)?;
+            let r = match choice {
+                FormatChoice::Spc5 { r } => r,
+                _ => 1,
+            };
+            Ok(Box::new(SimulatedOp::new(csr, r, isa)))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -686,5 +791,66 @@ mod tests {
         let team = Arc::new(Team::exact(2));
         let op = build(&m, FormatChoice::Sell { sigma: 16 }, &team);
         assert!(op.label().starts_with("team-sell-8-16"));
+    }
+
+    #[test]
+    fn scalar_fallback_matches_reference_bitwise() {
+        let m: Csr<f64> = gen::random_uniform(91, 4.0, 23);
+        let x: Vec<f64> = (0..91).map(|i| ((i * 7) % 13) as f64 * 0.31 - 1.1).collect();
+        let mut want = vec![0.0; 91];
+        m.spmv(&x, &mut want);
+        let op = ScalarCsr::new(m.clone());
+        assert_eq!(op.nrows(), 91);
+        assert_eq!(op.nnz(), m.nnz());
+        assert_eq!(op.label(), "fallback-csr-scalar");
+        let mut y = vec![f64::NAN; 91];
+        op.spmv(&x, &mut y);
+        assert_eq!(y, want);
+        // Fused path is the same kernel per RHS.
+        let xs = [x.as_slice(), x.as_slice()];
+        let mut ys: Vec<Vec<f64>> = (0..2).map(|_| vec![0.0; 91]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+        let mut scratch = Vec::new();
+        op.spmv_multi(&xs, &mut y_refs, &mut scratch);
+        for y in &ys {
+            assert_eq!(*y, want);
+        }
+    }
+
+    #[test]
+    fn try_build_validates_inputs() {
+        let m: Csr<f64> = gen::random_uniform(40, 3.0, 3);
+        let team = Arc::new(Team::exact(1));
+        // Well-formed matrix + geometry builds on every choice and backend.
+        for choice in all_choices() {
+            let op = try_build(&m, choice, &team).unwrap();
+            assert_eq!(op.nnz(), m.nnz());
+        }
+        let sim = try_build_backend(
+            &m,
+            FormatChoice::Spc5 { r: 2 },
+            Backend::Simulated(SimIsa::Avx512),
+            &team,
+        )
+        .unwrap();
+        assert!(sim.label().starts_with("sim-"));
+        // Bad block height is a typed rejection, not a downstream panic.
+        match try_build(&m, FormatChoice::Spc5 { r: 3 }, &team) {
+            Err(SpmvError::InvalidMatrix(msg)) => assert!(msg.contains("r=3"), "{msg}"),
+            other => panic!("expected InvalidMatrix, got {:?}", other.map(|op| op.label())),
+        }
+        // A corrupt CSR is caught before any conversion runs.
+        let mut bad = m.clone();
+        bad.col_idx[0] = 999;
+        for choice in all_choices() {
+            assert!(try_build(&bad, choice, &team).is_err(), "{:?}", choice);
+        }
+        assert!(try_build_backend(
+            &bad,
+            FormatChoice::Csr,
+            Backend::Simulated(SimIsa::Sve),
+            &team
+        )
+        .is_err());
     }
 }

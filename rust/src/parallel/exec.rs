@@ -99,6 +99,9 @@ fn worker_loop(inner: &Inner, lane: usize) {
         let job = unsafe { (*inner.job.get()).expect("team job missing") };
         let nparts = inner.nparts.load(Ordering::Relaxed);
         let ok = catch_unwind(AssertUnwindSafe(|| {
+            // Chaos hook: an armed `team.lane` fault panics here, exercising
+            // the same unwind path a kernel bug would take.
+            crate::util::fault::maybe_panic(crate::util::fault::site::TEAM_LANE);
             let mut p = lane;
             while p < nparts {
                 job(p);

@@ -4,6 +4,7 @@
 //! (the paper highlights this as the cheap-to-adopt case); for r > 1 the
 //! values of a panel are re-ordered row-major *within each block*.
 
+use crate::error::SpmvError;
 use crate::matrix::{Coo, Csr};
 use crate::scalar::Scalar;
 
@@ -82,6 +83,27 @@ pub fn csr_to_spc5<T: Scalar>(csr: &Csr<T>, r: usize, width: usize) -> Spc5Matri
     out
 }
 
+/// Fallible conversion for untrusted input: block-geometry and CSR
+/// invariants become a typed [`SpmvError`] instead of the asserts
+/// [`csr_to_spc5`] uses on trusted (already-validated) matrices, and the
+/// `convert.spc5` fault-injection site can force a failure. This is the
+/// entry the operator factory's `try_` path uses.
+pub fn try_csr_to_spc5<T: Scalar>(
+    csr: &Csr<T>,
+    r: usize,
+    width: usize,
+) -> Result<Spc5Matrix<T>, SpmvError> {
+    if !matches!(r, 1 | 2 | 4 | 8) {
+        return Err(SpmvError::InvalidMatrix(format!("block height r={r} (want 1, 2, 4 or 8)")));
+    }
+    if width == 0 || width > 32 {
+        return Err(SpmvError::InvalidMatrix(format!("block width {width} (want 1..=32)")));
+    }
+    csr.check()?;
+    crate::util::fault::maybe_fail(crate::util::fault::site::CONVERT_SPC5)?;
+    Ok(csr_to_spc5(csr, r, width))
+}
+
 /// Convert back to CSR (exact inverse — SPC5 stores no extra zeros).
 pub fn spc5_to_csr<T: Scalar>(m: &Spc5Matrix<T>) -> Csr<T> {
     let mut coo = Coo::with_capacity(m.nrows, m.ncols, m.nnz());
@@ -126,6 +148,23 @@ mod tests {
             coo.push(r, c, v);
         }
         Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn try_convert_rejects_bad_geometry_and_matrices() {
+        let m = sample_csr();
+        assert!(try_csr_to_spc5(&m, 3, 8).is_err()); // r not in {1,2,4,8}
+        assert!(try_csr_to_spc5(&m, 4, 0).is_err()); // zero width
+        assert!(try_csr_to_spc5(&m, 4, 33).is_err()); // mask storage limit
+        let good = try_csr_to_spc5(&m, 4, 8).unwrap();
+        assert_eq!(good.nnz(), m.nnz());
+        // A structurally broken CSR is a typed rejection, not an abort.
+        let mut bad = m.clone();
+        bad.col_idx[0] = 999; // >= ncols
+        match try_csr_to_spc5(&bad, 4, 8) {
+            Err(SpmvError::InvalidMatrix(_)) => {}
+            other => panic!("expected InvalidMatrix, got {other:?}"),
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod format;
 pub mod plan;
 pub mod stats;
 
-pub use convert::{csr_to_spc5, spc5_to_csr};
+pub use convert::{csr_to_spc5, spc5_to_csr, try_csr_to_spc5};
 pub use format::{BlockRows, Spc5Matrix};
 pub use plan::{plan_auto, PlanConfig, PlanScoring, PlannedChunk, PlannedMatrix, PLAN_ALIGN};
 pub use stats::FormatStats;

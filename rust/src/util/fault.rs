@@ -1,0 +1,359 @@
+//! Deterministic fault injection for the serving core.
+//!
+//! A chaos harness the fault-tolerance machinery can be tested against:
+//! named *sites* in production code ask this module whether to fail, and a
+//! seeded PRNG ([`super::prng::SplitMix64`]) answers deterministically —
+//! same spec, same draw sequence, same faults. Disarmed (the default) every
+//! check is one relaxed atomic load; no site can fire.
+//!
+//! Arming is either programmatic ([`arm`], used by `tests/fault_injection.rs`)
+//! or via the environment (`SPC5_FAULT`, read once on first use):
+//!
+//! ```text
+//! SPC5_FAULT=<site>:<rate>:<seed>[:<param>][,<site>:<rate>:<seed>...]
+//! SPC5_FAULT=team.lane:0.05:42            # 5% of lane jobs panic
+//! SPC5_FAULT=service.latency:1.0:7:25     # every dispatch stalls 25 ms
+//! ```
+//!
+//! `rate` ∈ [0,1] is the per-draw firing probability; `seed` fixes the draw
+//! sequence; `param` is site-specific (today: delay in milliseconds for
+//! latency sites, default 1). Unknown site names are accepted and simply
+//! never consulted — the registry of sites production code actually checks
+//! is [`site`].
+//!
+//! Faults fire only where production code *asks*: panic sites go through
+//! the real unwind machinery (so quarantine is tested against genuine
+//! panics), failure sites return [`SpmvError::FaultInjected`], latency
+//! sites sleep. Replay/fallback paths deliberately do not consult the
+//! table — a quarantined operator's second attempt must be injection-free
+//! or rate-1.0 specs could never converge.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once, OnceLock};
+
+use super::prng::{Rng, SplitMix64};
+use crate::error::SpmvError;
+
+/// The environment variable consulted on first use.
+pub const ENV: &str = "SPC5_FAULT";
+
+/// The registry of fault sites production code consults. Arming any other
+/// name is legal but inert.
+pub mod site {
+    /// Panic inside a [`crate::parallel::Team`] worker lane's job — the
+    /// injected fault travels the real `catch_unwind` → panic-flag →
+    /// re-raise path of the executor.
+    pub const TEAM_LANE: &str = "team.lane";
+    /// Panic at the service's operator-execution boundary, before the
+    /// kernel runs. Fires on every thread count (a 1-lane service never
+    /// enters the team's dispatch path, so `team.lane` alone cannot cover
+    /// the serial legs of the CI matrix).
+    pub const EXEC_SPMV: &str = "exec.spmv";
+    /// CSR → SPC5 β(r,VS) conversion failure at operator build.
+    pub const CONVERT_SPC5: &str = "convert.spc5";
+    /// CSR → SELL-C-σ conversion failure at operator build.
+    pub const CONVERT_SELL: &str = "convert.sell";
+    /// Execution-plan compilation failure at operator build.
+    pub const CONVERT_PLAN: &str = "convert.plan";
+    /// Artificial latency in the service dispatcher (param = milliseconds,
+    /// default 1) — lets chaos tests fill the admission queue and expire
+    /// deadlines deterministically.
+    pub const SERVICE_LATENCY: &str = "service.latency";
+
+    /// All registered sites (docs, CLI banners).
+    pub const ALL: [&str; 6] =
+        [TEAM_LANE, EXEC_SPMV, CONVERT_SPC5, CONVERT_SELL, CONVERT_PLAN, SERVICE_LATENCY];
+}
+
+/// One parsed `<site>:<rate>:<seed>[:<param>]` entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub site: String,
+    /// Per-draw firing probability in [0, 1].
+    pub rate: f64,
+    /// Seed of the per-site draw sequence.
+    pub seed: u64,
+    /// Site-specific parameter (delay ms for latency sites). Default 1.
+    pub param: u64,
+}
+
+struct SiteState {
+    spec: FaultSpec,
+    /// Draw counter: the n-th consultation of this site hashes (seed, n),
+    /// so firing is independent of thread interleaving *counts* but the
+    /// sequence as a whole is reproducible for a fixed workload.
+    draws: AtomicU64,
+}
+
+/// Fast disarmed path: one load, no lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_ONCE: Once = Once::new();
+
+fn table() -> &'static Mutex<HashMap<String, Arc<SiteState>>> {
+    static TABLE: OnceLock<Mutex<HashMap<String, Arc<SiteState>>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn init_from_env() {
+    if let Ok(v) = std::env::var(ENV) {
+        match parse_spec(&v) {
+            Ok(specs) if !specs.is_empty() => {
+                install(specs);
+            }
+            Ok(_) => {}
+            Err(e) => eprintln!("{ENV} ignored: {e}"),
+        }
+    }
+}
+
+/// Parse a comma-separated spec string. Empty entries are skipped; any
+/// malformed entry rejects the whole spec (chaos configs must not half-arm).
+pub fn parse_spec(spec: &str) -> Result<Vec<FaultSpec>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = part.split(':').collect();
+        if !(3..=4).contains(&fields.len()) {
+            return Err(format!("fault spec '{part}': want <site>:<rate>:<seed>[:<param>]"));
+        }
+        let rate: f64 = fields[1]
+            .parse()
+            .map_err(|e| format!("fault spec '{part}': bad rate: {e}"))?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(format!("fault spec '{part}': rate must be in [0, 1]"));
+        }
+        let seed: u64 = fields[2]
+            .parse()
+            .map_err(|e| format!("fault spec '{part}': bad seed: {e}"))?;
+        let param: u64 = match fields.get(3) {
+            Some(p) => p.parse().map_err(|e| format!("fault spec '{part}': bad param: {e}"))?,
+            None => 1,
+        };
+        out.push(FaultSpec { site: fields[0].to_string(), rate, seed, param });
+    }
+    Ok(out)
+}
+
+fn install(specs: Vec<FaultSpec>) -> usize {
+    let mut t = table().lock().unwrap_or_else(|e| e.into_inner());
+    t.clear();
+    let n = specs.len();
+    for s in specs {
+        t.insert(s.site.clone(), Arc::new(SiteState { spec: s, draws: AtomicU64::new(0) }));
+    }
+    ARMED.store(n > 0, Ordering::Release);
+    n
+}
+
+/// Arm the given spec string (replacing any current table, including one
+/// armed from the environment). Returns the number of armed sites.
+pub fn arm(spec: &str) -> Result<usize, String> {
+    ENV_ONCE.call_once(init_from_env);
+    Ok(install(parse_spec(spec)?))
+}
+
+/// Disarm every site. Idempotent.
+pub fn disarm() {
+    ENV_ONCE.call_once(init_from_env);
+    table().lock().unwrap_or_else(|e| e.into_inner()).clear();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Whether any site is armed (CLI banner; cheap).
+pub fn is_armed() -> bool {
+    ENV_ONCE.call_once(init_from_env);
+    ARMED.load(Ordering::Acquire)
+}
+
+/// The currently armed site names, sorted (CLI banner).
+pub fn armed_sites() -> Vec<String> {
+    ENV_ONCE.call_once(init_from_env);
+    let t = table().lock().unwrap_or_else(|e| e.into_inner());
+    let mut names: Vec<String> = t.keys().cloned().collect();
+    names.sort();
+    names
+}
+
+fn state_of(name: &str) -> Option<Arc<SiteState>> {
+    table().lock().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
+}
+
+/// The n-th draw of a (seed, rate) site: hash the draw index through
+/// SplitMix64 so consecutive draws are decorrelated, then threshold.
+fn draw_fires(seed: u64, n: u64, rate: f64) -> bool {
+    if rate >= 1.0 {
+        return true;
+    }
+    if rate <= 0.0 {
+        return false;
+    }
+    SplitMix64::new(seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_f64() < rate
+}
+
+/// Consume one draw of `name`: true when the site is armed and fires.
+/// Disarmed cost: one `Once` check + one atomic load.
+pub fn should_fire(name: &str) -> bool {
+    ENV_ONCE.call_once(init_from_env);
+    if !ARMED.load(Ordering::Acquire) {
+        return false;
+    }
+    let Some(st) = state_of(name) else {
+        return false;
+    };
+    let n = st.draws.fetch_add(1, Ordering::Relaxed);
+    draw_fires(st.spec.seed, n, st.spec.rate)
+}
+
+/// Panic when the site fires — used by panic sites so the injected fault
+/// exercises the real unwind/quarantine machinery.
+pub fn maybe_panic(name: &str) {
+    if should_fire(name) {
+        panic!("injected fault at site '{name}'");
+    }
+}
+
+/// Return [`SpmvError::FaultInjected`] when the site fires — used by
+/// conversion/build sites.
+pub fn maybe_fail(name: &str) -> Result<(), SpmvError> {
+    if should_fire(name) {
+        Err(SpmvError::FaultInjected { site: name.to_string() })
+    } else {
+        Ok(())
+    }
+}
+
+/// Sleep the site's `param` milliseconds when it fires — used by latency
+/// sites.
+pub fn maybe_delay(name: &str) {
+    ENV_ONCE.call_once(init_from_env);
+    if !ARMED.load(Ordering::Acquire) {
+        return;
+    }
+    let Some(st) = state_of(name) else {
+        return;
+    };
+    let n = st.draws.fetch_add(1, Ordering::Relaxed);
+    if draw_fires(st.spec.seed, n, st.spec.rate) {
+        std::thread::sleep(std::time::Duration::from_millis(st.spec.param));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The arm/disarm tests share mutable global state; serialize them.
+    /// They only ever arm `test.*` site names, which no production hook
+    /// consults, so concurrently running *other* lib tests are unaffected.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn parses_valid_specs() {
+        let specs = parse_spec("team.lane:0.5:42,service.latency:1.0:7:25").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(
+            specs[0],
+            FaultSpec { site: "team.lane".into(), rate: 0.5, seed: 42, param: 1 }
+        );
+        assert_eq!(
+            specs[1],
+            FaultSpec { site: "service.latency".into(), rate: 1.0, seed: 7, param: 25 }
+        );
+        assert!(parse_spec("").unwrap().is_empty());
+        assert!(parse_spec(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "team.lane",
+            "team.lane:0.5",
+            "team.lane:2.0:1",
+            "team.lane:-0.1:1",
+            "team.lane:x:1",
+            "team.lane:0.5:notanumber",
+            "team.lane:0.5:1:2:3",
+            "a:0.5:1,b:bad:2",
+        ] {
+            assert!(parse_spec(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_rate_bounded() {
+        // Exact endpoints.
+        for n in 0..64 {
+            assert!(draw_fires(9, n, 1.0));
+            assert!(!draw_fires(9, n, 0.0));
+        }
+        // Same (seed, n, rate) always answers the same.
+        for n in 0..64 {
+            assert_eq!(draw_fires(1234, n, 0.3), draw_fires(1234, n, 0.3));
+        }
+        // A 50% site fires roughly half the time.
+        let fired = (0..1000).filter(|&n| draw_fires(99, n, 0.5)).count();
+        assert!((350..=650).contains(&fired), "fired {fired}/1000");
+    }
+
+    #[test]
+    fn arm_fire_disarm_cycle() {
+        let _g = lock();
+        assert_eq!(arm("test.always:1.0:1,test.never:0.0:1").unwrap(), 2);
+        assert!(is_armed());
+        assert!(should_fire("test.always"));
+        assert!(!should_fire("test.never"));
+        assert!(!should_fire("test.unarmed"));
+        match maybe_fail("test.always") {
+            Err(SpmvError::FaultInjected { site }) => assert_eq!(site, "test.always"),
+            other => panic!("expected injected fault, got {other:?}"),
+        }
+        assert!(maybe_fail("test.never").is_ok());
+        let names = armed_sites();
+        assert_eq!(names, vec!["test.always".to_string(), "test.never".to_string()]);
+        disarm();
+        assert!(!is_armed());
+        assert!(!should_fire("test.always"));
+        assert!(maybe_fail("test.always").is_ok());
+    }
+
+    #[test]
+    fn maybe_panic_unwinds_when_armed() {
+        let _g = lock();
+        arm("test.boom:1.0:5").unwrap();
+        let hit = std::panic::catch_unwind(|| maybe_panic("test.boom"));
+        disarm();
+        assert!(hit.is_err());
+        // Disarmed: must not panic.
+        maybe_panic("test.boom");
+    }
+
+    #[test]
+    fn latency_site_sleeps_param_millis() {
+        let _g = lock();
+        arm("test.slow:1.0:3:20").unwrap();
+        let t = std::time::Instant::now();
+        maybe_delay("test.slow");
+        let elapsed = t.elapsed();
+        disarm();
+        assert!(elapsed >= std::time::Duration::from_millis(20), "{elapsed:?}");
+        // Disarmed latency site returns immediately (bounded well below the
+        // armed delay even on a noisy machine).
+        let t = std::time::Instant::now();
+        maybe_delay("test.slow");
+        assert!(t.elapsed() < std::time::Duration::from_millis(20));
+    }
+
+    #[test]
+    fn site_registry_is_stable() {
+        assert_eq!(site::ALL.len(), 6);
+        assert!(site::ALL.contains(&site::TEAM_LANE));
+        assert!(site::ALL.contains(&site::SERVICE_LATENCY));
+    }
+}

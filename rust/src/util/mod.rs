@@ -6,6 +6,8 @@
 //! framework needs:
 //!
 //! - [`prng`] — SplitMix64 / Xoshiro256** pseudo-random number generators,
+//! - [`fault`] — deterministic fault injection for chaos testing
+//!   (`SPC5_FAULT`),
 //! - [`stats`] — streaming summary statistics (mean/median/stddev/quantiles),
 //! - [`json`] — a small JSON value/writer used by the bench emitters,
 //! - [`minitest`] — a property-based testing mini-framework (proptest stand-in),
@@ -13,6 +15,7 @@
 //! - [`ulp`] — ULP-distance float comparison (the test suites' shared
 //!   tolerance vocabulary).
 
+pub mod fault;
 pub mod json;
 pub mod minitest;
 pub mod prng;

@@ -15,7 +15,7 @@ fn concurrent_clients_many_matrices() {
         corpus_by_name("wikipedia-20060925").unwrap().build(30_000),
         gen::poisson2d(20),
     ];
-    let ids: Vec<_> = mats.iter().map(|m| svc.register(m.clone())).collect();
+    let ids: Vec<_> = mats.iter().map(|m| svc.register(m.clone()).unwrap()).collect();
 
     // Expected results computed directly.
     let mut expected = Vec::new();
@@ -49,8 +49,8 @@ fn concurrent_clients_many_matrices() {
 #[test]
 fn selector_decisions_visible_and_sane() {
     let svc: SpmvService<f64> = SpmvService::new(1, 4);
-    let dense_id = svc.register(gen::dense(96, 1));
-    let scattered_id = svc.register(gen::random_uniform(800, 3.0, 2));
+    let dense_id = svc.register(gen::dense(96, 1)).unwrap();
+    let scattered_id = svc.register(gen::random_uniform(800, 3.0, 2)).unwrap();
     match svc.selection(dense_id).unwrap().choice {
         FormatChoice::Spc5 { r } => assert!(r >= 2),
         other => panic!("dense should use SPC5, got {other:?}"),
@@ -68,7 +68,7 @@ fn selector_decisions_visible_and_sane() {
 fn service_survives_error_storm() {
     let svc: SpmvService<f64> = SpmvService::new(2, 4);
     let m: Csr<f64> = gen::poisson2d(10);
-    let id = svc.register(m);
+    let id = svc.register(m).unwrap();
     // Interleave good and bad requests.
     let mut receivers = Vec::new();
     for k in 0..60 {

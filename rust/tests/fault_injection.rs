@@ -1,0 +1,243 @@
+//! Chaos suite: the serving core under deterministic fault injection
+//! (`util::fault`). Each test arms a seeded fault spec, drives the real
+//! service, and asserts the documented degradation: panics are quarantined
+//! and replayed, overload is shed with `Overloaded`, expired deadlines with
+//! `DeadlineExceeded`, and shutdown drains cleanly — never a crash, never a
+//! lost reply. Runs unchanged under the `SPC5_FORCE_ISA` × `SPC5_THREADS`
+//! CI matrix (the `exec.spmv` site covers the serial legs where `team.lane`
+//! cannot fire).
+
+use std::sync::atomic::Ordering;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use spc5::coordinator::{FormatMode, ServiceConfig, ServiceError, SpmvService};
+use spc5::matrix::{gen, Csr};
+use spc5::util::fault;
+
+/// The fault table is process-global; chaos tests must not overlap each
+/// other (or their arm/disarm would interleave).
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arms a spec for the guard's lifetime; disarms on drop even when the
+/// test's assertions panic, so one failure cannot poison the next test.
+struct Armed;
+
+impl Armed {
+    fn new(spec: &str) -> Self {
+        fault::arm(spec).expect("valid fault spec");
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn blocky(n: usize, seed: u64) -> Csr<f64> {
+    gen::Structured {
+        nrows: n,
+        ncols: n,
+        nnz_per_row: 10.0,
+        run_len: 4.0,
+        row_corr: 0.8,
+        ..Default::default()
+    }
+    .generate(seed)
+}
+
+#[test]
+fn lane_panic_quarantines_and_replays_bitwise() {
+    let _serial = chaos_lock();
+    // Rate-1.0 panic sites: the worker-lane hook (multi-lane teams) and the
+    // service's execution boundary (fires on every thread count).
+    let armed = Armed::new("team.lane:1.0:42,exec.spmv:1.0:43");
+    let svc: SpmvService<f64> = SpmvService::with_config(ServiceConfig {
+        workers: 2,
+        max_batch: 4,
+        threads: 4,
+        ..ServiceConfig::default()
+    });
+    let m = blocky(180, 7);
+    let id = svc.register(m.clone()).expect("registration degrades, never fails");
+    let x: Vec<f64> = (0..180).map(|i| ((i * 11) % 17) as f64 * 0.25 - 1.5).collect();
+    let mut want = vec![0.0; 180];
+    m.spmv(&x, &mut want);
+
+    // The primary attempt panics; the service must quarantine the operator,
+    // replay on the scalar-CSR fallback, and answer bitwise-correctly.
+    let got = svc.spmv(id, x.clone()).expect("replayed after quarantine");
+    assert_eq!(got, want, "fallback replay must be bitwise the scalar reference");
+    assert_eq!(svc.is_quarantined(id), Some(true));
+    let label = svc.op_label(id).unwrap();
+    assert!(label.contains("fallback"), "{label}");
+    let quarantined = svc.metrics().panics_quarantined.load(Ordering::Relaxed);
+    let rebuilds = svc.metrics().fallback_rebuilds.load(Ordering::Relaxed);
+    assert!(quarantined >= 1, "panics_quarantined = {quarantined}");
+    assert!(rebuilds >= 1, "fallback_rebuilds = {rebuilds}");
+    let snap = svc.metrics_json().to_string();
+    assert!(snap.contains("\"panics_quarantined\":"), "{snap}");
+
+    // Disarmed, a fresh matrix is untouched by the quarantine of the first:
+    // healthy operator, healthy counters.
+    drop(armed);
+    let healthy = blocky(120, 9);
+    let idh = svc.register(healthy.clone()).unwrap();
+    assert_eq!(svc.is_quarantined(idh), Some(false));
+    let xh: Vec<f64> = (0..120).map(|i| (i % 5) as f64).collect();
+    let mut wanth = vec![0.0; 120];
+    healthy.spmv(&xh, &mut wanth);
+    let goth = svc.spmv(idh, xh).unwrap();
+    spc5::scalar::assert_allclose(&goth, &wanth, 1e-12, 1e-12);
+    let q2 = svc.metrics().panics_quarantined.load(Ordering::Relaxed);
+    assert_eq!(q2, quarantined, "healthy traffic must not quarantine");
+    // The quarantined matrix keeps serving (now on the fallback, cleanly).
+    let again = svc.spmv(id, x).unwrap();
+    assert_eq!(again, want);
+}
+
+#[test]
+fn overload_sheds_with_typed_backpressure() {
+    let _serial = chaos_lock();
+    // Every dispatch stalls 25 ms: the bounded queue must fill and shed.
+    let _armed = Armed::new("service.latency:1.0:7:25");
+    let svc: SpmvService<f64> = SpmvService::with_config(ServiceConfig {
+        workers: 1,
+        max_batch: 2,
+        threads: 1,
+        queue_cap: 4,
+        ..ServiceConfig::default()
+    });
+    let m = blocky(60, 3);
+    let id = svc.register(m).unwrap();
+    let rxs: Vec<_> = (0..40).map(|_| svc.submit(id, vec![1.0; 60])).collect();
+    let (mut served, mut shed) = (0u64, 0u64);
+    for rx in rxs {
+        match rx.recv().expect("service alive") {
+            Ok(y) => {
+                assert_eq!(y.len(), 60);
+                served += 1;
+            }
+            Err(ServiceError::Overloaded { queued, cap }) => {
+                assert!(queued >= cap, "queued {queued} < cap {cap}");
+                assert_eq!(cap, 4);
+                shed += 1;
+            }
+            Err(other) => panic!("unexpected error under overload: {other}"),
+        }
+    }
+    assert!(served >= 1, "nothing served");
+    assert!(shed >= 1, "nothing shed: cap never engaged");
+    assert_eq!(served + shed, 40);
+    let rejected = svc.metrics().rejected.load(Ordering::Relaxed);
+    assert_eq!(rejected, shed, "requests_rejected must match the Overloaded replies");
+}
+
+#[test]
+fn expired_deadlines_are_shed_before_dispatch() {
+    let _serial = chaos_lock();
+    // 30 ms dispatch stall against a 1 ms deadline: every request expires
+    // in the queue and must be answered without paying for execution.
+    let _armed = Armed::new("service.latency:1.0:9:30");
+    let svc: SpmvService<f64> = SpmvService::with_config(ServiceConfig {
+        workers: 1,
+        max_batch: 4,
+        threads: 1,
+        deadline: Some(Duration::from_millis(1)),
+        ..ServiceConfig::default()
+    });
+    let m = blocky(50, 5);
+    let id = svc.register(m).unwrap();
+    let rxs: Vec<_> = (0..8).map(|_| svc.submit(id, vec![1.0; 50])).collect();
+    for rx in rxs {
+        assert_eq!(rx.recv().unwrap(), Err(ServiceError::DeadlineExceeded));
+    }
+    let expired = svc.metrics().expired.load(Ordering::Relaxed);
+    assert_eq!(expired, 8);
+    let snap = svc.metrics_json().to_string();
+    assert!(snap.contains("\"requests_expired\":8"), "{snap}");
+}
+
+#[test]
+fn conversion_faults_degrade_registration_to_fallback() {
+    let _serial = chaos_lock();
+    // Every conversion attempt fails: registration must retry, then degrade
+    // to the scalar fallback — and still serve correct results.
+    let _armed = Armed::new("convert.spc5:1.0:11,convert.sell:1.0:12,convert.plan:1.0:13");
+    let svc: SpmvService<f64> = SpmvService::with_format(
+        1,
+        4,
+        spc5::coordinator::Backend::Native,
+        spc5::coordinator::PlanMode::Auto,
+        1,
+        FormatMode::Spc5,
+    );
+    let m = blocky(90, 13);
+    let id = svc.register(m.clone()).expect("degrades to fallback, never fails");
+    let label = svc.op_label(id).unwrap();
+    assert!(label.contains("fallback"), "{label}");
+    // Build-time degradation is not a quarantine: nothing panicked.
+    assert_eq!(svc.is_quarantined(id), Some(false));
+    let rebuilds = svc.metrics().fallback_rebuilds.load(Ordering::Relaxed);
+    assert!(rebuilds >= 1);
+    let x: Vec<f64> = (0..90).map(|i| (i % 7) as f64 * 0.5).collect();
+    let mut want = vec![0.0; 90];
+    m.spmv(&x, &mut want);
+    assert_eq!(svc.spmv(id, x).unwrap(), want);
+}
+
+#[test]
+fn malformed_matrix_is_a_typed_rejection() {
+    let _serial = chaos_lock();
+    // No faults armed: hostile input alone must never panic the service.
+    let svc: SpmvService<f64> = SpmvService::new(1, 4);
+    let bad: Csr<f64> = Csr {
+        nrows: 2,
+        ncols: 2,
+        row_ptr: vec![0, 1, 3],
+        col_idx: vec![0, 1],
+        vals: vec![1.0, 2.0],
+    };
+    match svc.register(bad) {
+        Err(ServiceError::Invalid(e)) => {
+            assert!(e.to_string().contains("invalid matrix"), "{e}");
+        }
+        other => panic!("expected Invalid, got {other:?}"),
+    }
+    // The service stays serviceable after the rejection.
+    let m = blocky(40, 17);
+    let id = svc.register(m).unwrap();
+    assert!(svc.spmv(id, vec![1.0; 40]).is_ok());
+}
+
+#[test]
+fn shutdown_drains_cleanly_under_armed_faults() {
+    let _serial = chaos_lock();
+    // Slow dispatch plus a 50% execution-panic rate while shutting down:
+    // every queued request must still get a reply (drain, not drop).
+    let _armed = Armed::new("service.latency:1.0:21:10,exec.spmv:0.5:22");
+    let svc: SpmvService<f64> = SpmvService::with_config(ServiceConfig {
+        workers: 2,
+        max_batch: 4,
+        threads: 2,
+        ..ServiceConfig::default()
+    });
+    let m = blocky(70, 19);
+    let id = svc.register(m.clone()).unwrap();
+    let x = vec![1.0; 70];
+    let mut want = vec![0.0; 70];
+    m.spmv(&x, &mut want);
+    let rxs: Vec<_> = (0..12).map(|_| svc.submit(id, vec![1.0; 70])).collect();
+    drop(svc); // must join without deadlock, draining the queue
+    for rx in rxs {
+        // Quarantine + replay turns every injected panic into a correct
+        // (bitwise-scalar once quarantined) answer during the drain.
+        let y = rx.recv().expect("reply delivered before shutdown completed").unwrap();
+        spc5::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+    }
+}
