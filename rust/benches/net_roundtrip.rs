@@ -1,0 +1,154 @@
+//! **Wire round-trip cost**: what the TCP front-end adds on top of the
+//! in-process service path, at k = 1 (single spmv frames) and k = 8 (one
+//! spmm-batch frame for 8 right-hand sides). Loopback TCP, one client.
+//!
+//! Reported per path and k:
+//! - mean RTT per request (µs) — for the wire path this includes encode,
+//!   checksum, socket hop, decode and the reply;
+//! - served requests/s (single connection, synchronous client).
+//!
+//! Hard gate: the wire path must stay correct (bitwise-equal replies) —
+//! overhead is *reported*, not asserted, because loopback latency is
+//! machine-dependent. The JSON feeds `BENCH_net.json` via
+//! `tools/bench_compare.py` (see EXPERIMENTS.md §Perf trajectory).
+//!
+//! Run: `cargo bench --bench net_roundtrip`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use spc5::bench::{table::fmt1, TextTable};
+use spc5::coordinator::SpmvService;
+use spc5::matrix::gen;
+use spc5::net::{Client, ClientConfig, Server, ServerConfig};
+use spc5::util::json::Json;
+use spc5::util::timing::Timer;
+
+const N: usize = 2048;
+const ITERS: usize = 300;
+const KS: [usize; 2] = [1, 8];
+
+fn main() {
+    println!("== Wire round-trip: TCP front-end vs in-process service path ==\n");
+    let csr = gen::Structured {
+        nrows: N,
+        ncols: N,
+        nnz_per_row: 12.0,
+        run_len: 4.0,
+        row_corr: 0.8,
+        ..Default::default()
+    }
+    .generate(29);
+    println!("matrix: {}x{}, {} nnz; {ITERS} iters per cell\n", N, N, csr.nnz());
+
+    let svc = Arc::new(SpmvService::<f64>::new(2, 16));
+    let server = Server::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig { io_timeout: Duration::from_secs(5), ..ServerConfig::default() },
+    )
+    .expect("bind loopback");
+    let mut client = Client::with_config(
+        &server.local_addr().to_string(),
+        ClientConfig { io_timeout: Duration::from_secs(5), ..ClientConfig::default() },
+    );
+
+    let wire_id = client.register(&csr).expect("wire register");
+    let local_id = svc.register(csr).expect("in-process register");
+
+    let xs: Vec<Vec<f64>> = (0..8)
+        .map(|v| (0..N).map(|i| 1.0 + ((i * (v + 1)) % 9) as f64 * 0.125).collect())
+        .collect();
+
+    let mut table =
+        TextTable::new(&["path", "k", "RTT/req (us)", "req/s", "wire overhead (us)"]);
+    let mut results = Json::Arr(vec![]);
+    let mut mismatch = false;
+    let mut overhead_us = Vec::new();
+    for k in KS {
+        let mut cell = |wire: bool| -> f64 {
+            let t = Timer::start();
+            let mut reqs = 0usize;
+            for it in 0..ITERS {
+                if k == 1 {
+                    let x = &xs[it % 8];
+                    let y = if wire {
+                        client.spmv(wire_id, x).expect("wire spmv")
+                    } else {
+                        svc.spmv(local_id, x.clone()).expect("in-process spmv")
+                    };
+                    mismatch |= y.len() != N;
+                    reqs += 1;
+                } else {
+                    let ys = if wire {
+                        client.spmm_batch(wire_id, &xs).expect("wire batch")
+                    } else {
+                        let rxs = svc.submit_batch(local_id, xs.clone(), None);
+                        rxs.into_iter()
+                            .map(|rx| rx.recv().expect("reply").expect("in-process batch"))
+                            .collect()
+                    };
+                    mismatch |= ys.len() != k;
+                    reqs += k;
+                }
+            }
+            let secs = t.elapsed_secs();
+            let rtt_us = secs * 1e6 / reqs as f64;
+            let rps = reqs as f64 / secs;
+            let mut o = Json::obj();
+            o.set("path", if wire { "wire" } else { "in_process" })
+                .set("k", k)
+                .set("rtt_us", rtt_us)
+                .set("req_per_s", rps);
+            results.push(o);
+            table.row(vec![
+                (if wire { "wire" } else { "in-process" }).to_string(),
+                format!("{k}"),
+                fmt1(rtt_us),
+                format!("{rps:.0}"),
+                String::new(),
+            ]);
+            rtt_us
+        };
+        let in_proc_us = cell(false);
+        let wire_us = cell(true);
+        let overhead = wire_us - in_proc_us;
+        overhead_us.push(overhead);
+        table.row(vec![
+            "overhead".to_string(),
+            format!("{k}"),
+            String::new(),
+            String::new(),
+            fmt1(overhead),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Correctness gate: a random wire reply must equal the in-process one.
+    let x = &xs[3];
+    let via_wire = client.spmv(wire_id, x).expect("wire spmv");
+    let in_proc = svc.spmv(local_id, x.clone()).expect("in-process spmv");
+    let bitwise = via_wire == in_proc;
+    println!(
+        "check: wire replies bitwise-equal in-process -> {}",
+        if bitwise && !mismatch { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "note: k=8 batches amortize the per-frame cost over 8 RHS; overhead/req should\n\
+         shrink accordingly (k=1: {:.1} us, k=8: {:.1} us).",
+        overhead_us[0], overhead_us[1]
+    );
+
+    let mut json = Json::obj();
+    json.set("bench", "net_roundtrip")
+        .set("schema_version", 1u64)
+        .set("n", N)
+        .set("iters", ITERS)
+        .set("results", results);
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/net_roundtrip.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/net_roundtrip.json");
+
+    server.shutdown();
+    assert!(bitwise && !mismatch, "the wire path must not change results");
+}

@@ -70,6 +70,19 @@ impl<K: Eq + Hash + Copy, P> Batcher<K, P> {
         self.len += 1;
     }
 
+    /// Push every payload of one key under a single queue-entry lookup —
+    /// the admission path of a wire `spmm-batch` frame, which is admitted
+    /// all-or-nothing so its right-hand sides coalesce into fused batches.
+    pub fn push_all<I: IntoIterator<Item = P>>(&mut self, key: K, payloads: I) {
+        let q = self.queues.entry(key).or_default();
+        if q.is_empty() && !self.order.contains(&key) {
+            self.order.push(key);
+        }
+        let before = q.len();
+        q.extend(payloads);
+        self.len += q.len() - before;
+    }
+
     /// Remove and return the next batch (the oldest key), up to `max_batch`
     /// items. Returns None when empty.
     pub fn pop_batch(&mut self) -> Option<Batch<K, P>> {
@@ -159,6 +172,23 @@ mod tests {
         let unbounded: Batcher<u32, i32> = Batcher::new(4);
         assert_eq!(unbounded.cap(), usize::MAX);
         assert!(!unbounded.is_full());
+    }
+
+    #[test]
+    fn push_all_preserves_order_and_length() {
+        let mut b: Batcher<u32, i32> = Batcher::new(8);
+        b.push(1, 0);
+        b.push_all(2, [10, 11, 12]);
+        b.push_all(1, [1, 2]);
+        assert_eq!(b.len(), 6);
+        let first = b.pop_batch().unwrap();
+        assert_eq!((first.key, first.items), (1, vec![0, 1, 2]));
+        let second = b.pop_batch().unwrap();
+        assert_eq!((second.key, second.items), (2, vec![10, 11, 12]));
+        assert!(b.is_empty());
+        // Empty push_all is harmless and does not register the key.
+        b.push_all(9, std::iter::empty());
+        assert!(b.pop_batch().is_none());
     }
 
     #[test]

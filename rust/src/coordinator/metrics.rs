@@ -56,6 +56,18 @@ pub struct Metrics {
     pub panics_quarantined: AtomicU64,
     /// Operators rebuilt as the scalar-CSR safe fallback.
     pub fallback_rebuilds: AtomicU64,
+    /// Wire connections currently open (gauge: the server increments on
+    /// accept, decrements on close).
+    pub connections_open: AtomicU64,
+    /// Wire connections refused at accept (over the hard connection cap, or
+    /// an injected `net.accept` fault).
+    pub connections_rejected: AtomicU64,
+    /// Wire frames rejected as malformed (bad magic/version, oversized
+    /// length, failed checksum, garbage opcode, undecodable payload).
+    pub frames_malformed: AtomicU64,
+    /// Duration of the last graceful drain, in milliseconds (0 until a
+    /// drain has run).
+    pub drain_duration_ms: AtomicU64,
     /// Matrices registered per resolved execution format.
     selected: [AtomicU64; 4],
     /// Requests completed per execution format.
@@ -75,6 +87,10 @@ impl Metrics {
             expired: AtomicU64::new(0),
             panics_quarantined: AtomicU64::new(0),
             fallback_rebuilds: AtomicU64::new(0),
+            connections_open: AtomicU64::new(0),
+            connections_rejected: AtomicU64::new(0),
+            frames_malformed: AtomicU64::new(0),
+            drain_duration_ms: AtomicU64::new(0),
             selected: [
                 AtomicU64::new(0),
                 AtomicU64::new(0),
@@ -132,6 +148,36 @@ impl Metrics {
         self.fallback_rebuilds.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One wire connection accepted (gauge up).
+    pub fn record_conn_open(&self) {
+        self.connections_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One wire connection closed (gauge down; saturates at 0 so a stray
+    /// double-close cannot wrap the gauge).
+    pub fn record_conn_close(&self) {
+        let _ = self.connections_open.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| v.checked_sub(1),
+        );
+    }
+
+    /// One wire connection refused at accept.
+    pub fn record_conn_rejected(&self) {
+        self.connections_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One wire frame rejected as malformed.
+    pub fn record_frame_malformed(&self) {
+        self.frames_malformed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the duration of a completed graceful drain.
+    pub fn set_drain_duration_ms(&self, ms: u64) {
+        self.drain_duration_ms.store(ms, Ordering::Relaxed);
+    }
+
     /// One matrix registered with `kind` as its resolved execution format.
     pub fn record_selection(&self, kind: FormatKind) {
         self.selected[kind.idx()].fetch_add(1, Ordering::Relaxed);
@@ -170,6 +216,10 @@ impl Metrics {
             .set("requests_expired", self.expired.load(Ordering::Relaxed))
             .set("panics_quarantined", self.panics_quarantined.load(Ordering::Relaxed))
             .set("fallback_rebuilds", self.fallback_rebuilds.load(Ordering::Relaxed))
+            .set("connections_open", self.connections_open.load(Ordering::Relaxed))
+            .set("connections_rejected", self.connections_rejected.load(Ordering::Relaxed))
+            .set("frames_malformed", self.frames_malformed.load(Ordering::Relaxed))
+            .set("drain_duration_ms", self.drain_duration_ms.load(Ordering::Relaxed))
             .set("flops", self.flops.load(Ordering::Relaxed));
         let mut sel = Json::obj();
         let mut req = Json::obj();
@@ -247,6 +297,32 @@ mod tests {
         assert!(s.contains("\"requests_expired\":1"), "{s}");
         assert!(s.contains("\"panics_quarantined\":1"), "{s}");
         assert!(s.contains("\"fallback_rebuilds\":1"), "{s}");
+    }
+
+    #[test]
+    fn wire_counters_accumulate_and_snapshot() {
+        let m = Metrics::new();
+        m.record_conn_open();
+        m.record_conn_open();
+        m.record_conn_close();
+        m.record_conn_rejected();
+        m.record_frame_malformed();
+        m.record_frame_malformed();
+        m.record_frame_malformed();
+        m.set_drain_duration_ms(42);
+        assert_eq!(m.connections_open.load(Ordering::Relaxed), 1);
+        assert_eq!(m.connections_rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(m.frames_malformed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.drain_duration_ms.load(Ordering::Relaxed), 42);
+        // The gauge saturates at zero instead of wrapping.
+        m.record_conn_close();
+        m.record_conn_close();
+        assert_eq!(m.connections_open.load(Ordering::Relaxed), 0);
+        let s = m.snapshot().to_string();
+        assert!(s.contains("\"connections_open\":0"), "{s}");
+        assert!(s.contains("\"connections_rejected\":1"), "{s}");
+        assert!(s.contains("\"frames_malformed\":3"), "{s}");
+        assert!(s.contains("\"drain_duration_ms\":42"), "{s}");
     }
 
     #[test]

@@ -560,6 +560,23 @@ impl<T: Scalar> SpmvService<T> {
         x: Vec<T>,
         deadline: Option<Duration>,
     ) -> mpsc::Receiver<Result<Vec<T>, ServiceError>> {
+        // `checked_add` so an effectively-infinite deadline saturates to
+        // "none" instead of panicking.
+        let deadline = deadline.and_then(|d| Instant::now().checked_add(d));
+        self.submit_with_deadline_at(id, x, deadline)
+    }
+
+    /// [`submit_with_deadline`](Self::submit_with_deadline) with an
+    /// *absolute* expiry. This is the wire front-end's entry point: the
+    /// server stamps the deadline from the instant the frame header arrived,
+    /// so time a request spends in the socket read path and the decode stage
+    /// counts against its budget — not just time queued after dispatch.
+    pub fn submit_with_deadline_at(
+        &self,
+        id: MatrixId,
+        x: Vec<T>,
+        deadline: Option<Instant>,
+    ) -> mpsc::Receiver<Result<Vec<T>, ServiceError>> {
         let (tx, rx) = mpsc::channel();
         self.shared.metrics.record_request();
         // Validate eagerly so the error is immediate.
@@ -579,9 +596,6 @@ impl<T: Scalar> SpmvService<T> {
             let _ = tx.send(Err(ServiceError::DimMismatch { got: x.len(), want }));
             return rx;
         }
-        // `checked_add` so an effectively-infinite deadline saturates to
-        // "none" instead of panicking.
-        let deadline = deadline.and_then(|d| Instant::now().checked_add(d));
         {
             let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             if q.is_full() {
@@ -595,6 +609,82 @@ impl<T: Scalar> SpmvService<T> {
         }
         self.shared.queue_cv.notify_one();
         rx
+    }
+
+    /// Submit `k` right-hand sides of one matrix atomically: either every
+    /// vector is admitted under a single queue lock — so they coalesce into
+    /// fused SpMM batches — or the whole group is rejected with
+    /// [`ServiceError::Overloaded`] / a validation error. Admission uses the
+    /// same backpressure signal as singles (a non-full queue admits the
+    /// group, overshooting the cap by at most `k - 1`).
+    pub fn submit_batch(
+        &self,
+        id: MatrixId,
+        xs: Vec<Vec<T>>,
+        deadline: Option<Instant>,
+    ) -> Vec<mpsc::Receiver<Result<Vec<T>, ServiceError>>> {
+        let mut out = Vec::with_capacity(xs.len());
+        let fail = |out: &mut Vec<mpsc::Receiver<Result<Vec<T>, ServiceError>>>,
+                    n: usize,
+                    err: ServiceError| {
+            for _ in out.len()..n {
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Err(err.clone()));
+                out.push(rx);
+            }
+        };
+        let n = xs.len();
+        for _ in 0..n {
+            self.shared.metrics.record_request();
+        }
+        let want = {
+            let map = self.shared.matrices.read().unwrap_or_else(|e| e.into_inner());
+            match map.get(&id) {
+                None => {
+                    for _ in 0..n {
+                        self.shared.metrics.record_error();
+                    }
+                    fail(&mut out, n, ServiceError::UnknownMatrix(id));
+                    return out;
+                }
+                Some(s) => s.csr.ncols,
+            }
+        };
+        if let Some(bad) = xs.iter().find(|x| x.len() != want) {
+            let got = bad.len();
+            for _ in 0..n {
+                self.shared.metrics.record_error();
+            }
+            fail(&mut out, n, ServiceError::DimMismatch { got, want });
+            return out;
+        }
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            if q.is_full() {
+                let (queued, cap) = (q.len(), q.cap());
+                drop(q);
+                for _ in 0..n {
+                    self.shared.metrics.record_rejected();
+                }
+                fail(&mut out, n, ServiceError::Overloaded { queued, cap });
+                return out;
+            }
+            q.push_all(
+                id,
+                xs.into_iter().map(|x| {
+                    let (tx, rx) = mpsc::channel();
+                    out.push(rx);
+                    Request { x, enqueued: Timer::start(), deadline, reply: tx }
+                }),
+            );
+        }
+        self.shared.queue_cv.notify_one();
+        out
+    }
+
+    /// The service's default per-request deadline (`ServiceConfig::deadline`).
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.shared.deadline
     }
 
     /// Synchronous SpMV (submit + wait).
@@ -864,6 +954,54 @@ mod tests {
         assert!(svc.metrics().expired.load(Ordering::Relaxed) >= 4);
         let snap = svc.metrics_json().to_string();
         assert!(snap.contains("\"requests_expired\":"), "{snap}");
+    }
+
+    #[test]
+    fn absolute_deadlines_count_queue_time_before_submission() {
+        // Regression (wire deadline accounting): a request whose budget was
+        // consumed *before* it reached `submit` — e.g. in the socket read
+        // path — must be shed, because the deadline is anchored at frame
+        // receipt, not at dispatch. An already-past absolute instant models
+        // exactly that.
+        let (svc, id, _) = service();
+        let frame_start = Instant::now() - Duration::from_millis(50);
+        let expired = frame_start.checked_add(Duration::from_millis(1));
+        assert!(expired.is_some_and(|d| d <= Instant::now()));
+        let rx = svc.submit_with_deadline_at(id, vec![1.0; 120], expired);
+        assert_eq!(rx.recv().unwrap(), Err(ServiceError::DeadlineExceeded));
+        // The same 1 ms budget anchored at the present is comfortably met
+        // only when generous; use a generous budget to avoid flakiness.
+        let fresh = Instant::now().checked_add(Duration::from_secs(30));
+        let rx = svc.submit_with_deadline_at(id, vec![1.0; 120], fresh);
+        assert!(rx.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn submit_batch_is_atomic_and_fused() {
+        let (svc, id, m) = service();
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|k| (0..120).map(|i| ((i * (k + 2)) % 11) as f64 * 0.5).collect())
+            .collect();
+        let rxs = svc.submit_batch(id, xs.clone(), None);
+        assert_eq!(rxs.len(), 6);
+        for (x, rx) in xs.iter().zip(rxs) {
+            let mut want = vec![0.0; 120];
+            m.spmv(x, &mut want);
+            let y = rx.recv().unwrap().unwrap();
+            crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-13);
+        }
+        // Validation failures reject the whole group, typed.
+        let mut bad = xs.clone();
+        bad[3] = vec![0.0; 7];
+        for rx in svc.submit_batch(id, bad, None) {
+            assert_eq!(
+                rx.recv().unwrap(),
+                Err(ServiceError::DimMismatch { got: 7, want: 120 })
+            );
+        }
+        for rx in svc.submit_batch(MatrixId(777), xs, None) {
+            assert_eq!(rx.recv().unwrap(), Err(ServiceError::UnknownMatrix(MatrixId(777))));
+        }
     }
 
     #[test]

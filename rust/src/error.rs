@@ -29,6 +29,10 @@ pub enum SpmvError {
     /// (`SPC5_FAULT`). Distinguishable from real failures so chaos tests
     /// can assert the exact propagation path.
     FaultInjected { site: String },
+    /// A malformed wire frame (`net::proto`): bad magic/version, an
+    /// oversized or truncated payload, a garbage opcode, a failed checksum.
+    /// Always a typed rejection at the trust boundary, never a panic.
+    Frame(String),
 }
 
 impl std::fmt::Display for SpmvError {
@@ -39,6 +43,7 @@ impl std::fmt::Display for SpmvError {
             SpmvError::Unsupported(what) => write!(f, "unsupported: {what}"),
             SpmvError::InvalidMatrix(msg) => write!(f, "invalid matrix: {msg}"),
             SpmvError::FaultInjected { site } => write!(f, "injected fault at site '{site}'"),
+            SpmvError::Frame(msg) => write!(f, "malformed frame: {msg}"),
         }
     }
 }
@@ -71,6 +76,10 @@ mod tests {
             (
                 SpmvError::FaultInjected { site: "convert.spc5".into() },
                 "injected fault at site 'convert.spc5'",
+            ),
+            (
+                SpmvError::Frame("checksum mismatch".into()),
+                "malformed frame: checksum mismatch",
             ),
         ];
         for (err, want) in cases {

@@ -41,7 +41,12 @@
 //!   β(r,VS) blocks degenerate to singletons,
 //! - a parallel runtime ([`parallel`]), iterative solvers ([`solver`]),
 //! - a PJRT runtime that executes the JAX/Pallas AOT artifacts ([`runtime`]),
-//! - and an SpMV coordinator service ([`coordinator`]).
+//! - an SpMV coordinator service ([`coordinator`]),
+//! - and a hardened wire front-end ([`net`]): a zero-dependency length-
+//!   prefixed TCP protocol with checksummed frames, a capped acceptor +
+//!   handler pool with per-connection deadlines and graceful drain, and a
+//!   reconnecting client with seeded-jitter retries — all driven end-to-end
+//!   by the wire-level chaos sites of [`util::fault`].
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -58,6 +63,7 @@ pub mod parallel;
 pub mod ops;
 pub mod solver;
 pub mod coordinator;
+pub mod net;
 pub mod runtime;
 pub mod cli;
 pub mod bench;

@@ -5,7 +5,8 @@
 //!   convert  Matrix Market -> SPC5 -> Matrix Market round trip
 //!   spmv     native SpMV timing on a corpus or .mtx matrix
 //!   solve    Poisson CG / BiCGSTAB demo solve (native kernels)
-//!   serve    coordinator service demo workload
+//!   serve    coordinator service: demo workload, or TCP server (--listen)
+//!   client   wire client: smoke-test / metrics / health / drain a server
 //!   pjrt     execute the AOT JAX/Pallas artifacts through PJRT
 //!   corpus   list the Table-1 corpus and its recipes
 //!   bench    how to regenerate every paper table/figure
@@ -19,6 +20,7 @@ use spc5::coordinator::{
 };
 use spc5::kernels::{isa, native, SimIsa};
 use spc5::matrix::{corpus_by_name_or_fail, corpus_entries, gen, mm_io, Csr};
+use spc5::net::{Client, ClientConfig, ClientError, Server, ServerConfig};
 use spc5::parallel::ParallelSpc5;
 use spc5::spc5::{csr_to_spc5, FormatStats};
 use spc5::util::timing::{gflops, spmv_flops, Timer};
@@ -42,15 +44,16 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         Some("spmv") => cmd_spmv(&mut args),
         Some("solve") => cmd_solve(&mut args),
         Some("serve") => cmd_serve(&mut args),
+        Some("client") => cmd_client(&mut args),
         Some("pjrt") => cmd_pjrt(&mut args),
         Some("corpus") => cmd_corpus(&mut args),
         Some("bench") => cmd_bench(&mut args),
         Some(other) => Err(format!(
-            "unknown command '{other}' (try: info, convert, spmv, solve, serve, pjrt, corpus, bench)"
+            "unknown command '{other}' (try: info, convert, spmv, solve, serve, client, pjrt, corpus, bench)"
         )),
         None => {
             println!("spc5 — SPC5 SpMV framework (paper reproduction)");
-            println!("usage: spc5 <info|convert|spmv|solve|serve|pjrt|corpus|bench> [options]");
+            println!("usage: spc5 <info|convert|spmv|solve|serve|client|pjrt|corpus|bench> [options]");
             Ok(())
         }
     }
@@ -227,6 +230,12 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
     let workers = args.opt_num::<usize>("workers", 2)?;
     let threads = args.opt_num::<usize>("threads", workers)?;
     let requests = args.opt_num::<usize>("requests", 200)?;
+    // Wire front-end (--listen switches from the demo workload to a real
+    // TCP server; see DESIGN.md §Wire front-end).
+    let listen = args.opt_maybe("listen");
+    let max_conns = args.opt_num::<usize>("max-conns", 64)?;
+    let io_timeout_ms = args.opt_num::<u64>("io-timeout-ms", 2000)?;
+    let idle_timeout_ms = args.opt_num::<u64>("idle-timeout-ms", 30_000)?;
     // Admission control: --queue-cap 0 means unbounded, --deadline-ms 0
     // means no deadline (DESIGN.md §Failure model).
     let queue_cap = match args.opt_num::<usize>("queue-cap", 1024)? {
@@ -289,6 +298,32 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
         deadline,
         ..ServiceConfig::default()
     });
+    if let Some(addr) = listen {
+        let svc = std::sync::Arc::new(svc);
+        let server = Server::start(
+            std::sync::Arc::clone(&svc),
+            &addr,
+            ServerConfig {
+                max_conns,
+                io_timeout: std::time::Duration::from_millis(io_timeout_ms.max(1)),
+                idle_timeout: std::time::Duration::from_millis(idle_timeout_ms.max(1)),
+                ..ServerConfig::default()
+            },
+        )
+        .map_err(|e| format!("bind {addr}: {e}"))?;
+        println!(
+            "serving on {} (cap {max_conns} conns, io timeout {io_timeout_ms}ms, idle {idle_timeout_ms}ms)",
+            server.local_addr()
+        );
+        println!("drain: SIGTERM or `spc5 client --addr {} --op drain`", server.local_addr());
+        // Foreground until a drain request arrives and every connection
+        // has closed; every in-flight request keeps its reply.
+        server.run_until_drained();
+        server.shutdown();
+        println!("drained; final metrics:");
+        println!("{}", svc.metrics_json().to_pretty());
+        return Ok(());
+    }
     let m = corpus_by_name_or_fail("nd6k")?.build(100_000);
     let ncols = m.ncols;
     let id = svc.register(m).map_err(|e| e.to_string())?;
@@ -340,6 +375,137 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
     }
     println!("done in {:.3}s: {served} served, {shed} shed", t.elapsed_secs());
     println!("{}", svc.metrics_json().to_pretty());
+    Ok(())
+}
+
+fn cmd_client(args: &mut Args) -> Result<(), String> {
+    let addr = args.opt_maybe("addr").ok_or("--addr <host:port> required")?;
+    let op = args.opt("op", "smoke");
+    let n = args.opt_num::<usize>("n", 192)?;
+    let requests = args.opt_num::<usize>("requests", 30)?;
+    let k = args.opt_num::<usize>("k", 4)?;
+    let retries = args.opt_num::<u32>("retries", 4)?;
+    let deadline_ms = args.opt_num::<u32>("deadline-ms", 0)?;
+    let seed = args.opt_num::<u64>("seed", 42)?;
+    args.finish()?;
+    let mut client = Client::with_config(
+        &addr,
+        ClientConfig { max_retries: retries, seed, ..ClientConfig::default() },
+    );
+    match op.as_str() {
+        "metrics" => {
+            println!("{}", client.metrics().map_err(|e| e.to_string())?);
+            Ok(())
+        }
+        "health" => {
+            let draining = client.health().map_err(|e| e.to_string())?;
+            println!("server up, draining: {draining}");
+            Ok(())
+        }
+        "drain" => {
+            println!("{}", client.drain().map_err(|e| e.to_string())?);
+            Ok(())
+        }
+        "smoke" => client_smoke(&mut client, n, requests, k, deadline_ms, seed),
+        other => Err(format!("unknown op '{other}' (smoke|metrics|health|drain)")),
+    }
+}
+
+/// End-to-end smoke: register a generated matrix over the wire, drive a mix
+/// of spmv and spmm-batch requests, and verify every reply against a local
+/// CSR reference. Exits nonzero on any mismatch.
+fn client_smoke(
+    client: &mut Client,
+    n: usize,
+    requests: usize,
+    k: usize,
+    deadline_ms: u32,
+    seed: u64,
+) -> Result<(), String> {
+    let m: Csr<f64> = gen::random_uniform(n, 6.0, seed);
+    // `register` is not idempotent, so the client does not auto-retry it;
+    // the smoke test owns a small bounded loop instead (a duplicate
+    // registration on a retried lost reply is harmless here).
+    let mut id = None;
+    for attempt in 0..10 {
+        match client.register(&m) {
+            Ok(got) => {
+                id = Some(got);
+                break;
+            }
+            // An in-transit-corrupted register frame (armed net.frame site)
+            // is refused typed and is safe to retry; other service errors
+            // (e.g. an invalid matrix) are final.
+            Err(e @ ClientError::Service(_))
+                if !matches!(e, ClientError::Service(ServiceError::Invalid(_))) =>
+            {
+                return Err(e.to_string())
+            }
+            Err(e) if attempt == 9 => return Err(e.to_string()),
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    }
+    let id = id.expect("loop returned or set id");
+    println!("registered {n}x{n} ({} nnz) as {id:?}", m.nnz());
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    let mut mismatches = 0usize;
+    let mut verify = |x: &[f64], y: &[f64]| {
+        let mut want = vec![0.0; m.nrows];
+        m.spmv(x, &mut want);
+        let ok = y.len() == want.len()
+            && y.iter().zip(&want).all(|(a, b)| spc5::scalar::approx_eq(*a, *b, 1e-12, 1e-13));
+        if !ok {
+            mismatches += 1;
+        }
+    };
+    for req in 0..requests {
+        let x: Vec<f64> = (0..n).map(|i| 1.0 + ((i + req) % 13) as f64 * 0.25).collect();
+        // Every third request joins a batch frame; the rest go as singles.
+        if req % 3 == 0 && k > 1 {
+            xs.push(x);
+            if xs.len() == k {
+                match client.spmm_batch(id, &xs) {
+                    Ok(ys) => {
+                        for (xi, yi) in xs.iter().zip(&ys) {
+                            verify(xi, yi);
+                        }
+                        served += xs.len();
+                    }
+                    Err(ClientError::Service(_)) => shed += xs.len(),
+                    Err(e) => return Err(e.to_string()),
+                }
+                xs.clear();
+            }
+            continue;
+        }
+        match client.spmv_deadline(id, &x, deadline_ms) {
+            Ok(y) => {
+                verify(&x, &y);
+                served += 1;
+            }
+            Err(ClientError::Service(_)) => shed += 1,
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+    if !xs.is_empty() {
+        match client.spmm_batch(id, &xs) {
+            Ok(ys) => {
+                for (xi, yi) in xs.iter().zip(&ys) {
+                    verify(xi, yi);
+                }
+                served += xs.len();
+            }
+            Err(ClientError::Service(_)) => shed += xs.len(),
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+    println!("smoke: {served} served, {shed} shed (typed), {mismatches} mismatches");
+    println!("{}", client.metrics().map_err(|e| e.to_string())?);
+    if mismatches > 0 {
+        return Err(format!("{mismatches} result(s) diverged from the local CSR reference"));
+    }
     Ok(())
 }
 

@@ -1,0 +1,360 @@
+//! The resilient wire client.
+//!
+//! One [`Client`] owns one connection (reconnecting lazily after any I/O or
+//! protocol failure) and retries *idempotent* operations — spmv, spmm-batch,
+//! metrics, health — with capped exponential backoff and seeded jitter
+//! ([`crate::util::prng`]). `register` and `drain` are not idempotent at this
+//! layer (a lost reply leaves the server-side effect in place), so they are
+//! attempted exactly once; callers wanting register-with-retry own the loop
+//! (see `client --op smoke` in the CLI).
+//!
+//! Server-side [`ServiceError`]s cross the wire losslessly
+//! ([`crate::net::proto`]) and surface as [`ClientError::Service`] — a
+//! deadline miss on the far side of a socket is the same typed
+//! `DeadlineExceeded` the in-process path returns.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::{MatrixId, ServiceError};
+use crate::matrix::Csr;
+use crate::net::proto::{self, Request, Response, HEADER_LEN};
+use crate::util::prng::{Rng, SplitMix64};
+
+/// Tuning knobs of the wire client (CLI: `client --retries --deadline-ms`).
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Per-read/write socket deadline.
+    pub io_timeout: Duration,
+    /// Retries *after* the first attempt, for idempotent ops only.
+    pub max_retries: u32,
+    /// First backoff pause; doubles per attempt up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Seed of the jitter stream (deterministic tests).
+    pub seed: u64,
+    /// Largest response frame this client will accept.
+    pub max_frame: usize,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            io_timeout: Duration::from_secs(2),
+            max_retries: 4,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+            seed: 0x5bc5_c11e,
+            max_frame: proto::DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// What a wire call can come back with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientError {
+    /// The server answered with a typed error — lossless across the wire.
+    Service(ServiceError),
+    /// Socket-level failure (connect, read, write, timeout).
+    Io(String),
+    /// The bytes arrived but violated the protocol (bad frame, wrong
+    /// request id, unexpected response kind).
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Service(e) => write!(f, "service error: {e}"),
+            ClientError::Io(msg) => write!(f, "io error: {msg}"),
+            ClientError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// Exponential backoff with a hard cap and multiplicative jitter in
+/// [0.5, 1.5): pure so the retry schedule is unit-testable.
+pub(crate) fn backoff_delay(
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    jitter01: f64,
+) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.min(16));
+    let capped = if exp > cap { cap } else { exp };
+    capped.mul_f64(0.5 + jitter01)
+}
+
+/// A reconnecting, retrying client for one server address.
+pub struct Client {
+    addr: String,
+    cfg: ClientConfig,
+    stream: Option<TcpStream>,
+    rng: SplitMix64,
+    next_id: u64,
+}
+
+impl Client {
+    /// Client with default config; connects lazily on the first call.
+    pub fn connect(addr: &str) -> Client {
+        Client::with_config(addr, ClientConfig::default())
+    }
+
+    pub fn with_config(addr: &str, cfg: ClientConfig) -> Client {
+        let rng = SplitMix64::new(cfg.seed);
+        Client { addr: addr.to_string(), cfg, stream: None, rng, next_id: 1 }
+    }
+
+    /// Register a CSR matrix. Attempted once — a retry after a lost reply
+    /// would register a duplicate.
+    pub fn register(&mut self, m: &Csr<f64>) -> Result<MatrixId, ClientError> {
+        let req = Request::Register {
+            nrows: m.nrows as u64,
+            ncols: m.ncols as u64,
+            row_ptr: m.row_ptr.clone(),
+            col_idx: m.col_idx.clone(),
+            vals: m.vals.clone(),
+        };
+        match self.roundtrip(&req, 0)? {
+            Response::Registered { id } => Ok(MatrixId(id)),
+            resp => Err(unexpected(&resp)),
+        }
+    }
+
+    /// y = A·x with the server's default deadline. Idempotent: retried.
+    pub fn spmv(&mut self, id: MatrixId, x: &[f64]) -> Result<Vec<f64>, ClientError> {
+        self.spmv_deadline(id, x, 0)
+    }
+
+    /// y = A·x with an explicit wire deadline (ms; 0 = server default).
+    /// The budget starts when the server receives the frame header.
+    pub fn spmv_deadline(
+        &mut self,
+        id: MatrixId,
+        x: &[f64],
+        deadline_ms: u32,
+    ) -> Result<Vec<f64>, ClientError> {
+        let req = Request::Spmv { id: id.0, x: x.to_vec() };
+        match self.call_retrying(&req, deadline_ms)? {
+            Response::Spmv { y } => Ok(y),
+            resp => Err(unexpected(&resp)),
+        }
+    }
+
+    /// One frame, k right-hand sides, atomically admitted and fused
+    /// server-side. Idempotent: retried.
+    pub fn spmm_batch(
+        &mut self,
+        id: MatrixId,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>, ClientError> {
+        let req = Request::SpmmBatch { id: id.0, xs: xs.to_vec() };
+        match self.call_retrying(&req, 0)? {
+            Response::SpmmBatch { ys } => Ok(ys),
+            resp => Err(unexpected(&resp)),
+        }
+    }
+
+    /// The live metrics snapshot as a JSON string. Idempotent: retried.
+    pub fn metrics(&mut self) -> Result<String, ClientError> {
+        match self.call_retrying(&Request::Metrics, 0)? {
+            Response::Metrics { json } => Ok(json),
+            resp => Err(unexpected(&resp)),
+        }
+    }
+
+    /// Liveness probe; `Ok(true)` means the server is draining. Retried.
+    pub fn health(&mut self) -> Result<bool, ClientError> {
+        match self.call_retrying(&Request::Health, 0)? {
+            Response::Health { draining } => Ok(draining),
+            resp => Err(unexpected(&resp)),
+        }
+    }
+
+    /// Ask the server to drain; returns the final metrics snapshot. Not
+    /// retried (the first attempt already tipped the server over).
+    pub fn drain(&mut self) -> Result<String, ClientError> {
+        match self.roundtrip(&Request::Drain, 0)? {
+            Response::Drain { json } => Ok(json),
+            resp => Err(unexpected(&resp)),
+        }
+    }
+
+    /// One request with the retry policy: transport and protocol failures
+    /// reconnect and retry; a typed `Overloaded` answer backs off and
+    /// retries (the one server error where "later" can succeed); every
+    /// other service error is final.
+    fn call_retrying(
+        &mut self,
+        req: &Request,
+        deadline_ms: u32,
+    ) -> Result<Response, ClientError> {
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.roundtrip(req, deadline_ms) {
+                Ok(Response::Error(e @ ServiceError::Overloaded { .. }))
+                    if attempt < self.cfg.max_retries =>
+                {
+                    ClientError::Service(e)
+                }
+                Ok(resp) => {
+                    return match resp {
+                        Response::Error(e) => Err(ClientError::Service(e)),
+                        ok => Ok(ok),
+                    }
+                }
+                Err(e @ ClientError::Io(_)) | Err(e @ ClientError::Protocol(_))
+                    if attempt < self.cfg.max_retries =>
+                {
+                    e
+                }
+                Err(e) => return Err(e),
+            };
+            let _ = err; // retried; the final attempt's error is what surfaces
+            let jitter = self.rng.next_f64();
+            std::thread::sleep(backoff_delay(
+                self.cfg.backoff_base,
+                self.cfg.backoff_cap,
+                attempt,
+                jitter,
+            ));
+            attempt += 1;
+        }
+    }
+
+    /// One request/response exchange on the current connection. Any
+    /// failure drops the connection so the next attempt reconnects.
+    fn roundtrip(&mut self, req: &Request, deadline_ms: u32) -> Result<Response, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let out = proto::frame(req.op().code(), id, deadline_ms, &req.encode_payload());
+        match self.exchange(&out, id) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.stream = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn exchange(&mut self, out: &[u8], id: u64) -> Result<Response, ClientError> {
+        let stream = self.ensure_connected()?;
+        stream.write_all(out).map_err(io_err)?;
+        stream.flush().map_err(io_err)?;
+        let mut hdr = [0u8; HEADER_LEN];
+        stream.read_exact(&mut hdr).map_err(io_err)?;
+        let header = proto::decode_header(&hdr, self.cfg.max_frame)
+            .map_err(|e| ClientError::Protocol(e.to_string()))?;
+        let mut payload = vec![0u8; header.payload_len as usize];
+        stream.read_exact(&mut payload).map_err(io_err)?;
+        if proto::checksum(&payload) != header.checksum {
+            return Err(ClientError::Protocol("response checksum mismatch".into()));
+        }
+        // request_id 0 is a connection-level refusal written before the
+        // server read our request (accept-time overload / drain).
+        if header.request_id != id && header.request_id != 0 {
+            return Err(ClientError::Protocol(format!(
+                "response id {} does not match request id {id}",
+                header.request_id
+            )));
+        }
+        Response::decode(header.opcode, &payload)
+            .map_err(|e| ClientError::Protocol(e.to_string()))
+    }
+
+    fn ensure_connected(&mut self) -> Result<&mut TcpStream, ClientError> {
+        if self.stream.is_none() {
+            let stream = TcpStream::connect(&self.addr).map_err(io_err)?;
+            stream.set_nodelay(true).map_err(io_err)?;
+            stream.set_read_timeout(Some(self.cfg.io_timeout)).map_err(io_err)?;
+            stream.set_write_timeout(Some(self.cfg.io_timeout)).map_err(io_err)?;
+            self.stream = Some(stream);
+        }
+        Ok(self.stream.as_mut().expect("just connected"))
+    }
+}
+
+fn io_err(e: std::io::Error) -> ClientError {
+    ClientError::Io(e.to_string())
+}
+
+fn unexpected(resp: &Response) -> ClientError {
+    match resp {
+        Response::Error(e) => ClientError::Service(e.clone()),
+        other => ClientError::Protocol(format!("unexpected response kind: {}", other.label())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_doubles_and_caps() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(500);
+        // Zero jitter draws the half-point of the window: 0.5×ideal.
+        let d0 = backoff_delay(base, cap, 0, 0.0);
+        let d1 = backoff_delay(base, cap, 1, 0.0);
+        let d2 = backoff_delay(base, cap, 2, 0.0);
+        assert_eq!(d0, Duration::from_millis(5));
+        assert_eq!(d1, Duration::from_millis(10));
+        assert_eq!(d2, Duration::from_millis(20));
+        // Deep attempts saturate at the cap (×jitter), including the
+        // shift-overflow guard at attempt > 16.
+        let deep = backoff_delay(base, cap, 40, 1.0);
+        assert_eq!(deep, Duration::from_millis(750));
+        assert!(backoff_delay(base, cap, 40, 0.0) <= Duration::from_millis(250));
+    }
+
+    #[test]
+    fn backoff_jitter_is_seeded_and_deterministic() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for attempt in 0..6 {
+            let da = backoff_delay(
+                Duration::from_millis(10),
+                Duration::from_millis(500),
+                attempt,
+                a.next_f64(),
+            );
+            let db = backoff_delay(
+                Duration::from_millis(10),
+                Duration::from_millis(500),
+                attempt,
+                b.next_f64(),
+            );
+            assert_eq!(da, db);
+        }
+    }
+
+    #[test]
+    fn connect_failure_is_a_typed_io_error() {
+        // Reserved port with (almost certainly) no listener; 1 retry only
+        // to keep the test fast.
+        let mut c = Client::with_config(
+            "127.0.0.1:1",
+            ClientConfig {
+                max_retries: 1,
+                backoff_base: Duration::from_millis(1),
+                backoff_cap: Duration::from_millis(2),
+                ..ClientConfig::default()
+            },
+        );
+        match c.metrics() {
+            Err(ClientError::Io(_)) => {}
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn client_error_display_is_informative() {
+        let e = ClientError::Service(ServiceError::DeadlineExceeded);
+        assert!(e.to_string().contains("deadline"));
+        let e = ClientError::Protocol("bad".into());
+        assert!(e.to_string().contains("protocol"));
+    }
+}

@@ -1,0 +1,33 @@
+//! The wire front-end: zero-dependency TCP serving for the coordinator.
+//!
+//! Three layers, robustness as the design center:
+//!
+//! - [`proto`] — a length-prefixed binary protocol (32-byte header: magic,
+//!   version, opcode, request id, per-request deadline, payload length,
+//!   FNV-1a payload checksum). Decoding is a trust boundary: every field is
+//!   validated against hard bounds before a byte of payload is allocated
+//!   (the `mm_io` preallocation-guard idiom), and any violation is a typed
+//!   [`crate::error::SpmvError::Frame`] — never a panic.
+//! - [`server`] — a fixed acceptor + connection-handler pool in front of
+//!   [`crate::coordinator::SpmvService`]: hard connection cap, per-connection
+//!   read/write deadlines with an idle timeout (slow-loris shedding), wire
+//!   deadlines anchored at *frame receipt* so socket time counts against the
+//!   request budget, and graceful drain on SIGTERM or the `drain` op —
+//!   every accepted request gets a reply or a typed shutdown error.
+//! - [`client`] — a resilient client: reconnects on connection loss, retries
+//!   idempotent ops (spmv / spmm-batch / metrics / health) with capped
+//!   exponential backoff + seeded jitter, and reports
+//!   [`crate::coordinator::ServiceError`] variants losslessly across the
+//!   wire.
+//!
+//! The whole stack is driven end-to-end by the seeded chaos harness
+//! ([`crate::util::fault`]) through the four wire sites `net.accept`,
+//! `net.read`, `net.write` and `net.frame`.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{Client, ClientConfig, ClientError};
+pub use proto::{Op, Request, Response};
+pub use server::{Server, ServerConfig};

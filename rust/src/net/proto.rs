@@ -1,0 +1,828 @@
+//! The length-prefixed binary wire protocol.
+//!
+//! Every frame is a fixed 32-byte little-endian header followed by
+//! `payload_len` payload bytes:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic       0x35435053 ("SPC5" as bytes)
+//!      4     1  version     1
+//!      5     1  opcode      request op, response op (op | 0x80), or 0xFF
+//!      6     2  flags       reserved, must be 0
+//!      8     8  request_id  client correlation id, echoed in the response
+//!     16     4  deadline_ms per-request deadline (0 = server default)
+//!     20     4  payload_len bounded by the receiver's max-frame limit
+//!     24     8  checksum    FNV-1a 64 over the payload bytes
+//! ```
+//!
+//! Decoding is a trust boundary. The rules, enforced by [`decode_header`]
+//! and [`Reader`]:
+//!
+//! - magic/version/flags mismatches and oversized `payload_len` are typed
+//!   [`SpmvError::Frame`] rejections before any payload is read;
+//! - every count field inside a payload is validated against the bytes
+//!   actually present before allocation, and preallocation is additionally
+//!   clamped (the `mm_io` guard idiom) — a hostile length prefix cannot
+//!   force a giant allocation;
+//! - trailing bytes after a fully decoded payload are an error (no smuggled
+//!   data);
+//! - nothing in this module panics on wire input.
+//!
+//! [`ServiceError`] (and its nested [`SpmvError`]) round-trips losslessly so
+//! a remote caller sees exactly the typed error an in-process caller would.
+
+use crate::coordinator::{MatrixId, ServiceError};
+use crate::error::SpmvError;
+
+/// Frame magic: the bytes "SPC5" read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"SPC5");
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 32;
+/// Default bound on `payload_len` (64 MiB) — a register frame for a few
+/// million non-zeros fits; a hostile 4 GiB length prefix does not.
+pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
+/// Opcode of an error response (carries an encoded [`ServiceError`]).
+pub const OP_ERROR: u8 = 0xFF;
+/// Preallocation clamp for decoded arrays, in elements — the same guard
+/// idiom as `matrix::mm_io`: a validated-but-large count still grows the
+/// vector incrementally instead of reserving everything up front.
+const MAX_PREALLOC: usize = 1 << 22;
+
+/// The six request operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Upload a CSR matrix; the response carries its [`MatrixId`].
+    Register,
+    /// One SpMV: `y = A·x`.
+    Spmv,
+    /// `k` right-hand sides of one matrix, admitted atomically so they
+    /// coalesce into fused SpMM batches.
+    SpmmBatch,
+    /// Live metrics snapshot (JSON).
+    Metrics,
+    /// Liveness/readiness probe.
+    Health,
+    /// Begin a graceful drain; the response carries the final metrics.
+    Drain,
+}
+
+impl Op {
+    /// The request opcode byte.
+    pub fn code(self) -> u8 {
+        match self {
+            Op::Register => 1,
+            Op::Spmv => 2,
+            Op::SpmmBatch => 3,
+            Op::Metrics => 4,
+            Op::Health => 5,
+            Op::Drain => 6,
+        }
+    }
+
+    /// The matching response opcode byte.
+    pub fn response_code(self) -> u8 {
+        self.code() | 0x80
+    }
+
+    /// Parse a request opcode byte.
+    pub fn from_code(c: u8) -> Option<Op> {
+        match c {
+            1 => Some(Op::Register),
+            2 => Some(Op::Spmv),
+            3 => Some(Op::SpmmBatch),
+            4 => Some(Op::Metrics),
+            5 => Some(Op::Health),
+            6 => Some(Op::Drain),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Header {
+    pub opcode: u8,
+    pub request_id: u64,
+    pub deadline_ms: u32,
+    pub payload_len: u32,
+    pub checksum: u64,
+}
+
+/// FNV-1a 64 over `bytes` — cheap, and a single flipped payload bit changes
+/// the digest (the `net.frame` chaos site corrupts exactly one bit).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Encode a header.
+pub fn encode_header(h: &Header) -> [u8; HEADER_LEN] {
+    let mut buf = [0u8; HEADER_LEN];
+    buf[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    buf[4] = VERSION;
+    buf[5] = h.opcode;
+    // bytes 6..8: flags, reserved as zero.
+    buf[8..16].copy_from_slice(&h.request_id.to_le_bytes());
+    buf[16..20].copy_from_slice(&h.deadline_ms.to_le_bytes());
+    buf[20..24].copy_from_slice(&h.payload_len.to_le_bytes());
+    buf[24..32].copy_from_slice(&h.checksum.to_le_bytes());
+    buf
+}
+
+/// Decode and validate a header. `max_frame` bounds `payload_len`.
+pub fn decode_header(buf: &[u8; HEADER_LEN], max_frame: usize) -> Result<Header, SpmvError> {
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(SpmvError::Frame(format!("bad magic 0x{magic:08x}")));
+    }
+    if buf[4] != VERSION {
+        return Err(SpmvError::Frame(format!("unsupported protocol version {}", buf[4])));
+    }
+    let flags = u16::from_le_bytes(buf[6..8].try_into().unwrap());
+    if flags != 0 {
+        return Err(SpmvError::Frame(format!("nonzero reserved flags 0x{flags:04x}")));
+    }
+    let payload_len = u32::from_le_bytes(buf[20..24].try_into().unwrap());
+    if payload_len as usize > max_frame {
+        return Err(SpmvError::Frame(format!(
+            "payload length {payload_len} exceeds the {max_frame}-byte frame limit"
+        )));
+    }
+    Ok(Header {
+        opcode: buf[5],
+        request_id: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+        deadline_ms: u32::from_le_bytes(buf[16..20].try_into().unwrap()),
+        payload_len,
+        checksum: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+    })
+}
+
+/// Assemble a complete frame (header + payload) ready to write.
+pub fn frame(opcode: u8, request_id: u64, deadline_ms: u32, payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= u32::MAX as usize);
+    let header = Header {
+        opcode,
+        request_id,
+        deadline_ms,
+        payload_len: payload.len() as u32,
+        checksum: checksum(payload),
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&encode_header(&header));
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Bounds-checked little-endian payload reader. Every accessor is a typed
+/// [`SpmvError::Frame`] on underflow; nothing here panics on wire bytes.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SpmvError> {
+        if self.remaining() < n {
+            return Err(SpmvError::Frame(format!(
+                "truncated payload: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, SpmvError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, SpmvError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, SpmvError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, SpmvError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` that must fit a `usize` count of `elem_size`-byte elements
+    /// *still present in the buffer* — the preallocation guard: hostile
+    /// counts are rejected against real bytes before anything is allocated.
+    pub fn count(&mut self, elem_size: usize, what: &str) -> Result<usize, SpmvError> {
+        let raw = self.u64()?;
+        let n = usize::try_from(raw)
+            .map_err(|_| SpmvError::Frame(format!("{what} count {raw} overflows usize")))?;
+        let bytes = n
+            .checked_mul(elem_size)
+            .ok_or_else(|| SpmvError::Frame(format!("{what} count {n} overflows")))?;
+        if bytes > self.remaining() {
+            return Err(SpmvError::Frame(format!(
+                "{what} count {n} needs {bytes} bytes, only {} present",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>, SpmvError> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(overflow)?)?;
+        let mut out = Vec::with_capacity(n.min(MAX_PREALLOC));
+        for c in raw.chunks_exact(4) {
+            out.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>, SpmvError> {
+        let raw = self.take(n.checked_mul(8).ok_or_else(overflow)?)?;
+        let mut out = Vec::with_capacity(n.min(MAX_PREALLOC));
+        for c in raw.chunks_exact(8) {
+            out.push(f64::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed UTF-8 string (u32 length + bytes).
+    pub fn str_(&mut self) -> Result<String, SpmvError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| SpmvError::Frame("string field is not UTF-8".into()))
+    }
+
+    /// Reject trailing bytes: a fully decoded payload must end exactly.
+    pub fn finish(self) -> Result<(), SpmvError> {
+        if self.remaining() != 0 {
+            return Err(SpmvError::Frame(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn overflow() -> SpmvError {
+    SpmvError::Frame("array length overflows".into())
+}
+
+/// Little-endian payload writer.
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u32_slice(&mut self, vs: &[u32]) -> &mut Self {
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn f64_slice(&mut self, vs: &[f64]) -> &mut Self {
+        self.buf.reserve(vs.len() * 8);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn str_(&mut self, s: &str) -> &mut Self {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+}
+
+/// A decoded request payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Register {
+        nrows: u64,
+        ncols: u64,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        vals: Vec<f64>,
+    },
+    Spmv {
+        id: u64,
+        x: Vec<f64>,
+    },
+    SpmmBatch {
+        id: u64,
+        xs: Vec<Vec<f64>>,
+    },
+    Metrics,
+    Health,
+    Drain,
+}
+
+impl Request {
+    pub fn op(&self) -> Op {
+        match self {
+            Request::Register { .. } => Op::Register,
+            Request::Spmv { .. } => Op::Spmv,
+            Request::SpmmBatch { .. } => Op::SpmmBatch,
+            Request::Metrics => Op::Metrics,
+            Request::Health => Op::Health,
+            Request::Drain => Op::Drain,
+        }
+    }
+
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Request::Register { nrows, ncols, row_ptr, col_idx, vals } => {
+                w.u64(*nrows)
+                    .u64(*ncols)
+                    .u64(row_ptr.len() as u64)
+                    .u32_slice(row_ptr)
+                    .u64(col_idx.len() as u64)
+                    .u32_slice(col_idx)
+                    .u64(vals.len() as u64)
+                    .f64_slice(vals);
+            }
+            Request::Spmv { id, x } => {
+                w.u64(*id).u64(x.len() as u64).f64_slice(x);
+            }
+            Request::SpmmBatch { id, xs } => {
+                w.u64(*id).u64(xs.len() as u64);
+                for x in xs {
+                    w.u64(x.len() as u64).f64_slice(x);
+                }
+            }
+            Request::Metrics | Request::Health | Request::Drain => {}
+        }
+        w.buf
+    }
+
+    /// Decode the payload of `op`. Typed error on any malformation.
+    pub fn decode(op: Op, payload: &[u8]) -> Result<Request, SpmvError> {
+        let mut r = Reader::new(payload);
+        let req = match op {
+            Op::Register => {
+                let nrows = r.u64()?;
+                let ncols = r.u64()?;
+                let np = r.count(4, "row_ptr")?;
+                let row_ptr = r.u32_vec(np)?;
+                let nc = r.count(4, "col_idx")?;
+                let col_idx = r.u32_vec(nc)?;
+                let nv = r.count(8, "vals")?;
+                let vals = r.f64_vec(nv)?;
+                Request::Register { nrows, ncols, row_ptr, col_idx, vals }
+            }
+            Op::Spmv => {
+                let id = r.u64()?;
+                let n = r.count(8, "x")?;
+                let x = r.f64_vec(n)?;
+                Request::Spmv { id, x }
+            }
+            Op::SpmmBatch => {
+                let id = r.u64()?;
+                // Each RHS costs at least its 8-byte length prefix, so the
+                // count is validated against that before any allocation.
+                let k = r.count(8, "rhs list")?;
+                let mut xs = Vec::with_capacity(k.min(MAX_PREALLOC));
+                for _ in 0..k {
+                    let n = r.count(8, "rhs")?;
+                    xs.push(r.f64_vec(n)?);
+                }
+                Request::SpmmBatch { id, xs }
+            }
+            Op::Metrics => Request::Metrics,
+            Op::Health => Request::Health,
+            Op::Drain => Request::Drain,
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+/// A decoded response payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Registered { id: u64 },
+    Spmv { y: Vec<f64> },
+    SpmmBatch { ys: Vec<Vec<f64>> },
+    Metrics { json: String },
+    Health { draining: bool },
+    Drain { json: String },
+    Error(ServiceError),
+}
+
+impl Response {
+    /// Short label for diagnostics (the payload can be megabytes).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Response::Registered { .. } => "registered",
+            Response::Spmv { .. } => "spmv",
+            Response::SpmmBatch { .. } => "spmm-batch",
+            Response::Metrics { .. } => "metrics",
+            Response::Health { .. } => "health",
+            Response::Drain { .. } => "drain",
+            Response::Error(_) => "error",
+        }
+    }
+
+    /// The opcode byte this response travels under.
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Response::Registered { .. } => Op::Register.response_code(),
+            Response::Spmv { .. } => Op::Spmv.response_code(),
+            Response::SpmmBatch { .. } => Op::SpmmBatch.response_code(),
+            Response::Metrics { .. } => Op::Metrics.response_code(),
+            Response::Health { .. } => Op::Health.response_code(),
+            Response::Drain { .. } => Op::Drain.response_code(),
+            Response::Error(_) => OP_ERROR,
+        }
+    }
+
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Response::Registered { id } => {
+                w.u64(*id);
+            }
+            Response::Spmv { y } => {
+                w.u64(y.len() as u64).f64_slice(y);
+            }
+            Response::SpmmBatch { ys } => {
+                w.u64(ys.len() as u64);
+                for y in ys {
+                    w.u64(y.len() as u64).f64_slice(y);
+                }
+            }
+            Response::Metrics { json } | Response::Drain { json } => {
+                w.str_(json);
+            }
+            Response::Health { draining } => {
+                w.u8(u8::from(*draining));
+            }
+            Response::Error(e) => {
+                encode_service_error(&mut w, e);
+            }
+        }
+        w.buf
+    }
+
+    /// Decode a response frame's payload by its opcode byte.
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Response, SpmvError> {
+        let mut r = Reader::new(payload);
+        let resp = if opcode == OP_ERROR {
+            Response::Error(decode_service_error(&mut r)?)
+        } else {
+            let op = Op::from_code(opcode & !0x80)
+                .filter(|_| opcode & 0x80 != 0)
+                .ok_or_else(|| {
+                    SpmvError::Frame(format!("unknown response opcode 0x{opcode:02x}"))
+                })?;
+            match op {
+                Op::Register => Response::Registered { id: r.u64()? },
+                Op::Spmv => {
+                    let n = r.count(8, "y")?;
+                    Response::Spmv { y: r.f64_vec(n)? }
+                }
+                Op::SpmmBatch => {
+                    let k = r.count(8, "y list")?;
+                    let mut ys = Vec::with_capacity(k.min(MAX_PREALLOC));
+                    for _ in 0..k {
+                        let n = r.count(8, "y")?;
+                        ys.push(r.f64_vec(n)?);
+                    }
+                    Response::SpmmBatch { ys }
+                }
+                Op::Metrics => Response::Metrics { json: r.str_()? },
+                Op::Health => Response::Health { draining: r.u8()? != 0 },
+                Op::Drain => Response::Drain { json: r.str_()? },
+            }
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+}
+
+/// Encode a [`ServiceError`] losslessly (tag byte + fields).
+pub fn encode_service_error(w: &mut Writer, e: &ServiceError) {
+    match e {
+        ServiceError::UnknownMatrix(MatrixId(id)) => {
+            w.u8(1).u64(*id);
+        }
+        ServiceError::DimMismatch { got, want } => {
+            w.u8(2).u64(*got as u64).u64(*want as u64);
+        }
+        ServiceError::Overloaded { queued, cap } => {
+            w.u8(3).u64(*queued as u64).u64(*cap as u64);
+        }
+        ServiceError::DeadlineExceeded => {
+            w.u8(4);
+        }
+        ServiceError::Invalid(inner) => {
+            w.u8(5);
+            encode_spmv_error(w, inner);
+        }
+        ServiceError::Faulted(msg) => {
+            w.u8(6).str_(msg);
+        }
+        ServiceError::ShutDown => {
+            w.u8(7);
+        }
+    }
+}
+
+/// Decode a [`ServiceError`] written by [`encode_service_error`].
+pub fn decode_service_error(r: &mut Reader<'_>) -> Result<ServiceError, SpmvError> {
+    Ok(match r.u8()? {
+        1 => ServiceError::UnknownMatrix(MatrixId(r.u64()?)),
+        2 => ServiceError::DimMismatch { got: r.u64()? as usize, want: r.u64()? as usize },
+        3 => ServiceError::Overloaded { queued: r.u64()? as usize, cap: r.u64()? as usize },
+        4 => ServiceError::DeadlineExceeded,
+        5 => ServiceError::Invalid(decode_spmv_error(r)?),
+        6 => ServiceError::Faulted(r.str_()?),
+        7 => ServiceError::ShutDown,
+        t => return Err(SpmvError::Frame(format!("unknown service-error tag {t}"))),
+    })
+}
+
+fn encode_spmv_error(w: &mut Writer, e: &SpmvError) {
+    match e {
+        SpmvError::Io(msg) => {
+            w.u8(1).str_(msg);
+        }
+        SpmvError::Parse { line, msg } => {
+            w.u8(2).u64(*line as u64).str_(msg);
+        }
+        SpmvError::Unsupported(msg) => {
+            w.u8(3).str_(msg);
+        }
+        SpmvError::InvalidMatrix(msg) => {
+            w.u8(4).str_(msg);
+        }
+        SpmvError::FaultInjected { site } => {
+            w.u8(5).str_(site);
+        }
+        SpmvError::Frame(msg) => {
+            w.u8(6).str_(msg);
+        }
+    }
+}
+
+fn decode_spmv_error(r: &mut Reader<'_>) -> Result<SpmvError, SpmvError> {
+    Ok(match r.u8()? {
+        1 => SpmvError::Io(r.str_()?),
+        2 => SpmvError::Parse { line: r.u64()? as usize, msg: r.str_()? },
+        3 => SpmvError::Unsupported(r.str_()?),
+        4 => SpmvError::InvalidMatrix(r.str_()?),
+        5 => SpmvError::FaultInjected { site: r.str_()? },
+        6 => SpmvError::Frame(r.str_()?),
+        t => return Err(SpmvError::Frame(format!("unknown spmv-error tag {t}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrips() {
+        let h = Header {
+            opcode: Op::Spmv.code(),
+            request_id: 0xDEAD_BEEF_1234,
+            deadline_ms: 250,
+            payload_len: 4096,
+            checksum: 0x1122_3344_5566_7788,
+        };
+        let buf = encode_header(&h);
+        assert_eq!(decode_header(&buf, DEFAULT_MAX_FRAME).unwrap(), h);
+    }
+
+    #[test]
+    fn header_rejects_hostile_fields() {
+        let good = encode_header(&Header {
+            opcode: 2,
+            request_id: 1,
+            deadline_ms: 0,
+            payload_len: 100,
+            checksum: 0,
+        });
+        // Bad magic.
+        let mut bad = good;
+        bad[0] ^= 0xFF;
+        assert!(decode_header(&bad, DEFAULT_MAX_FRAME).is_err());
+        // Bad version.
+        let mut bad = good;
+        bad[4] = 9;
+        assert!(decode_header(&bad, DEFAULT_MAX_FRAME).is_err());
+        // Nonzero reserved flags.
+        let mut bad = good;
+        bad[6] = 1;
+        assert!(decode_header(&bad, DEFAULT_MAX_FRAME).is_err());
+        // Oversized payload length against the receiver's limit.
+        let err = decode_header(&good, 64).unwrap_err();
+        assert!(matches!(err, SpmvError::Frame(ref m) if m.contains("frame limit")), "{err}");
+    }
+
+    #[test]
+    fn checksum_detects_single_bit_flips() {
+        let payload: Vec<u8> = (0u8..=255).collect();
+        let base = checksum(&payload);
+        for bit in [0usize, 7, 1000, 2047] {
+            let mut p = payload.clone();
+            p[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(checksum(&p), base, "bit {bit} undetected");
+        }
+        assert_eq!(checksum(&payload), base);
+        assert_eq!(checksum(b""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let cases = vec![
+            Request::Register {
+                nrows: 3,
+                ncols: 4,
+                row_ptr: vec![0, 1, 2, 3],
+                col_idx: vec![0, 2, 3],
+                vals: vec![1.5, -2.25, 0.0],
+            },
+            Request::Spmv { id: 7, x: vec![1.0, 2.0, -0.5, f64::MIN_POSITIVE] },
+            Request::SpmmBatch { id: 9, xs: vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![]] },
+            Request::Metrics,
+            Request::Health,
+            Request::Drain,
+        ];
+        for req in cases {
+            let payload = req.encode_payload();
+            let back = Request::decode(req.op(), &payload).unwrap();
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let cases = vec![
+            Response::Registered { id: 42 },
+            Response::Spmv { y: vec![0.5, -1.5, 3.75] },
+            Response::SpmmBatch { ys: vec![vec![1.0], vec![2.0, 3.0]] },
+            Response::Metrics { json: "{\"requests\":3}".into() },
+            Response::Health { draining: true },
+            Response::Drain { json: "{}".into() },
+        ];
+        for resp in cases {
+            let payload = resp.encode_payload();
+            let back = Response::decode(resp.opcode(), &payload).unwrap();
+            assert_eq!(back, resp);
+        }
+    }
+
+    #[test]
+    fn every_service_error_roundtrips_losslessly() {
+        let cases = vec![
+            ServiceError::UnknownMatrix(MatrixId(99)),
+            ServiceError::DimMismatch { got: 7, want: 120 },
+            ServiceError::Overloaded { queued: 4096, cap: 4096 },
+            ServiceError::DeadlineExceeded,
+            ServiceError::Invalid(SpmvError::Io("conn reset".into())),
+            ServiceError::Invalid(SpmvError::Parse { line: 31, msg: "bad entry".into() }),
+            ServiceError::Invalid(SpmvError::Unsupported("array format".into())),
+            ServiceError::Invalid(SpmvError::InvalidMatrix("row_ptr not monotone".into())),
+            ServiceError::Invalid(SpmvError::FaultInjected { site: "net.frame".into() }),
+            ServiceError::Invalid(SpmvError::Frame("checksum mismatch".into())),
+            ServiceError::Faulted("lane panic".into()),
+            ServiceError::ShutDown,
+        ];
+        for err in cases {
+            let resp = Response::Error(err.clone());
+            let payload = resp.encode_payload();
+            match Response::decode(OP_ERROR, &payload).unwrap() {
+                Response::Error(back) => assert_eq!(back, err),
+                other => panic!("expected error, got {}", other.label()),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut payload = Request::Spmv { id: 1, x: vec![1.0] }.encode_payload();
+        payload.push(0xAB);
+        let err = Request::decode(Op::Spmv, &payload).unwrap_err();
+        assert!(matches!(err, SpmvError::Frame(ref m) if m.contains("trailing")), "{err}");
+    }
+
+    #[test]
+    fn hostile_counts_are_rejected_before_allocation() {
+        // An spmv payload claiming 2^60 vector elements but carrying none:
+        // the count is validated against the bytes actually present.
+        let mut w = Writer::new();
+        w.u64(1).u64(1u64 << 60);
+        let err = Request::decode(Op::Spmv, &w.buf).unwrap_err();
+        assert!(matches!(err, SpmvError::Frame(ref m) if m.contains("count")), "{err}");
+        // Same through a register frame's row_ptr count.
+        let mut w = Writer::new();
+        w.u64(10).u64(10).u64(u64::MAX);
+        assert!(Request::decode(Op::Register, &w.buf).is_err());
+        // And a batch with a hostile per-RHS count.
+        let mut w = Writer::new();
+        w.u64(3).u64(1).u64(1u64 << 59);
+        assert!(Request::decode(Op::SpmmBatch, &w.buf).is_err());
+    }
+
+    #[test]
+    fn truncated_payloads_never_panic() {
+        // Every prefix of every valid encoding must decode to a typed error
+        // (or, for a lucky prefix, a shorter valid message) — never panic.
+        let reqs = vec![
+            Request::Register {
+                nrows: 2,
+                ncols: 2,
+                row_ptr: vec![0, 1, 2],
+                col_idx: vec![0, 1],
+                vals: vec![1.0, 2.0],
+            },
+            Request::Spmv { id: 3, x: vec![1.0, 2.0, 3.0] },
+            Request::SpmmBatch { id: 5, xs: vec![vec![1.0], vec![2.0]] },
+        ];
+        for req in reqs {
+            let full = req.encode_payload();
+            for cut in 0..full.len() {
+                let _ = Request::decode(req.op(), &full[..cut]);
+            }
+        }
+        let resp = Response::Error(ServiceError::Faulted("x".into()));
+        let full = resp.encode_payload();
+        for cut in 0..full.len() {
+            let _ = Response::decode(OP_ERROR, &full[..cut]);
+        }
+    }
+
+    #[test]
+    fn frame_assembles_header_and_checksum() {
+        let payload = Request::Metrics.encode_payload();
+        let f = frame(Op::Metrics.code(), 5, 100, &payload);
+        assert_eq!(f.len(), HEADER_LEN + payload.len());
+        let hdr: [u8; HEADER_LEN] = f[..HEADER_LEN].try_into().unwrap();
+        let h = decode_header(&hdr, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(h.opcode, Op::Metrics.code());
+        assert_eq!(h.request_id, 5);
+        assert_eq!(h.deadline_ms, 100);
+        assert_eq!(h.payload_len as usize, payload.len());
+        assert_eq!(h.checksum, checksum(&payload));
+    }
+
+    #[test]
+    fn opcode_space_is_closed() {
+        for c in 0..=u8::MAX {
+            match Op::from_code(c) {
+                Some(op) => {
+                    assert_eq!(op.code(), c);
+                    assert_eq!(op.response_code(), c | 0x80);
+                }
+                None => assert!(!(1..=6).contains(&c)),
+            }
+        }
+    }
+}

@@ -1,0 +1,597 @@
+//! The TCP server: a fixed acceptor + connection-handler pool in front of
+//! [`SpmvService`].
+//!
+//! Connection lifecycle (DESIGN.md §Wire front-end):
+//!
+//! ```text
+//! accept ──▶ over cap / net.accept / draining ──▶ typed refusal, close
+//!    │
+//!    ▼
+//! OPEN ──read header──▶ IN-FRAME ──read payload──▶ DECODE ──▶ SERVE ──reply──▶ OPEN
+//!    │                      │                         │
+//!    │ idle > idle_timeout  │ stall > io_timeout      │ malformed: typed error,
+//!    │ or draining: close   │ (slow loris): close     │ framing intact: stay OPEN
+//!    ▼                      ▼                         ▼ framing lost: close
+//!  CLOSED                 CLOSED                    CLOSED
+//! ```
+//!
+//! Robustness contract:
+//!
+//! - a hard connection cap, enforced at accept with a typed
+//!   [`ServiceError::Overloaded`] refusal frame instead of a silent drop;
+//! - per-connection read/write deadlines; a peer stalling *mid-frame* for
+//!   `io_timeout` is dropped (slow-loris shedding) while a quiet-but-alive
+//!   peer is tolerated until `idle_timeout`;
+//! - wire deadlines are anchored at the instant the frame header arrives,
+//!   so socket read + decode time counts against the request's budget
+//!   ([`SpmvService::submit_with_deadline_at`]);
+//! - graceful drain on SIGTERM or the `drain` op: the acceptor refuses new
+//!   connections, open connections get typed [`ServiceError::ShutDown`] for
+//!   new frames, in-flight requests keep their replies, and the drain reply
+//!   carries the final metrics snapshot including `drain_duration_ms`;
+//! - chaos sites `net.accept` / `net.read` / `net.write` / `net.frame`
+//!   ([`crate::util::fault`]) drive every one of these paths under test.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{MatrixId, Metrics, ServiceError, SpmvService};
+use crate::error::SpmvError;
+use crate::matrix::Csr;
+use crate::net::proto::{self, Header, Op, Request, Response, HEADER_LEN};
+use crate::util::fault::{self, site};
+
+/// Tuning knobs of the wire front-end (CLI: `serve --listen --max-conns
+/// --io-timeout-ms`).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Hard cap on concurrently open connections; the acceptor refuses the
+    /// excess with a typed `Overloaded` frame.
+    pub max_conns: usize,
+    /// Connection-handler threads (each serves one connection at a time).
+    pub handlers: usize,
+    /// Per-read/write socket deadline; a peer stalling mid-frame this long
+    /// is dropped.
+    pub io_timeout: Duration,
+    /// How long a connection may sit idle *between* frames before it is
+    /// closed.
+    pub idle_timeout: Duration,
+    /// Upper bound on a frame's payload length.
+    pub max_frame: usize,
+    /// Cap on how long a `drain` request waits for other connections to
+    /// finish before answering anyway.
+    pub drain_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: 64,
+            handlers: 4,
+            io_timeout: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(30),
+            max_frame: proto::DEFAULT_MAX_FRAME,
+            drain_wait: Duration::from_secs(5),
+        }
+    }
+}
+
+struct Inner {
+    svc: Arc<SpmvService<f64>>,
+    cfg: ServerConfig,
+    draining: AtomicBool,
+    shutdown: AtomicBool,
+    drain_started: Mutex<Option<Instant>>,
+}
+
+impl Inner {
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    fn begin_drain(&self) {
+        let mut g = self.drain_started.lock().unwrap_or_else(|e| e.into_inner());
+        if g.is_none() {
+            *g = Some(Instant::now());
+            self.draining.store(true, Ordering::Release);
+        }
+    }
+
+    /// Record how long the drain took (from `begin_drain` to now).
+    fn record_drain_done(&self) {
+        let g = self.drain_started.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(t0) = *g {
+            self.svc.metrics().set_drain_duration_ms(t0.elapsed().as_millis() as u64);
+        }
+    }
+
+    fn open_connections(&self) -> usize {
+        self.svc.metrics().connections_open.load(Ordering::Relaxed) as usize
+    }
+}
+
+/// A running wire front-end. Dropping it (or calling
+/// [`shutdown`](Server::shutdown)) stops the acceptor and joins every
+/// handler thread.
+pub struct Server {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    handlers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"`) and start serving `svc`.
+    pub fn start(
+        svc: Arc<SpmvService<f64>>,
+        listen: &str,
+        cfg: ServerConfig,
+    ) -> io::Result<Server> {
+        sig::install();
+        let listener = TcpListener::bind(listen)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let inner = Arc::new(Inner {
+            svc,
+            cfg,
+            draining: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            drain_started: Mutex::new(None),
+        });
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handlers = (0..inner.cfg.handlers.max(1))
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("spc5-net-{i}"))
+                    .spawn(move || handler_loop(&inner, &rx))
+                    .expect("spawn net handler")
+            })
+            .collect();
+        let acceptor = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("spc5-net-accept".into())
+                .spawn(move || acceptor_loop(&inner, &listener, &tx))
+                .expect("spawn net acceptor")
+        };
+        Ok(Server { inner, addr, acceptor: Some(acceptor), handlers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin a graceful drain programmatically (same effect as SIGTERM or a
+    /// wire `drain` op).
+    pub fn drain(&self) {
+        self.inner.begin_drain();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.inner.draining()
+    }
+
+    /// Currently open wire connections (the `connections_open` gauge).
+    pub fn open_connections(&self) -> usize {
+        self.inner.open_connections()
+    }
+
+    /// Block until a drain has been requested (SIGTERM, wire op, or
+    /// [`drain`](Server::drain)) *and* every connection has closed — the
+    /// `serve --listen` foreground loop.
+    pub fn run_until_drained(&self) {
+        loop {
+            if sig::requested() {
+                self.inner.begin_drain();
+            }
+            if self.inner.draining() && self.inner.open_connections() == 0 {
+                self.inner.record_drain_done();
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Stop accepting, close down and join every thread. In-flight
+    /// requests still get their replies before the handlers exit.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.inner.begin_drain();
+        self.inner.shutdown.store(true, Ordering::Release);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn acceptor_loop(inner: &Arc<Inner>, listener: &TcpListener, tx: &mpsc::Sender<TcpStream>) {
+    loop {
+        if inner.shutdown.load(Ordering::Acquire) {
+            // Dropping `tx` unblocks every idle handler.
+            return;
+        }
+        if sig::requested() {
+            inner.begin_drain();
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let m = inner.svc.metrics();
+                // Chaos: an armed `net.accept` fault drops the connection
+                // on the floor — the client sees a reset and retries.
+                if fault::maybe_io(site::NET_ACCEPT).is_err() {
+                    m.record_conn_rejected();
+                    continue;
+                }
+                if inner.draining() {
+                    m.record_conn_rejected();
+                    refuse(stream, ServiceError::ShutDown, inner.cfg.io_timeout);
+                    continue;
+                }
+                if inner.open_connections() >= inner.cfg.max_conns {
+                    m.record_conn_rejected();
+                    refuse(
+                        stream,
+                        ServiceError::Overloaded {
+                            queued: inner.open_connections(),
+                            cap: inner.cfg.max_conns,
+                        },
+                        inner.cfg.io_timeout,
+                    );
+                    continue;
+                }
+                // The gauge goes up here, before the handoff, so the cap
+                // check above can never over-admit.
+                m.record_conn_open();
+                if tx.send(stream).is_err() {
+                    m.record_conn_close();
+                    return;
+                }
+            }
+            Err(ref e) if would_block(e) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept failure (e.g. EMFILE): back off briefly.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Best-effort typed refusal frame on a connection the server will not
+/// serve, then close. `request_id` 0 marks it connection-level.
+fn refuse(mut stream: TcpStream, err: ServiceError, io_timeout: Duration) {
+    let _ = stream.set_write_timeout(Some(io_timeout));
+    let payload = Response::Error(err).encode_payload();
+    let _ = write_frame(&mut stream, proto::OP_ERROR, 0, &payload);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn handler_loop(inner: &Arc<Inner>, rx: &Arc<Mutex<mpsc::Receiver<TcpStream>>>) {
+    loop {
+        let stream = {
+            let g = rx.lock().unwrap_or_else(|e| e.into_inner());
+            match g.recv() {
+                Ok(s) => s,
+                Err(_) => return, // acceptor gone: shutdown
+            }
+        };
+        serve_conn(inner, stream);
+    }
+}
+
+/// Decrements the `connections_open` gauge when the connection ends, even
+/// if an assertion in a test (or a future bug) unwinds through the handler.
+struct ConnGauge<'a>(&'a Metrics);
+
+impl Drop for ConnGauge<'_> {
+    fn drop(&mut self) {
+        self.0.record_conn_close();
+    }
+}
+
+fn serve_conn(inner: &Arc<Inner>, mut stream: TcpStream) {
+    let m = inner.svc.metrics();
+    let _gauge = ConnGauge(m);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(inner.cfg.io_timeout));
+    let _ = stream.set_write_timeout(Some(inner.cfg.io_timeout));
+    let mut last_activity = Instant::now();
+    loop {
+        if inner.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let mut hdr = [0u8; HEADER_LEN];
+        // The first header byte is read with boundary tolerance: a timeout
+        // *between* frames is just idleness (bounded by idle_timeout and
+        // cut short by a drain); once the first byte lands, the rest of the
+        // frame must keep arriving within io_timeout or the peer is shed.
+        match read_first_byte(&mut stream, &mut hdr) {
+            FirstByte::Byte => {}
+            FirstByte::TimedOut => {
+                if inner.draining() || last_activity.elapsed() >= inner.cfg.idle_timeout {
+                    return;
+                }
+                continue;
+            }
+            FirstByte::ClosedOrError => return,
+        }
+        // Deadline anchor: the request's budget starts the moment its
+        // header starts arriving, not when it reaches the dispatcher.
+        let frame_start = Instant::now();
+        if read_exact_faulted(&mut stream, &mut hdr[1..]).is_err() {
+            return;
+        }
+        let header = match proto::decode_header(&hdr, inner.cfg.max_frame) {
+            Ok(h) => h,
+            Err(e) => {
+                // Framing is lost (we cannot know where the next frame
+                // starts): typed best-effort reply, then close.
+                m.record_frame_malformed();
+                let payload = Response::Error(ServiceError::Invalid(e)).encode_payload();
+                let _ = write_frame(&mut stream, proto::OP_ERROR, 0, &payload);
+                return;
+            }
+        };
+        let mut payload = vec![0u8; header.payload_len as usize];
+        if read_exact_faulted(&mut stream, &mut payload).is_err() {
+            return;
+        }
+        last_activity = Instant::now();
+        // Chaos: deterministic single-bit corruption of the received
+        // payload — the checksum below must catch it and answer with a
+        // typed malformed-frame error, never serve corrupted data.
+        if !payload.is_empty() {
+            if let Some(v) = fault::fire_value(site::NET_FRAME) {
+                let bit = (v % (payload.len() as u64 * 8)) as usize;
+                payload[bit / 8] ^= 1 << (bit % 8);
+            }
+        }
+        // Frame-level violations keep the connection: the length prefix was
+        // honored, so framing is intact and the next frame is readable.
+        let resp = if proto::checksum(&payload) != header.checksum {
+            m.record_frame_malformed();
+            Response::Error(ServiceError::Invalid(SpmvError::Frame(
+                "payload checksum mismatch".into(),
+            )))
+        } else {
+            match Op::from_code(header.opcode) {
+                None => {
+                    m.record_frame_malformed();
+                    Response::Error(ServiceError::Invalid(SpmvError::Frame(format!(
+                        "unknown opcode 0x{:02x}",
+                        header.opcode
+                    ))))
+                }
+                Some(op) => match Request::decode(op, &payload) {
+                    Err(e) => {
+                        m.record_frame_malformed();
+                        Response::Error(ServiceError::Invalid(e))
+                    }
+                    Ok(req) => handle_request(inner, req, &header, frame_start),
+                },
+            }
+        };
+        drop(payload);
+        let body = resp.encode_payload();
+        if write_frame(&mut stream, resp.opcode(), header.request_id, &body).is_err() {
+            return;
+        }
+    }
+}
+
+/// Serve one decoded request. Every arm returns a reply — the "no request
+/// accepted past the header is ever dropped" half of the drain contract.
+fn handle_request(
+    inner: &Arc<Inner>,
+    req: Request,
+    header: &Header,
+    frame_start: Instant,
+) -> Response {
+    // Draining: new *work* gets a typed shutdown answer; observability ops
+    // stay live so an operator can watch the drain complete.
+    if inner.draining()
+        && !matches!(req, Request::Metrics | Request::Health | Request::Drain)
+    {
+        return Response::Error(ServiceError::ShutDown);
+    }
+    let deadline = {
+        let d = if header.deadline_ms > 0 {
+            Some(Duration::from_millis(header.deadline_ms as u64))
+        } else {
+            inner.svc.default_deadline()
+        };
+        d.and_then(|d| frame_start.checked_add(d))
+    };
+    match req {
+        Request::Register { nrows, ncols, row_ptr, col_idx, vals } => {
+            let (Ok(nrows), Ok(ncols)) = (usize::try_from(nrows), usize::try_from(ncols))
+            else {
+                return Response::Error(ServiceError::Invalid(SpmvError::InvalidMatrix(
+                    "matrix dimensions overflow".into(),
+                )));
+            };
+            match Csr::from_parts(nrows, ncols, row_ptr, col_idx, vals) {
+                Err(e) => Response::Error(ServiceError::Invalid(e)),
+                Ok(csr) => match inner.svc.register(csr) {
+                    Ok(id) => Response::Registered { id: id.0 },
+                    Err(e) => Response::Error(e),
+                },
+            }
+        }
+        Request::Spmv { id, x } => {
+            match inner.svc.submit_with_deadline_at(MatrixId(id), x, deadline).recv() {
+                Ok(Ok(y)) => Response::Spmv { y },
+                Ok(Err(e)) => Response::Error(e),
+                Err(_) => Response::Error(ServiceError::ShutDown),
+            }
+        }
+        Request::SpmmBatch { id, xs } => {
+            let rxs = inner.svc.submit_batch(MatrixId(id), xs, deadline);
+            let mut ys = Vec::with_capacity(rxs.len());
+            for rx in rxs {
+                match rx.recv() {
+                    Ok(Ok(y)) => ys.push(y),
+                    // One frame, one reply: the first per-RHS error answers
+                    // for the whole (atomically admitted) batch.
+                    Ok(Err(e)) => return Response::Error(e),
+                    Err(_) => return Response::Error(ServiceError::ShutDown),
+                }
+            }
+            Response::SpmmBatch { ys }
+        }
+        Request::Metrics => Response::Metrics { json: inner.svc.metrics_json().to_string() },
+        Request::Health => Response::Health { draining: inner.draining() },
+        Request::Drain => {
+            inner.begin_drain();
+            let t0 = Instant::now();
+            // Flush: wait (bounded) for every other connection to finish —
+            // their in-flight replies are being written while we sit here.
+            while inner.open_connections() > 1 && t0.elapsed() < inner.cfg.drain_wait {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            inner.record_drain_done();
+            Response::Drain { json: inner.svc.metrics_json().to_string() }
+        }
+    }
+}
+
+enum FirstByte {
+    Byte,
+    TimedOut,
+    ClosedOrError,
+}
+
+fn read_first_byte(stream: &mut TcpStream, hdr: &mut [u8; HEADER_LEN]) -> FirstByte {
+    if fault::maybe_io(site::NET_READ).is_err() {
+        return FirstByte::ClosedOrError;
+    }
+    let mut b = [0u8; 1];
+    match stream.read(&mut b) {
+        Ok(0) => FirstByte::ClosedOrError, // clean peer close
+        Ok(_) => {
+            hdr[0] = b[0];
+            FirstByte::Byte
+        }
+        Err(ref e) if would_block(e) => FirstByte::TimedOut,
+        Err(_) => FirstByte::ClosedOrError,
+    }
+}
+
+/// `read_exact` under the socket's read deadline, with the `net.read` chaos
+/// site in front: a mid-frame stall or injected short read is an error that
+/// closes the connection (the slow-loris path).
+fn read_exact_faulted(stream: &mut TcpStream, buf: &mut [u8]) -> io::Result<()> {
+    fault::maybe_io(site::NET_READ)?;
+    stream.read_exact(buf)
+}
+
+/// Write one whole frame, with the `net.write` chaos site in front.
+fn write_frame(
+    stream: &mut TcpStream,
+    opcode: u8,
+    request_id: u64,
+    payload: &[u8],
+) -> io::Result<()> {
+    fault::maybe_io(site::NET_WRITE)?;
+    let frame = proto::frame(opcode, request_id, 0, payload);
+    stream.write_all(&frame)?;
+    stream.flush()
+}
+
+fn would_block(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// SIGTERM → graceful drain, with zero dependencies: a raw `signal(2)`
+/// registration whose handler only stores to a static atomic (the only
+/// async-signal-safe thing a handler may do). The acceptor and
+/// [`Server::run_until_drained`] poll the flag.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Once;
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+    static INSTALL: Once = Once::new();
+
+    extern "C" fn on_term(_signum: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        INSTALL.call_once(|| unsafe {
+            extern "C" {
+                fn signal(signum: i32, handler: usize) -> usize;
+            }
+            const SIGTERM: i32 = 15;
+            let handler: extern "C" fn(i32) = on_term;
+            signal(SIGTERM, handler as usize);
+        });
+    }
+
+    pub fn requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = ServerConfig::default();
+        assert!(cfg.max_conns >= 1);
+        assert!(cfg.handlers >= 1);
+        assert!(cfg.io_timeout < cfg.idle_timeout);
+        assert!(cfg.max_frame >= 1 << 20);
+    }
+
+    #[test]
+    fn server_binds_and_shuts_down_cleanly() {
+        let svc = Arc::new(SpmvService::new(1, 4));
+        let server = Server::start(
+            svc,
+            "127.0.0.1:0",
+            ServerConfig {
+                io_timeout: Duration::from_millis(50),
+                idle_timeout: Duration::from_millis(100),
+                ..ServerConfig::default()
+            },
+        )
+        .expect("bind");
+        assert_ne!(server.local_addr().port(), 0);
+        assert!(!server.is_draining());
+        assert_eq!(server.open_connections(), 0);
+        server.shutdown(); // must join without deadlock
+    }
+}

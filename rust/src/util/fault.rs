@@ -60,10 +60,33 @@ pub mod site {
     /// default 1) — lets chaos tests fill the admission queue and expire
     /// deadlines deterministically.
     pub const SERVICE_LATENCY: &str = "service.latency";
+    /// Drop a freshly accepted TCP connection in the wire front-end's
+    /// acceptor ([`crate::net::server`]) before it reaches a handler.
+    pub const NET_ACCEPT: &str = "net.accept";
+    /// Injected I/O error on a socket read — models a short read / peer
+    /// reset mid-frame. Fired through [`super::maybe_io`].
+    pub const NET_READ: &str = "net.read";
+    /// Injected I/O error on a socket write — models a short write / broken
+    /// pipe while replying. Fired through [`super::maybe_io`].
+    pub const NET_WRITE: &str = "net.write";
+    /// Deterministic single-bit corruption of a received frame payload
+    /// (before checksum verification), via [`super::fire_value`] — the
+    /// wire's answer must be a typed malformed-frame error, never a panic.
+    pub const NET_FRAME: &str = "net.frame";
 
     /// All registered sites (docs, CLI banners).
-    pub const ALL: [&str; 6] =
-        [TEAM_LANE, EXEC_SPMV, CONVERT_SPC5, CONVERT_SELL, CONVERT_PLAN, SERVICE_LATENCY];
+    pub const ALL: [&str; 10] = [
+        TEAM_LANE,
+        EXEC_SPMV,
+        CONVERT_SPC5,
+        CONVERT_SELL,
+        CONVERT_PLAN,
+        SERVICE_LATENCY,
+        NET_ACCEPT,
+        NET_READ,
+        NET_WRITE,
+        NET_FRAME,
+    ];
 }
 
 /// One parsed `<site>:<rate>:<seed>[:<param>]` entry.
@@ -226,6 +249,40 @@ pub fn maybe_fail(name: &str) -> Result<(), SpmvError> {
     }
 }
 
+/// Return an injected `std::io::Error` when the site fires — used by the
+/// wire sites (`net.read`/`net.write`) to model short reads, short writes
+/// and mid-frame peer resets through the real error-propagation path.
+pub fn maybe_io(name: &str) -> std::io::Result<()> {
+    if should_fire(name) {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("injected fault at site '{name}'"),
+        ))
+    } else {
+        Ok(())
+    }
+}
+
+/// Consume one draw of `name`; when the site fires, return a deterministic
+/// 64-bit value derived from `(seed, draw)` — a second stream decorrelated
+/// from the firing threshold, used by corruption sites (`net.frame`) to
+/// pick, e.g., which bit of a frame to flip.
+pub fn fire_value(name: &str) -> Option<u64> {
+    ENV_ONCE.call_once(init_from_env);
+    if !ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    let st = state_of(name)?;
+    let n = st.draws.fetch_add(1, Ordering::Relaxed);
+    if !draw_fires(st.spec.seed, n, st.spec.rate) {
+        return None;
+    }
+    Some(
+        SplitMix64::new(st.spec.seed.rotate_left(17) ^ n.wrapping_mul(0xD134_2543_DE82_EF95))
+            .next_u64(),
+    )
+}
+
 /// Sleep the site's `param` milliseconds when it fires — used by latency
 /// sites.
 pub fn maybe_delay(name: &str) {
@@ -352,8 +409,41 @@ mod tests {
 
     #[test]
     fn site_registry_is_stable() {
-        assert_eq!(site::ALL.len(), 6);
+        assert_eq!(site::ALL.len(), 10);
         assert!(site::ALL.contains(&site::TEAM_LANE));
         assert!(site::ALL.contains(&site::SERVICE_LATENCY));
+        for net in [site::NET_ACCEPT, site::NET_READ, site::NET_WRITE, site::NET_FRAME] {
+            assert!(site::ALL.contains(&net), "missing wire site {net}");
+        }
+    }
+
+    #[test]
+    fn io_site_errors_when_armed() {
+        let _g = lock();
+        arm("test.wire:1.0:31").unwrap();
+        let err = maybe_io("test.wire").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        assert!(err.to_string().contains("test.wire"), "{err}");
+        disarm();
+        assert!(maybe_io("test.wire").is_ok());
+    }
+
+    #[test]
+    fn fire_value_is_deterministic_and_rate_gated() {
+        let _g = lock();
+        arm("test.bits:1.0:77").unwrap();
+        // Rate 1.0: every draw fires with a value; the sequence is a pure
+        // function of (seed, draw index) so re-arming replays it exactly.
+        let a: Vec<u64> = (0..8).map(|_| fire_value("test.bits").unwrap()).collect();
+        arm("test.bits:1.0:77").unwrap();
+        let b: Vec<u64> = (0..8).map(|_| fire_value("test.bits").unwrap()).collect();
+        assert_eq!(a, b);
+        // Values are decorrelated, not constant.
+        assert!(a.windows(2).any(|w| w[0] != w[1]), "{a:?}");
+        // Rate 0: never fires. Disarmed: never fires.
+        arm("test.bits:0.0:77").unwrap();
+        assert!((0..32).all(|_| fire_value("test.bits").is_none()));
+        disarm();
+        assert!(fire_value("test.bits").is_none());
     }
 }

@@ -1,0 +1,299 @@
+//! Wire-chaos acceptance suite (ISSUE PR-8): the full TCP stack under
+//! seeded socket faults. With `net.read` / `net.frame` / `net.write` armed
+//! at nonzero rates, a register + 100 mixed spmv / spmm-batch workload
+//! must complete with zero server panics, a reply or typed error for every
+//! request, and every successful result bitwise-equal to the in-process
+//! path; a concurrent drain must deliver every in-flight reply.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use spc5::coordinator::{MatrixId, ServiceError, SpmvService};
+use spc5::matrix::{gen, Csr};
+use spc5::net::{Client, ClientConfig, ClientError, Server, ServerConfig};
+use spc5::util::fault;
+
+/// Fault table is process-global: chaos tests serialize on this lock.
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Armed;
+
+impl Armed {
+    fn new(spec: &str) -> Self {
+        fault::arm(spec).expect("valid fault spec");
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+/// Counts panics that unwind out of server threads. The hook chains to the
+/// default so genuine failures still print.
+fn server_panics() -> &'static AtomicU64 {
+    static COUNT: AtomicU64 = AtomicU64::new(0);
+    static INSTALL: OnceLock<()> = OnceLock::new();
+    INSTALL.get_or_init(|| {
+        let previous = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let name = std::thread::current().name().unwrap_or("").to_string();
+            if name.starts_with("spc5-net") {
+                COUNT.fetch_add(1, Ordering::SeqCst);
+            }
+            previous(info);
+        }));
+    });
+    &COUNT
+}
+
+fn blocky(n: usize, seed: u64) -> Csr<f64> {
+    gen::Structured {
+        nrows: n,
+        ncols: n,
+        nnz_per_row: 8.0,
+        run_len: 4.0,
+        row_corr: 0.7,
+        ..Default::default()
+    }
+    .generate(seed)
+}
+
+fn chaos_client(addr: &str, seed: u64) -> Client {
+    Client::with_config(
+        addr,
+        ClientConfig {
+            io_timeout: Duration::from_secs(2),
+            max_retries: 8,
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(40),
+            seed,
+            ..ClientConfig::default()
+        },
+    )
+}
+
+/// Register with a bounded retry loop: `register` is not auto-retried by
+/// the client (not idempotent), and under socket faults both transport
+/// errors and corrupted-request refusals are expected and retryable here
+/// (a duplicate registration is harmless in the test).
+fn register_retrying(client: &mut Client, m: &Csr<f64>) -> MatrixId {
+    for _ in 0..40 {
+        match client.register(m) {
+            Ok(id) => return id,
+            Err(ClientError::Service(ServiceError::Invalid(_)))
+            | Err(ClientError::Io(_))
+            | Err(ClientError::Protocol(_)) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("register refused with a non-retryable error: {e}"),
+        }
+    }
+    panic!("register never succeeded under chaos");
+}
+
+#[test]
+fn hundred_mixed_requests_survive_socket_chaos() {
+    let _serial = chaos_lock();
+    let panics = server_panics();
+    let before = panics.load(Ordering::SeqCst);
+    // Nonzero rates on the read, corruption and write sites (seeded:
+    // deterministic draw sequences, order-dependent interleavings).
+    let _armed = Armed::new("net.read:0.05:101,net.frame:0.05:102,net.write:0.03:103");
+
+    let svc = Arc::new(SpmvService::<f64>::new(2, 8));
+    let server = Server::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig {
+            io_timeout: Duration::from_millis(300),
+            idle_timeout: Duration::from_secs(10),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+    let mut client = chaos_client(&addr, 1);
+
+    let n = 128usize;
+    let m = blocky(n, 17);
+    let id = register_retrying(&mut client, &m);
+
+    let make_x = |req: usize| -> Vec<f64> {
+        (0..n).map(|i| ((i * 5 + req) % 23) as f64 * 0.5 - 5.0).collect()
+    };
+    let mut outcomes: Vec<(Vec<f64>, Vec<f64>)> = Vec::new(); // (x, wire y)
+    let mut typed_errors = 0usize;
+    let mut total = 0usize;
+    let mut req = 0usize;
+    while total < 100 {
+        if req % 5 == 0 && total + 4 <= 100 {
+            // A 4-RHS batch frame.
+            let xs: Vec<Vec<f64>> = (0..4).map(|j| make_x(req * 10 + j)).collect();
+            total += 4;
+            match client.spmm_batch(id, &xs) {
+                Ok(ys) => {
+                    assert_eq!(ys.len(), xs.len());
+                    for (x, y) in xs.into_iter().zip(ys) {
+                        outcomes.push((x, y));
+                    }
+                }
+                Err(ClientError::Service(_)) => typed_errors += 4,
+                Err(e) => panic!("request lost without a typed error: {e}"),
+            }
+        } else {
+            let x = make_x(req);
+            total += 1;
+            match client.spmv(id, &x) {
+                Ok(y) => outcomes.push((x, y)),
+                Err(ClientError::Service(_)) => typed_errors += 1,
+                Err(e) => panic!("request lost without a typed error: {e}"),
+            }
+        }
+        req += 1;
+    }
+    assert_eq!(total, 100);
+    // Under 5% corruption some typed refusals are expected, but chaos must
+    // not eat the workload: the majority is served.
+    assert!(
+        outcomes.len() >= 60,
+        "served {} of 100 (typed errors: {typed_errors})",
+        outcomes.len()
+    );
+
+    // Every served result is bitwise the in-process answer (same service,
+    // same operator — the wire adds transport, not arithmetic).
+    for (x, wire_y) in &outcomes {
+        let in_proc = svc.spmv(id, x.clone()).expect("in-process path");
+        assert_eq!(wire_y, &in_proc, "wire result diverged from the in-process path");
+    }
+
+    assert_eq!(
+        panics.load(Ordering::SeqCst),
+        before,
+        "a server thread panicked under socket chaos"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_drain_delivers_every_in_flight_reply() {
+    let _serial = chaos_lock();
+    let panics = server_panics();
+    let before = panics.load(Ordering::SeqCst);
+    // A rate-1.0 latency fault stretches every batch to ~30ms so requests
+    // are genuinely in flight when the drain lands mid-workload.
+    let armed = Armed::new("service.latency:1.0:7:30");
+
+    let svc = Arc::new(SpmvService::<f64>::new(2, 8));
+    let server = Server::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig {
+            io_timeout: Duration::from_millis(500),
+            idle_timeout: Duration::from_secs(10),
+            drain_wait: Duration::from_secs(10),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+
+    let n = 96usize;
+    let m = blocky(n, 23);
+    let mut setup = chaos_client(&addr, 2);
+    let id = register_retrying(&mut setup, &m);
+
+    // Three worker clients drive singles and batches; each request either
+    // succeeds (reply delivered: in-flight at drain time or before) or is
+    // the typed shutdown refusal — nothing else, and nothing hangs.
+    let stop_seen = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let workers: Vec<_> = (0..3)
+        .map(|w| {
+            let addr = addr.clone();
+            let stop_seen = Arc::clone(&stop_seen);
+            std::thread::spawn(move || {
+                let mut client = chaos_client(&addr, 100 + w as u64);
+                let mut served: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+                let mut shutdowns = 0usize;
+                for i in 0..12 {
+                    let x: Vec<f64> =
+                        (0..n).map(|j| ((j * 3 + w * 7 + i) % 11) as f64 - 2.0).collect();
+                    if i % 4 == 3 {
+                        let xs = vec![x.clone(), x.clone()];
+                        match client.spmm_batch(id, &xs) {
+                            Ok(ys) => {
+                                for (xi, yi) in xs.into_iter().zip(ys) {
+                                    served.push((xi, yi));
+                                }
+                            }
+                            Err(ClientError::Service(ServiceError::ShutDown)) => shutdowns += 2,
+                            Err(e) => panic!("worker {w}: non-typed failure: {e}"),
+                        }
+                    } else {
+                        match client.spmv(id, &x) {
+                            Ok(y) => served.push((x, y)),
+                            Err(ClientError::Service(ServiceError::ShutDown)) => shutdowns += 1,
+                            Err(e) => panic!("worker {w}: non-typed failure: {e}"),
+                        }
+                    }
+                    if shutdowns > 0 {
+                        stop_seen.store(true, Ordering::SeqCst);
+                    }
+                }
+                (served, shutdowns)
+            })
+        })
+        .collect();
+
+    // Let the workload get airborne, then drain concurrently through a
+    // separate connection.
+    std::thread::sleep(Duration::from_millis(120));
+    let mut drainer = chaos_client(&addr, 3);
+    let final_metrics = drainer.drain().expect("drain must answer with the final snapshot");
+    assert!(final_metrics.contains("drain_duration_ms"), "{final_metrics}");
+    assert!(server.is_draining());
+
+    let mut all_served: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+    let mut total_shutdowns = 0usize;
+    for h in workers {
+        let (served, shutdowns) = h.join().expect("worker thread must not panic");
+        all_served.extend(served);
+        total_shutdowns += shutdowns;
+    }
+    assert!(!all_served.is_empty(), "some requests must have completed before the drain");
+    assert!(
+        total_shutdowns > 0 || !stop_seen.load(Ordering::SeqCst),
+        "post-drain requests must see the typed shutdown error"
+    );
+
+    // Post-drain, a fresh op is refused typed — from the drainer's still
+    // open connection or at accept for a new one.
+    let probe = vec![1.0; n];
+    match drainer.spmv(id, &probe) {
+        Err(ClientError::Service(ServiceError::ShutDown)) => {}
+        Err(ClientError::Io(_)) => {}
+        other => panic!("expected typed shutdown after drain, got {other:?}"),
+    }
+
+    // Verify the delivered replies bitwise against the (still live,
+    // fault-disarmed) in-process path.
+    drop(armed);
+    for (x, wire_y) in &all_served {
+        let in_proc = svc.spmv(id, x.clone()).expect("in-process path");
+        assert_eq!(wire_y, &in_proc, "in-flight reply diverged from the in-process path");
+    }
+
+    assert_eq!(
+        panics.load(Ordering::SeqCst),
+        before,
+        "a server thread panicked during the concurrent drain"
+    );
+    server.shutdown();
+}

@@ -1,0 +1,269 @@
+//! Hostile-wire suite: the server under adversarial bytes. Truncated
+//! frames, oversized length prefixes, garbage opcodes, checksum-corrupted
+//! payloads and mid-frame disconnects must never panic the server — every
+//! violation is a typed error frame or a clean close, and a well-behaved
+//! client keeps working afterwards. The decode layer is additionally
+//! fuzzed directly with seeded random and mutated byte soups.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use spc5::coordinator::SpmvService;
+use spc5::matrix::gen;
+use spc5::net::proto::{self, Header, Op, Request, Response, HEADER_LEN, OP_ERROR};
+use spc5::net::{Client, ClientConfig, Server, ServerConfig};
+use spc5::util::prng::{Rng, SplitMix64};
+
+fn start_server() -> (Server, Arc<SpmvService<f64>>) {
+    let svc = Arc::new(SpmvService::<f64>::new(1, 4));
+    let server = Server::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig {
+            io_timeout: Duration::from_millis(200),
+            idle_timeout: Duration::from_secs(5),
+            // Small frame limit so the oversized-length attack does not need
+            // a 64 MiB prefix to be hostile.
+            max_frame: 1 << 16,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    (server, svc)
+}
+
+fn raw_conn(server: &Server) -> TcpStream {
+    let s = TcpStream::connect(server.local_addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+    s
+}
+
+/// Read one reply frame off a raw socket; None on close/timeout.
+fn read_reply(s: &mut TcpStream) -> Option<(Header, Vec<u8>)> {
+    let mut hdr = [0u8; HEADER_LEN];
+    s.read_exact(&mut hdr).ok()?;
+    let header = proto::decode_header(&hdr, proto::DEFAULT_MAX_FRAME).ok()?;
+    let mut payload = vec![0u8; header.payload_len as usize];
+    s.read_exact(&mut payload).ok()?;
+    Some((header, payload))
+}
+
+/// The canary: after an attack the server must still serve a good client.
+fn assert_still_serving(server: &Server) {
+    let mut client = Client::with_config(
+        &server.local_addr().to_string(),
+        ClientConfig {
+            max_retries: 2,
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(10),
+            ..ClientConfig::default()
+        },
+    );
+    assert!(!client.health().expect("server must survive hostile bytes"));
+}
+
+#[test]
+fn truncated_header_then_close_is_shed_cleanly() {
+    let (server, _svc) = start_server();
+    {
+        let mut s = raw_conn(&server);
+        // 5 bytes of a 32-byte header, then vanish.
+        s.write_all(b"SPC5\x01").unwrap();
+    } // dropped: mid-frame disconnect
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn bad_magic_gets_a_typed_error_frame() {
+    let (server, svc) = start_server();
+    let mut s = raw_conn(&server);
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(b"EVIL");
+    s.write_all(&hdr).unwrap();
+    let (reply, payload) = read_reply(&mut s).expect("typed refusal, not a drop");
+    assert_eq!(reply.opcode, OP_ERROR);
+    assert_eq!(reply.request_id, 0, "framing lost: connection-level error id");
+    match Response::decode(reply.opcode, &payload).expect("decodable error frame") {
+        Response::Error(e) => assert!(e.to_string().contains("magic"), "{e}"),
+        other => panic!("expected error response, got {}", other.label()),
+    }
+    assert!(svc.metrics().frames_malformed.load(Ordering::Relaxed) >= 1);
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    let (server, svc) = start_server();
+    let mut s = raw_conn(&server);
+    // A valid header claiming a 4 GiB payload: the server must refuse from
+    // the 32 header bytes alone — it never tries to read (or allocate) the
+    // claimed body.
+    let hdr = proto::encode_header(&Header {
+        opcode: Op::Spmv.code(),
+        request_id: 7,
+        deadline_ms: 0,
+        payload_len: u32::MAX,
+        checksum: 0,
+    });
+    s.write_all(&hdr).unwrap();
+    let (reply, payload) = read_reply(&mut s).expect("typed refusal");
+    assert_eq!(reply.opcode, OP_ERROR);
+    match Response::decode(reply.opcode, &payload).expect("decodable") {
+        Response::Error(e) => assert!(e.to_string().contains("frame limit"), "{e}"),
+        other => panic!("expected error response, got {}", other.label()),
+    }
+    assert!(svc.metrics().frames_malformed.load(Ordering::Relaxed) >= 1);
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn garbage_opcode_keeps_the_connection_alive() {
+    let (server, svc) = start_server();
+    let mut s = raw_conn(&server);
+    // Well-framed (valid length + checksum) but a meaningless opcode: the
+    // framing survives, so the server answers typed and keeps the socket.
+    s.write_all(&proto::frame(0x6b, 99, 0, b"junk")).unwrap();
+    let (reply, payload) = read_reply(&mut s).expect("typed reply");
+    assert_eq!(reply.opcode, OP_ERROR);
+    assert_eq!(reply.request_id, 99, "framing intact: the id is echoed");
+    match Response::decode(reply.opcode, &payload).expect("decodable") {
+        Response::Error(e) => assert!(e.to_string().contains("opcode"), "{e}"),
+        other => panic!("expected error response, got {}", other.label()),
+    }
+    // Same socket, now a valid health probe: it must still be served.
+    s.write_all(&proto::frame(Op::Health.code(), 100, 0, &[])).unwrap();
+    let (reply, payload) = read_reply(&mut s).expect("health on the same socket");
+    assert_eq!(reply.request_id, 100);
+    match Response::decode(reply.opcode, &payload).expect("decodable") {
+        Response::Health { draining } => assert!(!draining),
+        other => panic!("expected health response, got {}", other.label()),
+    }
+    assert!(svc.metrics().frames_malformed.load(Ordering::Relaxed) >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn corrupted_payload_fails_the_checksum_not_the_server() {
+    let (server, svc) = start_server();
+    let mut s = raw_conn(&server);
+    let mut frame = proto::frame(
+        Op::Spmv.code(),
+        11,
+        0,
+        &Request::Spmv { id: 1, x: vec![1.0, 2.0, 3.0] }.encode_payload(),
+    );
+    frame[HEADER_LEN + 9] ^= 0x10; // one flipped payload bit
+    s.write_all(&frame).unwrap();
+    let (reply, payload) = read_reply(&mut s).expect("typed reply");
+    assert_eq!((reply.opcode, reply.request_id), (OP_ERROR, 11));
+    match Response::decode(reply.opcode, &payload).expect("decodable") {
+        Response::Error(e) => assert!(e.to_string().contains("checksum"), "{e}"),
+        other => panic!("expected error response, got {}", other.label()),
+    }
+    assert!(svc.metrics().frames_malformed.load(Ordering::Relaxed) >= 1);
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn mid_frame_disconnect_is_shed_cleanly() {
+    let (server, _svc) = start_server();
+    {
+        let mut s = raw_conn(&server);
+        // Header promises 1000 bytes; deliver 10 and vanish.
+        let hdr = proto::encode_header(&Header {
+            opcode: Op::Spmv.code(),
+            request_id: 3,
+            deadline_ms: 0,
+            payload_len: 1000,
+            checksum: 0,
+        });
+        s.write_all(&hdr).unwrap();
+        s.write_all(&[0u8; 10]).unwrap();
+    }
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn slow_loris_mid_frame_stall_is_dropped() {
+    let (server, _svc) = start_server();
+    let mut s = raw_conn(&server);
+    // First header byte arrives, then nothing: the peer is now mid-frame
+    // and must be shed after io_timeout (200ms), not held forever.
+    s.write_all(b"S").unwrap();
+    let mut buf = [0u8; 1];
+    let t0 = std::time::Instant::now();
+    // The server closes; our read observes EOF (Ok(0)) or a reset.
+    let closed = matches!(s.read(&mut buf), Ok(0) | Err(_));
+    assert!(closed, "server must shed a mid-frame staller");
+    assert!(
+        t0.elapsed() < Duration::from_secs(4),
+        "shedding must happen on the io_timeout scale"
+    );
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn decode_layer_survives_random_and_mutated_byte_soup() {
+    let mut rng = SplitMix64::new(0x5bc5_600d_f00d);
+    // Pure random soup into every decode entry point: outcomes are Ok or
+    // typed Err — never a panic, never an attacker-sized allocation.
+    for round in 0..2000 {
+        let len = (rng.next_u64() % 96) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        if bytes.len() >= HEADER_LEN {
+            let hdr: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+            let _ = proto::decode_header(&hdr, proto::DEFAULT_MAX_FRAME);
+        }
+        let op = match round % 6 {
+            0 => Op::Register,
+            1 => Op::Spmv,
+            2 => Op::SpmmBatch,
+            3 => Op::Metrics,
+            4 => Op::Health,
+            _ => Op::Drain,
+        };
+        let _ = Request::decode(op, &bytes);
+        let _ = Response::decode(rng.next_u64() as u8, &bytes);
+    }
+    // Mutated valid encodings: single-byte corruptions of real requests.
+    let valid: Vec<(Op, Vec<u8>)> = vec![
+        (Op::Register, Request::Register {
+            nrows: 4,
+            ncols: 4,
+            row_ptr: vec![0, 1, 2, 3, 4],
+            col_idx: vec![0, 1, 2, 3],
+            vals: vec![1.0, 2.0, 3.0, 4.0],
+        }
+        .encode_payload()),
+        (Op::Spmv, Request::Spmv { id: 1, x: vec![1.0, 2.0, 3.0, 4.0] }.encode_payload()),
+        (Op::SpmmBatch, Request::SpmmBatch {
+            id: 1,
+            xs: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+        }
+        .encode_payload()),
+    ];
+    for (op, payload) in &valid {
+        for _ in 0..500 {
+            let mut mutated = payload.clone();
+            if mutated.is_empty() {
+                continue;
+            }
+            let at = (rng.next_u64() as usize) % mutated.len();
+            mutated[at] ^= (rng.next_u64() % 255 + 1) as u8;
+            let _ = Request::decode(*op, &mutated); // Ok or typed Err, no panic
+            // Truncations of the mutation, too.
+            let cut = (rng.next_u64() as usize) % (mutated.len() + 1);
+            let _ = Request::decode(*op, &mutated[..cut]);
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Wire front-end integration: a real TCP server in front of the real
+//! service, driven by the real client. Asserts the protocol contract
+//! (results bitwise-equal the in-process path, typed errors across the
+//! wire) and the connection-lifecycle policies (cap, idle timeout,
+//! deadline anchoring at frame receipt).
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use spc5::coordinator::{ServiceConfig, ServiceError, SpmvService};
+use spc5::matrix::{gen, Csr};
+use spc5::net::{Client, ClientConfig, ClientError, Server, ServerConfig};
+use spc5::util::fault;
+
+/// Fault table is process-global: tests that arm specs must serialize.
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Armed;
+
+impl Armed {
+    fn new(spec: &str) -> Self {
+        fault::arm(spec).expect("valid fault spec");
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn blocky(n: usize, seed: u64) -> Csr<f64> {
+    gen::Structured {
+        nrows: n,
+        ncols: n,
+        nnz_per_row: 8.0,
+        run_len: 4.0,
+        row_corr: 0.7,
+        ..Default::default()
+    }
+    .generate(seed)
+}
+
+fn quick_server(svc: Arc<SpmvService<f64>>) -> Server {
+    Server::start(
+        svc,
+        "127.0.0.1:0",
+        ServerConfig {
+            io_timeout: Duration::from_millis(300),
+            idle_timeout: Duration::from_secs(5),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind loopback")
+}
+
+fn quick_client(server: &Server) -> Client {
+    Client::with_config(
+        &server.local_addr().to_string(),
+        ClientConfig {
+            io_timeout: Duration::from_secs(2),
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(20),
+            ..ClientConfig::default()
+        },
+    )
+}
+
+#[test]
+fn wire_results_match_the_in_process_path_bitwise() {
+    let _serial = chaos_lock(); // no faults armed, but keep the table stable
+    let svc = Arc::new(SpmvService::<f64>::new(2, 8));
+    let server = quick_server(Arc::clone(&svc));
+    let mut client = quick_client(&server);
+
+    let m = blocky(160, 11);
+    let wire_id = client.register(&m).expect("register over the wire");
+    let local_id = svc.register(m.clone()).expect("register in-process");
+
+    for k in 0..10 {
+        let x: Vec<f64> = (0..160).map(|i| ((i * 7 + k) % 19) as f64 * 0.5 - 4.0).collect();
+        let via_wire = client.spmv(wire_id, &x).expect("wire spmv");
+        let in_proc = svc.spmv(local_id, x).expect("in-process spmv");
+        assert_eq!(via_wire, in_proc, "wire and in-process must be bitwise equal");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn wire_batch_equals_singles_and_observability_ops_work() {
+    let _serial = chaos_lock();
+    let svc = Arc::new(SpmvService::<f64>::new(2, 8));
+    let server = quick_server(Arc::clone(&svc));
+    let mut client = quick_client(&server);
+
+    let m = blocky(120, 3);
+    let id = client.register(&m).expect("register");
+    let xs: Vec<Vec<f64>> = (0..5)
+        .map(|k| (0..120).map(|i| ((i + k) % 9) as f64 - 2.0).collect())
+        .collect();
+    let ys = client.spmm_batch(id, &xs).expect("batch");
+    assert_eq!(ys.len(), xs.len());
+    for (x, y) in xs.iter().zip(&ys) {
+        let single = client.spmv(id, x).expect("single");
+        assert_eq!(*y, single, "one batch frame must equal k single frames");
+    }
+
+    assert!(!client.health().expect("health"), "fresh server is not draining");
+    let metrics = client.metrics().expect("metrics");
+    for key in ["connections_open", "connections_rejected", "frames_malformed", "requests_total"] {
+        assert!(metrics.contains(key), "metrics JSON missing {key}: {metrics}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn service_errors_cross_the_wire_losslessly() {
+    let _serial = chaos_lock();
+    let svc = Arc::new(SpmvService::<f64>::new(1, 4));
+    let server = quick_server(Arc::clone(&svc));
+    let mut client = quick_client(&server);
+
+    let m = blocky(64, 5);
+    let id = client.register(&m).expect("register");
+
+    // Unknown matrix id: the exact same typed error the in-process path
+    // returns, with the id preserved.
+    match client.spmv(spc5::coordinator::MatrixId(9999), &[1.0; 64]) {
+        Err(ClientError::Service(ServiceError::UnknownMatrix(bad))) => assert_eq!(bad.0, 9999),
+        other => panic!("expected UnknownMatrix, got {other:?}"),
+    }
+    // Dimension mismatch carries both sides of the contract.
+    match client.spmv(id, &[1.0; 7]) {
+        Err(ClientError::Service(ServiceError::DimMismatch { got, want })) => {
+            assert_eq!((got, want), (7, 64));
+        }
+        other => panic!("expected DimMismatch, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn wire_deadline_counts_time_from_frame_receipt() {
+    let _serial = chaos_lock();
+    // A rate-1.0 latency fault makes every batch take ~30ms; a 1ms wire
+    // deadline must expire even though the *queue* was empty at dispatch —
+    // the budget is anchored at frame receipt, not dispatch (the PR-8
+    // deadline-accounting fix).
+    let _armed = Armed::new("service.latency:1.0:9:30");
+    let svc = Arc::new(SpmvService::<f64>::new(1, 4));
+    let server = quick_server(Arc::clone(&svc));
+    let mut client = quick_client(&server);
+
+    let m = blocky(96, 7);
+    let id = client.register(&m).expect("register");
+    let x = vec![1.0; 96];
+
+    // Occupy the single dispatcher with an in-process no-deadline request
+    // (the wire and in-process paths share one service), so the
+    // deadline-bearing wire request queues behind its ~30ms batch and is
+    // shed when its turn to dispatch comes.
+    let busy = svc.submit(id, x.clone());
+    std::thread::sleep(Duration::from_millis(5));
+    match client.spmv_deadline(id, &x, 1) {
+        Err(ClientError::Service(ServiceError::DeadlineExceeded)) => {}
+        other => panic!("expected DeadlineExceeded over the wire, got {other:?}"),
+    }
+    busy.recv().expect("busy reply").expect("no-deadline request still served");
+    let metrics = client.metrics().expect("metrics");
+    assert!(metrics.contains("deadline_expired"), "{metrics}");
+
+    // A generous deadline still succeeds under the same latency fault.
+    let y = client.spmv_deadline(id, &x, 30_000).expect("30s deadline is plenty");
+    assert_eq!(y.len(), 96);
+    server.shutdown();
+}
+
+#[test]
+fn connection_cap_refuses_with_typed_overloaded() {
+    let _serial = chaos_lock();
+    let svc = Arc::new(SpmvService::<f64>::new(1, 4));
+    let server = Server::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig {
+            max_conns: 1,
+            io_timeout: Duration::from_millis(300),
+            idle_timeout: Duration::from_secs(5),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+
+    // First client occupies the single slot...
+    let mut first = Client::with_config(&addr, ClientConfig::default());
+    assert!(!first.health().expect("first connection serves"));
+    assert_eq!(server.open_connections(), 1);
+
+    // ...so the second gets an accept-time typed refusal, not a silent drop.
+    let mut second = Client::with_config(
+        &addr,
+        ClientConfig { max_retries: 0, ..ClientConfig::default() },
+    );
+    match second.health() {
+        Err(ClientError::Service(ServiceError::Overloaded { queued, cap })) => {
+            assert_eq!(cap, 1);
+            assert!(queued >= 1, "queued = {queued}");
+        }
+        other => panic!("expected Overloaded refusal, got {other:?}"),
+    }
+    assert!(
+        svc.metrics().connections_rejected.load(Ordering::Relaxed) >= 1,
+        "rejection must be counted"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn idle_connections_are_closed_and_clients_reconnect() {
+    let _serial = chaos_lock();
+    let svc = Arc::new(SpmvService::<f64>::new(1, 4));
+    let server = Server::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig {
+            io_timeout: Duration::from_millis(30),
+            idle_timeout: Duration::from_millis(60),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    let mut client = quick_client(&server);
+
+    assert!(!client.health().expect("first call"));
+    // Outlive the idle timeout: the server reaps the connection...
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while server.open_connections() > 0 {
+        assert!(std::time::Instant::now() < deadline, "idle connection never reaped");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // ...and the client transparently reconnects on the next call.
+    assert!(!client.health().expect("reconnect after idle close"));
+    server.shutdown();
+}
+
+#[test]
+fn drain_reports_final_metrics_and_refuses_new_work() {
+    let _serial = chaos_lock();
+    let svc = Arc::new(SpmvService::<f64>::new(1, 4));
+    let server = quick_server(Arc::clone(&svc));
+    let mut client = quick_client(&server);
+
+    let m = blocky(80, 13);
+    let id = client.register(&m).expect("register");
+    let x = vec![1.0; 80];
+    client.spmv(id, &x).expect("pre-drain spmv");
+
+    let snapshot = client.drain().expect("drain reply");
+    assert!(snapshot.contains("drain_duration_ms"), "{snapshot}");
+    assert!(server.is_draining());
+
+    // Post-drain work on the surviving connection: typed shutdown, not a
+    // hang or a dropped socket...
+    match client.spmv(id, &x) {
+        Err(ClientError::Service(ServiceError::ShutDown)) => {}
+        other => panic!("expected ShutDown after drain, got {other:?}"),
+    }
+    // ...while observability stays live for the operator.
+    assert!(client.health().expect("health during drain"), "draining flag must be set");
+
+    // New connections are refused at accept time.
+    let mut late = Client::with_config(
+        &server.local_addr().to_string(),
+        ClientConfig { max_retries: 0, ..ClientConfig::default() },
+    );
+    match late.metrics() {
+        Err(ClientError::Service(ServiceError::ShutDown)) => {}
+        // The acceptor may also have been torn down already.
+        Err(ClientError::Io(_)) => {}
+        other => panic!("expected refusal for a post-drain connection, got {other:?}"),
+    }
+    server.shutdown();
+}

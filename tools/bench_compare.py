@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Compare a bench JSON output against a committed baseline snapshot.
+
+Stdlib-only. Built for the perf-trajectory snapshots committed at the repo
+root (currently `BENCH_net.json` vs `target/bench-results/net_roundtrip.json`)
+but schema-agnostic: both files carry a `results` array of objects keyed by
+every non-numeric field (here `path` + `k`), and every shared numeric field
+is compared under the baseline's `tolerance` object.
+
+Usage:
+    python3 tools/bench_compare.py BASELINE CURRENT          # compare, exit 1 on regression
+    python3 tools/bench_compare.py --update BASELINE CURRENT # adopt CURRENT as the baseline
+
+Semantics:
+  - A baseline whose numeric fields are all null is *unpopulated* (the
+    template committed before any toolchain ran the bench): comparison is
+    skipped with exit 0 so CI stays green until first population.
+  - `*_max_ratio` tolerance: current/baseline must stay <= ratio (lower is
+    better, e.g. rtt_us).
+  - `*_min_ratio` tolerance: current/baseline must stay >= ratio (higher is
+    better, e.g. req_per_s).
+"""
+
+import json
+import sys
+from datetime import date
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        sys.exit(f"bench_compare: missing file: {path}")
+    except json.JSONDecodeError as e:
+        sys.exit(f"bench_compare: invalid JSON in {path}: {e}")
+
+
+def measured_fields(tolerances):
+    """Field names the baseline's tolerance object tracks; everything else
+    in a results row is identity."""
+    fields = {}
+    for key, bound in tolerances.items():
+        if key.endswith("_max_ratio"):
+            fields[key[: -len("_max_ratio")]] = (float(bound), "max")
+        elif key.endswith("_min_ratio"):
+            fields[key[: -len("_min_ratio")]] = (float(bound), "min")
+    return fields
+
+
+def result_key(row, measured):
+    """Identity of one results row: every field that is not a measurement."""
+    return tuple((k, v) for k, v in sorted(row.items()) if k not in measured)
+
+
+def is_unpopulated(baseline, measured):
+    rows = baseline.get("results", [])
+    return all(row.get(f) is None for row in rows for f in measured)
+
+
+def compare(baseline, current):
+    measured = measured_fields(baseline.get("tolerance", {}))
+    base_rows = {result_key(r, measured): r for r in baseline.get("results", [])}
+    regressions = []
+    checked = 0
+    for row in current.get("results", []):
+        key = result_key(row, measured)
+        base = base_rows.get(key)
+        if base is None:
+            print(f"note: no baseline row for {dict(key)}; skipped")
+            continue
+        for field, (bound, kind) in measured.items():
+            cur_val, base_val = row.get(field), base.get(field)
+            if cur_val is None or base_val is None or base_val == 0:
+                continue
+            ratio = float(cur_val) / float(base_val)
+            checked += 1
+            label = f"{dict(key)} {field}: {cur_val:.3g} vs baseline {base_val:.3g} (x{ratio:.2f})"
+            bad = ratio > bound if kind == "max" else ratio < bound
+            if bad:
+                regressions.append(f"REGRESSION {label}, bound x{bound}")
+            else:
+                print(f"ok: {label}")
+    if checked == 0:
+        print("bench_compare: no comparable numeric fields found")
+    for r in regressions:
+        print(r)
+    return len(regressions) == 0
+
+
+def update(baseline_path, baseline, current):
+    baseline["results"] = current.get("results", [])
+    for field in ("n", "iters", "schema_version"):
+        if field in current:
+            baseline[field] = current[field]
+    baseline["date"] = date.today().isoformat()
+    with open(baseline_path, "w") as f:
+        json.dump(baseline, f, indent=2)
+        f.write("\n")
+    print(f"bench_compare: baseline {baseline_path} updated from current run")
+
+
+def main(argv):
+    do_update = "--update" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 2:
+        sys.exit(__doc__)
+    baseline_path, current_path = paths
+    baseline = load(baseline_path)
+    current = load(current_path)
+    if do_update:
+        update(baseline_path, baseline, current)
+        return
+    if is_unpopulated(baseline, measured_fields(baseline.get("tolerance", {}))):
+        print(
+            f"bench_compare: baseline {baseline_path} is an unpopulated template; "
+            "nothing to compare (run with --update to adopt the current numbers)"
+        )
+        return
+    if not compare(baseline, current):
+        sys.exit(1)
+    print("bench_compare: no regressions")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
