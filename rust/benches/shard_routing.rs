@@ -1,0 +1,220 @@
+//! **Shard routing cost**: what the sharded fleet (rendezvous placement,
+//! replica routing, supervision) adds on top of a direct single-service
+//! wire path, and what the cross-connection coalescing window buys on a
+//! multi-connection single-RHS workload.
+//!
+//! Reported per path and k:
+//! - mean RTT per request (µs) over loopback TCP;
+//! - served requests/s.
+//!
+//! Rows `direct`/`routed` (k = 1 and 8) compare one synchronous client
+//! against `Server::start` vs `Server::start_sharded` (4 shards, 2 eager
+//! replicas). Rows `uncoalesced`/`coalesced` (k = 4 connections) drive 4
+//! concurrent clients of same-matrix singles into a fleet with the window
+//! off vs 200µs — the fused-batch k-sweep win across connections.
+//!
+//! Hard gate: routing and coalescing must not change the arithmetic
+//! (bitwise-equal replies); overhead is *reported*, not asserted. The JSON
+//! feeds `BENCH_shard.json` via `tools/bench_compare.py`.
+//!
+//! Run: `cargo bench --bench shard_routing`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use spc5::bench::{table::fmt1, TextTable};
+use spc5::coordinator::{ServiceConfig, ShardManager, ShardManagerConfig, SpmvService};
+use spc5::matrix::gen;
+use spc5::net::{Client, ClientConfig, Server, ServerConfig};
+use spc5::util::json::Json;
+use spc5::util::timing::Timer;
+
+const N: usize = 1024;
+const ITERS: usize = 200;
+const KS: [usize; 2] = [1, 8];
+const COALESCE_CLIENTS: usize = 4;
+const COALESCE_REQS: usize = 50;
+
+fn bench_client(addr: &str) -> Client {
+    Client::with_config(
+        addr,
+        ClientConfig { io_timeout: Duration::from_secs(5), ..ClientConfig::default() },
+    )
+}
+
+fn main() {
+    println!("== Shard routing: sharded fleet vs direct service, coalesced vs not ==\n");
+    let csr = gen::Structured {
+        nrows: N,
+        ncols: N,
+        nnz_per_row: 12.0,
+        run_len: 4.0,
+        row_corr: 0.8,
+        ..Default::default()
+    }
+    .generate(33);
+    println!("matrix: {}x{}, {} nnz; {ITERS} iters per cell\n", N, N, csr.nnz());
+
+    // One service config everywhere: identical operators (same format
+    // choice, same team partitioning) keep every path bitwise-comparable.
+    let service_cfg =
+        ServiceConfig { workers: 2, max_batch: 16, threads: 2, ..ServiceConfig::default() };
+
+    let svc = Arc::new(SpmvService::<f64>::with_config(service_cfg.clone()));
+    let direct_srv = Server::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig { io_timeout: Duration::from_secs(5), ..ServerConfig::default() },
+    )
+    .expect("bind direct");
+    let mut direct_cli = bench_client(&direct_srv.local_addr().to_string());
+    let direct_id = direct_cli.register(&csr).expect("direct register");
+
+    let mgr = Arc::new(ShardManager::<f64>::new(ShardManagerConfig {
+        shards: 4,
+        replicas: 2,
+        replicate_eager: true,
+        heartbeat_interval: Duration::from_millis(250),
+        service: service_cfg.clone(),
+        ..ShardManagerConfig::default()
+    }));
+    let routed_srv = Server::start_sharded(
+        Arc::clone(&mgr),
+        "127.0.0.1:0",
+        ServerConfig { io_timeout: Duration::from_secs(5), ..ServerConfig::default() },
+    )
+    .expect("bind routed");
+    let mut routed_cli = bench_client(&routed_srv.local_addr().to_string());
+    let routed_id = routed_cli.register(&csr).expect("routed register");
+
+    let xs: Vec<Vec<f64>> = (0..8)
+        .map(|v| (0..N).map(|i| 1.0 + ((i * (v + 1)) % 9) as f64 * 0.125).collect())
+        .collect();
+
+    let mut table = TextTable::new(&["path", "k", "RTT/req (us)", "req/s"]);
+    let mut results = Json::Arr(vec![]);
+    let mut mismatch = false;
+
+    for k in KS {
+        for routed in [false, true] {
+            let (cli, id) = if routed {
+                (&mut routed_cli, routed_id)
+            } else {
+                (&mut direct_cli, direct_id)
+            };
+            let t = Timer::start();
+            let mut reqs = 0usize;
+            for it in 0..ITERS {
+                if k == 1 {
+                    let y = cli.spmv(id, &xs[it % 8]).expect("wire spmv");
+                    mismatch |= y.len() != N;
+                    reqs += 1;
+                } else {
+                    let ys = cli.spmm_batch(id, &xs).expect("wire batch");
+                    mismatch |= ys.len() != k;
+                    reqs += k;
+                }
+            }
+            let secs = t.elapsed_secs();
+            let rtt_us = secs * 1e6 / reqs as f64;
+            let rps = reqs as f64 / secs;
+            let path = if routed { "routed" } else { "direct" };
+            let mut o = Json::obj();
+            o.set("path", path).set("k", k).set("rtt_us", rtt_us).set("req_per_s", rps);
+            results.push(o);
+            table.row(vec![path.to_string(), format!("{k}"), fmt1(rtt_us), format!("{rps:.0}")]);
+        }
+    }
+
+    // Coalescing legs: 4 concurrent connections of same-matrix singles
+    // into a 2-shard fleet, window off vs 200µs.
+    let mut sample: Option<(Vec<f64>, Vec<f64>)> = None;
+    for (path, window_us) in [("uncoalesced", 0u64), ("coalesced", 200u64)] {
+        let fleet = Arc::new(ShardManager::<f64>::new(ShardManagerConfig {
+            shards: 2,
+            replicas: 1,
+            coalesce_window: Duration::from_micros(window_us),
+            heartbeat_interval: Duration::from_millis(250),
+            service: service_cfg.clone(),
+            ..ShardManagerConfig::default()
+        }));
+        let srv = Server::start_sharded(
+            Arc::clone(&fleet),
+            "127.0.0.1:0",
+            ServerConfig { io_timeout: Duration::from_secs(5), ..ServerConfig::default() },
+        )
+        .expect("bind coalesce fleet");
+        let addr = srv.local_addr().to_string();
+        let id = bench_client(&addr).register(&csr).expect("fleet register");
+
+        let t = Timer::start();
+        let handles: Vec<_> = (0..COALESCE_CLIENTS)
+            .map(|c| {
+                let addr = addr.clone();
+                let x: Vec<f64> = xs[c % 8].clone();
+                std::thread::spawn(move || {
+                    let mut cli = bench_client(&addr);
+                    let mut last = Vec::new();
+                    for _ in 0..COALESCE_REQS {
+                        last = cli.spmv(id, &x).expect("coalesce-leg spmv");
+                    }
+                    (x, last)
+                })
+            })
+            .collect();
+        let mut pairs = Vec::new();
+        for h in handles {
+            pairs.push(h.join().expect("coalesce client"));
+        }
+        let secs = t.elapsed_secs();
+        let reqs = COALESCE_CLIENTS * COALESCE_REQS;
+        let rtt_us = secs * 1e6 / reqs as f64;
+        let rps = reqs as f64 / secs;
+        let fused = fleet.metrics().requests_coalesced.load(std::sync::atomic::Ordering::Relaxed);
+        let mut o = Json::obj();
+        o.set("path", path)
+            .set("k", COALESCE_CLIENTS)
+            .set("rtt_us", rtt_us)
+            .set("req_per_s", rps);
+        results.push(o);
+        table.row(vec![
+            path.to_string(),
+            format!("{COALESCE_CLIENTS}"),
+            fmt1(rtt_us),
+            format!("{rps:.0}"),
+        ]);
+        println!("{path}: {fused} requests served from fused cross-connection batches");
+        for (x, y) in &pairs {
+            let in_proc = svc.spmv(direct_id, x.clone()).expect("reference spmv");
+            mismatch |= y != &in_proc;
+        }
+        sample = pairs.into_iter().next();
+        srv.shutdown();
+    }
+    println!("\n{}", table.render());
+
+    // Correctness gate: routed and direct replies are bitwise the same
+    // arithmetic, and the coalesced sample matches both.
+    let x = &xs[3];
+    let via_direct = direct_cli.spmv(direct_id, x).expect("direct spmv");
+    let via_routed = routed_cli.spmv(routed_id, x).expect("routed spmv");
+    let bitwise = via_direct == via_routed && sample.is_some();
+    println!(
+        "check: routed/coalesced replies bitwise-equal direct -> {}",
+        if bitwise && !mismatch { "OK" } else { "MISMATCH" }
+    );
+
+    let mut json = Json::obj();
+    json.set("bench", "shard_routing")
+        .set("schema_version", 1u64)
+        .set("n", N)
+        .set("iters", ITERS)
+        .set("results", results);
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/shard_routing.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/shard_routing.json");
+
+    direct_srv.shutdown();
+    routed_srv.shutdown();
+    assert!(bitwise && !mismatch, "routing/coalescing must not change results");
+}

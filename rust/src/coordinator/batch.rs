@@ -61,6 +61,15 @@ impl<K: Eq + Hash + Copy, P> Batcher<K, P> {
         self.len >= self.cap
     }
 
+    /// Whether a group of `k` items fits within the *remaining* capacity.
+    /// The all-or-nothing admission check for [`push_all`](Self::push_all):
+    /// a group larger than the free slots must be rejected whole — partial
+    /// admission would split a fused batch, and overshooting the cap would
+    /// let large groups defeat the backpressure bound.
+    pub fn can_admit(&self, k: usize) -> bool {
+        k <= self.cap.saturating_sub(self.len)
+    }
+
     pub fn push(&mut self, key: K, payload: P) {
         let q = self.queues.entry(key).or_default();
         if q.is_empty() && !self.order.contains(&key) {
@@ -172,6 +181,25 @@ mod tests {
         let unbounded: Batcher<u32, i32> = Batcher::new(4);
         assert_eq!(unbounded.cap(), usize::MAX);
         assert!(!unbounded.is_full());
+    }
+
+    #[test]
+    fn can_admit_requires_room_for_the_whole_group() {
+        let mut b: Batcher<u32, i32> = Batcher::with_cap(16, 6);
+        assert!(b.can_admit(6));
+        assert!(!b.can_admit(7));
+        b.push_all(1, [0, 1, 2, 3]);
+        // 2 free slots: a 2-group fits exactly, a 3-group must not.
+        assert!(b.can_admit(2));
+        assert!(!b.can_admit(3));
+        assert!(!b.is_full(), "not full, yet a 3-group is already too big");
+        b.push_all(1, [4, 5]);
+        assert!(b.is_full());
+        assert!(!b.can_admit(1));
+        assert!(b.can_admit(0));
+        // Draining a batch frees room again.
+        b.pop_batch().unwrap();
+        assert!(b.can_admit(6));
     }
 
     #[test]

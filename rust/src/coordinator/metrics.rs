@@ -68,6 +68,22 @@ pub struct Metrics {
     /// Duration of the last graceful drain, in milliseconds (0 until a
     /// drain has run).
     pub drain_duration_ms: AtomicU64,
+    /// Requests routed to a non-primary replica because the primary shard
+    /// was not serving (or an injected `shard.route` fault skipped it).
+    pub failovers: AtomicU64,
+    /// Shards escalated to Quarantined by the supervisor (or forced).
+    pub shard_quarantines: AtomicU64,
+    /// Quarantined shards successfully rebuilt (fresh service + team,
+    /// matrices re-registered).
+    pub shard_restarts: AtomicU64,
+    /// Requests shed typed because no serving replica existed.
+    pub shard_unavailable: AtomicU64,
+    /// Singles merged into cross-connection fused SpMM batches by the
+    /// coalescing window (counts every member of every multi-member group).
+    pub requests_coalesced: AtomicU64,
+    /// Matrix copies placed on additional shards (eager or hot-threshold
+    /// replication).
+    pub replications: AtomicU64,
     /// Matrices registered per resolved execution format.
     selected: [AtomicU64; 4],
     /// Requests completed per execution format.
@@ -91,6 +107,12 @@ impl Metrics {
             connections_rejected: AtomicU64::new(0),
             frames_malformed: AtomicU64::new(0),
             drain_duration_ms: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            shard_quarantines: AtomicU64::new(0),
+            shard_restarts: AtomicU64::new(0),
+            shard_unavailable: AtomicU64::new(0),
+            requests_coalesced: AtomicU64::new(0),
+            replications: AtomicU64::new(0),
             selected: [
                 AtomicU64::new(0),
                 AtomicU64::new(0),
@@ -178,6 +200,36 @@ impl Metrics {
         self.drain_duration_ms.store(ms, Ordering::Relaxed);
     }
 
+    /// One request served by a non-primary replica.
+    pub fn record_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One shard escalated to Quarantined.
+    pub fn record_shard_quarantine(&self) {
+        self.shard_quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One quarantined shard successfully rebuilt.
+    pub fn record_shard_restart(&self) {
+        self.shard_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request shed because no serving replica existed.
+    pub fn record_shard_unavailable(&self) {
+        self.shard_unavailable.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` singles merged into one cross-connection fused batch.
+    pub fn record_coalesced(&self, n: u64) {
+        self.requests_coalesced.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// One matrix copy placed on an additional shard.
+    pub fn record_replication(&self) {
+        self.replications.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One matrix registered with `kind` as its resolved execution format.
     pub fn record_selection(&self, kind: FormatKind) {
         self.selected[kind.idx()].fetch_add(1, Ordering::Relaxed);
@@ -220,6 +272,12 @@ impl Metrics {
             .set("connections_rejected", self.connections_rejected.load(Ordering::Relaxed))
             .set("frames_malformed", self.frames_malformed.load(Ordering::Relaxed))
             .set("drain_duration_ms", self.drain_duration_ms.load(Ordering::Relaxed))
+            .set("failovers", self.failovers.load(Ordering::Relaxed))
+            .set("shard_quarantines", self.shard_quarantines.load(Ordering::Relaxed))
+            .set("shard_restarts", self.shard_restarts.load(Ordering::Relaxed))
+            .set("shard_unavailable", self.shard_unavailable.load(Ordering::Relaxed))
+            .set("requests_coalesced", self.requests_coalesced.load(Ordering::Relaxed))
+            .set("replications", self.replications.load(Ordering::Relaxed))
             .set("flops", self.flops.load(Ordering::Relaxed));
         let mut sel = Json::obj();
         let mut req = Json::obj();
@@ -323,6 +381,32 @@ mod tests {
         assert!(s.contains("\"connections_rejected\":1"), "{s}");
         assert!(s.contains("\"frames_malformed\":3"), "{s}");
         assert!(s.contains("\"drain_duration_ms\":42"), "{s}");
+    }
+
+    #[test]
+    fn shard_counters_accumulate_and_snapshot() {
+        let m = Metrics::new();
+        m.record_failover();
+        m.record_failover();
+        m.record_shard_quarantine();
+        m.record_shard_restart();
+        m.record_shard_unavailable();
+        m.record_coalesced(4);
+        m.record_coalesced(2);
+        m.record_replication();
+        assert_eq!(m.failovers.load(Ordering::Relaxed), 2);
+        assert_eq!(m.shard_quarantines.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shard_restarts.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shard_unavailable.load(Ordering::Relaxed), 1);
+        assert_eq!(m.requests_coalesced.load(Ordering::Relaxed), 6);
+        assert_eq!(m.replications.load(Ordering::Relaxed), 1);
+        let s = m.snapshot().to_string();
+        assert!(s.contains("\"failovers\":2"), "{s}");
+        assert!(s.contains("\"shard_quarantines\":1"), "{s}");
+        assert!(s.contains("\"shard_restarts\":1"), "{s}");
+        assert!(s.contains("\"shard_unavailable\":1"), "{s}");
+        assert!(s.contains("\"requests_coalesced\":6"), "{s}");
+        assert!(s.contains("\"replications\":1"), "{s}");
     }
 
     #[test]

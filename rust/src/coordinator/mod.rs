@@ -7,12 +7,16 @@
 //! generalized), build it into one [`crate::ops::SparseOp`], then serve
 //! SpMV requests through a thread pool with same-matrix batching for
 //! x/format locality ([`batch`], [`service`]) and operational metrics
-//! including the per-format selection/request mix ([`metrics`]).
+//! including the per-format selection/request mix ([`metrics`]). Above the
+//! single service sits the sharded fleet ([`shard`]): N supervised shards
+//! with rendezvous placement, hot-matrix replication, failover routing and
+//! cross-connection request coalescing.
 
 pub mod batch;
 pub mod metrics;
 pub mod selector;
 pub mod service;
+pub mod shard;
 
 pub use metrics::{FormatKind, Metrics};
 pub use selector::{select_format, FormatChoice, Selection, SelectorModel};
@@ -20,3 +24,4 @@ pub use service::{
     Backend, FormatMode, MatrixId, PlanMode, ServiceConfig, ServiceError, SpmvService,
     DEFAULT_QUEUE_CAP,
 };
+pub use shard::{ShardManager, ShardManagerConfig, ShardState};

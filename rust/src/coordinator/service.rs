@@ -233,6 +233,9 @@ pub enum ServiceError {
     /// Execution kept failing after quarantine + replay; the message is the
     /// payload of the last caught panic.
     Faulted(String),
+    /// No serving shard hosts the matrix (every replica quarantined or
+    /// restarting) — the sharded router's typed shed; retry later.
+    ShardUnavailable,
     ShutDown,
 }
 
@@ -249,6 +252,9 @@ impl std::fmt::Display for ServiceError {
             ServiceError::DeadlineExceeded => write!(f, "deadline exceeded before dispatch"),
             ServiceError::Invalid(e) => write!(f, "invalid registration: {e}"),
             ServiceError::Faulted(msg) => write!(f, "execution faulted: {msg}"),
+            ServiceError::ShardUnavailable => {
+                write!(f, "no serving shard hosts the matrix; retry later")
+            }
             ServiceError::ShutDown => write!(f, "service is shut down"),
         }
     }
@@ -614,9 +620,10 @@ impl<T: Scalar> SpmvService<T> {
     /// Submit `k` right-hand sides of one matrix atomically: either every
     /// vector is admitted under a single queue lock — so they coalesce into
     /// fused SpMM batches — or the whole group is rejected with
-    /// [`ServiceError::Overloaded`] / a validation error. Admission uses the
-    /// same backpressure signal as singles (a non-full queue admits the
-    /// group, overshooting the cap by at most `k - 1`).
+    /// [`ServiceError::Overloaded`] / a validation error. Admission is
+    /// all-or-nothing against the *remaining* capacity: a group larger than
+    /// the free queue slots is rejected whole (no partial admission, no
+    /// overshoot), with `requests_rejected` counting exactly `k`.
     pub fn submit_batch(
         &self,
         id: MatrixId,
@@ -660,7 +667,7 @@ impl<T: Scalar> SpmvService<T> {
         }
         {
             let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
-            if q.is_full() {
+            if !q.can_admit(n) {
                 let (queued, cap) = (q.len(), q.cap());
                 drop(q);
                 for _ in 0..n {

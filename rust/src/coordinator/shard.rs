@@ -1,0 +1,1324 @@
+//! Sharded multi-tenant serving: supervised shards, hot-matrix replication
+//! and failover routing.
+//!
+//! A [`ShardManager`] owns N independent shards, each a full
+//! [`SpmvService`] with its own `Team`, queue and metrics — so a wedged or
+//! quarantined shard is one failure domain, not the whole fleet. On top of
+//! the shards it adds three mechanisms:
+//!
+//! - **Placement + replication.** Matrices are placed by rendezvous
+//!   hashing: every (matrix, shard) pair gets a deterministic score and the
+//!   matrix lives on the best-scoring shards. Hot matrices (request count
+//!   past [`ShardManagerConfig::hot_threshold`], or eagerly with
+//!   `replicate_eager`) are replicated onto the R best shards from their
+//!   retained CSR source, so routing has somewhere to go when the primary
+//!   is down.
+//! - **Supervision.** A supervisor thread heartbeats every shard with a
+//!   canary SpMV and watches the panic-quarantine and deadline-miss
+//!   counters, driving a per-shard state machine `Healthy → Degraded →
+//!   Quarantined → Restarting`. A quarantined shard is rebuilt: a fresh
+//!   service (new `Team`) is constructed, every matrix hosted on the shard
+//!   is re-registered from its retained CSR, and the old service is dropped
+//!   — [`SpmvService`]'s drop drains its queue answering every in-flight
+//!   request, so a restart can delay replies but never lose one.
+//! - **Routing + coalescing.** Requests route to the first serving replica
+//!   (failover when the primary is down, typed
+//!   [`ServiceError::ShardUnavailable`] when nothing serves). With a
+//!   non-zero [`ShardManagerConfig::coalesce_window`], same-matrix singles
+//!   from *different* connections are held briefly and flushed as one fused
+//!   SpMM batch — the cross-connection version of the wire batch op, riding
+//!   the same per-RHS k-sweep win.
+//!
+//! Chaos sites: `shard.heartbeat` forces heartbeat misses, `shard.restart`
+//! fails restart attempts (the shard stays quarantined and retries), and
+//! `shard.route` skips the primary replica to exercise failover
+//! ([`crate::util::fault`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::service::{MatrixId, ServiceConfig, ServiceError, SpmvService};
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::util::fault::{self, site};
+use crate::util::json::Json;
+use crate::util::prng::{Rng, SplitMix64};
+
+/// Rows/cols of the canary matrix registered on every shard for heartbeats.
+const CANARY_N: usize = 8;
+
+/// Minimum finished requests in one supervision interval before the
+/// deadline-miss *rate* is trusted (a single expired canary on an idle
+/// shard must not read as a 100% miss rate).
+const MISS_RATE_MIN_SAMPLE: u64 = 8;
+
+/// Configuration for a [`ShardManager`].
+#[derive(Clone, Debug)]
+pub struct ShardManagerConfig {
+    /// Number of independent shards (each its own service + team). Min 1.
+    pub shards: usize,
+    /// Replication factor for hot (or eagerly replicated) matrices,
+    /// clamped to `[1, shards]`.
+    pub replicas: usize,
+    /// Replicate every matrix to `replicas` shards at registration instead
+    /// of waiting for the hot threshold (`serve --replicate`).
+    pub replicate_eager: bool,
+    /// Request count after which a matrix is considered hot and replicated.
+    pub hot_threshold: u64,
+    /// Cross-connection coalescing window: same-matrix singles arriving
+    /// within this window are fused into one SpMM batch. Zero disables
+    /// coalescing (requests route straight through).
+    pub coalesce_window: Duration,
+    /// How often the supervisor ticks every shard.
+    pub heartbeat_interval: Duration,
+    /// How long a canary SpMV may take before the heartbeat counts a miss.
+    pub heartbeat_timeout: Duration,
+    /// Consecutive misses/strikes before a shard escalates from Degraded
+    /// to Quarantined.
+    pub escalate_after: u32,
+    /// Deadline-miss-rate (expired / finished per interval) above which a
+    /// shard takes a strike.
+    pub miss_rate_limit: f64,
+    /// Per-shard service configuration (each shard gets its own team of
+    /// `service.threads` lanes).
+    pub service: ServiceConfig,
+}
+
+impl Default for ShardManagerConfig {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            replicas: 1,
+            replicate_eager: false,
+            hot_threshold: 32,
+            coalesce_window: Duration::ZERO,
+            heartbeat_interval: Duration::from_millis(25),
+            heartbeat_timeout: Duration::from_millis(500),
+            escalate_after: 3,
+            miss_rate_limit: 0.5,
+            service: ServiceConfig::default(),
+        }
+    }
+}
+
+/// The supervisor's per-shard state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardState {
+    /// Serving normally.
+    Healthy,
+    /// Serving, but the last supervision tick saw a miss or a strike
+    /// (panic quarantined, deadline-miss-rate over the limit, slow canary).
+    Degraded,
+    /// Not serving; the supervisor will rebuild it on its next tick.
+    /// Routing fails over to replicas while a shard sits here.
+    Quarantined,
+    /// Rebuild in progress (fresh service + team, matrices re-registering).
+    Restarting,
+}
+
+impl ShardState {
+    /// Whether the router may send requests to a shard in this state.
+    pub fn is_serving(self) -> bool {
+        matches!(self, ShardState::Healthy | ShardState::Degraded)
+    }
+
+    /// Stable lowercase name (used in `metrics_json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardState::Healthy => "healthy",
+            ShardState::Degraded => "degraded",
+            ShardState::Quarantined => "quarantined",
+            ShardState::Restarting => "restarting",
+        }
+    }
+
+    fn from_u8(v: u8) -> ShardState {
+        match v {
+            0 => ShardState::Healthy,
+            1 => ShardState::Degraded,
+            2 => ShardState::Quarantined,
+            _ => ShardState::Restarting,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            ShardState::Healthy => 0,
+            ShardState::Degraded => 1,
+            ShardState::Quarantined => 2,
+            ShardState::Restarting => 3,
+        }
+    }
+}
+
+/// One shard: the live service handle plus supervision bookkeeping.
+struct Slot<T: Scalar> {
+    /// The live service. Swapped wholesale on restart; routers clone the
+    /// `Arc` under the read lock, so an old service stays alive (and its
+    /// drop-drain guarantee stays intact) until its last in-flight request
+    /// is answered.
+    svc: RwLock<Arc<SpmvService<T>>>,
+    /// The canary matrix's id *in the current service* (re-registered on
+    /// every restart).
+    canary: Mutex<MatrixId>,
+    state: AtomicU8,
+    /// Incremented on every completed restart (observable by tests/ops).
+    epoch: AtomicU64,
+    restarts: AtomicU64,
+    /// Consecutive heartbeat misses.
+    misses: AtomicU64,
+    /// Consecutive strike ticks (panic / miss-rate / slow canary).
+    strikes: AtomicU64,
+    /// Last-seen service counters, for per-interval deltas.
+    last_panics: AtomicU64,
+    last_expired: AtomicU64,
+    last_finished: AtomicU64,
+}
+
+impl<T: Scalar> Slot<T> {
+    fn new(service_cfg: &ServiceConfig) -> Self {
+        let svc = Arc::new(SpmvService::with_config(service_cfg.clone()));
+        let canary = register_canary(&svc);
+        Slot {
+            svc: RwLock::new(svc),
+            canary: Mutex::new(canary),
+            state: AtomicU8::new(ShardState::Healthy.as_u8()),
+            epoch: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            strikes: AtomicU64::new(0),
+            last_panics: AtomicU64::new(0),
+            last_expired: AtomicU64::new(0),
+            last_finished: AtomicU64::new(0),
+        }
+    }
+
+    fn state(&self) -> ShardState {
+        ShardState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    fn set_state(&self, s: ShardState) {
+        self.state.store(s.as_u8(), Ordering::Release);
+    }
+
+    fn service(&self) -> Arc<SpmvService<T>> {
+        Arc::clone(&self.svc.read().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+/// A tiny always-valid diagonal matrix for heartbeat canary requests.
+fn canary_csr<T: Scalar>() -> Csr<T> {
+    Csr {
+        nrows: CANARY_N,
+        ncols: CANARY_N,
+        row_ptr: (0..=CANARY_N).collect(),
+        col_idx: (0..CANARY_N).collect(),
+        vals: vec![T::one(); CANARY_N],
+    }
+}
+
+fn register_canary<T: Scalar>(svc: &SpmvService<T>) -> MatrixId {
+    svc.register(canary_csr()).expect("canary matrix is structurally valid")
+}
+
+/// Where one matrix lives: a replica is a (shard, shard-local id) pair.
+#[derive(Clone, Copy, Debug)]
+struct Replica {
+    shard: usize,
+    local: MatrixId,
+}
+
+/// Everything the manager retains about one registered matrix. The CSR
+/// source is kept so replication and shard restarts can re-register without
+/// a round trip to the client.
+struct Placement<T: Scalar> {
+    csr: Csr<T>,
+    ncols: usize,
+    /// Rendezvous ranking of all shards for this matrix, best first.
+    ranked: Vec<usize>,
+    /// Current replicas; index 0 is the primary. Restart rewrites the
+    /// shard-local ids in place.
+    replicas: Mutex<Vec<Replica>>,
+    hits: AtomicU64,
+    /// Guards against concurrent replication of the same matrix.
+    replicating: AtomicBool,
+}
+
+/// One coalesced request waiting in the cross-connection window.
+struct Pending<T: Scalar> {
+    x: Vec<T>,
+    deadline: Option<Instant>,
+    tx: mpsc::Sender<Result<Vec<T>, ServiceError>>,
+}
+
+/// A same-matrix group accumulating in the window.
+struct Group<T: Scalar> {
+    opened: Instant,
+    members: Vec<Pending<T>>,
+}
+
+/// Reply forwarding for one flushed group, handed to the relay thread so
+/// the flusher never blocks on execution.
+struct RelayJob<T: Scalar> {
+    rxs: Vec<mpsc::Receiver<Result<Vec<T>, ServiceError>>>,
+    txs: Vec<mpsc::Sender<Result<Vec<T>, ServiceError>>>,
+}
+
+struct Shared<T: Scalar> {
+    cfg: ShardManagerConfig,
+    slots: Vec<Slot<T>>,
+    placements: RwLock<HashMap<MatrixId, Arc<Placement<T>>>>,
+    next_id: AtomicU64,
+    /// Manager-level metrics: routing/supervision counters plus requests
+    /// the manager sheds itself (unknown matrix, no serving shard, expired
+    /// in the window). Per-shard service counters are aggregated on top in
+    /// [`ShardManager::metrics_json`].
+    metrics: Metrics,
+    shutdown: AtomicBool,
+    pending: Mutex<HashMap<MatrixId, Group<T>>>,
+    pending_cv: Condvar,
+    relay_tx: Mutex<Option<mpsc::Sender<RelayJob<T>>>>,
+    sup_mx: Mutex<()>,
+    sup_cv: Condvar,
+}
+
+/// Deterministic rendezvous ranking: every (matrix, shard) pair gets an
+/// independent 64-bit score; the matrix prefers shards in descending score
+/// order. Adding a shard only ever *steals* matrices whose new shard wins —
+/// existing placements keep their relative order.
+fn rank_shards(gid: u64, shards: usize) -> Vec<usize> {
+    let mut scored: Vec<(u64, usize)> = (0..shards)
+        .map(|s| {
+            let mix = gid.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (s as u64).wrapping_add(1).wrapping_mul(0xD1B5_4A32_D192_ED03);
+            (SplitMix64::new(mix).next_u64(), s)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    scored.into_iter().map(|(_, s)| s).collect()
+}
+
+/// A pre-resolved receiver carrying one typed error.
+fn resolved<T: Scalar>(err: ServiceError) -> mpsc::Receiver<Result<Vec<T>, ServiceError>> {
+    let (tx, rx) = mpsc::channel();
+    let _ = tx.send(Err(err));
+    rx
+}
+
+/// Forward every reply of one flushed group to its original submitter. A
+/// dead service channel turns into a typed `ShutDown`, never a hang.
+fn relay_one<T: Scalar>(job: RelayJob<T>) {
+    for (rx, tx) in job.rxs.into_iter().zip(job.txs) {
+        let reply = rx.recv().unwrap_or(Err(ServiceError::ShutDown));
+        let _ = tx.send(reply);
+    }
+}
+
+impl<T: Scalar> Shared<T> {
+    /// Pick the service for one request: the first *serving* replica in
+    /// placement order. Picking any replica past the primary counts a
+    /// failover; nothing serving is a typed `ShardUnavailable`. The
+    /// `shard.route` chaos site skips the primary (only when a fallback
+    /// exists) to exercise the failover path without shedding.
+    fn route(&self, p: &Placement<T>) -> Result<(Arc<SpmvService<T>>, MatrixId), ServiceError> {
+        let reps: Vec<Replica> = p.replicas.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let skip_primary = reps.len() > 1 && fault::should_fire(site::SHARD_ROUTE);
+        for (i, rep) in reps.iter().enumerate() {
+            if i == 0 && skip_primary {
+                continue;
+            }
+            let slot = &self.slots[rep.shard];
+            if !slot.state().is_serving() {
+                continue;
+            }
+            if i > 0 {
+                self.metrics.record_failover();
+            }
+            return Ok((slot.service(), rep.local));
+        }
+        self.metrics.record_shard_unavailable();
+        Err(ServiceError::ShardUnavailable)
+    }
+
+    /// Count a request against a placement and trigger hot replication once
+    /// the threshold is crossed (at most one replication walk at a time).
+    fn note_hits(self: &Arc<Self>, p: &Arc<Placement<T>>, n: u64) {
+        let hits = p.hits.fetch_add(n, Ordering::Relaxed) + n;
+        let want = self.cfg.replicas.min(self.slots.len());
+        if want <= 1 || hits < self.cfg.hot_threshold {
+            return;
+        }
+        let have = p.replicas.lock().unwrap_or_else(|e| e.into_inner()).len();
+        if have >= want || p.replicating.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.replicate(p, want);
+        p.replicating.store(false, Ordering::Release);
+    }
+
+    /// Register the retained CSR on the best-ranked shards that do not
+    /// already host it, up to `want` replicas. Conversion runs outside the
+    /// replica lock so routing never stalls behind it.
+    fn replicate(&self, p: &Arc<Placement<T>>, want: usize) {
+        loop {
+            let have: Vec<usize> = {
+                let reps = p.replicas.lock().unwrap_or_else(|e| e.into_inner());
+                if reps.len() >= want {
+                    return;
+                }
+                reps.iter().map(|r| r.shard).collect()
+            };
+            let next = p
+                .ranked
+                .iter()
+                .copied()
+                .find(|s| !have.contains(s) && self.slots[*s].state().is_serving());
+            let Some(s) = next else { return };
+            match self.slots[s].service().register(p.csr.clone()) {
+                Ok(local) => {
+                    let mut reps = p.replicas.lock().unwrap_or_else(|e| e.into_inner());
+                    reps.push(Replica { shard: s, local });
+                    self.metrics.record_replication();
+                }
+                // Registration of a previously-validated CSR only fails
+                // under injected faults; give up this walk, a later hit
+                // retries.
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Flush one coalesced group: shed members whose deadline already
+    /// passed, fuse the rest into a single batch on one routed service, and
+    /// hand reply forwarding to the relay thread. The fused batch runs
+    /// under the *latest* member deadline (members keep their admission
+    /// check; a tighter individual deadline was already enforced at expiry
+    /// shedding above — the tradeoff for fusing).
+    fn flush_group(&self, gid: MatrixId, group: Group<T>) {
+        let now = Instant::now();
+        let mut xs = Vec::with_capacity(group.members.len());
+        let mut txs = Vec::with_capacity(group.members.len());
+        let mut latest: Option<Instant> = None;
+        let mut unbounded = false;
+        for m in group.members {
+            if let Some(d) = m.deadline {
+                if d <= now {
+                    self.metrics.record_request();
+                    self.metrics.record_expired();
+                    let _ = m.tx.send(Err(ServiceError::DeadlineExceeded));
+                    continue;
+                }
+                latest = Some(latest.map_or(d, |l: Instant| l.max(d)));
+            } else {
+                unbounded = true;
+            }
+            xs.push(m.x);
+            txs.push(m.tx);
+        }
+        if xs.is_empty() {
+            return;
+        }
+        if xs.len() > 1 {
+            self.metrics.record_coalesced(xs.len() as u64);
+        }
+        let deadline = if unbounded { None } else { latest };
+        let placement = {
+            let map = self.placements.read().unwrap_or_else(|e| e.into_inner());
+            map.get(&gid).cloned()
+        };
+        let rxs = match placement.as_deref().map(|p| self.route(p)) {
+            Some(Ok((svc, local))) => svc.submit_batch(local, xs, deadline),
+            Some(Err(e)) => {
+                for tx in txs {
+                    self.metrics.record_request();
+                    self.metrics.record_error();
+                    let _ = tx.send(Err(e.clone()));
+                }
+                return;
+            }
+            None => {
+                for tx in txs {
+                    self.metrics.record_request();
+                    self.metrics.record_error();
+                    let _ = tx.send(Err(ServiceError::UnknownMatrix(gid)));
+                }
+                return;
+            }
+        };
+        let job = RelayJob { rxs, txs };
+        let leftover = {
+            let guard = self.relay_tx.lock().unwrap_or_else(|e| e.into_inner());
+            match guard.as_ref() {
+                Some(tx) => tx.send(job).err().map(|mpsc::SendError(j)| j),
+                None => Some(job),
+            }
+        };
+        // No relay thread (window zero never spawns one, shutdown tore it
+        // down): forward inline so replies are still delivered.
+        if let Some(job) = leftover {
+            relay_one(job);
+        }
+    }
+
+    /// One supervision pass over one shard.
+    fn tick(&self, idx: usize) {
+        match self.slots[idx].state() {
+            ShardState::Quarantined | ShardState::Restarting => self.try_restart(idx),
+            ShardState::Healthy | ShardState::Degraded => self.heartbeat(idx),
+        }
+    }
+
+    /// Probe one serving shard: a canary SpMV must answer within the
+    /// heartbeat timeout (a typed error still proves the control loop is
+    /// alive, but a non-Ok canary counts a strike). On top of the probe,
+    /// per-interval deltas of the panic-quarantine and deadline-miss
+    /// counters escalate a shard that is technically answering but
+    /// degrading: `escalate_after` consecutive bad ticks quarantine it.
+    fn heartbeat(&self, idx: usize) {
+        let slot = &self.slots[idx];
+        let forced_miss = fault::should_fire(site::SHARD_HEARTBEAT);
+        let svc = slot.service();
+        let reply = if forced_miss {
+            Err(mpsc::RecvTimeoutError::Timeout)
+        } else {
+            let canary = *slot.canary.lock().unwrap_or_else(|e| e.into_inner());
+            let deadline = Instant::now() + self.cfg.heartbeat_timeout;
+            svc.submit_with_deadline_at(canary, vec![T::one(); CANARY_N], Some(deadline))
+                .recv_timeout(self.cfg.heartbeat_timeout)
+        };
+        match reply {
+            Err(_) => {
+                // No answer at all within the timeout: a hard miss.
+                let misses = slot.misses.fetch_add(1, Ordering::Relaxed) + 1;
+                if misses >= u64::from(self.cfg.escalate_after) {
+                    self.quarantine(idx);
+                } else {
+                    slot.set_state(ShardState::Degraded);
+                }
+            }
+            Ok(canary_reply) => {
+                slot.misses.store(0, Ordering::Relaxed);
+                let m = svc.metrics();
+                let panics = m.panics_quarantined.load(Ordering::Relaxed);
+                let expired = m.expired.load(Ordering::Relaxed);
+                let finished = m.completed.load(Ordering::Relaxed).saturating_add(expired);
+                let d_panics = panics.saturating_sub(slot.last_panics.swap(panics, Ordering::Relaxed));
+                let d_expired = expired.saturating_sub(slot.last_expired.swap(expired, Ordering::Relaxed));
+                let d_finished =
+                    finished.saturating_sub(slot.last_finished.swap(finished, Ordering::Relaxed));
+                let rate_strike = d_finished >= MISS_RATE_MIN_SAMPLE
+                    && (d_expired as f64 / d_finished as f64) > self.cfg.miss_rate_limit;
+                if d_panics > 0 || rate_strike || canary_reply.is_err() {
+                    let strikes = slot.strikes.fetch_add(1, Ordering::Relaxed) + 1;
+                    if strikes >= u64::from(self.cfg.escalate_after) {
+                        self.quarantine(idx);
+                    } else {
+                        slot.set_state(ShardState::Degraded);
+                    }
+                } else {
+                    slot.strikes.store(0, Ordering::Relaxed);
+                    slot.set_state(ShardState::Healthy);
+                }
+            }
+        }
+    }
+
+    /// Take a shard out of the serving set; the supervisor rebuilds it on
+    /// its next tick. Routing fails over to replicas immediately.
+    fn quarantine(&self, idx: usize) {
+        let slot = &self.slots[idx];
+        slot.set_state(ShardState::Quarantined);
+        slot.misses.store(0, Ordering::Relaxed);
+        slot.strikes.store(0, Ordering::Relaxed);
+        self.metrics.record_shard_quarantine();
+    }
+
+    /// Rebuild a quarantined shard: fresh service + team, matrices
+    /// re-registered from their retained CSR sources, shard-local ids
+    /// rewritten. The old service keeps serving its in-flight requests
+    /// until the last router handle drops — its drop drains the queue
+    /// answering everything, so nothing hangs across a restart. An armed
+    /// `shard.restart` fault aborts the attempt (retried next tick).
+    fn try_restart(&self, idx: usize) {
+        let slot = &self.slots[idx];
+        slot.set_state(ShardState::Restarting);
+        if fault::should_fire(site::SHARD_RESTART) {
+            slot.set_state(ShardState::Quarantined);
+            return;
+        }
+        let fresh = Arc::new(SpmvService::with_config(self.cfg.service.clone()));
+        let canary = register_canary(&fresh);
+        let placements: Vec<Arc<Placement<T>>> = {
+            let map = self.placements.read().unwrap_or_else(|e| e.into_inner());
+            map.values().cloned().collect()
+        };
+        for p in &placements {
+            let hosted = {
+                let reps = p.replicas.lock().unwrap_or_else(|e| e.into_inner());
+                reps.iter().any(|r| r.shard == idx)
+            };
+            if !hosted {
+                continue;
+            }
+            match fresh.register(p.csr.clone()) {
+                Ok(local) => {
+                    let mut reps = p.replicas.lock().unwrap_or_else(|e| e.into_inner());
+                    for r in reps.iter_mut().filter(|r| r.shard == idx) {
+                        r.local = local;
+                    }
+                }
+                // Re-registration of a previously-valid CSR only fails under
+                // injected faults; drop the replica so routing never targets
+                // a dangling id (the matrix sheds typed if this was its only
+                // home — a later hot-replication walk can re-home it).
+                Err(_) => {
+                    let mut reps = p.replicas.lock().unwrap_or_else(|e| e.into_inner());
+                    reps.retain(|r| r.shard != idx);
+                }
+            }
+        }
+        {
+            let mut w = slot.svc.write().unwrap_or_else(|e| e.into_inner());
+            *w = fresh;
+            *slot.canary.lock().unwrap_or_else(|e| e.into_inner()) = canary;
+        }
+        slot.last_panics.store(0, Ordering::Relaxed);
+        slot.last_expired.store(0, Ordering::Relaxed);
+        slot.last_finished.store(0, Ordering::Relaxed);
+        slot.misses.store(0, Ordering::Relaxed);
+        slot.strikes.store(0, Ordering::Relaxed);
+        slot.epoch.fetch_add(1, Ordering::Release);
+        slot.restarts.fetch_add(1, Ordering::Relaxed);
+        slot.set_state(ShardState::Healthy);
+        self.metrics.record_shard_restart();
+    }
+}
+
+fn supervisor_loop<T: Scalar>(sh: Arc<Shared<T>>) {
+    loop {
+        {
+            let g = sh.sup_mx.lock().unwrap_or_else(|e| e.into_inner());
+            // Checked under the lock so a shutdown flagged between ticks
+            // cannot lose its wakeup.
+            if sh.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let _ = sh
+                .sup_cv
+                .wait_timeout(g, sh.cfg.heartbeat_interval)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        if sh.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        for idx in 0..sh.slots.len() {
+            sh.tick(idx);
+        }
+    }
+}
+
+fn flusher_loop<T: Scalar>(sh: Arc<Shared<T>>) {
+    let window = sh.cfg.coalesce_window;
+    let mut guard = sh.pending.lock().unwrap_or_else(|e| e.into_inner());
+    loop {
+        if sh.shutdown.load(Ordering::Acquire) {
+            // Final flush: nothing left in the window may hang.
+            let all: Vec<(MatrixId, Group<T>)> = guard.drain().collect();
+            drop(guard);
+            for (gid, g) in all {
+                sh.flush_group(gid, g);
+            }
+            return;
+        }
+        let now = Instant::now();
+        let due_keys: Vec<MatrixId> = guard
+            .iter()
+            .filter(|(_, g)| now.duration_since(g.opened) >= window)
+            .map(|(k, _)| *k)
+            .collect();
+        if !due_keys.is_empty() {
+            let due: Vec<(MatrixId, Group<T>)> =
+                due_keys.into_iter().filter_map(|k| guard.remove(&k).map(|g| (k, g))).collect();
+            drop(guard);
+            for (gid, g) in due {
+                sh.flush_group(gid, g);
+            }
+            guard = sh.pending.lock().unwrap_or_else(|e| e.into_inner());
+            continue;
+        }
+        let next_due = guard.values().map(|g| g.opened + window).min();
+        let wait = match next_due {
+            Some(d) => d.saturating_duration_since(now).max(Duration::from_micros(100)),
+            None => Duration::from_millis(50),
+        };
+        let (g, _) = sh.pending_cv.wait_timeout(guard, wait).unwrap_or_else(|e| e.into_inner());
+        guard = g;
+    }
+}
+
+fn relay_loop<T: Scalar>(rx: mpsc::Receiver<RelayJob<T>>) {
+    while let Ok(job) = rx.recv() {
+        relay_one(job);
+    }
+}
+
+/// N supervised [`SpmvService`] shards behind one routing front: rendezvous
+/// placement, hot-matrix replication, heartbeat supervision with
+/// quarantine/restart, failover routing and cross-connection coalescing.
+/// See the module docs for the full contract.
+pub struct ShardManager<T: Scalar> {
+    shared: Arc<Shared<T>>,
+    supervisor: Option<thread::JoinHandle<()>>,
+    flusher: Option<thread::JoinHandle<()>>,
+    relay: Option<thread::JoinHandle<()>>,
+}
+
+impl<T: Scalar> ShardManager<T> {
+    /// Build the shards (each its own service + team + canary) and start
+    /// the supervisor; the coalescing flusher/relay threads only exist when
+    /// the window is non-zero.
+    pub fn new(cfg: ShardManagerConfig) -> Self {
+        let mut cfg = cfg;
+        cfg.shards = cfg.shards.max(1);
+        cfg.replicas = cfg.replicas.clamp(1, cfg.shards);
+        cfg.escalate_after = cfg.escalate_after.max(1);
+        let slots: Vec<Slot<T>> = (0..cfg.shards).map(|_| Slot::new(&cfg.service)).collect();
+        let coalescing = !cfg.coalesce_window.is_zero();
+        let shared = Arc::new(Shared {
+            cfg,
+            slots,
+            placements: RwLock::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            metrics: Metrics::new(),
+            shutdown: AtomicBool::new(false),
+            pending: Mutex::new(HashMap::new()),
+            pending_cv: Condvar::new(),
+            relay_tx: Mutex::new(None),
+            sup_mx: Mutex::new(()),
+            sup_cv: Condvar::new(),
+        });
+        let supervisor = {
+            let sh = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("spc5-shard-sup".into())
+                .spawn(move || supervisor_loop(sh))
+                .expect("spawn shard supervisor")
+        };
+        let (flusher, relay) = if coalescing {
+            let (tx, rx) = mpsc::channel();
+            *shared.relay_tx.lock().unwrap_or_else(|e| e.into_inner()) = Some(tx);
+            let fl = {
+                let sh = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name("spc5-shard-flush".into())
+                    .spawn(move || flusher_loop(sh))
+                    .expect("spawn coalescing flusher")
+            };
+            let re = thread::Builder::new()
+                .name("spc5-shard-relay".into())
+                .spawn(move || relay_loop(rx))
+                .expect("spawn coalescing relay");
+            (Some(fl), Some(re))
+        } else {
+            (None, None)
+        };
+        ShardManager { shared, supervisor: Some(supervisor), flusher, relay }
+    }
+
+    /// Place a matrix: validate, rank shards by rendezvous score, register
+    /// on the best serving shard (plus `replicas - 1` more when
+    /// `replicate_eager`), and retain the CSR source for replication and
+    /// restart recovery. The returned id is manager-global.
+    pub fn register(&self, csr: Csr<T>) -> Result<MatrixId, ServiceError> {
+        csr.check().map_err(ServiceError::Invalid)?;
+        let sh = &self.shared;
+        let gid = MatrixId(sh.next_id.fetch_add(1, Ordering::Relaxed));
+        let ranked = rank_shards(gid.0, sh.slots.len());
+        let want = if sh.cfg.replicate_eager { sh.cfg.replicas } else { 1 };
+        let mut reps: Vec<Replica> = Vec::new();
+        for &s in &ranked {
+            if reps.len() >= want {
+                break;
+            }
+            let slot = &sh.slots[s];
+            if !slot.state().is_serving() {
+                continue;
+            }
+            if let Ok(local) = slot.service().register(csr.clone()) {
+                reps.push(Replica { shard: s, local });
+            }
+        }
+        if reps.is_empty() {
+            sh.metrics.record_shard_unavailable();
+            return Err(ServiceError::ShardUnavailable);
+        }
+        for _ in 1..reps.len() {
+            sh.metrics.record_replication();
+        }
+        let placement = Arc::new(Placement {
+            ncols: csr.ncols,
+            csr,
+            ranked,
+            replicas: Mutex::new(reps),
+            hits: AtomicU64::new(0),
+            replicating: AtomicBool::new(false),
+        });
+        sh.placements.write().unwrap_or_else(|e| e.into_inner()).insert(gid, placement);
+        Ok(gid)
+    }
+
+    /// Submit one SpMV with an absolute deadline. With a zero coalescing
+    /// window the request routes straight to a serving replica; otherwise
+    /// it joins the cross-connection window for its matrix and flushes as
+    /// part of a fused batch (when the group fills to the service's
+    /// `max_batch`, immediately).
+    pub fn submit_with_deadline_at(
+        &self,
+        id: MatrixId,
+        x: Vec<T>,
+        deadline: Option<Instant>,
+    ) -> mpsc::Receiver<Result<Vec<T>, ServiceError>> {
+        let sh = &self.shared;
+        let placement = {
+            let map = sh.placements.read().unwrap_or_else(|e| e.into_inner());
+            map.get(&id).cloned()
+        };
+        let Some(p) = placement else {
+            sh.metrics.record_request();
+            sh.metrics.record_error();
+            return resolved(ServiceError::UnknownMatrix(id));
+        };
+        if x.len() != p.ncols {
+            sh.metrics.record_request();
+            sh.metrics.record_error();
+            return resolved(ServiceError::DimMismatch { got: x.len(), want: p.ncols });
+        }
+        sh.note_hits(&p, 1);
+        if sh.cfg.coalesce_window.is_zero() {
+            return match sh.route(&p) {
+                Ok((svc, local)) => svc.submit_with_deadline_at(local, x, deadline),
+                Err(e) => {
+                    sh.metrics.record_request();
+                    sh.metrics.record_error();
+                    resolved(e)
+                }
+            };
+        }
+        let (tx, rx) = mpsc::channel();
+        let max_group = sh.cfg.service.max_batch.max(1);
+        let ready = {
+            let mut pending = sh.pending.lock().unwrap_or_else(|e| e.into_inner());
+            let group = pending
+                .entry(id)
+                .or_insert_with(|| Group { opened: Instant::now(), members: Vec::new() });
+            group.members.push(Pending { x, deadline, tx });
+            if group.members.len() >= max_group {
+                pending.remove(&id)
+            } else {
+                sh.pending_cv.notify_one();
+                None
+            }
+        };
+        if let Some(group) = ready {
+            sh.flush_group(id, group);
+        }
+        rx
+    }
+
+    /// Submit with the per-shard default deadline.
+    pub fn submit(&self, id: MatrixId, x: Vec<T>) -> mpsc::Receiver<Result<Vec<T>, ServiceError>> {
+        self.submit_with_deadline_at(id, x, self.default_deadline_at())
+    }
+
+    /// Submit `k` right-hand sides as one already-fused batch: routed whole
+    /// to a single serving replica (same atomic-admission contract as the
+    /// underlying service), bypassing the coalescing window.
+    pub fn submit_batch(
+        &self,
+        id: MatrixId,
+        xs: Vec<Vec<T>>,
+        deadline: Option<Instant>,
+    ) -> Vec<mpsc::Receiver<Result<Vec<T>, ServiceError>>> {
+        let sh = &self.shared;
+        let n = xs.len();
+        let placement = {
+            let map = sh.placements.read().unwrap_or_else(|e| e.into_inner());
+            map.get(&id).cloned()
+        };
+        let Some(p) = placement else {
+            for _ in 0..n {
+                sh.metrics.record_request();
+                sh.metrics.record_error();
+            }
+            return (0..n).map(|_| resolved(ServiceError::UnknownMatrix(id))).collect();
+        };
+        sh.note_hits(&p, n as u64);
+        match sh.route(&p) {
+            Ok((svc, local)) => svc.submit_batch(local, xs, deadline),
+            Err(e) => {
+                for _ in 0..n {
+                    sh.metrics.record_request();
+                    sh.metrics.record_error();
+                }
+                (0..n).map(|_| resolved(e.clone())).collect()
+            }
+        }
+    }
+
+    /// Synchronous SpMV (submit + wait) with the default deadline.
+    pub fn spmv(&self, id: MatrixId, x: Vec<T>) -> Result<Vec<T>, ServiceError> {
+        self.submit(id, x).recv().map_err(|_| ServiceError::ShutDown)?
+    }
+
+    /// The per-shard service default deadline (`ServiceConfig::deadline`).
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.shared.cfg.service.deadline
+    }
+
+    fn default_deadline_at(&self) -> Option<Instant> {
+        self.default_deadline().map(|d| Instant::now() + d)
+    }
+
+    /// Manager-level metrics (routing/supervision counters + manager-shed
+    /// requests). Per-shard service counters live on the shards; use
+    /// [`Self::metrics_json`] for the aggregated fleet view.
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    /// Aggregated fleet snapshot: the manager's own counters with the load
+    /// counters summed across shards, a `shards` array with per-shard
+    /// state/epoch/load, and `shards_total`/`shards_unhealthy` for health.
+    pub fn metrics_json(&self) -> Json {
+        let sh = &self.shared;
+        let mut snap = sh.metrics.snapshot();
+        let own = |snap: &Json, key: &str| match snap {
+            Json::Obj(m) => match m.get(key) {
+                Some(Json::Num(v)) => *v,
+                _ => 0.0,
+            },
+            _ => 0.0,
+        };
+        let keys = [
+            "requests",
+            "completed",
+            "batches",
+            "errors",
+            "requests_rejected",
+            "requests_expired",
+            "panics_quarantined",
+            "fallback_rebuilds",
+            "flops",
+        ];
+        let mut totals: Vec<f64> = keys.iter().map(|k| own(&snap, k)).collect();
+        let mut shards = Json::Arr(Vec::new());
+        let mut unhealthy = 0u32;
+        for (i, slot) in sh.slots.iter().enumerate() {
+            let svc = slot.service();
+            let m = svc.metrics();
+            let expired = m.expired.load(Ordering::Relaxed);
+            let loads = [
+                m.requests.load(Ordering::Relaxed),
+                m.completed.load(Ordering::Relaxed),
+                m.batches.load(Ordering::Relaxed),
+                m.errors.load(Ordering::Relaxed),
+                m.rejected.load(Ordering::Relaxed),
+                expired,
+                m.panics_quarantined.load(Ordering::Relaxed),
+                m.fallback_rebuilds.load(Ordering::Relaxed),
+                m.flops.load(Ordering::Relaxed),
+            ];
+            for (t, v) in totals.iter_mut().zip(loads) {
+                *t += v as f64;
+            }
+            let st = slot.state();
+            if !st.is_serving() {
+                unhealthy += 1;
+            }
+            let mut o = Json::obj();
+            o.set("shard", i as u64)
+                .set("state", st.name())
+                .set("epoch", slot.epoch.load(Ordering::Acquire))
+                .set("restarts", slot.restarts.load(Ordering::Relaxed))
+                .set("requests", loads[0])
+                .set("completed", loads[1])
+                .set("panics_quarantined", loads[6]);
+            shards.push(o);
+        }
+        for (k, t) in keys.iter().zip(totals) {
+            snap.set(k, t);
+        }
+        snap.set("shards_total", sh.slots.len() as u64)
+            .set("shards_unhealthy", u64::from(unhealthy))
+            .set("shards", shards)
+            .set("isa_tier", crate::kernels::isa::active().name());
+        snap
+    }
+
+    /// `(total, unhealthy)` shard counts for the wire health op.
+    pub fn health(&self) -> (u32, u32) {
+        let total = self.shared.slots.len() as u32;
+        let unhealthy =
+            self.shared.slots.iter().filter(|s| !s.state().is_serving()).count() as u32;
+        (total, unhealthy)
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    /// Current supervisor state of one shard.
+    pub fn state(&self, idx: usize) -> ShardState {
+        self.shared.slots[idx].state()
+    }
+
+    /// Restart epoch of one shard (increments on every completed rebuild).
+    pub fn epoch(&self, idx: usize) -> u64 {
+        self.shared.slots[idx].epoch.load(Ordering::Acquire)
+    }
+
+    /// The shard currently serving as a matrix's primary replica.
+    pub fn primary_of(&self, id: MatrixId) -> Option<usize> {
+        let map = self.shared.placements.read().unwrap_or_else(|e| e.into_inner());
+        let p = map.get(&id)?;
+        let reps = p.replicas.lock().unwrap_or_else(|e| e.into_inner());
+        reps.first().map(|r| r.shard)
+    }
+
+    /// All shards currently hosting a matrix, primary first.
+    pub fn replica_shards(&self, id: MatrixId) -> Vec<usize> {
+        let map = self.shared.placements.read().unwrap_or_else(|e| e.into_inner());
+        match map.get(&id) {
+            Some(p) => {
+                let reps = p.replicas.lock().unwrap_or_else(|e| e.into_inner());
+                reps.iter().map(|r| r.shard).collect()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Forcibly quarantine a shard (ops/chaos hook). Routing fails over
+    /// immediately; the supervisor rebuilds the shard on its next tick.
+    pub fn force_quarantine(&self, idx: usize) {
+        self.shared.quarantine(idx);
+    }
+
+    /// Flush every pending coalescing group immediately (drain fan-out:
+    /// nothing may sit in the window once a drain begins).
+    pub fn flush_pending(&self) {
+        let sh = &self.shared;
+        let groups: Vec<(MatrixId, Group<T>)> = {
+            let mut pending = sh.pending.lock().unwrap_or_else(|e| e.into_inner());
+            pending.drain().collect()
+        };
+        for (gid, g) in groups {
+            sh.flush_group(gid, g);
+        }
+    }
+}
+
+impl<T: Scalar> Drop for ShardManager<T> {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Lock-then-notify so a thread between its shutdown check and its
+        // wait cannot miss the wakeup.
+        drop(self.shared.pending.lock().unwrap_or_else(|e| e.into_inner()));
+        self.shared.pending_cv.notify_all();
+        drop(self.shared.sup_mx.lock().unwrap_or_else(|e| e.into_inner()));
+        self.shared.sup_cv.notify_all();
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+        // Dropping the sender ends the relay loop once queued jobs drain.
+        *self.shared.relay_tx.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        if let Some(h) = self.relay.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+        // The shards themselves drop with `Shared`; each service's drop
+        // drains its queue answering every in-flight request.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    fn blocky(n: usize, seed: u64) -> Csr<f64> {
+        gen::Structured {
+            nrows: n,
+            ncols: n,
+            nnz_per_row: 8.0,
+            run_len: 4.0,
+            row_corr: 0.7,
+            ..Default::default()
+        }
+        .generate(seed)
+    }
+
+    fn reference(m: &Csr<f64>, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; m.nrows];
+        m.spmv(x, &mut y);
+        y
+    }
+
+    /// A config whose supervisor effectively never ticks, for tests that
+    /// need the state machine to hold still.
+    fn quiet(shards: usize, replicas: usize, eager: bool) -> ShardManagerConfig {
+        ShardManagerConfig {
+            shards,
+            replicas,
+            replicate_eager: eager,
+            heartbeat_interval: Duration::from_secs(3600),
+            service: ServiceConfig { workers: 1, max_batch: 8, threads: 1, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rendezvous_ranking_is_a_stable_permutation() {
+        for gid in 1..40u64 {
+            let ranked = rank_shards(gid, 8);
+            let mut sorted = ranked.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..8).collect::<Vec<_>>(), "gid {gid}: not a permutation");
+            assert_eq!(ranked, rank_shards(gid, 8), "gid {gid}: not deterministic");
+        }
+        // Placement actually spreads: not every matrix picks the same shard.
+        let primaries: std::collections::HashSet<usize> =
+            (1..40u64).map(|gid| rank_shards(gid, 8)[0]).collect();
+        assert!(primaries.len() > 1, "rendezvous hashing never spread placements");
+    }
+
+    #[test]
+    fn eager_registration_places_replicas_and_serves() {
+        let mgr: ShardManager<f64> = ShardManager::new(quiet(3, 2, true));
+        let m = blocky(64, 5);
+        let id = mgr.register(m.clone()).unwrap();
+        let homes = mgr.replica_shards(id);
+        assert_eq!(homes.len(), 2, "eager replication must place {homes:?} on 2 shards");
+        assert_eq!(mgr.metrics().replications.load(Ordering::Relaxed), 1);
+        let x: Vec<f64> = (0..64).map(|i| 1.0 + (i % 7) as f64 * 0.5).collect();
+        let got = mgr.spmv(id, x.clone()).unwrap();
+        assert_eq!(got, reference(&m, &x));
+    }
+
+    #[test]
+    fn unknown_matrix_and_dim_mismatch_are_typed() {
+        let mgr: ShardManager<f64> = ShardManager::new(quiet(2, 1, false));
+        match mgr.spmv(MatrixId(777), vec![1.0; 8]) {
+            Err(ServiceError::UnknownMatrix(MatrixId(777))) => {}
+            other => panic!("expected UnknownMatrix, got {other:?}"),
+        }
+        let id = mgr.register(blocky(32, 3)).unwrap();
+        match mgr.spmv(id, vec![1.0; 31]) {
+            Err(ServiceError::DimMismatch { got: 31, want: 32 }) => {}
+            other => panic!("expected DimMismatch, got {other:?}"),
+        }
+        assert_eq!(mgr.metrics().errors.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn failover_serves_from_replica_and_shard_restarts() {
+        let mut cfg = quiet(2, 2, true);
+        cfg.heartbeat_interval = Duration::from_millis(100);
+        let mgr: ShardManager<f64> = ShardManager::new(cfg);
+        let m = blocky(96, 11);
+        let id = mgr.register(m.clone()).unwrap();
+        let primary = mgr.primary_of(id).unwrap();
+        let x: Vec<f64> = (0..96).map(|i| ((i * 3) % 11) as f64 - 4.0).collect();
+        let want = reference(&m, &x);
+
+        mgr.force_quarantine(primary);
+        assert!(!mgr.state(primary).is_serving());
+        // The quarantined primary must not serve; the replica answers,
+        // bitwise-identically (same CSR, same deterministic operator build).
+        for _ in 0..4 {
+            assert_eq!(mgr.spmv(id, x.clone()).unwrap(), want);
+        }
+        assert!(mgr.metrics().failovers.load(Ordering::Relaxed) >= 4);
+        assert!(mgr.metrics().shard_quarantines.load(Ordering::Relaxed) >= 1);
+
+        // The supervisor rebuilds the shard within a few ticks.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while (mgr.epoch(primary) == 0 || !mgr.state(primary).is_serving())
+            && Instant::now() < deadline
+        {
+            thread::sleep(Duration::from_millis(10));
+        }
+        assert!(mgr.epoch(primary) >= 1, "shard never restarted");
+        assert!(mgr.state(primary).is_serving());
+        assert!(mgr.metrics().shard_restarts.load(Ordering::Relaxed) >= 1);
+        // And the restarted shard serves the re-registered matrix again.
+        assert_eq!(mgr.spmv(id, x).unwrap(), want);
+    }
+
+    #[test]
+    fn unreplicated_matrix_sheds_typed_when_its_only_shard_is_down() {
+        let mgr: ShardManager<f64> = ShardManager::new(quiet(2, 1, false));
+        let id = mgr.register(blocky(48, 7)).unwrap();
+        let primary = mgr.primary_of(id).unwrap();
+        mgr.force_quarantine(primary);
+        match mgr.spmv(id, vec![1.0; 48]) {
+            Err(ServiceError::ShardUnavailable) => {}
+            other => panic!("expected ShardUnavailable, got {other:?}"),
+        }
+        assert!(mgr.metrics().shard_unavailable.load(Ordering::Relaxed) >= 1);
+        // A matrix homed on the *other* shard keeps serving.
+        let other_shard = 1 - primary;
+        let mut served_elsewhere = false;
+        for seed in 0..16 {
+            let m2 = blocky(40, 100 + seed);
+            let id2 = mgr.register(m2.clone()).unwrap();
+            if mgr.primary_of(id2) == Some(other_shard) {
+                let x = vec![0.5; 40];
+                assert_eq!(mgr.spmv(id2, x.clone()).unwrap(), reference(&m2, &x));
+                served_elsewhere = true;
+                break;
+            }
+        }
+        assert!(served_elsewhere, "registration never landed on the healthy shard");
+    }
+
+    #[test]
+    fn hot_matrix_replicates_past_the_threshold() {
+        let mut cfg = quiet(2, 2, false);
+        cfg.hot_threshold = 4;
+        let mgr: ShardManager<f64> = ShardManager::new(cfg);
+        let m = blocky(56, 13);
+        let id = mgr.register(m.clone()).unwrap();
+        assert_eq!(mgr.replica_shards(id).len(), 1, "replication must start lazy");
+        let x: Vec<f64> = (0..56).map(|i| (i % 5) as f64).collect();
+        let want = reference(&m, &x);
+        for _ in 0..10 {
+            assert_eq!(mgr.spmv(id, x.clone()).unwrap(), want);
+        }
+        assert_eq!(mgr.replica_shards(id).len(), 2, "hot matrix never replicated");
+        assert!(mgr.metrics().replications.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn coalescing_window_fuses_concurrent_singles() {
+        let mut cfg = quiet(1, 1, false);
+        cfg.coalesce_window = Duration::from_millis(40);
+        let mgr: ShardManager<f64> = ShardManager::new(cfg);
+        let m = blocky(64, 17);
+        let id = mgr.register(m.clone()).unwrap();
+        let xs: Vec<Vec<f64>> =
+            (0..4).map(|k| (0..64).map(|i| ((i + k) % 9) as f64 * 0.5).collect()).collect();
+        let rxs: Vec<_> = xs.iter().map(|x| mgr.submit(id, x.clone())).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let got = rx.recv().expect("coalesced reply delivered").unwrap();
+            assert_eq!(got, reference(&m, x));
+        }
+        assert_eq!(
+            mgr.metrics().requests_coalesced.load(Ordering::Relaxed),
+            4,
+            "all four singles must fuse into one cross-connection batch"
+        );
+        // An already-expired member is shed at flush, typed, without
+        // poisoning the group.
+        let dead = Instant::now() - Duration::from_millis(1);
+        let rx = mgr.submit_with_deadline_at(id, xs[0].clone(), Some(dead));
+        assert_eq!(rx.recv().unwrap(), Err(ServiceError::DeadlineExceeded));
+        assert_eq!(mgr.metrics().expired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn full_coalescing_group_flushes_without_waiting_for_the_window() {
+        let mut cfg = quiet(1, 1, false);
+        cfg.coalesce_window = Duration::from_secs(30);
+        cfg.service.max_batch = 4;
+        let mgr: ShardManager<f64> = ShardManager::new(cfg);
+        let m = blocky(32, 19);
+        let id = mgr.register(m.clone()).unwrap();
+        let x = vec![1.0; 32];
+        let rxs: Vec<_> = (0..4).map(|_| mgr.submit(id, x.clone())).collect();
+        // A 30s window would time this out; the full group must flush now.
+        for rx in rxs {
+            let got = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("full group flushed immediately")
+                .unwrap();
+            assert_eq!(got, reference(&m, &x));
+        }
+        assert_eq!(mgr.metrics().requests_coalesced.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn flush_pending_empties_the_window_for_drain() {
+        let mut cfg = quiet(1, 1, false);
+        cfg.coalesce_window = Duration::from_secs(30);
+        let mgr: ShardManager<f64> = ShardManager::new(cfg);
+        let m = blocky(24, 23);
+        let id = mgr.register(m.clone()).unwrap();
+        let x = vec![2.0; 24];
+        let rx = mgr.submit(id, x.clone());
+        mgr.flush_pending();
+        let got =
+            rx.recv_timeout(Duration::from_secs(5)).expect("drain flushed the window").unwrap();
+        assert_eq!(got, reference(&m, &x));
+    }
+
+    #[test]
+    fn dropping_the_manager_answers_pending_coalesced_requests() {
+        let mut cfg = quiet(1, 1, false);
+        cfg.coalesce_window = Duration::from_secs(30);
+        let mgr: ShardManager<f64> = ShardManager::new(cfg);
+        let m = blocky(24, 29);
+        let id = mgr.register(m.clone()).unwrap();
+        let x = vec![1.5; 24];
+        let rx = mgr.submit(id, x.clone());
+        drop(mgr); // must flush the window and drain — never strand a reply
+        let got = rx.recv().expect("reply delivered during shutdown").unwrap();
+        assert_eq!(got, reference(&m, &x));
+    }
+
+    #[test]
+    fn metrics_json_reports_fleet_state() {
+        let mgr: ShardManager<f64> = ShardManager::new(quiet(3, 1, false));
+        let id = mgr.register(blocky(32, 31)).unwrap();
+        mgr.spmv(id, vec![1.0; 32]).unwrap();
+        mgr.force_quarantine(0);
+        let snap = mgr.metrics_json().to_string();
+        for key in [
+            "\"shards_total\":3",
+            "\"shards_unhealthy\":1",
+            "\"failovers\":",
+            "\"shard_restarts\":",
+            "\"shard_quarantines\":",
+            "\"shard_unavailable\":",
+            "\"requests_coalesced\":",
+            "\"replications\":",
+            "\"state\":\"quarantined\"",
+            "\"state\":\"healthy\"",
+            "\"isa_tier\":",
+        ] {
+            assert!(snap.contains(key), "missing {key} in {snap}");
+        }
+        let (total, unhealthy) = mgr.health();
+        assert_eq!((total, unhealthy), (3, 1));
+    }
+
+    #[test]
+    fn shard_state_machine_names_and_serving() {
+        for (st, name, serving) in [
+            (ShardState::Healthy, "healthy", true),
+            (ShardState::Degraded, "degraded", true),
+            (ShardState::Quarantined, "quarantined", false),
+            (ShardState::Restarting, "restarting", false),
+        ] {
+            assert_eq!(st.name(), name);
+            assert_eq!(st.is_serving(), serving);
+            assert_eq!(ShardState::from_u8(st.as_u8()), st);
+        }
+    }
+}

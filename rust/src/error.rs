@@ -5,7 +5,10 @@
 //! ([`crate::spc5::try_csr_to_spc5`], [`crate::matrix::sell`]) — returns a
 //! typed [`SpmvError`] instead of panicking, so malformed input is a
 //! rejection the serving layer can report, never an abort. The coordinator
-//! wraps these in its own `ServiceError` at the request boundary.
+//! wraps these in its own `ServiceError` at the request boundary; the
+//! sharded fleet ([`crate::coordinator::shard`]) adds its routing verdicts
+//! (`ShardUnavailable`) at the same level, so a caller sees one taxonomy
+//! whether a request died in a parser, a queue, or a quarantined shard.
 //!
 //! The taxonomy is deliberately small and `Clone + PartialEq + Eq`: errors
 //! cross thread/channel boundaries in the service and are asserted on in

@@ -42,11 +42,17 @@
 //! - a parallel runtime ([`parallel`]), iterative solvers ([`solver`]),
 //! - a PJRT runtime that executes the JAX/Pallas AOT artifacts ([`runtime`]),
 //! - an SpMV coordinator service ([`coordinator`]),
-//! - and a hardened wire front-end ([`net`]): a zero-dependency length-
+//! - a hardened wire front-end ([`net`]): a zero-dependency length-
 //!   prefixed TCP protocol with checksummed frames, a capped acceptor +
 //!   handler pool with per-connection deadlines and graceful drain, and a
-//!   reconnecting client with seeded-jitter retries — all driven end-to-end
-//!   by the wire-level chaos sites of [`util::fault`].
+//!   reconnecting client with per-connection seeded-jitter retries — all
+//!   driven end-to-end by the wire-level chaos sites of [`util::fault`],
+//! - and sharded multi-tenant serving ([`coordinator::shard`]): N supervised
+//!   shards (each its own service + executor team) with rendezvous matrix
+//!   placement, hot-matrix replication, heartbeat-driven quarantine/restart
+//!   and failover routing, plus a cross-connection coalescing window that
+//!   fuses same-matrix requests from different TCP connections into SpMM
+//!   batches (`serve --shards/--replicas/--coalesce-us`).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

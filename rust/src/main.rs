@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use spc5::cli::Args;
 use spc5::coordinator::{
     Backend, FormatChoice, FormatMode, PlanMode, SelectorModel, ServiceConfig, ServiceError,
-    SpmvService,
+    ShardManager, ShardManagerConfig, SpmvService,
 };
 use spc5::kernels::{isa, native, SimIsa};
 use spc5::matrix::{corpus_by_name_or_fail, corpus_entries, gen, mm_io, Csr};
@@ -236,6 +236,14 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
     let max_conns = args.opt_num::<usize>("max-conns", 64)?;
     let io_timeout_ms = args.opt_num::<u64>("io-timeout-ms", 2000)?;
     let idle_timeout_ms = args.opt_num::<u64>("idle-timeout-ms", 30_000)?;
+    // Sharded fleet: --shards > 1 routes through the supervised shard
+    // manager (rendezvous placement, replication, failover; DESIGN.md
+    // §Sharded serving). --coalesce-us opens the cross-connection window
+    // that fuses same-matrix singles into SpMM batches.
+    let shards = args.opt_num::<usize>("shards", 1)?;
+    let replicas = args.opt_num::<usize>("replicas", 2)?;
+    let coalesce_us = args.opt_num::<u64>("coalesce-us", 0)?;
+    let replicate_eager = args.switch("replicate");
     // Admission control: --queue-cap 0 means unbounded, --deadline-ms 0
     // means no deadline (DESIGN.md §Failure model).
     let queue_cap = match args.opt_num::<usize>("queue-cap", 1024)? {
@@ -287,7 +295,7 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
             spc5::util::fault::armed_sites().join(", ")
         );
     }
-    let svc: SpmvService<f64> = SpmvService::with_config(ServiceConfig {
+    let service_cfg = ServiceConfig {
         workers,
         max_batch: 16,
         backend,
@@ -297,7 +305,25 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
         queue_cap,
         deadline,
         ..ServiceConfig::default()
-    });
+    };
+    if shards > 1 {
+        return serve_sharded(
+            ShardManagerConfig {
+                shards,
+                replicas,
+                replicate_eager,
+                coalesce_window: std::time::Duration::from_micros(coalesce_us),
+                service: service_cfg,
+                ..ShardManagerConfig::default()
+            },
+            listen,
+            max_conns,
+            io_timeout_ms,
+            idle_timeout_ms,
+            requests,
+        );
+    }
+    let svc: SpmvService<f64> = SpmvService::with_config(service_cfg);
     if let Some(addr) = listen {
         let svc = std::sync::Arc::new(svc);
         let server = Server::start(
@@ -378,6 +404,79 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `serve --shards N`: the supervised sharded fleet, behind the TCP
+/// front-end (--listen) or driving the demo workload through the router.
+fn serve_sharded(
+    cfg: ShardManagerConfig,
+    listen: Option<String>,
+    max_conns: usize,
+    io_timeout_ms: u64,
+    idle_timeout_ms: u64,
+    requests: usize,
+) -> Result<(), String> {
+    println!(
+        "sharded fleet: {} shard(s), {} replica(s) per hot matrix ({}), coalesce window {}us",
+        cfg.shards,
+        cfg.replicas,
+        if cfg.replicate_eager {
+            "eager --replicate".to_string()
+        } else {
+            format!("past {} hits", cfg.hot_threshold)
+        },
+        cfg.coalesce_window.as_micros(),
+    );
+    let mgr = std::sync::Arc::new(ShardManager::<f64>::new(cfg));
+    if let Some(addr) = listen {
+        let server = Server::start_sharded(
+            std::sync::Arc::clone(&mgr),
+            &addr,
+            ServerConfig {
+                max_conns,
+                io_timeout: std::time::Duration::from_millis(io_timeout_ms.max(1)),
+                idle_timeout: std::time::Duration::from_millis(idle_timeout_ms.max(1)),
+                ..ServerConfig::default()
+            },
+        )
+        .map_err(|e| format!("bind {addr}: {e}"))?;
+        println!(
+            "serving on {} (cap {max_conns} conns, io timeout {io_timeout_ms}ms, idle {idle_timeout_ms}ms)",
+            server.local_addr()
+        );
+        println!("drain: SIGTERM or `spc5 client --addr {} --op drain`", server.local_addr());
+        server.run_until_drained();
+        server.shutdown();
+        println!("drained; final metrics:");
+        println!("{}", mgr.metrics_json().to_pretty());
+        return Ok(());
+    }
+    let m = corpus_by_name_or_fail("nd6k")?.build(100_000);
+    let ncols = m.ncols;
+    let id = mgr.register(m).map_err(|e| e.to_string())?;
+    println!(
+        "registered nd6k-like matrix as {id:?} on shard(s) {:?}; submitting {requests} requests...",
+        mgr.replica_shards(id)
+    );
+    let t = Timer::start();
+    let rxs: Vec<_> = (0..requests)
+        .map(|k| mgr.submit(id, (0..ncols).map(|i| ((i + k) % 13) as f64).collect()))
+        .collect();
+    let (mut served, mut shed) = (0usize, 0usize);
+    for rx in rxs {
+        match rx.recv().map_err(|e| e.to_string())? {
+            Ok(_) => served += 1,
+            Err(
+                ServiceError::Overloaded { .. }
+                | ServiceError::DeadlineExceeded
+                | ServiceError::ShardUnavailable,
+            ) => shed += 1,
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+    println!("done in {:.3}s: {served} served, {shed} shed", t.elapsed_secs());
+    println!("{}", mgr.metrics_json().to_pretty());
+    Ok(())
+}
+
 fn cmd_client(args: &mut Args) -> Result<(), String> {
     let addr = args.opt_maybe("addr").ok_or("--addr <host:port> required")?;
     let op = args.opt("op", "smoke");
@@ -397,9 +496,23 @@ fn cmd_client(args: &mut Args) -> Result<(), String> {
             println!("{}", client.metrics().map_err(|e| e.to_string())?);
             Ok(())
         }
+        // Scriptable probe: exit 0 only when the server is fully ready
+        // (reachable, not draining, every shard serving) — CI and health
+        // checks branch on the exit code instead of grepping output.
         "health" => {
-            let draining = client.health().map_err(|e| e.to_string())?;
-            println!("server up, draining: {draining}");
+            let h = client.health_status().map_err(|e| e.to_string())?;
+            println!(
+                "server up, draining: {}, shards: {}/{} healthy",
+                h.draining,
+                h.shards_total.saturating_sub(h.shards_unhealthy),
+                h.shards_total
+            );
+            if !h.ok() {
+                return Err(format!(
+                    "unhealthy: draining={} unhealthy_shards={}",
+                    h.draining, h.shards_unhealthy
+                ));
+            }
             Ok(())
         }
         "drain" => {

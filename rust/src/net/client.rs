@@ -12,9 +12,17 @@
 //! ([`crate::net::proto`]) and surface as [`ClientError::Service`] — a
 //! deadline miss on the far side of a socket is the same typed
 //! `DeadlineExceeded` the in-process path returns.
+//!
+//! Backoff jitter is reseeded per *connection*: a process-global nonce (and
+//! the socket's ephemeral port) is mixed into the configured seed when a
+//! connection is established, so a fleet of clients built from one config —
+//! or one client reconnecting after a server restart — does not retry in
+//! lockstep and hammer the acceptor in synchronized waves. The stream stays
+//! deterministic per (seed, nonce) for tests.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::coordinator::{MatrixId, ServiceError};
@@ -74,6 +82,27 @@ impl std::fmt::Display for ClientError {
 }
 
 impl std::error::Error for ClientError {}
+
+/// A decoded health probe: the drain flag plus the serving fleet's shape
+/// (a single-service server reports one healthy "shard").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HealthStatus {
+    pub draining: bool,
+    pub shards_total: u32,
+    pub shards_unhealthy: u32,
+}
+
+impl HealthStatus {
+    /// Ready to take traffic: not draining, no quarantined/degraded shard.
+    pub fn ok(&self) -> bool {
+        !self.draining && self.shards_unhealthy == 0
+    }
+}
+
+/// Monotone per-process connection counter mixed into the jitter seed — two
+/// connections (even of clients sharing a config) get distinct retry
+/// schedules.
+static CONN_NONCE: AtomicU64 = AtomicU64::new(0);
 
 /// Exponential backoff with a hard cap and multiplicative jitter in
 /// [0.5, 1.5): pure so the retry schedule is unit-testable.
@@ -168,8 +197,16 @@ impl Client {
 
     /// Liveness probe; `Ok(true)` means the server is draining. Retried.
     pub fn health(&mut self) -> Result<bool, ClientError> {
+        self.health_status().map(|h| h.draining)
+    }
+
+    /// Full health probe: drain flag plus shard counts, for probes that
+    /// must fail on a degraded fleet, not just a draining one. Retried.
+    pub fn health_status(&mut self) -> Result<HealthStatus, ClientError> {
         match self.call_retrying(&Request::Health, 0)? {
-            Response::Health { draining } => Ok(draining),
+            Response::Health { draining, shards_total, shards_unhealthy } => {
+                Ok(HealthStatus { draining, shards_total, shards_unhealthy })
+            }
             resp => Err(unexpected(&resp)),
         }
     }
@@ -271,6 +308,17 @@ impl Client {
             stream.set_nodelay(true).map_err(io_err)?;
             stream.set_read_timeout(Some(self.cfg.io_timeout)).map_err(io_err)?;
             stream.set_write_timeout(Some(self.cfg.io_timeout)).map_err(io_err)?;
+            // Desynchronize retry storms: mix a process-global nonce and the
+            // ephemeral local port into the jitter seed, so clients sharing
+            // one config (and reconnects of one client) back off on distinct
+            // schedules instead of re-colliding every attempt.
+            let nonce = CONN_NONCE.fetch_add(1, Ordering::Relaxed);
+            let port = stream.local_addr().map(|a| a.port()).unwrap_or(0) as u64;
+            self.rng = SplitMix64::new(
+                self.cfg.seed
+                    ^ nonce.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ port.rotate_left(32),
+            );
             self.stream = Some(stream);
         }
         Ok(self.stream.as_mut().expect("just connected"))
@@ -348,6 +396,42 @@ mod tests {
             Err(ClientError::Io(_)) => {}
             other => panic!("expected Io error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn two_clients_with_one_seed_draw_distinct_retry_schedules() {
+        // A listener that never accepts: the kernel backlog still completes
+        // both TCP handshakes, so `ensure_connected` succeeds without a
+        // server thread.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap().to_string();
+        let cfg = ClientConfig::default();
+        let mut a = Client::with_config(&addr, cfg.clone());
+        let mut b = Client::with_config(&addr, cfg);
+        a.ensure_connected().expect("client a connects");
+        b.ensure_connected().expect("client b connects");
+        // Same config, same seed — but the per-connection nonce must give
+        // each client its own jitter stream, hence its own retry schedule.
+        let schedule = |c: &mut Client| -> Vec<Duration> {
+            (0..6)
+                .map(|attempt| {
+                    backoff_delay(
+                        c.cfg.backoff_base,
+                        c.cfg.backoff_cap,
+                        attempt,
+                        c.rng.next_f64(),
+                    )
+                })
+                .collect()
+        };
+        let sa = schedule(&mut a);
+        let sb = schedule(&mut b);
+        assert_ne!(sa, sb, "shared-seed clients must not retry in lockstep");
+        // And a reconnect of the same client re-rolls its schedule too.
+        a.stream = None;
+        a.ensure_connected().expect("client a reconnects");
+        let sa2 = schedule(&mut a);
+        assert_ne!(sa, sa2, "a reconnect must not replay the old schedule");
     }
 
     #[test]

@@ -9,25 +9,31 @@
 //!   (the `mm_io` preallocation-guard idiom), and any violation is a typed
 //!   [`crate::error::SpmvError::Frame`] — never a panic.
 //! - [`server`] — a fixed acceptor + connection-handler pool in front of
-//!   [`crate::coordinator::SpmvService`]: hard connection cap, per-connection
+//!   either a single [`crate::coordinator::SpmvService`] or a supervised
+//!   sharded fleet ([`crate::coordinator::ShardManager`], via
+//!   [`server::Server::start_sharded`]): hard connection cap, per-connection
 //!   read/write deadlines with an idle timeout (slow-loris shedding), wire
 //!   deadlines anchored at *frame receipt* so socket time counts against the
 //!   request budget, and graceful drain on SIGTERM or the `drain` op —
-//!   every accepted request gets a reply or a typed shutdown error.
+//!   every accepted request gets a reply or a typed shutdown error. In
+//!   sharded mode the health op carries the fleet's shard counts and a
+//!   drain flushes the cross-connection coalescing window.
 //! - [`client`] — a resilient client: reconnects on connection loss, retries
 //!   idempotent ops (spmv / spmm-batch / metrics / health) with capped
-//!   exponential backoff + seeded jitter, and reports
-//!   [`crate::coordinator::ServiceError`] variants losslessly across the
-//!   wire.
+//!   exponential backoff + per-connection seeded jitter (a nonce is mixed
+//!   into the seed at connect so shared-config fleets desynchronize), and
+//!   reports [`crate::coordinator::ServiceError`] variants losslessly across
+//!   the wire.
 //!
 //! The whole stack is driven end-to-end by the seeded chaos harness
 //! ([`crate::util::fault`]) through the four wire sites `net.accept`,
-//! `net.read`, `net.write` and `net.frame`.
+//! `net.read`, `net.write` and `net.frame` — plus, in sharded mode, the
+//! `shard.heartbeat` / `shard.restart` / `shard.route` supervision sites.
 
 pub mod client;
 pub mod proto;
 pub mod server;
 
-pub use client::{Client, ClientConfig, ClientError};
+pub use client::{Client, ClientConfig, ClientError, HealthStatus};
 pub use proto::{Op, Request, Response};
 pub use server::{Server, ServerConfig};

@@ -450,7 +450,10 @@ pub enum Response {
     Spmv { y: Vec<f64> },
     SpmmBatch { ys: Vec<Vec<f64>> },
     Metrics { json: String },
-    Health { draining: bool },
+    /// Liveness plus fleet shape: a single-service front-end reports
+    /// `shards_total: 1, shards_unhealthy: 0`; a sharded one reports its
+    /// supervisor's live counts so probes can fail on a degraded fleet.
+    Health { draining: bool, shards_total: u32, shards_unhealthy: u32 },
     Drain { json: String },
     Error(ServiceError),
 }
@@ -500,8 +503,8 @@ impl Response {
             Response::Metrics { json } | Response::Drain { json } => {
                 w.str_(json);
             }
-            Response::Health { draining } => {
-                w.u8(u8::from(*draining));
+            Response::Health { draining, shards_total, shards_unhealthy } => {
+                w.u8(u8::from(*draining)).u32(*shards_total).u32(*shards_unhealthy);
             }
             Response::Error(e) => {
                 encode_service_error(&mut w, e);
@@ -537,7 +540,11 @@ impl Response {
                     Response::SpmmBatch { ys }
                 }
                 Op::Metrics => Response::Metrics { json: r.str_()? },
-                Op::Health => Response::Health { draining: r.u8()? != 0 },
+                Op::Health => Response::Health {
+                    draining: r.u8()? != 0,
+                    shards_total: r.u32()?,
+                    shards_unhealthy: r.u32()?,
+                },
                 Op::Drain => Response::Drain { json: r.str_()? },
             }
         };
@@ -571,6 +578,9 @@ pub fn encode_service_error(w: &mut Writer, e: &ServiceError) {
         ServiceError::ShutDown => {
             w.u8(7);
         }
+        ServiceError::ShardUnavailable => {
+            w.u8(8);
+        }
     }
 }
 
@@ -584,6 +594,7 @@ pub fn decode_service_error(r: &mut Reader<'_>) -> Result<ServiceError, SpmvErro
         5 => ServiceError::Invalid(decode_spmv_error(r)?),
         6 => ServiceError::Faulted(r.str_()?),
         7 => ServiceError::ShutDown,
+        8 => ServiceError::ShardUnavailable,
         t => return Err(SpmvError::Frame(format!("unknown service-error tag {t}"))),
     })
 }
@@ -709,7 +720,7 @@ mod tests {
             Response::Spmv { y: vec![0.5, -1.5, 3.75] },
             Response::SpmmBatch { ys: vec![vec![1.0], vec![2.0, 3.0]] },
             Response::Metrics { json: "{\"requests\":3}".into() },
-            Response::Health { draining: true },
+            Response::Health { draining: true, shards_total: 4, shards_unhealthy: 1 },
             Response::Drain { json: "{}".into() },
         ];
         for resp in cases {
@@ -734,6 +745,7 @@ mod tests {
             ServiceError::Invalid(SpmvError::Frame("checksum mismatch".into())),
             ServiceError::Faulted("lane panic".into()),
             ServiceError::ShutDown,
+            ServiceError::ShardUnavailable,
         ];
         for err in cases {
             let resp = Response::Error(err.clone());

@@ -31,6 +31,13 @@
 //!   carries the final metrics snapshot including `drain_duration_ms`;
 //! - chaos sites `net.accept` / `net.read` / `net.write` / `net.frame`
 //!   ([`crate::util::fault`]) drive every one of these paths under test.
+//!
+//! The server fronts either a single [`SpmvService`] ([`Server::start`]) or
+//! a sharded fleet ([`Server::start_sharded`] →
+//! [`crate::coordinator::ShardManager`]): requests are routed per matrix,
+//! health reports the fleet's shard counts, and a drain fans out (the
+//! manager's cross-connection coalescing window is flushed so no request
+//! outlives the drain inside a half-open batch).
 
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -38,7 +45,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{MatrixId, Metrics, ServiceError, SpmvService};
+use crate::coordinator::{MatrixId, Metrics, ServiceError, ShardManager, SpmvService};
 use crate::error::SpmvError;
 use crate::matrix::Csr;
 use crate::net::proto::{self, Header, Op, Request, Response, HEADER_LEN};
@@ -79,8 +86,90 @@ impl Default for ServerConfig {
     }
 }
 
+/// What the wire serves: one service, or a supervised sharded fleet. Every
+/// wire path goes through this seam, so the framing/drain/chaos machinery
+/// is identical in both modes and only the routing differs.
+pub(crate) enum FrontEnd {
+    Single(Arc<SpmvService<f64>>),
+    Sharded(Arc<ShardManager<f64>>),
+}
+
+impl FrontEnd {
+    /// The metrics the wire-level gauges/counters land on (the manager's
+    /// own metrics in sharded mode — per-shard counters stay on the shards).
+    fn metrics(&self) -> &Metrics {
+        match self {
+            FrontEnd::Single(s) => s.metrics(),
+            FrontEnd::Sharded(m) => m.metrics(),
+        }
+    }
+
+    fn metrics_json(&self) -> crate::util::json::Json {
+        match self {
+            FrontEnd::Single(s) => s.metrics_json(),
+            FrontEnd::Sharded(m) => m.metrics_json(),
+        }
+    }
+
+    fn default_deadline(&self) -> Option<Duration> {
+        match self {
+            FrontEnd::Single(s) => s.default_deadline(),
+            FrontEnd::Sharded(m) => m.default_deadline(),
+        }
+    }
+
+    fn register(&self, csr: Csr<f64>) -> Result<MatrixId, ServiceError> {
+        match self {
+            FrontEnd::Single(s) => s.register(csr),
+            FrontEnd::Sharded(m) => m.register(csr),
+        }
+    }
+
+    fn submit_at(
+        &self,
+        id: MatrixId,
+        x: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> mpsc::Receiver<Result<Vec<f64>, ServiceError>> {
+        match self {
+            FrontEnd::Single(s) => s.submit_with_deadline_at(id, x, deadline),
+            FrontEnd::Sharded(m) => m.submit_with_deadline_at(id, x, deadline),
+        }
+    }
+
+    fn submit_batch(
+        &self,
+        id: MatrixId,
+        xs: Vec<Vec<f64>>,
+        deadline: Option<Instant>,
+    ) -> Vec<mpsc::Receiver<Result<Vec<f64>, ServiceError>>> {
+        match self {
+            FrontEnd::Single(s) => s.submit_batch(id, xs, deadline),
+            FrontEnd::Sharded(m) => m.submit_batch(id, xs, deadline),
+        }
+    }
+
+    /// `(shards_total, shards_unhealthy)` for the health probe. A single
+    /// service is one always-counted, never-supervised "shard".
+    fn health_counts(&self) -> (u32, u32) {
+        match self {
+            FrontEnd::Single(_) => (1, 0),
+            FrontEnd::Sharded(m) => m.health(),
+        }
+    }
+
+    /// Drain fan-out: a sharded fleet flushes its cross-connection
+    /// coalescing window so no request sits in a half-open batch while the
+    /// drain waits for connections to finish.
+    fn on_drain(&self) {
+        if let FrontEnd::Sharded(m) = self {
+            m.flush_pending();
+        }
+    }
+}
+
 struct Inner {
-    svc: Arc<SpmvService<f64>>,
+    front: FrontEnd,
     cfg: ServerConfig,
     draining: AtomicBool,
     shutdown: AtomicBool,
@@ -104,12 +193,12 @@ impl Inner {
     fn record_drain_done(&self) {
         let g = self.drain_started.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(t0) = *g {
-            self.svc.metrics().set_drain_duration_ms(t0.elapsed().as_millis() as u64);
+            self.front.metrics().set_drain_duration_ms(t0.elapsed().as_millis() as u64);
         }
     }
 
     fn open_connections(&self) -> usize {
-        self.svc.metrics().connections_open.load(Ordering::Relaxed) as usize
+        self.front.metrics().connections_open.load(Ordering::Relaxed) as usize
     }
 }
 
@@ -130,12 +219,27 @@ impl Server {
         listen: &str,
         cfg: ServerConfig,
     ) -> io::Result<Server> {
+        Self::start_front(FrontEnd::Single(svc), listen, cfg)
+    }
+
+    /// Bind `listen` and serve a sharded fleet: requests route by matrix
+    /// placement with failover, health reports shard counts, and a drain
+    /// flushes the manager's coalescing window.
+    pub fn start_sharded(
+        mgr: Arc<ShardManager<f64>>,
+        listen: &str,
+        cfg: ServerConfig,
+    ) -> io::Result<Server> {
+        Self::start_front(FrontEnd::Sharded(mgr), listen, cfg)
+    }
+
+    fn start_front(front: FrontEnd, listen: &str, cfg: ServerConfig) -> io::Result<Server> {
         sig::install();
         let listener = TcpListener::bind(listen)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let inner = Arc::new(Inner {
-            svc,
+            front,
             cfg,
             draining: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
@@ -172,6 +276,7 @@ impl Server {
     /// wire `drain` op).
     pub fn drain(&self) {
         self.inner.begin_drain();
+        self.inner.front.on_drain();
     }
 
     pub fn is_draining(&self) -> bool {
@@ -207,6 +312,7 @@ impl Server {
 
     fn stop(&mut self) {
         self.inner.begin_drain();
+        self.inner.front.on_drain();
         self.inner.shutdown.store(true, Ordering::Release);
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
@@ -234,7 +340,7 @@ fn acceptor_loop(inner: &Arc<Inner>, listener: &TcpListener, tx: &mpsc::Sender<T
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
-                let m = inner.svc.metrics();
+                let m = inner.front.metrics();
                 // Chaos: an armed `net.accept` fault drops the connection
                 // on the floor — the client sees a reset and retries.
                 if fault::maybe_io(site::NET_ACCEPT).is_err() {
@@ -310,7 +416,7 @@ impl Drop for ConnGauge<'_> {
 }
 
 fn serve_conn(inner: &Arc<Inner>, mut stream: TcpStream) {
-    let m = inner.svc.metrics();
+    let m = inner.front.metrics();
     let _gauge = ConnGauge(m);
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(inner.cfg.io_timeout));
@@ -418,7 +524,7 @@ fn handle_request(
         let d = if header.deadline_ms > 0 {
             Some(Duration::from_millis(header.deadline_ms as u64))
         } else {
-            inner.svc.default_deadline()
+            inner.front.default_deadline()
         };
         d.and_then(|d| frame_start.checked_add(d))
     };
@@ -432,21 +538,21 @@ fn handle_request(
             };
             match Csr::from_parts(nrows, ncols, row_ptr, col_idx, vals) {
                 Err(e) => Response::Error(ServiceError::Invalid(e)),
-                Ok(csr) => match inner.svc.register(csr) {
+                Ok(csr) => match inner.front.register(csr) {
                     Ok(id) => Response::Registered { id: id.0 },
                     Err(e) => Response::Error(e),
                 },
             }
         }
         Request::Spmv { id, x } => {
-            match inner.svc.submit_with_deadline_at(MatrixId(id), x, deadline).recv() {
+            match inner.front.submit_at(MatrixId(id), x, deadline).recv() {
                 Ok(Ok(y)) => Response::Spmv { y },
                 Ok(Err(e)) => Response::Error(e),
                 Err(_) => Response::Error(ServiceError::ShutDown),
             }
         }
         Request::SpmmBatch { id, xs } => {
-            let rxs = inner.svc.submit_batch(MatrixId(id), xs, deadline);
+            let rxs = inner.front.submit_batch(MatrixId(id), xs, deadline);
             let mut ys = Vec::with_capacity(rxs.len());
             for rx in rxs {
                 match rx.recv() {
@@ -459,10 +565,16 @@ fn handle_request(
             }
             Response::SpmmBatch { ys }
         }
-        Request::Metrics => Response::Metrics { json: inner.svc.metrics_json().to_string() },
-        Request::Health => Response::Health { draining: inner.draining() },
+        Request::Metrics => Response::Metrics { json: inner.front.metrics_json().to_string() },
+        Request::Health => {
+            let (shards_total, shards_unhealthy) = inner.front.health_counts();
+            Response::Health { draining: inner.draining(), shards_total, shards_unhealthy }
+        }
         Request::Drain => {
             inner.begin_drain();
+            // Fan out: a sharded front-end flushes its coalescing window so
+            // no request is parked in a half-open cross-connection batch.
+            inner.front.on_drain();
             let t0 = Instant::now();
             // Flush: wait (bounded) for every other connection to finish —
             // their in-flight replies are being written while we sit here.
@@ -470,7 +582,7 @@ fn handle_request(
                 std::thread::sleep(Duration::from_millis(2));
             }
             inner.record_drain_done();
-            Response::Drain { json: inner.svc.metrics_json().to_string() }
+            Response::Drain { json: inner.front.metrics_json().to_string() }
         }
     }
 }
@@ -592,6 +704,34 @@ mod tests {
         assert_ne!(server.local_addr().port(), 0);
         assert!(!server.is_draining());
         assert_eq!(server.open_connections(), 0);
+        server.shutdown(); // must join without deadlock
+    }
+
+    #[test]
+    fn sharded_server_binds_and_reports_fleet_health() {
+        use crate::coordinator::{ServiceConfig, ShardManagerConfig};
+        let mgr = Arc::new(ShardManager::<f64>::new(ShardManagerConfig {
+            shards: 3,
+            replicas: 2,
+            // Hold the supervisor still for the test's lifetime.
+            heartbeat_interval: Duration::from_secs(3600),
+            service: ServiceConfig { workers: 1, threads: 1, ..ServiceConfig::default() },
+            ..ShardManagerConfig::default()
+        }));
+        let server = Server::start_sharded(
+            Arc::clone(&mgr),
+            "127.0.0.1:0",
+            ServerConfig {
+                io_timeout: Duration::from_millis(50),
+                idle_timeout: Duration::from_millis(100),
+                ..ServerConfig::default()
+            },
+        )
+        .expect("bind");
+        assert_ne!(server.local_addr().port(), 0);
+        assert_eq!(server.inner.front.health_counts(), (3, 0));
+        mgr.force_quarantine(1);
+        assert_eq!(server.inner.front.health_counts(), (3, 1));
         server.shutdown(); // must join without deadlock
     }
 }

@@ -73,9 +73,23 @@ pub mod site {
     /// (before checksum verification), via [`super::fire_value`] — the
     /// wire's answer must be a typed malformed-frame error, never a panic.
     pub const NET_FRAME: &str = "net.frame";
+    /// Force a supervisor heartbeat miss in the sharded coordinator
+    /// ([`crate::coordinator::shard`]): the canary probe is treated as timed
+    /// out, driving the shard toward `Degraded`/`Quarantined` exactly as a
+    /// wedged dispatcher would.
+    pub const SHARD_HEARTBEAT: &str = "shard.heartbeat";
+    /// Fail a quarantined shard's rebuild attempt: the shard stays
+    /// `Quarantined` and the supervisor retries on its next tick, so chaos
+    /// tests cover repeated restart failure without wedging the router.
+    pub const SHARD_RESTART: &str = "shard.restart";
+    /// Skip the primary replica when routing a request — exercises the
+    /// failover path onto secondary replicas. Only consulted when the matrix
+    /// actually has more than one replica; an unreplicated matrix is never
+    /// artificially shed by this site.
+    pub const SHARD_ROUTE: &str = "shard.route";
 
     /// All registered sites (docs, CLI banners).
-    pub const ALL: [&str; 10] = [
+    pub const ALL: [&str; 13] = [
         TEAM_LANE,
         EXEC_SPMV,
         CONVERT_SPC5,
@@ -86,6 +100,9 @@ pub mod site {
         NET_READ,
         NET_WRITE,
         NET_FRAME,
+        SHARD_HEARTBEAT,
+        SHARD_RESTART,
+        SHARD_ROUTE,
     ];
 }
 
@@ -409,11 +426,14 @@ mod tests {
 
     #[test]
     fn site_registry_is_stable() {
-        assert_eq!(site::ALL.len(), 10);
+        assert_eq!(site::ALL.len(), 13);
         assert!(site::ALL.contains(&site::TEAM_LANE));
         assert!(site::ALL.contains(&site::SERVICE_LATENCY));
         for net in [site::NET_ACCEPT, site::NET_READ, site::NET_WRITE, site::NET_FRAME] {
             assert!(site::ALL.contains(&net), "missing wire site {net}");
+        }
+        for shard in [site::SHARD_HEARTBEAT, site::SHARD_RESTART, site::SHARD_ROUTE] {
+            assert!(site::ALL.contains(&shard), "missing shard site {shard}");
         }
     }
 

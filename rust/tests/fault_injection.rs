@@ -139,6 +139,54 @@ fn overload_sheds_with_typed_backpressure() {
 }
 
 #[test]
+fn batch_larger_than_remaining_cap_is_rejected_atomically() {
+    let _serial = chaos_lock();
+    // Stall every dispatch 100 ms with max_batch 1: between the back-to-back
+    // submits below at most ONE item can leave the queue (a second pop is a
+    // full stall away), so the occupancy at the third submit is 4 or 5 —
+    // never fewer — regardless of scheduling.
+    let _armed = Armed::new("service.latency:1.0:15:100");
+    let svc: SpmvService<f64> = SpmvService::with_config(ServiceConfig {
+        workers: 1,
+        max_batch: 1,
+        threads: 1,
+        queue_cap: 6,
+        ..ServiceConfig::default()
+    });
+    let m = blocky(40, 21);
+    let id = svc.register(m).unwrap();
+    // Occupy the dispatcher, then fill 4 of the 6 slots with one group.
+    let first = svc.submit(id, vec![1.0; 40]);
+    let four = svc.submit_batch(id, vec![vec![1.0; 40]; 4], None);
+    // 1-2 free slots remain (the single may or may not have been popped
+    // yet): a 3-group must be rejected whole — no partial admission.
+    let three = svc.submit_batch(id, vec![vec![1.0; 40]; 3], None);
+    let mut overloaded = 0u64;
+    for rx in three {
+        match rx.recv().expect("service alive") {
+            Err(ServiceError::Overloaded { queued, cap }) => {
+                assert_eq!(cap, 6);
+                assert!(queued >= 4, "rejection with {queued} queued");
+                overloaded += 1;
+            }
+            other => panic!("expected whole-group Overloaded, got {other:?}"),
+        }
+    }
+    assert_eq!(overloaded, 3, "every member of the rejected group answers");
+    assert_eq!(
+        svc.metrics().rejected.load(Ordering::Relaxed),
+        3,
+        "requests_rejected counts exactly the rejected group"
+    );
+    // The admitted requests are untouched by the rejection.
+    assert!(first.recv().unwrap().is_ok());
+    for rx in four {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    assert_eq!(svc.metrics().rejected.load(Ordering::Relaxed), 3);
+}
+
+#[test]
 fn expired_deadlines_are_shed_before_dispatch() {
     let _serial = chaos_lock();
     // 30 ms dispatch stall against a 1 ms deadline: every request expires

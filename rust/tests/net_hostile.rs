@@ -142,7 +142,7 @@ fn garbage_opcode_keeps_the_connection_alive() {
     let (reply, payload) = read_reply(&mut s).expect("health on the same socket");
     assert_eq!(reply.request_id, 100);
     match Response::decode(reply.opcode, &payload).expect("decodable") {
-        Response::Health { draining } => assert!(!draining),
+        Response::Health { draining, .. } => assert!(!draining),
         other => panic!("expected health response, got {}", other.label()),
     }
     assert!(svc.metrics().frames_malformed.load(Ordering::Relaxed) >= 1);

@@ -1,0 +1,430 @@
+//! Shard-fleet chaos acceptance suite (ISSUE PR-9): the sharded server
+//! under a mid-stream shard kill. With a primary forcibly quarantined
+//! while ≥100 mixed wire requests are in flight, every request must get a
+//! reply — bitwise-correct from a replica or a typed error, zero hangs,
+//! zero server panics — the shard must restart and serve again within the
+//! test, and the fleet metrics must report failover/quarantine/restart
+//! counters consistent with the injected faults. The suite also pins the
+//! cross-connection coalescing window (two TCP connections fused into one
+//! SpMM batch), the wire health op's shard counts, and the `shard.restart`
+//! fault semantics (failed rebuilds are retried until the site disarms).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use spc5::coordinator::{
+    MatrixId, ServiceConfig, ServiceError, ShardManager, ShardManagerConfig,
+};
+use spc5::matrix::{gen, Csr};
+use spc5::net::{Client, ClientConfig, ClientError, Server, ServerConfig};
+use spc5::util::fault;
+
+/// Fault table is process-global: chaos tests serialize on this lock.
+/// Fault-free tests in this binary take it too — a concurrently armed
+/// `shard.route` would leak into their managers.
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Armed;
+
+impl Armed {
+    fn new(spec: &str) -> Self {
+        fault::arm(spec).expect("valid fault spec");
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+/// Counts panics that unwind out of server or shard-fleet threads. The
+/// hook chains to the default so genuine failures still print.
+fn server_panics() -> &'static AtomicU64 {
+    static COUNT: AtomicU64 = AtomicU64::new(0);
+    static INSTALL: OnceLock<()> = OnceLock::new();
+    INSTALL.get_or_init(|| {
+        let previous = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let name = std::thread::current().name().unwrap_or("").to_string();
+            if name.starts_with("spc5-net") || name.starts_with("spc5-shard") {
+                COUNT.fetch_add(1, Ordering::SeqCst);
+            }
+            previous(info);
+        }));
+    });
+    &COUNT
+}
+
+fn blocky(n: usize, seed: u64) -> Csr<f64> {
+    gen::Structured {
+        nrows: n,
+        ncols: n,
+        nnz_per_row: 8.0,
+        run_len: 4.0,
+        row_corr: 0.7,
+        ..Default::default()
+    }
+    .generate(seed)
+}
+
+fn chaos_client(addr: &str, seed: u64) -> Client {
+    Client::with_config(
+        addr,
+        ClientConfig {
+            io_timeout: Duration::from_secs(2),
+            max_retries: 8,
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(40),
+            seed,
+            ..ClientConfig::default()
+        },
+    )
+}
+
+/// Register with a bounded retry loop: `register` is not auto-retried by
+/// the client, and under socket faults both transport errors and
+/// corrupted-request refusals are expected and retryable here.
+fn register_retrying(client: &mut Client, m: &Csr<f64>) -> MatrixId {
+    for _ in 0..40 {
+        match client.register(m) {
+            Ok(id) => return id,
+            Err(ClientError::Service(ServiceError::Invalid(_)))
+            | Err(ClientError::Io(_))
+            | Err(ClientError::Protocol(_)) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("register refused with a non-retryable error: {e}"),
+        }
+    }
+    panic!("register never succeeded under chaos");
+}
+
+/// The ISSUE acceptance gate: kill a primary mid-stream under load.
+#[test]
+fn shard_kill_under_load_replies_to_every_request() {
+    let _serial = chaos_lock();
+    let panics = server_panics();
+    let before = panics.load(Ordering::SeqCst);
+    // Light socket chaos plus forced primary-skips: the failover path is
+    // exercised throughout the run, not only inside the quarantine window.
+    let armed = Armed::new("net.read:0.02:901,shard.route:0.25:902");
+
+    let mgr = Arc::new(ShardManager::<f64>::new(ShardManagerConfig {
+        shards: 4,
+        replicas: 2,
+        replicate_eager: true,
+        heartbeat_interval: Duration::from_millis(25),
+        service: ServiceConfig {
+            workers: 2,
+            max_batch: 8,
+            threads: 2,
+            ..ServiceConfig::default()
+        },
+        ..ShardManagerConfig::default()
+    }));
+    let server = Server::start_sharded(
+        Arc::clone(&mgr),
+        "127.0.0.1:0",
+        ServerConfig {
+            io_timeout: Duration::from_millis(500),
+            idle_timeout: Duration::from_secs(10),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+    let mut client = chaos_client(&addr, 11);
+
+    let n = 128usize;
+    let m = blocky(n, 29);
+    let id = register_retrying(&mut client, &m);
+    assert_eq!(mgr.replica_shards(id).len(), 2, "--replicate places two replicas eagerly");
+    let primary = mgr.primary_of(id).expect("placed matrix has a primary");
+
+    let make_x = |req: usize| -> Vec<f64> {
+        (0..n).map(|i| ((i * 5 + req) % 23) as f64 * 0.5 - 5.0).collect()
+    };
+    let mut outcomes: Vec<(Vec<f64>, Vec<f64>)> = Vec::new(); // (x, wire y)
+    let mut typed_errors = 0usize;
+    let mut total = 0usize;
+    let mut req = 0usize;
+    let mut killed = false;
+    while total < 100 {
+        if !killed && total >= 40 {
+            // The mid-stream kill: the primary is yanked while requests are
+            // on the wire; the router must fail over without a single hang.
+            mgr.force_quarantine(primary);
+            killed = true;
+        }
+        if req % 5 == 0 && total + 4 <= 100 {
+            let xs: Vec<Vec<f64>> = (0..4).map(|j| make_x(req * 10 + j)).collect();
+            total += 4;
+            match client.spmm_batch(id, &xs) {
+                Ok(ys) => {
+                    assert_eq!(ys.len(), xs.len());
+                    for (x, y) in xs.into_iter().zip(ys) {
+                        outcomes.push((x, y));
+                    }
+                }
+                Err(ClientError::Service(_)) => typed_errors += 4,
+                Err(e) => panic!("request lost without a typed error: {e}"),
+            }
+        } else {
+            let x = make_x(req);
+            total += 1;
+            match client.spmv(id, &x) {
+                Ok(y) => outcomes.push((x, y)),
+                Err(ClientError::Service(_)) => typed_errors += 1,
+                Err(e) => panic!("request lost without a typed error: {e}"),
+            }
+        }
+        req += 1;
+    }
+    assert_eq!(total, 100);
+    assert!(killed, "the kill must land mid-stream");
+    // With a live replica the kill must not eat the workload.
+    assert!(
+        outcomes.len() >= 60,
+        "served {} of 100 (typed errors: {typed_errors})",
+        outcomes.len()
+    );
+
+    // The killed shard must restart and serve again within the test.
+    let t0 = Instant::now();
+    while !(mgr.epoch(primary) >= 1 && mgr.state(primary).is_serving()) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "quarantined shard never restarted (state {:?})",
+            mgr.state(primary)
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut post_restart_ok = 0usize;
+    for i in 0..12 {
+        let x = make_x(1000 + i);
+        match client.spmv(id, &x) {
+            Ok(y) => {
+                outcomes.push((x, y));
+                post_restart_ok += 1;
+            }
+            Err(ClientError::Service(_)) => {}
+            Err(e) => panic!("post-restart request lost without a typed error: {e}"),
+        }
+    }
+    assert!(post_restart_ok >= 1, "restarted fleet must serve again");
+
+    // Counters consistent with the forced kill and the armed route faults.
+    let mx = mgr.metrics();
+    assert!(mx.failovers.load(Ordering::Relaxed) >= 1, "failover path never taken");
+    assert!(mx.shard_quarantines.load(Ordering::Relaxed) >= 1, "kill not recorded");
+    assert!(mx.shard_restarts.load(Ordering::Relaxed) >= 1, "restart not recorded");
+    let snap = mgr.metrics_json().to_string();
+    for key in ["\"failovers\"", "\"shard_quarantines\"", "\"shard_restarts\"", "\"shards\""] {
+        assert!(snap.contains(key), "metrics_json missing {key}: {snap}");
+    }
+
+    // Bitwise verification with chaos off: every wire reply matches the
+    // in-process sharded path. Replicas rebuild the operator from the same
+    // CSR with the same config, so any replica's answer — including the
+    // restarted primary's — is bitwise the same arithmetic.
+    drop(armed);
+    for (x, wire_y) in &outcomes {
+        let in_proc = mgr.spmv(id, x.clone()).expect("in-process path");
+        assert_eq!(wire_y, &in_proc, "wire reply diverged from the replica set");
+    }
+
+    assert_eq!(
+        panics.load(Ordering::SeqCst),
+        before,
+        "a server or shard thread panicked during the kill"
+    );
+    server.shutdown();
+}
+
+/// The coalescing gap closed: same-matrix singles from two different TCP
+/// connections land in one cross-connection window and come back fused.
+#[test]
+fn cross_connection_singles_coalesce_into_fused_batches() {
+    let _serial = chaos_lock();
+    let panics = server_panics();
+    let before = panics.load(Ordering::SeqCst);
+
+    let mgr = Arc::new(ShardManager::<f64>::new(ShardManagerConfig {
+        shards: 2,
+        replicas: 1,
+        coalesce_window: Duration::from_millis(200),
+        heartbeat_interval: Duration::from_secs(3600),
+        service: ServiceConfig {
+            workers: 1,
+            max_batch: 8,
+            threads: 1,
+            ..ServiceConfig::default()
+        },
+        ..ShardManagerConfig::default()
+    }));
+    let server = Server::start_sharded(
+        Arc::clone(&mgr),
+        "127.0.0.1:0",
+        ServerConfig {
+            io_timeout: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(10),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+
+    let n = 96usize;
+    let m = blocky(n, 41);
+    let mut setup = chaos_client(&addr, 21);
+    let id = setup.register(&m).expect("register");
+
+    // Two connections lock-stepped by a barrier: each round both send one
+    // single inside the same 200ms window, so the flusher fuses them.
+    let rounds = 4usize;
+    let gate = Arc::new(Barrier::new(2));
+    let handles: Vec<_> = (0..2)
+        .map(|c| {
+            let addr = addr.clone();
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                let mut client = chaos_client(&addr, 30 + c as u64);
+                let mut served: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+                for i in 0..rounds {
+                    let x: Vec<f64> =
+                        (0..n).map(|j| ((j * 2 + c * 5 + i) % 13) as f64 - 6.0).collect();
+                    gate.wait();
+                    let y = client.spmv(id, &x).expect("coalesced single must be served");
+                    served.push((x, y));
+                }
+                served
+            })
+        })
+        .collect();
+
+    let mut all: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread must not panic"));
+    }
+    assert_eq!(all.len(), 2 * rounds);
+    // `requests_coalesced` counts only members of fused (≥2) groups: at
+    // least one round must have shared a window across the connections.
+    assert!(
+        mgr.metrics().requests_coalesced.load(Ordering::Relaxed) >= 2,
+        "two synchronized connections never shared a fused batch"
+    );
+    // Fusing must not change the arithmetic: bitwise against the in-process
+    // sharded path.
+    for (x, wire_y) in &all {
+        let in_proc = mgr.spmv(id, x.clone()).expect("in-process path");
+        assert_eq!(wire_y, &in_proc, "coalesced reply diverged from the direct path");
+    }
+
+    assert_eq!(panics.load(Ordering::SeqCst), before, "a thread panicked while coalescing");
+    server.shutdown();
+}
+
+/// The wire health op carries fleet shard counts, and `HealthStatus::ok`
+/// gates on them — the exit-code contract behind `client --op health`.
+#[test]
+fn health_op_reports_fleet_shard_counts_over_the_wire() {
+    let _serial = chaos_lock();
+    let mgr = Arc::new(ShardManager::<f64>::new(ShardManagerConfig {
+        shards: 3,
+        replicas: 1,
+        // Quiet supervisor: a forced quarantine stays put for the test.
+        heartbeat_interval: Duration::from_secs(3600),
+        service: ServiceConfig {
+            workers: 1,
+            max_batch: 4,
+            threads: 1,
+            ..ServiceConfig::default()
+        },
+        ..ShardManagerConfig::default()
+    }));
+    let server = Server::start_sharded(
+        Arc::clone(&mgr),
+        "127.0.0.1:0",
+        ServerConfig {
+            io_timeout: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(10),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    let mut client = chaos_client(&server.local_addr().to_string(), 51);
+
+    let h = client.health_status().expect("health over the wire");
+    assert_eq!((h.draining, h.shards_total, h.shards_unhealthy), (false, 3, 0));
+    assert!(h.ok());
+
+    mgr.force_quarantine(1);
+    let h = client.health_status().expect("health over the wire");
+    assert_eq!((h.shards_total, h.shards_unhealthy), (3, 1));
+    assert!(!h.ok(), "a quarantined shard must fail the health gate");
+    server.shutdown();
+}
+
+/// `shard.restart` semantics: an armed site aborts every rebuild (the
+/// shard stays quarantined, shedding typed), and the supervisor keeps
+/// retrying until the site disarms — then the rebuilt operator is bitwise
+/// the original.
+#[test]
+fn failed_restarts_retry_until_the_site_disarms() {
+    let _serial = chaos_lock();
+    let panics = server_panics();
+    let before = panics.load(Ordering::SeqCst);
+    let armed = Armed::new("shard.restart:1.0:77");
+
+    let mgr = ShardManager::<f64>::new(ShardManagerConfig {
+        shards: 2,
+        replicas: 1,
+        heartbeat_interval: Duration::from_millis(20),
+        service: ServiceConfig {
+            workers: 1,
+            max_batch: 4,
+            threads: 1,
+            ..ServiceConfig::default()
+        },
+        ..ShardManagerConfig::default()
+    });
+    let n = 64usize;
+    let m = blocky(n, 31);
+    let id = mgr.register(m).expect("register");
+    let x: Vec<f64> = (0..n).map(|i| (i % 7) as f64 - 3.0).collect();
+    let y0 = mgr.spmv(id, x.clone()).expect("healthy serve");
+
+    let primary = mgr.primary_of(id).expect("placed");
+    mgr.force_quarantine(primary);
+    // Several supervisor ticks pass; every rebuild attempt is aborted by
+    // the armed site, so no epoch ever completes.
+    std::thread::sleep(Duration::from_millis(250));
+    assert_eq!(mgr.epoch(primary), 0, "armed shard.restart must abort every rebuild");
+    assert!(!mgr.state(primary).is_serving());
+    // Sole replica down: the manager sheds typed — it never hangs.
+    match mgr.spmv(id, x.clone()) {
+        Err(ServiceError::ShardUnavailable) => {}
+        other => panic!("expected ShardUnavailable while down, got {other:?}"),
+    }
+
+    drop(armed);
+    let t0 = Instant::now();
+    while !(mgr.epoch(primary) >= 1 && mgr.state(primary).is_serving()) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "restart never landed after the site disarmed"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let y1 = mgr.spmv(id, x).expect("restarted shard serves");
+    assert_eq!(y0, y1, "rebuilt operator diverged from the original");
+    assert!(mgr.metrics().shard_restarts.load(Ordering::Relaxed) >= 1);
+
+    assert_eq!(panics.load(Ordering::SeqCst), before, "a shard thread panicked");
+}
