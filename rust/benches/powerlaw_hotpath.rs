@@ -1,0 +1,203 @@
+//! **Power-law hot path**: the load-balancing and locality work measured on
+//! the corpora it was built for — skewed row-length distributions and
+//! x-vectors far larger than the LLC share.
+//!
+//! Three corpora:
+//! - `hub`: one dense row over an otherwise diagonal matrix (~50% of the
+//!   nnz in a single row). Row-granular partitioning strands that row on
+//!   one lane; the merge-path partitioner splits inside it.
+//! - `scrambled-band`: a |i−j| ≤ 4 band symmetric-permuted by a full-range
+//!   stride shuffle. Bandwidth explodes to ~n, x accesses scatter across
+//!   the whole vector; RCM recovers the band and the selector's
+//!   reorder-aware pass should pick the permuted form.
+//! - `powerlaw`: a Barabási–Albert preferential-attachment graph
+//!   (`gen::powerlaw`), the PageRank transition-matrix shape.
+//!
+//! Each corpus runs rows-CSR, merge-CSR, SELL, tiled CSR and the
+//! selector's own choice on a 4-lane team. Two check lines are asserted:
+//! merge-path beats rows-granular CSR on `hub`, and the selector's choice
+//! beats baseline rows-CSR on `scrambled-band`. All operators must agree
+//! with the serial CSR reference. The JSON feeds `BENCH_powerlaw.json` via
+//! `tools/bench_compare.py`.
+//!
+//! Run: `cargo bench --bench powerlaw_hotpath`
+
+use std::sync::Arc;
+
+use spc5::bench::{table::fmt1, TextTable};
+use spc5::coordinator::{select_format, SelectorModel};
+use spc5::matrix::{gen, reorder, Csr};
+use spc5::ops::{self, FormatChoice, SparseOp};
+use spc5::parallel::{row_length_cov, CsrPartition, ParallelCsr, Team};
+use spc5::util::json::Json;
+use spc5::util::timing::Timer;
+
+const LANES: usize = 4;
+const HUB_N: usize = 150_000;
+const BAND_N: usize = 1_200_000;
+const BAND_HALF: usize = 4;
+const PL_NODES: usize = 400_000;
+const PL_EDGES: usize = 8;
+const REPS: usize = 7;
+
+/// One dense hub row over a diagonal tail: row 0 holds n of the 2n−1
+/// non-zeros, so a row-granular split cannot hand any lane less than half
+/// the work.
+fn hub_matrix(n: usize) -> Csr<f64> {
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut cols = Vec::with_capacity(2 * n - 1);
+    let mut vals = Vec::with_capacity(2 * n - 1);
+    row_ptr.push(0u32);
+    for c in 0..n {
+        cols.push(c as u32);
+        vals.push(0.5 + (c % 7) as f64 * 0.125);
+    }
+    row_ptr.push(n as u32);
+    for r in 1..n {
+        cols.push(r as u32);
+        vals.push(1.0 + (r % 5) as f64 * 0.25);
+        row_ptr.push((n + r) as u32);
+    }
+    Csr::from_parts(n, n, row_ptr, cols, vals).expect("hub matrix")
+}
+
+/// A |i−j| ≤ half band, then symmetric-permuted by i ↦ (i·48271) mod n so
+/// the pattern's bandwidth becomes ~n while the underlying graph stays a
+/// band RCM can recover.
+fn scrambled_band(n: usize, half: usize) -> Csr<f64> {
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    row_ptr.push(0u32);
+    for r in 0..n {
+        let lo = r.saturating_sub(half);
+        let hi = (r + half).min(n - 1);
+        for c in lo..=hi {
+            cols.push(c as u32);
+            vals.push(0.25 + ((r + 2 * c) % 9) as f64 * 0.0625);
+        }
+        row_ptr.push(cols.len() as u32);
+    }
+    let band = Csr::from_parts(n, n, row_ptr, cols, vals).expect("band matrix");
+    // 48271 is prime and n is not a multiple of it, so the stride map is a
+    // bijection on 0..n.
+    let perm: Vec<u32> = (0..n).map(|i| ((i as u64 * 48271) % n as u64) as u32).collect();
+    reorder::permute_symmetric(&band, &perm)
+}
+
+/// Best-of-`REPS` wall time for one spmv, in microseconds.
+fn time_spmv(op: &dyn SparseOp<f64>, x: &[f64], y: &mut [f64], reps: usize) -> f64 {
+    op.spmv(x, y); // warm the operator's scratch and the caches
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Timer::start();
+        op.spmv(x, y);
+        best = best.min(t.elapsed_secs());
+    }
+    best * 1e6
+}
+
+fn main() {
+    println!("== Power-law hot path: merge partitioning, tiling, reorder-aware selection ==\n");
+    let team = Arc::new(Team::exact(LANES));
+    let corpora: Vec<(&str, Csr<f64>)> = vec![
+        ("hub", hub_matrix(HUB_N)),
+        ("scrambled-band", scrambled_band(BAND_N, BAND_HALF)),
+        ("powerlaw", gen::powerlaw(PL_NODES, PL_EDGES, 42)),
+    ];
+
+    let mut table = TextTable::new(&["matrix", "op", "spmv (us)", "vs rows-csr"]);
+    let mut results = Json::Arr(vec![]);
+    let mut mismatch = false;
+    let mut hub_rows_vs_merge: Option<(f64, f64)> = None;
+    let mut band_rows_vs_selected: Option<(f64, f64, String)> = None;
+
+    for (name, m) in &corpora {
+        println!(
+            "{name}: {}x{}, {} nnz, row CoV {:.2}",
+            m.nrows,
+            m.ncols,
+            m.nnz(),
+            row_length_cov(&m.row_ptr)
+        );
+        let x: Vec<f64> = (0..m.ncols).map(|i| 1.0 / (1.0 + (i % 97) as f64)).collect();
+        let mut reference = vec![0.0; m.nrows];
+        m.spmv(&x, &mut reference);
+
+        let sel = select_format(m, &SelectorModel::for_tier(spc5::kernels::isa::active()));
+        let rows_op = ParallelCsr::with_strategy(m, Arc::clone(&team), CsrPartition::Rows);
+        let merge_op = ParallelCsr::with_strategy(m, Arc::clone(&team), CsrPartition::Merge);
+        let legs: Vec<(&str, Box<dyn SparseOp<f64>>)> = vec![
+            ("rows-csr", Box::new(rows_op)),
+            ("merge-csr", Box::new(merge_op)),
+            ("sell", ops::build(m, FormatChoice::Sell { sigma: 128 }, &team)),
+            ("tiled", ops::build(m, FormatChoice::Tiled { tile_cols: 0 }, &team)),
+            ("selected", ops::build(m, sel.choice, &team)),
+        ];
+
+        let mut y = vec![0.0; m.nrows];
+        let mut rows_us = 0.0;
+        for (leg, op) in &legs {
+            let us = time_spmv(op.as_ref(), &x, &mut y, REPS);
+            spc5::scalar::assert_allclose(&y, &reference, 1e-9, 1e-12);
+            mismatch |= y.len() != m.nrows;
+            if *leg == "rows-csr" {
+                rows_us = us;
+            }
+            let label =
+                if *leg == "selected" { format!("selected [{}]", op.label()) } else { leg.to_string() };
+            table.row(vec![
+                name.to_string(),
+                label,
+                fmt1(us),
+                format!("x{:.2}", rows_us / us),
+            ]);
+            let mut o = Json::obj();
+            o.set("matrix", *name).set("op", *leg).set("spmv_us", us);
+            results.push(o);
+            match (*name, *leg) {
+                ("hub", "merge-csr") => hub_rows_vs_merge = Some((rows_us, us)),
+                ("scrambled-band", "selected") => {
+                    band_rows_vs_selected = Some((rows_us, us, op.label()))
+                }
+                _ => {}
+            }
+        }
+        println!(
+            "  selector chose {:?} (reorder {})\n",
+            sel.choice,
+            sel.reorder.map(|e| e.applied).unwrap_or(false)
+        );
+    }
+    println!("{}", table.render());
+
+    // Check lines — the two claims this PR makes, asserted in-bench.
+    let (hr, hm) = hub_rows_vs_merge.expect("hub merge leg ran");
+    let merge_ok = hm < hr;
+    println!(
+        "check: merge-path beats rows-granular CSR on hub (x{:.2}) -> {}",
+        hr / hm,
+        if merge_ok { "OK" } else { "SLOWER" }
+    );
+    let (br, bs, blabel) = band_rows_vs_selected.expect("band selected leg ran");
+    let sel_ok = bs < br;
+    println!(
+        "check: selector choice '{blabel}' beats baseline CSR on scrambled-band (x{:.2}) -> {}",
+        br / bs,
+        if sel_ok { "OK" } else { "SLOWER" }
+    );
+
+    let mut json = Json::obj();
+    json.set("bench", "powerlaw_hotpath")
+        .set("schema_version", 1u64)
+        .set("lanes", LANES)
+        .set("reps", REPS)
+        .set("results", results);
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/powerlaw_hotpath.json", json.to_pretty()).ok();
+    println!("json: target/bench-results/powerlaw_hotpath.json");
+
+    assert!(!mismatch, "operator outputs must match the serial CSR reference");
+    assert!(merge_ok, "merge-path partitioning must beat rows on the hub corpus");
+    assert!(sel_ok, "the selector's choice must beat baseline CSR on the scrambled band");
+}

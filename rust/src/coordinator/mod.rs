@@ -19,7 +19,7 @@ pub mod service;
 pub mod shard;
 
 pub use metrics::{FormatKind, Metrics};
-pub use selector::{select_format, FormatChoice, Selection, SelectorModel};
+pub use selector::{select_format, FormatChoice, ReorderEvidence, Selection, SelectorModel};
 pub use service::{
     Backend, FormatMode, MatrixId, PlanMode, ServiceConfig, ServiceError, SpmvService,
     DEFAULT_QUEUE_CAP,

@@ -17,7 +17,8 @@
 
 use crate::kernels::isa::{self, IsaTier};
 use crate::matrix::sell::SellStats;
-use crate::matrix::Csr;
+use crate::matrix::tiled::default_tile_cols;
+use crate::matrix::{reorder, Csr};
 use crate::scalar::Scalar;
 use crate::spc5::FormatStats;
 
@@ -50,6 +51,24 @@ pub struct SelectorModel {
     pub sell_per_slot: f64,
     /// Per-row SELL scatter cost (the `y[perm[i]]` write-back).
     pub sell_per_row: f64,
+    /// The LLC share the model budgets for the x vector, in bytes. When a
+    /// matrix's column *span* per row region (its bandwidth, times the
+    /// element size) stays under this, x gathers are modeled as cache
+    /// hits; past it, per-value costs inflate by `x_miss_penalty`.
+    /// Absolute bytes, not a fraction — small matrices are never
+    /// penalized no matter the host.
+    pub x_llc_bytes: usize,
+    /// Multiplier on per-value x-gather cost once the working window of x
+    /// overflows [`x_llc_bytes`](Self::x_llc_bytes).
+    pub x_miss_penalty: f64,
+    /// How decisively a reordered candidate must beat the best plain one
+    /// (`cost_reordered * margin < cost_plain`) before the selector pays
+    /// the boundary permutes — 1.02 means "by at least 2%".
+    pub reorder_margin: f64,
+    /// Below this many rows the reorder candidate is never evaluated: the
+    /// permute overhead can't amortize and RCM evidence on tiny patterns
+    /// is noise.
+    pub reorder_min_rows: usize,
 }
 
 impl Default for SelectorModel {
@@ -63,6 +82,10 @@ impl Default for SelectorModel {
             sell_per_chunk: 8.0,
             sell_per_slot: 2.2,
             sell_per_row: 0.5,
+            x_llc_bytes: 4 << 20,
+            x_miss_penalty: 1.5,
+            reorder_margin: 1.02,
+            reorder_min_rows: 256,
         }
     }
 }
@@ -102,6 +125,11 @@ pub struct Selection {
     /// (σ, stats, predicted cost) per SELL-C-σ candidate window.
     pub sell_candidates: Vec<(usize, SellStats, f64)>,
     pub csr_cost: f64,
+    /// Predicted cost of the column-tiled CSR candidate — scored only when
+    /// the locality penalty is active (x band overflows the LLC share).
+    pub tiled_cost: Option<f64>,
+    /// RCM reorder evidence — present only when the reorder gate opened.
+    pub reorder: Option<ReorderEvidence>,
 }
 
 impl Selection {
@@ -126,26 +154,87 @@ impl Selection {
 
 impl SelectorModel {
     pub fn spc5_cost(&self, s: &FormatStats) -> f64 {
-        s.nblocks as f64 * (self.per_block + self.per_block_row * s.r as f64)
-            + s.nnz as f64 * self.per_value
+        self.spc5_cost_local(s, 1.0)
     }
 
     pub fn csr_cost<T: Scalar>(&self, m: &Csr<T>) -> f64 {
-        m.nrows as f64 * self.csr_per_row + m.nnz() as f64 * self.csr_per_value
+        self.csr_cost_local(m, 1.0)
     }
 
     pub fn sell_cost(&self, s: &SellStats, nrows: usize) -> f64 {
+        self.sell_cost_local(s, nrows, 1.0)
+    }
+
+    /// The x-gather cost multiplier for a matrix of the given bandwidth:
+    /// [`x_miss_penalty`](Self::x_miss_penalty) once the band of x a row
+    /// region touches (`bandwidth · sizeof(T)`) overflows the modeled LLC
+    /// share, 1.0 otherwise.
+    pub fn locality_factor<T: Scalar>(&self, bandwidth: usize) -> f64 {
+        if bandwidth.saturating_mul(T::BYTES) > self.x_llc_bytes {
+            self.x_miss_penalty
+        } else {
+            1.0
+        }
+    }
+
+    /// [`spc5_cost`](Self::spc5_cost) with the per-value x-gather term
+    /// scaled by locality factor `lf`.
+    pub fn spc5_cost_local(&self, s: &FormatStats, lf: f64) -> f64 {
+        s.nblocks as f64 * (self.per_block + self.per_block_row * s.r as f64)
+            + s.nnz as f64 * self.per_value * lf
+    }
+
+    /// [`csr_cost`](Self::csr_cost) with the per-value term scaled by `lf`.
+    pub fn csr_cost_local<T: Scalar>(&self, m: &Csr<T>, lf: f64) -> f64 {
+        m.nrows as f64 * self.csr_per_row + m.nnz() as f64 * self.csr_per_value * lf
+    }
+
+    /// [`sell_cost`](Self::sell_cost) with the per-slot term scaled by `lf`.
+    pub fn sell_cost_local(&self, s: &SellStats, nrows: usize, lf: f64) -> f64 {
         s.nchunks as f64 * self.sell_per_chunk
-            + s.slots as f64 * self.sell_per_slot
+            + s.slots as f64 * self.sell_per_slot * lf
             + nrows as f64 * self.sell_per_row
+    }
+
+    /// Predicted cost of column-tiled CSR at the default strip width: every
+    /// strip keeps its x slice LLC-resident (no miss penalty on values) but
+    /// re-walks the row pointers of its rows, so each extra strip charges
+    /// the per-row overhead again.
+    pub fn tiled_cost<T: Scalar>(&self, m: &Csr<T>) -> f64 {
+        let ntiles = m.ncols.div_ceil(default_tile_cols::<T>()).max(1);
+        m.nrows as f64 * self.csr_per_row * ntiles as f64
+            + m.nnz() as f64 * self.csr_per_value
     }
 }
 
+/// Evidence behind a reorder decision — recorded whenever the gate opened
+/// and RCM was actually measured, whether or not the candidate won.
+#[derive(Clone, Copy, Debug)]
+pub struct ReorderEvidence {
+    /// Matrix bandwidth before the permutation.
+    pub bandwidth_before: usize,
+    /// Bandwidth of the RCM-permuted pattern.
+    pub bandwidth_after: usize,
+    /// Predicted cost of the best reordered candidate (∞ when RCM failed
+    /// to halve the bandwidth and no candidate was scored).
+    pub cost: f64,
+    /// Whether the reordered candidate became the selection.
+    pub applied: bool,
+}
+
 /// Pick the best format for `m` under `model`: cheapest of CSR, the four
-/// β(r,VS) candidates and the SELL-C-σ window ladder. Ties prefer SPC5 over
-/// SELL over CSR (deterministic for a deterministic model).
+/// β(r,VS) candidates and the SELL-C-σ window ladder; ties prefer SPC5 over
+/// SELL over CSR (deterministic for a deterministic model). When the
+/// matrix's x working window overflows the model's LLC share, two more
+/// candidates enter the race: column-tiled CSR (pays per-strip row
+/// overhead, dodges the x-miss penalty) and — on square patterns with
+/// enough rows — an RCM reorder of the SPC5/SELL candidates, kept only
+/// when RCM at least halves the bandwidth *and* the reordered cost beats
+/// the best plain one by the model's margin.
 pub fn select_format<T: Scalar>(m: &Csr<T>, model: &SelectorModel) -> Selection {
-    let csr_cost = model.csr_cost(m);
+    let bw = reorder::bandwidth(m);
+    let lf = model.locality_factor::<T>(bw);
+    let csr_cost = model.csr_cost_local(m, lf);
     // Measure block statistics at the width the active tier actually
     // converts and serves (T::VS, or T::VS/2 on the AVX2 tier) — costs
     // should price the geometry `ops::build` will produce.
@@ -154,7 +243,7 @@ pub fn select_format<T: Scalar>(m: &Csr<T>, model: &SelectorModel) -> Selection 
     let mut candidates = Vec::with_capacity(4);
     for r in [1usize, 2, 4, 8] {
         let stats = FormatStats::measure(m, r, spc5_width);
-        let cost = model.spc5_cost(&stats);
+        let cost = model.spc5_cost_local(&stats, lf);
         if best.map_or(true, |(_, c)| cost < c) {
             best = Some((r, cost));
         }
@@ -167,7 +256,7 @@ pub fn select_format<T: Scalar>(m: &Csr<T>, model: &SelectorModel) -> Selection 
     for mult in [1usize, 4, 16] {
         let sigma = mult * T::VS;
         let stats = SellStats::measure(m, sigma, T::VS);
-        let cost = model.sell_cost(&stats, m.nrows);
+        let cost = model.sell_cost_local(&stats, m.nrows, lf);
         if best_sell.map_or(true, |(_, c)| cost < c) {
             best_sell = Some((sigma, cost));
         }
@@ -175,14 +264,75 @@ pub fn select_format<T: Scalar>(m: &Csr<T>, model: &SelectorModel) -> Selection 
     }
     let (best_sigma, best_sell) = best_sell.unwrap();
 
-    let choice = if best_spc5 < csr_cost && best_spc5 <= best_sell {
+    let mut choice = if best_spc5 < csr_cost && best_spc5 <= best_sell {
         FormatChoice::Spc5 { r: best_r }
     } else if best_sell < csr_cost {
         FormatChoice::Sell { sigma: best_sigma }
     } else {
         FormatChoice::Csr
     };
-    Selection { choice, candidates, sell_candidates, csr_cost }
+    let mut best_cost = csr_cost.min(best_spc5).min(best_sell);
+
+    // Column tiling: only worth scoring when the penalty is active and the
+    // default strip actually splits x (one strip is just CSR with extra
+    // bookkeeping).
+    let mut tiled_cost = None;
+    if lf > 1.0 && m.ncols > default_tile_cols::<T>() {
+        let cost = model.tiled_cost::<T>(m);
+        tiled_cost = Some(cost);
+        if cost < best_cost {
+            choice = FormatChoice::Tiled { tile_cols: 0 };
+            best_cost = cost;
+        }
+    }
+
+    // Reorder: gated hard — the penalty must be active, the pattern square
+    // and big enough to amortize the boundary permutes, and RCM must at
+    // least halve the bandwidth before any candidate is even scored.
+    let mut reorder_ev = None;
+    if lf > 1.0 && m.nrows == m.ncols && m.nnz() > 0 && m.nrows >= model.reorder_min_rows {
+        let perm = reorder::reverse_cuthill_mckee(m);
+        let permuted = reorder::permute_symmetric(m, &perm);
+        let bw_after = reorder::bandwidth(&permuted);
+        if bw_after * 2 <= bw {
+            let lf2 = model.locality_factor::<T>(bw_after);
+            let mut rbest: Option<(FormatChoice, f64)> = None;
+            for r in [1usize, 2, 4, 8] {
+                let stats = FormatStats::measure(&permuted, r, spc5_width);
+                let cost = model.spc5_cost_local(&stats, lf2);
+                if rbest.as_ref().map_or(true, |(_, c)| cost < *c) {
+                    rbest = Some((FormatChoice::ReorderedSpc5 { r }, cost));
+                }
+            }
+            for mult in [1usize, 4, 16] {
+                let sigma = mult * T::VS;
+                let stats = SellStats::measure(&permuted, sigma, T::VS);
+                let cost = model.sell_cost_local(&stats, permuted.nrows, lf2);
+                if rbest.as_ref().map_or(true, |(_, c)| cost < *c) {
+                    rbest = Some((FormatChoice::ReorderedSell { sigma }, cost));
+                }
+            }
+            let (rchoice, rcost) = rbest.unwrap();
+            let applied = rcost * model.reorder_margin < best_cost;
+            reorder_ev = Some(ReorderEvidence {
+                bandwidth_before: bw,
+                bandwidth_after: bw_after,
+                cost: rcost,
+                applied,
+            });
+            if applied {
+                choice = rchoice;
+            }
+        } else {
+            reorder_ev = Some(ReorderEvidence {
+                bandwidth_before: bw,
+                bandwidth_after: bw_after,
+                cost: f64::INFINITY,
+                applied: false,
+            });
+        }
+    }
+    Selection { choice, candidates, sell_candidates, csr_cost, tiled_cost, reorder: reorder_ev }
 }
 
 #[cfg(test)]
@@ -335,6 +485,78 @@ mod tests {
             let sel = select_format(&scattered, &model);
             assert!(matches!(sel.choice, FormatChoice::Sell { .. }), "{tier}: {:?}", sel.choice);
         }
+    }
+
+    #[test]
+    fn locality_factor_is_absolute_bytes() {
+        let model = SelectorModel::default();
+        assert_eq!(model.locality_factor::<f64>(1000), 1.0);
+        assert_eq!(model.locality_factor::<f64>((4 << 20) / 8), 1.0);
+        assert_eq!(model.locality_factor::<f64>((4 << 20) / 8 + 1), 1.5);
+    }
+
+    #[test]
+    fn reorder_gate_recovers_shuffled_band() {
+        // A path graph with vertices scrambled by the bijection k ↦ 167·k
+        // mod 512: bandwidth 345 as given, exactly 1 after RCM (BFS from a
+        // degree-1 endpoint walks the path in order, and reversal keeps
+        // neighbors adjacent). With the LLC share shrunk so the locality
+        // penalty bites, a reordered candidate must win; with the default
+        // 4 MiB share this small matrix must be left entirely alone.
+        let n = 512usize;
+        let mut coo = Coo::<f64>::new(n, n);
+        for k in 0..n - 1 {
+            let a = (k * 167) % n;
+            let b = ((k + 1) * 167) % n;
+            coo.push(a, b, 1.0);
+            coo.push(b, a, 1.0);
+        }
+        let m = Csr::from_coo(coo);
+        let sel = select_format(&m, &SelectorModel::default());
+        assert!(sel.reorder.is_none(), "default share gate-opened: {:?}", sel.choice);
+        assert!(sel.tiled_cost.is_none());
+        let mut model = SelectorModel::default();
+        model.x_llc_bytes = 256;
+        let sel = select_format(&m, &model);
+        assert!(
+            matches!(
+                sel.choice,
+                FormatChoice::ReorderedSpc5 { .. } | FormatChoice::ReorderedSell { .. }
+            ),
+            "{:?}",
+            sel.choice
+        );
+        let ev = sel.reorder.expect("gate opened");
+        assert!(ev.applied);
+        assert_eq!(ev.bandwidth_before, 345);
+        assert_eq!(ev.bandwidth_after, 1);
+        assert!(ev.cost.is_finite());
+        // x is only 4 KiB wide — tiling never enters for this matrix.
+        assert!(sel.tiled_cost.is_none());
+    }
+
+    #[test]
+    fn wide_scatter_matrix_tiles_when_x_overflows_the_llc_share() {
+        // 300 rows scattering 30 entries each across 200k columns: the x
+        // band is ~1.6 MB — under the default 4 MiB share, over a shrunken
+        // one. Non-square, so the reorder gate must stay shut either way.
+        let nrows = 300usize;
+        let ncols = 200_000usize;
+        let mut coo = Coo::<f64>::new(nrows, ncols);
+        for r in 0..nrows {
+            for k in 0..30 {
+                coo.push(r, (r * 37 + k * 6661) % ncols, 1.0 + k as f64 * 0.01);
+            }
+        }
+        let m = Csr::from_coo(coo);
+        let sel = select_format(&m, &SelectorModel::default());
+        assert!(sel.tiled_cost.is_none(), "{:?}", sel.choice);
+        assert!(!matches!(sel.choice, FormatChoice::Tiled { .. }));
+        let mut model = SelectorModel::default();
+        model.x_llc_bytes = 64 << 10;
+        let sel = select_format(&m, &model);
+        assert_eq!(sel.choice, FormatChoice::Tiled { tile_cols: 0 }, "{:?}", sel.tiled_cost);
+        assert!(sel.reorder.is_none(), "non-square cannot reorder");
     }
 
     #[test]

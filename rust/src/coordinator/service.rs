@@ -704,6 +704,24 @@ impl<T: Scalar> SpmvService<T> {
     pub fn metrics_json(&self) -> crate::util::json::Json {
         let mut snap = self.shared.metrics.snapshot();
         snap.set("isa_tier", crate::kernels::isa::active().name());
+        // Per-matrix execution shape: how each registration is served
+        // *right now* — the operator's own report, so quarantine swaps,
+        // merge-path partitions and reorder wrappers all show up here.
+        let map = self.shared.matrices.read().unwrap_or_else(|e| e.into_inner());
+        let mut ids: Vec<MatrixId> = map.keys().copied().collect();
+        ids.sort();
+        let mut mats = crate::util::json::Json::obj();
+        for id in ids {
+            let stored = &map[&id];
+            let op = stored.op();
+            let mut m = crate::util::json::Json::obj();
+            m.set("format", stored.kind.name())
+                .set("label", op.label())
+                .set("partition_strategy", op.partition_strategy())
+                .set("reorder_applied", op.reorder_applied());
+            mats.set(&id.0.to_string(), m);
+        }
+        snap.set("matrices", mats);
         snap
     }
 }
@@ -711,9 +729,9 @@ impl<T: Scalar> SpmvService<T> {
 /// Map a resolved choice onto its metrics bucket.
 fn kind_of(choice: FormatChoice) -> FormatKind {
     match choice {
-        FormatChoice::Csr => FormatKind::Csr,
-        FormatChoice::Spc5 { .. } => FormatKind::Spc5,
-        FormatChoice::Sell { .. } => FormatKind::Sell,
+        FormatChoice::Csr | FormatChoice::Tiled { .. } => FormatKind::Csr,
+        FormatChoice::Spc5 { .. } | FormatChoice::ReorderedSpc5 { .. } => FormatKind::Spc5,
+        FormatChoice::Sell { .. } | FormatChoice::ReorderedSell { .. } => FormatKind::Sell,
         FormatChoice::Planned => FormatKind::Plan,
     }
 }
@@ -1018,6 +1036,18 @@ mod tests {
         assert_eq!(sel.candidates.len(), 4);
         assert_eq!(sel.sell_candidates.len(), 3);
         assert!(svc.op_label(id).is_some());
+    }
+
+    #[test]
+    fn metrics_json_reports_per_matrix_execution_shape() {
+        let svc: SpmvService<f64> = SpmvService::new(2, 4);
+        let id = svc.register(gen::random_uniform(50, 4.0, 1)).unwrap();
+        let snap = svc.metrics_json().to_string();
+        assert!(snap.contains("\"matrices\""), "{snap}");
+        assert!(snap.contains(&format!("\"{}\":{{", id.0)), "{snap}");
+        assert!(snap.contains("\"partition_strategy\":"), "{snap}");
+        assert!(snap.contains("\"reorder_applied\":false"), "{snap}");
+        assert!(snap.contains("\"label\":"), "{snap}");
     }
 
     #[test]

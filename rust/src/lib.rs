@@ -52,7 +52,16 @@
 //!   placement, hot-matrix replication, heartbeat-driven quarantine/restart
 //!   and failover routing, plus a cross-connection coalescing window that
 //!   fuses same-matrix requests from different TCP connections into SpMM
-//!   batches (`serve --shards/--replicas/--coalesce-us`).
+//!   batches (`serve --shards/--replicas/--coalesce-us`),
+//! - and the power-law hot path: an nnz-exact merge-path partitioner
+//!   ([`parallel::balance_merge`]) that splits inside monster rows with a
+//!   carry-buffer fixup and stays bitwise-invariant across lane counts,
+//!   x-vector cache blocking ([`matrix::tiled`]), and RCM reordering wired
+//!   into format selection (locality-factor cost scaling, reorder/tiled
+//!   candidates with recorded evidence, [`ops::ReorderedOp`] permuting
+//!   transparently at the operator boundary) — exercised end to end by
+//!   `examples/pagerank.rs` over a Barabási–Albert power-law graph
+//!   ([`matrix::gen::powerlaw`]).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

@@ -108,6 +108,15 @@ fn cmd_info(args: &mut Args) -> Result<(), String> {
         FormatChoice::Spc5 { r } => println!("\nselector: SPC5 beta({r},VS)"),
         FormatChoice::Sell { sigma } => println!("\nselector: SELL-C-sigma (sigma = {sigma})"),
         FormatChoice::Planned => println!("\nselector: execution plan"),
+        FormatChoice::Tiled { .. } => {
+            println!("\nselector: column-tiled CSR (x overflows the LLC share)")
+        }
+        FormatChoice::ReorderedSpc5 { r } => {
+            println!("\nselector: RCM reorder + SPC5 beta({r},VS)")
+        }
+        FormatChoice::ReorderedSell { sigma } => {
+            println!("\nselector: RCM reorder + SELL-C-sigma (sigma = {sigma})")
+        }
     }
     Ok(())
 }

@@ -179,6 +179,62 @@ pub fn random_uniform<T: Scalar>(n: usize, nnz_per_row: f64, seed: u64) -> Csr<T
     .generate(seed)
 }
 
+/// Barabási–Albert preferential-attachment graph, returned as the
+/// column-stochastic transition matrix for PageRank-style iterations
+/// (`y = M·x` redistributes mass along edges):
+/// `M[u][v] = (#edges v→u) / outdeg(v)`.
+///
+/// Construction: a seed ring of `max(edges_per_node, 2)` vertices, then each new
+/// vertex attaches `edges_per_node` edges whose targets are drawn from the
+/// endpoints list of all prior edges — the classic "choose an endpoint
+/// uniformly" trick that makes attachment probability proportional to
+/// degree. Duplicate target draws are kept as parallel edges (they just
+/// raise the entry's multiplicity); targets are drawn from the list as it
+/// stood before the vertex's own edges, so there are no self-loops. Every
+/// vertex has out-degree ≥ 1 (ring vertices 1, later vertices
+/// `edges_per_node`), so columns sum to exactly 1 — no dangling-node
+/// fixup needed. In-degrees follow the BA power law: a few old hubs
+/// collect degrees of order `m·√nodes` while the median vertex keeps
+/// close to `m` — the row-length skew the merge-path partitioner exists
+/// for. Deterministic in (`nodes`, `edges_per_node`, `seed`).
+pub fn powerlaw<T: Scalar>(nodes: usize, edges_per_node: usize, seed: u64) -> Csr<T> {
+    let m = edges_per_node.max(1);
+    assert!(nodes > m && nodes >= 2, "need more than {m} nodes");
+    // Ring of at least two vertices, so even m = 1 has no self-loop.
+    let ring = m.max(2);
+    let mut rng = Xoshiro256::new(seed);
+    let nedges = ring + nodes.saturating_sub(ring) * m;
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(nedges);
+    // `endpoints` holds every endpoint of every edge so far: sampling it
+    // uniformly is sampling vertices proportionally to their degree.
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * nedges);
+    for v in 0..ring {
+        let t = ((v + 1) % ring) as u32;
+        edges.push((v as u32, t));
+        endpoints.push(v as u32);
+        endpoints.push(t);
+    }
+    for v in ring..nodes {
+        let pool = endpoints.len();
+        for _ in 0..m {
+            let t = endpoints[rng.range(0, pool)];
+            edges.push((v as u32, t));
+            endpoints.push(v as u32);
+            endpoints.push(t);
+        }
+    }
+    let mut outdeg = vec![0u32; nodes];
+    for &(src, _) in &edges {
+        outdeg[src as usize] += 1;
+    }
+    let mut coo = Coo::with_capacity(nodes, nodes, nedges);
+    for &(src, dst) in &edges {
+        // Row = edge target (in-edges), value = share of src's mass.
+        coo.push(dst as usize, src as usize, T::from_f64(1.0 / outdeg[src as usize] as f64));
+    }
+    Csr::from_coo(coo)
+}
+
 /// Symmetric positive-definite 2D Poisson (5-point stencil) on a g×g grid —
 /// the canonical iterative-solver workload (n = g²). Used by the CG example.
 pub fn poisson2d<T: Scalar>(g: usize) -> Csr<T> {
@@ -367,6 +423,37 @@ mod tests {
             let s: f64 = (0..16).map(|j| d[i * 16 + j]).sum();
             assert!(s >= 0.0);
         }
+    }
+
+    #[test]
+    fn powerlaw_is_column_stochastic_with_hubs() {
+        let m: Csr<f64> = powerlaw(2000, 3, 17);
+        m.check().unwrap();
+        assert_eq!(m.nrows, 2000);
+        assert_eq!(m.ncols, 2000);
+        assert!(m.nnz() <= 3 + 1997 * 3, "parallel edges only merge entries");
+        // Every column sums to exactly one outgoing unit of mass.
+        let mut colsum = vec![0.0f64; 2000];
+        for r in 0..m.nrows {
+            for (&c, &v) in m.row_cols(r).iter().zip(m.row_vals(r)) {
+                colsum[c as usize] += v;
+            }
+        }
+        for (c, &s) in colsum.iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-12, "column {c} sums to {s}");
+        }
+        // Preferential attachment concentrates in-degree on early hubs.
+        let max_in = (0..m.nrows).map(|r| m.row_cols(r).len()).max().unwrap();
+        assert!(max_in > 12, "no hub emerged: max in-degree {max_in}");
+        // No self-loops: the diagonal stays empty.
+        for r in 0..m.nrows {
+            assert!(!m.row_cols(r).contains(&(r as u32)), "self-loop at {r}");
+        }
+        // Deterministic in the seed.
+        let again: Csr<f64> = powerlaw(2000, 3, 17);
+        assert_eq!(m.col_idx, again.col_idx);
+        assert_eq!(m.vals, again.vals);
+        assert_ne!(m.col_idx, powerlaw::<f64>(2000, 3, 18).col_idx);
     }
 
     #[test]

@@ -15,8 +15,10 @@ pub mod gen;
 pub mod mm_io;
 pub mod reorder;
 pub mod sell;
+pub mod tiled;
 
 pub use coo::Coo;
 pub use corpus::{corpus_by_name, corpus_by_name_or_fail, corpus_entries, CorpusEntry};
 pub use csr::Csr;
 pub use sell::{SellMatrix, SellStats};
+pub use tiled::TiledCsr;

@@ -10,8 +10,14 @@ use super::csr::Csr;
 
 /// Reverse Cuthill-McKee ordering of the symmetrized pattern of `m`.
 /// Returns the permutation `perm` such that new row `i` is old row
-/// `perm[i]`. Handles disconnected graphs (restarts from the lowest-degree
-/// unvisited vertex).
+/// `perm[i]`.
+///
+/// Robustness guarantees (the selector calls this on arbitrary registered
+/// matrices): disconnected graphs restart the BFS per component from the
+/// lowest-degree unvisited vertex; isolated vertices (empty rows whose
+/// column is also unused) are ordered like any degree-0 component; and
+/// every tie — seed choice and neighbor expansion alike — breaks on the
+/// vertex index, so the ordering is a pure function of the pattern.
 pub fn reverse_cuthill_mckee<T: Scalar>(m: &Csr<T>) -> Vec<u32> {
     assert_eq!(m.nrows, m.ncols, "RCM needs a square pattern");
     let n = m.nrows;
@@ -36,9 +42,10 @@ pub fn reverse_cuthill_mckee<T: Scalar>(m: &Csr<T>) -> Vec<u32> {
     let mut order: Vec<u32> = Vec::with_capacity(n);
     let mut queue: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
 
-    // Process components from lowest-degree seeds (standard CM heuristic).
+    // Process components from lowest-degree seeds (standard CM heuristic),
+    // index as the deterministic tie-break.
     let mut seeds: Vec<u32> = (0..n as u32).collect();
-    seeds.sort_unstable_by_key(|&v| degree(v as usize));
+    seeds.sort_unstable_by_key(|&v| (degree(v as usize), v));
     for seed in seeds {
         if visited[seed as usize] {
             continue;
@@ -53,7 +60,7 @@ pub fn reverse_cuthill_mckee<T: Scalar>(m: &Csr<T>) -> Vec<u32> {
                 .copied()
                 .filter(|&u| !visited[u as usize])
                 .collect();
-            nbrs.sort_unstable_by_key(|&u| degree(u as usize));
+            nbrs.sort_unstable_by_key(|&u| (degree(u as usize), u));
             for u in nbrs {
                 visited[u as usize] = true;
                 queue.push_back(u);
@@ -76,6 +83,28 @@ pub fn permute_symmetric<T: Scalar>(m: &Csr<T>, perm: &[u32]) -> Csr<T> {
     let mut coo = Coo::with_capacity(m.nrows, m.ncols, m.nnz());
     for new_row in 0..m.nrows {
         let old_row = perm[new_row] as usize;
+        for (&c, &v) in m.row_cols(old_row).iter().zip(m.row_vals(old_row)) {
+            coo.push(new_row, inv[c as usize] as usize, v);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// Apply independent row and column permutations to a (possibly
+/// rectangular or structurally non-symmetric) matrix:
+/// `B[i][j] = A[row_perm[i]][col_perm[j]]`. The symmetric case is
+/// [`permute_symmetric`] with `row_perm == col_perm`.
+pub fn permute_general<T: Scalar>(m: &Csr<T>, row_perm: &[u32], col_perm: &[u32]) -> Csr<T> {
+    assert_eq!(row_perm.len(), m.nrows);
+    assert_eq!(col_perm.len(), m.ncols);
+    // inverse column permutation: old column -> new column
+    let mut inv = vec![0u32; col_perm.len()];
+    for (new, &old) in col_perm.iter().enumerate() {
+        inv[old as usize] = new as u32;
+    }
+    let mut coo = Coo::with_capacity(m.nrows, m.ncols, m.nnz());
+    for new_row in 0..m.nrows {
+        let old_row = row_perm[new_row] as usize;
         for (&c, &v) in m.row_cols(old_row).iter().zip(m.row_vals(old_row)) {
             coo.push(new_row, inv[c as usize] as usize, v);
         }
@@ -197,5 +226,88 @@ mod tests {
         let mut sorted = perm.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..6u32).collect::<Vec<_>>());
+        // Deterministic pinned order: components seeded by (degree, index)
+        // — isolated 2 and 5 first, then pair {0,1}, then pair {3,4} —
+        // and reversed. A regression guard for the index tie-breaks.
+        assert_eq!(perm, vec![4, 3, 1, 0, 5, 2]);
+    }
+
+    #[test]
+    fn rcm_breaks_degree_ties_by_index() {
+        // Star graph: all leaves tie at degree 1, so the expansion order
+        // is decided purely by the index tie-break.
+        let mut coo = crate::matrix::Coo::<f64>::new(7, 7);
+        for leaf in 1..7 {
+            coo.push(0, leaf, 1.0);
+            coo.push(leaf, 0, 1.0);
+        }
+        let m = Csr::from_coo(coo);
+        // CM order: seed leaf 1, then the center, then leaves 2..6 by
+        // index; RCM reverses it.
+        assert_eq!(reverse_cuthill_mckee(&m), vec![6, 5, 4, 3, 2, 0, 1]);
+        // And the ordering is a pure function of the pattern.
+        assert_eq!(reverse_cuthill_mckee(&m), reverse_cuthill_mckee(&m));
+    }
+
+    #[test]
+    fn rcm_handles_empty_rows_and_isolated_vertices() {
+        // Rows 1, 2, 5, 7 are fully empty and their columns unused:
+        // degree-0 vertices that must still appear exactly once. The two
+        // edges come from structurally asymmetric entries (symmetrized
+        // adjacency picks them up from either side).
+        let mut coo = crate::matrix::Coo::<f64>::new(8, 8);
+        coo.push(0, 3, 1.0);
+        coo.push(4, 6, 1.0);
+        let m = Csr::from_coo(coo);
+        let perm = reverse_cuthill_mckee(&m);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8u32).collect::<Vec<_>>());
+        // Isolated vertices 1,2,5,7 seed first, then components {0,3} and
+        // {4,6}; reversed.
+        assert_eq!(perm, vec![6, 4, 3, 0, 7, 5, 2, 1]);
+        // The permuted matrix is still a valid CSR with the same entries.
+        let pm = permute_symmetric(&m, &perm);
+        pm.check().unwrap();
+        assert_eq!(pm.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn permute_general_preserves_products_on_rectangular() {
+        // Dyadic values/x keep every product and sum exact, so the
+        // permuted product must match the reference exactly.
+        let m = Csr::<f64>::from_parts(
+            4,
+            3,
+            vec![0, 2, 3, 3, 5],
+            vec![0, 2, 1, 0, 1],
+            vec![1.5, 0.25, -2.0, 0.5, 1.25],
+        )
+        .unwrap();
+        let row_perm: Vec<u32> = vec![3, 1, 0, 2];
+        let col_perm: Vec<u32> = vec![2, 0, 1];
+        let b = permute_general(&m, &row_perm, &col_perm);
+        b.check().unwrap();
+        assert_eq!(b.nnz(), m.nnz());
+        let x = [0.5, -1.0, 2.0];
+        let xp: Vec<f64> = col_perm.iter().map(|&c| x[c as usize]).collect();
+        let mut y = vec![0.0; 4];
+        m.spmv(&x, &mut y);
+        let mut yp = vec![0.0; 4];
+        b.spmv(&xp, &mut yp);
+        for (i, &p) in row_perm.iter().enumerate() {
+            assert_eq!(yp[i], y[p as usize], "row {i}");
+        }
+    }
+
+    #[test]
+    fn permute_general_with_equal_perms_matches_symmetric() {
+        let m: Csr<f64> = gen::random_uniform(60, 4.0, 11);
+        let perm = reverse_cuthill_mckee(&m);
+        let a = permute_symmetric(&m, &perm);
+        let b = permute_general(&m, &perm, &perm);
+        assert_eq!(a.row_ptr, b.row_ptr);
+        assert_eq!(a.col_idx, b.col_idx);
+        assert_eq!(a.vals, b.vals);
     }
 }

@@ -1,0 +1,247 @@
+//! x-vector cache blocking: a CSR matrix split into fixed-width column
+//! strips (tiles), so SpMV over matrices whose x far exceeds the
+//! last-level cache touches one LLC-sized window of x per strip instead
+//! of gathering across the whole vector (DESIGN.md §Load balancing).
+//!
+//! The execution order is tiles outer, rows inner, accumulating into y.
+//! Because every CSR row stores its columns in ascending order and the
+//! strips ascend too, each row's entries are visited in exactly the order
+//! [`Csr::spmv`] visits them — starting the accumulation from `+0.0`
+//! therefore reproduces the scalar CSR reference **bitwise**, serial or
+//! team-parallel ([`crate::parallel::ParallelTiled`]).
+
+use crate::scalar::Scalar;
+
+use super::csr::Csr;
+
+/// Column width whose x strip occupies 1 MiB — a conservative
+/// per-core slice of any recent LLC (f64: 128Ki columns, f32: 256Ki).
+pub fn default_tile_cols<T: Scalar>() -> usize {
+    (1 << 20) / T::BYTES
+}
+
+/// A CSR matrix stored as vertical strips of `tile_cols` columns. Column
+/// indices stay **global**, so the tiles gather from the caller's x
+/// without any index rebasing; only the access *range* per strip shrinks.
+pub struct TiledCsr<T: Scalar> {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Strip width in columns (the last strip may be narrower).
+    pub tile_cols: usize,
+    /// One CSR per strip, all with the full row count and global ncols.
+    pub tiles: Vec<Csr<T>>,
+    nnz: usize,
+}
+
+impl<T: Scalar> TiledCsr<T> {
+    /// Split `m` into `tile_cols`-wide strips; `0` picks
+    /// [`default_tile_cols`]. A matrix no wider than one strip degenerates
+    /// to a single tile (== a CSR copy).
+    pub fn from_csr(m: &Csr<T>, tile_cols: usize) -> Self {
+        let tile_cols = if tile_cols == 0 { default_tile_cols::<T>() } else { tile_cols };
+        let ntiles = m.ncols.div_ceil(tile_cols);
+        let mut row_ptrs = vec![Vec::with_capacity(m.nrows + 1); ntiles];
+        let mut cols = vec![Vec::new(); ntiles];
+        let mut vals = vec![Vec::new(); ntiles];
+        for rp in row_ptrs.iter_mut() {
+            rp.push(0u32);
+        }
+        for r in 0..m.nrows {
+            let rcols = m.row_cols(r);
+            let rvals = m.row_vals(r);
+            let mut lo = 0usize;
+            for t in 0..ntiles {
+                let strip_end = (((t + 1) * tile_cols).min(m.ncols)) as u32;
+                let hi = lo + rcols[lo..].partition_point(|&c| c < strip_end);
+                cols[t].extend_from_slice(&rcols[lo..hi]);
+                vals[t].extend_from_slice(&rvals[lo..hi]);
+                row_ptrs[t].push(cols[t].len() as u32);
+                lo = hi;
+            }
+        }
+        let tiles = row_ptrs
+            .into_iter()
+            .zip(cols)
+            .zip(vals)
+            .map(|((row_ptr, col_idx), vals)| Csr {
+                nrows: m.nrows,
+                ncols: m.ncols,
+                row_ptr,
+                col_idx,
+                vals,
+            })
+            .collect();
+        Self { nrows: m.nrows, ncols: m.ncols, tile_cols, tiles, nnz: m.nnz() }
+    }
+
+    pub fn ntiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Memory footprint: the entries once, plus one row pointer array per
+    /// strip (the structural overhead the selector's tiled cost models).
+    pub fn bytes(&self) -> usize {
+        self.tiles.iter().map(|t| t.bytes()).sum()
+    }
+
+    /// Serial `y = A·x`: zero y, then accumulate strip after strip.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        y.fill(T::zero());
+        for t in 0..self.ntiles() {
+            self.accumulate(t, 0..self.nrows, x, y);
+        }
+    }
+
+    /// Accumulate one strip's contribution for rows `rows` into `ys`
+    /// (`ys[i]` holds row `rows.start + i`). Plain multiply-then-add in
+    /// column order — the exact op sequence of [`Csr::spmv`].
+    pub fn accumulate(&self, tile: usize, rows: std::ops::Range<usize>, x: &[T], ys: &mut [T]) {
+        let m = &self.tiles[tile];
+        for (j, r) in rows.enumerate() {
+            let (lo, hi) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+            let mut sum = ys[j];
+            for i in lo..hi {
+                sum += m.vals[i] * x[m.col_idx[i] as usize];
+            }
+            ys[j] = sum;
+        }
+    }
+
+    /// Fused multi-RHS accumulate: one strip pass updates all `k`
+    /// right-hand sides (matrix traffic per strip independent of `k`).
+    pub fn accumulate_multi(
+        &self,
+        tile: usize,
+        rows: std::ops::Range<usize>,
+        xs: &[&[T]],
+        ys: &mut [&mut [T]],
+    ) {
+        let m = &self.tiles[tile];
+        for (j, r) in rows.enumerate() {
+            let (lo, hi) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                let c = m.col_idx[i] as usize;
+                let v = m.vals[i];
+                for (vi, x) in xs.iter().enumerate() {
+                    ys[vi][j] += v * x[c];
+                }
+            }
+        }
+    }
+
+    /// Serial fused multi-RHS `ys[v] = A·xs[v]`.
+    pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.ncols);
+            assert_eq!(y.len(), self.nrows);
+        }
+        for y in ys.iter_mut() {
+            y.fill(T::zero());
+        }
+        for t in 0..self.ntiles() {
+            self.accumulate_multi(t, 0..self.nrows, xs, ys);
+        }
+    }
+
+    /// Validate the strip invariants (tests, registration paths).
+    pub fn check(&self) -> Result<(), crate::error::SpmvError> {
+        let invalid = |m: String| crate::error::SpmvError::InvalidMatrix(m);
+        let mut total = 0usize;
+        for (t, tile) in self.tiles.iter().enumerate() {
+            tile.check()?;
+            if tile.nrows != self.nrows || tile.ncols != self.ncols {
+                return Err(invalid(format!("tile {t} shape mismatch")));
+            }
+            let (lo, hi) = (t * self.tile_cols, ((t + 1) * self.tile_cols).min(self.ncols));
+            for &c in &tile.col_idx {
+                if (c as usize) < lo || c as usize >= hi {
+                    return Err(invalid(format!("tile {t} column {c} outside [{lo},{hi})")));
+                }
+            }
+            total += tile.nnz();
+        }
+        if total != self.nnz {
+            return Err(invalid(format!("tile nnz sum {total} != {}", self.nnz)));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn tiled_spmv_is_bitwise_csr() {
+        let m: Csr<f64> = gen::Structured {
+            nrows: 180,
+            ncols: 300,
+            nnz_per_row: 9.0,
+            skew: 0.8,
+            ..Default::default()
+        }
+        .generate(11);
+        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut want = vec![0.0; 180];
+        m.spmv(&x, &mut want);
+        for tile_cols in [1usize, 7, 64, 300, 1024] {
+            let t = TiledCsr::from_csr(&m, tile_cols);
+            t.check().unwrap();
+            assert_eq!(t.nnz(), m.nnz());
+            assert_eq!(t.ntiles(), 300usize.div_ceil(tile_cols));
+            let mut y = vec![7.0; 180];
+            t.spmv(&x, &mut y);
+            assert_eq!(y, want, "tile_cols={tile_cols}");
+        }
+    }
+
+    #[test]
+    fn tiled_multi_matches_singles_bitwise() {
+        let m: Csr<f64> = gen::random_uniform(120, 6.0, 3);
+        let t = TiledCsr::from_csr(&m, 32);
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|v| (0..120).map(|i| ((i * (v + 2)) % 9) as f64 * 0.25 - 1.0).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 120]).collect();
+        let mut y_refs: Vec<&mut [f64]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+        t.spmv_multi(&x_refs, &mut y_refs);
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut w = vec![0.0; 120];
+            t.spmv(x, &mut w);
+            assert_eq!(*y, w);
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // Empty matrix: zero tiles, spmv just zeroes y.
+        let m = Csr::<f64>::from_parts(0, 0, vec![0], vec![], vec![]).unwrap();
+        let t = TiledCsr::from_csr(&m, 16);
+        assert_eq!(t.ntiles(), 0);
+        t.check().unwrap();
+        t.spmv(&[], &mut []);
+        // Empty rows keep y zeroed.
+        let m = Csr::<f64>::from_parts(3, 8, vec![0, 0, 2, 2], vec![1, 6], vec![2.0, 3.0])
+            .unwrap();
+        let t = TiledCsr::from_csr(&m, 4);
+        assert_eq!(t.ntiles(), 2);
+        let mut y = vec![9.0; 3];
+        t.spmv(&[1.0; 8], &mut y);
+        assert_eq!(y, vec![0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn default_width_is_one_mebibyte_of_x() {
+        assert_eq!(default_tile_cols::<f64>() * 8, 1 << 20);
+        assert_eq!(default_tile_cols::<f32>() * 4, 1 << 20);
+    }
+}

@@ -39,21 +39,25 @@
 
 use std::sync::Arc;
 
+use std::sync::Mutex;
+
 use crate::error::SpmvError;
 use crate::kernels::isa::{self, IsaTier};
 use crate::kernels::{avx2, native, native_avx512, spc5_avx512, spc5_sve, Reduction, SimIsa, XLoad};
+use crate::matrix::reorder;
 use crate::matrix::sell::SellMatrix;
-use crate::matrix::Csr;
+use crate::matrix::{Csr, TiledCsr};
 use crate::parallel::{
-    ParallelCsr, ParallelPlanned, ParallelSell, ParallelSpc5, SharedSpc5, Team,
+    ParallelCsr, ParallelPlanned, ParallelSell, ParallelSpc5, ParallelTiled, SharedSpc5, Team,
 };
 use crate::scalar::Scalar;
 use crate::simd::trace::{NullSink, SimCtx};
 use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 
 /// The storage/execution format of one operator — what the selector picks
-/// (three-way: CSR vs β(r,VS) vs SELL-C-σ) and what the coordinator CLI can
-/// force (`serve --format csr|spc5|sell|plan`).
+/// (CSR vs β(r,VS) vs SELL-C-σ, optionally column-tiled or behind an RCM
+/// reorder) and what the coordinator CLI can force
+/// (`serve --format csr|spc5|sell|plan`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FormatChoice {
     /// Row-pointer baseline; wins on scattered rows with skewed lengths.
@@ -66,6 +70,17 @@ pub enum FormatChoice {
     /// the [`PlanMode::Auto`](crate::coordinator::PlanMode) upgrade of an
     /// SPC5 selection.
     Planned,
+    /// Column-tiled CSR ([`TiledCsr`], `tile_cols == 0` picks the
+    /// LLC-sized default); wins when x alone overflows the LLC and the
+    /// column pattern is scattered.
+    Tiled { tile_cols: usize },
+    /// RCM reorder, then β(r,VS) on the permuted matrix; the operator
+    /// permutes x/y transparently at the boundary. Falls back to plain
+    /// [`FormatChoice::Spc5`] for non-square patterns.
+    ReorderedSpc5 { r: usize },
+    /// RCM reorder, then SELL-C-σ on the permuted matrix; falls back to
+    /// plain [`FormatChoice::Sell`] for non-square patterns.
+    ReorderedSell { sigma: usize },
 }
 
 impl FormatChoice {
@@ -76,15 +91,21 @@ impl FormatChoice {
             FormatChoice::Spc5 { r } => format!("beta({r},VS)"),
             FormatChoice::Sell { sigma } => format!("sell-C-{sigma}"),
             FormatChoice::Planned => "planned".into(),
+            FormatChoice::Tiled { tile_cols: 0 } => "tiled-csr".into(),
+            FormatChoice::Tiled { tile_cols } => format!("tiled-csr[{tile_cols}]"),
+            FormatChoice::ReorderedSpc5 { r } => format!("rcm+beta({r},VS)"),
+            FormatChoice::ReorderedSell { sigma } => format!("rcm+sell-C-{sigma}"),
         }
     }
 
     /// The four-way metrics bucket ("csr" | "spc5" | "sell" | "plan").
+    /// Tiling and reordering are execution wrappers, so they bucket under
+    /// the format that does the arithmetic.
     pub fn kind_name(self) -> &'static str {
         match self {
-            FormatChoice::Csr => "csr",
-            FormatChoice::Spc5 { .. } => "spc5",
-            FormatChoice::Sell { .. } => "sell",
+            FormatChoice::Csr | FormatChoice::Tiled { .. } => "csr",
+            FormatChoice::Spc5 { .. } | FormatChoice::ReorderedSpc5 { .. } => "spc5",
+            FormatChoice::Sell { .. } | FormatChoice::ReorderedSell { .. } => "sell",
             FormatChoice::Planned => "plan",
         }
     }
@@ -134,6 +155,17 @@ pub trait SparseOp<T: Scalar>: Send + Sync {
     /// executes a compiled heterogeneous-r plan.
     fn chunk_rs(&self) -> Option<Vec<usize>> {
         None
+    }
+    /// How work is split across lanes: `"rows"` (contiguous row/chunk
+    /// slices), `"merge"` (nnz-exact merge-path), or `"panels"` (SPC5
+    /// panel/chunk granularity). Serial forms report `"rows"`.
+    fn partition_strategy(&self) -> &'static str {
+        "rows"
+    }
+    /// Whether this operator serves through a bandwidth-reducing row/column
+    /// permutation (x/y permuted transparently at the boundary).
+    fn reorder_applied(&self) -> bool {
+        false
     }
 }
 
@@ -263,10 +295,11 @@ impl<T: Scalar> SparseOp<T> for ParallelCsr<T> {
         self.ncols
     }
     fn nnz(&self) -> usize {
-        self.parts.iter().map(|p| p.nnz()).sum()
+        // Not a sum over `parts`: those are empty in merge mode.
+        ParallelCsr::nnz(self)
     }
     fn bytes(&self) -> usize {
-        self.parts.iter().map(|p| p.bytes()).sum()
+        ParallelCsr::bytes(self)
     }
     fn label(&self) -> String {
         format!("team-csr[{} lanes]", self.team().threads())
@@ -276,6 +309,9 @@ impl<T: Scalar> SparseOp<T> for ParallelCsr<T> {
     }
     fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
         ParallelCsr::spmv_multi(self, xs, ys);
+    }
+    fn partition_strategy(&self) -> &'static str {
+        ParallelCsr::strategy(self)
     }
 }
 
@@ -325,6 +361,9 @@ impl<T: Scalar> SparseOp<T> for SharedSpc5<T> {
     fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
         SharedSpc5::spmv_multi(self, xs, ys);
     }
+    fn partition_strategy(&self) -> &'static str {
+        "panels"
+    }
 }
 
 impl<T: Scalar> SparseOp<T> for ParallelSell<T> {
@@ -353,6 +392,9 @@ impl<T: Scalar> SparseOp<T> for ParallelSell<T> {
     }
     fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
         ParallelSell::spmv_multi(self, xs, ys);
+    }
+    fn partition_strategy(&self) -> &'static str {
+        ParallelSell::strategy(self)
     }
 }
 
@@ -384,6 +426,163 @@ impl<T: Scalar> SparseOp<T> for ParallelPlanned<T> {
     }
     fn chunk_rs(&self) -> Option<Vec<usize>> {
         Some(self.plan.chunk_rs())
+    }
+    fn partition_strategy(&self) -> &'static str {
+        "panels"
+    }
+}
+
+// ---- tiled and reordered execution wrappers ----
+
+impl<T: Scalar> SparseOp<T> for TiledCsr<T> {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        TiledCsr::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        TiledCsr::bytes(self)
+    }
+    fn label(&self) -> String {
+        format!("tiled-csr[{} x {} cols]", self.ntiles(), self.tile_cols)
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        TiledCsr::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        TiledCsr::spmv_multi(self, xs, ys);
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for ParallelTiled<T> {
+    fn nrows(&self) -> usize {
+        self.m.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.m.ncols
+    }
+    fn nnz(&self) -> usize {
+        ParallelTiled::nnz(self)
+    }
+    fn bytes(&self) -> usize {
+        self.m.bytes()
+    }
+    fn label(&self) -> String {
+        format!(
+            "team-tiled-csr[{} x {} cols, {} lanes]",
+            self.m.ntiles(),
+            self.m.tile_cols,
+            self.team().threads()
+        )
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        ParallelTiled::spmv(self, x, y);
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], _scratch: &mut Vec<T>) {
+        ParallelTiled::spmv_multi(self, xs, ys);
+    }
+}
+
+/// An RCM-permuted operator: holds the inner operator built on the
+/// symmetrically permuted matrix `B[i][j] = A[perm[i]][perm[j]]` and makes
+/// the permutation invisible at the call boundary — `spmv` gathers
+/// `x'[i] = x[perm[i]]`, applies the inner operator, then scatters
+/// `y[perm[i]] = y'[i]`. The permuted vectors live in an operator-held
+/// scratch pair so repeated calls do not allocate; the mutex serializes
+/// concurrent callers (the service already serializes per matrix).
+pub struct ReorderedOp<T: Scalar> {
+    perm: Vec<u32>,
+    inner: Box<dyn SparseOp<T>>,
+    scratch: Mutex<(Vec<T>, Vec<T>)>,
+}
+
+impl<T: Scalar> ReorderedOp<T> {
+    /// Wrap `inner` (built on the permuted matrix) behind `perm`, where
+    /// `perm[i]` is the original index of permuted row/column `i`. Only
+    /// square patterns reorder symmetrically, so square is asserted.
+    pub fn new(perm: Vec<u32>, inner: Box<dyn SparseOp<T>>) -> Self {
+        assert_eq!(inner.nrows(), inner.ncols(), "reorder needs a square operator");
+        assert_eq!(perm.len(), inner.nrows(), "permutation length != dimension");
+        Self { perm, inner, scratch: Mutex::new((Vec::new(), Vec::new())) }
+    }
+
+    /// The row/column permutation (`perm[i]` = original index of new `i`).
+    pub fn perm(&self) -> &[u32] {
+        &self.perm
+    }
+}
+
+impl<T: Scalar> SparseOp<T> for ReorderedOp<T> {
+    fn nrows(&self) -> usize {
+        self.inner.nrows()
+    }
+    fn ncols(&self) -> usize {
+        self.inner.ncols()
+    }
+    fn nnz(&self) -> usize {
+        self.inner.nnz()
+    }
+    fn bytes(&self) -> usize {
+        self.inner.bytes() + self.perm.len() * std::mem::size_of::<u32>()
+    }
+    fn label(&self) -> String {
+        format!("rcm+{}", self.inner.label())
+    }
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        let n = self.perm.len();
+        assert_eq!(x.len(), n);
+        assert_eq!(y.len(), n);
+        let mut guard = self.scratch.lock().expect("reorder scratch");
+        let (xp, yp) = &mut *guard;
+        xp.clear();
+        xp.extend(self.perm.iter().map(|&o| x[o as usize]));
+        yp.resize(n, T::zero());
+        self.inner.spmv(xp, yp);
+        for (i, &o) in self.perm.iter().enumerate() {
+            y[o as usize] = yp[i];
+        }
+    }
+    fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]], scratch: &mut Vec<T>) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        let n = self.perm.len();
+        let k = xs.len();
+        let mut guard = self.scratch.lock().expect("reorder scratch");
+        let (xbuf, ybuf) = &mut *guard;
+        xbuf.clear();
+        for x in xs {
+            assert_eq!(x.len(), n);
+            xbuf.extend(self.perm.iter().map(|&o| x[o as usize]));
+        }
+        ybuf.clear();
+        ybuf.resize(k * n, T::zero());
+        {
+            let x_perm: Vec<&[T]> = xbuf.chunks(n).collect();
+            let mut y_perm: Vec<&mut [T]> = ybuf.chunks_mut(n).collect();
+            self.inner.spmv_multi(&x_perm, &mut y_perm, scratch);
+        }
+        for (vi, y) in ys.iter_mut().enumerate() {
+            assert_eq!(y.len(), n);
+            let yp = &ybuf[vi * n..(vi + 1) * n];
+            for (i, &o) in self.perm.iter().enumerate() {
+                y[o as usize] = yp[i];
+            }
+        }
+    }
+    fn chunk_rs(&self) -> Option<Vec<usize>> {
+        self.inner.chunk_rs()
+    }
+    fn partition_strategy(&self) -> &'static str {
+        self.inner.partition_strategy()
+    }
+    fn reorder_applied(&self) -> bool {
+        true
     }
 }
 
@@ -536,6 +735,18 @@ pub fn build_tiered<T: Scalar>(
     team: &Arc<Team>,
     tier: IsaTier,
 ) -> Box<dyn SparseOp<T>> {
+    // The reordered choices recurse: permute once, build the inner form on
+    // the permuted matrix, wrap. Non-square patterns cannot be permuted
+    // symmetrically, so they fall back to the plain inner choice.
+    match choice {
+        FormatChoice::ReorderedSpc5 { r } => {
+            return build_reordered(csr, FormatChoice::Spc5 { r }, team, tier);
+        }
+        FormatChoice::ReorderedSell { sigma } => {
+            return build_reordered(csr, FormatChoice::Sell { sigma }, team, tier);
+        }
+        _ => {}
+    }
     let width = isa::spc5_width_for::<T>(tier);
     let plan_cfg = || PlanConfig { width: Some(width), ..PlanConfig::default() };
     if team.threads() == 1 {
@@ -544,6 +755,12 @@ pub fn build_tiered<T: Scalar>(
             FormatChoice::Spc5 { r } => Box::new(csr_to_spc5(csr, r, width)),
             FormatChoice::Sell { sigma } => Box::new(SellMatrix::from_csr(csr, sigma)),
             FormatChoice::Planned => Box::new(PlannedMatrix::build(csr, &plan_cfg())),
+            FormatChoice::Tiled { tile_cols } => {
+                Box::new(TiledCsr::from_csr(csr, tile_cols))
+            }
+            FormatChoice::ReorderedSpc5 { .. } | FormatChoice::ReorderedSell { .. } => {
+                unreachable!("handled above")
+            }
         }
     } else {
         match choice {
@@ -557,8 +774,34 @@ pub fn build_tiered<T: Scalar>(
             FormatChoice::Planned => {
                 Box::new(ParallelPlanned::with_team(csr, &plan_cfg(), Arc::clone(team)))
             }
+            FormatChoice::Tiled { tile_cols } => {
+                Box::new(ParallelTiled::with_team(csr, tile_cols, Arc::clone(team)))
+            }
+            FormatChoice::ReorderedSpc5 { .. } | FormatChoice::ReorderedSell { .. } => {
+                unreachable!("handled above")
+            }
         }
     }
+}
+
+/// Build `inner_choice` behind an RCM permutation: permute the matrix
+/// symmetrically, build the inner operator on it, and wrap both in a
+/// [`ReorderedOp`] that permutes x/y at the call boundary. Degenerate
+/// inputs (non-square, empty) skip the reorder and build the inner choice
+/// directly — a reorder there has nothing to win.
+fn build_reordered<T: Scalar>(
+    csr: &Csr<T>,
+    inner_choice: FormatChoice,
+    team: &Arc<Team>,
+    tier: IsaTier,
+) -> Box<dyn SparseOp<T>> {
+    if csr.nrows != csr.ncols || csr.nrows == 0 {
+        return build_tiered(csr, inner_choice, team, tier);
+    }
+    let perm = reorder::reverse_cuthill_mckee(csr);
+    let permuted = reorder::permute_symmetric(csr, &perm);
+    let inner = build_tiered(&permuted, inner_choice, team, tier);
+    Box::new(ReorderedOp::new(perm, inner))
 }
 
 /// [`build`] plus the backend dimension: the simulated backends always
@@ -605,8 +848,8 @@ pub fn try_build_tiered<T: Scalar>(
 ) -> Result<Box<dyn SparseOp<T>>, SpmvError> {
     csr.check()?;
     match choice {
-        FormatChoice::Csr => {}
-        FormatChoice::Spc5 { r } => {
+        FormatChoice::Csr | FormatChoice::Tiled { .. } => {}
+        FormatChoice::Spc5 { r } | FormatChoice::ReorderedSpc5 { r } => {
             if !matches!(r, 1 | 2 | 4 | 8) {
                 return Err(SpmvError::InvalidMatrix(format!(
                     "block height r={r} (want 1, 2, 4 or 8)"
@@ -614,7 +857,7 @@ pub fn try_build_tiered<T: Scalar>(
             }
             crate::util::fault::maybe_fail(crate::util::fault::site::CONVERT_SPC5)?;
         }
-        FormatChoice::Sell { .. } => {
+        FormatChoice::Sell { .. } | FormatChoice::ReorderedSell { .. } => {
             crate::util::fault::maybe_fail(crate::util::fault::site::CONVERT_SELL)?;
         }
         FormatChoice::Planned => {
@@ -651,13 +894,16 @@ mod tests {
     use super::*;
     use crate::matrix::gen;
 
-    fn all_choices() -> [FormatChoice; 5] {
+    fn all_choices() -> [FormatChoice; 8] {
         [
             FormatChoice::Csr,
             FormatChoice::Spc5 { r: 2 },
             FormatChoice::Spc5 { r: 8 },
             FormatChoice::Sell { sigma: 32 },
             FormatChoice::Planned,
+            FormatChoice::Tiled { tile_cols: 0 },
+            FormatChoice::ReorderedSpc5 { r: 4 },
+            FormatChoice::ReorderedSell { sigma: 32 },
         ]
     }
 
@@ -787,10 +1033,96 @@ mod tests {
         assert_eq!(FormatChoice::Sell { sigma: 8 }.kind_name(), "sell");
         assert_eq!(FormatChoice::Planned.kind_name(), "plan");
         assert_eq!(FormatChoice::Spc5 { r: 4 }.label(), "beta(4,VS)");
+        // Wrappers bucket under the format that does the arithmetic.
+        assert_eq!(FormatChoice::Tiled { tile_cols: 0 }.kind_name(), "csr");
+        assert_eq!(FormatChoice::Tiled { tile_cols: 0 }.label(), "tiled-csr");
+        assert_eq!(FormatChoice::Tiled { tile_cols: 4096 }.label(), "tiled-csr[4096]");
+        assert_eq!(FormatChoice::ReorderedSpc5 { r: 2 }.kind_name(), "spc5");
+        assert_eq!(FormatChoice::ReorderedSpc5 { r: 2 }.label(), "rcm+beta(2,VS)");
+        assert_eq!(FormatChoice::ReorderedSell { sigma: 16 }.kind_name(), "sell");
+        assert_eq!(FormatChoice::ReorderedSell { sigma: 16 }.label(), "rcm+sell-C-16");
         let m: Csr<f64> = gen::random_uniform(30, 3.0, 1);
         let team = Arc::new(Team::exact(2));
         let op = build(&m, FormatChoice::Sell { sigma: 16 }, &team);
         assert!(op.label().starts_with("team-sell-8-16"));
+        assert_eq!(op.partition_strategy(), "rows");
+        assert!(!op.reorder_applied());
+        let op = build(&m, FormatChoice::Tiled { tile_cols: 8 }, &team);
+        assert!(op.label().starts_with("team-tiled-csr[4 x 8 cols"), "{}", op.label());
+    }
+
+    #[test]
+    fn reordered_operator_permutes_transparently() {
+        // Square pattern: the operator reorders for real — results, labels
+        // and metadata must all present the *original* index space.
+        let m: Csr<f64> = gen::Structured {
+            nrows: 140,
+            ncols: 140,
+            nnz_per_row: 5.0,
+            run_len: 2.0,
+            row_corr: 0.4,
+            skew: 0.3,
+            bandwidth: None,
+        }
+        .generate(29);
+        let x: Vec<f64> = (0..140).map(|i| ((i * 11) % 17) as f64 * 0.21 - 1.3).collect();
+        let mut want = vec![0.0; 140];
+        m.spmv(&x, &mut want);
+        let choices =
+            [FormatChoice::ReorderedSpc5 { r: 2 }, FormatChoice::ReorderedSell { sigma: 16 }];
+        for choice in choices {
+            for threads in [1usize, 4] {
+                let team = Arc::new(Team::exact(threads));
+                let op = build(&m, choice, &team);
+                assert!(op.reorder_applied(), "{:?}", choice);
+                assert!(op.label().starts_with("rcm+"), "{}", op.label());
+                assert_eq!(op.nnz(), m.nnz());
+                assert_eq!(op.nrows(), 140);
+                let mut y = vec![f64::NAN; 140];
+                op.spmv(&x, &mut y);
+                crate::scalar::assert_allclose(&y, &want, 1e-11, 1e-12);
+                // Bitwise-deterministic across repeated calls.
+                let mut y2 = vec![0.0; 140];
+                op.spmv(&x, &mut y2);
+                assert_eq!(y, y2, "{:?} threads={threads}", choice);
+                // Fused path serves the same permuted kernels.
+                let xs = [x.as_slice(), x.as_slice()];
+                let mut ys: Vec<Vec<f64>> = (0..2).map(|_| vec![0.0; 140]).collect();
+                let mut y_refs: Vec<&mut [f64]> =
+                    ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                let mut scratch = Vec::new();
+                op.spmv_multi(&xs, &mut y_refs, &mut scratch);
+                for y in &ys {
+                    crate::scalar::assert_allclose(y, &want, 1e-11, 1e-12);
+                }
+            }
+        }
+        // Direct wrapper check with a hand permutation (reversal): the
+        // boundary gather/scatter must invert it exactly.
+        let perm: Vec<u32> = (0..140u32).rev().collect();
+        let inner = ScalarCsr::new(crate::matrix::reorder::permute_symmetric(&m, &perm));
+        let op = ReorderedOp::new(perm.clone(), Box::new(inner));
+        assert_eq!(op.perm(), &perm[..]);
+        assert!(op.label().starts_with("rcm+fallback-csr-scalar"));
+        let mut y = vec![0.0; 140];
+        op.spmv(&x, &mut y);
+        crate::scalar::assert_allclose(&y, &want, 1e-12, 1e-12);
+        // Rectangular patterns cannot permute symmetrically: quiet
+        // fallback to the plain inner form.
+        let rect: Csr<f64> = gen::Structured {
+            nrows: 40,
+            ncols: 55,
+            nnz_per_row: 4.0,
+            run_len: 2.0,
+            row_corr: 0.5,
+            skew: 0.2,
+            bandwidth: None,
+        }
+        .generate(31);
+        let team = Arc::new(Team::exact(1));
+        let op = build(&rect, FormatChoice::ReorderedSell { sigma: 16 }, &team);
+        assert!(!op.reorder_applied());
+        assert!(!op.label().starts_with("rcm+"), "{}", op.label());
     }
 
     #[test]

@@ -27,9 +27,12 @@ pub mod pool;
 pub mod spmv;
 
 pub use exec::{SendPtr, Team};
-pub use partition::{balance_panels, balance_rows, balance_units, Partition};
+pub use partition::{
+    balance_merge, balance_merge_units, balance_panels, balance_rows, balance_units,
+    row_length_cov, weight_cov, MergePartition, Partition, MERGE_SEG,
+};
 pub use pool::ThreadPool;
 pub use spmv::{
-    panel_row_ranges, spmv_spc5_shared, ParallelCsr, ParallelPlanned, ParallelSell,
-    ParallelSpc5, SharedSpc5,
+    panel_row_ranges, spmv_spc5_shared, CsrPartition, ParallelCsr, ParallelPlanned,
+    ParallelSell, ParallelSpc5, ParallelTiled, SharedSpc5, MERGE_COV_THRESHOLD,
 };

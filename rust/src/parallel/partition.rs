@@ -1,11 +1,14 @@
 //! Static work partitioning balanced by non-zero count.
 //!
-//! Three granularities: CSR rows ([`balance_rows`], panel-aligned for
+//! Four granularities: CSR rows ([`balance_rows`], panel-aligned for
 //! per-thread conversion), generic weighted units ([`balance_units`], used
-//! by the plan layer to assign chunks to threads), and SPC5 panels
+//! by the plan layer to assign chunks to threads), SPC5 panels
 //! ([`balance_panels`] — possible at all because `block_valptr` makes
 //! per-panel nnz an O(1) lookup, so one *already converted* matrix can be
-//! split at panel boundaries instead of re-converting row slices).
+//! split at panel boundaries instead of re-converting row slices), and
+//! nnz-exact merge-path slices ([`balance_merge`], which may cut *inside*
+//! a row — the only granularity that balances power-law matrices whose
+//! heaviest row exceeds a whole thread share; DESIGN.md §Load balancing).
 
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
@@ -21,6 +24,29 @@ impl Partition {
     pub fn nparts(&self) -> usize {
         self.ranges.len()
     }
+}
+
+/// Coefficient of variation (σ/μ) of a weight vector — the skew signal
+/// that flips the parallel types into merge-path partitioning. 0 for
+/// empty or all-zero input.
+pub fn weight_cov(weights: &[u64]) -> f64 {
+    if weights.is_empty() {
+        return 0.0;
+    }
+    let n = weights.len() as f64;
+    let mean = weights.iter().sum::<u64>() as f64 / n;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = weights.iter().map(|&w| (w as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+/// [`weight_cov`] of a CSR row-pointer array's row lengths.
+pub fn row_length_cov(row_ptr: &[u32]) -> f64 {
+    let lens: Vec<u64> =
+        row_ptr.windows(2).map(|w| (w[1] - w[0]) as u64).collect();
+    weight_cov(&lens)
 }
 
 /// Split the rows of `m` into `parts` contiguous slices with roughly equal
@@ -89,9 +115,23 @@ pub fn balance_units(weights: &[u64], parts: usize) -> Partition {
             i = n;
             continue;
         }
-        let target = used + (total - used).div_ceil((parts - p) as u64);
         let start = i;
-        while i < n {
+        let left = parts - p;
+        // Leave at least one unit for every later part (a zero-weight
+        // prefix must not let an early part swallow the whole list and
+        // starve the rest), while always claiming at least one ourselves.
+        let max_take = (n - start).saturating_sub(left - 1).max(1);
+        let remaining = total - used;
+        if remaining == 0 {
+            // Degenerate all-zero tail: weight targeting can't make
+            // progress, so fall back to an even split by unit count.
+            let take = (n - start).div_ceil(left).min(max_take);
+            i += take;
+            ranges.push(start..i);
+            continue;
+        }
+        let target = used + remaining.div_ceil(left as u64);
+        while i < n && i - start < max_take {
             used += weights[i];
             i += 1;
             if used >= target {
@@ -111,6 +151,245 @@ pub fn balance_units(weights: &[u64], parts: usize) -> Partition {
 pub fn balance_panels<T: Scalar>(m: &Spc5Matrix<T>, parts: usize) -> Partition {
     let weights: Vec<u64> = (0..m.npanels()).map(|p| m.panel_nnz(p) as u64).collect();
     balance_units(&weights, parts)
+}
+
+/// Segment pitch (in non-zeros) of the merge-path grid. Rows longer than
+/// this are computed as an in-order fold of per-segment partial sums, with
+/// the segment boundaries anchored at the *row start* — never at the lane
+/// cuts — so the floating-point addition order, and therefore the result,
+/// is bitwise-identical for every thread count. Rows at or below the pitch
+/// are never split and go through the same per-row kernel as the
+/// row-granular strategy.
+pub const MERGE_SEG: usize = 1 << 16;
+
+/// One row long enough to be computed as segment partial sums. `base` is
+/// its first slot in the shared carry buffer; the row owns `nsegs`
+/// consecutive slots (one per grid segment, in nnz order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CarryRow {
+    pub row: usize,
+    pub nsegs: usize,
+    pub base: usize,
+}
+
+/// An nnz-exact merge-path partition: per-lane whole-row runs plus per-lane
+/// segment jobs into long rows. Produced by [`balance_merge`]; executed by
+/// `ParallelCsr` in merge mode.
+///
+/// Invariants (checked by the tests): every row of the matrix appears in
+/// exactly one lane's `row_runs` *or* in `carries` (never both), and the
+/// segment ranges in `seg_jobs` tile `0..nsegs` of every carry row exactly
+/// once across lanes. The carry grid (`carries`, `slots`) depends only on
+/// the matrix and `seg`, not on the lane count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergePartition {
+    /// Per lane: contiguous whole-row ranges this lane computes in place
+    /// (long rows are excised from the runs).
+    pub row_runs: Vec<Vec<std::ops::Range<usize>>>,
+    /// Per lane: `(carry index, segment index range)` partial-sum jobs.
+    pub seg_jobs: Vec<Vec<(usize, std::ops::Range<usize>)>>,
+    /// All rows longer than `seg`, in row order.
+    pub carries: Vec<CarryRow>,
+    /// The segment pitch the grid was built with.
+    pub seg: usize,
+    /// Total carry-buffer slots (= sum of `nsegs` over `carries`).
+    pub slots: usize,
+}
+
+impl MergePartition {
+    pub fn lanes(&self) -> usize {
+        self.row_runs.len()
+    }
+
+    /// Total nnz a lane touches (runs + segment jobs) — the balance the
+    /// diagonal search optimizes; used by tests and diagnostics.
+    pub fn lane_nnz(&self, row_ptr: &[u32], lane: usize) -> usize {
+        let runs: usize = self.row_runs[lane]
+            .iter()
+            .map(|r| (row_ptr[r.end] - row_ptr[r.start]) as usize)
+            .sum();
+        let segs: usize = self.seg_jobs[lane]
+            .iter()
+            .map(|(ci, ks)| {
+                let c = &self.carries[*ci];
+                let len = (row_ptr[c.row + 1] - row_ptr[c.row]) as usize;
+                ks.clone().map(|k| (len - k * self.seg).min(self.seg)).sum::<usize>()
+            })
+            .sum();
+        runs + segs
+    }
+}
+
+/// Merge-path split of a CSR row-pointer array into `parts` lanes with the
+/// default [`MERGE_SEG`] grid: a 2-D binary search finds where equal shares
+/// of the `(row, nnz)` diagonal land, and cuts that fall inside a row are
+/// rounded down to that row's fixed segment grid. Unlike [`balance_rows`],
+/// a single monster row is spread over as many lanes as its share of the
+/// diagonal spans; each lane deposits per-segment partial sums into a carry
+/// buffer that the caller folds in grid order after the barrier.
+pub fn balance_merge(row_ptr: &[u32], parts: usize) -> MergePartition {
+    balance_merge_with(row_ptr, parts, MERGE_SEG)
+}
+
+/// [`balance_merge`] with an explicit segment pitch (tests use tiny grids).
+pub fn balance_merge_with(row_ptr: &[u32], parts: usize, seg: usize) -> MergePartition {
+    assert!(parts >= 1);
+    assert!(seg >= 1);
+    assert!(!row_ptr.is_empty());
+    let nrows = row_ptr.len() - 1;
+    let nnz = row_ptr[nrows] as usize;
+
+    // The carry grid: every row longer than the pitch, independent of the
+    // lane count (this is what keeps results thread-count invariant).
+    let mut carries = Vec::new();
+    let mut carry_of = vec![usize::MAX; nrows];
+    let mut slots = 0usize;
+    for r in 0..nrows {
+        let len = (row_ptr[r + 1] - row_ptr[r]) as usize;
+        if len > seg {
+            carry_of[r] = carries.len();
+            let nsegs = len.div_ceil(seg);
+            carries.push(CarryRow { row: r, nsegs, base: slots });
+            slots += nsegs;
+        }
+    }
+
+    // Lane cuts: equal shares of the merge diagonal (one step per row plus
+    // one per nnz), each located by binary search for the largest row i
+    // with `i + row_ptr[i] <= d`, then rounded down to the segment grid of
+    // the row it lands in and normalized forward past row ends.
+    let total = nrows as u64 + nnz as u64;
+    let mut cuts: Vec<(usize, usize)> = Vec::with_capacity(parts + 1);
+    cuts.push((0, 0));
+    for p in 1..parts {
+        let d = total * p as u64 / parts as u64;
+        let (mut lo, mut hi) = (0usize, nrows);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if mid as u64 + row_ptr[mid] as u64 <= d {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let mut ci = lo;
+        let mut cj = if ci >= nrows {
+            nnz
+        } else {
+            let base = row_ptr[ci] as usize;
+            let rel = (d - ci as u64) as usize - base;
+            base + (rel / seg) * seg
+        };
+        while ci < nrows && cj == row_ptr[ci + 1] as usize {
+            ci += 1;
+        }
+        // Monotone even under rounding (equal cuts produce empty lanes).
+        let &(pi, pj) = cuts.last().unwrap();
+        if (ci, cj) < (pi, pj) {
+            ci = pi;
+            cj = pj;
+        }
+        cuts.push((ci, cj));
+    }
+    cuts.push((nrows, nnz));
+
+    let mut row_runs = vec![Vec::new(); parts];
+    let mut seg_jobs: Vec<Vec<(usize, std::ops::Range<usize>)>> = vec![Vec::new(); parts];
+    for p in 0..parts {
+        let (r0, j0) = cuts[p];
+        let (r1, j1) = cuts[p + 1];
+        let mut run: Option<std::ops::Range<usize>> = None;
+        let mut first_whole = r0;
+        // Partial head: this lane's window into row r0 when it does not own
+        // the row wholly — a tail another lane started, a prefix another
+        // lane finishes (both cuts can sit inside one row, including at its
+        // start), or an interior window. Grid rounding guarantees any
+        // genuinely split row is a carry row.
+        if r0 < nrows {
+            let base = row_ptr[r0] as usize;
+            let row_end = row_ptr[r0 + 1] as usize;
+            let hi = if r1 == r0 { j1 } else { row_end };
+            let whole = j0 <= base && hi == row_end;
+            if !whole {
+                if j0 < hi {
+                    let ci = carry_of[r0];
+                    debug_assert_ne!(ci, usize::MAX);
+                    seg_jobs[p].push((ci, (j0 - base) / seg..(hi - base).div_ceil(seg)));
+                }
+                first_whole = r0 + 1;
+            }
+        }
+        let last_whole = if r1 > r0 { r1 } else { first_whole };
+        for r in first_whole..last_whole {
+            if carry_of[r] != usize::MAX {
+                if let Some(run) = run.take() {
+                    row_runs[p].push(run);
+                }
+                seg_jobs[p].push((carry_of[r], 0..carries[carry_of[r]].nsegs));
+            } else {
+                match &mut run {
+                    Some(q) if q.end == r => q.end = r + 1,
+                    _ => {
+                        if let Some(run) = run.take() {
+                            row_runs[p].push(run);
+                        }
+                        run = Some(r..r + 1);
+                    }
+                }
+            }
+        }
+        if let Some(run) = run.take() {
+            row_runs[p].push(run);
+        }
+        // Partial tail: the head of a row a later lane finishes.
+        if r1 > r0 && r1 < nrows && j1 > row_ptr[r1] as usize {
+            let base = row_ptr[r1] as usize;
+            let ci = carry_of[r1];
+            debug_assert_ne!(ci, usize::MAX);
+            seg_jobs[p].push((ci, 0..(j1 - base) / seg));
+        }
+    }
+
+    MergePartition { row_runs, seg_jobs, carries, seg, slots }
+}
+
+/// Merge-path analogue of [`balance_units`]: place lane boundaries where
+/// equal shares of the `(unit, weight)` diagonal land, never splitting a
+/// unit (the straddled unit stays with the part it started in). Used for
+/// SELL chunk assignment under heavy chunk-weight skew, where the 2-D
+/// search balances better than greedy re-targeting.
+pub fn balance_merge_units(weights: &[u64], parts: usize) -> Partition {
+    assert!(parts >= 1);
+    let n = weights.len();
+    let mut prefix = vec![0u64; n + 1];
+    for (i, &w) in weights.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + w;
+    }
+    let total = n as u64 + prefix[n];
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0usize);
+    for p in 1..parts {
+        let d = total * p as u64 / parts as u64;
+        let (mut lo, mut hi) = (0usize, n);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if mid as u64 + prefix[mid] <= d {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let i = lo;
+        let b = if (d - i as u64) > prefix[i] { i + 1 } else { i };
+        // Monotone, and never emit an empty part while units remain: keep
+        // at least one unit for this part and one for each later part.
+        let prev = *bounds.last().unwrap();
+        let at_least = (prev + 1).min(n);
+        let at_most = n.saturating_sub(parts - 1 - p).max(at_least);
+        bounds.push(b.clamp(at_least, at_most));
+    }
+    bounds.push(n);
+    Partition { ranges: bounds.windows(2).map(|w| w[0]..w[1]).collect() }
 }
 
 #[cfg(test)]
@@ -263,5 +542,208 @@ mod tests {
         assert_eq!(p.nparts(), 8);
         let covered: usize = p.ranges.iter().map(|r| r.len()).sum();
         assert_eq!(covered, 3);
+    }
+
+    #[test]
+    fn balance_units_degenerate_weights_property() {
+        // All-zero and single-giant weight vectors used to starve parts:
+        // a zero-weight prefix let one part swallow the whole list. Now,
+        // whenever there are at least as many units as parts, every part
+        // gets at least one unit, and the ranges always tile [0, n).
+        crate::util::minitest::property("balance_units_degenerate", |g| {
+            let n = g.usize_in(0..40);
+            let parts = g.usize_in(1..9);
+            let mut w = vec![0u64; n];
+            match g.usize_in(0..3) {
+                0 => {} // all zero
+                1 => {
+                    if n > 0 {
+                        let i = g.usize_in(0..n);
+                        w[i] = 1 + g.u64() % 10_000; // single giant
+                    }
+                }
+                _ => {
+                    for x in w.iter_mut() {
+                        *x = g.u64() % 4; // mostly zeros
+                    }
+                }
+            }
+            let p = balance_units(&w, parts);
+            assert_eq!(p.nparts(), parts);
+            let mut at = 0;
+            for r in &p.ranges {
+                assert_eq!(r.start, at, "gap/overlap: {:?} w={w:?}", p.ranges);
+                at = r.end;
+            }
+            assert_eq!(at, n);
+            if n >= parts {
+                for r in &p.ranges {
+                    assert!(!r.is_empty(), "starved part: {:?} w={w:?}", p.ranges);
+                }
+            } else {
+                for r in &p.ranges[..n] {
+                    assert_eq!(r.len(), 1, "{:?} w={w:?}", p.ranges);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn balance_units_all_zero_splits_evenly() {
+        let p = balance_units(&[0; 12], 4);
+        assert_eq!(p.ranges, vec![0..3, 3..6, 6..9, 9..12]);
+        // A giant behind a zero prefix no longer drags every unit into
+        // part 0 (the empty-part bug class PR 3 fixed in balance_rows).
+        let mut w = vec![0u64; 10];
+        w[9] = 100;
+        let p = balance_units(&w, 3);
+        assert_eq!(p.nparts(), 3);
+        for r in &p.ranges {
+            assert!(!r.is_empty(), "{:?}", p.ranges);
+        }
+        assert_eq!(p.ranges.last().unwrap().end, 10);
+    }
+
+    /// Build a skewed CSR with empty rows and one monster row for the
+    /// merge tests (values irrelevant — only `row_ptr` matters).
+    fn skewed(monster_at: usize, monster_len: usize) -> Csr<f64> {
+        let mut coo = crate::matrix::Coo::<f64>::new(24, 1024);
+        for c in 0..monster_len {
+            coo.push(monster_at, c % 1024, 1.0);
+        }
+        for r in 0..24 {
+            // rows 7, 8 and 15 stay empty
+            if r != monster_at && r != 7 && r != 8 && r != 15 {
+                coo.push(r, (r * 13) % 1024, 1.0);
+                coo.push(r, (r * 29 + 3) % 1024, 1.0);
+            }
+        }
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn merge_partition_tiles_rows_and_segments() {
+        // Large part counts make consecutive cuts land inside one carry
+        // row — including exactly at its start (prefix windows).
+        for (at, len) in [(3, 100), (0, 57), (23, 64), (12, 8)] {
+            let m = skewed(at, len);
+            for parts in [1, 2, 3, 5, 8, 13, 24] {
+                let mp = balance_merge_with(&m.row_ptr, parts, 8);
+                assert_eq!(mp.lanes(), parts);
+                // Every row is either in exactly one lane's runs or a
+                // carry row, never both.
+                let mut owner = vec![0u32; m.nrows];
+                for runs in &mp.row_runs {
+                    for run in runs {
+                        for r in run.clone() {
+                            owner[r] += 1;
+                        }
+                    }
+                }
+                for c in &mp.carries {
+                    let rlen = (m.row_ptr[c.row + 1] - m.row_ptr[c.row]) as usize;
+                    assert!(rlen > 8, "short carry row");
+                    assert_eq!(c.nsegs, rlen.div_ceil(8));
+                    owner[c.row] += 1;
+                }
+                for (r, &o) in owner.iter().enumerate() {
+                    assert_eq!(o, 1, "row {r} covered {o}× (parts={parts}, at={at}, len={len})");
+                }
+                // Segment jobs tile every carry row's grid exactly once.
+                let mut segcov = vec![0u32; mp.slots];
+                for jobs in &mp.seg_jobs {
+                    for (ci, ks) in jobs {
+                        for k in ks.clone() {
+                            segcov[mp.carries[*ci].base + k] += 1;
+                        }
+                    }
+                }
+                for (s, &c) in segcov.iter().enumerate() {
+                    assert_eq!(c, 1, "slot {s} covered {c}× (parts={parts})");
+                }
+                // nnz balance: each lane within a diagonal share + one
+                // segment of slack.
+                let total = m.nrows + m.nnz();
+                for lane in 0..parts {
+                    let w = mp.lane_nnz(&m.row_ptr, lane);
+                    assert!(
+                        w <= total.div_ceil(parts) + 8 + 1,
+                        "lane {lane} holds {w} nnz of {total} (parts={parts})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_splits_monster_row_across_lanes() {
+        let m = skewed(3, 100);
+        let mp = balance_merge_with(&m.row_ptr, 4, 8);
+        assert_eq!(mp.carries.len(), 1);
+        assert_eq!(mp.carries[0].row, 3);
+        assert_eq!(mp.carries[0].nsegs, 13);
+        let lanes_in_monster =
+            mp.seg_jobs.iter().filter(|jobs| !jobs.is_empty()).count();
+        assert!(lanes_in_monster > 1, "monster row not split: {:?}", mp.seg_jobs);
+        // Row-granular balancing cannot beat the monster row's share;
+        // merge-path keeps every lane near the diagonal share.
+        let max_lane = (0..4).map(|l| mp.lane_nnz(&m.row_ptr, l)).max().unwrap();
+        assert!(max_lane < 100, "no lane should own the whole monster row");
+    }
+
+    #[test]
+    fn merge_grid_is_thread_count_independent() {
+        let m = skewed(5, 77);
+        let a = balance_merge_with(&m.row_ptr, 2, 8);
+        let b = balance_merge_with(&m.row_ptr, 7, 8);
+        assert_eq!(a.carries, b.carries);
+        assert_eq!(a.slots, b.slots);
+    }
+
+    #[test]
+    fn merge_handles_degenerate_shapes() {
+        // Empty matrix.
+        let mp = balance_merge_with(&[0], 4, 8);
+        assert_eq!(mp.lanes(), 4);
+        assert!(mp.carries.is_empty());
+        assert!(mp.row_runs.iter().all(|r| r.is_empty()));
+        // Single short row, many lanes.
+        let mp = balance_merge_with(&[0, 3], 8, 8);
+        let owned: usize =
+            mp.row_runs.iter().map(|rs| rs.iter().map(|r| r.len()).sum::<usize>()).sum();
+        assert_eq!(owned, 1);
+        assert!(mp.carries.is_empty());
+    }
+
+    #[test]
+    fn balance_merge_units_shapes() {
+        // All-zero weights split evenly by unit count.
+        let p = balance_merge_units(&[0; 12], 4);
+        assert_eq!(p.ranges, vec![0..3, 3..6, 6..9, 9..12]);
+        // Giant at the end: earlier parts still get units.
+        let mut w = vec![0u64; 10];
+        w[9] = 100;
+        let p = balance_merge_units(&w, 2);
+        assert!(!p.ranges[0].is_empty() && !p.ranges[1].is_empty(), "{:?}", p.ranges);
+        assert_eq!(p.ranges[1].end, 10);
+        // Tiling holds on random weights.
+        crate::util::minitest::property("balance_merge_units_tiles", |g| {
+            let n = g.usize_in(0..32);
+            let parts = g.usize_in(1..7);
+            let w: Vec<u64> = (0..n).map(|_| g.u64() % 50).collect();
+            let p = balance_merge_units(&w, parts);
+            assert_eq!(p.nparts(), parts);
+            let mut at = 0;
+            for r in &p.ranges {
+                assert_eq!(r.start, at);
+                at = r.end;
+            }
+            assert_eq!(at, n);
+            if n >= parts {
+                for r in &p.ranges {
+                    assert!(!r.is_empty(), "{:?} w={w:?}", p.ranges);
+                }
+            }
+        });
     }
 }

@@ -10,22 +10,70 @@ use std::sync::{Arc, Mutex};
 
 use crate::kernels::native;
 use crate::matrix::sell::SellMatrix;
+use crate::matrix::tiled::TiledCsr;
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
 use crate::spc5::{csr_to_spc5, PlanConfig, PlannedMatrix, Spc5Matrix};
 
 use super::exec::{SendPtr, Team};
-use super::partition::{balance_panels, balance_rows, balance_units, Partition};
+use super::partition::{
+    balance_merge, balance_merge_units, balance_panels, balance_rows, balance_units,
+    row_length_cov, weight_cov, MergePartition, Partition, MERGE_SEG,
+};
+
+/// Row-length skew (coefficient of variation, σ/μ) above which the
+/// parallel CSR/SELL types switch from row-granular to merge-path
+/// partitioning. Uniform and banded matrices sit well below 1; power-law
+/// degree distributions land far above it.
+pub const MERGE_COV_THRESHOLD: f64 = 2.0;
+
+/// How [`ParallelCsr`] deals rows to lanes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CsrPartition {
+    /// Decide by measured row-length skew: merge-path when the CoV exceeds
+    /// [`MERGE_COV_THRESHOLD`] or any row is longer than a grid segment.
+    #[default]
+    Auto,
+    /// Row-granular nnz-balanced slices ([`balance_rows`]); never splits a
+    /// row.
+    Rows,
+    /// Merge-path ([`balance_merge`]): nnz-exact, splits rows longer than
+    /// [`MERGE_SEG`] across lanes with a carry-buffer fixup.
+    Merge,
+}
+
+/// Merge-mode execution state: the partition plus the row slices it needs
+/// (whole-row runs per lane, and one single-row slice per carry row for
+/// the segment jobs). Total storage is one copy of the matrix — the same
+/// as rows mode.
+struct MergeExec<T: Scalar> {
+    mp: MergePartition,
+    runs: Vec<Vec<Csr<T>>>,
+    carry_rows: Vec<Csr<T>>,
+}
 
 /// A CSR matrix pre-partitioned for the team's lanes. Each part is an
 /// independent row slice (thread-local allocation, as the paper describes).
+///
+/// Under heavy row-length skew ([`CsrPartition::Auto`]) the type switches
+/// to merge-path mode: lanes own nnz-exact slices of the `(row, nnz)`
+/// diagonal, rows longer than [`MERGE_SEG`] are computed as per-segment
+/// partial sums on a fixed grid and folded in order after the barrier
+/// (DESIGN.md §Load balancing). Short rows go through the same per-row
+/// kernel in both modes, and the segment grid is anchored at row starts,
+/// so results are bitwise-identical across lane counts and — whenever no
+/// row exceeds the grid pitch — across the two strategies as well.
 pub struct ParallelCsr<T: Scalar> {
+    /// Rows-mode lane slices (empty in merge mode).
     pub parts: Vec<Csr<T>>,
+    /// Rows-mode lane row ranges (empty ranges list in merge mode).
     pub partition: Partition,
     pub nrows: usize,
     pub ncols: usize,
+    nnz: usize,
     team: Arc<Team>,
     scratch: Vec<Mutex<Vec<T>>>,
+    merge: Option<MergeExec<T>>,
 }
 
 impl<T: Scalar> ParallelCsr<T> {
@@ -35,22 +83,107 @@ impl<T: Scalar> ParallelCsr<T> {
     }
 
     /// Partition for (a share of) an existing team — one executor can back
-    /// any number of matrices, solvers and coordinator requests.
+    /// any number of matrices, solvers and coordinator requests. Picks the
+    /// partition strategy from the measured row-length skew.
     pub fn with_team(m: &Csr<T>, team: Arc<Team>) -> Self {
-        let partition = balance_rows(m, team.threads(), 1);
-        let parts = partition.ranges.iter().map(|r| m.row_slice(r.start, r.end)).collect();
-        let scratch = per_lane_scratch(partition.nparts());
-        Self { parts, partition, nrows: m.nrows, ncols: m.ncols, team, scratch }
+        Self::with_strategy(m, team, CsrPartition::Auto)
+    }
+
+    /// [`ParallelCsr::with_team`] with the partition strategy forced —
+    /// benches and the equivalence tests pit the strategies against each
+    /// other on the same matrix.
+    pub fn with_strategy(m: &Csr<T>, team: Arc<Team>, strategy: CsrPartition) -> Self {
+        let threads = team.threads();
+        let max_len = (0..m.nrows)
+            .map(|r| (m.row_ptr[r + 1] - m.row_ptr[r]) as usize)
+            .max()
+            .unwrap_or(0);
+        let use_merge = match strategy {
+            CsrPartition::Rows => false,
+            CsrPartition::Merge => true,
+            CsrPartition::Auto => {
+                threads > 1
+                    && (row_length_cov(&m.row_ptr) > MERGE_COV_THRESHOLD
+                        || max_len > MERGE_SEG)
+            }
+        };
+        let nnz = m.nnz();
+        if use_merge {
+            let mp = balance_merge(&m.row_ptr, threads.max(1));
+            let runs = mp
+                .row_runs
+                .iter()
+                .map(|runs| runs.iter().map(|r| m.row_slice(r.start, r.end)).collect())
+                .collect();
+            let carry_rows =
+                mp.carries.iter().map(|c| m.row_slice(c.row, c.row + 1)).collect();
+            let scratch = per_lane_scratch(mp.lanes());
+            Self {
+                parts: Vec::new(),
+                partition: Partition { ranges: Vec::new() },
+                nrows: m.nrows,
+                ncols: m.ncols,
+                nnz,
+                team,
+                scratch,
+                merge: Some(MergeExec { mp, runs, carry_rows }),
+            }
+        } else {
+            let partition = balance_rows(m, threads, 1);
+            let parts =
+                partition.ranges.iter().map(|r| m.row_slice(r.start, r.end)).collect();
+            let scratch = per_lane_scratch(partition.nparts());
+            Self {
+                parts,
+                partition,
+                nrows: m.nrows,
+                ncols: m.ncols,
+                nnz,
+                team,
+                scratch,
+                merge: None,
+            }
+        }
     }
 
     pub fn team(&self) -> &Arc<Team> {
         &self.team
     }
 
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Storage footprint of the partitioned matrix data in bytes — lane
+    /// parts in rows mode, whole-row runs plus carry-row slices in merge
+    /// mode (both are one copy of the matrix plus row-pointer overhead).
+    pub fn bytes(&self) -> usize {
+        match &self.merge {
+            Some(me) => {
+                me.runs.iter().flatten().map(|p| p.bytes()).sum::<usize>()
+                    + me.carry_rows.iter().map(|p| p.bytes()).sum::<usize>()
+            }
+            None => self.parts.iter().map(|p| p.bytes()).sum(),
+        }
+    }
+
+    /// The active partition strategy (`"rows"` or `"merge"`), surfaced in
+    /// `metrics_json` per matrix.
+    pub fn strategy(&self) -> &'static str {
+        if self.merge.is_some() {
+            "merge"
+        } else {
+            "rows"
+        }
+    }
+
     /// `y = A·x` across the team's lanes (disjoint y slices, no locking).
     pub fn spmv(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
+        if let Some(me) = &self.merge {
+            return self.spmv_merge(me, x, y);
+        }
         let ybase = SendPtr::new(y.as_mut_ptr());
         let ranges = &self.partition.ranges;
         let parts = &self.parts;
@@ -68,6 +201,47 @@ impl<T: Scalar> ParallelCsr<T> {
         });
     }
 
+    /// Merge-mode `y = A·x`: whole-row runs go through the same per-row
+    /// kernel as rows mode; long rows get scalar per-segment partial sums
+    /// into the carry buffer, folded serially in grid order afterwards.
+    fn spmv_merge(&self, me: &MergeExec<T>, x: &[T], y: &mut [T]) {
+        let mp = &me.mp;
+        let mut carry = vec![T::zero(); mp.slots];
+        let ybase = SendPtr::new(y.as_mut_ptr());
+        let cbase = SendPtr::new(carry.as_mut_ptr());
+        let runs = &me.runs;
+        let carry_rows = &me.carry_rows;
+        self.team.run_parts(mp.lanes(), &|i| {
+            for (slice, range) in runs[i].iter().zip(&mp.row_runs[i]) {
+                // SAFETY: row runs are disjoint across lanes and exclude
+                // carry rows; the completion barrier outlives the slice.
+                let ys = unsafe { ybase.slice(range.clone()) };
+                crate::kernels::avx2::spmv_csr_auto(slice, x, ys);
+            }
+            for (ci, ks) in &mp.seg_jobs[i] {
+                let c = &mp.carries[*ci];
+                let row = &carry_rows[*ci];
+                let len = row.vals.len();
+                for k in ks.clone() {
+                    let mut sum = T::zero();
+                    let hi = ((k + 1) * mp.seg).min(len);
+                    for t in k * mp.seg..hi {
+                        sum = row.vals[t].mul_add(x[row.col_idx[t] as usize], sum);
+                    }
+                    // SAFETY: each grid slot has exactly one writing lane.
+                    unsafe { *cbase.get().add(c.base + k) = sum };
+                }
+            }
+        });
+        for c in &mp.carries {
+            let mut sum = carry[c.base];
+            for k in 1..c.nsegs {
+                sum += carry[c.base + k];
+            }
+            y[c.row] = sum;
+        }
+    }
+
     /// Fused multi-RHS `ys[v] = A·xs[v]`: each lane streams its row slice
     /// once for all `k` right-hand sides, accumulating into its own
     /// persistent scratch.
@@ -79,6 +253,9 @@ impl<T: Scalar> ParallelCsr<T> {
         for (x, y) in xs.iter().zip(ys.iter()) {
             assert_eq!(x.len(), self.ncols);
             assert_eq!(y.len(), self.nrows);
+        }
+        if let Some(me) = &self.merge {
+            return self.spmv_multi_merge(me, xs, ys);
         }
         let bases: Vec<SendPtr<T>> =
             ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
@@ -96,6 +273,60 @@ impl<T: Scalar> ParallelCsr<T> {
             let mut s = scratch[i].lock().expect("lane scratch");
             native::spmv_csr_multi_rows(&parts[i], 0..parts[i].nrows, xs, &mut sub, &mut s);
         });
+    }
+
+    /// Merge-mode fused multi-RHS: the carry buffer holds `k` partial sums
+    /// per grid slot (slot-major), folded per right-hand side afterwards.
+    fn spmv_multi_merge(&self, me: &MergeExec<T>, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        let mp = &me.mp;
+        let nk = xs.len();
+        let mut carry = vec![T::zero(); mp.slots * nk];
+        let cbase = SendPtr::new(carry.as_mut_ptr());
+        let bases: Vec<SendPtr<T>> =
+            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
+        let runs = &me.runs;
+        let carry_rows = &me.carry_rows;
+        let scratch = &self.scratch;
+        self.team.run_parts(mp.lanes(), &|i| {
+            let mut s = scratch[i].lock().expect("lane scratch");
+            for (slice, range) in runs[i].iter().zip(&mp.row_runs[i]) {
+                // SAFETY: row runs are disjoint across lanes and across
+                // right-hand sides.
+                let mut sub: Vec<&mut [T]> =
+                    bases.iter().map(|b| unsafe { b.slice(range.clone()) }).collect();
+                native::spmv_csr_multi_rows(slice, 0..slice.nrows, xs, &mut sub, &mut s);
+            }
+            for (ci, ks) in &mp.seg_jobs[i] {
+                let c = &mp.carries[*ci];
+                let row = &carry_rows[*ci];
+                let len = row.vals.len();
+                for k in ks.clone() {
+                    s.clear();
+                    s.resize(nk, T::zero());
+                    let hi = ((k + 1) * mp.seg).min(len);
+                    for t in k * mp.seg..hi {
+                        let col = row.col_idx[t] as usize;
+                        let v = row.vals[t];
+                        for (vi, xv) in xs.iter().enumerate() {
+                            s[vi] = v.mul_add(xv[col], s[vi]);
+                        }
+                    }
+                    for (vi, &sv) in s.iter().enumerate() {
+                        // SAFETY: one writing lane per (slot, rhs).
+                        unsafe { *cbase.get().add((c.base + k) * nk + vi) = sv };
+                    }
+                }
+            }
+        });
+        for c in &mp.carries {
+            for (vi, y) in ys.iter_mut().enumerate() {
+                let mut sum = carry[c.base * nk + vi];
+                for k in 1..c.nsegs {
+                    sum += carry[(c.base + k) * nk + vi];
+                }
+                y[c.row] = sum;
+            }
+        }
     }
 }
 
@@ -457,6 +688,7 @@ pub struct ParallelSell<T: Scalar> {
     pub m: SellMatrix<T>,
     /// Per-lane contiguous chunk-index ranges (nnz-balanced).
     pub chunk_parts: Partition,
+    strategy: &'static str,
     team: Arc<Team>,
     scratch: Vec<Mutex<Vec<T>>>,
 }
@@ -472,12 +704,20 @@ impl<T: Scalar> ParallelSell<T> {
         Self::from_sell(SellMatrix::from_csr(m, sigma), team)
     }
 
-    /// Partition an already-converted matrix for the team's lanes.
+    /// Partition an already-converted matrix for the team's lanes. Chunks
+    /// stay whole either way (the exact-order kernels keep results bitwise
+    /// identical for *any* chunk partition); under heavy chunk-weight skew
+    /// the 2-D merge-path search places the boundaries instead of greedy
+    /// re-targeting.
     pub fn from_sell(m: SellMatrix<T>, team: Arc<Team>) -> Self {
         let weights: Vec<u64> = (0..m.nchunks()).map(|k| m.chunk_nnz(k) as u64).collect();
-        let chunk_parts = balance_units(&weights, team.threads());
+        let (chunk_parts, strategy) = if weight_cov(&weights) > MERGE_COV_THRESHOLD {
+            (balance_merge_units(&weights, team.threads()), "merge")
+        } else {
+            (balance_units(&weights, team.threads()), "rows")
+        };
         let scratch = per_lane_scratch(chunk_parts.nparts());
-        Self { m, chunk_parts, team, scratch }
+        Self { m, chunk_parts, strategy, team, scratch }
     }
 
     pub fn team(&self) -> &Arc<Team> {
@@ -486,6 +726,11 @@ impl<T: Scalar> ParallelSell<T> {
 
     pub fn nnz(&self) -> usize {
         self.m.nnz()
+    }
+
+    /// The active chunk-partition strategy (`"rows"` or `"merge"`).
+    pub fn strategy(&self) -> &'static str {
+        self.strategy
     }
 
     /// `y = A·x` across the team's lanes (exact-order kernel per chunk, so
@@ -541,6 +786,89 @@ impl<T: Scalar> ParallelSell<T> {
                 // keeps the borrow alive.
                 unsafe { *bases[vi].get().add(row) = val };
             });
+        });
+    }
+}
+
+/// A column-tiled CSR ([`TiledCsr`]) split across the team by rows: each
+/// lane zeroes its y slice once, then accumulates tile after tile, so the
+/// x working set per tile stays LLC-sized while the lane's y stays
+/// resident. Entries of a row are visited in ascending column order across
+/// the tile sweep — the same order as `Csr::spmv` — so the result is
+/// bitwise equal to the scalar CSR reference for every lane count.
+pub struct ParallelTiled<T: Scalar> {
+    pub m: TiledCsr<T>,
+    /// Per-lane contiguous row ranges (nnz-balanced).
+    pub partition: Partition,
+    team: Arc<Team>,
+}
+
+impl<T: Scalar> ParallelTiled<T> {
+    /// Tile `src` into `tile_cols`-wide column strips (0 = the LLC-sized
+    /// default) and partition its rows for the team's lanes.
+    pub fn with_team(src: &Csr<T>, tile_cols: usize, team: Arc<Team>) -> Self {
+        let partition = balance_rows(src, team.threads(), 1);
+        Self { m: TiledCsr::from_csr(src, tile_cols), partition, team }
+    }
+
+    pub fn team(&self) -> &Arc<Team> {
+        &self.team
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    /// `y = A·x`, tiles outer, rows inner, per-lane y accumulation.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.m.ncols);
+        assert_eq!(y.len(), self.m.nrows);
+        let ybase = SendPtr::new(y.as_mut_ptr());
+        let ranges = &self.partition.ranges;
+        let m = &self.m;
+        self.team.run_parts(ranges.len(), &|i| {
+            let r = &ranges[i];
+            if r.is_empty() {
+                return;
+            }
+            // SAFETY: partition ranges tile [0, nrows) disjointly.
+            let ys = unsafe { ybase.slice(r.clone()) };
+            ys.fill(T::zero());
+            for t in 0..m.ntiles() {
+                m.accumulate(t, r.clone(), x, ys);
+            }
+        });
+    }
+
+    /// Fused multi-RHS `ys[v] = A·xs[v]`: every lane sweeps the tiles once,
+    /// accumulating all `k` right-hand sides per strip.
+    pub fn spmv_multi(&self, xs: &[&[T]], ys: &mut [&mut [T]]) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(x.len(), self.m.ncols);
+            assert_eq!(y.len(), self.m.nrows);
+        }
+        let bases: Vec<SendPtr<T>> =
+            ys.iter_mut().map(|y| SendPtr::new(y.as_mut_ptr())).collect();
+        let ranges = &self.partition.ranges;
+        let m = &self.m;
+        self.team.run_parts(ranges.len(), &|i| {
+            let r = &ranges[i];
+            if r.is_empty() {
+                return;
+            }
+            // SAFETY: disjoint row ranges of every right-hand side.
+            let mut sub: Vec<&mut [T]> =
+                bases.iter().map(|b| unsafe { b.slice(r.clone()) }).collect();
+            for y in sub.iter_mut() {
+                y.fill(T::zero());
+            }
+            for t in 0..m.ntiles() {
+                m.accumulate_multi(t, r.clone(), xs, &mut sub);
+            }
         });
     }
 }
@@ -914,5 +1242,167 @@ mod tests {
             pm.spmv(&x, &mut y);
             crate::scalar::assert_allclose(&y, &want, 1e-11, 1e-12);
         });
+    }
+
+    /// One hub row of `hub` entries, every other row a single entry — a
+    /// minimal power-law caricature with row-length CoV far above the
+    /// merge threshold. Values kept positive so long-sum comparisons stay
+    /// well-conditioned.
+    fn hub_fixture(nrows: usize, hub: usize) -> Csr<f64> {
+        let ncols = hub.max(nrows);
+        let mut row_ptr = vec![0u32];
+        let mut cols: Vec<u32> = (0..hub as u32).collect();
+        let mut vals: Vec<f64> =
+            (0..hub).map(|c| 0.25 + (c % 13) as f64 * 0.05).collect();
+        row_ptr.push(hub as u32);
+        for r in 1..nrows {
+            cols.push(((r * 97) % ncols) as u32);
+            vals.push(0.5 + (r % 7) as f64 * 0.1);
+            row_ptr.push(cols.len() as u32);
+        }
+        Csr::from_parts(nrows, ncols, row_ptr, cols, vals).unwrap()
+    }
+
+    #[test]
+    fn auto_partition_picks_merge_only_under_skew() {
+        let hub = hub_fixture(200, 600);
+        assert_eq!(ParallelCsr::new(&hub, 4).strategy(), "merge");
+        // A single lane has nothing to balance.
+        assert_eq!(ParallelCsr::new(&hub, 1).strategy(), "rows");
+        let (uniform, _, _) = fixture(150);
+        assert_eq!(ParallelCsr::new(&uniform, 4).strategy(), "rows");
+    }
+
+    #[test]
+    fn merge_matches_rows_bitwise_without_monster_rows() {
+        // The hub row is shorter than the grid pitch, so merge mode never
+        // splits it: both strategies run the identical per-row kernel and
+        // the products must agree bitwise at every lane count.
+        let m = hub_fixture(300, 900);
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.31).cos()).collect();
+        let rows =
+            ParallelCsr::with_strategy(&m, Arc::new(Team::exact(1)), CsrPartition::Rows);
+        assert_eq!(rows.strategy(), "rows");
+        let mut want = vec![0.0; 300];
+        rows.spmv(&x, &mut want);
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|v| (0..m.ncols).map(|i| ((i * (v + 2)) % 9) as f64 * 0.2).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|s| s.as_slice()).collect();
+        let mut want_multi: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 300]).collect();
+        let mut w_refs: Vec<&mut [f64]> =
+            want_multi.iter_mut().map(|s| s.as_mut_slice()).collect();
+        rows.spmv_multi(&x_refs, &mut w_refs);
+        for threads in [1usize, 2, 4, 7] {
+            let pm = ParallelCsr::with_strategy(
+                &m,
+                Arc::new(Team::exact(threads)),
+                CsrPartition::Merge,
+            );
+            assert_eq!(pm.strategy(), "merge");
+            assert_eq!(pm.nnz(), m.nnz());
+            let mut y = vec![5.0; 300];
+            pm.spmv(&x, &mut y);
+            assert_eq!(y, want, "threads={threads}");
+            let mut ys: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 300]).collect();
+            let mut y_refs: Vec<&mut [f64]> =
+                ys.iter_mut().map(|s| s.as_mut_slice()).collect();
+            pm.spmv_multi(&x_refs, &mut y_refs);
+            assert_eq!(ys, want_multi, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn merge_splits_giant_row_thread_count_invariant() {
+        // A row longer than the grid pitch becomes a carry row: lanes
+        // compute per-segment partial sums on the fixed grid and a serial
+        // fold adds them in grid order, so the result depends only on the
+        // grid — never on the lane count.
+        let m = hub_fixture(32, MERGE_SEG + 4096);
+        let x: Vec<f64> =
+            (0..m.ncols).map(|i| 0.5 + ((i % 23) as f64) * 0.02).collect();
+        let mut serial = vec![0.0; 32];
+        m.spmv(&x, &mut serial);
+        let xs: Vec<Vec<f64>> = (0..2)
+            .map(|v| (0..m.ncols).map(|i| 0.25 + ((i + v) % 11) as f64 * 0.03).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|s| s.as_slice()).collect();
+        let mut got: Vec<Vec<f64>> = Vec::new();
+        let mut got_multi: Vec<Vec<Vec<f64>>> = Vec::new();
+        for threads in [2usize, 5] {
+            let pm = ParallelCsr::with_team(&m, Arc::new(Team::exact(threads)));
+            // Auto must force merge: the hub exceeds the segment pitch.
+            assert_eq!(pm.strategy(), "merge");
+            let mut y = vec![0.0; 32];
+            pm.spmv(&x, &mut y);
+            // Positive values: the segmented sum is well-conditioned, so
+            // the mul_add fixup stays within a loose relative band of the
+            // plain serial sum.
+            crate::scalar::assert_allclose(&y, &serial, 1e-9, 0.0);
+            got.push(y);
+            let mut ys: Vec<Vec<f64>> = (0..2).map(|_| vec![0.0; 32]).collect();
+            let mut y_refs: Vec<&mut [f64]> =
+                ys.iter_mut().map(|s| s.as_mut_slice()).collect();
+            pm.spmv_multi(&x_refs, &mut y_refs);
+            for (xv, yv) in xs.iter().zip(&ys) {
+                let mut w = vec![0.0; 32];
+                m.spmv(xv, &mut w);
+                crate::scalar::assert_allclose(yv, &w, 1e-9, 0.0);
+            }
+            got_multi.push(ys);
+        }
+        assert_eq!(got[0], got[1], "single-RHS lane-count invariance");
+        assert_eq!(got_multi[0], got_multi[1], "multi-RHS lane-count invariance");
+    }
+
+    #[test]
+    fn parallel_sell_merge_partition_stays_bitwise() {
+        let m = hub_fixture(1024, 2000);
+        let sell = SellMatrix::from_csr(&m, 64);
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.17).sin()).collect();
+        let mut serial = vec![0.0; 1024];
+        sell.spmv(&x, &mut serial);
+        for threads in [2usize, 5] {
+            let ps = ParallelSell::new(&m, 64, threads);
+            // The hub chunk dominates the chunk weights — CoV >> threshold.
+            assert_eq!(ps.strategy(), "merge");
+            let mut y = vec![3.0; 1024];
+            ps.spmv(&x, &mut y);
+            assert_eq!(y, serial, "threads={threads}");
+        }
+        let (uniform, _, _) = fixture(150);
+        assert_eq!(ParallelSell::new(&uniform, 64, 4).strategy(), "rows");
+    }
+
+    #[test]
+    fn parallel_tiled_matches_csr_bitwise() {
+        let (m, x, want) = fixture(333);
+        for tile_cols in [0usize, 48, 333] {
+            for threads in [1usize, 3, 6] {
+                let pt =
+                    ParallelTiled::with_team(&m, tile_cols, Arc::new(Team::exact(threads)));
+                assert_eq!(pt.nnz(), m.nnz());
+                let mut y = vec![3.0; 333];
+                pt.spmv(&x, &mut y);
+                // Tiles sweep each row's entries in ascending column order
+                // from a zeroed y — the exact op sequence of Csr::spmv.
+                assert_eq!(y, want, "tile_cols={tile_cols} threads={threads}");
+            }
+        }
+        let pt = ParallelTiled::with_team(&m, 64, Arc::new(Team::exact(4)));
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|v| (0..333).map(|i| ((i * (v + 2)) % 9) as f64 * 0.2 - 0.7).collect())
+            .collect();
+        let x_refs: Vec<&[f64]> = xs.iter().map(|s| s.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = (0..3).map(|_| vec![0.0; 333]).collect();
+        let mut y_refs: Vec<&mut [f64]> =
+            ys.iter_mut().map(|s| s.as_mut_slice()).collect();
+        pt.spmv_multi(&x_refs, &mut y_refs);
+        for (xv, yv) in xs.iter().zip(&ys) {
+            let mut w = vec![0.0; 333];
+            m.spmv(xv, &mut w);
+            assert_eq!(*yv, w);
+        }
+        pt.spmv_multi(&[], &mut []);
     }
 }

@@ -29,6 +29,14 @@ fn choices<T: Scalar>() -> Vec<FormatChoice> {
         FormatChoice::Spc5 { r: 4 },
         FormatChoice::Sell { sigma: 4 * T::VS },
         FormatChoice::Planned,
+        // The wrapper forms of the power-law layer. Tiled degenerates to a
+        // single column strip at these sizes (still exercises the wrapper);
+        // the reordered forms RCM-permute square matrices and fall back to
+        // the plain inner form on rectangular ones — both paths must hold
+        // the same equivalence contract.
+        FormatChoice::Tiled { tile_cols: 0 },
+        FormatChoice::ReorderedSpc5 { r: 4 },
+        FormatChoice::ReorderedSell { sigma: 4 * T::VS },
     ]
 }
 
@@ -167,6 +175,71 @@ fn ops_equivalence_f64() {
 #[test]
 fn ops_equivalence_f32() {
     run_suite::<f32>();
+}
+
+/// The merge-path partition contract at the operator layer: on a hub-row
+/// matrix (the shape whose skew triggers the merge gate) every partition
+/// strategy and every lane count must reproduce the serial CSR product
+/// **bitwise** — the carry grid is anchored at row starts, so as long as no
+/// row exceeds `MERGE_SEG` the partitioning is invisible to the arithmetic.
+/// `Team::new` sizes are deliberately overridable so the CI
+/// `SPC5_FORCE_ISA` × `SPC5_THREADS` matrix sweeps this too.
+#[test]
+fn merge_partition_is_bitwise_invariant_across_strategies_and_lanes() {
+    use spc5::parallel::{CsrPartition, ParallelCsr};
+
+    let n = 600usize;
+    let mut coo = Coo::<f64>::new(n, n);
+    for c in 0..n {
+        // hub row: ~half the nnz in row 0
+        coo.push(0, c, 0.5 + (c % 7) as f64 * 0.125);
+    }
+    for r in 1..n {
+        coo.push(r, r, 1.0 + (r % 5) as f64 * 0.25);
+        coo.push(r, (r * 13) % n, 0.75);
+    }
+    let m = Csr::from_coo(coo);
+
+    let x = probe_x::<f64>(n, 5);
+    // The serial built operator is the bitwise anchor: ParallelCsr lanes
+    // route rows through the same tier-aware kernel entry point, so any
+    // partitioning of whole rows must reproduce it exactly. (The scalar
+    // `Csr::spmv` reference is an ULP anchor, not a bitwise one — the
+    // vectorized row kernel may re-associate.)
+    let want = {
+        let serial = ops::build(&m, FormatChoice::Csr, &Arc::new(Team::exact(1)));
+        let mut y = vec![0.0; n];
+        serial.spmv(&x, &mut y);
+        y
+    };
+    assert_ulp(&want, &reference(&m, &x), max_ulp_for::<f64>());
+
+    for strategy in [CsrPartition::Rows, CsrPartition::Merge, CsrPartition::Auto] {
+        for lanes in [1usize, 2, 5] {
+            let op = ParallelCsr::with_strategy(&m, Arc::new(Team::new(lanes)), strategy);
+            let mut y = vec![0.0; n];
+            op.spmv(&x, &mut y);
+            assert_eq!(
+                bits(&want),
+                bits(&y),
+                "{strategy:?} x {lanes} lanes diverged from the serial product"
+            );
+        }
+    }
+
+    // The operator layer must report the execution shape truthfully: the
+    // forced-merge form says "merge", the rows form says "rows", and the
+    // reordered wrapper is the only one flagging a permutation.
+    let team = Arc::new(Team::new(3));
+    let merged: Box<dyn SparseOp<f64>> =
+        Box::new(ParallelCsr::with_strategy(&m, Arc::clone(&team), CsrPartition::Merge));
+    let rowed: Box<dyn SparseOp<f64>> =
+        Box::new(ParallelCsr::with_strategy(&m, Arc::clone(&team), CsrPartition::Rows));
+    assert_eq!(merged.partition_strategy(), "merge");
+    assert_eq!(rowed.partition_strategy(), "rows");
+    assert!(!merged.reorder_applied());
+    let reordered = ops::build(&m, FormatChoice::ReorderedSell { sigma: 32 }, &team);
+    assert!(reordered.reorder_applied());
 }
 
 #[test]

@@ -14,7 +14,13 @@ Usage:
 Semantics:
   - A baseline whose numeric fields are all null is *unpopulated* (the
     template committed before any toolchain ran the bench): comparison is
-    skipped with exit 0 so CI stays green until first population.
+    skipped with a warning and exit 0 so CI stays green until first
+    population. A baseline whose `tolerance` object names no measurable
+    fields is likewise skipped with a warning, not failed.
+  - A missing CURRENT file is a warning + exit 0 (the bench may be gated
+    off on this runner); a missing BASELINE is an error — it is a
+    committed repo file, so its absence means a broken checkout or a
+    snapshot that was never added.
   - `*_max_ratio` tolerance: current/baseline must stay <= ratio (lower is
     better, e.g. rtt_us).
   - `*_min_ratio` tolerance: current/baseline must stay >= ratio (higher is
@@ -26,12 +32,18 @@ import sys
 from datetime import date
 
 
-def load(path):
+def load(path, required=True):
+    """Read a snapshot. A missing optional file (the current bench run)
+    returns None so the caller can skip-with-warning; a missing required
+    file (the committed baseline) is a hard error."""
     try:
         with open(path) as f:
             return json.load(f)
     except FileNotFoundError:
-        sys.exit(f"bench_compare: missing file: {path}")
+        if required:
+            sys.exit(f"bench_compare: missing file: {path}")
+        print(f"bench_compare: warning: no current results at {path}; skipping comparison")
+        return None
     except json.JSONDecodeError as e:
         sys.exit(f"bench_compare: invalid JSON in {path}: {e}")
 
@@ -107,14 +119,23 @@ def main(argv):
         sys.exit(__doc__)
     baseline_path, current_path = paths
     baseline = load(baseline_path)
-    current = load(current_path)
+    current = load(current_path, required=do_update)
+    if current is None:
+        return
     if do_update:
         update(baseline_path, baseline, current)
         return
-    if is_unpopulated(baseline, measured_fields(baseline.get("tolerance", {}))):
+    measured = measured_fields(baseline.get("tolerance", {}))
+    if not measured:
         print(
-            f"bench_compare: baseline {baseline_path} is an unpopulated template; "
-            "nothing to compare (run with --update to adopt the current numbers)"
+            f"bench_compare: warning: baseline {baseline_path} declares no "
+            "*_max_ratio/*_min_ratio tolerances; nothing to compare"
+        )
+        return
+    if is_unpopulated(baseline, measured):
+        print(
+            f"bench_compare: warning: baseline {baseline_path} is an unpopulated "
+            "template; nothing to compare (run with --update to adopt the current numbers)"
         )
         return
     if not compare(baseline, current):
